@@ -1,0 +1,56 @@
+//! **End-to-end driver** (DESIGN.md §End-to-end driver): the paper's
+//! evaluation workload on a real (synthetic) dataset through all four
+//! deployment modes, reproducing every figure of §4 and reporting the
+//! headline speedup.
+//!
+//! * dataset: NanoAOD-like, 1749 branches (677 `HLT_*` flags), LZ4 and
+//!   LZMA-class variants;
+//! * query: UCSD-Higgs-style skim — 27 filtering-criteria branches, 89
+//!   output branches, preselection → object cuts → HT + trigger OR;
+//! * methods: client-side legacy (LZMA & LZ4), client-optimized,
+//!   server-side, SkimROOT (DPU).
+//!
+//! ```sh
+//! cargo run --release --example higgs_skim            # standard scale
+//! SKIM_SCALE=small cargo run --release --example higgs_skim
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md.
+
+use skimroot::coordinator::eval::{self, EvalScale};
+use skimroot::runtime::SkimRuntime;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let scale = match std::env::var("SKIM_SCALE").as_deref() {
+        Ok("small") => EvalScale::small(),
+        _ => EvalScale::standard(),
+    };
+    let dir = std::env::var("SKIM_DIR").unwrap_or_else(|_| {
+        std::env::temp_dir().join("skimroot_higgs").to_string_lossy().into_owned()
+    });
+
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let runtime = match SkimRuntime::load(&artifacts) {
+        Ok(rt) => {
+            println!("PJRT runtime loaded ({} variants)", rt.variants().count());
+            Some(rt)
+        }
+        Err(e) => {
+            println!("[warn] artifacts unavailable ({e}); interpreter path only");
+            None
+        }
+    };
+
+    println!(
+        "dataset: {} events × {} branches under {dir}\n",
+        scale.n_events, scale.target_branches
+    );
+    let env = eval::prepare(&dir, scale)?;
+    println!(
+        "bandwidth scale: {:.4} (our LZ4 file / paper's 5 GB)\n",
+        env.bw_scale
+    );
+    let report = eval::all_figures(&env, runtime.as_ref())?;
+    println!("{report}");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Quickstart: generate a small synthetic NanoAOD-like dataset, write
+//! a JSON selection, run a skim locally, and inspect the result.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use skimroot::compress::Codec;
+use skimroot::engine::{EngineOpts, SkimEngine};
+use skimroot::gen::{self, GenConfig};
+use skimroot::metrics::Timeline;
+use skimroot::query::SkimQuery;
+use skimroot::troot::{LocalFile, ReadAt, TRootReader};
+use std::sync::Arc;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let dir = std::env::temp_dir().join("skimroot_quickstart");
+    std::fs::create_dir_all(&dir)?;
+
+    // 1. Generate a dataset: 5k events, full schema shape scaled down.
+    let input = dir.join("events.troot");
+    let cfg = GenConfig {
+        n_events: 5_000,
+        target_branches: 300,
+        n_hlt: 60,
+        basket_events: 500,
+        codec: Codec::Lz4,
+        seed: 2024,
+    };
+    let summary = gen::generate(&cfg, &input)?;
+    println!(
+        "generated {}: {} events, {} branches, {} on disk (ratio {:.2})",
+        input.display(),
+        summary.n_events,
+        summary.n_branches,
+        skimroot::util::human_bytes(summary.file_bytes),
+        summary.compression_ratio()
+    );
+
+    // 2. A JSON query — exactly what a user would POST to the DPU.
+    let query_json = r#"{
+        "input": "events.troot",
+        "output": "muon_skim.troot",
+        "branches": ["Muon_*", "MET_pt", "nMuon", "run", "event", "HLT_*"],
+        "selection": {
+            "preselection": [ {"branch": "nMuon", "op": ">=", "value": 1} ],
+            "objects": [
+                { "collection": "Muon", "min_count": 1, "cuts": [
+                    {"var": "Muon_pt",  "op": ">",   "value": 20.0},
+                    {"var": "Muon_eta", "op": "|<|", "value": 2.4} ] }
+            ],
+            "event": { "triggers_any": ["HLT_IsoMu24", "HLT_Mu50"] }
+        }
+    }"#;
+    let query = SkimQuery::from_json_text(query_json)?;
+
+    // 3. Run the two-phase engine (interpreter path: no artifacts
+    //    needed; pass a loaded SkimRuntime for the vectorized kernel).
+    let timeline = Timeline::new();
+    let engine = SkimEngine::new(None);
+    let opts = EngineOpts { use_pjrt: false, ..Default::default() };
+    let store: Arc<dyn ReadAt> = Arc::new(LocalFile::open(&input)?);
+    let out_path = dir.join("muon_skim.troot");
+    let result = engine.run(store, &query, &timeline, &opts, &out_path)?;
+
+    println!(
+        "\nskim: {} / {} events pass ({:.2}%)",
+        result.n_pass,
+        result.n_events,
+        100.0 * result.n_pass as f64 / result.n_events as f64
+    );
+    println!(
+        "selection funnel (preselection → objects → HT → trigger): {:?}",
+        result.stage_funnel
+    );
+    for w in &result.warnings {
+        println!("[warn] {w}");
+    }
+    println!("\nstage breakdown:\n{}", timeline.report());
+
+    // 4. The output is a regular troot file.
+    let reader = TRootReader::open(LocalFile::open(&out_path)?)?;
+    println!(
+        "\noutput {}: {} events, {} branches, {}",
+        out_path.display(),
+        reader.n_events(),
+        reader.meta().branches.len(),
+        skimroot::util::human_bytes(result.output_bytes)
+    );
+    Ok(())
+}

@@ -1,0 +1,134 @@
+"""AOT bridge: lower the L2 graph to HLO **text** + a JSON manifest.
+
+HLO text (not ``HloModuleProto.serialize``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla
+crate's bundled XLA (xla_extension 0.5.1) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--variant all]
+
+Emits one artifact per batch-shape variant:
+
+    skim_<name>.hlo.txt   — the lowered module
+    manifest.json         — shapes, argument order, capacities
+
+``make artifacts`` runs this once; the Rust runtime
+(rust/src/runtime/) loads the artifacts and Python never runs again.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import skim
+
+# (name, batch B, max objects M, tile)
+#
+# Tile note: on real TPU hardware the BlockSpec tiles the batch at 256
+# events (VMEM residency, DESIGN.md §Hardware-Adaptation). The CPU
+# artifacts are lowered with tile == B (grid = 1): interpret-mode
+# Pallas emulates the grid with a host-level loop + dynamic slicing,
+# which only adds overhead on CPU-PJRT where there is no VMEM to tile
+# for.
+VARIANTS = [
+    ("small", 256, 8, 256),
+    ("large", 2048, 16, 2048),
+]
+
+
+def arg_specs(b, m):
+    """ShapeDtypeStructs in the fixed argument order the Rust runtime
+    packs (keep in sync with rust/src/runtime/mod.rs)."""
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((skim.C, b, m), f32),        # cols
+        jax.ShapeDtypeStruct((skim.C, b), f32),           # nobj
+        jax.ShapeDtypeStruct((skim.S, b), f32),           # scalars
+        jax.ShapeDtypeStruct((skim.K_OBJ, 5), f32),       # obj_cuts
+        jax.ShapeDtypeStruct((skim.G, 4), f32),           # groups
+        jax.ShapeDtypeStruct((skim.K_SC, 5), f32),        # scalar_cuts
+        jax.ShapeDtypeStruct((4,), f32),                  # ht
+        jax.ShapeDtypeStruct((1 + skim.S,), f32),         # trig
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name, b, m, tile, fn=None):
+    fn = fn or model.skim_filter
+    specs = arg_specs(b, m)
+
+    def entry(cols, nobj, scalars, obj_cuts, groups, scalar_cuts, ht, trig):
+        return fn(cols, nobj, scalars, obj_cuts, groups, scalar_cuts, ht, trig,
+                  tile_b=tile)
+
+    lowered = jax.jit(entry).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--variant", default="all", help="small | large | all")
+    ap.add_argument(
+        "--graph",
+        default="pallas",
+        choices=["pallas", "ref"],
+        help="lower the Pallas kernel (default) or the inlined jnp "
+        "reference graph (A/B artifact)",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    fn = model.skim_filter if args.graph == "pallas" else model.reference_filter
+    suffix = "" if args.graph == "pallas" else "_ref"
+
+    manifest = {
+        "format": 1,
+        "graph": args.graph,
+        "capacities": {
+            "C": skim.C,
+            "S": skim.S,
+            "K_OBJ": skim.K_OBJ,
+            "K_SC": skim.K_SC,
+            "G": skim.G,
+            "N_STAGES": skim.N_STAGES,
+        },
+        "arg_order": [
+            "cols", "nobj", "scalars", "obj_cuts", "groups",
+            "scalar_cuts", "ht", "trig",
+        ],
+        "outputs": ["mask", "stages", "stage_counts", "cum_counts", "n_pass"],
+        "variants": {},
+    }
+
+    for name, b, m, tile in VARIANTS:
+        if args.variant not in ("all", name):
+            continue
+        hlo = lower_variant(name, b, m, tile, fn)
+        fname = f"skim_{name}{suffix}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["variants"][name] = {"B": b, "M": m, "tile": tile, "file": fname}
+        print(f"wrote {path} ({len(hlo)} chars)")
+
+    mpath = os.path.join(args.out_dir, f"manifest{suffix}.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels: the vectorized cut-evaluation hot-spot.
+
+`skim` holds the Pallas implementation; `ref` is the pure-jnp oracle the
+kernel is validated against at build time (pytest + hypothesis).
+"""
+
+from . import ref, skim  # noqa: F401

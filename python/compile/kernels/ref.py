@@ -1,0 +1,108 @@
+"""Pure-numpy oracle for the skim kernel.
+
+Deliberately written event-by-event with Python control flow (the way a
+physicist's ROOT macro reads) rather than vectorized — an independent
+implementation the Pallas kernel is checked against. Slow, but tests
+use small batches.
+"""
+
+import numpy as np
+
+from . import skim
+
+
+def _cmp(x, op, value, abs_flag):
+    if abs_flag > 0.5:
+        x = abs(x)
+    op = int(round(op))
+    if op == 0:
+        return x > value
+    if op == 1:
+        return x >= value
+    if op == 2:
+        return x < value
+    if op == 3:
+        return x <= value
+    if op == 4:
+        return x == value
+    if op == 5:
+        return x != value
+    raise ValueError(f"bad op code {op}")
+
+
+def skim_mask_ref(cols, nobj, scalars, obj_cuts, groups, scalar_cuts, ht, trig):
+    """Reference implementation; same signature/returns as
+    ``skim.skim_mask`` (numpy arrays in, numpy arrays out)."""
+    cols = np.asarray(cols, dtype=np.float32)
+    nobj = np.asarray(nobj, dtype=np.float32)
+    scalars = np.asarray(scalars, dtype=np.float32)
+    obj_cuts = np.asarray(obj_cuts, dtype=np.float32)
+    groups = np.asarray(groups, dtype=np.float32)
+    scalar_cuts = np.asarray(scalar_cuts, dtype=np.float32)
+    ht = np.asarray(ht, dtype=np.float32)
+    trig = np.asarray(trig, dtype=np.float32)
+
+    _, b, m = cols.shape
+    mask = np.zeros(b, dtype=np.float32)
+    stages = np.zeros((skim.N_STAGES, b), dtype=np.float32)
+
+    for ev in range(b):
+        # stage 1: preselection
+        pre = True
+        for k in range(skim.K_SC):
+            enabled, col, op, abs_flag, value = scalar_cuts[k]
+            if enabled > 0.5:
+                x = scalars[int(round(col)), ev]
+                pre = pre and bool(_cmp(x, op, value, abs_flag))
+
+        # stage 2: object groups
+        obj = True
+        for g in range(skim.G):
+            enabled, lo, hi, min_count = groups[g]
+            if enabled <= 0.5:
+                continue
+            lo_i, hi_i = int(round(lo)), int(round(hi))
+            count = 0
+            for slot in range(m):
+                covered = False
+                ok = True
+                for k in range(lo_i, hi_i):
+                    if k < 0 or k >= skim.K_OBJ:
+                        continue
+                    _, col, op, abs_flag, value = obj_cuts[k]
+                    ci = int(round(col))
+                    if slot >= nobj[ci, ev]:
+                        ok = False  # padded slot is not an object
+                    covered = True
+                    x = cols[ci, ev, slot]
+                    if not _cmp(x, op, value, abs_flag):
+                        ok = False
+                if covered and ok:
+                    count += 1
+            obj = obj and count >= min_count
+
+        # stage 3: HT
+        ht_ok = True
+        ht_enabled, ht_col, pt_min, ht_min = ht
+        if ht_enabled > 0.5:
+            ci = int(round(ht_col))
+            total = 0.0
+            for slot in range(m):
+                if slot < nobj[ci, ev] and cols[ci, ev, slot] > pt_min:
+                    total += float(cols[ci, ev, slot])
+            ht_ok = total >= ht_min
+
+        # stage 4: trigger OR
+        trig_ok = True
+        if trig[0] > 0.5:
+            trig_ok = any(
+                trig[1 + s] > 0.5 and scalars[s, ev] > 0.5 for s in range(skim.S)
+            )
+
+        stages[0, ev] = float(pre)
+        stages[1, ev] = float(obj)
+        stages[2, ev] = float(ht_ok)
+        stages[3, ev] = float(trig_ok)
+        mask[ev] = float(pre and obj and ht_ok and trig_ok)
+
+    return mask, stages

@@ -1,0 +1,217 @@
+"""Layer-1 Pallas kernel: vectorized multi-stage cut evaluation.
+
+The paper's hot spot — per-event selection over columnar physics data —
+is a branchy per-event C++ loop on the DPU's ARM cores. On the TPU
+stack it becomes a branch-free, padded, batched evaluator (see
+DESIGN.md §Hardware-Adaptation): events are tiled over the batch
+dimension, object collections are padded to ``M`` slots with a validity
+count, and every cut is a masked element-wise compare + per-event
+reduction — pure VPU work.
+
+The kernel evaluates a *cut program* (compiled by the Rust planner in
+``rust/src/query/plan.rs``; capacities and op codes must stay in sync):
+
+* ``K_OBJ`` object-cut slots ``(enabled, col, op, abs, value)``,
+* ``G`` group slots ``(enabled, cut_lo, cut_hi, min_count)`` — an event
+  passes a group if ≥ ``min_count`` objects satisfy **all** cuts in
+  ``[cut_lo, cut_hi)``,
+* ``K_SC`` scalar-cut slots (preselection),
+* one HT slot ``(enabled, col, pt_min, ht_min)``,
+* a trigger-OR membership vector over the scalar columns.
+
+Op codes: ``0 '>' · 1 '>=' · 2 '<' · 3 '<=' · 4 '==' · 5 '!='``; the
+``abs`` flag compares ``|x|``.
+
+Everything is f32; masks are 0.0/1.0. The kernel returns the final
+event mask plus the four per-stage masks (preselection, object-level,
+HT, trigger) used for staged accounting.
+
+Pallas runs with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed kernel capacities — keep in sync with rust/src/query/plan.rs.
+C = 12       # object (jagged) columns
+S = 16       # scalar columns
+K_OBJ = 12   # object-cut slots
+K_SC = 6     # scalar-cut slots
+G = 4        # object-group slots
+
+# Default batch tile (events per grid step; TPU target — CPU artifacts
+# lower at tile == B, see aot.py). 12·256·16 f32 ≈ 196 KiB of column
+# data per tile — comfortably VMEM-resident with double buffering.
+TILE_B = 256
+
+N_STAGES = 4  # preselection, object, ht, trigger
+
+
+def _cmp(x, op, value, abs_flag):
+    """Branch-free comparison dispatch on a traced op code."""
+    x = jnp.where(abs_flag > 0.5, jnp.abs(x), x)
+    res = [x > value, x >= value, x < value, x <= value, x == value, x != value]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for code, r in enumerate(res):
+        out = out + jnp.where(op == code, r.astype(jnp.float32), 0.0)
+    return jnp.minimum(out, 1.0)
+
+
+def _gather_row(arr, idx):
+    """arr: [C, ...]; idx: traced scalar → arr[idx] as one dynamic
+    gather (a single XLA op — far cheaper than a one-hot select fold,
+    which costs C full-array passes per cut)."""
+    i = jnp.clip(idx.astype(jnp.int32), 0, arr.shape[0] - 1)
+    return jax.lax.dynamic_index_in_dim(arr, i, axis=0, keepdims=False)
+
+
+def _gather_col(cols, col_idx):
+    return _gather_row(cols, col_idx)
+
+
+def _gather_scalar(scalars, col_idx):
+    return _gather_row(scalars, col_idx)
+
+
+def _gather_nobj(nobj, col_idx):
+    return _gather_row(nobj, col_idx)
+
+
+def _evaluate(cols, nobj, scalars, obj_cuts, groups, scalar_cuts, ht, trig):
+    """Shared evaluation body (jnp ops only — used inside the Pallas
+    kernel on Refs' loaded values and directly by tests)."""
+    b = cols.shape[1]
+    m = cols.shape[2]
+    iota_m = jnp.arange(m, dtype=jnp.float32)[None, :]  # [1, M]
+
+    # --- stage 1: preselection (scalar cuts, ANDed) --------------------
+    pre = jnp.ones((b,), dtype=jnp.float32)
+    for k in range(K_SC):
+        enabled, col, op, abs_flag, value = (scalar_cuts[k, i] for i in range(5))
+        x = _gather_scalar(scalars, col)  # [B]
+        passed = _cmp(x, op, value, abs_flag)
+        pre = pre * jnp.where(enabled > 0.5, passed, 1.0)
+
+    # --- per-cut object pass masks [K_OBJ, B, M] ------------------------
+    # (Group membership is the only gate on object-cut slots; the
+    # per-slot `enabled` field is reserved/ignored, matching ref.py and
+    # the Rust planner.)
+    cut_pass = []
+    for k in range(K_OBJ):
+        _enabled, col, op, abs_flag, value = (obj_cuts[k, i] for i in range(5))
+        x = _gather_col(cols, col)              # [B, M]
+        valid = (iota_m < _gather_nobj(nobj, col)[:, None]).astype(jnp.float32)
+        cut_pass.append(_cmp(x, op, value, abs_flag) * valid)
+
+    # --- stage 2: object-level groups -----------------------------------
+    obj = jnp.ones((b,), dtype=jnp.float32)
+    for g in range(G):
+        enabled, lo, hi, min_count = (groups[g, i] for i in range(4))
+        # AND of member cuts per object slot; non-members are neutral.
+        acc = jnp.ones((b, m), dtype=jnp.float32)
+        any_member = jnp.zeros((b, m), dtype=jnp.float32)
+        for k in range(K_OBJ):
+            member = jnp.logical_and(k >= lo, k < hi).astype(jnp.float32)
+            acc = acc * jnp.where(member > 0.5, cut_pass[k], 1.0)
+            any_member = jnp.maximum(any_member, member * jnp.ones((b, m)))
+        # Only slots covered by ≥1 member cut count as objects (the
+        # member cuts already embed validity).
+        count = jnp.sum(acc * any_member, axis=1)  # [B]
+        passed = (count >= min_count).astype(jnp.float32)
+        obj = obj * jnp.where(enabled > 0.5, passed, 1.0)
+
+    # --- stage 3: HT -----------------------------------------------------
+    ht_enabled, ht_col, pt_min, ht_min = (ht[i] for i in range(4))
+    jet = _gather_col(cols, ht_col)  # [B, M]
+    jet_valid = (iota_m < _gather_nobj(nobj, ht_col)[:, None]).astype(jnp.float32)
+    contrib = jnp.where(jet > pt_min, jet, 0.0) * jet_valid
+    ht_sum = jnp.sum(contrib, axis=1)
+    ht_mask = jnp.where(ht_enabled > 0.5, (ht_sum >= ht_min).astype(jnp.float32), 1.0)
+
+    # --- stage 4: trigger OR ---------------------------------------------
+    trig_enabled = trig[0]
+    any_fired = jnp.zeros((b,), dtype=jnp.float32)
+    for s in range(S):
+        member = trig[1 + s]
+        fired = (scalars[s] > 0.5).astype(jnp.float32)
+        any_fired = jnp.maximum(any_fired, member * fired)
+    trig_mask = jnp.where(trig_enabled > 0.5, any_fired, 1.0)
+
+    final = pre * obj * ht_mask * trig_mask
+    stages = jnp.stack([pre, obj, ht_mask, trig_mask], axis=0)  # [4, B]
+    return final, stages
+
+
+def _kernel(cols_ref, nobj_ref, scalars_ref, obj_cuts_ref, groups_ref,
+            scalar_cuts_ref, ht_ref, trig_ref, out_ref, stages_ref):
+    final, stages = _evaluate(
+        cols_ref[...], nobj_ref[...], scalars_ref[...], obj_cuts_ref[...],
+        groups_ref[...], scalar_cuts_ref[...], ht_ref[...], trig_ref[...],
+    )
+    out_ref[...] = final
+    stages_ref[...] = stages
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def skim_mask(cols, nobj, scalars, obj_cuts, groups, scalar_cuts, ht, trig,
+              *, tile_b=TILE_B):
+    """Evaluate the cut program over a padded batch.
+
+    Args:
+      cols:        f32[C, B, M] padded object columns.
+      nobj:        f32[C, B] per-column object counts.
+      scalars:     f32[S, B] scalar columns.
+      obj_cuts:    f32[K_OBJ, 5] (enabled, col, op, abs, value).
+      groups:      f32[G, 4] (enabled, cut_lo, cut_hi, min_count).
+      scalar_cuts: f32[K_SC, 5] (enabled, col, op, abs, value).
+      ht:          f32[4] (enabled, col, pt_min, ht_min).
+      trig:        f32[1 + S] (enabled, member per scalar column).
+
+    Returns:
+      (mask f32[B], stages f32[4, B]).
+    """
+    c, b, m = cols.shape
+    assert c == C, f"expected {C} object columns, got {c}"
+    assert scalars.shape == (S, b)
+    tile = min(tile_b, b)
+    assert b % tile == 0, f"batch {b} not divisible by tile {tile}"
+    grid = (b // tile,)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C, tile, m), lambda i: (0, i, 0)),
+            pl.BlockSpec((C, tile), lambda i: (0, i)),
+            pl.BlockSpec((S, tile), lambda i: (0, i)),
+            pl.BlockSpec((K_OBJ, 5), lambda i: (0, 0)),
+            pl.BlockSpec((G, 4), lambda i: (0, 0)),
+            pl.BlockSpec((K_SC, 5), lambda i: (0, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((1 + S,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((N_STAGES, tile), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((N_STAGES, b), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(cols, nobj, scalars, obj_cuts, groups, scalar_cuts, ht, trig)
+
+
+def empty_params():
+    """All-disabled parameter bank (accept-everything program)."""
+    return dict(
+        obj_cuts=jnp.zeros((K_OBJ, 5), jnp.float32),
+        groups=jnp.zeros((G, 4), jnp.float32),
+        scalar_cuts=jnp.zeros((K_SC, 5), jnp.float32),
+        ht=jnp.zeros((4,), jnp.float32),
+        trig=jnp.zeros((1 + S,), jnp.float32),
+    )

@@ -1,0 +1,51 @@
+"""Layer-2 JAX graph: the multi-stage skim pipeline around the L1
+kernel.
+
+The graph mirrors §3.2's structured execution model: the kernel
+produces the final event mask plus per-stage masks; the graph derives
+the staged survivor counts (how many events each stage would pass on
+its own, and cumulatively) that the Rust engine reports, and packs the
+outputs the coordinator consumes:
+
+    (mask[B], stages[4,B], stage_counts[4], cum_counts[4], n_pass[1])
+
+Everything is one fused XLA module — the cut bank is an *input*, so one
+AOT artifact serves every query that fits the kernel capacities (no
+per-query recompilation on the request path).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import skim
+
+
+def skim_filter(cols, nobj, scalars, obj_cuts, groups, scalar_cuts, ht, trig,
+                tile_b=skim.TILE_B):
+    """Full L2 computation. Shapes as in ``skim.skim_mask``."""
+    mask, stages = skim.skim_mask(
+        cols, nobj, scalars, obj_cuts, groups, scalar_cuts, ht, trig,
+        tile_b=tile_b,
+    )
+    # Independent per-stage pass counts.
+    stage_counts = jnp.sum(stages, axis=1)  # [4]
+    # Cumulative survivors after each stage (the §3.2 funnel:
+    # preselection → object → HT → trigger).
+    cum = jnp.cumprod(stages, axis=0)  # [4, B]
+    cum_counts = jnp.sum(cum, axis=1)  # [4]
+    n_pass = jnp.sum(mask, keepdims=True)  # [1]
+    return mask, stages, stage_counts, cum_counts, n_pass
+
+
+def reference_filter(cols, nobj, scalars, obj_cuts, groups, scalar_cuts, ht, trig,
+                     tile_b=None):
+    """Same graph with the kernel body inlined as plain jnp (no
+    pallas_call) — used for the L2-level A/B artifact and tests."""
+    del tile_b  # the inlined graph has no grid
+    mask, stages = skim._evaluate(  # noqa: SLF001 — intentional reuse
+        cols, nobj, scalars, obj_cuts, groups, scalar_cuts, ht, trig
+    )
+    stage_counts = jnp.sum(stages, axis=1)
+    cum = jnp.cumprod(stages, axis=0)
+    cum_counts = jnp.sum(cum, axis=1)
+    n_pass = jnp.sum(mask, keepdims=True)
+    return mask, stages, stage_counts, cum_counts, n_pass

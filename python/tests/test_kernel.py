@@ -1,0 +1,228 @@
+"""L1 correctness: the Pallas kernel vs the event-loop oracle.
+
+This is the CORE correctness signal of the build path — hypothesis
+sweeps shapes, data distributions and random cut programs, asserting
+exact mask agreement (both sides compute 0.0/1.0 in f32; ties on
+thresholds are exercised deliberately via quantized values).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, skim
+
+
+def make_inputs(rng, b, m, quantize=True):
+    """Physics-shaped random batch. Quantized values make threshold
+    ties reproducible across implementations."""
+    cols = rng.exponential(30.0, size=(skim.C, b, m)).astype(np.float32)
+    # eta-like signed columns on odd indices
+    cols[1::2] = rng.normal(0.0, 2.0, size=cols[1::2].shape)
+    if quantize:
+        cols = np.round(cols * 4.0) / 4.0
+    cols = cols.astype(np.float32)
+    nobj = rng.integers(0, m + 1, size=(skim.C, b)).astype(np.float32)
+    scalars = np.round(rng.exponential(20.0, size=(skim.S, b)) * 4.0) / 4.0
+    # trigger-like 0/1 flags on the back half
+    scalars[skim.S // 2 :] = (rng.random(size=(skim.S - skim.S // 2, b)) < 0.3)
+    scalars = scalars.astype(np.float32)
+    return cols, nobj, scalars
+
+
+def make_program(rng, n_obj_cuts=None, n_groups=None, n_scalar_cuts=None,
+                 use_ht=True, use_trig=True):
+    """Random but *valid* cut program (what the Rust planner emits)."""
+    p = {k: np.array(v, dtype=np.float32) for k, v in skim.empty_params().items()}
+    k_obj = int(rng.integers(0, skim.K_OBJ + 1) if n_obj_cuts is None else n_obj_cuts)
+    for k in range(k_obj):
+        p["obj_cuts"][k] = [
+            1.0,
+            rng.integers(0, skim.C),
+            rng.integers(0, 6),
+            rng.integers(0, 2),
+            np.round(rng.uniform(-10, 60) * 4.0) / 4.0,
+        ]
+    n_g = int(rng.integers(0, skim.G + 1) if n_groups is None else n_groups)
+    for g in range(n_g):
+        lo = int(rng.integers(0, max(k_obj, 1)))
+        hi = int(rng.integers(lo, k_obj + 1))
+        p["groups"][g] = [1.0, lo, hi, rng.integers(0, 4)]
+    k_sc = int(rng.integers(0, skim.K_SC + 1) if n_scalar_cuts is None else n_scalar_cuts)
+    for k in range(k_sc):
+        p["scalar_cuts"][k] = [
+            1.0,
+            rng.integers(0, skim.S),
+            rng.integers(0, 6),
+            rng.integers(0, 2),
+            np.round(rng.uniform(-5, 40) * 4.0) / 4.0,
+        ]
+    if use_ht and rng.random() < 0.7:
+        p["ht"] = np.asarray(
+            [1.0, rng.integers(0, skim.C), 25.0, np.round(rng.uniform(0, 300))],
+            dtype=np.float32,
+        )
+    if use_trig and rng.random() < 0.7:
+        members = (rng.random(skim.S) < 0.4).astype(np.float32)
+        p["trig"] = np.concatenate([[1.0], members]).astype(np.float32)
+    return p
+
+
+def run_both(cols, nobj, scalars, p):
+    got_mask, got_stages = skim.skim_mask(
+        cols, nobj, scalars, p["obj_cuts"], p["groups"], p["scalar_cuts"],
+        p["ht"], p["trig"],
+    )
+    want_mask, want_stages = ref.skim_mask_ref(
+        cols, nobj, scalars, p["obj_cuts"], p["groups"], p["scalar_cuts"],
+        p["ht"], p["trig"],
+    )
+    return (np.asarray(got_mask), np.asarray(got_stages), want_mask, want_stages)
+
+
+def assert_agree(cols, nobj, scalars, p):
+    got_mask, got_stages, want_mask, want_stages = run_both(cols, nobj, scalars, p)
+    np.testing.assert_array_equal(got_stages, want_stages)
+    np.testing.assert_array_equal(got_mask, want_mask)
+
+
+def test_empty_program_accepts_everything():
+    rng = np.random.default_rng(0)
+    cols, nobj, scalars = make_inputs(rng, 64, 4)
+    p = {k: np.asarray(v) for k, v in skim.empty_params().items()}
+    mask, stages = skim.skim_mask(
+        cols, nobj, scalars, p["obj_cuts"], p["groups"], p["scalar_cuts"],
+        p["ht"], p["trig"],
+    )
+    assert np.all(np.asarray(mask) == 1.0)
+    assert np.all(np.asarray(stages) == 1.0)
+
+
+def test_known_object_cut():
+    """Hand-checked case: one electron-pt cut, min_count=1."""
+    b, m = 4, 3
+    cols = np.zeros((skim.C, b, m), np.float32)
+    nobj = np.zeros((skim.C, b), np.float32)
+    scalars = np.zeros((skim.S, b), np.float32)
+    # event 0: [30, 10, -] → passes (30 > 25)
+    # event 1: [10, 20, 24] → fails
+    # event 2: [] → fails (no objects)
+    # event 3: [26, 27, 28] → passes
+    cols[0, 0, :2] = [30, 10]
+    nobj[0, 0] = 2
+    cols[0, 1] = [10, 20, 24]
+    nobj[0, 1] = 3
+    nobj[0, 2] = 0
+    cols[0, 3] = [26, 27, 28]
+    nobj[0, 3] = 3
+    p = {k: np.array(v, dtype=np.float32) for k, v in skim.empty_params().items()}
+    p["obj_cuts"][0] = [1.0, 0, 0, 0, 25.0]  # col 0, '>', 25
+    p["groups"][0] = [1.0, 0, 1, 1]          # cuts [0,1), min_count 1
+    mask, _ = skim.skim_mask(
+        cols, nobj, scalars, p["obj_cuts"], p["groups"], p["scalar_cuts"],
+        p["ht"], p["trig"],
+    )
+    np.testing.assert_array_equal(np.asarray(mask), [1, 0, 0, 1])
+    assert_agree(cols, nobj, scalars, p)
+
+
+def test_known_ht_and_trigger():
+    b, m = 3, 4
+    cols = np.zeros((skim.C, b, m), np.float32)
+    nobj = np.zeros((skim.C, b), np.float32)
+    scalars = np.zeros((skim.S, b), np.float32)
+    # HT over col 2, pt_min 30, min 100.
+    cols[2, 0] = [50, 60, 10, 0]   # HT = 110 → pass
+    nobj[2, 0] = 4
+    cols[2, 1] = [50, 40, 0, 0]    # HT = 90 → fail
+    nobj[2, 1] = 2
+    cols[2, 2] = [200, 0, 0, 0]    # but only 0 valid objects → HT 0 → fail
+    nobj[2, 2] = 0
+    p = {k: np.array(v, dtype=np.float32) for k, v in skim.empty_params().items()}
+    p["ht"] = np.asarray([1.0, 2, 30.0, 100.0], np.float32)
+    # Trigger on scalar column 5: fires only for event 1.
+    scalars[5] = [0, 1, 0]
+    trig = np.zeros(1 + skim.S, np.float32)
+    trig[0] = 1.0
+    trig[1 + 5] = 1.0
+    p["trig"] = trig
+    mask, stages = skim.skim_mask(
+        cols, nobj, scalars, p["obj_cuts"], p["groups"], p["scalar_cuts"],
+        p["ht"], p["trig"],
+    )
+    np.testing.assert_array_equal(np.asarray(stages)[2], [1, 0, 0])  # ht
+    np.testing.assert_array_equal(np.asarray(stages)[3], [0, 1, 0])  # trig
+    np.testing.assert_array_equal(np.asarray(mask), [0, 0, 0])
+    assert_agree(cols, nobj, scalars, p)
+
+
+def test_multi_stage_funnel_masks_multiply():
+    rng = np.random.default_rng(7)
+    cols, nobj, scalars = make_inputs(rng, 128, 8)
+    p = make_program(np.random.default_rng(8), n_obj_cuts=4, n_groups=2,
+                     n_scalar_cuts=2)
+    got_mask, got_stages, _, _ = run_both(cols, nobj, scalars, p)
+    np.testing.assert_array_equal(got_mask, np.prod(got_stages, axis=0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.sampled_from([8, 32, 64]),
+    m=st.sampled_from([1, 3, 8, 16]),
+)
+def test_hypothesis_kernel_matches_ref(seed, b, m):
+    rng = np.random.default_rng(seed)
+    cols, nobj, scalars = make_inputs(rng, b, m)
+    p = make_program(rng)
+    assert_agree(cols, nobj, scalars, p)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_threshold_ties(seed):
+    """Values exactly at thresholds: >, >=, ==, != must all agree."""
+    rng = np.random.default_rng(seed)
+    b, m = 16, 4
+    cols = np.full((skim.C, b, m), 25.0, np.float32)
+    nobj = np.full((skim.C, b), m, np.float32)
+    scalars = np.full((skim.S, b), 1.0, np.float32)
+    p = {k: np.array(v, dtype=np.float32) for k, v in skim.empty_params().items()}
+    op = rng.integers(0, 6)
+    p["obj_cuts"][0] = [1.0, 0, op, 0, 25.0]
+    p["groups"][0] = [1.0, 0, 1, 1]
+    assert_agree(cols, nobj, scalars, p)
+
+
+def test_batch_not_divisible_by_tile_asserts():
+    rng = np.random.default_rng(1)
+    cols, nobj, scalars = make_inputs(rng, 24, 2)  # 24 % 256 != 0 → tile=24 ok
+    p = {k: np.asarray(v) for k, v in skim.empty_params().items()}
+    # tile_b larger than batch clamps to batch — must not raise.
+    mask, _ = skim.skim_mask(
+        cols, nobj, scalars, p["obj_cuts"], p["groups"], p["scalar_cuts"],
+        p["ht"], p["trig"],
+    )
+    assert np.asarray(mask).shape == (24,)
+    with pytest.raises(AssertionError):
+        skim.skim_mask(
+            cols, nobj, scalars, p["obj_cuts"], p["groups"], p["scalar_cuts"],
+            p["ht"], p["trig"], tile_b=7,
+        )
+
+
+def test_tiling_invariance():
+    """Same result regardless of grid tiling."""
+    rng = np.random.default_rng(3)
+    cols, nobj, scalars = make_inputs(rng, 64, 4)
+    p = make_program(np.random.default_rng(4), n_obj_cuts=3, n_groups=1)
+    outs = []
+    for tile in [8, 16, 32, 64]:
+        mask, stages = skim.skim_mask(
+            cols, nobj, scalars, p["obj_cuts"], p["groups"], p["scalar_cuts"],
+            p["ht"], p["trig"], tile_b=tile,
+        )
+        outs.append((np.asarray(mask), np.asarray(stages)))
+    for mask, stages in outs[1:]:
+        np.testing.assert_array_equal(mask, outs[0][0])
+        np.testing.assert_array_equal(stages, outs[0][1])

@@ -1,0 +1,50 @@
+"""L2 checks: the model graph's derived outputs and the pallas-vs-ref
+graph equivalence."""
+
+import numpy as np
+
+from compile import model
+from compile.kernels import skim
+
+from .test_kernel import make_inputs, make_program
+
+
+def run(fn, cols, nobj, scalars, p):
+    return [
+        np.asarray(x)
+        for x in fn(
+            cols, nobj, scalars, p["obj_cuts"], p["groups"], p["scalar_cuts"],
+            p["ht"], p["trig"],
+        )
+    ]
+
+
+def test_model_outputs_consistent():
+    rng = np.random.default_rng(11)
+    cols, nobj, scalars = make_inputs(rng, 64, 8)
+    p = make_program(np.random.default_rng(12), n_obj_cuts=4, n_groups=2,
+                     n_scalar_cuts=1)
+    mask, stages, stage_counts, cum_counts, n_pass = run(
+        model.skim_filter, cols, nobj, scalars, p
+    )
+    assert mask.shape == (64,)
+    assert stages.shape == (skim.N_STAGES, 64)
+    np.testing.assert_allclose(stage_counts, stages.sum(axis=1))
+    np.testing.assert_allclose(cum_counts, np.cumprod(stages, axis=0).sum(axis=1))
+    np.testing.assert_allclose(n_pass, [mask.sum()])
+    # The funnel is monotone non-increasing.
+    assert all(cum_counts[i] >= cum_counts[i + 1] for i in range(3))
+    # Final survivors == last funnel stage.
+    np.testing.assert_allclose(n_pass[0], cum_counts[-1])
+
+
+def test_pallas_graph_equals_reference_graph():
+    rng = np.random.default_rng(21)
+    for seed in range(5):
+        prng = np.random.default_rng(100 + seed)
+        cols, nobj, scalars = make_inputs(rng, 32, 4)
+        p = make_program(prng)
+        got = run(model.skim_filter, cols, nobj, scalars, p)
+        want = run(model.reference_filter, cols, nobj, scalars, p)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)

@@ -1,0 +1,18 @@
+//! Figure 4a: end-to-end skim latency, four methods × three network speeds.
+//! Regenerates the paper's table (shape comparison; dataset and
+//! bandwidths are scaled — see DESIGN.md §Execution-time model).
+//!
+//! `SKIM_BENCH_SCALE=standard cargo bench --bench fig4a_latency` runs the
+//! full-census (1749-branch) dataset.
+
+mod harness;
+
+fn main() {
+    let env = harness::bench_env();
+    let runtime = harness::bench_runtime();
+    if runtime.is_none() {
+        eprintln!("[bench] artifacts not built: vectorized path disabled");
+    }
+    let table = skimroot::coordinator::eval::fig4a(&env, runtime.as_ref()).expect("eval");
+    println!("{table}");
+}

@@ -1,0 +1,18 @@
+//! Figure 4b: per-operation breakdown over the 1 Gbps link.
+//! Regenerates the paper's table (shape comparison; dataset and
+//! bandwidths are scaled — see DESIGN.md §Execution-time model).
+//!
+//! `SKIM_BENCH_SCALE=standard cargo bench --bench fig4b_breakdown` runs the
+//! full-census (1749-branch) dataset.
+
+mod harness;
+
+fn main() {
+    let env = harness::bench_env();
+    let runtime = harness::bench_runtime();
+    if runtime.is_none() {
+        eprintln!("[bench] artifacts not built: vectorized path disabled");
+    }
+    let table = skimroot::coordinator::eval::fig4b(&env, runtime.as_ref()).expect("eval");
+    println!("{table}");
+}

@@ -1,0 +1,18 @@
+//! Figure 5b: CPU utilization per node for each method.
+//! Regenerates the paper's table (shape comparison; dataset and
+//! bandwidths are scaled — see DESIGN.md §Execution-time model).
+//!
+//! `SKIM_BENCH_SCALE=standard cargo bench --bench fig5b_cpu_util` runs the
+//! full-census (1749-branch) dataset.
+
+mod harness;
+
+fn main() {
+    let env = harness::bench_env();
+    let runtime = harness::bench_runtime();
+    if runtime.is_none() {
+        eprintln!("[bench] artifacts not built: vectorized path disabled");
+    }
+    let table = skimroot::coordinator::eval::fig5b(&env, runtime.as_ref()).expect("eval");
+    println!("{table}");
+}

@@ -1,0 +1,76 @@
+//! Shared bench harness (criterion is unavailable offline): measured
+//! runs with warmup, median/min/max reporting, and the common setup for
+//! the paper-figure benches.
+//!
+//! Each `[[bench]]` target is a `harness = false` binary; `cargo bench`
+//! runs them all.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Measure `f` `iters` times after `warmup` runs; prints median/min/max.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    println!(
+        "{name:<44} median {:>12} (min {:>12}, max {:>12}, n={iters})",
+        skimroot::util::human_secs(median),
+        skimroot::util::human_secs(times[0]),
+        skimroot::util::human_secs(*times.last().unwrap()),
+    );
+}
+
+/// Throughput variant: reports MB/s over `bytes` processed per iter.
+pub fn bench_throughput<T>(
+    name: &str,
+    bytes: usize,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    println!(
+        "{name:<44} {:>10.1} MB/s (median {:>12}, n={iters})",
+        bytes as f64 / median / 1e6,
+        skimroot::util::human_secs(median),
+    );
+}
+
+/// The figure benches run the eval suite at `SKIM_BENCH_SCALE`
+/// (small|standard; default small so `cargo bench` stays quick).
+pub fn bench_scale() -> skimroot::coordinator::eval::EvalScale {
+    match std::env::var("SKIM_BENCH_SCALE").as_deref() {
+        Ok("standard") => skimroot::coordinator::eval::EvalScale::standard(),
+        _ => skimroot::coordinator::eval::EvalScale::small(),
+    }
+}
+
+pub fn bench_env() -> skimroot::coordinator::eval::EvalEnv {
+    let dir = std::env::temp_dir().join("skimroot_bench");
+    skimroot::coordinator::eval::prepare(dir, bench_scale()).expect("prepare bench dataset")
+}
+
+pub fn bench_runtime() -> Option<skimroot::runtime::SkimRuntime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    skimroot::runtime::SkimRuntime::load(dir).ok()
+}

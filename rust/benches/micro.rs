@@ -1,0 +1,143 @@
+//! Micro benchmarks for the hot paths behind the figures (and the
+//! §Perf iteration log in EXPERIMENTS.md):
+//!
+//! * codec compress/decompress throughput (LZ4 vs zlib vs xz-like —
+//!   the Figure 4b decompression asymmetry);
+//! * vectorized PJRT cut evaluation vs the scalar interpreter;
+//! * basket decode (deserialization substrate);
+//! * TTreeCache round-trip reduction;
+//! * JSON query parsing.
+
+mod harness;
+
+use skimroot::compress::{self, Codec};
+use skimroot::engine::interp;
+use skimroot::gen;
+use skimroot::query::plan::SkimPlan;
+use skimroot::runtime::{Batch, CutParams};
+use skimroot::troot::{basket, BranchDesc, ColumnData, DType};
+use skimroot::util::Pcg32;
+
+fn main() {
+    codec_benches();
+    filter_benches();
+    decode_benches();
+    json_benches();
+}
+
+fn codec_benches() {
+    println!("== codecs (4 MiB physics-shaped payload) ==");
+    let mut rng = Pcg32::new(1);
+    let data = rng.compressible_bytes(4 << 20, 0.6);
+    for codec in [Codec::Lz4, Codec::Zlib, Codec::XzLike] {
+        let frame = compress::compress(codec, &data);
+        println!(
+            "{:<10} ratio {:.2}",
+            codec.name(),
+            data.len() as f64 / frame.len() as f64
+        );
+        harness::bench_throughput(
+            &format!("{} compress", codec.name()),
+            data.len(),
+            1,
+            3,
+            || compress::compress(codec, &data),
+        );
+        harness::bench_throughput(
+            &format!("{} decompress", codec.name()),
+            data.len(),
+            1,
+            5,
+            || compress::decompress(&frame).unwrap(),
+        );
+    }
+}
+
+fn filter_benches() {
+    println!("\n== cut evaluation (2048-event batch, Higgs program) ==");
+    // Build the Higgs cut program against the generated schema.
+    let dir = std::env::temp_dir().join("skimroot_bench_micro");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("micro.troot");
+    if !path.exists() {
+        let cfg = gen::GenConfig {
+            n_events: 2048,
+            target_branches: 180,
+            n_hlt: 40,
+            basket_events: 2048,
+            codec: Codec::Lz4,
+            seed: 5,
+        };
+        gen::generate(&cfg, &path).unwrap();
+    }
+    let reader =
+        skimroot::troot::TRootReader::open(skimroot::troot::LocalFile::open(&path).unwrap())
+            .unwrap();
+    let query = gen::higgs_query("micro.troot", "o.troot");
+    let plan = SkimPlan::build(&query, reader.meta()).unwrap();
+
+    let runtime = harness::bench_runtime();
+    let caps = runtime
+        .as_ref()
+        .map(|r| r.caps)
+        .unwrap_or(skimroot::runtime::Capacities { c: 12, s: 16, k_obj: 12, k_sc: 6, g: 4, n_stages: 4 });
+
+    // Assemble a real batch from the file.
+    let mut decoded = std::collections::HashMap::new();
+    for name in &plan.criteria_branches {
+        let bm = reader.branch(name).unwrap().clone();
+        decoded.insert(name.clone(), reader.read_basket(&bm, 0).unwrap());
+    }
+    let (b, m) = (2048, 16);
+    let mut batch = Batch::zeroed(&caps, b, m);
+    skimroot::engine::batch::append(&plan.program, &decoded, 0, 2048, &mut batch, 0).unwrap();
+    batch.n_valid = 2048;
+
+    harness::bench("interpreter eval (2048 events)", 2, 10, || {
+        interp::eval(&plan.program, &batch)
+    });
+    if let Some(rt) = &runtime {
+        let variant = rt.variant("large").unwrap();
+        let params = CutParams::pack(&plan.program, &rt.caps).unwrap();
+        harness::bench("PJRT kernel eval (2048 events)", 2, 10, || {
+            rt.eval(variant, &batch, &params).unwrap()
+        });
+    } else {
+        println!("(PJRT runtime unavailable: build artifacts first)");
+    }
+}
+
+fn decode_benches() {
+    println!("\n== basket decode (deserialization substrate) ==");
+    let per_event: Vec<Vec<f32>> = {
+        let mut rng = Pcg32::new(9);
+        (0..10_000)
+            .map(|_| (0..rng.poisson(5.5) as usize).map(|_| rng.exp(35.0) as f32).collect())
+            .collect()
+    };
+    let col = ColumnData::jagged_f32(&per_event);
+    let desc = BranchDesc::jagged("Jet_pt", DType::F32, "Jet");
+    let raw = basket::encode(&col, 0, per_event.len());
+    harness::bench_throughput("jagged decode (10k events)", raw.len(), 2, 10, || {
+        basket::decode(&desc, &raw, 0, per_event.len()).unwrap()
+    });
+    harness::bench("selective decode (100 of 10k events)", 2, 10, || {
+        let mut offsets = vec![0u32];
+        let mut values = skimroot::troot::ColumnValues::F32(Vec::new());
+        for ev in (0..10_000).step_by(100) {
+            basket::append_event(&desc, &raw, per_event.len(), ev, &mut offsets, &mut values)
+                .unwrap();
+        }
+        values
+    });
+}
+
+fn json_benches() {
+    println!("\n== query front-end ==");
+    let query = gen::higgs_query("f.troot", "o.troot");
+    let text = query.to_json().to_string();
+    println!("higgs query payload: {} bytes", text.len());
+    harness::bench("JSON parse + validate (higgs query)", 5, 50, || {
+        skimroot::query::SkimQuery::from_json_text(&text).unwrap()
+    });
+}

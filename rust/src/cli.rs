@@ -1,0 +1,110 @@
+//! Minimal command-line argument parser (`clap` is not available
+//! offline). Supports `--key value`, `--key=value`, boolean switches
+//! and positional arguments.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `switch_names` lists flags that take no
+    /// value (everything else with `--` consumes the next token unless
+    /// written as `--key=value`).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, switch_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&stripped) {
+                    out.switches.push(stripped.to_string());
+                } else {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| Error::Config(format!("--{stripped} needs a value")))?;
+                    out.flags.insert(stripped.to_string(), v);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| Error::Config(format!("missing required flag --{key}")))
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: cannot parse '{v}'"))),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str], switches: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string()), switches).unwrap()
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(
+            &["gen", "--out", "f.troot", "--events=100", "--force", "extra"],
+            &["force"],
+        );
+        assert_eq!(a.positional, vec!["gen", "extra"]);
+        assert_eq!(a.get("out"), Some("f.troot"));
+        assert_eq!(a.parse_num::<u64>("events", 0).unwrap(), 100);
+        assert!(a.switch("force"));
+        assert!(!a.switch("other"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["--out".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn require_and_defaults() {
+        let a = parse(&["--x", "1"], &[]);
+        assert_eq!(a.require("x").unwrap(), "1");
+        assert!(a.require("y").is_err());
+        assert_eq!(a.get_or("y", "z"), "z");
+        assert!(a.parse_num::<u32>("x", 0).unwrap() == 1);
+        assert!(a.parse_num::<u32>("q", 7).unwrap() == 7);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--n", "abc"], &[]);
+        assert!(a.parse_num::<u32>("n", 0).is_err());
+    }
+}

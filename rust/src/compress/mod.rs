@@ -1,0 +1,270 @@
+//! Compression codecs for basket payloads.
+//!
+//! ROOT compresses each basket independently with a per-file algorithm
+//! (zlib, LZ4 or LZMA).  The paper's evaluation contrasts **LZMA**
+//! (small files, slow decode) with **LZ4** (larger files, fast decode);
+//! we reproduce that trade-off with:
+//!
+//! * [`lz4`] — a from-scratch LZ4 *block* codec (greedy hash-table
+//!   matcher, standard token/offset wire format);
+//! * [`xz_like`] — a from-scratch LZMA-class codec: LZ77 with hash-chain
+//!   match finding entropy-coded by an adaptive binary **range coder**.
+//!   Like real LZMA it trades decode speed for ratio (every bit goes
+//!   through the range decoder);
+//! * `Zlib` — DEFLATE via the vendored `flate2` (ROOT's historical
+//!   default), kept as a mid-point and for cross-checking.
+//!
+//! Every compressed buffer is wrapped in a small frame
+//! (`magic, codec id, raw length, payload length, crc32`) so baskets are
+//! self-describing and corruption is detected at decode time — mirroring
+//! ROOT's 9-byte basket compression header + checksums.
+
+pub mod lz4;
+pub mod xz_like;
+
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// Frame header: magic(2) codec(1) raw_len(4) payload_len(4) crc32(4).
+pub const FRAME_HEADER_LEN: usize = 15;
+const FRAME_MAGIC: [u8; 2] = [0x53, 0x4b]; // "SK"
+
+/// Which codec a basket (or file) uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Codec {
+    /// No compression (stored).
+    None,
+    /// From-scratch LZ4 block codec: fast decode, moderate ratio.
+    Lz4,
+    /// DEFLATE via flate2: ROOT's historical default.
+    Zlib,
+    /// From-scratch LZMA-class range-coded LZ77: slow decode, best ratio.
+    XzLike,
+}
+
+impl Codec {
+    pub fn id(self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::Lz4 => 1,
+            Codec::Zlib => 2,
+            Codec::XzLike => 3,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Result<Codec> {
+        Ok(match id {
+            0 => Codec::None,
+            1 => Codec::Lz4,
+            2 => Codec::Zlib,
+            3 => Codec::XzLike,
+            _ => return Err(Error::Compress(format!("unknown codec id {id}"))),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::Lz4 => "lz4",
+            Codec::Zlib => "zlib",
+            Codec::XzLike => "xz-like",
+        }
+    }
+
+    /// Parse a codec name (as used by the CLI and JSON queries).
+    pub fn parse(s: &str) -> Result<Codec> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" | "stored" => Codec::None,
+            "lz4" => Codec::Lz4,
+            "zlib" | "deflate" | "gzip" => Codec::Zlib,
+            "xz" | "xz-like" | "xzlike" | "lzma" => Codec::XzLike,
+            other => return Err(Error::Compress(format!("unknown codec '{other}'"))),
+        })
+    }
+}
+
+impl std::fmt::Display for Codec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Compress `data` into a self-describing frame.
+pub fn compress(codec: Codec, data: &[u8]) -> Vec<u8> {
+    let payload = match codec {
+        Codec::None => data.to_vec(),
+        Codec::Lz4 => lz4::compress(data),
+        Codec::Zlib => zlib_compress(data),
+        Codec::XzLike => xz_like::compress(data),
+    };
+    let crc = crc32fast::hash(&payload);
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.push(codec.id());
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Inspect a frame without decoding: returns `(codec, raw_len, payload_len)`.
+pub fn frame_info(frame: &[u8]) -> Result<(Codec, usize, usize)> {
+    if frame.len() < FRAME_HEADER_LEN {
+        return Err(Error::Compress("frame too short".into()));
+    }
+    if frame[..2] != FRAME_MAGIC {
+        return Err(Error::Compress("bad frame magic".into()));
+    }
+    let codec = Codec::from_id(frame[2])?;
+    let raw_len = u32::from_le_bytes(frame[3..7].try_into().unwrap()) as usize;
+    let payload_len = u32::from_le_bytes(frame[7..11].try_into().unwrap()) as usize;
+    if frame.len() < FRAME_HEADER_LEN + payload_len {
+        return Err(Error::Compress(format!(
+            "truncated frame: have {} need {}",
+            frame.len(),
+            FRAME_HEADER_LEN + payload_len
+        )));
+    }
+    Ok((codec, raw_len, payload_len))
+}
+
+/// Decompress a frame produced by [`compress`].
+pub fn decompress(frame: &[u8]) -> Result<Vec<u8>> {
+    let (codec, raw_len, payload_len) = frame_info(frame)?;
+    let crc_stored = u32::from_le_bytes(frame[11..15].try_into().unwrap());
+    let payload = &frame[FRAME_HEADER_LEN..FRAME_HEADER_LEN + payload_len];
+    if crc32fast::hash(payload) != crc_stored {
+        return Err(Error::Compress("crc mismatch (corrupt basket)".into()));
+    }
+    let out = match codec {
+        Codec::None => payload.to_vec(),
+        Codec::Lz4 => lz4::decompress(payload, raw_len)?,
+        Codec::Zlib => zlib_decompress(payload, raw_len)?,
+        Codec::XzLike => xz_like::decompress(payload, raw_len)?,
+    };
+    if out.len() != raw_len {
+        return Err(Error::Compress(format!(
+            "raw length mismatch: got {} expected {raw_len}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+fn zlib_compress(data: &[u8]) -> Vec<u8> {
+    let mut enc =
+        flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::new(6));
+    enc.write_all(data).expect("in-memory zlib write cannot fail");
+    enc.finish().expect("in-memory zlib finish cannot fail")
+}
+
+fn zlib_decompress(payload: &[u8], raw_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(raw_len);
+    let mut dec = flate2::read::ZlibDecoder::new(payload);
+    dec.read_to_end(&mut out)
+        .map_err(|e| Error::Compress(format!("zlib: {e}")))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop_check, Pcg32};
+
+    const ALL: [Codec; 4] = [Codec::None, Codec::Lz4, Codec::Zlib, Codec::XzLike];
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        for codec in ALL {
+            for data in [&b""[..], b"a", b"ab", b"abc", b"aaaa", b"abcabcabcabc"] {
+                let frame = compress(codec, data);
+                assert_eq!(decompress(&frame).unwrap(), data, "codec={codec}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_structured_payloads() {
+        let mut rng = Pcg32::new(1);
+        for codec in ALL {
+            for redundancy in [0.0, 0.3, 0.7, 0.95] {
+                let data = rng.compressible_bytes(100_000, redundancy);
+                let frame = compress(codec, &data);
+                assert_eq!(decompress(&frame).unwrap(), data, "codec={codec} r={redundancy}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_all_codecs() {
+        prop_check("compress-roundtrip", 40, |rng| {
+            let len = rng.below(50_000) as usize;
+            let redundancy = rng.f64();
+            let data = rng.compressible_bytes(len, redundancy);
+            for codec in ALL {
+                let frame = compress(codec, &data);
+                assert_eq!(decompress(&frame).unwrap(), data, "codec={codec}");
+            }
+        });
+    }
+
+    #[test]
+    fn ratio_ordering_matches_paper() {
+        // Paper: LZMA file (3 GB) smaller than LZ4 file (5 GB) for the
+        // same data. Our xz-like codec must beat lz4's ratio on
+        // structured payloads.
+        let mut rng = Pcg32::new(2);
+        let data = rng.compressible_bytes(400_000, 0.7);
+        let lz4_len = compress(Codec::Lz4, &data).len();
+        let xz_len = compress(Codec::XzLike, &data).len();
+        assert!(
+            xz_len < lz4_len,
+            "xz-like ({xz_len}) should compress better than lz4 ({lz4_len})"
+        );
+        assert!(lz4_len < data.len(), "lz4 should compress structured data");
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let data = b"some basket payload that is long enough to compress";
+        for codec in ALL {
+            let mut frame = compress(codec, data);
+            let n = frame.len();
+            frame[n - 1] ^= 0xff;
+            assert!(decompress(&frame).is_err(), "codec={codec}");
+        }
+    }
+
+    #[test]
+    fn frame_info_reports_sizes() {
+        let data = vec![7u8; 1000];
+        let frame = compress(Codec::Lz4, &data);
+        let (codec, raw, payload) = frame_info(&frame).unwrap();
+        assert_eq!(codec, Codec::Lz4);
+        assert_eq!(raw, 1000);
+        assert_eq!(payload, frame.len() - FRAME_HEADER_LEN);
+        assert!(payload < 100, "1000 identical bytes must compress well");
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_short_frames() {
+        assert!(decompress(&[]).is_err());
+        assert!(decompress(&[0u8; 10]).is_err());
+        let mut frame = compress(Codec::None, b"hello");
+        frame[0] = 0;
+        assert!(decompress(&frame).is_err());
+    }
+
+    #[test]
+    fn codec_parse_and_display() {
+        assert_eq!(Codec::parse("LZMA").unwrap(), Codec::XzLike);
+        assert_eq!(Codec::parse("lz4").unwrap(), Codec::Lz4);
+        assert_eq!(Codec::parse("deflate").unwrap(), Codec::Zlib);
+        assert!(Codec::parse("snappy").is_err());
+        for c in ALL {
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+            assert_eq!(Codec::from_id(c.id()).unwrap(), c);
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! The paper-evaluation harness: one function per figure in §4,
+//! shared by `cargo bench` targets, the `skimroot eval` subcommand and
+//! the `higgs_skim` example.
+//!
+//! Each function runs the real pipeline (generation → deployment →
+//! skim) at a configurable scale and renders the same rows the paper
+//! reports, with the paper's testbed numbers printed alongside for
+//! shape comparison. Absolute values differ (software substrate,
+//! scaled dataset); the comparisons that must hold are: who wins, by
+//! roughly what factor, and where the crossovers fall.
+
+use super::{Coordinator, Deployment, Mode};
+use crate::compress::Codec;
+use crate::gen::{self, GenConfig};
+use crate::metrics::{Node, Stage};
+use crate::net::LinkModel;
+use crate::runtime::SkimRuntime;
+use crate::util::human_secs;
+use crate::Result;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Dataset scale for an evaluation run.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalScale {
+    pub n_events: u64,
+    pub target_branches: usize,
+    pub n_hlt: usize,
+    pub basket_events: u32,
+}
+
+impl EvalScale {
+    /// Fast scale for `cargo bench` smoke runs (~seconds).
+    pub fn small() -> Self {
+        EvalScale { n_events: 6_000, target_branches: 240, n_hlt: 60, basket_events: 500 }
+    }
+
+    /// Default evaluation scale: the paper's full branch census
+    /// (1749 branches, 677 HLT flags) at a laptop-friendly event count.
+    pub fn standard() -> Self {
+        EvalScale { n_events: 30_000, target_branches: 1749, n_hlt: 677, basket_events: 1000 }
+    }
+}
+
+/// Prepared on-disk evaluation environment.
+pub struct EvalEnv {
+    pub storage: PathBuf,
+    pub client: PathBuf,
+    /// Catalog name of the LZ4-compressed dataset.
+    pub lz4: String,
+    /// Catalog name of the LZMA-class (xz-like) dataset.
+    pub xz: String,
+    pub scale: EvalScale,
+    /// Bandwidth scale factor: our LZ4 file size / the paper's 5 GB.
+    /// Link and disk *bandwidths* are multiplied by this so the
+    /// dataset:bandwidth proportions match the paper's testbed (paying
+    /// 5 GB of real transfers per bench run is not viable); latencies
+    /// (RTT, seek) stay physical. See DESIGN.md §Execution-time model.
+    pub bw_scale: f64,
+}
+
+/// The paper's LZ4 dataset size that bandwidths are normalized to.
+pub const PAPER_LZ4_BYTES: f64 = 5.0e9;
+
+/// Generate (once) the LZ4 and xz-like variants of the evaluation
+/// dataset under `dir/storage`, mirroring the paper's "compressed to
+/// 3 GB with LZMA and 5 GB with LZ4" file pair.
+pub fn prepare(dir: impl AsRef<Path>, scale: EvalScale) -> Result<EvalEnv> {
+    let dir = dir.as_ref();
+    let storage = dir.join("storage");
+    let client = dir.join("client");
+    std::fs::create_dir_all(&storage)?;
+    std::fs::create_dir_all(&client)?;
+    let lz4 = format!("events_{}k_lz4.troot", scale.n_events / 1000);
+    let xz = format!("events_{}k_xz.troot", scale.n_events / 1000);
+    for (name, codec) in [(&lz4, Codec::Lz4), (&xz, Codec::XzLike)] {
+        let path = storage.join(name);
+        if !path.exists() {
+            let cfg = GenConfig {
+                n_events: scale.n_events,
+                target_branches: scale.target_branches,
+                n_hlt: scale.n_hlt,
+                basket_events: scale.basket_events,
+                codec,
+                seed: 0x4a55,
+            };
+            eprintln!("[eval] generating {name} ({} events)...", scale.n_events);
+            let summary = gen::generate(&cfg, &path)?;
+            eprintln!(
+                "[eval]   {} branches, {} → {} (ratio {:.2})",
+                summary.n_branches,
+                crate::util::human_bytes(summary.raw_bytes),
+                crate::util::human_bytes(summary.file_bytes),
+                summary.compression_ratio()
+            );
+        }
+    }
+    let lz4_bytes = std::fs::metadata(storage.join(&lz4))?.len() as f64;
+    let bw_scale = (lz4_bytes / PAPER_LZ4_BYTES).min(1.0);
+    Ok(EvalEnv { storage, client, lz4, xz, scale, bw_scale })
+}
+
+/// Deployment with testbed bandwidths scaled to the dataset.
+fn deployment(env: &EvalEnv, mode: Mode, link: LinkModel) -> Deployment {
+    let mut dep = Deployment::new(mode, link.scaled(env.bw_scale));
+    dep.disk = dep.disk.scaled(env.bw_scale);
+    dep.dpu.pcie = dep.dpu.pcie.scaled(env.bw_scale);
+    dep
+}
+
+/// The four §4 methods with their dataset variant.
+fn methods(env: &EvalEnv) -> [(&'static str, Mode, String, Option<f64>); 4] {
+    [
+        // (label, mode, input file, paper latency @1 Gbps)
+        ("Client LZMA", Mode::ClientLegacy, env.xz.clone(), Some(430.0)),
+        ("Client LZ4", Mode::ClientLegacy, env.lz4.clone(), Some(382.1)),
+        ("Client Opt LZ4", Mode::ClientOpt, env.lz4.clone(), Some(155.9)),
+        ("SkimROOT", Mode::SkimRoot, env.lz4.clone(), Some(8.62)),
+    ]
+}
+
+const LINKS: [(&str, fn() -> LinkModel, bool); 3] = [
+    ("1 Gbps", LinkModel::wan_1g, true),
+    ("10 Gbps", LinkModel::shared_10g, false),
+    ("100 Gbps", LinkModel::dedicated_100g, false),
+];
+
+/// Figure 4a: end-to-end latency, methods × network speeds.
+pub fn fig4a(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
+    let coord = Coordinator::new(&env.storage, &env.client, runtime);
+    let mut out = String::new();
+    writeln!(out, "== Figure 4a: filtering latency across network speeds ==").unwrap();
+    writeln!(
+        out,
+        "{:<16} {:>12} {:>12} {:>12}   {:>14}",
+        "method", "1 Gbps", "10 Gbps", "100 Gbps", "paper @1Gbps"
+    )
+    .unwrap();
+    let mut lat_1g = Vec::new();
+    for (label, mode, input, paper) in methods(env) {
+        let query = gen::higgs_query(&input, &format!("skim_{}.troot", mode.name()));
+        let mut cells = Vec::new();
+        for (_, link, _) in LINKS {
+            let report = coord.run_job(&query, &deployment(env, mode, link()))?;
+            cells.push(report.latency);
+        }
+        lat_1g.push((label, cells[0]));
+        writeln!(
+            out,
+            "{:<16} {:>12} {:>12} {:>12}   {:>14}",
+            label,
+            human_secs(cells[0]),
+            human_secs(cells[1]),
+            human_secs(cells[2]),
+            paper.map(|p| format!("{p} s")).unwrap_or_default()
+        )
+        .unwrap();
+    }
+    let legacy = lat_1g.iter().find(|(l, _)| *l == "Client LZ4").unwrap().1;
+    let skim = lat_1g.iter().find(|(l, _)| *l == "SkimROOT").unwrap().1;
+    writeln!(
+        out,
+        "\nSkimROOT speedup over Client LZ4 @1 Gbps: {:.1}x (paper: 44.3x)",
+        legacy / skim
+    )
+    .unwrap();
+    Ok(out)
+}
+
+const BREAKDOWN_STAGES: [Stage; 5] = [
+    Stage::BasketFetch,
+    Stage::Decompress,
+    Stage::Deserialize,
+    Stage::OutputWrite,
+    Stage::OutputTransfer,
+];
+
+fn breakdown_row(label: &str, report: &super::JobReport) -> String {
+    let mut s = format!("{label:<16}");
+    for stage in BREAKDOWN_STAGES {
+        let mut t = report.timeline.stage_total(stage);
+        // Fold filter eval into "deserialize" the way the paper's
+        // breakdown folds processing into its deserialization bar.
+        if stage == Stage::Deserialize {
+            t += report.timeline.stage_total(Stage::Filter);
+        }
+        s.push_str(&format!(" {:>12}", human_secs(t)));
+    }
+    s.push_str(&format!(" {:>12}", human_secs(report.latency)));
+    s
+}
+
+fn breakdown_header() -> String {
+    let mut s = format!("{:<16}", "method");
+    for stage in BREAKDOWN_STAGES {
+        s.push_str(&format!(" {:>12}", stage.name()));
+    }
+    s.push_str(&format!(" {:>12}", "TOTAL"));
+    s
+}
+
+/// Figure 4b: per-operation breakdown over the 1 Gbps link.
+pub fn fig4b(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
+    let coord = Coordinator::new(&env.storage, &env.client, runtime);
+    let mut out = String::new();
+    writeln!(out, "== Figure 4b: operation breakdown @ 1 Gbps ==").unwrap();
+    writeln!(out, "{}", breakdown_header()).unwrap();
+    for (label, mode, input, _) in methods(env) {
+        let query = gen::higgs_query(&input, &format!("skim_{}.troot", mode.name()));
+        let report = coord.run_job(&query, &deployment(env, mode, LinkModel::wan_1g()))?;
+        writeln!(out, "{}", breakdown_row(label, &report)).unwrap();
+    }
+    writeln!(
+        out,
+        "\npaper @1 Gbps: LZMA decompress 130.4 s | LZ4 decompress 3.2 s, deserialize 240.4 s |"
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "               ClientOpt deserialize 16.8 s, fetch 135.9 s | SkimROOT total 8.62 s"
+    )
+    .unwrap();
+    Ok(out)
+}
+
+/// Figure 5a: near-storage (server-side) vs SkimROOT breakdown, LZ4.
+pub fn fig5a(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
+    let coord = Coordinator::new(&env.storage, &env.client, runtime);
+    let mut out = String::new();
+    writeln!(out, "== Figure 5a: server-side vs SkimROOT (LZ4) ==").unwrap();
+    writeln!(out, "{}", breakdown_header()).unwrap();
+    let mut totals = Vec::new();
+    for (label, mode) in [("Server-side", Mode::ServerSide), ("SkimROOT", Mode::SkimRoot)] {
+        let query = gen::higgs_query(&env.lz4, &format!("skim5a_{}.troot", mode.name()));
+        let report = coord.run_job(&query, &deployment(env, mode, LinkModel::wan_1g()))?;
+        writeln!(out, "{}", breakdown_row(label, &report)).unwrap();
+        totals.push(report.latency);
+    }
+    writeln!(
+        out,
+        "\nserver-side / SkimROOT latency: {:.2}x (paper: 3.18x; fetch 18 s vs 2.3 s,\n\
+         decompress 3.1 s vs 2.2 s, deserialize 6.3 s vs 4.1 s, output fetch 0.02 s)",
+        totals[0] / totals[1]
+    )
+    .unwrap();
+    Ok(out)
+}
+
+/// Figure 5b: CPU utilization per node (LZ4 @ 1 Gbps).
+pub fn fig5b(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
+    let coord = Coordinator::new(&env.storage, &env.client, runtime);
+    let mut out = String::new();
+    writeln!(out, "== Figure 5b: CPU utilization (LZ4 @ 1 Gbps) ==").unwrap();
+    writeln!(
+        out,
+        "{:<16} {:>9} {:>9} {:>9} {:>11}   paper",
+        "method", "client", "server", "dpu", "dpu-engine"
+    )
+    .unwrap();
+    let rows: [(&str, Mode, &str); 4] = [
+        ("Client LZ4", Mode::ClientLegacy, "client 99%"),
+        ("Client Opt LZ4", Mode::ClientOpt, "client 17%"),
+        ("Server-side", Mode::ServerSide, "client 0.1%, server 41%"),
+        ("SkimROOT", Mode::SkimRoot, "dpu 87%, server 21%"),
+    ];
+    for (label, mode, paper) in rows {
+        let query = gen::higgs_query(&env.lz4, &format!("skim5b_{}.troot", mode.name()));
+        let report = coord.run_job(&query, &deployment(env, mode, LinkModel::wan_1g()))?;
+        let pct = |n: Node| format!("{:.1}%", (100.0 * report.timeline.utilization(n)).max(0.0));
+        writeln!(
+            out,
+            "{:<16} {:>9} {:>9} {:>9} {:>11}   {paper}",
+            label,
+            pct(Node::Client),
+            pct(Node::Server),
+            pct(Node::Dpu),
+            pct(Node::DpuEngine),
+        )
+        .unwrap();
+    }
+    Ok(out)
+}
+
+/// Run every figure (the `skimroot eval --fig all` path).
+pub fn all_figures(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
+    let mut out = String::new();
+    for f in [fig4a, fig4b, fig5a, fig5b] {
+        out.push_str(&f(env, runtime)?);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> EvalEnv {
+        let dir = std::env::temp_dir().join(format!("evalsuite_{}", std::process::id()));
+        let scale = EvalScale {
+            n_events: 1_000,
+            target_branches: 150,
+            n_hlt: 40,
+            basket_events: 250,
+        };
+        prepare(dir, scale).unwrap()
+    }
+
+    #[test]
+    fn fig4a_shape_holds_at_tiny_scale() {
+        let e = env();
+        let table = fig4a(&e, None).unwrap();
+        assert!(table.contains("SkimROOT speedup"));
+        // SkimROOT's 1 Gbps cell must be the smallest in its column —
+        // parse the speedup line.
+        let speedup: f64 = table
+            .lines()
+            .find(|l| l.contains("speedup"))
+            .and_then(|l| l.split_whitespace().nth(7))
+            .and_then(|s| s.trim_end_matches('x').parse().ok())
+            .unwrap();
+        assert!(speedup > 1.0, "speedup {speedup}\n{table}");
+    }
+
+    #[test]
+    fn fig5b_utilization_shape() {
+        let e = env();
+        let table = fig5b(&e, None).unwrap();
+        assert!(table.contains("Client LZ4"));
+        assert!(table.contains("SkimROOT"));
+    }
+}

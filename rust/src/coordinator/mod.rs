@@ -1,0 +1,507 @@
+//! The job coordinator: deploys a skim across the testbed topology and
+//! produces the paper's comparison rows.
+//!
+//! A [`Deployment`] fixes *where* filtering runs and over *which*
+//! links, reproducing §4's four methods:
+//!
+//! | mode | data path | filter on | decompress | TTreeCache |
+//! |---|---|---|---|---|
+//! | `ClientLegacy` | storage → client over WAN | client (per-event, single-phase) | client CPU | yes |
+//! | `ClientOpt` | storage → client over WAN | client (two-phase, vectorized) | client CPU | yes |
+//! | `ServerSide` | local disk | server (two-phase, vectorized) | server CPU | **no** (local access) |
+//! | `SkimRoot` | storage → DPU over PCIe | DPU ARM cores | **hw engine** | yes |
+//!
+//! All modes ship the filtered file to the client at the end (a no-op
+//! for the client-side modes, where the output is already there).
+//!
+//! The coordinator also models WLCG's operational reality (§1: "jobs
+//! frequently fail and require resubmission"): a [`FaultConfig`]
+//! injects storage-read failures; failed attempts burn their time on
+//! the job timeline and the job is retried, exactly like a WLCG
+//! resubmission.
+
+pub mod eval;
+
+use crate::dpu::{DpuConfig, DpuNode};
+use crate::engine::{DecompMode, EngineOpts, SkimEngine, SkimResult};
+use crate::metrics::{Node, Stage, Timeline};
+use crate::net::{DiskModel, LinkModel, ModeledStore};
+use crate::query::SkimQuery;
+use crate::runtime::SkimRuntime;
+use crate::troot::{LocalFile, ReadAt};
+use crate::util::Pcg32;
+use crate::xrootd::{LoopbackWire, XrdClient, XrdServer};
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Which of the paper's four methods to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Unoptimized client-side filtering: single-phase, per-event
+    /// interpreter (the hand-written-macro baseline).
+    ClientLegacy,
+    /// Client-side with SkimROOT's two-phase model + vectorized eval
+    /// ("Client Opt" in Figure 4).
+    ClientOpt,
+    /// Filtering on the storage server itself (local reads, no cache).
+    ServerSide,
+    /// Near-storage filtering on the DPU.
+    SkimRoot,
+}
+
+impl Mode {
+    pub const ALL: [Mode; 4] = [Mode::ClientLegacy, Mode::ClientOpt, Mode::ServerSide, Mode::SkimRoot];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::ClientLegacy => "client-legacy",
+            Mode::ClientOpt => "client-opt",
+            Mode::ServerSide => "server-side",
+            Mode::SkimRoot => "skimroot",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "client" | "client-legacy" | "legacy" => Mode::ClientLegacy,
+            "client-opt" | "opt" => Mode::ClientOpt,
+            "server" | "server-side" => Mode::ServerSide,
+            "skimroot" | "dpu" => Mode::SkimRoot,
+            other => return Err(Error::Config(format!("unknown mode '{other}'"))),
+        })
+    }
+}
+
+/// WLCG-style failure injection: each storage read fails with
+/// `read_fail_prob`; the coordinator resubmits up to `max_retries`.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultConfig {
+    pub read_fail_prob: f64,
+    pub max_retries: u32,
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig { read_fail_prob: 0.0, max_retries: 3, seed: 0 }
+    }
+}
+
+/// Full testbed description for one job.
+#[derive(Clone)]
+pub struct Deployment {
+    pub mode: Mode,
+    /// Client ↔ storage-site link (the 1/10/100 Gbps axis of Fig. 4a).
+    pub client_link: LinkModel,
+    /// Storage backend behind the XRootD server.
+    pub disk: DiskModel,
+    pub dpu: DpuConfig,
+    pub fault: FaultConfig,
+    /// TTreeCache capacity for remote clients.
+    pub cache_bytes: usize,
+}
+
+impl Deployment {
+    pub fn new(mode: Mode, client_link: LinkModel) -> Self {
+        Deployment {
+            mode,
+            client_link,
+            disk: DiskModel::disk_pool(),
+            dpu: DpuConfig::default(),
+            fault: FaultConfig::default(),
+            cache_bytes: crate::xrootd::DEFAULT_CACHE_BYTES,
+        }
+    }
+}
+
+/// Result of a coordinated job: engine outcome + per-node accounting.
+pub struct JobReport {
+    pub mode: Mode,
+    pub result: SkimResult,
+    pub timeline: Timeline,
+    /// End-to-end latency (request submission → filtered file at the
+    /// client), seconds.
+    pub latency: f64,
+    pub attempts: u32,
+    pub utilization: Vec<(Node, f64)>,
+}
+
+impl JobReport {
+    /// Per-stage breakdown rows (the Fig. 4b / 5a decomposition).
+    pub fn breakdown(&self) -> Vec<(Stage, f64)> {
+        Stage::ALL
+            .iter()
+            .map(|&s| (s, self.timeline.stage_total(s)))
+            .filter(|&(_, t)| t > 0.0)
+            .collect()
+    }
+}
+
+/// A `ReadAt` wrapper that injects deterministic read failures.
+struct FlakyStore<R> {
+    inner: R,
+    fail_prob: f64,
+    rng_state: AtomicU64,
+}
+
+impl<R> FlakyStore<R> {
+    fn new(inner: R, fail_prob: f64, seed: u64) -> Self {
+        FlakyStore { inner, fail_prob, rng_state: AtomicU64::new(seed) }
+    }
+
+    fn should_fail(&self) -> bool {
+        if self.fail_prob <= 0.0 {
+            return false;
+        }
+        let s = self.rng_state.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Pcg32::new(s);
+        rng.chance(self.fail_prob)
+    }
+}
+
+impl<R: ReadAt> ReadAt for FlakyStore<R> {
+    fn read_at(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        if self.should_fail() {
+            return Err(Error::Io(std::io::Error::other("injected storage fault")));
+        }
+        self.inner.read_at(offset, len)
+    }
+
+    fn read_vec(&self, ranges: &[(u64, usize)]) -> Result<Vec<Vec<u8>>> {
+        if self.should_fail() {
+            return Err(Error::Io(std::io::Error::other("injected storage fault")));
+        }
+        self.inner.read_vec(ranges)
+    }
+
+    fn size(&self) -> Result<u64> {
+        self.inner.size()
+    }
+}
+
+/// The coordinator: owns the storage root and runtime handle, runs
+/// jobs under any deployment.
+pub struct Coordinator<'rt> {
+    storage_root: std::path::PathBuf,
+    runtime: Option<&'rt SkimRuntime>,
+    /// Where client-side outputs / shipped outputs land.
+    client_dir: std::path::PathBuf,
+}
+
+impl<'rt> Coordinator<'rt> {
+    pub fn new(
+        storage_root: impl Into<std::path::PathBuf>,
+        client_dir: impl Into<std::path::PathBuf>,
+        runtime: Option<&'rt SkimRuntime>,
+    ) -> Self {
+        Coordinator {
+            storage_root: storage_root.into(),
+            runtime,
+            client_dir: client_dir.into(),
+        }
+    }
+
+    /// Run one skim job under `deployment`, with WLCG-style retries.
+    pub fn run_job(&self, query: &SkimQuery, deployment: &Deployment) -> Result<JobReport> {
+        let timeline = Timeline::new();
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            // Each attempt gets a distinct fault stream: a resubmitted
+            // job does not hit the identical failure.
+            let attempt_seed = deployment
+                .fault
+                .seed
+                .wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(attempts as u64));
+            match self.run_attempt(query, deployment, &timeline, attempt_seed) {
+                Ok(result) => {
+                    timeline.count("attempts", 1);
+                    let latency = timeline.elapsed();
+                    let utilization = [Node::Client, Node::Server, Node::Dpu, Node::DpuEngine]
+                        .iter()
+                        .map(|&n| (n, timeline.utilization(n)))
+                        .collect();
+                    return Ok(JobReport {
+                        mode: deployment.mode,
+                        result,
+                        timeline,
+                        latency,
+                        attempts,
+                    utilization,
+                    });
+                }
+                Err(e) => {
+                    timeline.count("attempts", 1);
+                    timeline.count("failures", 1);
+                    if attempts > deployment.fault.max_retries {
+                        return Err(Error::Engine(format!(
+                            "job failed after {attempts} attempts: {e}"
+                        )));
+                    }
+                    // Resubmission overhead (scheduling delay in WLCG).
+                    timeline.charge(Stage::Other, 1.0);
+                }
+            }
+        }
+    }
+
+    fn run_attempt(
+        &self,
+        query: &SkimQuery,
+        deployment: &Deployment,
+        timeline: &Timeline,
+        fault_seed: u64,
+    ) -> Result<SkimResult> {
+        std::fs::create_dir_all(&self.client_dir)?;
+        let out_path = self.client_dir.join(sanitize(&query.output));
+        let server = XrdServer::new(&self.storage_root, deployment.disk);
+        server.set_timeline(Some(timeline.clone()));
+
+        let wrap_faults = |store: Arc<dyn ReadAt>| -> Arc<dyn ReadAt> {
+            if deployment.fault.read_fail_prob > 0.0 {
+                Arc::new(FlakyStore::new(
+                    store,
+                    deployment.fault.read_fail_prob,
+                    fault_seed,
+                ))
+            } else {
+                store
+            }
+        };
+
+        match deployment.mode {
+            Mode::ClientLegacy | Mode::ClientOpt => {
+                let optimized = deployment.mode == Mode::ClientOpt;
+                let wire = Arc::new(LoopbackWire::new(
+                    server,
+                    deployment.client_link,
+                    timeline.clone(),
+                ));
+                let client = XrdClient::new(wire);
+                let remote: Arc<dyn ReadAt> = Arc::new(client.open(&query.input)?);
+                let store = wrap_faults(remote);
+                let opts = EngineOpts {
+                    two_phase: optimized,
+                    use_pjrt: optimized,
+                    compute_node: Node::Client,
+                    decomp: DecompMode::Software,
+                    cache_bytes: Some(deployment.cache_bytes),
+                    output_codec: None,
+                    max_objects: 16,
+                    ..Default::default()
+                };
+                let engine = SkimEngine::new(self.runtime);
+                // Output is produced directly on the client: no final
+                // transfer hop.
+                engine.run(store, query, timeline, &opts, &out_path)
+            }
+            Mode::ServerSide => {
+                // Local reads: no XRootD in the path, no TTreeCache
+                // (§4: "TTreeCache does not function for local ROOT
+                // file access"), per-basket disk seeks.
+                let local = LocalFile::open(self.storage_root.join(&query.input))?;
+                let modeled: Arc<dyn ReadAt> =
+                    Arc::new(ModeledStore::new(local, deployment.disk, timeline.clone()));
+                let store = wrap_faults(modeled);
+                let opts = EngineOpts {
+                    two_phase: true,
+                    use_pjrt: true,
+                    compute_node: Node::Server,
+                    decomp: DecompMode::Software,
+                    cache_bytes: None,
+                    output_codec: None,
+                    max_objects: 16,
+                    ..Default::default()
+                };
+                let engine = SkimEngine::new(self.runtime);
+                let result = engine.run(store, query, timeline, &opts, &out_path)?;
+                // Ship the filtered file to the client.
+                deployment.client_link.charge(
+                    timeline,
+                    Stage::OutputTransfer,
+                    result.output_bytes,
+                );
+                Ok(result)
+            }
+            Mode::SkimRoot => {
+                // The DPU path: PCIe-attached near-storage filtering.
+                // (Fault injection applies inside the DPU's fetch path
+                // through the storage server; model faults at the job
+                // level by wrapping the DPU scratch read — the DPU
+                // retries whole jobs like any WLCG worker.)
+                if deployment.fault.read_fail_prob > 0.0 {
+                    let mut rng = Pcg32::new(fault_seed);
+                    if rng.chance(deployment.fault.read_fail_prob) {
+                        return Err(Error::Io(std::io::Error::other(
+                            "injected DPU job fault",
+                        )));
+                    }
+                }
+                let scratch = self.client_dir.join("dpu_scratch");
+                let dpu = DpuNode::new(deployment.dpu.clone(), server, self.runtime, &scratch);
+                let out = dpu.run_query(query, timeline)?;
+                dpu.ship_output(out.output.len(), &deployment.client_link, timeline);
+                std::fs::write(&out_path, &out.output)?;
+                Ok(out.result)
+            }
+        }
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '.' || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::gen::{self, GenConfig};
+
+    fn setup(codec: Codec) -> (std::path::PathBuf, std::path::PathBuf) {
+        setup_named(codec, "shared")
+    }
+
+    /// Per-test dirs: parallel tests must not race on dataset creation.
+    fn setup_named(codec: Codec, tag: &str) -> (std::path::PathBuf, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("coord_{}_{codec}_{tag}", std::process::id()));
+        let storage = dir.join("storage");
+        let client = dir.join("client");
+        std::fs::create_dir_all(&storage).unwrap();
+        let path = storage.join("events.troot");
+        if !path.exists() {
+            let cfg = GenConfig {
+                n_events: 800,
+                target_branches: 180,
+                n_hlt: 40,
+                basket_events: 200,
+                codec,
+                seed: 11,
+            };
+            gen::generate(&cfg, &path).unwrap();
+        }
+        (storage, client)
+    }
+
+    fn query() -> SkimQuery {
+        gen::higgs_query("events.troot", "skim.troot")
+    }
+
+    #[test]
+    fn all_modes_agree_on_selection() {
+        let (storage, client) = setup_named(Codec::Lz4, "all_modes");
+        let coord = Coordinator::new(&storage, &client, None);
+        let mut n_pass = Vec::new();
+        for mode in Mode::ALL {
+            let dep = Deployment::new(mode, LinkModel::wan_1g());
+            let report = coord.run_job(&query(), &dep).unwrap();
+            assert!(report.latency > 0.0);
+            n_pass.push(report.result.n_pass);
+        }
+        assert!(n_pass.iter().all(|&n| n == n_pass[0]), "{n_pass:?}");
+        assert!(n_pass[0] > 0);
+    }
+
+    #[test]
+    fn skimroot_beats_client_side_at_1gbps() {
+        let (storage, client) = setup_named(Codec::Lz4, "beats");
+        let coord = Coordinator::new(&storage, &client, None);
+        let legacy = coord
+            .run_job(&query(), &Deployment::new(Mode::ClientLegacy, LinkModel::wan_1g()))
+            .unwrap();
+        let dpu = coord
+            .run_job(&query(), &Deployment::new(Mode::SkimRoot, LinkModel::wan_1g()))
+            .unwrap();
+        // Small test file: fixed costs damp the ratio (the fig4a bench
+        // shows the full-gap numbers at scale).
+        assert!(
+            dpu.latency < legacy.latency / 1.5,
+            "dpu {} vs legacy {}",
+            dpu.latency,
+            legacy.latency
+        );
+    }
+
+    #[test]
+    fn server_side_pays_seeks_skimroot_does_not() {
+        let (storage, client) = setup_named(Codec::Lz4, "seeks");
+        let coord = Coordinator::new(&storage, &client, None);
+        let srv = coord
+            .run_job(&query(), &Deployment::new(Mode::ServerSide, LinkModel::wan_1g()))
+            .unwrap();
+        let dpu = coord
+            .run_job(&query(), &Deployment::new(Mode::SkimRoot, LinkModel::wan_1g()))
+            .unwrap();
+        // (The fetch-time gap itself is scale-dependent — at this tiny
+        // dataset sequential local reads are nearly free; the fig5a
+        // bench asserts the paper-scale gap. Here we check placement.)
+        let srv_fetch = srv.timeline.stage_total(Stage::BasketFetch);
+        let dpu_fetch = dpu.timeline.stage_total(Stage::BasketFetch);
+        assert!(srv_fetch > 0.0 && dpu_fetch > 0.0);
+        // Server-side runs without a TTreeCache; SkimROOT with one.
+        assert!(srv.result.cache.is_none());
+        assert!(dpu.result.cache.is_some());
+        // Server-side client CPU is idle; server does the work.
+        assert_eq!(srv.timeline.node_busy(Node::Client), 0.0);
+        assert!(srv.timeline.node_busy(Node::Server) > 0.0);
+        // DPU mode: client and server CPUs mostly idle, DPU busy.
+        assert!(dpu.timeline.node_busy(Node::Dpu) > 0.0);
+        assert_eq!(dpu.timeline.node_busy(Node::Client), 0.0);
+    }
+
+    #[test]
+    fn faults_trigger_resubmission_and_eventually_succeed() {
+        let (storage, client) = setup_named(Codec::Lz4, "faults");
+        let coord = Coordinator::new(&storage, &client, None);
+        let mut dep = Deployment::new(Mode::ClientOpt, LinkModel::dedicated_100g());
+        dep.fault = FaultConfig { read_fail_prob: 0.3, max_retries: 50, seed: 3 };
+        let report = coord.run_job(&query(), &dep).unwrap();
+        assert!(report.attempts > 1, "expected at least one resubmission");
+        assert!(report.result.n_pass > 0);
+        assert!(report.timeline.counter("failures") > 0);
+    }
+
+    #[test]
+    fn hopeless_faults_exhaust_retries() {
+        let (storage, client) = setup_named(Codec::Lz4, "hopeless");
+        let coord = Coordinator::new(&storage, &client, None);
+        let mut dep = Deployment::new(Mode::ClientOpt, LinkModel::dedicated_100g());
+        dep.fault = FaultConfig { read_fail_prob: 1.0, max_retries: 2, seed: 3 };
+        assert!(coord.run_job(&query(), &dep).is_err());
+    }
+
+    #[test]
+    fn bandwidth_sweep_shrinks_client_side_gap() {
+        let (storage, client) = setup_named(Codec::Lz4, "sweep");
+        let coord = Coordinator::new(&storage, &client, None);
+        let q = query();
+        let lat = |link: LinkModel| {
+            coord
+                .run_job(&q, &Deployment::new(Mode::ClientOpt, link))
+                .unwrap()
+                .latency
+        };
+        let l1 = lat(LinkModel::wan_1g());
+        let l10 = lat(LinkModel::shared_10g());
+        let l100 = lat(LinkModel::dedicated_100g());
+        assert!(l1 > l10 && l10 > l100, "{l1} {l10} {l100}");
+    }
+
+    #[test]
+    fn output_lands_at_client_in_all_modes() {
+        let (storage, client) = setup(Codec::Zlib);
+        let coord = Coordinator::new(&storage, &client, None);
+        for mode in Mode::ALL {
+            let dep = Deployment::new(mode, LinkModel::shared_10g());
+            coord.run_job(&query(), &dep).unwrap();
+            let out = client.join("skim.troot");
+            assert!(out.exists(), "mode {mode:?}");
+            let r = crate::troot::TRootReader::open(LocalFile::open(&out).unwrap()).unwrap();
+            assert_eq!(r.meta().branches.len(), 89);
+            std::fs::remove_file(&out).unwrap();
+        }
+    }
+}

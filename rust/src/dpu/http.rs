@@ -1,0 +1,348 @@
+//! Minimal HTTP/1.1 service for the DPU's separated-host endpoint.
+//!
+//! Users interact with SkimROOT exactly as the paper describes: an
+//! HTTP POST with the JSON selection payload (`curl -d @query.json
+//! http://<dpu>/skim`). The response body is the filtered troot file;
+//! job statistics come back in `X-Skim-*` headers.
+//!
+//! Hand-rolled request/response parsing (no HTTP crates offline):
+//! request line + headers + `Content-Length` body; responses are
+//! always `Connection: close`.
+
+use crate::metrics::Timeline;
+use crate::query::SkimQuery;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+/// Parse one HTTP/1.1 request from a stream.
+pub fn read_request(stream: &mut impl Read) -> Result<HttpRequest> {
+    // Read until CRLFCRLF (header terminator).
+    let mut buf = Vec::with_capacity(1024);
+    let mut byte = [0u8; 1];
+    while !buf.ends_with(b"\r\n\r\n") {
+        if buf.len() > 64 * 1024 {
+            return Err(Error::protocol("http: header section too large"));
+        }
+        let n = stream.read(&mut byte)?;
+        if n == 0 {
+            return Err(Error::protocol("http: connection closed mid-header"));
+        }
+        buf.push(byte[0]);
+    }
+    let head = std::str::from_utf8(&buf[..buf.len() - 4])
+        .map_err(|_| Error::protocol("http: non-utf8 header"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().ok_or_else(|| Error::protocol("http: empty request"))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| Error::protocol("http: no method"))?.to_string();
+    let path = parts.next().ok_or_else(|| Error::protocol("http: no path"))?.to_string();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(Error::protocol(format!("http: unsupported version '{version}'")));
+    }
+
+    let mut headers = HashMap::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let body_len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse().map_err(|_| Error::protocol("http: bad content-length")))
+        .transpose()?
+        .unwrap_or(0);
+    if body_len > MAX_BODY {
+        return Err(Error::protocol("http: body too large"));
+    }
+    let mut body = vec![0u8; body_len];
+    stream.read_exact(&mut body)?;
+    Ok(HttpRequest { method, path, headers, body })
+}
+
+/// Write an HTTP/1.1 response.
+pub fn write_response(
+    stream: &mut impl Write,
+    status: u16,
+    reason: &str,
+    headers: &[(&str, String)],
+    body: &[u8],
+) -> Result<()> {
+    write!(stream, "HTTP/1.1 {status} {reason}\r\n")?;
+    for (k, v) in headers {
+        write!(stream, "{k}: {v}\r\n")?;
+    }
+    write!(stream, "Content-Length: {}\r\nConnection: close\r\n\r\n", body.len())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// The DPU's HTTP front-end, generic over the job executor so the
+/// in-process node model and tests can plug in.
+pub struct DpuHttpServer<F> {
+    handler: Arc<F>,
+}
+
+/// What the executor returns: the filtered file plus summary stats.
+pub struct SkimHttpOutput {
+    pub output: Vec<u8>,
+    pub n_events: u64,
+    pub n_pass: u64,
+    pub elapsed: f64,
+}
+
+impl<F> DpuHttpServer<F>
+where
+    F: Fn(&SkimQuery, &Timeline) -> Result<SkimHttpOutput> + Send + Sync + 'static,
+{
+    pub fn new(handler: F) -> Self {
+        DpuHttpServer { handler: Arc::new(handler) }
+    }
+
+    /// Serve until `stop`; one thread per connection (the DPU has 16
+    /// ARM cores; connection handling is not the bottleneck).
+    pub fn serve(
+        &self,
+        listener: TcpListener,
+        stop: Arc<AtomicBool>,
+    ) -> std::thread::JoinHandle<()> {
+        let handler = self.handler.clone();
+        listener.set_nonblocking(true).expect("set_nonblocking");
+        std::thread::spawn(move || {
+            let mut conns = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let handler = handler.clone();
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_connection(stream, &*handler);
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        })
+    }
+}
+
+fn handle_connection<F>(mut stream: TcpStream, handler: &F) -> Result<()>
+where
+    F: Fn(&SkimQuery, &Timeline) -> Result<SkimHttpOutput>,
+{
+    stream.set_nodelay(true).ok();
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let msg = format!("{{\"error\": \"{e}\"}}");
+            return write_response(&mut stream, 400, "Bad Request", &[], msg.as_bytes());
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => write_response(
+            &mut stream,
+            200,
+            "OK",
+            &[("Content-Type", "application/json".into())],
+            b"{\"status\": \"ok\"}",
+        ),
+        ("POST", "/skim") => {
+            let text = match std::str::from_utf8(&req.body) {
+                Ok(t) => t,
+                Err(_) => {
+                    return write_response(&mut stream, 400, "Bad Request", &[], b"non-utf8 body")
+                }
+            };
+            let query = match SkimQuery::from_json_text(text) {
+                Ok(q) => q,
+                Err(e) => {
+                    let msg = format!("{{\"error\": \"{e}\"}}");
+                    return write_response(
+                        &mut stream,
+                        422,
+                        "Unprocessable Entity",
+                        &[("Content-Type", "application/json".into())],
+                        msg.as_bytes(),
+                    );
+                }
+            };
+            let timeline = Timeline::new();
+            match handler(&query, &timeline) {
+                Ok(out) => write_response(
+                    &mut stream,
+                    200,
+                    "OK",
+                    &[
+                        ("Content-Type", "application/octet-stream".into()),
+                        ("X-Skim-Events", out.n_events.to_string()),
+                        ("X-Skim-Pass", out.n_pass.to_string()),
+                        ("X-Skim-Elapsed-Secs", format!("{:.6}", out.elapsed)),
+                    ],
+                    &out.output,
+                ),
+                Err(e) => {
+                    let msg = format!("{{\"error\": \"{e}\"}}");
+                    write_response(
+                        &mut stream,
+                        500,
+                        "Internal Server Error",
+                        &[("Content-Type", "application/json".into())],
+                        msg.as_bytes(),
+                    )
+                }
+            }
+        }
+        _ => write_response(&mut stream, 404, "Not Found", &[], b"not found"),
+    }
+}
+
+/// Minimal HTTP client for posting skim queries (what `curl` does).
+pub fn post_skim(addr: &str, query_json: &str) -> Result<(u16, HashMap<String, String>, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Error::protocol(format!("connect {addr}: {e}")))?;
+    stream.set_nodelay(true).ok();
+    write!(
+        stream,
+        "POST /skim HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        query_json.len()
+    )?;
+    stream.write_all(query_json.as_bytes())?;
+    stream.flush()?;
+
+    // Parse response: status line, headers, body per Content-Length.
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    while !buf.ends_with(b"\r\n\r\n") {
+        let n = stream.read(&mut byte)?;
+        if n == 0 {
+            return Err(Error::protocol("http: closed mid-response"));
+        }
+        buf.push(byte[0]);
+    }
+    let head = std::str::from_utf8(&buf[..buf.len() - 4])
+        .map_err(|_| Error::protocol("http: non-utf8 response"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::protocol("http: bad status line"))?;
+    let mut headers = HashMap::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok((status, headers, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_query_json() -> String {
+        r#"{"input": "f.troot", "output": "o.troot", "branches": ["*"]}"#.to_string()
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let raw = b"POST /skim HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nbody";
+        let req = read_request(&mut &raw[..]).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/skim");
+        assert_eq!(req.body, b"body");
+        assert_eq!(req.headers["host"], "x");
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for raw in [
+            &b"GARBAGE\r\n\r\n"[..],
+            &b"GET /x SPDY/3\r\n\r\n"[..],
+            &b"POST / HTTP/1.1\r\nContent-Length: zzz\r\n\r\n"[..],
+        ] {
+            assert!(read_request(&mut &raw[..]).is_err(), "{:?}", String::from_utf8_lossy(raw));
+        }
+    }
+
+    #[test]
+    fn response_format() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "OK", &[("X-Test", "1".into())], b"hi").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("X-Test: 1\r\n"));
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.ends_with("\r\n\r\nhi"));
+    }
+
+    #[test]
+    fn end_to_end_post_skim() {
+        let server = DpuHttpServer::new(|q: &SkimQuery, _tl: &Timeline| {
+            assert_eq!(q.input, "f.troot");
+            Ok(SkimHttpOutput {
+                output: vec![1, 2, 3],
+                n_events: 100,
+                n_pass: 7,
+                elapsed: 0.5,
+            })
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = server.serve(listener, stop.clone());
+
+        let (status, headers, body) = post_skim(&addr, &sample_query_json()).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, vec![1, 2, 3]);
+        assert_eq!(headers["x-skim-pass"], "7");
+        assert_eq!(headers["x-skim-events"], "100");
+
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn bad_query_gets_422() {
+        let server = DpuHttpServer::new(|_q: &SkimQuery, _tl: &Timeline| {
+            unreachable!("handler must not run for invalid queries")
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = server.serve(listener, stop.clone());
+
+        let (status, _, body) = post_skim(&addr, "{not json").unwrap();
+        assert_eq!(status, 422);
+        assert!(String::from_utf8_lossy(&body).contains("error"));
+
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,193 @@
+//! Batch assembly: decoded baskets → the padded `[C,B,M]` arrays the
+//! kernel (and the interpreter) consume.
+//!
+//! This is the deserialize-side half of the paper's "deserialization"
+//! stage: typed basket values are scattered into the fixed-capacity
+//! batch layout, jagged collections padded/truncated to `M` object
+//! slots (selection semantics are defined over the first `M` objects;
+//! see DESIGN.md §Hardware-Adaptation).
+
+use crate::query::plan::CutProgram;
+use crate::runtime::{Batch, Capacities};
+use crate::troot::{BranchKind, ColumnValues, DecodedBasket};
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Append events `[lo, lo + n)` (global ids) into `batch` starting at
+/// event slot `dst`. `baskets` maps branch name → decoded basket
+/// covering that range. Used to *fill* a batch across cluster
+/// boundaries so one kernel invocation evaluates many clusters
+/// (amortizing PJRT call overhead).
+pub fn append(
+    program: &CutProgram,
+    baskets: &HashMap<String, DecodedBasket>,
+    lo: u64,
+    n: usize,
+    batch: &mut Batch,
+    dst: usize,
+) -> Result<()> {
+    let (b, m) = (batch.b, batch.m);
+    if dst + n > b {
+        return Err(Error::Engine(format!(
+            "append of {n} events at {dst} exceeds batch capacity {b}"
+        )));
+    }
+
+    for (c, name) in program.obj_columns.iter().enumerate() {
+        let basket = baskets
+            .get(name)
+            .ok_or_else(|| Error::Engine(format!("missing decoded basket for '{name}'")))?;
+        if basket.kind != BranchKind::Jagged {
+            return Err(Error::Engine(format!("column '{name}' is not jagged")));
+        }
+        let values = basket.values_f32();
+        for ev in 0..n {
+            let global = lo + ev as u64;
+            let r = basket.jagged_range(global);
+            let take = (r.end - r.start).min(m);
+            let at = (c * b + dst + ev) * m;
+            batch.cols[at..at + take].copy_from_slice(&values[r.start..r.start + take]);
+            batch.nobj[c * b + dst + ev] = take as f32;
+        }
+    }
+
+    for (s, name) in program.scalar_columns.iter().enumerate() {
+        let basket = baskets
+            .get(name)
+            .ok_or_else(|| Error::Engine(format!("missing decoded basket for '{name}'")))?;
+        if basket.kind != BranchKind::Scalar {
+            return Err(Error::Engine(format!("column '{name}' is not scalar")));
+        }
+        for ev in 0..n {
+            let global = lo + ev as u64;
+            let i = (global - basket.first_event) as usize;
+            let v = match &basket.values {
+                ColumnValues::F32(v) => v[i],
+                ColumnValues::F64(v) => v[i] as f32,
+                ColumnValues::I32(v) => v[i] as f32,
+                ColumnValues::I64(v) => v[i] as f32,
+                ColumnValues::U8(v) => v[i] as f32,
+            };
+            batch.scalars[s * b + dst + ev] = v;
+        }
+    }
+    batch.n_valid = batch.n_valid.max(dst + n);
+    Ok(())
+}
+
+/// Assemble events `[lo, lo + n)` into a fresh padded batch.
+pub fn assemble(
+    program: &CutProgram,
+    caps: &Capacities,
+    baskets: &HashMap<String, DecodedBasket>,
+    lo: u64,
+    n: usize,
+    b: usize,
+    m: usize,
+) -> Result<Batch> {
+    if n > b {
+        return Err(Error::Engine(format!("chunk of {n} events exceeds batch capacity {b}")));
+    }
+    let mut batch = Batch::zeroed(caps, b, m);
+    append(program, baskets, lo, n, &mut batch, 0)?;
+    batch.n_valid = n;
+    Ok(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::plan::CutProgram;
+    use crate::troot::{basket, BranchDesc, ColumnData, DType};
+
+    fn caps() -> Capacities {
+        Capacities { c: 12, s: 16, k_obj: 12, k_sc: 6, g: 4, n_stages: 4 }
+    }
+
+    fn decode_jagged(per_event: &[Vec<f32>], first_event: u64) -> DecodedBasket {
+        let col = ColumnData::jagged_f32(per_event);
+        let raw = basket::encode(&col, 0, per_event.len());
+        basket::decode(
+            &BranchDesc::jagged("j", DType::F32, "J"),
+            &raw,
+            first_event,
+            per_event.len(),
+        )
+        .unwrap()
+    }
+
+    fn decode_scalar_u8(values: &[u8], first_event: u64) -> DecodedBasket {
+        let col = ColumnData::Scalar(ColumnValues::U8(values.to_vec()));
+        let raw = basket::encode(&col, 0, values.len());
+        basket::decode(&BranchDesc::scalar("s", DType::U8), &raw, first_event, values.len())
+            .unwrap()
+    }
+
+    #[test]
+    fn assembles_jagged_with_padding_and_truncation() {
+        let mut program = CutProgram::default();
+        program.obj_columns.push("Electron_pt".into());
+        let mut baskets = HashMap::new();
+        baskets.insert(
+            "Electron_pt".to_string(),
+            decode_jagged(&[vec![1.0, 2.0], vec![], vec![3.0, 4.0, 5.0, 6.0, 7.0]], 100),
+        );
+        let b = 8;
+        let m = 4; // truncates the 5-object event
+        let batch = assemble(&program, &caps(), &baskets, 100, 3, b, m).unwrap();
+        assert_eq!(batch.n_valid, 3);
+        assert_eq!(&batch.cols[0..2], &[1.0, 2.0]);
+        assert_eq!(batch.nobj[0], 2.0);
+        assert_eq!(batch.nobj[1], 0.0);
+        assert_eq!(batch.nobj[2], 4.0); // clamped from 5
+        assert_eq!(&batch.cols[2 * m..2 * m + 4], &[3.0, 4.0, 5.0, 6.0]);
+        // padding slots stay zero
+        assert_eq!(batch.cols[m], 0.0);
+    }
+
+    #[test]
+    fn assembles_scalars_with_dtype_conversion() {
+        let mut program = CutProgram::default();
+        program.scalar_columns.push("HLT_IsoMu24".into());
+        let mut baskets = HashMap::new();
+        baskets.insert("HLT_IsoMu24".to_string(), decode_scalar_u8(&[1, 0, 1], 50));
+        let batch = assemble(&program, &caps(), &baskets, 50, 3, 4, 2).unwrap();
+        assert_eq!(&batch.scalars[0..3], &[1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn mid_basket_offset() {
+        // Assemble a chunk that starts mid-basket (lo > first_event).
+        let mut program = CutProgram::default();
+        program.obj_columns.push("J".into());
+        let mut baskets = HashMap::new();
+        baskets.insert(
+            "J".to_string(),
+            decode_jagged(&[vec![1.0], vec![2.0, 2.5], vec![3.0], vec![4.0]], 0),
+        );
+        let batch = assemble(&program, &caps(), &baskets, 2, 2, 4, 2).unwrap();
+        assert_eq!(batch.cols[0], 3.0);
+        assert_eq!(batch.cols[2], 4.0);
+    }
+
+    #[test]
+    fn errors_on_missing_or_mismatched() {
+        let mut program = CutProgram::default();
+        program.obj_columns.push("nope".into());
+        let baskets = HashMap::new();
+        assert!(assemble(&program, &caps(), &baskets, 0, 1, 4, 2).is_err());
+
+        let mut program2 = CutProgram::default();
+        program2.obj_columns.push("s".into());
+        let mut baskets2 = HashMap::new();
+        baskets2.insert("s".to_string(), decode_scalar_u8(&[1], 0));
+        assert!(assemble(&program2, &caps(), &baskets2, 0, 1, 4, 2).is_err());
+    }
+
+    #[test]
+    fn chunk_larger_than_batch_rejected() {
+        let program = CutProgram::default();
+        let baskets = HashMap::new();
+        assert!(assemble(&program, &caps(), &baskets, 0, 10, 4, 2).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Scalar cut-program interpreter: the per-event evaluation loop a
+//! hand-written ROOT macro performs (and the baseline the paper's
+//! "inefficient filtering logic" runs), plus the fallback for programs
+//! exceeding the AOT kernel's capacity.
+//!
+//! Operates on the same padded [`Batch`] arrays as the kernel, with
+//! identical semantics (op codes, group counting over the first `M`
+//! objects, HT, trigger OR) — property tests in `rust/tests/` assert
+//! bit-identical masks against the PJRT path.
+
+use crate::query::plan::CutProgram;
+use crate::runtime::{Batch, MaskResult};
+
+#[inline]
+fn cmp(x: f32, op: u8, abs: bool, value: f32) -> bool {
+    let x = if abs { x.abs() } else { x };
+    match op {
+        0 => x > value,
+        1 => x >= value,
+        2 => x < value,
+        3 => x <= value,
+        4 => x == value,
+        5 => x != value,
+        _ => false,
+    }
+}
+
+/// Evaluate `program` over the batch, one event at a time.
+pub fn eval(program: &CutProgram, batch: &Batch) -> MaskResult {
+    let (b, m, n) = (batch.b, batch.m, batch.n_valid);
+    let mut mask = vec![0.0f32; n];
+    let mut stages = vec![vec![0.0f32; n]; 4];
+
+    for ev in 0..n {
+        // stage 1: preselection
+        let mut pre = true;
+        for cut in &program.scalar_cuts {
+            let x = batch.scalars[cut.col * b + ev];
+            pre &= cmp(x, cut.op, cut.abs, cut.value);
+        }
+
+        // stage 2: object groups
+        let mut obj = true;
+        for group in &program.groups {
+            let mut count = 0u32;
+            for slot in 0..m {
+                if group.cut_range.is_empty() {
+                    break;
+                }
+                let mut ok = true;
+                for k in group.cut_range.clone() {
+                    let cut = &program.obj_cuts[k];
+                    let valid = (slot as f32) < batch.nobj[cut.col * b + ev];
+                    let x = batch.cols[(cut.col * b + ev) * m + slot];
+                    ok &= valid && cmp(x, cut.op, cut.abs, cut.value);
+                }
+                if ok {
+                    count += 1;
+                }
+            }
+            obj &= count >= group.min_count;
+        }
+
+        // stage 3: HT
+        let mut ht_ok = true;
+        if let Some(ht) = &program.ht {
+            let nv = batch.nobj[ht.col * b + ev] as usize;
+            let mut total = 0.0f32;
+            for slot in 0..nv.min(m) {
+                let x = batch.cols[(ht.col * b + ev) * m + slot];
+                if x > ht.object_pt_min {
+                    total += x;
+                }
+            }
+            ht_ok = total >= ht.min_ht;
+        }
+
+        // stage 4: trigger OR
+        let trig_ok = if program.triggers.is_empty() {
+            true
+        } else {
+            program
+                .triggers
+                .iter()
+                .any(|&s| batch.scalars[s * b + ev] > 0.5)
+        };
+
+        stages[0][ev] = pre as u8 as f32;
+        stages[1][ev] = obj as u8 as f32;
+        stages[2][ev] = ht_ok as u8 as f32;
+        stages[3][ev] = trig_ok as u8 as f32;
+        mask[ev] = (pre && obj && ht_ok && trig_ok) as u8 as f32;
+    }
+
+    MaskResult { mask, stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::plan::{CutProgram, HtParam, ObjCutParam, ObjGroup, ScalarCutParam};
+    use crate::runtime::Capacities;
+
+    fn caps() -> Capacities {
+        Capacities { c: 12, s: 16, k_obj: 12, k_sc: 6, g: 4, n_stages: 4 }
+    }
+
+    #[test]
+    fn empty_program_accepts_all() {
+        let mut batch = Batch::zeroed(&caps(), 4, 2);
+        batch.n_valid = 3;
+        let out = eval(&CutProgram::default(), &batch);
+        assert_eq!(out.mask, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn object_group_counting() {
+        let mut program = CutProgram::default();
+        program.obj_columns.push("pt".into());
+        program.obj_cuts.push(ObjCutParam { col: 0, op: 0, abs: false, value: 25.0 });
+        program.groups.push(ObjGroup {
+            collection: "E".into(),
+            cut_range: 0..1,
+            min_count: 2,
+        });
+        let (b, m) = (4, 3);
+        let mut batch = Batch::zeroed(&caps(), b, m);
+        batch.n_valid = 3;
+        // ev0: [30, 26, 10] n=3 → 2 pass → ok
+        batch.cols[0..3].copy_from_slice(&[30.0, 26.0, 10.0]);
+        batch.nobj[0] = 3.0;
+        // ev1: [30, 26] but n=1 → only 1 valid → fail
+        batch.cols[m..m + 2].copy_from_slice(&[30.0, 26.0]);
+        batch.nobj[1] = 1.0;
+        // ev2: no objects → fail
+        let out = eval(&program, &batch);
+        assert_eq!(out.mask, vec![1.0, 0.0, 0.0]);
+        assert_eq!(out.stages[1], vec![1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn preselection_ht_trigger() {
+        let mut program = CutProgram::default();
+        program.scalar_columns = vec!["nE".into(), "HLT_X".into()];
+        program.scalar_cuts.push(ScalarCutParam { col: 0, op: 1, abs: false, value: 1.0 });
+        program.obj_columns.push("Jet_pt".into());
+        program.ht = Some(HtParam { col: 0, object_pt_min: 30.0, min_ht: 100.0 });
+        program.triggers.push(1);
+        let (b, m) = (2, 4);
+        let mut batch = Batch::zeroed(&caps(), b, m);
+        batch.n_valid = 2;
+        // ev0: nE=1, jets [60, 50], trigger on → pass (HT 110)
+        batch.scalars[0] = 1.0;
+        batch.scalars[b] = 1.0;
+        batch.cols[0..2].copy_from_slice(&[60.0, 50.0]);
+        batch.nobj[0] = 2.0;
+        // ev1: nE=1, jets [60, 20] (20 below pt_min), trigger off → fail both
+        batch.scalars[1] = 1.0;
+        batch.scalars[b + 1] = 0.0;
+        batch.cols[m..m + 2].copy_from_slice(&[60.0, 20.0]);
+        batch.nobj[1] = 2.0;
+        let out = eval(&program, &batch);
+        assert_eq!(out.stages[0], vec![1.0, 1.0]);
+        assert_eq!(out.stages[2], vec![1.0, 0.0]);
+        assert_eq!(out.stages[3], vec![1.0, 0.0]);
+        assert_eq!(out.mask, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn abs_comparisons() {
+        let mut program = CutProgram::default();
+        program.obj_columns.push("eta".into());
+        program.obj_cuts.push(ObjCutParam { col: 0, op: 2, abs: true, value: 2.4 });
+        program.groups.push(ObjGroup { collection: "E".into(), cut_range: 0..1, min_count: 1 });
+        let (b, m) = (3, 1);
+        let mut batch = Batch::zeroed(&caps(), b, m);
+        batch.n_valid = 3;
+        batch.cols[0] = -1.0; // |.| < 2.4 ok
+        batch.cols[1] = -3.0; // fail
+        batch.cols[2] = 2.4; // boundary: not <
+        batch.nobj[0] = 1.0;
+        batch.nobj[1] = 1.0;
+        batch.nobj[2] = 1.0;
+        let out = eval(&program, &batch);
+        assert_eq!(out.mask, vec![1.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,503 @@
+//! Synthetic NanoAOD dataset generator (the CMS-data substitute, §4
+//! setup).
+//!
+//! Real NanoAOD is unavailable offline, but skimming cost depends on
+//! the file's *structure*, not on real physics values. The generator
+//! reproduces the paper's census:
+//!
+//! * ~**1749 branches** by default: seven jagged particle collections
+//!   (Electron, Muon, Jet, Tau, Photon, FatJet, SubJet) with per-object
+//!   kinematics/ID variables (plus enough per-collection "user"
+//!   variables to hit the target), `n<Collection>` count branches,
+//!   event-level scalars (MET, PV, run/event numbers), and
+//! * **677 `HLT_*` trigger flags** (the ">650" of §3.1), sparse 0/1
+//!   bytes; curated triggers fire at a few percent, the long tail at
+//!   per-mille rates;
+//! * physics-shaped distributions: falling exponential pT spectra,
+//!   Gaussian η, uniform φ, Poisson multiplicities — quantized to a
+//!   1/64 grid so baskets compress at realistic ratios;
+//! * per-branch deterministic RNG streams: any branch can be
+//!   regenerated independently of generation order.
+//!
+//! The companion [`higgs_query`] builds the paper's evaluation
+//! workload: a UCSD-Higgs-style selection with **27 filtering-criteria
+//! branches and 89 output branches**.
+
+use crate::compress::Codec;
+use crate::query::SkimQuery;
+use crate::troot::{BranchDesc, BranchKind, ColumnData, ColumnValues, DType, TRootWriter};
+use crate::util::Pcg32;
+use crate::Result;
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    pub n_events: u64,
+    /// Total branch target (paper: 1749). The schema builder pads
+    /// per-collection user variables to reach it exactly.
+    pub target_branches: usize,
+    /// Number of HLT_* flags (paper: >650).
+    pub n_hlt: usize,
+    /// Events per basket (ROOT default cluster ~1000 events).
+    pub basket_events: u32,
+    pub codec: Codec,
+    pub seed: u64,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            n_events: 100_000,
+            target_branches: 1749,
+            n_hlt: 677,
+            basket_events: 1000,
+            codec: Codec::Lz4,
+            seed: 0x5eed_cafe,
+        }
+    }
+}
+
+impl GenConfig {
+    /// A small configuration for tests (full schema shape, few events).
+    pub fn tiny(n_events: u64) -> Self {
+        GenConfig { n_events, target_branches: 160, n_hlt: 40, basket_events: 200, ..Default::default() }
+    }
+}
+
+/// One jagged particle collection: mean multiplicity + variable names.
+struct Collection {
+    name: &'static str,
+    mean_mult: f64,
+    /// Core physics variables every collection gets.
+    core_vars: &'static [&'static str],
+}
+
+const COLLECTIONS: [Collection; 7] = [
+    Collection { name: "Electron", mean_mult: 0.4, core_vars: &["pt", "eta", "phi", "mass", "dxy", "dz", "sip3d", "pfRelIso03_all", "cutBased", "charge"] },
+    Collection { name: "Muon", mean_mult: 0.5, core_vars: &["pt", "eta", "phi", "mass", "dxy", "dz", "pfRelIso04_all", "tightId", "charge", "nTrackerLayers"] },
+    Collection { name: "Jet", mean_mult: 5.5, core_vars: &["pt", "eta", "phi", "mass", "btagDeepFlavB", "jetId", "area", "nConstituents", "chHEF", "neHEF"] },
+    Collection { name: "Tau", mean_mult: 0.3, core_vars: &["pt", "eta", "phi", "mass", "dxy", "dz", "idDeepTau", "charge"] },
+    Collection { name: "Photon", mean_mult: 0.6, core_vars: &["pt", "eta", "phi", "mass", "pfRelIso03_all", "mvaID", "r9", "sieie"] },
+    Collection { name: "FatJet", mean_mult: 0.8, core_vars: &["pt", "eta", "phi", "mass", "msoftdrop", "tau1", "tau2", "tau3", "particleNet_mass", "deepTagMD"] },
+    Collection { name: "SubJet", mean_mult: 1.4, core_vars: &["pt", "eta", "phi", "mass", "btagDeepB", "rawFactor"] },
+];
+
+const EVENT_SCALARS: [(&str, DType); 12] = [
+    ("run", DType::I64),
+    ("luminosityBlock", DType::I64),
+    ("event", DType::I64),
+    ("MET_pt", DType::F32),
+    ("MET_phi", DType::F32),
+    ("MET_sumEt", DType::F32),
+    ("PV_npvs", DType::I32),
+    ("PV_z", DType::F32),
+    ("fixedGridRhoFastjetAll", DType::F32),
+    ("Pileup_nTrueInt", DType::F32),
+    ("genWeight", DType::F32),
+    ("L1PreFiringWeight_Nom", DType::F32),
+];
+
+/// A branch in the generated schema, with its value model.
+#[derive(Debug, Clone)]
+pub struct GenBranch {
+    pub desc: BranchDesc,
+    model: ValueModel,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ValueModel {
+    /// Falling exponential with the given mean (pt, mass, iso...).
+    Exp(f64),
+    /// Gaussian with sigma (eta, dxy...).
+    Normal(f64),
+    /// Uniform in [-pi, pi] (phi).
+    Phi,
+    /// Small non-negative integer-ish (ids, counts, charges).
+    SmallInt(u32),
+    /// 0/1 flag firing with probability p (triggers, bools).
+    Flag(f64),
+    /// Monotone counter (run/event numbers).
+    Counter,
+    /// Multiplicity of the collection at `COLLECTIONS[idx]`.
+    CountOf(usize),
+}
+
+fn var_model(var: &str) -> ValueModel {
+    match var {
+        "pt" => ValueModel::Exp(35.0),
+        "mass" | "msoftdrop" | "particleNet_mass" => ValueModel::Exp(12.0),
+        "eta" => ValueModel::Normal(1.6),
+        "phi" => ValueModel::Phi,
+        "dxy" | "dz" | "PV_z" => ValueModel::Normal(0.04),
+        "sip3d" => ValueModel::Exp(1.5),
+        "charge" => ValueModel::SmallInt(2),
+        "cutBased" | "jetId" | "idDeepTau" | "nTrackerLayers" | "nConstituents" => {
+            ValueModel::SmallInt(15)
+        }
+        "tightId" => ValueModel::Flag(0.7),
+        v if v.contains("Iso") || v.contains("tag") || v.contains("mva")
+            || v.contains("tau") || v.contains("EF") || v.contains("r9")
+            || v.contains("sieie") =>
+        {
+            ValueModel::Exp(0.2)
+        }
+        _ => ValueModel::Exp(10.0),
+    }
+}
+
+/// Build the full schema for a config: returns branches in ROOT-like
+/// order (counts + collections interleaved, then scalars, then HLT).
+pub fn schema(cfg: &GenConfig) -> Vec<GenBranch> {
+    let mut out = Vec::new();
+
+    // Count how many branches the fixed parts contribute.
+    let fixed: usize = COLLECTIONS.iter().map(|c| 1 + c.core_vars.len()).sum::<usize>()
+        + EVENT_SCALARS.len()
+        + cfg.n_hlt;
+    // Distribute extra user variables round-robin over collections.
+    let extra_total = cfg.target_branches.saturating_sub(fixed);
+
+    let mut extra_per: Vec<usize> = vec![extra_total / COLLECTIONS.len(); COLLECTIONS.len()];
+    for i in 0..extra_total % COLLECTIONS.len() {
+        extra_per[i] += 1;
+    }
+
+    for (ci, coll) in COLLECTIONS.iter().enumerate() {
+        out.push(GenBranch {
+            desc: BranchDesc::scalar(format!("n{}", coll.name), DType::I32),
+            model: ValueModel::CountOf(ci),
+        });
+        for var in coll.core_vars {
+            out.push(GenBranch {
+                desc: BranchDesc::jagged(
+                    format!("{}_{var}", coll.name),
+                    DType::F32,
+                    coll.name,
+                ),
+                model: var_model(var),
+            });
+        }
+        for x in 0..extra_per[ci] {
+            out.push(GenBranch {
+                desc: BranchDesc::jagged(
+                    format!("{}_userVar{x:03}", coll.name),
+                    DType::F32,
+                    coll.name,
+                ),
+                model: ValueModel::Exp(5.0),
+            });
+        }
+    }
+
+    for (name, dtype) in EVENT_SCALARS {
+        let model = match name {
+            "run" | "luminosityBlock" | "event" => ValueModel::Counter,
+            "PV_npvs" => ValueModel::SmallInt(60),
+            "MET_pt" | "MET_sumEt" => ValueModel::Exp(40.0),
+            "MET_phi" => ValueModel::Phi,
+            _ => ValueModel::Exp(1.0),
+        };
+        out.push(GenBranch { desc: BranchDesc::scalar(name, dtype), model });
+    }
+
+    // HLT flags: curated names first (so queries can reference them),
+    // then a long tail of versioned paths.
+    let curated = crate::query::wildcard::CURATED_TRIGGERS;
+    for (i, name) in curated.iter().take(cfg.n_hlt).enumerate() {
+        let p = 0.02 + 0.06 * ((i % 5) as f64 / 5.0);
+        out.push(GenBranch {
+            desc: BranchDesc::scalar(*name, DType::U8),
+            model: ValueModel::Flag(p),
+        });
+    }
+    for i in curated.len()..cfg.n_hlt {
+        out.push(GenBranch {
+            desc: BranchDesc::scalar(format!("HLT_Path{i:03}_v{}", 1 + i % 9), DType::U8),
+            model: ValueModel::Flag(0.002),
+        });
+    }
+
+    out
+}
+
+/// Quantize to a 1/64 grid: keeps distribution shape while giving the
+/// codecs realistic redundancy to find (real detector data has limited
+/// significant digits too).
+#[inline]
+fn q(v: f64) -> f32 {
+    ((v * 64.0).round() / 64.0) as f32
+}
+
+fn gen_value(model: ValueModel, rng: &mut Pcg32, ev: u64) -> f64 {
+    match model {
+        ValueModel::Exp(mean) => rng.exp(mean),
+        ValueModel::Normal(sigma) => rng.normal() * sigma,
+        ValueModel::Phi => (rng.f64() * 2.0 - 1.0) * std::f64::consts::PI,
+        ValueModel::SmallInt(hi) => rng.below(hi + 1) as f64,
+        ValueModel::Flag(p) => rng.chance(p) as u8 as f64,
+        ValueModel::Counter => 1_000_000.0 + ev as f64,
+        ValueModel::CountOf(_) => unreachable!("counts handled separately"),
+    }
+}
+
+/// Generate the per-collection multiplicities (shared by all of a
+/// collection's jagged branches *and* its `n<Coll>` count branch).
+fn multiplicities(cfg: &GenConfig, ci: usize) -> Vec<u32> {
+    let mut rng = Pcg32::with_stream(cfg.seed, 0x1000 + ci as u64);
+    (0..cfg.n_events)
+        .map(|_| rng.poisson(COLLECTIONS[ci].mean_mult).min(24))
+        .collect()
+}
+
+/// Generate one branch's full column, deterministic per branch.
+fn gen_column(cfg: &GenConfig, branch_idx: usize, branch: &GenBranch, mults: &[Vec<u32>]) -> ColumnData {
+    let mut rng = Pcg32::with_stream(cfg.seed, 0x2000 + branch_idx as u64);
+    match branch.desc.kind {
+        BranchKind::Scalar => {
+            if let ValueModel::CountOf(ci) = branch.model {
+                return ColumnData::Scalar(ColumnValues::I32(
+                    mults[ci].iter().map(|&m| m as i32).collect(),
+                ));
+            }
+            match branch.desc.dtype {
+                DType::F32 => ColumnData::Scalar(ColumnValues::F32(
+                    (0..cfg.n_events).map(|ev| q(gen_value(branch.model, &mut rng, ev))).collect(),
+                )),
+                DType::I32 => ColumnData::Scalar(ColumnValues::I32(
+                    (0..cfg.n_events)
+                        .map(|ev| gen_value(branch.model, &mut rng, ev) as i32)
+                        .collect(),
+                )),
+                DType::I64 => ColumnData::Scalar(ColumnValues::I64(
+                    (0..cfg.n_events)
+                        .map(|ev| gen_value(branch.model, &mut rng, ev) as i64)
+                        .collect(),
+                )),
+                DType::U8 => ColumnData::Scalar(ColumnValues::U8(
+                    (0..cfg.n_events)
+                        .map(|ev| gen_value(branch.model, &mut rng, ev) as u8)
+                        .collect(),
+                )),
+                DType::F64 => ColumnData::Scalar(ColumnValues::F64(
+                    (0..cfg.n_events).map(|ev| gen_value(branch.model, &mut rng, ev)).collect(),
+                )),
+            }
+        }
+        BranchKind::Jagged => {
+            let ci = COLLECTIONS
+                .iter()
+                .position(|c| c.name == branch.desc.group)
+                .expect("known collection");
+            let m = &mults[ci];
+            let total: usize = m.iter().map(|&x| x as usize).sum();
+            let mut offsets = Vec::with_capacity(m.len() + 1);
+            let mut values = Vec::with_capacity(total);
+            offsets.push(0u32);
+            for (ev, &n) in m.iter().enumerate() {
+                for _ in 0..n {
+                    values.push(q(gen_value(branch.model, &mut rng, ev as u64)));
+                }
+                offsets.push(values.len() as u32);
+            }
+            ColumnData::Jagged { offsets, values: ColumnValues::F32(values) }
+        }
+    }
+}
+
+/// Generate a full dataset at `path`. Returns the write summary.
+pub fn generate(cfg: &GenConfig, path: impl AsRef<std::path::Path>) -> Result<crate::troot::writer::WriteSummary> {
+    let branches = schema(cfg);
+    let mults: Vec<Vec<u32>> = (0..COLLECTIONS.len()).map(|ci| multiplicities(cfg, ci)).collect();
+    let mut writer = TRootWriter::new(path.as_ref(), cfg.codec, cfg.basket_events);
+    for (i, b) in branches.iter().enumerate() {
+        let col = gen_column(cfg, i, b, &mults);
+        writer.add_branch(b.desc.clone(), col)?;
+    }
+    writer.finalize()
+}
+
+/// The paper's evaluation workload: a UCSD-Higgs-style skim with
+/// **27 criteria branches** (1 + 11 jagged + 15 scalar) and **89 output
+/// branches**, matching §4's "27 branches are used for filtering and 89
+/// are required in the final output".
+pub fn higgs_query(input: &str, output: &str) -> SkimQuery {
+    let text = format!(
+        r#"{{
+        "input": "{input}",
+        "output": "{output}",
+        "branches": [
+            "Electron_pt", "Electron_eta", "Electron_phi", "Electron_mass",
+            "Electron_dxy", "Electron_dz", "Electron_sip3d",
+            "Electron_pfRelIso03_all", "Electron_cutBased", "Electron_charge",
+            "Muon_pt", "Muon_eta", "Muon_phi", "Muon_mass",
+            "Muon_dxy", "Muon_dz", "Muon_pfRelIso04_all", "Muon_tightId",
+            "Muon_charge", "Muon_nTrackerLayers",
+            "Jet_pt", "Jet_eta", "Jet_phi", "Jet_mass", "Jet_btagDeepFlavB",
+            "Jet_jetId", "Jet_area", "Jet_nConstituents", "Jet_chHEF", "Jet_neHEF",
+            "Tau_pt", "Tau_eta", "Tau_phi", "Tau_mass",
+            "Photon_pt", "Photon_eta", "Photon_phi", "Photon_mass",
+            "FatJet_pt", "FatJet_eta", "FatJet_phi", "FatJet_mass",
+            "FatJet_msoftdrop", "FatJet_tau1", "FatJet_tau2",
+            "SubJet_pt", "SubJet_eta", "SubJet_phi", "SubJet_mass",
+            "nElectron", "nMuon", "nJet", "nTau", "nPhoton", "nFatJet", "nSubJet",
+            "MET_pt", "MET_phi",
+            "PV_npvs", "PV_z", "fixedGridRhoFastjetAll",
+            "Pileup_nTrueInt", "genWeight",
+            "run", "luminosityBlock", "event",
+            "HLT_*"
+        ],
+        "force_all": false,
+        "selection": {{
+            "preselection": [
+                {{"branch": "nElectron", "op": ">=", "value": 1}},
+                {{"branch": "nJet", "op": ">=", "value": 2}},
+                {{"branch": "MET_pt", "op": ">", "value": 20.0}}
+            ],
+            "objects": [
+                {{"collection": "Electron", "min_count": 1, "cuts": [
+                    {{"var": "Electron_pt", "op": ">", "value": 25.0}},
+                    {{"var": "Electron_eta", "op": "|<|", "value": 2.4}},
+                    {{"var": "Electron_dxy", "op": "|<|", "value": 0.05}},
+                    {{"var": "Electron_dz", "op": "|<|", "value": 0.1}},
+                    {{"var": "Electron_sip3d", "op": "<", "value": 4.0}},
+                    {{"var": "Electron_pfRelIso03_all", "op": "<", "value": 0.35}},
+                    {{"var": "Electron_cutBased", "op": ">=", "value": 3}}
+                ]}},
+                {{"collection": "Muon", "min_count": 0, "cuts": [
+                    {{"var": "Muon_pt", "op": ">", "value": 20.0}},
+                    {{"var": "Muon_eta", "op": "|<|", "value": 2.4}},
+                    {{"var": "Muon_pfRelIso04_all", "op": "<", "value": 0.25}},
+                    {{"var": "Muon_tightId", "op": "==", "value": 1}}
+                ]}}
+            ],
+            "event": {{
+                "ht": {{"jet_pt": "Jet_pt", "object_pt_min": 30.0, "min": 60.0}},
+                "triggers_any": [
+                    "HLT_IsoMu24", "HLT_IsoMu27", "HLT_Mu50",
+                    "HLT_Ele27_WPTight", "HLT_Ele32_WPTight", "HLT_Ele35_WPTight",
+                    "HLT_Photon200", "HLT_PFMET120_PFMHT120", "HLT_PFHT1050",
+                    "HLT_PFJet500", "HLT_MET105_IsoTrk50", "HLT_TkMu100"
+                ]
+            }}
+        }}
+    }}"#
+    );
+    SkimQuery::from_json_text(&text).expect("higgs query is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::plan::SkimPlan;
+    use crate::troot::{LocalFile, TRootReader};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("gen_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn schema_hits_branch_target() {
+        let cfg = GenConfig { n_events: 10, ..Default::default() };
+        let branches = schema(&cfg);
+        assert_eq!(branches.len(), 1749);
+        let hlt = branches.iter().filter(|b| b.desc.name.starts_with("HLT_")).count();
+        assert_eq!(hlt, 677);
+        // No duplicate names.
+        let mut names: Vec<&str> = branches.iter().map(|b| b.desc.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 1749);
+    }
+
+    #[test]
+    fn tiny_file_roundtrips_with_consistent_jaggedness() {
+        let cfg = GenConfig::tiny(500);
+        let path = tmp("tiny.troot");
+        let summary = generate(&cfg, &path).unwrap();
+        assert_eq!(summary.n_events, 500);
+        assert_eq!(summary.n_branches, 160);
+        assert!(summary.compression_ratio() > 1.2, "ratio {}", summary.compression_ratio());
+
+        let r = TRootReader::open(LocalFile::open(&path).unwrap()).unwrap();
+        // nElectron must equal Electron_pt's multiplicities.
+        let counts = match r.read_branch_all("nElectron").unwrap() {
+            ColumnData::Scalar(ColumnValues::I32(v)) => v,
+            other => panic!("{other:?}"),
+        };
+        let pts = r.read_branch_all("Electron_pt").unwrap();
+        let offsets = match &pts {
+            ColumnData::Jagged { offsets, .. } => offsets.clone(),
+            other => panic!("{other:?}"),
+        };
+        for (ev, &n) in counts.iter().enumerate() {
+            assert_eq!(offsets[ev + 1] - offsets[ev], n as u32, "event {ev}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = GenConfig::tiny(100);
+        let p1 = tmp("det1.troot");
+        let p2 = tmp("det2.troot");
+        generate(&cfg, &p1).unwrap();
+        generate(&cfg, &p2).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    }
+
+    #[test]
+    fn seeds_change_content() {
+        let mut cfg = GenConfig::tiny(100);
+        let p1 = tmp("seed1.troot");
+        cfg.seed = 1;
+        generate(&cfg, &p1).unwrap();
+        let p2 = tmp("seed2.troot");
+        cfg.seed = 2;
+        generate(&cfg, &p2).unwrap();
+        assert_ne!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    }
+
+    #[test]
+    fn higgs_query_matches_paper_census() {
+        // Generate a full-schema (1749-branch) metadata-only check.
+        let cfg = GenConfig { n_events: 50, basket_events: 25, ..Default::default() };
+        let path = tmp("census.troot");
+        generate(&cfg, &path).unwrap();
+        let r = TRootReader::open(LocalFile::open(&path).unwrap()).unwrap();
+        assert_eq!(r.meta().branches.len(), 1749);
+
+        let q = higgs_query("census.troot", "out.troot");
+        let plan = SkimPlan::build(&q, r.meta()).unwrap();
+        assert_eq!(
+            plan.criteria_branches.len(),
+            27,
+            "criteria: {:?}",
+            plan.criteria_branches
+        );
+        assert_eq!(
+            plan.output_branches.len(),
+            89,
+            "outputs ({}): {:?}",
+            plan.output_branches.len(),
+            plan.output_branches
+        );
+        assert!(plan.program.fits_kernel());
+        // Curated mapping trimmed HLT_* from 677 to the curated set.
+        assert!(plan.warnings.iter().any(|w| w.contains("curated")));
+    }
+
+    #[test]
+    fn trigger_rates_are_sparse() {
+        let cfg = GenConfig::tiny(2000);
+        let path = tmp("rates.troot");
+        generate(&cfg, &path).unwrap();
+        let r = TRootReader::open(LocalFile::open(&path).unwrap()).unwrap();
+        let flags = match r.read_branch_all("HLT_IsoMu24").unwrap() {
+            ColumnData::Scalar(ColumnValues::U8(v)) => v,
+            other => panic!("{other:?}"),
+        };
+        let rate = flags.iter().filter(|&&x| x == 1).count() as f64 / flags.len() as f64;
+        assert!(rate > 0.001 && rate < 0.2, "rate {rate}");
+    }
+}

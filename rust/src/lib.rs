@@ -1,0 +1,71 @@
+//! # SkimROOT — near-storage LHC data filtering
+//!
+//! Reproduction of *"SkimROOT: Accelerating LHC Data Filtering with
+//! Near-Storage Processing"* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a ROOT-like columnar
+//!   storage substrate ([`troot`]), compression codecs ([`compress`]),
+//!   an XRootD-like remote-access protocol with TTreeCache prefetching
+//!   ([`xrootd`]), a simulated network fabric ([`net`]), the JSON query
+//!   front-end ([`query`]), the two-phase multi-stage filtering engine
+//!   ([`engine`]), the DPU near-storage node model ([`dpu`]), and the
+//!   job coordinator ([`coordinator`]).
+//! * **Layer 2** — `python/compile/model.py`: the JAX selection graph
+//!   (preselection → object-level → event-level) lowered once to HLO
+//!   text by `python/compile/aot.py`.
+//! * **Layer 1** — `python/compile/kernels/skim.py`: the Pallas
+//!   cut-evaluation kernel that the JAX graph calls.
+//!
+//! Python never runs on the request path: the Rust binary loads the AOT
+//! artifacts through [`runtime`] (PJRT CPU client via the `xla` crate).
+
+pub mod cli;
+pub mod compress;
+pub mod coordinator;
+pub mod dpu;
+pub mod engine;
+pub mod gen;
+pub mod metrics;
+pub mod net;
+pub mod query;
+pub mod runtime;
+pub mod troot;
+pub mod util;
+pub mod xrootd;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("format error: {0}")]
+    Format(String),
+    #[error("compression error: {0}")]
+    Compress(String),
+    #[error("protocol error: {0}")]
+    Protocol(String),
+    #[error("query error: {0}")]
+    Query(String),
+    #[error("engine error: {0}")]
+    Engine(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("config error: {0}")]
+    Config(String),
+}
+
+impl Error {
+    pub fn format(msg: impl Into<String>) -> Self {
+        Error::Format(msg.into())
+    }
+    pub fn protocol(msg: impl Into<String>) -> Self {
+        Error::Protocol(msg.into())
+    }
+    pub fn query(msg: impl Into<String>) -> Self {
+        Error::Query(msg.into())
+    }
+}

@@ -1,0 +1,261 @@
+//! `skimroot` — the SkimROOT launcher.
+//!
+//! Subcommands:
+//!
+//! * `gen`   — generate a synthetic NanoAOD-like dataset.
+//! * `skim`  — run one skim job under any deployment mode (simulated
+//!   testbed: virtual links + real compute).
+//! * `serve` — run the XRootD-like storage server over TCP.
+//! * `dpu`   — run the DPU HTTP service (separated-host mode) backed
+//!   by a storage directory.
+//! * `post`  — submit a JSON query to a running DPU over HTTP and save
+//!   the filtered file (what the paper does with `curl`).
+//! * `eval`  — reproduce the paper's figures (4a, 4b, 5a, 5b).
+//!
+//! Run `skimroot <cmd> --help` for flags.
+
+use skimroot::cli::Args;
+use skimroot::compress::Codec;
+use skimroot::coordinator::{eval, Coordinator, Deployment, FaultConfig, Mode};
+use skimroot::dpu::http::{post_skim, DpuHttpServer, SkimHttpOutput};
+use skimroot::dpu::{DpuConfig, DpuNode};
+use skimroot::gen::{self, GenConfig};
+use skimroot::metrics::Node;
+use skimroot::net::{DiskModel, LinkModel};
+use skimroot::query::SkimQuery;
+use skimroot::runtime::SkimRuntime;
+use skimroot::xrootd::XrdServer;
+use skimroot::{Error, Result};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn main() {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        print_help();
+        return;
+    }
+    let cmd = raw.remove(0);
+    let result = match cmd.as_str() {
+        "gen" => cmd_gen(raw),
+        "skim" => cmd_skim(raw),
+        "serve" => cmd_serve(raw),
+        "dpu" => cmd_dpu(raw),
+        "post" => cmd_post(raw),
+        "eval" => cmd_eval(raw),
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "skimroot — near-storage LHC data filtering (SkimROOT reproduction)
+
+USAGE: skimroot <command> [flags]
+
+COMMANDS:
+  gen    --out FILE --events N [--branches 1749] [--hlt 677]
+         [--basket 1000] [--codec lz4|zlib|xz|none] [--seed N]
+  skim   --storage DIR (--query FILE | --higgs --input NAME)
+         [--mode client|client-opt|server|skimroot] [--link 1g|10g|100g]
+         [--artifacts DIR] [--client-dir DIR] [--fail-prob P] [--retries N]
+  serve  --root DIR --listen ADDR
+  dpu    --root DIR --listen ADDR [--artifacts DIR] [--scratch DIR]
+  post   --dpu ADDR --query FILE --out FILE
+  eval   --dir DIR [--fig 4a|4b|5a|5b|all] [--scale small|standard]
+         [--artifacts DIR]"
+    );
+}
+
+fn parse_link(s: &str) -> Result<LinkModel> {
+    Ok(match s {
+        "1g" | "1" => LinkModel::wan_1g(),
+        "10g" | "10" => LinkModel::shared_10g(),
+        "100g" | "100" => LinkModel::dedicated_100g(),
+        "local" => LinkModel::local(),
+        other => return Err(Error::Config(format!("unknown link '{other}'"))),
+    })
+}
+
+fn load_runtime(args: &Args) -> Option<SkimRuntime> {
+    if args.switch("no-runtime") {
+        return None;
+    }
+    let dir = args.get_or("artifacts", "artifacts");
+    match SkimRuntime::load(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("[warn] PJRT runtime unavailable ({e}); using interpreter");
+            None
+        }
+    }
+}
+
+fn cmd_gen(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    let cfg = GenConfig {
+        n_events: args.parse_num("events", 100_000u64)?,
+        target_branches: args.parse_num("branches", 1749usize)?,
+        n_hlt: args.parse_num("hlt", 677usize)?,
+        basket_events: args.parse_num("basket", 1000u32)?,
+        codec: Codec::parse(args.get_or("codec", "lz4"))?,
+        seed: args.parse_num("seed", 0x5eed_cafeu64)?,
+    };
+    let out = args.require("out")?;
+    let summary = gen::generate(&cfg, out)?;
+    println!(
+        "wrote {out}: {} events, {} branches, {} baskets, {} raw → {} ({}x)",
+        summary.n_events,
+        summary.n_branches,
+        summary.n_baskets,
+        skimroot::util::human_bytes(summary.raw_bytes),
+        skimroot::util::human_bytes(summary.file_bytes),
+        format!("{:.2}", summary.compression_ratio()),
+    );
+    Ok(())
+}
+
+fn cmd_skim(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &["higgs", "no-runtime"])?;
+    let storage = args.require("storage")?;
+    let query = if args.switch("higgs") {
+        let input = args.require("input")?;
+        gen::higgs_query(input, args.get_or("output", "skim_out.troot"))
+    } else {
+        let path = args.require("query")?;
+        let text = std::fs::read_to_string(path)?;
+        SkimQuery::from_json_text(&text)?
+    };
+    let mode = Mode::parse(args.get_or("mode", "skimroot"))?;
+    let link = parse_link(args.get_or("link", "1g"))?;
+    let runtime = load_runtime(&args);
+    let client_dir = args.get_or("client-dir", "skim_client");
+
+    let mut deployment = Deployment::new(mode, link);
+    deployment.fault = FaultConfig {
+        read_fail_prob: args.parse_num("fail-prob", 0.0f64)?,
+        max_retries: args.parse_num("retries", 3u32)?,
+        seed: args.parse_num("fault-seed", 0u64)?,
+    };
+
+    let coord = Coordinator::new(storage, client_dir, runtime.as_ref());
+    let report = coord.run_job(&query, &deployment)?;
+    println!(
+        "mode={} events={} pass={} ({:.3}%) attempts={} output={}",
+        report.mode.name(),
+        report.result.n_events,
+        report.result.n_pass,
+        100.0 * report.result.n_pass as f64 / report.result.n_events.max(1) as f64,
+        report.attempts,
+        skimroot::util::human_bytes(report.result.output_bytes),
+    );
+    println!("\n{}", report.timeline.report());
+    println!("\nutilization:");
+    for (node, u) in &report.utilization {
+        if *u > 0.0 {
+            println!("  {:<12} {:.1}%", node.name(), u * 100.0);
+        }
+    }
+    for w in &report.result.warnings {
+        println!("[warn] {w}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    let root = args.require("root")?;
+    let listen = args.require("listen")?;
+    let server = XrdServer::new(root, DiskModel::ideal());
+    let listener = std::net::TcpListener::bind(listen)
+        .map_err(|e| Error::Config(format!("bind {listen}: {e}")))?;
+    println!("xrootd-like server on {listen}, root={root} (ctrl-c to stop)");
+    let stop = Arc::new(AtomicBool::new(false));
+    server.serve_tcp(listener, stop).join().ok();
+    Ok(())
+}
+
+fn cmd_dpu(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &["no-runtime"])?;
+    let root = args.require("root")?.to_string();
+    let listen = args.require("listen")?;
+    let scratch = args.get_or("scratch", "dpu_scratch").to_string();
+    let runtime = load_runtime(&args);
+    // Leak the runtime: the service runs for the process lifetime and
+    // handler threads need a 'static borrow.
+    let runtime: Option<&'static SkimRuntime> = runtime.map(|rt| &*Box::leak(Box::new(rt)));
+
+    let listener = std::net::TcpListener::bind(listen)
+        .map_err(|e| Error::Config(format!("bind {listen}: {e}")))?;
+    println!("DPU service on {listen} (separated-host mode), storage root={root}");
+
+    let server = DpuHttpServer::new(move |query: &SkimQuery, timeline| {
+        let storage = XrdServer::new(&root, DiskModel::disk_pool());
+        storage.set_timeline(Some(timeline.clone()));
+        let dpu = DpuNode::new(DpuConfig::default(), storage, runtime, &scratch);
+        let out = dpu.run_query(query, timeline)?;
+        Ok(SkimHttpOutput {
+            n_events: out.result.n_events,
+            n_pass: out.result.n_pass,
+            elapsed: timeline.elapsed(),
+            output: out.output,
+        })
+    });
+    let stop = Arc::new(AtomicBool::new(false));
+    server.serve(listener, stop).join().ok();
+    Ok(())
+}
+
+fn cmd_post(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &[])?;
+    let dpu = args.require("dpu")?;
+    let query = std::fs::read_to_string(args.require("query")?)?;
+    let out = args.require("out")?;
+    let (status, headers, body) = post_skim(dpu, &query)?;
+    if status != 200 {
+        return Err(Error::protocol(format!(
+            "DPU returned {status}: {}",
+            String::from_utf8_lossy(&body)
+        )));
+    }
+    std::fs::write(out, &body)?;
+    println!(
+        "saved {out} ({}); events={} pass={} dpu-elapsed={}s",
+        skimroot::util::human_bytes(body.len() as u64),
+        headers.get("x-skim-events").map(|s| s.as_str()).unwrap_or("?"),
+        headers.get("x-skim-pass").map(|s| s.as_str()).unwrap_or("?"),
+        headers.get("x-skim-elapsed-secs").map(|s| s.as_str()).unwrap_or("?"),
+    );
+    Ok(())
+}
+
+fn cmd_eval(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &["no-runtime"])?;
+    let dir = args.get_or("dir", "eval_data");
+    let scale = match args.get_or("scale", "standard") {
+        "small" => eval::EvalScale::small(),
+        "standard" => eval::EvalScale::standard(),
+        other => return Err(Error::Config(format!("unknown scale '{other}'"))),
+    };
+    let runtime = load_runtime(&args);
+    let env = eval::prepare(dir, scale)?;
+    let table = match args.get_or("fig", "all") {
+        "4a" => eval::fig4a(&env, runtime.as_ref())?,
+        "4b" => eval::fig4b(&env, runtime.as_ref())?,
+        "5a" => eval::fig5a(&env, runtime.as_ref())?,
+        "5b" => eval::fig5b(&env, runtime.as_ref())?,
+        "all" => eval::all_figures(&env, runtime.as_ref())?,
+        other => return Err(Error::Config(format!("unknown figure '{other}'"))),
+    };
+    println!("{table}");
+    let _ = Node::Client; // keep import used in all cfgs
+    Ok(())
+}

@@ -1,0 +1,321 @@
+//! Measurement substrate: the per-operation timeline behind the paper's
+//! Figure 4b / 5a breakdowns and the Figure 5b CPU-utilization table.
+//!
+//! # Hybrid time model
+//!
+//! The paper measures a **single-threaded, sequential** filtering job,
+//! so end-to-end latency decomposes into a sum of stage times. We
+//! reproduce it with a hybrid accounting (§Execution-time model of
+//! DESIGN.md):
+//!
+//! * **compute stages run for real** — decompression, deserialization,
+//!   filter evaluation and output encoding are actually executed and
+//!   wall-clocked ([`Timeline::stage`]);
+//! * **transport stages charge virtual time** — network transfers and
+//!   disk seeks advance a virtual clock by a modelled duration
+//!   ([`Timeline::charge`]) instead of sleeping, so a "1 Gbps WAN"
+//!   experiment over gigabytes completes in milliseconds of wall time
+//!   while reporting faithful transfer latency.
+//!
+//! End-to-end latency = Σ stage times (real + virtual).
+//! CPU utilization of a node = its real busy time / end-to-end latency,
+//! which is exactly what the paper's per-core `top`-style numbers mean.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Pipeline stage, matching the paper's breakdown categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Reading the file header / metadata.
+    OpenMeta,
+    /// Fetching compressed baskets (network or disk).
+    BasketFetch,
+    /// Decompressing basket frames.
+    Decompress,
+    /// Turning raw basket bytes into typed columns + batch assembly.
+    Deserialize,
+    /// Evaluating selection criteria (vectorized or interpreted).
+    Filter,
+    /// Encoding + compressing + writing the output file.
+    OutputWrite,
+    /// Shipping the filtered file to the client.
+    OutputTransfer,
+    Other,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::OpenMeta => "open/meta",
+            Stage::BasketFetch => "basket fetch",
+            Stage::Decompress => "decompress",
+            Stage::Deserialize => "deserialize",
+            Stage::Filter => "filter",
+            Stage::OutputWrite => "output write",
+            Stage::OutputTransfer => "output transfer",
+            Stage::Other => "other",
+        }
+    }
+
+    pub const ALL: [Stage; 8] = [
+        Stage::OpenMeta,
+        Stage::BasketFetch,
+        Stage::Decompress,
+        Stage::Deserialize,
+        Stage::Filter,
+        Stage::OutputWrite,
+        Stage::OutputTransfer,
+        Stage::Other,
+    ];
+}
+
+/// Which machine does the work / pays the CPU time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Node {
+    Client,
+    Server,
+    Dpu,
+    /// The DPU's hardware decompression engine: busy time is tracked but
+    /// does **not** count as ARM-core CPU (the paper's §4 point that the
+    /// engine relieves the cores).
+    DpuEngine,
+}
+
+impl Node {
+    pub fn name(self) -> &'static str {
+        match self {
+            Node::Client => "client",
+            Node::Server => "server",
+            Node::Dpu => "dpu",
+            Node::DpuEngine => "dpu-engine",
+        }
+    }
+}
+
+#[derive(Default)]
+struct Tables {
+    /// seconds per (stage, node) of real compute.
+    real: BTreeMap<(Stage, Node), f64>,
+    /// seconds per stage of modelled transport time.
+    virt: BTreeMap<Stage, f64>,
+    /// bytes moved per stage (for tables and sanity checks).
+    bytes: BTreeMap<Stage, u64>,
+    counters: BTreeMap<&'static str, u64>,
+}
+
+/// Shared, thread-safe stage/latency accounting for one job run.
+#[derive(Clone)]
+pub struct Timeline {
+    inner: Arc<Mutex<Tables>>,
+    /// Virtual nanoseconds accumulated by transport charges.
+    virt_ns: Arc<AtomicU64>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline {
+            inner: Arc::new(Mutex::new(Tables::default())),
+            virt_ns: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Run `f` as real compute on `node`, attributed to `stage`.
+    pub fn stage<T>(&self, stage: Stage, node: Node, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let mut tab = self.inner.lock().unwrap();
+        *tab.real.entry((stage, node)).or_insert(0.0) += dt;
+        out
+    }
+
+    /// Add already-measured real compute seconds (for work timed
+    /// externally, e.g. inside a worker pool).
+    pub fn add_real(&self, stage: Stage, node: Node, secs: f64) {
+        let mut tab = self.inner.lock().unwrap();
+        *tab.real.entry((stage, node)).or_insert(0.0) += secs;
+    }
+
+    /// Charge modelled transport time (network / disk) to `stage`.
+    pub fn charge(&self, stage: Stage, secs: f64) {
+        debug_assert!(secs >= 0.0 && secs.is_finite());
+        self.virt_ns
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        let mut tab = self.inner.lock().unwrap();
+        *tab.virt.entry(stage).or_insert(0.0) += secs;
+    }
+
+    /// Record bytes moved in `stage`.
+    pub fn add_bytes(&self, stage: Stage, bytes: u64) {
+        let mut tab = self.inner.lock().unwrap();
+        *tab.bytes.entry(stage).or_insert(0) += bytes;
+    }
+
+    /// Bump a named counter (round-trips, baskets, cache hits, ...).
+    pub fn count(&self, name: &'static str, n: u64) {
+        let mut tab = self.inner.lock().unwrap();
+        *tab.counters.entry(name).or_insert(0) += n;
+    }
+
+    /// Total stage seconds: real + virtual.
+    pub fn stage_total(&self, stage: Stage) -> f64 {
+        let tab = self.inner.lock().unwrap();
+        let real: f64 = tab
+            .real
+            .iter()
+            .filter(|((s, _), _)| *s == stage)
+            .map(|(_, v)| v)
+            .sum();
+        real + tab.virt.get(&stage).copied().unwrap_or(0.0)
+    }
+
+    /// End-to-end latency (sequential model): Σ over stages.
+    pub fn elapsed(&self) -> f64 {
+        Stage::ALL.iter().map(|&s| self.stage_total(s)).sum()
+    }
+
+    /// Real busy seconds attributed to `node`.
+    pub fn node_busy(&self, node: Node) -> f64 {
+        let tab = self.inner.lock().unwrap();
+        tab.real
+            .iter()
+            .filter(|((_, n), _)| *n == node)
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// CPU utilization of `node` = busy / end-to-end (0..=1).
+    pub fn utilization(&self, node: Node) -> f64 {
+        let total = self.elapsed();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        (self.node_busy(node) / total).min(1.0)
+    }
+
+    pub fn bytes(&self, stage: Stage) -> u64 {
+        let tab = self.inner.lock().unwrap();
+        tab.bytes.get(&stage).copied().unwrap_or(0)
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        let tab = self.inner.lock().unwrap();
+        tab.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Snapshot of all counters (sorted by name).
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        let tab = self.inner.lock().unwrap();
+        tab.counters.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    /// A compact per-stage report (used by examples and benches).
+    pub fn report(&self) -> StageReport {
+        let mut rows = Vec::new();
+        for stage in Stage::ALL {
+            let total = self.stage_total(stage);
+            if total > 0.0 || self.bytes(stage) > 0 {
+                rows.push((stage, total, self.bytes(stage)));
+            }
+        }
+        StageReport { rows, elapsed: self.elapsed() }
+    }
+}
+
+/// Rendered stage breakdown.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub rows: Vec<(Stage, f64, u64)>,
+    pub elapsed: f64,
+}
+
+impl std::fmt::Display for StageReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{:<16} {:>12} {:>12}", "stage", "time", "bytes")?;
+        for (stage, secs, bytes) in &self.rows {
+            writeln!(
+                f,
+                "{:<16} {:>12} {:>12}",
+                stage.name(),
+                crate::util::human_secs(*secs),
+                if *bytes > 0 { crate::util::human_bytes(*bytes) } else { "-".into() }
+            )?;
+        }
+        write!(f, "{:<16} {:>12}", "TOTAL", crate::util::human_secs(self.elapsed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_and_charge_compose() {
+        let tl = Timeline::new();
+        tl.stage(Stage::Decompress, Node::Client, || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        });
+        tl.charge(Stage::BasketFetch, 2.5);
+        assert!(tl.stage_total(Stage::Decompress) >= 0.010);
+        assert!((tl.stage_total(Stage::BasketFetch) - 2.5).abs() < 1e-9);
+        assert!(tl.elapsed() >= 2.51);
+    }
+
+    #[test]
+    fn utilization_reflects_busy_fraction() {
+        let tl = Timeline::new();
+        tl.add_real(Stage::Filter, Node::Dpu, 1.0);
+        tl.charge(Stage::BasketFetch, 3.0);
+        let u = tl.utilization(Node::Dpu);
+        assert!((u - 0.25).abs() < 1e-9, "u={u}");
+        assert_eq!(tl.utilization(Node::Client), 0.0);
+    }
+
+    #[test]
+    fn engine_time_not_cpu_time() {
+        let tl = Timeline::new();
+        tl.add_real(Stage::Decompress, Node::DpuEngine, 1.0);
+        tl.add_real(Stage::Filter, Node::Dpu, 1.0);
+        assert!(tl.utilization(Node::Dpu) < 0.51);
+        assert!(tl.node_busy(Node::DpuEngine) > 0.99);
+    }
+
+    #[test]
+    fn bytes_and_counters() {
+        let tl = Timeline::new();
+        tl.add_bytes(Stage::BasketFetch, 1000);
+        tl.add_bytes(Stage::BasketFetch, 24);
+        tl.count("round_trips", 3);
+        tl.count("round_trips", 2);
+        assert_eq!(tl.bytes(Stage::BasketFetch), 1024);
+        assert_eq!(tl.counter("round_trips"), 5);
+        assert_eq!(tl.counter("missing"), 0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let tl = Timeline::new();
+        tl.charge(Stage::BasketFetch, 1.0);
+        tl.add_bytes(Stage::BasketFetch, 4096);
+        let s = tl.report().to_string();
+        assert!(s.contains("basket fetch"));
+        assert!(s.contains("TOTAL"));
+    }
+
+    #[test]
+    fn clone_shares_state() {
+        let tl = Timeline::new();
+        let tl2 = tl.clone();
+        tl2.charge(Stage::Other, 1.0);
+        assert!((tl.stage_total(Stage::Other) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,520 @@
+//! Query schema: the structured JSON selection format of Figure 2c.
+//!
+//! A query names the input dataset, the output file, the branches to
+//! keep (with wildcards), and a **multi-stage selection**:
+//!
+//! 1. *preselection* — cheap single-branch scalar cuts ("at least one
+//!    high-quality lepton"), evaluated first to discard events early;
+//! 2. *object-level* — per-particle kinematic/ID cuts over jagged
+//!    collections (electrons, muons, jets) with a minimum surviving
+//!    multiplicity;
+//! 3. *event-level* — composite variables: HT (scalar sum of jet pT
+//!    above a threshold) and a trigger OR.
+//!
+//! Example payload:
+//!
+//! ```json
+//! {
+//!   "input": "store/higgs.troot",
+//!   "output": "skim.troot",
+//!   "branches": ["Electron_*", "Muon_*", "Jet_pt", "MET_pt", "HLT_*"],
+//!   "force_all": false,
+//!   "selection": {
+//!     "preselection": [ {"branch": "nElectron", "op": ">=", "value": 1} ],
+//!     "objects": [
+//!       { "collection": "Electron", "min_count": 1, "cuts": [
+//!           {"var": "Electron_pt",  "op": ">",   "value": 25.0},
+//!           {"var": "Electron_eta", "op": "|<|", "value": 2.4} ] }
+//!     ],
+//!     "event": {
+//!       "ht": {"jet_pt": "Jet_pt", "object_pt_min": 30.0, "min": 200.0},
+//!       "triggers_any": ["HLT_IsoMu24", "HLT_Ele27_WPTight"]
+//!     }
+//!   }
+//! }
+//! ```
+
+use super::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Comparison operator. `AbsLt`/`AbsGt` compare `|x|` (the idiomatic
+/// `|eta| < 2.4` acceptance cut).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Gt,
+    Ge,
+    Lt,
+    Le,
+    Eq,
+    Ne,
+    AbsLt,
+    AbsGt,
+}
+
+impl CmpOp {
+    pub fn parse(s: &str) -> Result<CmpOp> {
+        Ok(match s {
+            ">" => CmpOp::Gt,
+            ">=" => CmpOp::Ge,
+            "<" => CmpOp::Lt,
+            "<=" => CmpOp::Le,
+            "==" => CmpOp::Eq,
+            "!=" => CmpOp::Ne,
+            "|<|" => CmpOp::AbsLt,
+            "|>|" => CmpOp::AbsGt,
+            other => return Err(Error::query(format!("unknown operator '{other}'"))),
+        })
+    }
+
+    pub fn symbol(self) -> &'static str {
+        match self {
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Eq => "==",
+            CmpOp::Ne => "!=",
+            CmpOp::AbsLt => "|<|",
+            CmpOp::AbsGt => "|>|",
+        }
+    }
+
+    /// Apply the comparison.
+    #[inline]
+    pub fn eval(self, x: f64, v: f64) -> bool {
+        match self {
+            CmpOp::Gt => x > v,
+            CmpOp::Ge => x >= v,
+            CmpOp::Lt => x < v,
+            CmpOp::Le => x <= v,
+            CmpOp::Eq => x == v,
+            CmpOp::Ne => x != v,
+            CmpOp::AbsLt => x.abs() < v,
+            CmpOp::AbsGt => x.abs() > v,
+        }
+    }
+
+    /// Numeric opcode for the AOT kernel's cut bank (must match
+    /// `python/compile/kernels/skim.py`).
+    pub fn code(self) -> (u8, bool) {
+        match self {
+            CmpOp::Gt => (0, false),
+            CmpOp::Ge => (1, false),
+            CmpOp::Lt => (2, false),
+            CmpOp::Le => (3, false),
+            CmpOp::Eq => (4, false),
+            CmpOp::Ne => (5, false),
+            CmpOp::AbsLt => (2, true),
+            CmpOp::AbsGt => (0, true),
+        }
+    }
+}
+
+/// Scalar-branch cut (preselection stage).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalarCut {
+    pub branch: String,
+    pub op: CmpOp,
+    pub value: f64,
+}
+
+/// Per-object cut over one jagged variable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjectCut {
+    pub var: String,
+    pub op: CmpOp,
+    pub value: f64,
+}
+
+/// Object-level selection: an event passes if at least `min_count`
+/// objects of `collection` satisfy **all** `cuts`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjectSelection {
+    pub collection: String,
+    pub cuts: Vec<ObjectCut>,
+    pub min_count: u32,
+}
+
+/// HT cut: scalar sum of `jet_pt` over objects with pT above
+/// `object_pt_min` must be at least `min`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HtCut {
+    pub jet_pt: String,
+    pub object_pt_min: f64,
+    pub min: f64,
+}
+
+/// Event-level selection: composite variables + trigger OR.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EventSelection {
+    pub ht: Option<HtCut>,
+    /// Event passes if **any** listed trigger flag is set. Empty = no
+    /// trigger requirement.
+    pub triggers_any: Vec<String>,
+}
+
+/// The full multi-stage selection.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Selection {
+    pub preselection: Vec<ScalarCut>,
+    pub objects: Vec<ObjectSelection>,
+    pub event: EventSelection,
+}
+
+impl Selection {
+    /// All branches the selection reads (the *filtering criteria*
+    /// branches of §3.1).
+    pub fn referenced_branches(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        let mut push = |name: &str| {
+            if !out.iter().any(|n| n == name) {
+                out.push(name.to_string());
+            }
+        };
+        for c in &self.preselection {
+            push(&c.branch);
+        }
+        for sel in &self.objects {
+            for c in &sel.cuts {
+                push(&c.var);
+            }
+        }
+        if let Some(ht) = &self.event.ht {
+            push(&ht.jet_pt);
+        }
+        for t in &self.event.triggers_any {
+            push(t);
+        }
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.preselection.is_empty()
+            && self.objects.is_empty()
+            && self.event.ht.is_none()
+            && self.event.triggers_any.is_empty()
+    }
+}
+
+/// A complete skim request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkimQuery {
+    /// Catalog-relative path of the input file.
+    pub input: String,
+    /// Output file name for the filtered result.
+    pub output: String,
+    /// Branch patterns to keep in the output (wildcards allowed).
+    pub branches: Vec<String>,
+    /// Disable the curated wildcard mapping (§3.1): expand patterns
+    /// against the *full* schema.
+    pub force_all: bool,
+    pub selection: Selection,
+}
+
+impl SkimQuery {
+    /// Parse and validate a JSON query payload.
+    pub fn from_json_text(text: &str) -> Result<SkimQuery> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    pub fn from_json(v: &Json) -> Result<SkimQuery> {
+        let input = v.str_field("input")?.to_string();
+        if input.is_empty() {
+            return Err(Error::query("'input' must not be empty"));
+        }
+        let output = v.str_field("output")?.to_string();
+        if output.is_empty() {
+            return Err(Error::query("'output' must not be empty"));
+        }
+        let branches = match v.get("branches") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|b| {
+                    b.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| Error::query("'branches' entries must be strings"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            Some(_) => return Err(Error::query("'branches' must be an array")),
+            None => vec!["*".to_string()],
+        };
+        let force_all = match v.get("force_all") {
+            Some(Json::Bool(b)) => *b,
+            Some(_) => return Err(Error::query("'force_all' must be a boolean")),
+            None => false,
+        };
+        let selection = match v.get("selection") {
+            Some(sel) => parse_selection(sel)?,
+            None => Selection::default(),
+        };
+        Ok(SkimQuery { input, output, branches, force_all, selection })
+    }
+
+    /// Serialize back to the canonical JSON payload (used to POST the
+    /// query to the DPU and to hash job ids).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("input".into(), Json::Str(self.input.clone()));
+        obj.insert("output".into(), Json::Str(self.output.clone()));
+        obj.insert(
+            "branches".into(),
+            Json::Arr(self.branches.iter().map(|b| Json::Str(b.clone())).collect()),
+        );
+        obj.insert("force_all".into(), Json::Bool(self.force_all));
+        let mut sel = BTreeMap::new();
+        sel.insert(
+            "preselection".into(),
+            Json::Arr(
+                self.selection
+                    .preselection
+                    .iter()
+                    .map(|c| {
+                        let mut m = BTreeMap::new();
+                        m.insert("branch".into(), Json::Str(c.branch.clone()));
+                        m.insert("op".into(), Json::Str(c.op.symbol().into()));
+                        m.insert("value".into(), Json::Num(c.value));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        sel.insert(
+            "objects".into(),
+            Json::Arr(
+                self.selection
+                    .objects
+                    .iter()
+                    .map(|s| {
+                        let mut m = BTreeMap::new();
+                        m.insert("collection".into(), Json::Str(s.collection.clone()));
+                        m.insert("min_count".into(), Json::Num(s.min_count as f64));
+                        m.insert(
+                            "cuts".into(),
+                            Json::Arr(
+                                s.cuts
+                                    .iter()
+                                    .map(|c| {
+                                        let mut m = BTreeMap::new();
+                                        m.insert("var".into(), Json::Str(c.var.clone()));
+                                        m.insert("op".into(), Json::Str(c.op.symbol().into()));
+                                        m.insert("value".into(), Json::Num(c.value));
+                                        Json::Obj(m)
+                                    })
+                                    .collect(),
+                            ),
+                        );
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        let mut ev = BTreeMap::new();
+        if let Some(ht) = &self.selection.event.ht {
+            let mut m = BTreeMap::new();
+            m.insert("jet_pt".into(), Json::Str(ht.jet_pt.clone()));
+            m.insert("object_pt_min".into(), Json::Num(ht.object_pt_min));
+            m.insert("min".into(), Json::Num(ht.min));
+            ev.insert("ht".into(), Json::Obj(m));
+        }
+        if !self.selection.event.triggers_any.is_empty() {
+            ev.insert(
+                "triggers_any".into(),
+                Json::Arr(
+                    self.selection
+                        .event
+                        .triggers_any
+                        .iter()
+                        .map(|t| Json::Str(t.clone()))
+                        .collect(),
+                ),
+            );
+        }
+        sel.insert("event".into(), Json::Obj(ev));
+        obj.insert("selection".into(), Json::Obj(sel));
+        Json::Obj(obj)
+    }
+}
+
+fn parse_selection(v: &Json) -> Result<Selection> {
+    let mut sel = Selection::default();
+    if let Some(pre) = v.get("preselection") {
+        let items = pre
+            .as_arr()
+            .ok_or_else(|| Error::query("'preselection' must be an array"))?;
+        for item in items {
+            sel.preselection.push(ScalarCut {
+                branch: item.str_field("branch")?.to_string(),
+                op: CmpOp::parse(item.str_field("op")?)?,
+                value: item.num_field("value")?,
+            });
+        }
+    }
+    if let Some(objs) = v.get("objects") {
+        let items = objs
+            .as_arr()
+            .ok_or_else(|| Error::query("'objects' must be an array"))?;
+        for item in items {
+            let collection = item.str_field("collection")?.to_string();
+            let min_count = match item.get("min_count") {
+                Some(n) => {
+                    let f = n
+                        .as_f64()
+                        .ok_or_else(|| Error::query("'min_count' must be a number"))?;
+                    if f < 0.0 || f.fract() != 0.0 {
+                        return Err(Error::query("'min_count' must be a non-negative integer"));
+                    }
+                    f as u32
+                }
+                None => 1,
+            };
+            let cuts_json = item
+                .require("cuts")?
+                .as_arr()
+                .ok_or_else(|| Error::query("'cuts' must be an array"))?;
+            if cuts_json.is_empty() {
+                return Err(Error::query(format!(
+                    "object selection for '{collection}' has no cuts"
+                )));
+            }
+            let mut cuts = Vec::new();
+            for c in cuts_json {
+                let var = c.str_field("var")?.to_string();
+                if !var.starts_with(&format!("{collection}_")) {
+                    return Err(Error::query(format!(
+                        "cut variable '{var}' does not belong to collection '{collection}'"
+                    )));
+                }
+                cuts.push(ObjectCut {
+                    var,
+                    op: CmpOp::parse(c.str_field("op")?)?,
+                    value: c.num_field("value")?,
+                });
+            }
+            sel.objects.push(ObjectSelection { collection, cuts, min_count });
+        }
+    }
+    if let Some(ev) = v.get("event") {
+        if let Some(ht) = ev.get("ht") {
+            sel.event.ht = Some(HtCut {
+                jet_pt: ht.str_field("jet_pt")?.to_string(),
+                object_pt_min: ht.get("object_pt_min").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                min: ht.num_field("min")?,
+            });
+        }
+        if let Some(trig) = ev.get("triggers_any") {
+            let items = trig
+                .as_arr()
+                .ok_or_else(|| Error::query("'triggers_any' must be an array"))?;
+            for t in items {
+                sel.event.triggers_any.push(
+                    t.as_str()
+                        .ok_or_else(|| Error::query("'triggers_any' entries must be strings"))?
+                        .to_string(),
+                );
+            }
+        }
+    }
+    Ok(sel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub const SAMPLE: &str = r#"{
+        "input": "store/higgs.troot",
+        "output": "skim.troot",
+        "branches": ["Electron_*", "Muon_*", "Jet_pt", "MET_pt", "HLT_*"],
+        "force_all": false,
+        "selection": {
+            "preselection": [ {"branch": "nElectron", "op": ">=", "value": 1} ],
+            "objects": [
+                { "collection": "Electron", "min_count": 1, "cuts": [
+                    {"var": "Electron_pt",  "op": ">",   "value": 25.0},
+                    {"var": "Electron_eta", "op": "|<|", "value": 2.4} ] }
+            ],
+            "event": {
+                "ht": {"jet_pt": "Jet_pt", "object_pt_min": 30.0, "min": 200.0},
+                "triggers_any": ["HLT_IsoMu24", "HLT_Ele27_WPTight"]
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_full_query() {
+        let q = SkimQuery::from_json_text(SAMPLE).unwrap();
+        assert_eq!(q.input, "store/higgs.troot");
+        assert_eq!(q.branches.len(), 5);
+        assert!(!q.force_all);
+        assert_eq!(q.selection.preselection.len(), 1);
+        assert_eq!(q.selection.objects[0].cuts.len(), 2);
+        assert_eq!(q.selection.objects[0].min_count, 1);
+        let ht = q.selection.event.ht.as_ref().unwrap();
+        assert_eq!(ht.min, 200.0);
+        assert_eq!(q.selection.event.triggers_any.len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let q = SkimQuery::from_json_text(SAMPLE).unwrap();
+        let text = q.to_json().to_string();
+        let q2 = SkimQuery::from_json_text(&text).unwrap();
+        assert_eq!(q, q2);
+    }
+
+    #[test]
+    fn referenced_branches_cover_all_stages() {
+        let q = SkimQuery::from_json_text(SAMPLE).unwrap();
+        let refs = q.selection.referenced_branches();
+        for b in ["nElectron", "Electron_pt", "Electron_eta", "Jet_pt", "HLT_IsoMu24"] {
+            assert!(refs.iter().any(|r| r == b), "missing {b}");
+        }
+        // deduplicated
+        let mut sorted = refs.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), refs.len());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let q = SkimQuery::from_json_text(
+            r#"{"input": "a.troot", "output": "b.troot"}"#,
+        )
+        .unwrap();
+        assert_eq!(q.branches, vec!["*"]);
+        assert!(!q.force_all);
+        assert!(q.selection.is_empty());
+    }
+
+    #[test]
+    fn rejects_invalid_queries() {
+        for bad in [
+            r#"{"output": "b"}"#,                                   // no input
+            r#"{"input": "", "output": "b"}"#,                      // empty input
+            r#"{"input": "a", "output": "b", "branches": "x"}"#,    // branches not array
+            r#"{"input": "a", "output": "b", "force_all": 1}"#,     // force_all not bool
+            r#"{"input": "a", "output": "b", "selection": {"preselection": [{"branch": "x", "op": "~", "value": 1}]}}"#,
+            r#"{"input": "a", "output": "b", "selection": {"objects": [{"collection": "El", "cuts": []}]}}"#,
+            r#"{"input": "a", "output": "b", "selection": {"objects": [{"collection": "El", "cuts": [{"var": "Mu_pt", "op": ">", "value": 1}]}]}}"#,
+            r#"{"input": "a", "output": "b", "selection": {"objects": [{"collection": "El", "min_count": -1, "cuts": [{"var": "El_pt", "op": ">", "value": 1}]}]}}"#,
+        ] {
+            assert!(SkimQuery::from_json_text(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn cmp_op_eval_semantics() {
+        assert!(CmpOp::Gt.eval(2.0, 1.0));
+        assert!(!CmpOp::Gt.eval(1.0, 1.0));
+        assert!(CmpOp::Ge.eval(1.0, 1.0));
+        assert!(CmpOp::AbsLt.eval(-2.0, 2.4));
+        assert!(!CmpOp::AbsLt.eval(-3.0, 2.4));
+        assert!(CmpOp::AbsGt.eval(-3.0, 2.4));
+        assert!(CmpOp::Ne.eval(1.0, 2.0));
+        for op in [CmpOp::Gt, CmpOp::Ge, CmpOp::Lt, CmpOp::Le, CmpOp::Eq, CmpOp::Ne, CmpOp::AbsLt, CmpOp::AbsGt] {
+            assert_eq!(CmpOp::parse(op.symbol()).unwrap(), op);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The JSON query front-end (§3.1) — SkimROOT's replacement for
+//! hand-written ROOT C++ filtering scripts.
+//!
+//! * [`json`] — hand-rolled JSON parser/serializer (no serde offline);
+//! * [`ast`] — the query schema: input/output, branch patterns,
+//!   `force_all`, and the multi-stage selection (preselection →
+//!   object-level → event-level), mirroring Figure 2c;
+//! * [`wildcard`] — glob expansion of branch patterns against the file
+//!   schema, including the curated `HLT_*` → minimal-trigger-set
+//!   mapping with missing-branch warnings;
+//! * [`plan`] — query + file schema → [`plan::SkimPlan`]: the
+//!   criteria/output-only branch split that drives two-phase execution,
+//!   and the numeric [`plan::CutProgram`] consumed by both the scalar
+//!   interpreter and the AOT-compiled vectorized kernel.
+
+pub mod ast;
+pub mod json;
+pub mod plan;
+pub mod wildcard;
+
+pub use ast::{CmpOp, EventSelection, ObjectCut, ObjectSelection, ScalarCut, Selection, SkimQuery};
+pub use json::Json;
+pub use plan::{CutProgram, SkimPlan};

@@ -1,0 +1,390 @@
+//! Query planning: branch categorization + cut-program compilation
+//! (§3.1–3.2).
+//!
+//! Given a parsed [`SkimQuery`] and the file schema, the planner:
+//!
+//! 1. expands the output branch patterns (curated `HLT_*` mapping
+//!    included) → the branches written to the filtered file;
+//! 2. splits branches into **filtering criteria** (read in phase 1,
+//!    O(10) in NanoAOD practice) and **output-only** (read in phase 2,
+//!    only for passing events, O(100)) — the two-phase split that
+//!    removes most data movement;
+//! 3. compiles the selection into a numeric [`CutProgram`]: flat column
+//!    lists + opcode/threshold banks consumed identically by the Rust
+//!    scalar interpreter and the AOT Pallas kernel (which has fixed
+//!    capacity; programs exceeding it fall back to the interpreter).
+
+use super::ast::SkimQuery;
+use super::wildcard;
+use crate::troot::{BranchKind, DType, FileMeta};
+use crate::{Error, Result};
+
+/// Kernel capacity (must match `python/compile/kernels/skim.py`).
+pub const KERNEL_MAX_OBJ_COLS: usize = 12;
+pub const KERNEL_MAX_SCALAR_COLS: usize = 16;
+pub const KERNEL_MAX_OBJ_CUTS: usize = 12;
+pub const KERNEL_MAX_SCALAR_CUTS: usize = 6;
+pub const KERNEL_MAX_GROUPS: usize = 4;
+
+/// One compiled per-object cut: `col` indexes [`CutProgram::obj_columns`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjCutParam {
+    pub col: usize,
+    /// 0 `>` · 1 `>=` · 2 `<` · 3 `<=` · 4 `==` · 5 `!=`
+    pub op: u8,
+    pub abs: bool,
+    pub value: f32,
+}
+
+/// One compiled scalar cut: `col` indexes [`CutProgram::scalar_columns`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalarCutParam {
+    pub col: usize,
+    pub op: u8,
+    pub abs: bool,
+    pub value: f32,
+}
+
+/// A collection's object-level requirement: at least `min_count`
+/// objects passing all cuts in `cut_range` (indices into
+/// [`CutProgram::obj_cuts`]). All of a group's cut columns share the
+/// same collection, hence the same multiplicity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjGroup {
+    pub collection: String,
+    pub cut_range: std::ops::Range<usize>,
+    pub min_count: u32,
+}
+
+/// Compiled HT requirement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HtParam {
+    /// Index into `obj_columns` of the jet-pT column.
+    pub col: usize,
+    pub object_pt_min: f32,
+    pub min_ht: f32,
+}
+
+/// The numeric, engine-agnostic form of a selection.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CutProgram {
+    /// Jagged f32 columns the program reads (order = kernel column ids).
+    pub obj_columns: Vec<String>,
+    /// Scalar columns (f32-convertible) the program reads.
+    pub scalar_columns: Vec<String>,
+    pub obj_cuts: Vec<ObjCutParam>,
+    pub groups: Vec<ObjGroup>,
+    /// Preselection scalar cuts (ANDed).
+    pub scalar_cuts: Vec<ScalarCutParam>,
+    pub ht: Option<HtParam>,
+    /// Indices into `scalar_columns` of trigger flags (ORed; empty =
+    /// no trigger requirement).
+    pub triggers: Vec<usize>,
+}
+
+impl CutProgram {
+    /// Does this program fit the AOT kernel's fixed capacity?
+    pub fn fits_kernel(&self) -> bool {
+        self.obj_columns.len() <= KERNEL_MAX_OBJ_COLS
+            && self.scalar_columns.len() <= KERNEL_MAX_SCALAR_COLS
+            && self.obj_cuts.len() <= KERNEL_MAX_OBJ_CUTS
+            && self.scalar_cuts.len() + self.triggers.len() <= KERNEL_MAX_SCALAR_CUTS + KERNEL_MAX_SCALAR_COLS
+            && self.groups.len() + self.ht.is_some() as usize <= KERNEL_MAX_GROUPS + 1
+    }
+
+    fn obj_col(&mut self, name: &str) -> usize {
+        match self.obj_columns.iter().position(|c| c == name) {
+            Some(i) => i,
+            None => {
+                self.obj_columns.push(name.to_string());
+                self.obj_columns.len() - 1
+            }
+        }
+    }
+
+    fn scalar_col(&mut self, name: &str) -> usize {
+        match self.scalar_columns.iter().position(|c| c == name) {
+            Some(i) => i,
+            None => {
+                self.scalar_columns.push(name.to_string());
+                self.scalar_columns.len() - 1
+            }
+        }
+    }
+}
+
+/// The full execution plan for one skim job.
+#[derive(Debug, Clone)]
+pub struct SkimPlan {
+    /// Branches written to the output file (schema order).
+    pub output_branches: Vec<String>,
+    /// Branches read in phase 1 to evaluate the selection.
+    pub criteria_branches: Vec<String>,
+    /// Output branches *not* needed for filtering — fetched in phase 2,
+    /// only for events that passed.
+    pub output_only_branches: Vec<String>,
+    pub program: CutProgram,
+    pub warnings: Vec<String>,
+}
+
+impl SkimPlan {
+    /// Build a plan: expand patterns, validate branches against the
+    /// schema, compile the cut program.
+    pub fn build(query: &SkimQuery, meta: &FileMeta) -> Result<SkimPlan> {
+        let schema: Vec<&str> = meta.branch_names().collect();
+        let expansion = wildcard::expand(&query.branches, &schema, query.force_all);
+        let mut warnings = expansion.warnings;
+        if expansion.selected.is_empty() {
+            return Err(Error::query("no output branches selected"));
+        }
+
+        // --- validate + compile the selection --------------------------
+        let mut program = CutProgram::default();
+
+        let require = |name: &str, kind: BranchKind| -> Result<DType> {
+            let b = meta
+                .branch(name)
+                .ok_or_else(|| Error::query(format!("selection references unknown branch '{name}'")))?;
+            if b.desc.kind != kind {
+                return Err(Error::query(format!(
+                    "branch '{name}' is {:?}, expected {:?}",
+                    b.desc.kind, kind
+                )));
+            }
+            Ok(b.desc.dtype)
+        };
+
+        for cut in &query.selection.preselection {
+            require(&cut.branch, BranchKind::Scalar)?;
+            let col = program.scalar_col(&cut.branch);
+            let (op, abs) = cut.op.code();
+            program.scalar_cuts.push(ScalarCutParam { col, op, abs, value: cut.value as f32 });
+        }
+
+        for sel in &query.selection.objects {
+            let start = program.obj_cuts.len();
+            for cut in &sel.cuts {
+                let dtype = require(&cut.var, BranchKind::Jagged)?;
+                if dtype != DType::F32 {
+                    return Err(Error::query(format!(
+                        "object cut variable '{}' must be f32 (got {})",
+                        cut.var,
+                        dtype.name()
+                    )));
+                }
+                let col = program.obj_col(&cut.var);
+                let (op, abs) = cut.op.code();
+                program.obj_cuts.push(ObjCutParam { col, op, abs, value: cut.value as f32 });
+            }
+            program.groups.push(ObjGroup {
+                collection: sel.collection.clone(),
+                cut_range: start..program.obj_cuts.len(),
+                min_count: sel.min_count,
+            });
+        }
+
+        if let Some(ht) = &query.selection.event.ht {
+            let dtype = require(&ht.jet_pt, BranchKind::Jagged)?;
+            if dtype != DType::F32 {
+                return Err(Error::query("HT jet_pt branch must be f32"));
+            }
+            let col = program.obj_col(&ht.jet_pt);
+            program.ht = Some(HtParam {
+                col,
+                object_pt_min: ht.object_pt_min as f32,
+                min_ht: ht.min as f32,
+            });
+        }
+
+        for trig in &query.selection.event.triggers_any {
+            require(trig, BranchKind::Scalar)?;
+            let col = program.scalar_col(trig);
+            program.triggers.push(col);
+        }
+
+        // --- two-phase branch split ------------------------------------
+        let criteria = query.selection.referenced_branches();
+        for c in &criteria {
+            // Criteria branches must exist even if not in the output.
+            if meta.branch(c).is_none() {
+                return Err(Error::query(format!("criteria branch '{c}' not in file")));
+            }
+        }
+        let output_only: Vec<String> = expansion
+            .selected
+            .iter()
+            .filter(|b| !criteria.contains(b))
+            .cloned()
+            .collect();
+
+        if !program.fits_kernel() {
+            warnings.push(format!(
+                "cut program exceeds AOT kernel capacity ({} obj cols, {} obj cuts): \
+                 vectorized path unavailable, scalar interpreter will be used",
+                program.obj_columns.len(),
+                program.obj_cuts.len()
+            ));
+        }
+
+        Ok(SkimPlan {
+            output_branches: expansion.selected,
+            criteria_branches: criteria,
+            output_only_branches: output_only,
+            program,
+            warnings,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::troot::{BranchDesc, BranchMeta, FileMeta};
+
+    fn meta() -> FileMeta {
+        let mk_scalar = |n: &str, d| BranchMeta {
+            desc: BranchDesc::scalar(n, d),
+            baskets: vec![],
+        };
+        let mk_jagged = |n: &str, g: &str| BranchMeta {
+            desc: BranchDesc::jagged(n, DType::F32, g),
+            baskets: vec![],
+        };
+        FileMeta {
+            n_events: 0,
+            codec: crate::compress::Codec::Lz4,
+            basket_events: 1000,
+            branches: vec![
+                mk_scalar("nElectron", DType::I32),
+                mk_jagged("Electron_pt", "Electron"),
+                mk_jagged("Electron_eta", "Electron"),
+                mk_jagged("Muon_pt", "Muon"),
+                mk_jagged("Jet_pt", "Jet"),
+                mk_scalar("MET_pt", DType::F32),
+                mk_scalar("HLT_IsoMu24", DType::U8),
+                mk_scalar("HLT_Ele32_WPTight", DType::U8),
+                mk_scalar("HLT_Rare_v1", DType::U8),
+                mk_scalar("run", DType::I64),
+            ],
+        }
+    }
+
+    fn query(text: &str) -> SkimQuery {
+        SkimQuery::from_json_text(text).unwrap()
+    }
+
+    const Q: &str = r#"{
+        "input": "f.troot", "output": "o.troot",
+        "branches": ["Electron_*", "Jet_pt", "MET_pt", "HLT_*", "run"],
+        "selection": {
+            "preselection": [ {"branch": "nElectron", "op": ">=", "value": 1} ],
+            "objects": [
+                { "collection": "Electron", "min_count": 1, "cuts": [
+                    {"var": "Electron_pt",  "op": ">",   "value": 25.0},
+                    {"var": "Electron_eta", "op": "|<|", "value": 2.4} ] }
+            ],
+            "event": {
+                "ht": {"jet_pt": "Jet_pt", "object_pt_min": 30.0, "min": 200.0},
+                "triggers_any": ["HLT_IsoMu24"]
+            }
+        }
+    }"#;
+
+    #[test]
+    fn two_phase_split() {
+        let plan = SkimPlan::build(&query(Q), &meta()).unwrap();
+        // Criteria = what the selection reads.
+        assert_eq!(
+            plan.criteria_branches,
+            vec!["nElectron", "Electron_pt", "Electron_eta", "Jet_pt", "HLT_IsoMu24"]
+        );
+        // Output-only = selected minus criteria.
+        for b in ["MET_pt", "HLT_Ele32_WPTight", "run"] {
+            assert!(plan.output_only_branches.iter().any(|x| x == b), "missing {b}");
+        }
+        assert!(!plan.output_only_branches.iter().any(|x| x == "Electron_pt"));
+        // Curated mapping dropped HLT_Rare_v1.
+        assert!(!plan.output_branches.iter().any(|x| x == "HLT_Rare_v1"));
+        assert!(plan.warnings.iter().any(|w| w.contains("curated")));
+    }
+
+    #[test]
+    fn program_compilation() {
+        let plan = SkimPlan::build(&query(Q), &meta()).unwrap();
+        let p = &plan.program;
+        assert_eq!(p.obj_columns, vec!["Electron_pt", "Electron_eta", "Jet_pt"]);
+        assert_eq!(p.scalar_columns, vec!["nElectron", "HLT_IsoMu24"]);
+        assert_eq!(p.obj_cuts.len(), 2);
+        assert_eq!(p.obj_cuts[0], ObjCutParam { col: 0, op: 0, abs: false, value: 25.0 });
+        assert_eq!(p.obj_cuts[1], ObjCutParam { col: 1, op: 2, abs: true, value: 2.4 });
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].cut_range, 0..2);
+        let ht = p.ht.as_ref().unwrap();
+        assert_eq!(ht.col, 2);
+        assert_eq!(ht.min_ht, 200.0);
+        assert_eq!(p.triggers, vec![1]);
+        assert!(p.fits_kernel());
+    }
+
+    #[test]
+    fn unknown_branch_rejected() {
+        let bad = Q.replace("nElectron", "nTau");
+        assert!(SkimPlan::build(&query(&bad), &meta()).is_err());
+    }
+
+    #[test]
+    fn kind_mismatch_rejected() {
+        // MET_pt is scalar; using it as an object cut must fail.
+        let bad = r#"{
+            "input": "f", "output": "o", "branches": ["*"],
+            "selection": {"objects": [{"collection": "MET", "cuts": [
+                {"var": "MET_pt", "op": ">", "value": 1}]}]}
+        }"#;
+        assert!(SkimPlan::build(&query(bad), &meta()).is_err());
+    }
+
+    #[test]
+    fn empty_selection_is_copy_all() {
+        let q = query(r#"{"input": "f", "output": "o", "branches": ["Electron_*"]}"#);
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        assert!(plan.criteria_branches.is_empty());
+        assert_eq!(plan.output_only_branches, plan.output_branches);
+        assert!(plan.program.fits_kernel());
+    }
+
+    #[test]
+    fn no_matching_branches_is_error() {
+        let q = query(r#"{"input": "f", "output": "o", "branches": ["Tau_*"]}"#);
+        assert!(SkimPlan::build(&q, &meta()).is_err());
+    }
+
+    #[test]
+    fn oversized_program_warns_not_fails() {
+        // 13 distinct object columns > KERNEL_MAX_OBJ_COLS.
+        let mut branches = String::new();
+        let mut cuts = String::new();
+        for i in 0..13 {
+            if i > 0 {
+                cuts.push(',');
+            }
+            cuts.push_str(&format!(
+                r#"{{"var": "Jet_v{i}", "op": ">", "value": 1}}"#
+            ));
+            branches.push_str(&format!(r#","Jet_v{i}""#));
+        }
+        let text = format!(
+            r#"{{"input": "f", "output": "o", "branches": ["Jet_pt"{branches}],
+                "selection": {{"objects": [{{"collection": "Jet", "cuts": [{cuts}]}}]}}}}"#
+        );
+        let mut m = meta();
+        for i in 0..13 {
+            m.branches.push(BranchMeta {
+                desc: BranchDesc::jagged(format!("Jet_v{i}"), DType::F32, "Jet"),
+                baskets: vec![],
+            });
+        }
+        let plan = SkimPlan::build(&query(&text), &m).unwrap();
+        assert!(!plan.program.fits_kernel());
+        assert!(plan.warnings.iter().any(|w| w.contains("interpreter")));
+    }
+}

@@ -1,0 +1,222 @@
+//! Branch pattern expansion + the curated `HLT_*` optimization (§3.1).
+//!
+//! Users select output branches with glob patterns (`Electron_*`,
+//! `HLT_*`). The paper observes that `HLT_*` expands to 650+ trigger
+//! flags while analyses typically use fewer than 23 — so SkimROOT maps
+//! broad trigger wildcards to a curated minimal set (based on usage
+//! statistics), logging a warning with the count of excluded branches.
+//! `"force_all": true` disables the mapping.
+
+/// The curated trigger set: the paper's "fewer than 23 specific
+/// triggers" that CMS analyses actually read. (Representative Run-3
+//  single-lepton / MET / jet paths.)
+pub const CURATED_TRIGGERS: [&str; 23] = [
+    "HLT_IsoMu24",
+    "HLT_IsoMu27",
+    "HLT_Mu50",
+    "HLT_Ele27_WPTight",
+    "HLT_Ele32_WPTight",
+    "HLT_Ele35_WPTight",
+    "HLT_Photon200",
+    "HLT_PFMET120_PFMHT120",
+    "HLT_PFMETNoMu120_PFMHTNoMu120",
+    "HLT_PFHT1050",
+    "HLT_PFJet500",
+    "HLT_AK8PFJet400_TrimMass30",
+    "HLT_DoubleEle25_CaloIdL_MW",
+    "HLT_Mu17_TrkIsoVVL_Mu8_TrkIsoVVL_DZ_Mass3p8",
+    "HLT_Mu23_TrkIsoVVL_Ele12_CaloIdL_TrackIdL_IsoVL",
+    "HLT_Mu8_TrkIsoVVL_Ele23_CaloIdL_TrackIdL_IsoVL_DZ",
+    "HLT_DoublePFJets40_CaloBTagDeepCSV",
+    "HLT_QuadPFJet70_50_40_30",
+    "HLT_TripleMu_12_10_5",
+    "HLT_BTagMu_AK4DiJet40_Mu5",
+    "HLT_MET105_IsoTrk50",
+    "HLT_TkMu100",
+    "HLT_OldMu100",
+];
+
+/// Glob match: `*` = any run (incl. empty), `?` = one character.
+/// Iterative two-pointer algorithm — no recursion, no blowup.
+pub fn glob_match(pattern: &str, name: &str) -> bool {
+    let p: Vec<char> = pattern.chars().collect();
+    let n: Vec<char> = name.chars().collect();
+    let (mut pi, mut ni) = (0usize, 0usize);
+    let mut star: Option<(usize, usize)> = None; // (pattern idx after *, name idx)
+    while ni < n.len() {
+        if pi < p.len() && (p[pi] == '?' || p[pi] == n[ni]) {
+            pi += 1;
+            ni += 1;
+        } else if pi < p.len() && p[pi] == '*' {
+            star = Some((pi + 1, ni));
+            pi += 1;
+        } else if let Some((sp, sn)) = star {
+            pi = sp;
+            ni = sn + 1;
+            star = Some((sp, sn + 1));
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+/// Is a pattern a "broad trigger wildcard" that the curated mapping
+/// applies to? (`HLT_*` and equally-broad prefixes like `HLT_*Mu*`.)
+fn is_broad_hlt(pattern: &str) -> bool {
+    pattern.starts_with("HLT_") && pattern.contains('*')
+}
+
+/// Result of expanding a query's branch patterns against a schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Expansion {
+    /// Branch names to keep in the output, in schema order.
+    pub selected: Vec<String>,
+    /// Human-readable warnings (curated-set exclusions, unmatched
+    /// patterns) — the §3.1 "logs a warning for any missing branches".
+    pub warnings: Vec<String>,
+}
+
+/// Expand `patterns` against `schema` (the file's branch names).
+///
+/// With `force_all == false`, broad `HLT_*` wildcards are mapped to the
+/// intersection of [`CURATED_TRIGGERS`] with the schema; the number of
+/// branches excluded by the optimization is reported as a warning.
+pub fn expand(patterns: &[String], schema: &[&str], force_all: bool) -> Expansion {
+    let mut keep = vec![false; schema.len()];
+    let mut warnings = Vec::new();
+
+    for pat in patterns {
+        let mut matched = 0usize;
+        if !force_all && is_broad_hlt(pat) {
+            // Curated mapping: only usage-backed triggers survive.
+            let full_count = schema.iter().filter(|n| glob_match(pat, n)).count();
+            for (i, name) in schema.iter().enumerate() {
+                if glob_match(pat, name) && CURATED_TRIGGERS.contains(name) {
+                    keep[i] = true;
+                    matched += 1;
+                }
+            }
+            if full_count > matched {
+                warnings.push(format!(
+                    "pattern '{pat}': curated trigger mapping kept {matched} of {full_count} \
+                     matching branches ({} excluded; set \"force_all\": true to keep all)",
+                    full_count - matched
+                ));
+            }
+        } else {
+            for (i, name) in schema.iter().enumerate() {
+                if glob_match(pat, name) {
+                    keep[i] = true;
+                    matched += 1;
+                }
+            }
+        }
+        if matched == 0 {
+            warnings.push(format!("pattern '{pat}' matched no branches"));
+        }
+    }
+
+    let selected = schema
+        .iter()
+        .zip(&keep)
+        .filter(|(_, &k)| k)
+        .map(|(n, _)| n.to_string())
+        .collect();
+    Expansion { selected, warnings }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glob_basics() {
+        assert!(glob_match("Electron_*", "Electron_pt"));
+        assert!(glob_match("Electron_*", "Electron_"));
+        assert!(!glob_match("Electron_*", "Muon_pt"));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("*_pt", "Jet_pt"));
+        assert!(glob_match("J?t_pt", "Jet_pt"));
+        assert!(!glob_match("J?t_pt", "Jett_pt"));
+        assert!(glob_match("*Mu*", "HLT_IsoMu24"));
+        assert!(glob_match("exact", "exact"));
+        assert!(!glob_match("exact", "exactly"));
+        assert!(glob_match("a*b*c", "aXXbYYc"));
+        assert!(!glob_match("a*b*c", "aXXbYY"));
+        assert!(glob_match("", ""));
+        assert!(!glob_match("", "x"));
+        assert!(glob_match("**", "x"));
+    }
+
+    fn schema() -> Vec<&'static str> {
+        vec![
+            "nElectron",
+            "Electron_pt",
+            "Electron_eta",
+            "Muon_pt",
+            "Jet_pt",
+            "MET_pt",
+            "HLT_IsoMu24",
+            "HLT_Ele32_WPTight",
+            "HLT_Obscure_Path_v3",
+            "HLT_AnotherRare_v7",
+        ]
+    }
+
+    #[test]
+    fn plain_patterns_expand() {
+        let e = expand(
+            &["Electron_*".to_string(), "MET_pt".to_string()],
+            &schema(),
+            false,
+        );
+        assert_eq!(e.selected, vec!["Electron_pt", "Electron_eta", "MET_pt"]);
+        assert!(e.warnings.is_empty());
+    }
+
+    #[test]
+    fn curated_hlt_mapping() {
+        let e = expand(&["HLT_*".to_string()], &schema(), false);
+        // Only the curated triggers present in the schema survive.
+        assert_eq!(e.selected, vec!["HLT_IsoMu24", "HLT_Ele32_WPTight"]);
+        assert_eq!(e.warnings.len(), 1);
+        assert!(e.warnings[0].contains("2 excluded"), "{}", e.warnings[0]);
+    }
+
+    #[test]
+    fn force_all_keeps_everything() {
+        let e = expand(&["HLT_*".to_string()], &schema(), true);
+        assert_eq!(e.selected.len(), 4);
+        assert!(e.warnings.is_empty());
+    }
+
+    #[test]
+    fn unmatched_pattern_warns() {
+        let e = expand(&["Tau_*".to_string()], &schema(), false);
+        assert!(e.selected.is_empty());
+        assert_eq!(e.warnings.len(), 1);
+        assert!(e.warnings[0].contains("matched no branches"));
+    }
+
+    #[test]
+    fn order_is_schema_order_and_deduplicated() {
+        let e = expand(
+            &["*_pt".to_string(), "Electron_*".to_string()],
+            &schema(),
+            false,
+        );
+        assert_eq!(
+            e.selected,
+            vec!["Electron_pt", "Electron_eta", "Muon_pt", "Jet_pt", "MET_pt"]
+        );
+    }
+
+    #[test]
+    fn curated_list_size_matches_paper() {
+        assert_eq!(CURATED_TRIGGERS.len(), 23);
+    }
+}

@@ -1,0 +1,427 @@
+//! `troot` — a ROOT-like columnar event file format (the storage
+//! substrate of §2.1).
+//!
+//! Mirrors the structural properties of ROOT's `TTree` that drive
+//! skimming performance:
+//!
+//! * **columnar**: each *branch* (column) stores one particle property;
+//! * **baskets**: consecutive entries of a branch are grouped and
+//!   compressed into baskets — the unit of I/O and decompression;
+//! * **first-event-index array**: per branch, the starting event id of
+//!   every basket, so event → basket lookup is a binary search;
+//! * **event offset array**: jagged baskets carry per-event offsets so
+//!   an event's slice is directly addressable after decompression;
+//! * **cluster-interleaved layout**: baskets of different branches for
+//!   the same event range are written adjacently (as ROOT does), so
+//!   reading *one* branch across events touches *non-contiguous* file
+//!   regions — the access pattern TTreeCache exists to batch;
+//! * **self-describing metadata**: a footer holds the schema (branch
+//!   names, types, jaggedness, basket index) read at `open()`.
+//!
+//! File layout:
+//!
+//! ```text
+//! [ 8B magic "TROOTv1\0" ]
+//! [ basket frames ... (cluster-interleaved, each a compress::frame) ]
+//! [ metadata block ]
+//! [ 16B trailer: u64 metadata offset, 8B magic ]
+//! ```
+
+pub mod basket;
+pub mod reader;
+pub mod writer;
+
+pub use basket::DecodedBasket;
+pub use reader::{LocalFile, ReadAt, TRootReader};
+pub use writer::TRootWriter;
+
+use crate::{Error, Result};
+
+pub const MAGIC: &[u8; 8] = b"TROOTv1\0";
+pub const TRAILER_LEN: usize = 16;
+
+/// Element type of a branch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+    I64,
+    /// Booleans and trigger flags (stored as one byte, 0/1).
+    U8,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 | DType::I64 => 8,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn id(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F64 => 1,
+            DType::I32 => 2,
+            DType::I64 => 3,
+            DType::U8 => 4,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Result<DType> {
+        Ok(match id {
+            0 => DType::F32,
+            1 => DType::F64,
+            2 => DType::I32,
+            3 => DType::I64,
+            4 => DType::U8,
+            _ => return Err(Error::format(format!("unknown dtype id {id}"))),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::U8 => "u8",
+        }
+    }
+}
+
+/// Scalar (one value per event) vs jagged (variable-length vector per
+/// event, e.g. `Electron_pt` for all electrons in the event).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchKind {
+    Scalar,
+    Jagged,
+}
+
+/// Static description of one branch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BranchDesc {
+    /// NanoAOD-style name, e.g. `Electron_pt`, `HLT_IsoMu24`, `nJet`.
+    pub name: String,
+    pub dtype: DType,
+    pub kind: BranchKind,
+    /// Collection prefix for jagged branches (`Electron`, `Jet`, ...);
+    /// empty for scalars. Jagged branches in the same group share their
+    /// per-event multiplicity.
+    pub group: String,
+}
+
+impl BranchDesc {
+    pub fn scalar(name: impl Into<String>, dtype: DType) -> Self {
+        BranchDesc { name: name.into(), dtype, kind: BranchKind::Scalar, group: String::new() }
+    }
+
+    pub fn jagged(name: impl Into<String>, dtype: DType, group: impl Into<String>) -> Self {
+        BranchDesc { name: name.into(), dtype, kind: BranchKind::Jagged, group: group.into() }
+    }
+}
+
+/// Location + extent of one basket within the file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BasketInfo {
+    /// Absolute file offset of the compressed frame.
+    pub offset: u64,
+    /// Compressed frame length in bytes.
+    pub comp_len: u32,
+    /// Raw (decompressed) payload length in bytes.
+    pub raw_len: u32,
+    /// First event id stored in this basket (the per-branch
+    /// "first event index array" of §2.1 is the vector of these).
+    pub first_event: u64,
+    /// Number of events in this basket.
+    pub n_events: u32,
+}
+
+/// A branch plus its basket index, as recorded in file metadata.
+#[derive(Debug, Clone)]
+pub struct BranchMeta {
+    pub desc: BranchDesc,
+    pub baskets: Vec<BasketInfo>,
+}
+
+impl BranchMeta {
+    /// Index of the basket containing `event` (binary search over the
+    /// first-event-index array).
+    pub fn basket_for_event(&self, event: u64) -> Option<usize> {
+        if self.baskets.is_empty() {
+            return None;
+        }
+        let idx = match self.baskets.binary_search_by_key(&event, |b| b.first_event) {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let b = &self.baskets[idx];
+        if event < b.first_event + b.n_events as u64 {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    /// Indices of baskets overlapping the event range `[lo, hi)`.
+    pub fn baskets_for_range(&self, lo: u64, hi: u64) -> std::ops::Range<usize> {
+        if lo >= hi || self.baskets.is_empty() {
+            return 0..0;
+        }
+        let start = match self.baskets.binary_search_by_key(&lo, |b| b.first_event) {
+            Ok(i) => i,
+            Err(0) => 0,
+            Err(i) => {
+                let prev = &self.baskets[i - 1];
+                if lo < prev.first_event + prev.n_events as u64 {
+                    i - 1
+                } else {
+                    i
+                }
+            }
+        };
+        let end = match self.baskets.binary_search_by_key(&hi, |b| b.first_event) {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        start..end.max(start)
+    }
+
+    pub fn total_comp_bytes(&self) -> u64 {
+        self.baskets.iter().map(|b| b.comp_len as u64).sum()
+    }
+
+    pub fn total_raw_bytes(&self) -> u64 {
+        self.baskets.iter().map(|b| b.raw_len as u64).sum()
+    }
+}
+
+/// Whole-file metadata (the "header" of §2.1; physically a footer).
+#[derive(Debug, Clone)]
+pub struct FileMeta {
+    pub n_events: u64,
+    pub codec: crate::compress::Codec,
+    /// Events per basket (cluster size).
+    pub basket_events: u32,
+    pub branches: Vec<BranchMeta>,
+}
+
+impl FileMeta {
+    pub fn branch(&self, name: &str) -> Option<&BranchMeta> {
+        self.branches.iter().find(|b| b.desc.name == name)
+    }
+
+    pub fn branch_index(&self, name: &str) -> Option<usize> {
+        self.branches.iter().position(|b| b.desc.name == name)
+    }
+
+    pub fn branch_names(&self) -> impl Iterator<Item = &str> {
+        self.branches.iter().map(|b| b.desc.name.as_str())
+    }
+}
+
+/// In-memory column values (input to the writer, output of the reader).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ColumnValues {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    U8(Vec<u8>),
+}
+
+impl ColumnValues {
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnValues::F32(v) => v.len(),
+            ColumnValues::F64(v) => v.len(),
+            ColumnValues::I32(v) => v.len(),
+            ColumnValues::I64(v) => v.len(),
+            ColumnValues::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            ColumnValues::F32(_) => DType::F32,
+            ColumnValues::F64(_) => DType::F64,
+            ColumnValues::I32(_) => DType::I32,
+            ColumnValues::I64(_) => DType::I64,
+            ColumnValues::U8(_) => DType::U8,
+        }
+    }
+
+    pub fn empty(dtype: DType) -> Self {
+        match dtype {
+            DType::F32 => ColumnValues::F32(Vec::new()),
+            DType::F64 => ColumnValues::F64(Vec::new()),
+            DType::I32 => ColumnValues::I32(Vec::new()),
+            DType::I64 => ColumnValues::I64(Vec::new()),
+            DType::U8 => ColumnValues::U8(Vec::new()),
+        }
+    }
+
+    /// Value at `i` converted to f64 (uniform access for the scalar
+    /// interpreter; typed access is via the enum arms).
+    pub fn get_as_f64(&self, i: usize) -> f64 {
+        match self {
+            ColumnValues::F32(v) => v[i] as f64,
+            ColumnValues::F64(v) => v[i],
+            ColumnValues::I32(v) => v[i] as f64,
+            ColumnValues::I64(v) => v[i] as f64,
+            ColumnValues::U8(v) => v[i] as f64,
+        }
+    }
+
+    /// Append element `i` of `src` (same variant) to `self`.
+    pub fn push_from(&mut self, src: &ColumnValues, i: usize) {
+        match (self, src) {
+            (ColumnValues::F32(d), ColumnValues::F32(s)) => d.push(s[i]),
+            (ColumnValues::F64(d), ColumnValues::F64(s)) => d.push(s[i]),
+            (ColumnValues::I32(d), ColumnValues::I32(s)) => d.push(s[i]),
+            (ColumnValues::I64(d), ColumnValues::I64(s)) => d.push(s[i]),
+            (ColumnValues::U8(d), ColumnValues::U8(s)) => d.push(s[i]),
+            _ => panic!("push_from: dtype mismatch"),
+        }
+    }
+
+    /// Append a sub-range of `src` (same variant) to `self`.
+    pub fn extend_from_range(&mut self, src: &ColumnValues, range: std::ops::Range<usize>) {
+        match (self, src) {
+            (ColumnValues::F32(d), ColumnValues::F32(s)) => d.extend_from_slice(&s[range]),
+            (ColumnValues::F64(d), ColumnValues::F64(s)) => d.extend_from_slice(&s[range]),
+            (ColumnValues::I32(d), ColumnValues::I32(s)) => d.extend_from_slice(&s[range]),
+            (ColumnValues::I64(d), ColumnValues::I64(s)) => d.extend_from_slice(&s[range]),
+            (ColumnValues::U8(d), ColumnValues::U8(s)) => d.extend_from_slice(&s[range]),
+            _ => panic!("extend_from_range: dtype mismatch"),
+        }
+    }
+}
+
+/// A full column: scalar values or jagged values with per-event offsets.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ColumnData {
+    Scalar(ColumnValues),
+    /// `offsets.len() == n_events + 1`; event `i` owns
+    /// `values[offsets[i]..offsets[i+1]]`.
+    Jagged { offsets: Vec<u32>, values: ColumnValues },
+}
+
+impl ColumnData {
+    pub fn n_events(&self) -> usize {
+        match self {
+            ColumnData::Scalar(v) => v.len(),
+            ColumnData::Jagged { offsets, .. } => offsets.len().saturating_sub(1),
+        }
+    }
+
+    pub fn kind(&self) -> BranchKind {
+        match self {
+            ColumnData::Scalar(_) => BranchKind::Scalar,
+            ColumnData::Jagged { .. } => BranchKind::Jagged,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            ColumnData::Scalar(v) => v.dtype(),
+            ColumnData::Jagged { values, .. } => values.dtype(),
+        }
+    }
+
+    /// Build a jagged column from per-event vectors of f32.
+    pub fn jagged_f32(per_event: &[Vec<f32>]) -> Self {
+        let mut offsets = Vec::with_capacity(per_event.len() + 1);
+        let mut values = Vec::new();
+        offsets.push(0u32);
+        for ev in per_event {
+            values.extend_from_slice(ev);
+            offsets.push(values.len() as u32);
+        }
+        ColumnData::Jagged { offsets, values: ColumnValues::F32(values) }
+    }
+
+    pub fn scalar_f32(values: Vec<f32>) -> Self {
+        ColumnData::Scalar(ColumnValues::F32(values))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_with_baskets(firsts_and_counts: &[(u64, u32)]) -> BranchMeta {
+        BranchMeta {
+            desc: BranchDesc::scalar("b", DType::F32),
+            baskets: firsts_and_counts
+                .iter()
+                .map(|&(first_event, n_events)| BasketInfo {
+                    offset: 0,
+                    comp_len: 1,
+                    raw_len: 1,
+                    first_event,
+                    n_events,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn basket_for_event_binary_search() {
+        let m = meta_with_baskets(&[(0, 100), (100, 100), (200, 50)]);
+        assert_eq!(m.basket_for_event(0), Some(0));
+        assert_eq!(m.basket_for_event(99), Some(0));
+        assert_eq!(m.basket_for_event(100), Some(1));
+        assert_eq!(m.basket_for_event(199), Some(1));
+        assert_eq!(m.basket_for_event(200), Some(2));
+        assert_eq!(m.basket_for_event(249), Some(2));
+        assert_eq!(m.basket_for_event(250), None);
+        assert_eq!(m.basket_for_event(9999), None);
+    }
+
+    #[test]
+    fn baskets_for_range_spans() {
+        let m = meta_with_baskets(&[(0, 100), (100, 100), (200, 50)]);
+        assert_eq!(m.baskets_for_range(0, 250), 0..3);
+        assert_eq!(m.baskets_for_range(50, 150), 0..2);
+        assert_eq!(m.baskets_for_range(100, 101), 1..2);
+        assert_eq!(m.baskets_for_range(99, 100), 0..1);
+        assert_eq!(m.baskets_for_range(10, 10), 0..0);
+        assert_eq!(m.baskets_for_range(200, 500), 2..3);
+    }
+
+    #[test]
+    fn empty_branch_lookups() {
+        let m = meta_with_baskets(&[]);
+        assert_eq!(m.basket_for_event(0), None);
+        assert_eq!(m.baskets_for_range(0, 10), 0..0);
+    }
+
+    #[test]
+    fn jagged_from_per_event() {
+        let col = ColumnData::jagged_f32(&[vec![1.0, 2.0], vec![], vec![3.0]]);
+        match &col {
+            ColumnData::Jagged { offsets, values } => {
+                assert_eq!(offsets, &[0, 2, 2, 3]);
+                assert_eq!(values.len(), 3);
+            }
+            _ => unreachable!(),
+        }
+        assert_eq!(col.n_events(), 3);
+    }
+
+    #[test]
+    fn dtype_roundtrip_ids() {
+        for d in [DType::F32, DType::F64, DType::I32, DType::I64, DType::U8] {
+            assert_eq!(DType::from_id(d.id()).unwrap(), d);
+        }
+        assert!(DType::from_id(99).is_err());
+    }
+}

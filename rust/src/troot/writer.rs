@@ -1,0 +1,283 @@
+//! `troot` file writer.
+//!
+//! Buffers whole columns, then writes baskets **cluster-interleaved**:
+//! for every event range of `basket_events`, one basket per branch (in
+//! schema order) before moving to the next range — the layout ROOT
+//! produces as events stream in, and the reason per-branch reads are
+//! non-contiguous on disk.
+
+use super::{basket, BranchDesc, BranchMeta, BasketInfo, ColumnData, FileMeta, MAGIC};
+use crate::compress::{self, Codec};
+use crate::{Error, Result};
+use std::io::Write;
+
+/// Writer for a single troot file.
+pub struct TRootWriter {
+    path: std::path::PathBuf,
+    codec: Codec,
+    basket_events: u32,
+    columns: Vec<(BranchDesc, ColumnData)>,
+    n_events: Option<u64>,
+}
+
+/// Summary returned by [`TRootWriter::finalize`].
+#[derive(Debug, Clone)]
+pub struct WriteSummary {
+    pub n_events: u64,
+    pub n_branches: usize,
+    pub n_baskets: usize,
+    pub raw_bytes: u64,
+    pub file_bytes: u64,
+}
+
+impl WriteSummary {
+    pub fn compression_ratio(&self) -> f64 {
+        if self.file_bytes == 0 {
+            return 0.0;
+        }
+        self.raw_bytes as f64 / self.file_bytes as f64
+    }
+}
+
+impl TRootWriter {
+    pub fn new(path: impl Into<std::path::PathBuf>, codec: Codec, basket_events: u32) -> Self {
+        assert!(basket_events > 0, "basket_events must be positive");
+        TRootWriter {
+            path: path.into(),
+            codec,
+            basket_events,
+            columns: Vec::new(),
+            n_events: None,
+        }
+    }
+
+    /// Add a branch with its full column. All branches must agree on the
+    /// event count; jagged descriptors must carry a non-empty group.
+    pub fn add_branch(&mut self, desc: BranchDesc, data: ColumnData) -> Result<()> {
+        if desc.kind != data.kind() {
+            return Err(Error::format(format!(
+                "branch {}: descriptor kind {:?} != data kind {:?}",
+                desc.name,
+                desc.kind,
+                data.kind()
+            )));
+        }
+        if desc.dtype != data.dtype() {
+            return Err(Error::format(format!(
+                "branch {}: descriptor dtype {:?} != data dtype {:?}",
+                desc.name, desc.dtype,
+                data.dtype()
+            )));
+        }
+        if desc.kind == super::BranchKind::Jagged && desc.group.is_empty() {
+            return Err(Error::format(format!(
+                "jagged branch {} must declare a collection group",
+                desc.name
+            )));
+        }
+        if self.columns.iter().any(|(d, _)| d.name == desc.name) {
+            return Err(Error::format(format!("duplicate branch {}", desc.name)));
+        }
+        let n = data.n_events() as u64;
+        match self.n_events {
+            None => self.n_events = Some(n),
+            Some(prev) if prev != n => {
+                return Err(Error::format(format!(
+                    "branch {} has {n} events, file has {prev}",
+                    desc.name
+                )))
+            }
+            _ => {}
+        }
+        self.columns.push((desc, data));
+        Ok(())
+    }
+
+    /// Write the file: magic, cluster-interleaved baskets, metadata,
+    /// trailer. Consumes the writer.
+    pub fn finalize(self) -> Result<WriteSummary> {
+        let n_events = self.n_events.unwrap_or(0);
+        let file = std::fs::File::create(&self.path)?;
+        let mut w = std::io::BufWriter::new(file);
+        w.write_all(MAGIC)?;
+        let mut offset = MAGIC.len() as u64;
+
+        let mut metas: Vec<BranchMeta> = self
+            .columns
+            .iter()
+            .map(|(desc, _)| BranchMeta { desc: desc.clone(), baskets: Vec::new() })
+            .collect();
+
+        let mut raw_bytes = 0u64;
+        let mut n_baskets = 0usize;
+        let mut lo = 0u64;
+        while lo < n_events {
+            let hi = (lo + self.basket_events as u64).min(n_events);
+            for (bi, (_, data)) in self.columns.iter().enumerate() {
+                let raw = basket::encode(data, lo as usize, hi as usize);
+                let frame = compress::compress(self.codec, &raw);
+                w.write_all(&frame)?;
+                metas[bi].baskets.push(BasketInfo {
+                    offset,
+                    comp_len: frame.len() as u32,
+                    raw_len: raw.len() as u32,
+                    first_event: lo,
+                    n_events: (hi - lo) as u32,
+                });
+                offset += frame.len() as u64;
+                raw_bytes += raw.len() as u64;
+                n_baskets += 1;
+            }
+            lo = hi;
+        }
+
+        let meta = FileMeta {
+            n_events,
+            codec: self.codec,
+            basket_events: self.basket_events,
+            branches: metas,
+        };
+        let meta_offset = offset;
+        let meta_bytes = encode_meta(&meta);
+        w.write_all(&meta_bytes)?;
+        w.write_all(&meta_offset.to_le_bytes())?;
+        w.write_all(MAGIC)?;
+        w.flush()?;
+
+        let file_bytes = meta_offset + meta_bytes.len() as u64 + super::TRAILER_LEN as u64;
+        Ok(WriteSummary {
+            n_events,
+            n_branches: meta.branches.len(),
+            n_baskets,
+            raw_bytes,
+            file_bytes,
+        })
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    assert!(b.len() <= u16::MAX as usize, "string too long for metadata");
+    out.extend_from_slice(&(b.len() as u16).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+/// Serialize file metadata (compressed with zlib: metadata for ~1750
+/// branches × many baskets is itself megabytes, and ROOT compresses its
+/// streamer/key info too).
+pub fn encode_meta(meta: &FileMeta) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&1u32.to_le_bytes()); // version
+    out.extend_from_slice(&meta.n_events.to_le_bytes());
+    out.push(meta.codec.id());
+    out.extend_from_slice(&meta.basket_events.to_le_bytes());
+    out.extend_from_slice(&(meta.branches.len() as u32).to_le_bytes());
+    for b in &meta.branches {
+        put_str(&mut out, &b.desc.name);
+        out.push(b.desc.dtype.id());
+        out.push(match b.desc.kind {
+            super::BranchKind::Scalar => 0,
+            super::BranchKind::Jagged => 1,
+        });
+        put_str(&mut out, &b.desc.group);
+        out.extend_from_slice(&(b.baskets.len() as u32).to_le_bytes());
+        for k in &b.baskets {
+            out.extend_from_slice(&k.offset.to_le_bytes());
+            out.extend_from_slice(&k.comp_len.to_le_bytes());
+            out.extend_from_slice(&k.raw_len.to_le_bytes());
+            out.extend_from_slice(&k.first_event.to_le_bytes());
+            out.extend_from_slice(&k.n_events.to_le_bytes());
+        }
+    }
+    compress::compress(Codec::Zlib, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::troot::{BranchKind, ColumnValues, DType};
+
+    #[test]
+    fn rejects_mismatched_event_counts() {
+        let dir = std::env::temp_dir().join("troot_w1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = TRootWriter::new(dir.join("a.troot"), Codec::None, 10);
+        w.add_branch(
+            BranchDesc::scalar("a", DType::F32),
+            ColumnData::scalar_f32(vec![1.0; 5]),
+        )
+        .unwrap();
+        let err = w.add_branch(
+            BranchDesc::scalar("b", DType::F32),
+            ColumnData::scalar_f32(vec![1.0; 6]),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_and_mismatched_branches() {
+        let dir = std::env::temp_dir().join("troot_w2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = TRootWriter::new(dir.join("b.troot"), Codec::None, 10);
+        w.add_branch(
+            BranchDesc::scalar("a", DType::F32),
+            ColumnData::scalar_f32(vec![1.0; 5]),
+        )
+        .unwrap();
+        assert!(w
+            .add_branch(
+                BranchDesc::scalar("a", DType::F32),
+                ColumnData::scalar_f32(vec![1.0; 5]),
+            )
+            .is_err());
+        // dtype mismatch
+        assert!(w
+            .add_branch(
+                BranchDesc::scalar("c", DType::F64),
+                ColumnData::scalar_f32(vec![1.0; 5]),
+            )
+            .is_err());
+        // kind mismatch
+        assert!(w
+            .add_branch(
+                BranchDesc::jagged("d", DType::F32, "D"),
+                ColumnData::scalar_f32(vec![1.0; 5]),
+            )
+            .is_err());
+        // jagged without group
+        assert!(w
+            .add_branch(
+                BranchDesc {
+                    name: "e".into(),
+                    dtype: DType::F32,
+                    kind: BranchKind::Jagged,
+                    group: String::new(),
+                },
+                ColumnData::Jagged {
+                    offsets: vec![0, 1, 2, 3, 4, 5],
+                    values: ColumnValues::F32(vec![0.0; 5]),
+                },
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn summary_counts_baskets() {
+        let dir = std::env::temp_dir().join("troot_w3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = TRootWriter::new(dir.join("c.troot"), Codec::Lz4, 4);
+        for name in ["a", "b", "c"] {
+            w.add_branch(
+                BranchDesc::scalar(name, DType::F32),
+                ColumnData::scalar_f32((0..10).map(|i| i as f32).collect()),
+            )
+            .unwrap();
+        }
+        let s = w.finalize().unwrap();
+        assert_eq!(s.n_events, 10);
+        assert_eq!(s.n_branches, 3);
+        // 10 events, 4 per basket → 3 clusters × 3 branches.
+        assert_eq!(s.n_baskets, 9);
+        assert!(s.file_bytes > 0);
+    }
+}

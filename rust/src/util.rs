@@ -1,0 +1,276 @@
+//! Small shared utilities: a deterministic PRNG (PCG32), a seeded
+//! property-testing helper (offline stand-in for `proptest`), and
+//! human-readable formatting.
+
+/// PCG32 (XSH-RR 64/32) — deterministic, fast, good-enough statistical
+/// quality for synthetic data generation and property tests.
+///
+/// `rand` is not available offline; this is the crate-wide PRNG.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` (Lemire's multiply-shift).
+    pub fn below(&mut self, bound: u32) -> u32 {
+        if bound == 0 {
+            return 0;
+        }
+        ((self.next_u32() as u64 * bound as u64) >> 32) as u32
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(lo < hi);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u32() as f64) / (u32::MAX as f64 + 1.0)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Bernoulli draw with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with mean `mean` (for pt-like falling spectra).
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = self.f64().max(1e-12);
+        -mean * u.ln()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Poisson via inversion (small means only; fine for nJet ~ O(10)).
+    pub fn poisson(&mut self, mean: f64) -> u32 {
+        let l = (-mean).exp();
+        let mut k = 0u32;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l || k > 10_000 {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Fill `buf` with random bytes.
+    pub fn fill_bytes(&mut self, buf: &mut [u8]) {
+        for chunk in buf.chunks_mut(4) {
+            let v = self.next_u32().to_le_bytes();
+            chunk.copy_from_slice(&v[..chunk.len()]);
+        }
+    }
+
+    /// Random byte string whose compressibility is controlled by
+    /// `redundancy` in [0,1]: 0 = incompressible, 1 = highly repetitive.
+    pub fn compressible_bytes(&mut self, len: usize, redundancy: f64) -> Vec<u8> {
+        let mut out = Vec::with_capacity(len);
+        while out.len() < len {
+            if !out.is_empty() && self.chance(redundancy) {
+                // Copy a back-reference: emulate structured data.
+                let max_dist = out.len().min(4096);
+                let dist = 1 + self.below(max_dist as u32) as usize;
+                let n = (4 + self.below(60)) as usize;
+                let n = n.min(len - out.len());
+                let start = out.len() - dist;
+                for i in 0..n {
+                    let b = out[start + (i % dist)];
+                    out.push(b);
+                }
+            } else {
+                // Low-entropy literal run (values clustered).
+                let base = self.below(64) as u8;
+                let n = (1 + self.below(8)) as usize;
+                let n = n.min(len - out.len());
+                for _ in 0..n {
+                    out.push(base.wrapping_add(self.below(16) as u8));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Seeded randomized property tests — the offline stand-in for proptest.
+///
+/// Runs `f` over `cases` deterministic seeds; on failure, panics with the
+/// failing seed so the case can be replayed exactly.
+pub fn prop_check<F: Fn(&mut Pcg32)>(name: &str, cases: u32, f: F) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000u64 + case as u64;
+        let mut rng = Pcg32::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at seed {seed:#x} (case {case}/{cases}): {msg}");
+        }
+    }
+}
+
+/// Format a byte count with binary units.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds the way the paper's tables do.
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+/// Read a little-endian u32 from a byte slice at `off`.
+pub fn read_u32(buf: &[u8], off: usize) -> Option<u32> {
+    buf.get(off..off + 4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+}
+
+/// Read a little-endian u64 from a byte slice at `off`.
+pub fn read_u64(buf: &[u8], off: usize) -> Option<u64> {
+    buf.get(off..off + 8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg32_is_deterministic() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn pcg32_streams_differ() {
+        let mut a = Pcg32::with_stream(42, 1);
+        let mut b = Pcg32::with_stream(42, 2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 5);
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut rng = Pcg32::new(7);
+        for _ in 0..10_000 {
+            assert!(rng.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg32::new(9);
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn exp_mean_roughly_correct() {
+        let mut rng = Pcg32::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.exp(25.0)).sum::<f64>() / n as f64;
+        assert!((mean - 25.0).abs() < 1.0, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_mean_roughly_correct() {
+        let mut rng = Pcg32::new(13);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.poisson(6.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 6.0).abs() < 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn compressible_bytes_len_exact() {
+        let mut rng = Pcg32::new(17);
+        for len in [0usize, 1, 7, 1024, 65_537] {
+            assert_eq!(rng.compressible_bytes(len, 0.7).len(), len);
+        }
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn prop_check_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            prop_check("always-fails", 1, |_| panic!("boom"));
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("seed"), "{msg}");
+    }
+}

@@ -1,0 +1,302 @@
+//! XRootD client side: the [`Wire`] RPC abstraction, the in-process
+//! virtual-time wire, the real TCP wire, and [`RemoteFile`] which makes
+//! a remote file usable wherever [`ReadAt`] is expected (the troot
+//! reader, TTreeCache, the filtering engine).
+
+use super::proto::{read_frame, write_frame, Request, Response};
+use crate::metrics::{Stage, Timeline};
+use crate::net::LinkModel;
+use crate::troot::ReadAt;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One request/response exchange with the storage server.
+pub trait Wire: Send + Sync {
+    fn call(&self, req: Request) -> Result<Response>;
+
+    /// Human label for reports.
+    fn label(&self) -> String {
+        "wire".into()
+    }
+}
+
+/// In-process wire: requests go straight to an [`super::XrdServer`]
+/// handle; transfer time is *charged* to the timeline per the
+/// [`LinkModel`] instead of sleeping. Requests and responses are still
+/// encoded/decoded so the exact protocol bytes are accounted.
+pub struct LoopbackWire {
+    server: super::XrdServer,
+    link: LinkModel,
+    timeline: Timeline,
+    /// Stage that transfer time is attributed to (fetch vs open).
+    stage: AtomicU8,
+}
+
+impl LoopbackWire {
+    pub fn new(server: super::XrdServer, link: LinkModel, timeline: Timeline) -> Self {
+        LoopbackWire { server, link, timeline, stage: AtomicU8::new(stage_id(Stage::BasketFetch)) }
+    }
+
+    pub fn set_stage(&self, stage: Stage) {
+        self.stage.store(stage_id(stage), Ordering::Relaxed);
+    }
+
+    fn stage(&self) -> Stage {
+        stage_from_id(self.stage.load(Ordering::Relaxed))
+    }
+}
+
+fn stage_id(s: Stage) -> u8 {
+    Stage::ALL.iter().position(|&x| x == s).unwrap() as u8
+}
+
+fn stage_from_id(id: u8) -> Stage {
+    Stage::ALL[id as usize]
+}
+
+impl Wire for LoopbackWire {
+    fn call(&self, req: Request) -> Result<Response> {
+        let stage = self.stage();
+        let req_bytes = req.encode();
+        // Request travels client → server.
+        self.link.charge(&self.timeline, stage, req_bytes.len() as u64);
+        let req = Request::decode(&req_bytes)?;
+        let resp = self.server.handle(req);
+        let resp_bytes = resp.encode();
+        // Response travels server → client (payload-dominated).
+        self.timeline
+            .charge(stage, self.link.exchange_time(resp_bytes.len() as u64) - self.link.rtt_s);
+        self.timeline.add_bytes(stage, resp_bytes.len() as u64);
+        Response::decode(&resp_bytes)
+    }
+
+    fn label(&self) -> String {
+        format!("loopback/{}", self.link.label)
+    }
+}
+
+/// Real TCP wire (integration path). No virtual charging: transfers
+/// take real wall time (optionally shaped by
+/// [`crate::net::ThrottledStream`] at the socket level).
+pub struct TcpWire {
+    stream: Mutex<std::net::TcpStream>,
+    peer: String,
+}
+
+impl TcpWire {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = std::net::TcpStream::connect(addr)
+            .map_err(|e| Error::protocol(format!("connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        Ok(TcpWire { stream: Mutex::new(stream), peer: addr.to_string() })
+    }
+}
+
+impl Wire for TcpWire {
+    fn call(&self, req: Request) -> Result<Response> {
+        let mut stream = self.stream.lock().unwrap();
+        write_frame(&mut *stream, &req.encode())?;
+        let frame = read_frame(&mut *stream)?;
+        Response::decode(&frame)
+    }
+
+    fn label(&self) -> String {
+        format!("tcp/{}", self.peer)
+    }
+}
+
+/// XRootD client: opens files over a wire.
+pub struct XrdClient {
+    wire: Arc<dyn Wire>,
+}
+
+impl XrdClient {
+    pub fn new(wire: Arc<dyn Wire>) -> Self {
+        XrdClient { wire }
+    }
+
+    pub fn wire(&self) -> &Arc<dyn Wire> {
+        &self.wire
+    }
+
+    /// Open a remote file; returns a [`RemoteFile`] usable as
+    /// [`ReadAt`].
+    pub fn open(&self, path: &str) -> Result<RemoteFile> {
+        match self.wire.call(Request::Open { path: path.into() })? {
+            Response::Opened { fd, size } => {
+                Ok(RemoteFile { wire: self.wire.clone(), fd, size })
+            }
+            Response::Error { msg } => Err(Error::protocol(msg)),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Upload a file to the server catalog (output shipping).
+    pub fn put(&self, path: &str, data: &[u8]) -> Result<()> {
+        match self.wire.call(Request::Put { path: path.into(), data: data.to_vec() })? {
+            Response::Done => Ok(()),
+            Response::Error { msg } => Err(Error::protocol(msg)),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+}
+
+/// An open remote file handle.
+pub struct RemoteFile {
+    wire: Arc<dyn Wire>,
+    fd: u32,
+    size: u64,
+}
+
+impl RemoteFile {
+    pub fn close(&self) -> Result<()> {
+        match self.wire.call(Request::Close { fd: self.fd })? {
+            Response::Done => Ok(()),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+}
+
+impl ReadAt for RemoteFile {
+    fn read_at(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        match self.wire.call(Request::Read { fd: self.fd, offset, len: len as u32 })? {
+            Response::Data { data } => {
+                if data.len() != len {
+                    return Err(Error::protocol("short read"));
+                }
+                Ok(data)
+            }
+            Response::Error { msg } => Err(Error::protocol(msg)),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    fn read_vec(&self, ranges: &[(u64, usize)]) -> Result<Vec<Vec<u8>>> {
+        let req_ranges: Vec<(u64, u32)> =
+            ranges.iter().map(|&(o, l)| (o, l as u32)).collect();
+        match self.wire.call(Request::ReadV { fd: self.fd, ranges: req_ranges })? {
+            Response::DataV { chunks } => {
+                if chunks.len() != ranges.len()
+                    || chunks.iter().zip(ranges).any(|(c, &(_, l))| c.len() != l)
+                {
+                    return Err(Error::protocol("short readv"));
+                }
+                Ok(chunks)
+            }
+            Response::Error { msg } => Err(Error::protocol(msg)),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    fn size(&self) -> Result<u64> {
+        Ok(self.size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::DiskModel;
+    use crate::xrootd::XrdServer;
+
+    fn setup() -> (XrdServer, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("xrd_cli_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("data.bin"), (0u8..=255).collect::<Vec<_>>()).unwrap();
+        (XrdServer::new(&dir, DiskModel::ideal()), dir)
+    }
+
+    #[test]
+    fn loopback_read_and_charge() {
+        let (srv, _dir) = setup();
+        let tl = Timeline::new();
+        let wire = Arc::new(LoopbackWire::new(srv, LinkModel::wan_1g(), tl.clone()));
+        let client = XrdClient::new(wire.clone());
+        let file = client.open("data.bin").unwrap();
+        assert_eq!(file.size().unwrap(), 256);
+        assert_eq!(file.read_at(10, 4).unwrap(), vec![10, 11, 12, 13]);
+        let v = file.read_vec(&[(0, 2), (254, 2)]).unwrap();
+        assert_eq!(v, vec![vec![0, 1], vec![254, 255]]);
+        // Three exchanges → at least 3 RTTs charged.
+        assert!(tl.stage_total(Stage::BasketFetch) >= 3.0 * 0.030);
+        assert_eq!(tl.counter("link_round_trips"), 3);
+        file.close().unwrap();
+    }
+
+    #[test]
+    fn loopback_stage_attribution() {
+        let (srv, _dir) = setup();
+        let tl = Timeline::new();
+        let wire = Arc::new(LoopbackWire::new(srv, LinkModel::wan_1g(), tl.clone()));
+        wire.set_stage(Stage::OpenMeta);
+        let client = XrdClient::new(wire.clone());
+        let f = client.open("data.bin").unwrap();
+        assert!(tl.stage_total(Stage::OpenMeta) > 0.0);
+        assert_eq!(tl.stage_total(Stage::BasketFetch), 0.0);
+        wire.set_stage(Stage::BasketFetch);
+        f.read_at(0, 1).unwrap();
+        assert!(tl.stage_total(Stage::BasketFetch) > 0.0);
+    }
+
+    #[test]
+    fn open_missing_file_errors() {
+        let (srv, _dir) = setup();
+        let tl = Timeline::new();
+        let wire = Arc::new(LoopbackWire::new(srv, LinkModel::local(), tl));
+        let client = XrdClient::new(wire);
+        assert!(client.open("missing.bin").is_err());
+    }
+
+    #[test]
+    fn tcp_wire_end_to_end() {
+        let (srv, _dir) = setup();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let handle = srv.serve_tcp(listener, stop.clone());
+
+        let wire = Arc::new(TcpWire::connect(&addr.to_string()).unwrap());
+        let client = XrdClient::new(wire);
+        let file = client.open("data.bin").unwrap();
+        assert_eq!(file.read_at(100, 3).unwrap(), vec![100, 101, 102]);
+        let v = file.read_vec(&[(5, 1), (6, 1)]).unwrap();
+        assert_eq!(v, vec![vec![5], vec![6]]);
+        client.put("up/loaded.bin", b"xyz").unwrap();
+        file.close().unwrap();
+        drop(file);
+        drop(client);
+
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn remote_file_through_troot_reader() {
+        // A troot file served over the loopback wire opens and reads
+        // through the normal TRootReader.
+        use crate::compress::Codec;
+        use crate::troot::{BranchDesc, ColumnData, DType, TRootReader, TRootWriter};
+        let dir = std::env::temp_dir().join("xrd_troot");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.troot");
+        let mut w = TRootWriter::new(&path, Codec::Lz4, 32);
+        w.add_branch(
+            BranchDesc::scalar("x", DType::F32),
+            ColumnData::scalar_f32((0..100).map(|i| i as f32).collect()),
+        )
+        .unwrap();
+        w.finalize().unwrap();
+
+        let srv = XrdServer::new(&dir, DiskModel::ideal());
+        let tl = Timeline::new();
+        let wire = Arc::new(LoopbackWire::new(srv, LinkModel::shared_10g(), tl.clone()));
+        let client = XrdClient::new(wire);
+        let remote = client.open("events.troot").unwrap();
+        let reader = TRootReader::open(remote).unwrap();
+        assert_eq!(reader.n_events(), 100);
+        let col = reader.read_branch_all("x").unwrap();
+        assert_eq!(col.n_events(), 100);
+        assert!(tl.counter("link_round_trips") > 0);
+    }
+}

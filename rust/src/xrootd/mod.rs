@@ -1,0 +1,38 @@
+//! XRootD-like remote data access (§2.2).
+//!
+//! WLCG storage clusters export ROOT files through XRootD: a compute
+//! node's client opens a file on the data-transfer node and issues
+//! positioned reads — including **vector reads** (`readv`), which
+//! TTreeCache uses to batch many small basket fetches into one
+//! round-trip.
+//!
+//! This module provides:
+//!
+//! * [`proto`] — the wire protocol: OPEN / STAT / READ / READV / CLOSE
+//!   with a compact binary framing;
+//! * [`server`] — the storage-side daemon: a file catalog over a
+//!   directory, charging [`crate::net::DiskModel`] time for backend
+//!   I/O, servable in-process or over TCP;
+//! * [`client`] — the client: a [`Wire`](client::Wire) RPC abstraction
+//!   with an in-process virtual-time wire ([`client::LoopbackWire`])
+//!   and a real TCP wire ([`client::TcpWire`]), plus
+//!   [`client::RemoteFile`] implementing [`crate::troot::ReadAt`];
+//! * [`cache`] — **TTreeCache**: learns the basket access plan and
+//!   prefetches it with large vector reads (100 MB default, as in the
+//!   paper's setup). Crucially — and this reproduces the Figure 5a
+//!   effect — it only engages on *remote* stores; local reads bypass
+//!   it, paying per-basket seeks.
+
+pub mod cache;
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use cache::TTreeCache;
+pub use client::{LoopbackWire, RemoteFile, TcpWire, Wire, XrdClient};
+pub use proto::{Request, Response};
+pub use server::XrdServer;
+
+/// Default TTreeCache capacity (paper setup: "A 100 MB TTreeCache is
+/// used in all methods").
+pub const DEFAULT_CACHE_BYTES: usize = 100 * 1000 * 1000;

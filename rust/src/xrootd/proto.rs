@@ -1,0 +1,334 @@
+//! Wire protocol: request/response types and binary framing.
+//!
+//! Framing: `u32 payload_len (LE) | u8 opcode | fields...`. Strings are
+//! `u16 len + bytes`; range vectors are `u32 count + (u64 off, u32 len)*`.
+
+use crate::{Error, Result};
+
+pub const MAX_FRAME: usize = 512 * 1024 * 1024;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Open a file by (catalog-relative) path.
+    Open { path: String },
+    /// File size of an open handle.
+    Stat { fd: u32 },
+    /// Positioned read.
+    Read { fd: u32, offset: u64, len: u32 },
+    /// Vector read: many ranges, one round-trip.
+    ReadV { fd: u32, ranges: Vec<(u64, u32)> },
+    Close { fd: u32 },
+    /// Upload a file (the DPU ships the filtered output back through
+    /// the same protocol).
+    Put { path: String, data: Vec<u8> },
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    Opened { fd: u32, size: u64 },
+    Stats { size: u64 },
+    Data { data: Vec<u8> },
+    DataV { chunks: Vec<Vec<u8>> },
+    Done,
+    Error { msg: String },
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let s = self
+            .buf
+            .get(self.pos..self.pos + n)
+            .ok_or_else(|| Error::protocol("truncated frame"))?;
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::protocol("invalid utf-8"))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME {
+            return Err(Error::protocol("oversized byte field"));
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn finished(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Request::Open { path } => {
+                out.push(1);
+                put_str(&mut out, path);
+            }
+            Request::Stat { fd } => {
+                out.push(2);
+                out.extend_from_slice(&fd.to_le_bytes());
+            }
+            Request::Read { fd, offset, len } => {
+                out.push(3);
+                out.extend_from_slice(&fd.to_le_bytes());
+                out.extend_from_slice(&offset.to_le_bytes());
+                out.extend_from_slice(&len.to_le_bytes());
+            }
+            Request::ReadV { fd, ranges } => {
+                out.push(4);
+                out.extend_from_slice(&fd.to_le_bytes());
+                out.extend_from_slice(&(ranges.len() as u32).to_le_bytes());
+                for (o, l) in ranges {
+                    out.extend_from_slice(&o.to_le_bytes());
+                    out.extend_from_slice(&l.to_le_bytes());
+                }
+            }
+            Request::Close { fd } => {
+                out.push(5);
+                out.extend_from_slice(&fd.to_le_bytes());
+            }
+            Request::Put { path, data } => {
+                out.push(6);
+                put_str(&mut out, path);
+                put_bytes(&mut out, data);
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Request> {
+        let mut c = Cursor::new(buf);
+        let req = match c.u8()? {
+            1 => Request::Open { path: c.str()? },
+            2 => Request::Stat { fd: c.u32()? },
+            3 => Request::Read { fd: c.u32()?, offset: c.u64()?, len: c.u32()? },
+            4 => {
+                let fd = c.u32()?;
+                let n = c.u32()? as usize;
+                if n > 4_000_000 {
+                    return Err(Error::protocol("too many readv ranges"));
+                }
+                let mut ranges = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ranges.push((c.u64()?, c.u32()?));
+                }
+                Request::ReadV { fd, ranges }
+            }
+            5 => Request::Close { fd: c.u32()? },
+            6 => Request::Put { path: c.str()?, data: c.bytes()? },
+            op => return Err(Error::protocol(format!("bad request opcode {op}"))),
+        };
+        if !c.finished() {
+            return Err(Error::protocol("trailing bytes in request"));
+        }
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Response::Opened { fd, size } => {
+                out.push(1);
+                out.extend_from_slice(&fd.to_le_bytes());
+                out.extend_from_slice(&size.to_le_bytes());
+            }
+            Response::Stats { size } => {
+                out.push(2);
+                out.extend_from_slice(&size.to_le_bytes());
+            }
+            Response::Data { data } => {
+                out.push(3);
+                put_bytes(&mut out, data);
+            }
+            Response::DataV { chunks } => {
+                out.push(4);
+                out.extend_from_slice(&(chunks.len() as u32).to_le_bytes());
+                for ch in chunks {
+                    put_bytes(&mut out, ch);
+                }
+            }
+            Response::Done => out.push(5),
+            Response::Error { msg } => {
+                out.push(6);
+                put_str(&mut out, msg);
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Response> {
+        let mut c = Cursor::new(buf);
+        let resp = match c.u8()? {
+            1 => Response::Opened { fd: c.u32()?, size: c.u64()? },
+            2 => Response::Stats { size: c.u64()? },
+            3 => Response::Data { data: c.bytes()? },
+            4 => {
+                let n = c.u32()? as usize;
+                if n > 4_000_000 {
+                    return Err(Error::protocol("too many readv chunks"));
+                }
+                let mut chunks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    chunks.push(c.bytes()?);
+                }
+                Response::DataV { chunks }
+            }
+            5 => Response::Done,
+            6 => Response::Error { msg: c.str()? },
+            op => return Err(Error::protocol(format!("bad response opcode {op}"))),
+        };
+        if !c.finished() {
+            return Err(Error::protocol("trailing bytes in response"));
+        }
+        Ok(resp)
+    }
+}
+
+/// Write one length-prefixed frame to a stream.
+pub fn write_frame(w: &mut impl std::io::Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(Error::protocol("frame too large"));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame from a stream.
+pub fn read_frame(r: &mut impl std::io::Read) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        return Err(Error::protocol("incoming frame too large"));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = [
+            Request::Open { path: "data/file.troot".into() },
+            Request::Stat { fd: 7 },
+            Request::Read { fd: 7, offset: 1 << 40, len: 12345 },
+            Request::ReadV { fd: 7, ranges: vec![(0, 10), (100, 20), (1 << 33, 30)] },
+            Request::ReadV { fd: 0, ranges: vec![] },
+            Request::Close { fd: 7 },
+            Request::Put { path: "out.troot".into(), data: vec![1, 2, 3] },
+        ];
+        for r in reqs {
+            assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resps = [
+            Response::Opened { fd: 1, size: 999 },
+            Response::Stats { size: 0 },
+            Response::Data { data: vec![0; 100] },
+            Response::DataV { chunks: vec![vec![1], vec![], vec![2, 3]] },
+            Response::Done,
+            Response::Error { msg: "no such file".into() },
+        ];
+        for r in resps {
+            assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Request::decode(&[]).is_err());
+        assert!(Request::decode(&[99]).is_err());
+        assert!(Response::decode(&[0]).is_err());
+        // trailing bytes
+        let mut enc = Request::Stat { fd: 1 }.encode();
+        enc.push(0);
+        assert!(Request::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn prop_decode_mutated_never_panics() {
+        prop_check("proto-fuzz", 60, |rng| {
+            let mut enc = Request::ReadV {
+                fd: 3,
+                ranges: vec![(10, 20), (30, 40)],
+            }
+            .encode();
+            let i = rng.below(enc.len() as u32) as usize;
+            enc[i] ^= 1 << rng.below(8);
+            let _ = Request::decode(&enc);
+            let mut enc = Response::DataV { chunks: vec![vec![1, 2], vec![3]] }.encode();
+            let i = rng.below(enc.len() as u32) as usize;
+            enc[i] ^= 1 << rng.below(8);
+            let _ = Response::decode(&enc);
+        });
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+    }
+
+    #[test]
+    fn frame_rejects_oversize() {
+        let mut hdr = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        hdr.extend_from_slice(&[0; 16]);
+        let mut r = hdr.as_slice();
+        assert!(read_frame(&mut r).is_err());
+    }
+}

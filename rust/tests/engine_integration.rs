@@ -1,0 +1,364 @@
+//! End-to-end engine integration: generate a synthetic NanoAOD-like
+//! file, skim it through every engine configuration, and cross-check
+//! results (PJRT kernel ≡ interpreter, two-phase ≡ legacy, output file
+//! contents ≡ an independent reference selection).
+
+use skimroot::compress::Codec;
+use skimroot::engine::{DecompMode, EngineOpts, SkimEngine};
+use skimroot::gen::{self, GenConfig};
+use skimroot::metrics::{Node, Stage, Timeline};
+use skimroot::net::{DiskModel, LinkModel};
+use skimroot::query::SkimQuery;
+use skimroot::runtime::SkimRuntime;
+use skimroot::troot::{ColumnData, ColumnValues, LocalFile, ReadAt, TRootReader};
+use skimroot::xrootd::{LoopbackWire, XrdClient, XrdServer};
+use std::sync::{Arc, OnceLock};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<&'static SkimRuntime> {
+    static RT: OnceLock<Option<SkimRuntime>> = OnceLock::new();
+    RT.get_or_init(|| SkimRuntime::load(artifacts_dir()).ok()).as_ref()
+}
+
+fn workdir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("skim_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Shared small dataset (full pipeline shape, 1200 events).
+fn dataset() -> std::path::PathBuf {
+    static PATH: OnceLock<std::path::PathBuf> = OnceLock::new();
+    PATH.get_or_init(|| {
+        let dir = workdir();
+        let path = dir.join("events.troot");
+        let cfg = GenConfig {
+            n_events: 1200,
+            target_branches: 220,
+            n_hlt: 40,
+            basket_events: 256,
+            codec: Codec::Lz4,
+            seed: 42,
+        };
+        gen::generate(&cfg, &path).unwrap();
+        path
+    })
+    .clone()
+}
+
+fn query(outname: &str) -> SkimQuery {
+    gen::higgs_query("events.troot", outname)
+}
+
+fn local_store() -> Arc<dyn ReadAt> {
+    Arc::new(LocalFile::open(dataset()).unwrap())
+}
+
+fn run_with(opts: &EngineOpts, outname: &str) -> (skimroot::engine::SkimResult, Timeline) {
+    let tl = Timeline::new();
+    let engine = SkimEngine::new(runtime());
+    let out = workdir().join(outname);
+    let res = engine
+        .run(local_store(), &query(outname), &tl, opts, &out)
+        .unwrap();
+    (res, tl)
+}
+
+#[test]
+fn pjrt_and_interpreter_agree() {
+    if runtime().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let vec_opts = EngineOpts { use_pjrt: true, max_objects: 16, ..Default::default() };
+    let int_opts = EngineOpts { use_pjrt: false, max_objects: 16, ..Default::default() };
+    let (res_v, _) = run_with(&vec_opts, "out_vec.troot");
+    let (res_i, _) = run_with(&int_opts, "out_int.troot");
+    assert!(res_v.vectorized);
+    assert!(!res_i.vectorized);
+    assert_eq!(res_v.n_pass, res_i.n_pass);
+    assert_eq!(res_v.stage_funnel, res_i.stage_funnel);
+    // Byte-identical filtered files.
+    let a = std::fs::read(workdir().join("out_vec.troot")).unwrap();
+    let b = std::fs::read(workdir().join("out_int.troot")).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn two_phase_and_legacy_produce_identical_output() {
+    let two = EngineOpts { two_phase: true, use_pjrt: false, ..Default::default() };
+    let legacy = EngineOpts { two_phase: false, use_pjrt: false, ..Default::default() };
+    let (res2, _) = run_with(&two, "out_two.troot");
+    let (res1, _) = run_with(&legacy, "out_legacy.troot");
+    assert_eq!(res2.n_pass, res1.n_pass);
+    let a = std::fs::read(workdir().join("out_two.troot")).unwrap();
+    let b = std::fs::read(workdir().join("out_legacy.troot")).unwrap();
+    assert_eq!(a, b);
+    // Legacy fetches every output branch for every cluster; two-phase
+    // fetches at most that (equal when every cluster has a passer).
+    assert!(res2.baskets_fetched <= res1.baskets_fetched);
+    assert!(res2.fetched_bytes <= res1.fetched_bytes);
+}
+
+#[test]
+fn two_phase_skips_output_fetch_for_rejected_clusters() {
+    // A selection nothing passes: phase 2 never runs, so only the
+    // criteria baskets are fetched — the core two-phase saving.
+    let tight = SkimQuery::from_json_text(
+        r#"{"input": "events.troot", "output": "none.troot",
+            "branches": ["Electron_*", "MET_pt", "run"],
+            "selection": {"preselection": [
+                {"branch": "MET_pt", "op": ">", "value": 100000.0}]}}"#,
+    )
+    .unwrap();
+    let engine = SkimEngine::new(None);
+    let opts2 = EngineOpts { two_phase: true, use_pjrt: false, ..Default::default() };
+    let opts1 = EngineOpts { two_phase: false, use_pjrt: false, ..Default::default() };
+    let tl = Timeline::new();
+    let res2 = engine
+        .run(local_store(), &tight, &tl, &opts2, workdir().join("none2.troot"))
+        .unwrap();
+    let res1 = engine
+        .run(local_store(), &tight, &tl, &opts1, workdir().join("none1.troot"))
+        .unwrap();
+    assert_eq!(res2.n_pass, 0);
+    assert_eq!(res1.n_pass, 0);
+    // Two-phase only touched the single criteria branch (MET_pt).
+    assert!(
+        res2.fetched_bytes * 4 < res1.fetched_bytes,
+        "two-phase {} vs legacy {}",
+        res2.fetched_bytes,
+        res1.fetched_bytes
+    );
+}
+
+#[test]
+fn output_matches_independent_reference_selection() {
+    // Skim with the engine, then recompute the selection directly from
+    // full columns and compare passing MET values.
+    let opts = EngineOpts { use_pjrt: false, ..Default::default() };
+    let (res, _) = run_with(&opts, "out_ref.troot");
+
+    let reader = TRootReader::open(LocalFile::open(dataset()).unwrap()).unwrap();
+    let q = query("x");
+    let plan = skimroot::query::plan::SkimPlan::build(&q, reader.meta()).unwrap();
+
+    // Reference: per-event evaluation straight from whole columns.
+    let met = match reader.read_branch_all("MET_pt").unwrap() {
+        ColumnData::Scalar(v) => v,
+        _ => unreachable!(),
+    };
+    let n = reader.n_events() as usize;
+
+    // Load all criteria columns.
+    let mut jagged: std::collections::HashMap<String, (Vec<u32>, Vec<f32>)> = Default::default();
+    let mut scalar: std::collections::HashMap<String, Vec<f64>> = Default::default();
+    for name in &plan.criteria_branches {
+        match reader.read_branch_all(name).unwrap() {
+            ColumnData::Jagged { offsets, values } => {
+                let v = match values {
+                    ColumnValues::F32(v) => v,
+                    _ => unreachable!(),
+                };
+                jagged.insert(name.clone(), (offsets, v));
+            }
+            ColumnData::Scalar(v) => {
+                scalar.insert(name.clone(), (0..n).map(|i| v.get_as_f64(i)).collect());
+            }
+        }
+    }
+
+    let max_m = 16usize;
+    let mut expected_pass = Vec::new();
+    for ev in 0..n {
+        let p = &plan.program;
+        let mut ok = p.scalar_cuts.iter().all(|c| {
+            let x = scalar[&p.scalar_columns[c.col]][ev] as f32;
+            cmp(x, c.op, c.abs, c.value)
+        });
+        for g in &p.groups {
+            let mut count = 0;
+            for slot in 0..max_m {
+                let mut pass = !g.cut_range.is_empty();
+                for k in g.cut_range.clone() {
+                    let cut = &p.obj_cuts[k];
+                    let (offs, vals) = &jagged[&p.obj_columns[cut.col]];
+                    let lo = offs[ev] as usize;
+                    let hi = offs[ev + 1] as usize;
+                    let m = (hi - lo).min(max_m);
+                    if slot >= m {
+                        pass = false;
+                        break;
+                    }
+                    if !cmp(vals[lo + slot], cut.op, cut.abs, cut.value) {
+                        pass = false;
+                        break;
+                    }
+                }
+                if pass {
+                    count += 1;
+                }
+            }
+            ok &= count >= g.min_count;
+        }
+        if let Some(ht) = &p.ht {
+            let (offs, vals) = &jagged[&p.obj_columns[ht.col]];
+            let lo = offs[ev] as usize;
+            let hi = offs[ev + 1] as usize;
+            let m = (hi - lo).min(max_m);
+            let total: f32 = vals[lo..lo + m].iter().filter(|&&x| x > ht.object_pt_min).sum();
+            ok &= total >= ht.min_ht;
+        }
+        if !p.triggers.is_empty() {
+            ok &= p
+                .triggers
+                .iter()
+                .any(|&s| scalar[&p.scalar_columns[s]][ev] > 0.5);
+        }
+        if ok {
+            expected_pass.push(ev);
+        }
+    }
+
+    assert_eq!(res.n_pass as usize, expected_pass.len());
+
+    // Check the output file's MET_pt column equals the passers' values.
+    let out_reader =
+        TRootReader::open(LocalFile::open(workdir().join("out_ref.troot")).unwrap()).unwrap();
+    assert_eq!(out_reader.n_events() as usize, expected_pass.len());
+    let out_met = match out_reader.read_branch_all("MET_pt").unwrap() {
+        ColumnData::Scalar(v) => v,
+        _ => unreachable!(),
+    };
+    for (i, &ev) in expected_pass.iter().enumerate() {
+        assert_eq!(out_met.get_as_f64(i), met.get_as_f64(ev), "passer {i} (event {ev})");
+    }
+    // Output keeps all 89 branches.
+    assert_eq!(out_reader.meta().branches.len(), 89);
+}
+
+fn cmp(x: f32, op: u8, abs: bool, v: f32) -> bool {
+    let x = if abs { x.abs() } else { x };
+    match op {
+        0 => x > v,
+        1 => x >= v,
+        2 => x < v,
+        3 => x <= v,
+        4 => x == v,
+        5 => x != v,
+        _ => false,
+    }
+}
+
+#[test]
+fn remote_skim_over_loopback_wire_charges_stages() {
+    // Serve the dataset over the XRootD-like protocol on a 1 Gbps link
+    // model and skim remotely (the paper's client-side setup).
+    let dir = dataset().parent().unwrap().to_path_buf();
+    let server = XrdServer::new(&dir, DiskModel::disk_pool());
+    let tl = Timeline::new();
+    server.set_timeline(Some(tl.clone()));
+    let wire = Arc::new(LoopbackWire::new(server, LinkModel::wan_1g(), tl.clone()));
+    let client = XrdClient::new(wire);
+    let remote = Arc::new(client.open("events.troot").unwrap());
+
+    let engine = SkimEngine::new(runtime());
+    let opts = EngineOpts { use_pjrt: false, ..Default::default() };
+    let out = workdir().join("out_remote.troot");
+    let res = engine
+        .run(remote, &query("out_remote.troot"), &tl, &opts, &out)
+        .unwrap();
+
+    assert!(res.n_pass > 0);
+    // Network fetch time accrued (RTTs + bytes over 1 Gbps).
+    assert!(tl.stage_total(Stage::BasketFetch) > 0.01);
+    assert!(tl.stage_total(Stage::Decompress) > 0.0);
+    assert!(tl.stage_total(Stage::Filter) > 0.0);
+    assert!(tl.node_busy(Node::Client) > 0.0);
+    // Identical selection to the local run.
+    let (local, _) = run_with(&opts, "out_local_cmp.troot");
+    assert_eq!(res.n_pass, local.n_pass);
+
+    // Cache should have batched round-trips: hits >> misses.
+    let cache = res.cache.unwrap();
+    assert!(cache.hits > cache.misses, "cache: {cache:?}");
+    assert!(cache.prefetch_batches < res.baskets_fetched / 4);
+}
+
+#[test]
+fn no_cache_means_per_basket_round_trips() {
+    let dir = dataset().parent().unwrap().to_path_buf();
+    let server = XrdServer::new(&dir, DiskModel::ideal());
+    let tl = Timeline::new();
+    let wire = Arc::new(LoopbackWire::new(server, LinkModel::wan_1g(), tl.clone()));
+    let client = XrdClient::new(wire);
+    let remote = Arc::new(client.open("events.troot").unwrap());
+    let engine = SkimEngine::new(None);
+    let opts = EngineOpts { use_pjrt: false, cache_bytes: None, ..Default::default() };
+    let out = workdir().join("out_nocache.troot");
+    let res = engine
+        .run(remote, &query("out_nocache.troot"), &tl, &opts, &out)
+        .unwrap();
+    // Every basket fetch is its own round-trip: ≥ baskets_fetched RTTs.
+    assert!(tl.counter("link_round_trips") >= res.baskets_fetched);
+}
+
+#[test]
+fn hw_engine_decompression_attributes_to_engine_not_cpu() {
+    let tl = Timeline::new();
+    let engine = SkimEngine::new(None);
+    let speedup = 1.4;
+    let opts = EngineOpts {
+        use_pjrt: false,
+        compute_node: Node::Dpu,
+        decomp: DecompMode::HwEngine { speedup },
+        ..Default::default()
+    };
+    let out = workdir().join("out_hw.troot");
+    engine
+        .run(local_store(), &query("out_hw.troot"), &tl, &opts, &out)
+        .unwrap();
+    // All decompression time sits on the engine, none on the ARM cores.
+    let engine_busy = tl.node_busy(Node::DpuEngine);
+    assert!(engine_busy > 0.0);
+    assert!((tl.stage_total(Stage::Decompress) - engine_busy).abs() < 1e-9);
+    // The DPU cores still did deserialize/filter/output work.
+    assert!(tl.node_busy(Node::Dpu) > 0.0);
+}
+
+#[test]
+fn copy_all_query_keeps_every_event() {
+    let q = SkimQuery::from_json_text(
+        r#"{"input": "events.troot", "output": "copy.troot",
+            "branches": ["MET_pt", "nJet"]}"#,
+    )
+    .unwrap();
+    let tl = Timeline::new();
+    let engine = SkimEngine::new(None);
+    let out = workdir().join("copy.troot");
+    let opts = EngineOpts { use_pjrt: false, ..Default::default() };
+    let res = engine.run(local_store(), &q, &tl, &opts, &out).unwrap();
+    assert_eq!(res.n_pass, res.n_events);
+    let r = TRootReader::open(LocalFile::open(&out).unwrap()).unwrap();
+    assert_eq!(r.n_events(), res.n_events);
+    assert_eq!(r.meta().branches.len(), 2);
+}
+
+#[test]
+fn output_codec_override_and_funnel_monotone() {
+    let opts = EngineOpts {
+        use_pjrt: false,
+        output_codec: Some(Codec::XzLike),
+        ..Default::default()
+    };
+    let (res, _) = run_with(&opts, "out_xz.troot");
+    let r = TRootReader::open(LocalFile::open(workdir().join("out_xz.troot")).unwrap()).unwrap();
+    assert_eq!(r.meta().codec, Codec::XzLike);
+    // The §3.2 funnel is monotone non-increasing.
+    let f = res.stage_funnel;
+    assert!(f[0] >= f[1] && f[1] >= f[2] && f[2] >= f[3]);
+    assert_eq!(f[3], res.n_pass);
+}
