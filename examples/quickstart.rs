@@ -1,24 +1,54 @@
 //! Quickstart: generate a small synthetic NanoAOD-like dataset, write
-//! a JSON selection, run a skim locally, and inspect the result.
+//! a JSON selection, run a skim through the [`SkimJob`] facade, and
+//! plug a custom [`FilterStage`] into the engine pipeline.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use skimroot::compress::Codec;
-use skimroot::engine::{EngineOpts, SkimEngine};
+use skimroot::coordinator::{Deployment, Placement};
+use skimroot::engine::{FilterStage, Hook, StageCtx, Verdict};
 use skimroot::gen::{self, GenConfig};
-use skimroot::metrics::Timeline;
+use skimroot::net::LinkModel;
 use skimroot::query::SkimQuery;
-use skimroot::troot::{LocalFile, ReadAt, TRootReader};
-use std::sync::Arc;
+use skimroot::troot::{LocalFile, TRootReader};
+use skimroot::SkimJob;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// A custom pipeline stage: per-branch accounting of decompressed
+/// bytes, hooked after the built-in `decompress` stage. No engine fork
+/// needed — it reads the in-flight group state and always continues.
+struct ByteAudit {
+    bytes: Mutex<BTreeMap<String, u64>>,
+}
+
+impl FilterStage for ByteAudit {
+    fn name(&self) -> &str {
+        "byte-audit"
+    }
+
+    fn run(&self, ctx: &mut StageCtx) -> skimroot::Result<Verdict> {
+        if let Some(group) = &ctx.group {
+            let mut tab = self.bytes.lock().unwrap();
+            for cluster in &group.raw {
+                for (branch, (raw, _)) in cluster {
+                    *tab.entry(branch.clone()).or_insert(0) += raw.len() as u64;
+                }
+            }
+        }
+        Ok(Verdict::Continue)
+    }
+}
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dir = std::env::temp_dir().join("skimroot_quickstart");
-    std::fs::create_dir_all(&dir)?;
+    let storage = dir.join("storage");
+    std::fs::create_dir_all(&storage)?;
 
     // 1. Generate a dataset: 5k events, full schema shape scaled down.
-    let input = dir.join("events.troot");
+    let input = storage.join("events.troot");
     let cfg = GenConfig {
         n_events: 5_000,
         target_branches: 300,
@@ -54,38 +84,60 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }"#;
     let query = SkimQuery::from_json_text(query_json)?;
 
-    // 3. Run the two-phase engine (interpreter path: no artifacts
-    //    needed; pass a loaded SkimRuntime for the vectorized kernel).
-    let timeline = Timeline::new();
-    let engine = SkimEngine::new(None);
-    let opts = EngineOpts { use_pjrt: false, ..Default::default() };
-    let store: Arc<dyn ReadAt> = Arc::new(LocalFile::open(&input)?);
-    let out_path = dir.join("muon_skim.troot");
-    let result = engine.run(store, &query, &timeline, &opts, &out_path)?;
+    // 3. A deployment from the open builder: client placement over a
+    //    free local link (pass a loaded runtime + drop `use_pjrt(false)`
+    //    for the vectorized kernel; the interpreter needs no artifacts).
+    let deployment = Deployment::builder()
+        .name("quickstart-client")
+        .placement(Placement::Client)
+        .link(LinkModel::local())
+        .use_pjrt(false)
+        .build()?;
+
+    // 4. Run through the SkimJob facade with the custom stage plugged
+    //    in after the built-in `decompress` stage.
+    let audit = Arc::new(ByteAudit { bytes: Mutex::new(BTreeMap::new()) });
+    let report = SkimJob::new(query)
+        .storage(&storage)
+        .client_dir(dir.join("client"))
+        .deployment(deployment)
+        .stage(Hook::Group, &["decompress"], audit.clone())
+        .run()?;
 
     println!(
-        "\nskim: {} / {} events pass ({:.2}%)",
-        result.n_pass,
-        result.n_events,
-        100.0 * result.n_pass as f64 / result.n_events as f64
+        "\nskim [{}]: {} / {} events pass ({:.2}%)",
+        report.name,
+        report.result.n_pass,
+        report.result.n_events,
+        100.0 * report.result.n_pass as f64 / report.result.n_events as f64
     );
     println!(
         "selection funnel (preselection → objects → HT → trigger): {:?}",
-        result.stage_funnel
+        report.result.stage_funnel
     );
-    for w in &result.warnings {
+    for w in &report.result.warnings {
         println!("[warn] {w}");
     }
-    println!("\nstage breakdown:\n{}", timeline.report());
+    println!("\nstage breakdown:\n{}", report.timeline.report());
 
-    // 4. The output is a regular troot file.
-    let reader = TRootReader::open(LocalFile::open(&out_path)?)?;
+    // 5. What the custom stage observed: decompressed bytes per branch.
+    let tab = audit.bytes.lock().unwrap();
+    let mut rows: Vec<(&String, &u64)> = tab.iter().collect();
+    rows.sort_by(|a, b| b.1.cmp(a.1));
+    println!("\nbyte-audit stage — top criteria branches by decompressed bytes:");
+    for (branch, bytes) in rows.iter().take(5) {
+        println!("  {:<24} {}", branch, skimroot::util::human_bytes(**bytes));
+    }
+
+    // 6. The output is a regular troot file.
+    let out_path = &report.result.output_path;
+    let reader = TRootReader::open(LocalFile::open(out_path)?)?;
     println!(
         "\noutput {}: {} events, {} branches, {}",
         out_path.display(),
         reader.n_events(),
         reader.meta().branches.len(),
-        skimroot::util::human_bytes(result.output_bytes)
+        skimroot::util::human_bytes(report.result.output_bytes)
     );
     Ok(())
 }

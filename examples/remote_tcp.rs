@@ -12,11 +12,11 @@
 //! ```
 
 use skimroot::compress::Codec;
-use skimroot::dpu::http::{post_skim, DpuHttpServer, SkimHttpOutput};
-use skimroot::dpu::{DpuConfig, DpuNode};
+use skimroot::coordinator::{Deployment, Placement};
+use skimroot::dpu::http::{self, post_skim, DpuHttpServer};
+use skimroot::dpu::DpuConfig;
 use skimroot::gen::{self, GenConfig};
-use skimroot::net::DiskModel;
-use skimroot::query::SkimQuery;
+use skimroot::net::{DiskModel, LinkModel};
 use skimroot::troot::{LocalFile, TRootReader};
 use skimroot::xrootd::{Request, Response, TcpWire, Wire, XrdServer};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -60,22 +60,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
 
     // --- DPU HTTP service ------------------------------------------------
-    let storage_root = dir.clone();
-    let scratch = dir.join("dpu_scratch");
-    let dpu_server = DpuHttpServer::new(move |query: &SkimQuery, timeline| {
-        // In-process DPU node backed by the storage directory (the DPU
-        // and DTN share the host over PCIe).
-        let storage = XrdServer::new(&storage_root, DiskModel::ideal());
-        storage.set_timeline(Some(timeline.clone()));
-        let dpu = DpuNode::new(DpuConfig::default(), storage, None, &scratch);
-        let out = dpu.run_query(query, timeline)?;
-        Ok(SkimHttpOutput {
-            n_events: out.result.n_events,
-            n_pass: out.result.n_pass,
-            elapsed: timeline.elapsed(),
-            output: out.output,
-        })
-    });
+    // The standard separated-host executor: each POST /skim runs a
+    // SkimJob with DPU placement against the storage directory (the
+    // DPU and DTN share the host over PCIe; ideal disk + local link so
+    // the example's timings are the real protocol work).
+    let deployment = Deployment::builder()
+        .name("dpu-http")
+        .placement(Placement::Dpu(DpuConfig::default()))
+        .store(DiskModel::ideal())
+        .link(LinkModel::local())
+        .build()?;
+    let dpu_server = DpuHttpServer::new(http::storage_handler(
+        dir.clone(),
+        dir.join("dpu_work"),
+        None,
+        deployment,
+    ));
     let http_listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let http_addr = http_listener.local_addr()?;
     let http_thread = dpu_server.serve(http_listener, stop.clone());

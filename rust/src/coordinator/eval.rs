@@ -9,11 +9,13 @@
 //! scaled dataset); the comparisons that must hold are: who wins, by
 //! roughly what factor, and where the crossovers fall.
 
-use super::{Coordinator, Deployment, Mode};
+use super::{Deployment, JobReport, Mode, Placement};
 use crate::compress::Codec;
 use crate::gen::{self, GenConfig};
+use crate::job::SkimJob;
 use crate::metrics::{Node, Stage};
 use crate::net::LinkModel;
+use crate::query::SkimQuery;
 use crate::runtime::SkimRuntime;
 use crate::util::human_secs;
 use crate::Result;
@@ -104,8 +106,25 @@ pub fn prepare(dir: impl AsRef<Path>, scale: EvalScale) -> Result<EvalEnv> {
 fn deployment(env: &EvalEnv, mode: Mode, link: LinkModel) -> Deployment {
     let mut dep = Deployment::new(mode, link.scaled(env.bw_scale));
     dep.disk = dep.disk.scaled(env.bw_scale);
-    dep.dpu.pcie = dep.dpu.pcie.scaled(env.bw_scale);
+    if let Placement::Dpu(cfg) = &mut dep.placement {
+        cfg.pcie = cfg.pcie.scaled(env.bw_scale);
+    }
     dep
+}
+
+/// Run one figure row through the [`SkimJob`] facade.
+fn run_row(
+    env: &EvalEnv,
+    runtime: Option<&SkimRuntime>,
+    query: &SkimQuery,
+    dep: Deployment,
+) -> Result<JobReport> {
+    SkimJob::new(query.clone())
+        .storage(&env.storage)
+        .client_dir(&env.client)
+        .runtime(runtime)
+        .deployment(dep)
+        .run()
 }
 
 /// The four §4 methods with their dataset variant.
@@ -127,7 +146,6 @@ const LINKS: [(&str, fn() -> LinkModel, bool); 3] = [
 
 /// Figure 4a: end-to-end latency, methods × network speeds.
 pub fn fig4a(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
-    let coord = Coordinator::new(&env.storage, &env.client, runtime);
     let mut out = String::new();
     writeln!(out, "== Figure 4a: filtering latency across network speeds ==").unwrap();
     writeln!(
@@ -141,7 +159,7 @@ pub fn fig4a(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
         let query = gen::higgs_query(&input, &format!("skim_{}.troot", mode.name()));
         let mut cells = Vec::new();
         for (_, link, _) in LINKS {
-            let report = coord.run_job(&query, &deployment(env, mode, link()))?;
+            let report = run_row(env, runtime, &query, deployment(env, mode, link()))?;
             cells.push(report.latency);
         }
         lat_1g.push((label, cells[0]));
@@ -201,13 +219,12 @@ fn breakdown_header() -> String {
 
 /// Figure 4b: per-operation breakdown over the 1 Gbps link.
 pub fn fig4b(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
-    let coord = Coordinator::new(&env.storage, &env.client, runtime);
     let mut out = String::new();
     writeln!(out, "== Figure 4b: operation breakdown @ 1 Gbps ==").unwrap();
     writeln!(out, "{}", breakdown_header()).unwrap();
     for (label, mode, input, _) in methods(env) {
         let query = gen::higgs_query(&input, &format!("skim_{}.troot", mode.name()));
-        let report = coord.run_job(&query, &deployment(env, mode, LinkModel::wan_1g()))?;
+        let report = run_row(env, runtime, &query, deployment(env, mode, LinkModel::wan_1g()))?;
         writeln!(out, "{}", breakdown_row(label, &report)).unwrap();
     }
     writeln!(
@@ -225,14 +242,13 @@ pub fn fig4b(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
 
 /// Figure 5a: near-storage (server-side) vs SkimROOT breakdown, LZ4.
 pub fn fig5a(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
-    let coord = Coordinator::new(&env.storage, &env.client, runtime);
     let mut out = String::new();
     writeln!(out, "== Figure 5a: server-side vs SkimROOT (LZ4) ==").unwrap();
     writeln!(out, "{}", breakdown_header()).unwrap();
     let mut totals = Vec::new();
     for (label, mode) in [("Server-side", Mode::ServerSide), ("SkimROOT", Mode::SkimRoot)] {
         let query = gen::higgs_query(&env.lz4, &format!("skim5a_{}.troot", mode.name()));
-        let report = coord.run_job(&query, &deployment(env, mode, LinkModel::wan_1g()))?;
+        let report = run_row(env, runtime, &query, deployment(env, mode, LinkModel::wan_1g()))?;
         writeln!(out, "{}", breakdown_row(label, &report)).unwrap();
         totals.push(report.latency);
     }
@@ -248,7 +264,6 @@ pub fn fig5a(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
 
 /// Figure 5b: CPU utilization per node (LZ4 @ 1 Gbps).
 pub fn fig5b(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
-    let coord = Coordinator::new(&env.storage, &env.client, runtime);
     let mut out = String::new();
     writeln!(out, "== Figure 5b: CPU utilization (LZ4 @ 1 Gbps) ==").unwrap();
     writeln!(
@@ -265,7 +280,7 @@ pub fn fig5b(env: &EvalEnv, runtime: Option<&SkimRuntime>) -> Result<String> {
     ];
     for (label, mode, paper) in rows {
         let query = gen::higgs_query(&env.lz4, &format!("skim5b_{}.troot", mode.name()));
-        let report = coord.run_job(&query, &deployment(env, mode, LinkModel::wan_1g()))?;
+        let report = run_row(env, runtime, &query, deployment(env, mode, LinkModel::wan_1g()))?;
         let pct = |n: Node| format!("{:.1}%", (100.0 * report.timeline.utilization(n)).max(0.0));
         writeln!(
             out,

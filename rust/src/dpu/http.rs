@@ -9,13 +9,17 @@
 //! request line + headers + `Content-Length` body; responses are
 //! always `Connection: close`.
 
+use crate::coordinator::Deployment;
+use crate::job::SkimJob;
 use crate::metrics::Timeline;
 use crate::query::SkimQuery;
+use crate::runtime::SkimRuntime;
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 pub const MAX_BODY: usize = 64 * 1024 * 1024;
@@ -215,6 +219,52 @@ where
             }
         }
         _ => write_response(&mut stream, 404, "Not Found", &[], b"not found"),
+    }
+}
+
+/// The standard separated-host executor: each `POST /skim` runs a
+/// [`SkimJob`] under `deployment` against the `root` catalog — the
+/// same facade the CLI and examples use, so HTTP-served skims and
+/// in-process skims share one code path. A deployment with
+/// `fan_out > 1` shards each request across a
+/// [`crate::dpu::DpuCluster`].
+///
+/// Callers typically pass a DPU placement over
+/// [`crate::net::LinkModel::local`] — the HTTP response *is* the real
+/// output transfer, so no virtual output-transfer time should be
+/// charged.
+///
+/// Concurrent requests are isolated: each one works in its own
+/// subdirectory of `work_dir` (the server is thread-per-connection,
+/// and two requests naming the same `output` must not race on one
+/// file).
+pub fn storage_handler(
+    root: impl Into<PathBuf>,
+    work_dir: impl Into<PathBuf>,
+    runtime: Option<&'static SkimRuntime>,
+    deployment: Deployment,
+) -> impl Fn(&SkimQuery, &Timeline) -> Result<SkimHttpOutput> + Send + Sync + 'static {
+    let root = root.into();
+    let work = work_dir.into();
+    let seq = AtomicU64::new(0);
+    move |query: &SkimQuery, _timeline: &Timeline| {
+        let req_dir = work.join(format!("req{}", seq.fetch_add(1, Ordering::Relaxed)));
+        let report = SkimJob::new(query.clone())
+            .storage(&root)
+            .client_dir(&req_dir)
+            .runtime(runtime)
+            .deployment(deployment.clone())
+            .run()?;
+        let output = std::fs::read(&report.result.output_path)?;
+        // The response body is the only product; a long-running service
+        // must not accumulate one filtered file per request.
+        let _ = std::fs::remove_dir_all(&req_dir);
+        Ok(SkimHttpOutput {
+            n_events: report.result.n_events,
+            n_pass: report.result.n_pass,
+            elapsed: report.latency,
+            output,
+        })
     }
 }
 

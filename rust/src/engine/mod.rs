@@ -22,28 +22,31 @@
 //!   every selected branch is fetched and *fully* deserialized for
 //!   every cluster before evaluation.
 //!
+//! Since the API redesign these phases are **pluggable stages** of a
+//! [`pipeline::Pipeline`] (`fetch → decompress → deserialize → eval`
+//! per cluster group; `phase2 → output` per job): register custom
+//! [`pipeline::FilterStage`]s around the built-ins to extend the
+//! engine without forking it. See the [`pipeline`] module docs and
+//! `ARCHITECTURE.md`.
+//!
 //! Every stage is attributed to the job [`Timeline`] (fetch via the
 //! transport's virtual charges; decompress / deserialize / filter /
 //! output as measured compute on the configured [`Node`]).
 
 pub mod batch;
 pub mod interp;
+pub mod pipeline;
+
+pub use pipeline::{FilterStage, GroupState, Hook, Pipeline, StageCtx, StageReg, Verdict};
 
 use crate::compress::Codec;
-use crate::metrics::{Node, Stage, Timeline};
-use crate::query::plan::SkimPlan;
+use crate::metrics::{Node, Timeline};
 use crate::query::SkimQuery;
-use crate::runtime::{Batch, Capacities, CutParams, MaskResult, SkimRuntime};
-use crate::troot::{
-    basket as basket_codec, BasketInfo, BranchKind, BranchMeta, ColumnData, ColumnValues,
-    DecodedBasket, ReadAt, TRootReader, TRootWriter,
-};
+use crate::runtime::SkimRuntime;
+use crate::troot::ReadAt;
 use crate::xrootd::cache::CacheStats;
-use crate::xrootd::TTreeCache;
-use crate::{Error, Result};
-use std::collections::HashMap;
+use crate::Result;
 use std::sync::Arc;
-use std::time::Instant;
 
 /// Where decompression runs.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -87,6 +90,12 @@ pub struct EngineOpts {
     /// deserialize 16.8 s vs DPU 4.1 s on identical output ⇒ effective
     /// ≈ 4× after Amdahl losses).
     pub parallelism: f64,
+    /// Restrict the skim to events in `[start, end)` — the sharding
+    /// hook used by multi-DPU fan-out deployments
+    /// ([`crate::dpu::DpuCluster`]). `None` covers the whole file.
+    /// Shard boundaries are honored exactly; fetches stay
+    /// basket-granular at the edges.
+    pub event_range: Option<(u64, u64)>,
 }
 
 impl Default for EngineOpts {
@@ -101,6 +110,7 @@ impl Default for EngineOpts {
             max_objects: 16,
             deser_model: Some(DeserModel::root_like()),
             parallelism: 1.0,
+            event_range: None,
         }
     }
 }
@@ -136,6 +146,7 @@ impl DeserModel {
 /// Outcome of one skim run (timings live on the caller's [`Timeline`]).
 #[derive(Debug, Clone)]
 pub struct SkimResult {
+    /// Events this job covered (whole file, or its `event_range`).
     pub n_events: u64,
     pub n_pass: u64,
     /// Cumulative survivors after (preselection, +object, +HT,
@@ -152,19 +163,58 @@ pub struct SkimResult {
     pub warnings: Vec<String>,
 }
 
-/// The filtering engine. Holds an optional reference to the loaded
-/// PJRT runtime; without one, only the interpreter path is available.
+/// The filtering engine: an optional PJRT runtime handle plus the
+/// stage [`Pipeline`]. Without a runtime only the interpreter path is
+/// available; with the default pipeline it reproduces the paper's
+/// engine exactly.
 pub struct SkimEngine<'rt> {
     runtime: Option<&'rt SkimRuntime>,
+    pipeline: Pipeline,
 }
 
 impl<'rt> SkimEngine<'rt> {
+    /// An engine with the built-in stage pipeline.
     pub fn new(runtime: Option<&'rt SkimRuntime>) -> Self {
-        SkimEngine { runtime }
+        SkimEngine { runtime, pipeline: Pipeline::builtin() }
+    }
+
+    /// An engine with a caller-assembled pipeline (advanced; most
+    /// callers want [`SkimEngine::new`] + [`SkimEngine::pipeline_mut`]).
+    pub fn with_pipeline(runtime: Option<&'rt SkimRuntime>, pipeline: Pipeline) -> Self {
+        SkimEngine { runtime, pipeline }
+    }
+
+    /// The built-in pipeline extended with portable registrations
+    /// (how [`crate::coordinator::Coordinator`] threads custom stages
+    /// into every engine a deployment spins up).
+    pub fn with_stages(
+        runtime: Option<&'rt SkimRuntime>,
+        stages: &[StageReg],
+    ) -> Result<SkimEngine<'rt>> {
+        let mut engine = SkimEngine::new(runtime);
+        for reg in stages {
+            let after: Vec<&str> = reg.after.iter().map(|s| s.as_str()).collect();
+            engine.pipeline.register(reg.hook, &after, reg.stage.clone())?;
+        }
+        Ok(engine)
+    }
+
+    pub fn pipeline(&self) -> &Pipeline {
+        &self.pipeline
+    }
+
+    pub fn pipeline_mut(&mut self) -> &mut Pipeline {
+        &mut self.pipeline
     }
 
     /// Run a skim: read from `store`, write the filtered file to
     /// `output_path` (local), account all stages on `timeline`.
+    ///
+    /// Drives the stage pipeline: per cluster group the Group-hook
+    /// stages run in DAG order (a [`Verdict::Drop`] vetoes the group),
+    /// surviving passes are committed, then the Job-hook stages run
+    /// once (a `Drop` skips the rest — aborting the job if `output`
+    /// never runs).
     pub fn run(
         &self,
         store: Arc<dyn ReadAt>,
@@ -173,463 +223,34 @@ impl<'rt> SkimEngine<'rt> {
         opts: &EngineOpts,
         output_path: impl Into<std::path::PathBuf>,
     ) -> Result<SkimResult> {
-        let output_path = output_path.into();
+        let group_order = self.pipeline.ordered(Hook::Group)?;
+        let job_order = self.pipeline.ordered(Hook::Job)?;
+        let mut ctx =
+            StageCtx::new(self.runtime, store, query, timeline, opts, output_path.into())?;
 
-        // Optional TTreeCache in front of the store.
-        let cache = opts
-            .cache_bytes
-            .map(|cap| Arc::new(TTreeCache::new(store.clone(), cap)));
-        let eff_store: Arc<dyn ReadAt> = match &cache {
-            Some(c) => c.clone(),
-            None => store,
-        };
-
-        let reader = TRootReader::open(eff_store)?;
-        let meta = reader.meta().clone();
-        let plan = SkimPlan::build(query, &meta)?;
-        let mut warnings = plan.warnings.clone();
-
-        // --- evaluation strategy ---------------------------------------
-        let vectorized = opts.use_pjrt && plan.program.fits_kernel() && self.runtime.is_some();
-        if opts.use_pjrt && !vectorized {
-            warnings.push("vectorized path unavailable; using interpreter".into());
-        }
-        let caps = self
-            .runtime
-            .map(|r| r.caps)
-            .unwrap_or(Capacities { c: 12, s: 16, k_obj: 12, k_sc: 6, g: 4, n_stages: 4 });
-        let basket_events = meta.basket_events.max(1) as usize;
-        let (batch_b, m, variant) = if vectorized {
-            let rt = self.runtime.unwrap();
-            let v = rt.variant_for(basket_events);
-            (v.b, v.m, Some(v))
-        } else {
-            // The interpreter has no per-call overhead; size batches to
-            // one cluster.
-            (basket_events, opts.max_objects, None)
-        };
-        let params = if vectorized {
-            Some(CutParams::pack(&plan.program, &caps)?)
-        } else {
-            None
-        };
-
-        let n_events = meta.n_events;
-        let n_clusters = (n_events as usize).div_ceil(basket_events);
-
-        // Branch metadata lookups.
-        let branch_meta = |name: &str| -> Result<BranchMeta> { Ok(reader.branch(name)?.clone()) };
-        let criteria: Vec<BranchMeta> = plan
-            .criteria_branches
-            .iter()
-            .map(|b| branch_meta(b))
-            .collect::<Result<_>>()?;
-        let output_only: Vec<BranchMeta> = plan
-            .output_only_branches
-            .iter()
-            .map(|b| branch_meta(b))
-            .collect::<Result<_>>()?;
-
-        // Phase-1 fetch set: criteria (+ all output branches in legacy
-        // mode, fully decoded for every cluster — the baseline's cost).
-        let phase1: Vec<&BranchMeta> = if opts.two_phase {
-            criteria.iter().collect()
-        } else {
-            let mut v: Vec<&BranchMeta> = criteria.iter().collect();
-            for b in &output_only {
-                v.push(b);
-            }
-            v
-        };
-        // Branches gathered right after evaluation, from the decoded
-        // baskets: criteria∩output in two-phase mode (already in
-        // memory), all output branches in legacy mode.
-        let gather_now: Vec<&BranchMeta> = if opts.two_phase {
-            criteria
-                .iter()
-                .filter(|b| plan.output_branches.contains(&b.desc.name))
-                .collect()
-        } else {
-            plan.output_branches
-                .iter()
-                .map(|name| {
-                    phase1
-                        .iter()
-                        .find(|b| &b.desc.name == name)
-                        .copied()
-                        .expect("legacy phase1 contains all output branches")
-                })
-                .collect()
-        };
-
-        if let Some(c) = &cache {
-            let mut ranges = Vec::new();
-            for b in &phase1 {
-                for k in &b.baskets {
-                    ranges.push((k.offset, k.comp_len as usize));
+        while ctx.begin_group() {
+            let mut vetoed = false;
+            for reg in &group_order {
+                match reg.stage.run(&mut ctx)? {
+                    Verdict::Continue => {}
+                    Verdict::Drop => {
+                        vetoed = true;
+                        break;
+                    }
                 }
             }
-            c.train(ranges);
-        }
-
-        // Output accumulators.
-        let mut accs: HashMap<String, OutputAcc> = plan
-            .output_branches
-            .iter()
-            .map(|name| {
-                let bm = branch_meta(name)?;
-                Ok((name.clone(), OutputAcc::new(bm.desc.clone())))
-            })
-            .collect::<Result<_>>()?;
-
-        let mut stage_funnel = [0u64; 4];
-        let mut pass_total = 0u64;
-        let mut cluster_pass: Vec<Vec<u64>> = vec![Vec::new(); n_clusters];
-        let mut counters = FetchCounters::default();
-
-        // ---------------- phase 1 ---------------------------------------
-        // Group consecutive clusters so one kernel call evaluates up to
-        // `batch_b` events.
-        let mut cluster = 0usize;
-        while cluster < n_clusters {
-            // Build the group: (cluster, lo, n) triples.
-            let mut group: Vec<(usize, u64, usize)> = Vec::new();
-            let mut total = 0usize;
-            while cluster < n_clusters {
-                let lo = (cluster * basket_events) as u64;
-                let hi = ((cluster + 1) * basket_events).min(n_events as usize) as u64;
-                let n = (hi - lo) as usize;
-                if !group.is_empty() && total + n > batch_b {
-                    break;
-                }
-                group.push((cluster, lo, n));
-                total += n;
-                cluster += 1;
-                if total >= batch_b {
-                    break;
-                }
-            }
-
-            // Fetch + decompress + (fully) decode this group's baskets.
-            let mut decoded: Vec<HashMap<String, DecodedBasket>> =
-                Vec::with_capacity(group.len());
-            for &(_, lo, _) in &group {
-                let mut map = HashMap::new();
-                for b in &phase1 {
-                    let (raw, info) =
-                        self.fetch_raw(&reader, b, lo, timeline, opts, &mut counters)?;
-                    let dec = timeline.stage(Stage::Deserialize, opts.compute_node, || {
-                        basket_codec::decode(
-                            &b.desc,
-                            &raw,
-                            info.first_event,
-                            info.n_events as usize,
-                        )
-                    })?;
-                    // Modeled ROOT streamer cost: every event of this
-                    // basket is materialized (one GetEntry per event).
-                    if let Some(model) = opts.deser_model {
-                        timeline.add_real(
-                            Stage::Deserialize,
-                            opts.compute_node,
-                            model.cost(info.n_events as u64, raw.len() as u64, opts.parallelism),
-                        );
-                    }
-                    map.insert(b.desc.name.clone(), dec);
-                }
-                decoded.push(map);
-            }
-
-            // Evaluate the whole group.
-            if plan.criteria_branches.is_empty() {
-                // No selection: everything passes.
-                for (gi, &(cl, lo, n)) in group.iter().enumerate() {
-                    for s in &mut stage_funnel {
-                        *s += n as u64;
-                    }
-                    let passes: Vec<u64> = (lo..lo + n as u64).collect();
-                    pass_total += passes.len() as u64;
-                    self.gather_from_decoded(
-                        &gather_now,
-                        &decoded[gi],
-                        &passes,
-                        &mut accs,
-                        timeline,
-                        opts,
-                    );
-                    cluster_pass[cl] = passes;
-                }
-                continue;
-            }
-
-            // Sub-chunk only when a single cluster exceeds the batch.
-            let chunks: Vec<(usize, u64, usize, usize)> = {
-                // (group idx, chunk lo, chunk n, batch dst)
-                let mut v = Vec::new();
-                let mut dst = 0usize;
-                for (gi, &(_, lo, n)) in group.iter().enumerate() {
-                    let mut off = 0usize;
-                    while off < n {
-                        if dst == batch_b {
-                            // flush boundary handled below by eval loop
-                            dst = 0;
-                        }
-                        let take = (n - off).min(batch_b - dst);
-                        v.push((gi, lo + off as u64, take, dst));
-                        dst += take;
-                        off += take;
-                    }
-                }
-                v
-            };
-
-            // Fill + evaluate in batch_b windows.
-            let mut batch = Batch::zeroed(&caps, batch_b, m);
-            let mut window: Vec<(usize, u64, usize, usize)> = Vec::new();
-            let mut fill = 0usize;
-            let mut flush = |batch: &mut Batch,
-                             window: &mut Vec<(usize, u64, usize, usize)>|
-             -> Result<()> {
-                if window.is_empty() {
-                    return Ok(());
-                }
-                let result: MaskResult = if let Some(v) = variant {
-                    let rt = self.runtime.unwrap();
-                    let p = params.as_ref().unwrap();
-                    timeline.stage(Stage::Filter, opts.compute_node, || rt.eval(v, batch, p))?
-                } else {
-                    timeline
-                        .stage(Stage::Filter, opts.compute_node, || interp::eval(&plan.program, batch))
-                };
-                for &(gi, clo, cn, dst) in window.iter() {
-                    let (cl, _, _) = group[gi];
-                    let mut passes = Vec::new();
-                    for ev in 0..cn {
-                        let mut cum = 1.0f32;
-                        for (s, stage) in result.stages.iter().enumerate() {
-                            cum *= stage[dst + ev];
-                            stage_funnel[s] += cum as u64;
-                        }
-                        if result.mask[dst + ev] > 0.5 {
-                            passes.push(clo + ev as u64);
-                        }
-                    }
-                    if passes.is_empty() {
-                        continue;
-                    }
-                    pass_total += passes.len() as u64;
-                    self.gather_from_decoded(
-                        &gather_now,
-                        &decoded[gi],
-                        &passes,
-                        &mut accs,
-                        timeline,
-                        opts,
-                    );
-                    cluster_pass[cl].extend_from_slice(&passes);
-                }
-                window.clear();
-                *batch = Batch::zeroed(&caps, batch_b, m);
-                Ok(())
-            };
-
-            for (gi, clo, cn, dst) in chunks {
-                if dst == 0 && fill > 0 {
-                    flush(&mut batch, &mut window)?;
-                }
-                timeline.stage(Stage::Deserialize, opts.compute_node, || {
-                    batch::append(&plan.program, &decoded[gi], clo, cn, &mut batch, dst)
-                })?;
-                window.push((gi, clo, cn, dst));
-                fill = dst + cn;
-            }
-            flush(&mut batch, &mut window)?;
-        }
-
-        // ---------------- phase 2 ---------------------------------------
-        // Output-only branches, passing clusters only, **selective**
-        // per-event deserialization.
-        if opts.two_phase && !output_only.is_empty() && pass_total > 0 {
-            if let Some(c) = &cache {
-                let mut ranges = Vec::new();
-                for (cluster, passes) in cluster_pass.iter().enumerate() {
-                    if passes.is_empty() {
-                        continue;
-                    }
-                    for b in &output_only {
-                        let k = &b.baskets[cluster];
-                        ranges.push((k.offset, k.comp_len as usize));
-                    }
-                }
-                c.train(ranges);
-            }
-            for (cluster, passes) in cluster_pass.iter().enumerate() {
-                if passes.is_empty() {
-                    continue;
-                }
-                let lo = (cluster * basket_events) as u64;
-                for b in &output_only {
-                    let (raw, info) =
-                        self.fetch_raw(&reader, b, lo, timeline, opts, &mut counters)?;
-                    let acc = accs.get_mut(&b.desc.name).expect("acc exists");
-                    let appended =
-                        timeline.stage(Stage::Deserialize, opts.compute_node, || -> Result<usize> {
-                            let mut n = 0;
-                            for &ev in passes {
-                                n += acc.push_event_raw(&raw, &info, ev)?;
-                            }
-                            Ok(n)
-                        })?;
-                    // Modeled GetEntry cost: only the passing events.
-                    if let Some(model) = opts.deser_model {
-                        timeline.add_real(
-                            Stage::Deserialize,
-                            opts.compute_node,
-                            model.cost(passes.len() as u64, appended as u64, opts.parallelism),
-                        );
-                    }
-                }
+            if vetoed {
+                ctx.abort_group();
+            } else {
+                ctx.commit_group()?;
             }
         }
 
-        // ---------------- output ----------------------------------------
-        let codec = opts.output_codec.unwrap_or(meta.codec);
-        let summary = timeline.stage(Stage::OutputWrite, opts.compute_node, || {
-            let mut writer = TRootWriter::new(&output_path, codec, meta.basket_events);
-            for name in &plan.output_branches {
-                let acc = accs.remove(name).expect("acc exists");
-                let desc = acc.desc.clone();
-                writer.add_branch(desc, acc.finish())?;
-            }
-            writer.finalize()
-        })?;
-
-        Ok(SkimResult {
-            n_events,
-            n_pass: pass_total,
-            stage_funnel,
-            output_path,
-            output_bytes: summary.file_bytes,
-            baskets_fetched: counters.baskets,
-            fetched_bytes: counters.bytes,
-            cache: cache.as_ref().map(|c| c.stats()),
-            vectorized,
-            warnings,
-        })
-    }
-
-    fn gather_from_decoded(
-        &self,
-        branches: &[&BranchMeta],
-        decoded: &HashMap<String, DecodedBasket>,
-        passes: &[u64],
-        accs: &mut HashMap<String, OutputAcc>,
-        timeline: &Timeline,
-        opts: &EngineOpts,
-    ) {
-        timeline.stage(Stage::Deserialize, opts.compute_node, || {
-            for b in branches {
-                let dec = &decoded[&b.desc.name];
-                let acc = accs.get_mut(&b.desc.name).expect("acc exists");
-                for &ev in passes {
-                    acc.push_event(dec, ev);
-                }
-            }
-        });
-    }
-
-    /// Fetch + decompress the basket of `branch` covering event `lo`.
-    /// Deserialization is the caller's business (full vs selective).
-    fn fetch_raw<R: ReadAt>(
-        &self,
-        reader: &TRootReader<R>,
-        branch: &BranchMeta,
-        lo: u64,
-        timeline: &Timeline,
-        opts: &EngineOpts,
-        counters: &mut FetchCounters,
-    ) -> Result<(Vec<u8>, BasketInfo)> {
-        let idx = branch.basket_for_event(lo).ok_or_else(|| {
-            Error::Engine(format!("branch {} has no basket for event {lo}", branch.desc.name))
-        })?;
-        let info = branch.baskets[idx];
-
-        // Fetch: transport time is charged virtually by the store
-        // (wire/disk model); we track volume here.
-        let frame = reader.fetch_basket(branch, idx)?;
-        counters.baskets += 1;
-        counters.bytes += info.comp_len as u64;
-
-        // Decompress: real compute, attributed per DecompMode.
-        let t0 = Instant::now();
-        let raw = crate::compress::decompress(&frame)?;
-        let dt = t0.elapsed().as_secs_f64();
-        match opts.decomp {
-            DecompMode::Software => timeline.add_real(Stage::Decompress, opts.compute_node, dt),
-            DecompMode::HwEngine { speedup } => {
-                timeline.add_real(Stage::Decompress, Node::DpuEngine, dt / speedup.max(1e-9))
+        for reg in &job_order {
+            if let Verdict::Drop = reg.stage.run(&mut ctx)? {
+                break;
             }
         }
-        timeline.add_bytes(Stage::Decompress, raw.len() as u64);
-        Ok((raw, info))
-    }
-}
-
-#[derive(Default)]
-struct FetchCounters {
-    baskets: u64,
-    bytes: u64,
-}
-
-/// Accumulates one output branch's values for passing events.
-struct OutputAcc {
-    desc: crate::troot::BranchDesc,
-    offsets: Vec<u32>,
-    values: ColumnValues,
-}
-
-impl OutputAcc {
-    fn new(desc: crate::troot::BranchDesc) -> Self {
-        let values = ColumnValues::empty(desc.dtype);
-        OutputAcc { desc, offsets: vec![0], values }
-    }
-
-    /// Gather from an already-decoded basket (cheap copy).
-    fn push_event(&mut self, basket: &DecodedBasket, ev: u64) {
-        match self.desc.kind {
-            BranchKind::Scalar => {
-                let i = (ev - basket.first_event) as usize;
-                self.values.push_from(&basket.values, i);
-            }
-            BranchKind::Jagged => {
-                let r = basket.jagged_range(ev);
-                self.values.extend_from_range(&basket.values, r);
-                self.offsets.push(self.values.len() as u32);
-            }
-        }
-    }
-
-    /// Selectively deserialize one event straight from the raw basket
-    /// payload (the per-event `GetEntry` path used by phase 2).
-    /// Returns the number of raw bytes materialized.
-    fn push_event_raw(&mut self, raw: &[u8], info: &BasketInfo, ev: u64) -> Result<usize> {
-        let local = (ev - info.first_event) as usize;
-        let before = self.values.len();
-        basket_codec::append_event(
-            &self.desc,
-            raw,
-            info.n_events as usize,
-            local,
-            &mut self.offsets,
-            &mut self.values,
-        )?;
-        Ok((self.values.len() - before) * self.desc.dtype.size())
-    }
-
-    fn finish(self) -> ColumnData {
-        match self.desc.kind {
-            BranchKind::Scalar => ColumnData::Scalar(self.values),
-            BranchKind::Jagged => ColumnData::Jagged { offsets: self.offsets, values: self.values },
-        }
+        ctx.finish()
     }
 }

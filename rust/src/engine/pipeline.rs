@@ -1,0 +1,1273 @@
+//! The pluggable filter pipeline: SkimROOT's execution stages as
+//! netfilter-style hooks.
+//!
+//! The engine used to inline its phases (criteria fetch → decompress →
+//! deserialize/batch → cut-eval → phase-2 selective fetch → output
+//! write) in one monolithic `run`. They are now **built-in stages** of
+//! a [`Pipeline`], and users can register custom [`FilterStage`]s
+//! around them — per-branch byte accounting, sampling, extra vetoes —
+//! without forking the engine.
+//!
+//! Two hook points, mirroring the engine's execution granularity:
+//!
+//! * [`Hook::Group`] — runs once per *cluster group* (the batching unit
+//!   that packs consecutive event clusters up to the kernel's batch
+//!   capacity). Built-ins, in `after`-DAG order:
+//!   `fetch` → `decompress` → `deserialize` → `eval`.
+//! * [`Hook::Job`] — runs once after all groups. Built-ins:
+//!   `phase2` (selective output-only fetch for passing events) →
+//!   `output` (write the filtered file).
+//!
+//! Stage ordering is name-based with `after` dependencies (a DAG, not
+//! numeric priorities); ties are broken by registration order.
+//! Verdict semantics follow netfilter: [`Verdict::Continue`] means "no
+//! objection", [`Verdict::Drop`] is a veto — at the Group hook it
+//! rejects every event of the current group (remaining group stages are
+//! skipped), at the Job hook it skips the remaining job stages, which
+//! aborts the job if the `output` stage never runs.
+//!
+//! A custom stage observes and mutates the in-flight [`StageCtx`]: the
+//! current [`GroupState`] (fetched frames, decompressed bytes, decoded
+//! baskets, per-cluster pass lists), the plan, and the funnel. A stage
+//! registered `after: ["eval"]` that thins `group.passes` implements
+//! sampling; one registered `after: ["decompress"]` that sums
+//! `group.raw` byte lengths implements per-branch byte accounting.
+
+use super::{DecompMode, EngineOpts, SkimResult};
+use crate::metrics::{Node, Stage, Timeline};
+use crate::query::plan::SkimPlan;
+use crate::query::SkimQuery;
+use crate::runtime::{Batch, Capacities, CutParams, MaskResult, SkimRuntime, Variant};
+use crate::troot::{
+    basket as basket_codec, BasketInfo, BranchKind, BranchMeta, ColumnData, ColumnValues,
+    DecodedBasket, FileMeta, ReadAt, TRootReader,
+};
+use crate::xrootd::TTreeCache;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Netfilter-style stage outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// "No objection": continue with the next stage.
+    Continue,
+    /// Veto. At [`Hook::Group`] the current group's events are all
+    /// rejected and its remaining stages are skipped; at [`Hook::Job`]
+    /// the remaining job stages are skipped.
+    Drop,
+}
+
+/// Where a stage is attached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Hook {
+    /// Once per cluster group (the engine's batching unit).
+    Group,
+    /// Once per job, after every group has been processed.
+    Job,
+}
+
+/// One pipeline stage. Implementations must be `Send + Sync` so the
+/// same engine can be shared across worker threads.
+pub trait FilterStage: Send + Sync {
+    /// Unique (per hook) stage name used for `after` ordering.
+    fn name(&self) -> &str;
+    /// Run over the in-flight job/group state.
+    fn run(&self, ctx: &mut StageCtx) -> Result<Verdict>;
+}
+
+/// A registered stage plus its ordering constraints.
+pub(crate) struct Registration {
+    pub(crate) name: String,
+    pub(crate) after: Vec<String>,
+    pub(crate) stage: Arc<dyn FilterStage>,
+}
+
+/// A portable stage registration (hook + ordering + stage), used to
+/// carry custom stages through [`crate::coordinator::Coordinator`] /
+/// [`crate::SkimJob`] into every engine a deployment spins up.
+#[derive(Clone)]
+pub struct StageReg {
+    pub hook: Hook,
+    pub after: Vec<String>,
+    pub stage: Arc<dyn FilterStage>,
+}
+
+impl StageReg {
+    pub fn new(hook: Hook, after: &[&str], stage: Arc<dyn FilterStage>) -> Self {
+        StageReg { hook, after: after.iter().map(|s| s.to_string()).collect(), stage }
+    }
+}
+
+/// The stage registry for one engine: built-ins plus user stages.
+pub struct Pipeline {
+    group: Vec<Registration>,
+    job: Vec<Registration>,
+}
+
+impl Pipeline {
+    /// The standard SkimROOT pipeline (the refactored engine phases).
+    pub fn builtin() -> Pipeline {
+        let mut p = Pipeline::empty();
+        p.register(Hook::Group, &[], Arc::new(FetchStage)).expect("builtin");
+        p.register(Hook::Group, &["fetch"], Arc::new(DecompressStage)).expect("builtin");
+        p.register(Hook::Group, &["decompress"], Arc::new(DeserializeStage)).expect("builtin");
+        p.register(Hook::Group, &["deserialize"], Arc::new(EvalStage)).expect("builtin");
+        p.register(Hook::Job, &[], Arc::new(Phase2Stage)).expect("builtin");
+        p.register(Hook::Job, &["phase2"], Arc::new(OutputStage)).expect("builtin");
+        p
+    }
+
+    /// A pipeline with no stages at all (build-your-own; mostly tests).
+    pub fn empty() -> Pipeline {
+        Pipeline { group: Vec::new(), job: Vec::new() }
+    }
+
+    /// Register `stage` at `hook`, ordered after the named stages.
+    /// Names must be unique per hook; `after` references are resolved
+    /// (and cycles detected) when the pipeline is ordered at job start,
+    /// so forward references between custom stages are allowed.
+    pub fn register(
+        &mut self,
+        hook: Hook,
+        after: &[&str],
+        stage: Arc<dyn FilterStage>,
+    ) -> Result<()> {
+        let name = stage.name().to_string();
+        if name.is_empty() {
+            return Err(Error::Config("stage name must not be empty".into()));
+        }
+        let regs = match hook {
+            Hook::Group => &mut self.group,
+            Hook::Job => &mut self.job,
+        };
+        if regs.iter().any(|r| r.name == name) {
+            return Err(Error::Config(format!(
+                "duplicate stage '{name}' at {hook:?} hook"
+            )));
+        }
+        regs.push(Registration {
+            name,
+            after: after.iter().map(|s| s.to_string()).collect(),
+            stage,
+        });
+        Ok(())
+    }
+
+    /// Registered stage names at `hook`, in registration order.
+    pub fn names(&self, hook: Hook) -> Vec<String> {
+        let regs = match hook {
+            Hook::Group => &self.group,
+            Hook::Job => &self.job,
+        };
+        regs.iter().map(|r| r.name.clone()).collect()
+    }
+
+    /// Execution order at `hook` (topological over `after`, ties broken
+    /// by registration order). Errors on unknown `after` names and on
+    /// dependency cycles.
+    pub fn order(&self, hook: Hook) -> Result<Vec<String>> {
+        Ok(self.ordered(hook)?.iter().map(|r| r.name.clone()).collect())
+    }
+
+    /// Validate both hooks' DAGs without running anything.
+    pub fn validate(&self) -> Result<()> {
+        self.ordered(Hook::Group)?;
+        self.ordered(Hook::Job)?;
+        Ok(())
+    }
+
+    pub(crate) fn ordered(&self, hook: Hook) -> Result<Vec<&Registration>> {
+        let regs = match hook {
+            Hook::Group => &self.group,
+            Hook::Job => &self.job,
+        };
+        let index: HashMap<&str, usize> = regs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (r.name.as_str(), i))
+            .collect();
+        let mut indegree = vec![0usize; regs.len()];
+        let mut edges: Vec<Vec<usize>> = vec![Vec::new(); regs.len()];
+        for (i, r) in regs.iter().enumerate() {
+            for a in &r.after {
+                let &j = index.get(a.as_str()).ok_or_else(|| {
+                    Error::Config(format!(
+                        "stage '{}' is ordered after '{}', which is not registered at the {hook:?} hook",
+                        r.name, a
+                    ))
+                })?;
+                edges[j].push(i);
+                indegree[i] += 1;
+            }
+        }
+        let mut ready: Vec<usize> =
+            (0..regs.len()).filter(|&i| indegree[i] == 0).collect();
+        let mut out = Vec::with_capacity(regs.len());
+        while !ready.is_empty() {
+            ready.sort_unstable();
+            let i = ready.remove(0);
+            out.push(i);
+            for &k in &edges[i] {
+                indegree[k] -= 1;
+                if indegree[k] == 0 {
+                    ready.push(k);
+                }
+            }
+        }
+        if out.len() != regs.len() {
+            let stuck: Vec<&str> = regs
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !out.contains(i))
+                .map(|(_, r)| r.name.as_str())
+                .collect();
+            return Err(Error::Config(format!(
+                "stage dependency cycle at {hook:?} hook involving: {}",
+                stuck.join(", ")
+            )));
+        }
+        Ok(out.into_iter().map(|i| &regs[i]).collect())
+    }
+}
+
+/// Per-group scratch state flowing through the [`Hook::Group`] stages.
+pub struct GroupState {
+    /// `(cluster index, first event id, event count)` per cluster in
+    /// this group. Event ids are global; counts respect any
+    /// [`EngineOpts::event_range`] restriction at range boundaries.
+    pub clusters: Vec<(usize, u64, usize)>,
+    /// Per cluster: branch name → compressed basket frame (after the
+    /// built-in `fetch` stage). **Drained by `decompress`** — custom
+    /// stages cannot order between the built-ins, so nothing observes
+    /// frames; per-branch compressed sizes survive in each entry's
+    /// [`BasketInfo`].
+    pub frames: Vec<HashMap<String, (Vec<u8>, BasketInfo)>>,
+    /// Per cluster: branch name → raw decompressed bytes (after
+    /// `decompress`). Retained until the group commits so custom
+    /// stages can audit them — the memory cost of the observability
+    /// API (≈ one group's decompressed working set).
+    pub raw: Vec<HashMap<String, (Vec<u8>, BasketInfo)>>,
+    /// Per cluster: branch name → typed decoded basket (after
+    /// `deserialize`).
+    pub decoded: Vec<HashMap<String, DecodedBasket>>,
+    /// Passing event ids per cluster in this group (after `eval`).
+    /// Custom stages may thin these lists (sampling, extra vetoes);
+    /// whatever remains when the group commits is gathered into the
+    /// output.
+    pub passes: Vec<Vec<u64>>,
+    /// Compressed bytes fetched for this group.
+    pub fetched_bytes: u64,
+}
+
+#[derive(Default)]
+pub(crate) struct FetchCounters {
+    pub(crate) baskets: u64,
+    pub(crate) bytes: u64,
+}
+
+/// Accumulates one output branch's values for passing events.
+pub(crate) struct OutputAcc {
+    pub(crate) desc: crate::troot::BranchDesc,
+    offsets: Vec<u32>,
+    values: ColumnValues,
+}
+
+impl OutputAcc {
+    fn new(desc: crate::troot::BranchDesc) -> Self {
+        let values = ColumnValues::empty(desc.dtype);
+        OutputAcc { desc, offsets: vec![0], values }
+    }
+
+    /// Gather from an already-decoded basket (cheap copy).
+    fn push_event(&mut self, basket: &DecodedBasket, ev: u64) {
+        match self.desc.kind {
+            BranchKind::Scalar => {
+                let i = (ev - basket.first_event) as usize;
+                self.values.push_from(&basket.values, i);
+            }
+            BranchKind::Jagged => {
+                let r = basket.jagged_range(ev);
+                self.values.extend_from_range(&basket.values, r);
+                self.offsets.push(self.values.len() as u32);
+            }
+        }
+    }
+
+    /// Selectively deserialize one event straight from the raw basket
+    /// payload (the per-event `GetEntry` path used by phase 2).
+    /// Returns the number of raw bytes materialized.
+    fn push_event_raw(&mut self, raw: &[u8], info: &BasketInfo, ev: u64) -> Result<usize> {
+        let local = (ev - info.first_event) as usize;
+        let before = self.values.len();
+        basket_codec::append_event(
+            &self.desc,
+            raw,
+            info.n_events as usize,
+            local,
+            &mut self.offsets,
+            &mut self.values,
+        )?;
+        Ok((self.values.len() - before) * self.desc.dtype.size())
+    }
+
+    fn finish(self) -> ColumnData {
+        match self.desc.kind {
+            BranchKind::Scalar => ColumnData::Scalar(self.values),
+            BranchKind::Jagged => {
+                ColumnData::Jagged { offsets: self.offsets, values: self.values }
+            }
+        }
+    }
+}
+
+/// Decompress one basket frame, wall-clocking the work and attributing
+/// it per [`DecompMode`] (compute node's CPU, or the DPU's hardware
+/// engine at its calibrated speedup). The single source of truth for
+/// decompression cost accounting — both the group `decompress` stage
+/// and the phase-2 selective path go through here.
+fn decompress_attributed(timeline: &Timeline, opts: &EngineOpts, frame: &[u8]) -> Result<Vec<u8>> {
+    let t0 = Instant::now();
+    let raw = crate::compress::decompress(frame)?;
+    let dt = t0.elapsed().as_secs_f64();
+    match opts.decomp {
+        DecompMode::Software => timeline.add_real(Stage::Decompress, opts.compute_node, dt),
+        DecompMode::HwEngine { speedup } => {
+            timeline.add_real(Stage::Decompress, Node::DpuEngine, dt / speedup.max(1e-9))
+        }
+    }
+    timeline.add_bytes(Stage::Decompress, raw.len() as u64);
+    Ok(raw)
+}
+
+/// Fetch + decompress the basket of `branch` covering event `lo`,
+/// charging transport virtually (via the store) and decompression via
+/// [`decompress_attributed`]. Free function over disjoint ctx fields
+/// so callers can hold other borrows.
+fn fetch_decompress(
+    reader: &TRootReader<Arc<dyn ReadAt>>,
+    counters: &mut FetchCounters,
+    timeline: &Timeline,
+    opts: &EngineOpts,
+    branch: &BranchMeta,
+    lo: u64,
+) -> Result<(Vec<u8>, BasketInfo)> {
+    let idx = branch.basket_for_event(lo).ok_or_else(|| {
+        Error::Engine(format!(
+            "branch {} has no basket for event {lo}",
+            branch.desc.name
+        ))
+    })?;
+    let info = branch.baskets[idx];
+    let frame = reader.fetch_basket(branch, idx)?;
+    counters.baskets += 1;
+    counters.bytes += info.comp_len as u64;
+    let raw = decompress_attributed(timeline, opts, &frame)?;
+    Ok((raw, info))
+}
+
+/// The in-flight state of one skim job, visible to every stage.
+///
+/// Immutable job context (`plan`, `opts`, `timeline`, `meta`) is
+/// exposed read-only; mutable job state (`stage_funnel`, `warnings`,
+/// the current `group`) is public for stages to inspect and adjust.
+pub struct StageCtx<'a> {
+    pub opts: &'a EngineOpts,
+    pub timeline: &'a Timeline,
+    pub plan: SkimPlan,
+    /// The §3.2 funnel: cumulative survivors after (preselection,
+    /// +object, +HT, +trigger).
+    pub stage_funnel: [u64; 4],
+    /// Events committed as passing so far (updated at group commit).
+    pub pass_total: u64,
+    pub warnings: Vec<String>,
+    /// The active cluster group, `Some` between `begin_group` and
+    /// commit. Group-hook stages operate on this.
+    pub group: Option<GroupState>,
+
+    reader: TRootReader<Arc<dyn ReadAt>>,
+    meta: FileMeta,
+    cache: Option<Arc<TTreeCache<Arc<dyn ReadAt>>>>,
+    runtime: Option<&'a SkimRuntime>,
+    vectorized: bool,
+    caps: Capacities,
+    batch_b: usize,
+    m: usize,
+    variant: Option<&'a Variant>,
+    params: Option<CutParams>,
+    basket_events: usize,
+    /// Events covered by this job (the whole file, or the
+    /// `event_range` shard of it).
+    range_events: u64,
+    /// `(cluster, lo, n)` windows this job iterates, range-restricted.
+    cluster_window: Vec<(usize, u64, usize)>,
+    next_window: usize,
+    /// Branches read in phase 1 (criteria; plus all output branches in
+    /// legacy single-phase mode).
+    phase1: Vec<BranchMeta>,
+    /// Output-only branches (phase 2).
+    output_only: Vec<BranchMeta>,
+    /// Branch names gathered from decoded phase-1 baskets at commit.
+    gather_now: Vec<String>,
+    accs: HashMap<String, OutputAcc>,
+    /// Passing events per absolute cluster id (feeds phase 2).
+    cluster_pass: Vec<Vec<u64>>,
+    counters: FetchCounters,
+    output_path: PathBuf,
+    output_summary: Option<crate::troot::writer::WriteSummary>,
+}
+
+impl<'a> StageCtx<'a> {
+    pub(crate) fn new(
+        runtime: Option<&'a SkimRuntime>,
+        store: Arc<dyn ReadAt>,
+        query: &SkimQuery,
+        timeline: &'a Timeline,
+        opts: &'a EngineOpts,
+        output_path: PathBuf,
+    ) -> Result<StageCtx<'a>> {
+        // Optional TTreeCache in front of the store.
+        let cache = opts
+            .cache_bytes
+            .map(|cap| Arc::new(TTreeCache::new(store.clone(), cap)));
+        let eff_store: Arc<dyn ReadAt> = match &cache {
+            Some(c) => c.clone(),
+            None => store,
+        };
+
+        let reader = TRootReader::open(eff_store)?;
+        let meta = reader.meta().clone();
+        let plan = SkimPlan::build(query, &meta)?;
+        let mut warnings = plan.warnings.clone();
+
+        // --- evaluation strategy -------------------------------------
+        let vectorized = opts.use_pjrt && plan.program.fits_kernel() && runtime.is_some();
+        if opts.use_pjrt && !vectorized {
+            warnings.push("vectorized path unavailable; using interpreter".into());
+        }
+        let caps = runtime
+            .map(|r| r.caps)
+            .unwrap_or(Capacities { c: 12, s: 16, k_obj: 12, k_sc: 6, g: 4, n_stages: 4 });
+        let basket_events = meta.basket_events.max(1) as usize;
+        let (batch_b, m, variant) = if vectorized {
+            let rt = runtime.unwrap();
+            let v = rt.variant_for(basket_events);
+            (v.b, v.m, Some(v))
+        } else {
+            // The interpreter has no per-call overhead; size batches to
+            // one cluster.
+            (basket_events, opts.max_objects, None)
+        };
+        let params = if vectorized {
+            Some(CutParams::pack(&plan.program, &caps)?)
+        } else {
+            None
+        };
+
+        // --- event range (whole file, or one shard of it) ------------
+        let (start, end) = {
+            let (s, e) = opts.event_range.unwrap_or((0, meta.n_events));
+            (s.min(meta.n_events), e.min(meta.n_events))
+        };
+        let range_events = end.saturating_sub(start);
+        let n_clusters_total = (meta.n_events as usize).div_ceil(basket_events);
+        let mut cluster_window = Vec::new();
+        if start < end {
+            let first = (start / basket_events as u64) as usize;
+            let last = (end as usize).div_ceil(basket_events);
+            for cluster in first..last {
+                let lo = ((cluster * basket_events) as u64).max(start);
+                let hi = (((cluster + 1) * basket_events) as u64).min(end);
+                if lo < hi {
+                    cluster_window.push((cluster, lo, (hi - lo) as usize));
+                }
+            }
+        }
+
+        // --- branch sets ---------------------------------------------
+        let branch_meta =
+            |name: &str| -> Result<BranchMeta> { Ok(reader.branch(name)?.clone()) };
+        let criteria: Vec<BranchMeta> = plan
+            .criteria_branches
+            .iter()
+            .map(|b| branch_meta(b))
+            .collect::<Result<_>>()?;
+        let output_only: Vec<BranchMeta> = plan
+            .output_only_branches
+            .iter()
+            .map(|b| branch_meta(b))
+            .collect::<Result<_>>()?;
+
+        // Phase-1 fetch set: criteria (+ all output branches in legacy
+        // mode, fully decoded for every cluster — the baseline's cost).
+        let mut phase1: Vec<BranchMeta> = criteria.clone();
+        if !opts.two_phase {
+            phase1.extend(output_only.iter().cloned());
+        }
+        // Branch names gathered right after evaluation from the decoded
+        // baskets: criteria∩output in two-phase mode (already in
+        // memory), all output branches in legacy mode.
+        let gather_now: Vec<String> = if opts.two_phase {
+            criteria
+                .iter()
+                .map(|b| b.desc.name.clone())
+                .filter(|n| plan.output_branches.contains(n))
+                .collect()
+        } else {
+            plan.output_branches.clone()
+        };
+
+        if let Some(c) = &cache {
+            let mut ranges = Vec::new();
+            for b in &phase1 {
+                for ki in b.baskets_for_range(start, end) {
+                    let k = &b.baskets[ki];
+                    ranges.push((k.offset, k.comp_len as usize));
+                }
+            }
+            c.train(ranges);
+        }
+
+        // Output accumulators.
+        let accs: HashMap<String, OutputAcc> = plan
+            .output_branches
+            .iter()
+            .map(|name| {
+                let bm = branch_meta(name)?;
+                Ok((name.clone(), OutputAcc::new(bm.desc.clone())))
+            })
+            .collect::<Result<_>>()?;
+
+        Ok(StageCtx {
+            opts,
+            timeline,
+            plan,
+            stage_funnel: [0; 4],
+            pass_total: 0,
+            warnings,
+            group: None,
+            reader,
+            meta,
+            cache,
+            runtime,
+            vectorized,
+            caps,
+            batch_b,
+            m,
+            variant,
+            params,
+            basket_events,
+            range_events,
+            cluster_window,
+            next_window: 0,
+            phase1,
+            output_only,
+            gather_now,
+            accs,
+            cluster_pass: vec![Vec::new(); n_clusters_total],
+            counters: FetchCounters::default(),
+            output_path,
+            output_summary: None,
+        })
+    }
+
+    /// File metadata of the input being skimmed.
+    pub fn meta(&self) -> &FileMeta {
+        &self.meta
+    }
+
+    /// Events this job covers (whole file or the shard's range).
+    pub fn n_events(&self) -> u64 {
+        self.range_events
+    }
+
+    /// Did the vectorized PJRT path evaluate this job's cuts?
+    pub fn vectorized(&self) -> bool {
+        self.vectorized
+    }
+
+    /// Start the next cluster group: pack consecutive clusters until
+    /// the batch capacity is reached. Returns false when exhausted.
+    pub(crate) fn begin_group(&mut self) -> bool {
+        if self.next_window >= self.cluster_window.len() {
+            return false;
+        }
+        let mut clusters = Vec::new();
+        let mut total = 0usize;
+        while self.next_window < self.cluster_window.len() {
+            let (cl, lo, n) = self.cluster_window[self.next_window];
+            if !clusters.is_empty() && total + n > self.batch_b {
+                break;
+            }
+            clusters.push((cl, lo, n));
+            total += n;
+            self.next_window += 1;
+            if total >= self.batch_b {
+                break;
+            }
+        }
+        let k = clusters.len();
+        self.group = Some(GroupState {
+            clusters,
+            frames: Vec::with_capacity(k),
+            raw: Vec::with_capacity(k),
+            decoded: Vec::with_capacity(k),
+            passes: vec![Vec::new(); k],
+            fetched_bytes: 0,
+        });
+        true
+    }
+
+    /// Discard the active group without committing (a stage vetoed it).
+    pub(crate) fn abort_group(&mut self) {
+        self.group = None;
+    }
+
+    /// Fold the active group's surviving passes into the job: gather
+    /// criteria∩output values from decoded baskets, record per-cluster
+    /// pass lists for phase 2.
+    pub(crate) fn commit_group(&mut self) -> Result<()> {
+        let group = match self.group.take() {
+            Some(g) => g,
+            None => return Ok(()),
+        };
+        let timeline = self.timeline;
+        let node = self.opts.compute_node;
+        for (gi, &(cl, _, _)) in group.clusters.iter().enumerate() {
+            let passes = &group.passes[gi];
+            if passes.is_empty() {
+                continue;
+            }
+            self.pass_total += passes.len() as u64;
+            let t0 = Instant::now();
+            for name in &self.gather_now {
+                let dec = group.decoded[gi].get(name).ok_or_else(|| {
+                    Error::Engine(format!("gather: missing decoded basket '{name}'"))
+                })?;
+                let acc = self.accs.get_mut(name).expect("acc exists");
+                for &ev in passes {
+                    acc.push_event(dec, ev);
+                }
+            }
+            timeline.add_real(Stage::Deserialize, node, t0.elapsed().as_secs_f64());
+            self.cluster_pass[cl].extend_from_slice(passes);
+        }
+        Ok(())
+    }
+
+    // ---------------- built-in stage bodies --------------------------
+
+    fn fetch_group(&mut self, group: &mut GroupState) -> Result<()> {
+        for &(_, lo, _) in &group.clusters {
+            let mut map = HashMap::new();
+            for b in &self.phase1 {
+                let idx = b.basket_for_event(lo).ok_or_else(|| {
+                    Error::Engine(format!(
+                        "branch {} has no basket for event {lo}",
+                        b.desc.name
+                    ))
+                })?;
+                let info = b.baskets[idx];
+                // Fetch: transport time is charged virtually by the
+                // store (wire/disk model); we track volume here.
+                let frame = self.reader.fetch_basket(b, idx)?;
+                self.counters.baskets += 1;
+                self.counters.bytes += info.comp_len as u64;
+                group.fetched_bytes += info.comp_len as u64;
+                map.insert(b.desc.name.clone(), (frame, info));
+            }
+            group.frames.push(map);
+        }
+        Ok(())
+    }
+
+    fn decompress_group(&mut self, group: &mut GroupState) -> Result<()> {
+        let timeline = self.timeline;
+        // Frames are *consumed* here: custom stages always order after
+        // the built-in chain (ties break by registration order), so
+        // nothing can observe `frames` between `fetch` and
+        // `decompress` — retaining compressed alongside raw bytes
+        // would be pure memory waste at paper scale (1749 branches).
+        for frames in std::mem::take(&mut group.frames) {
+            let mut map = HashMap::new();
+            for (name, (frame, info)) in frames {
+                let raw = decompress_attributed(timeline, self.opts, &frame)?;
+                map.insert(name, (raw, info));
+            }
+            group.raw.push(map);
+        }
+        Ok(())
+    }
+
+    fn deserialize_group(&mut self, group: &mut GroupState) -> Result<()> {
+        let timeline = self.timeline;
+        let node = self.opts.compute_node;
+        for raw_maps in &group.raw {
+            let mut map = HashMap::new();
+            for bm in &self.phase1 {
+                let desc = &bm.desc;
+                let (raw, info) = raw_maps.get(&desc.name).ok_or_else(|| {
+                    Error::Engine(format!(
+                        "deserialize: missing raw basket '{}'",
+                        desc.name
+                    ))
+                })?;
+                let t0 = Instant::now();
+                let dec = basket_codec::decode(
+                    desc,
+                    raw,
+                    info.first_event,
+                    info.n_events as usize,
+                )?;
+                timeline.add_real(Stage::Deserialize, node, t0.elapsed().as_secs_f64());
+                // Modeled ROOT streamer cost: every event of this
+                // basket is materialized (one GetEntry per event).
+                if let Some(model) = self.opts.deser_model {
+                    timeline.add_real(
+                        Stage::Deserialize,
+                        node,
+                        model.cost(info.n_events as u64, raw.len() as u64, self.opts.parallelism),
+                    );
+                }
+                map.insert(desc.name.clone(), dec);
+            }
+            group.decoded.push(map);
+        }
+        Ok(())
+    }
+
+    fn eval_group(&mut self, group: &mut GroupState) -> Result<()> {
+        if self.plan.criteria_branches.is_empty() {
+            // No selection: everything passes.
+            for (gi, &(_, lo, n)) in group.clusters.iter().enumerate() {
+                group.passes[gi] = (lo..lo + n as u64).collect();
+            }
+            for &(_, _, n) in &group.clusters {
+                for s in &mut self.stage_funnel {
+                    *s += n as u64;
+                }
+            }
+            return Ok(());
+        }
+
+        // Sub-chunk only when a single cluster exceeds the batch:
+        // (group idx, chunk lo, chunk n, batch dst).
+        let chunks: Vec<(usize, u64, usize, usize)> = {
+            let mut v = Vec::new();
+            let mut dst = 0usize;
+            for (gi, &(_, lo, n)) in group.clusters.iter().enumerate() {
+                let mut off = 0usize;
+                while off < n {
+                    if dst == self.batch_b {
+                        // Flush boundary handled below by the window loop.
+                        dst = 0;
+                    }
+                    let take = (n - off).min(self.batch_b - dst);
+                    v.push((gi, lo + off as u64, take, dst));
+                    dst += take;
+                    off += take;
+                }
+            }
+            v
+        };
+
+        // Fill + evaluate in batch_b windows.
+        let mut batch = Batch::zeroed(&self.caps, self.batch_b, self.m);
+        let mut window: Vec<(usize, u64, usize, usize)> = Vec::new();
+        for (gi, clo, cn, dst) in chunks {
+            if dst == 0 && !window.is_empty() {
+                self.flush_window(&mut batch, &mut window, group)?;
+            }
+            let timeline = self.timeline;
+            let node = self.opts.compute_node;
+            let t0 = Instant::now();
+            super::batch::append(&self.plan.program, &group.decoded[gi], clo, cn, &mut batch, dst)?;
+            timeline.add_real(Stage::Deserialize, node, t0.elapsed().as_secs_f64());
+            window.push((gi, clo, cn, dst));
+        }
+        self.flush_window(&mut batch, &mut window, group)?;
+        Ok(())
+    }
+
+    fn flush_window(
+        &mut self,
+        batch: &mut Batch,
+        window: &mut Vec<(usize, u64, usize, usize)>,
+        group: &mut GroupState,
+    ) -> Result<()> {
+        if window.is_empty() {
+            return Ok(());
+        }
+        let result = self.eval_batch(batch)?;
+        for &(gi, clo, cn, dst) in window.iter() {
+            for ev in 0..cn {
+                let mut cum = 1.0f32;
+                for (s, stage) in result.stages.iter().enumerate() {
+                    cum *= stage[dst + ev];
+                    self.stage_funnel[s] += cum as u64;
+                }
+                if result.mask[dst + ev] > 0.5 {
+                    group.passes[gi].push(clo + ev as u64);
+                }
+            }
+        }
+        window.clear();
+        *batch = Batch::zeroed(&self.caps, self.batch_b, self.m);
+        Ok(())
+    }
+
+    fn eval_batch(&self, batch: &Batch) -> Result<MaskResult> {
+        if self.vectorized {
+            let rt = self.runtime.expect("vectorized implies runtime");
+            let v = self.variant.expect("vectorized implies variant");
+            let p = self.params.as_ref().expect("vectorized implies params");
+            let timeline = self.timeline;
+            return timeline.stage(Stage::Filter, self.opts.compute_node, || {
+                rt.eval(v, batch, p)
+            });
+        }
+        let timeline = self.timeline;
+        Ok(timeline.stage(Stage::Filter, self.opts.compute_node, || {
+            super::interp::eval(&self.plan.program, batch)
+        }))
+    }
+
+    fn run_phase2(&mut self) -> Result<()> {
+        if !(self.opts.two_phase && !self.output_only.is_empty() && self.pass_total > 0) {
+            return Ok(());
+        }
+        if let Some(c) = &self.cache {
+            let mut ranges = Vec::new();
+            for (cluster, passes) in self.cluster_pass.iter().enumerate() {
+                if passes.is_empty() {
+                    continue;
+                }
+                for b in &self.output_only {
+                    let k = &b.baskets[cluster];
+                    ranges.push((k.offset, k.comp_len as usize));
+                }
+            }
+            c.train(ranges);
+        }
+        for cluster in 0..self.cluster_pass.len() {
+            if self.cluster_pass[cluster].is_empty() {
+                continue;
+            }
+            let lo = (cluster * self.basket_events) as u64;
+            for b in &self.output_only {
+                let (raw, info) = fetch_decompress(
+                    &self.reader,
+                    &mut self.counters,
+                    self.timeline,
+                    self.opts,
+                    b,
+                    lo,
+                )?;
+                let acc = self.accs.get_mut(&b.desc.name).expect("acc exists");
+                let t0 = Instant::now();
+                let mut appended = 0usize;
+                for &ev in &self.cluster_pass[cluster] {
+                    appended += acc.push_event_raw(&raw, &info, ev)?;
+                }
+                self.timeline.add_real(
+                    Stage::Deserialize,
+                    self.opts.compute_node,
+                    t0.elapsed().as_secs_f64(),
+                );
+                // Modeled GetEntry cost: only the passing events.
+                if let Some(model) = self.opts.deser_model {
+                    self.timeline.add_real(
+                        Stage::Deserialize,
+                        self.opts.compute_node,
+                        model.cost(
+                            self.cluster_pass[cluster].len() as u64,
+                            appended as u64,
+                            self.opts.parallelism,
+                        ),
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn write_output(&mut self) -> Result<()> {
+        let codec = self.opts.output_codec.unwrap_or(self.meta.codec);
+        let timeline = self.timeline;
+        let node = self.opts.compute_node;
+        let t0 = Instant::now();
+        let mut writer = crate::troot::TRootWriter::new(
+            self.output_path.clone(),
+            codec,
+            self.meta.basket_events,
+        );
+        for name in &self.plan.output_branches {
+            let acc = self.accs.remove(name).expect("acc exists");
+            let desc = acc.desc.clone();
+            writer.add_branch(desc, acc.finish())?;
+        }
+        let summary = writer.finalize()?;
+        timeline.add_real(Stage::OutputWrite, node, t0.elapsed().as_secs_f64());
+        self.output_summary = Some(summary);
+        Ok(())
+    }
+
+    /// Close the job and produce the [`SkimResult`]. Errors if no
+    /// `output` stage ran (e.g. a Job-hook stage vetoed it).
+    pub(crate) fn finish(self) -> Result<SkimResult> {
+        let summary = self.output_summary.ok_or_else(|| {
+            Error::Engine(
+                "pipeline finished without writing output (job vetoed, or no 'output' stage)"
+                    .into(),
+            )
+        })?;
+        Ok(SkimResult {
+            n_events: self.range_events,
+            n_pass: self.pass_total,
+            stage_funnel: self.stage_funnel,
+            output_path: self.output_path,
+            output_bytes: summary.file_bytes,
+            baskets_fetched: self.counters.baskets,
+            fetched_bytes: self.counters.bytes,
+            cache: self.cache.as_ref().map(|c| c.stats()),
+            vectorized: self.vectorized,
+            warnings: self.warnings,
+        })
+    }
+}
+
+// ---------------- built-in stages ------------------------------------
+
+/// Built-in: fetch this group's criteria baskets (compressed frames).
+struct FetchStage;
+impl FilterStage for FetchStage {
+    fn name(&self) -> &str {
+        "fetch"
+    }
+    fn run(&self, ctx: &mut StageCtx) -> Result<Verdict> {
+        let mut group = match ctx.group.take() {
+            Some(g) => g,
+            None => return Ok(Verdict::Continue),
+        };
+        let r = ctx.fetch_group(&mut group);
+        ctx.group = Some(group);
+        r?;
+        Ok(Verdict::Continue)
+    }
+}
+
+/// Built-in: decompress fetched frames (software CPU or DPU engine).
+struct DecompressStage;
+impl FilterStage for DecompressStage {
+    fn name(&self) -> &str {
+        "decompress"
+    }
+    fn run(&self, ctx: &mut StageCtx) -> Result<Verdict> {
+        let mut group = match ctx.group.take() {
+            Some(g) => g,
+            None => return Ok(Verdict::Continue),
+        };
+        let r = ctx.decompress_group(&mut group);
+        ctx.group = Some(group);
+        r?;
+        Ok(Verdict::Continue)
+    }
+}
+
+/// Built-in: deserialize raw baskets into typed columns (plus the
+/// modeled ROOT `GetEntry` cost).
+struct DeserializeStage;
+impl FilterStage for DeserializeStage {
+    fn name(&self) -> &str {
+        "deserialize"
+    }
+    fn run(&self, ctx: &mut StageCtx) -> Result<Verdict> {
+        let mut group = match ctx.group.take() {
+            Some(g) => g,
+            None => return Ok(Verdict::Continue),
+        };
+        let r = ctx.deserialize_group(&mut group);
+        ctx.group = Some(group);
+        r?;
+        Ok(Verdict::Continue)
+    }
+}
+
+/// Built-in: batch assembly + cut evaluation (PJRT kernel or the
+/// scalar interpreter), populating per-cluster pass lists + the funnel.
+struct EvalStage;
+impl FilterStage for EvalStage {
+    fn name(&self) -> &str {
+        "eval"
+    }
+    fn run(&self, ctx: &mut StageCtx) -> Result<Verdict> {
+        let mut group = match ctx.group.take() {
+            Some(g) => g,
+            None => return Ok(Verdict::Continue),
+        };
+        let r = ctx.eval_group(&mut group);
+        ctx.group = Some(group);
+        r?;
+        Ok(Verdict::Continue)
+    }
+}
+
+/// Built-in: phase-2 selective fetch — output-only branches, passing
+/// clusters only, per-event deserialization of passers.
+struct Phase2Stage;
+impl FilterStage for Phase2Stage {
+    fn name(&self) -> &str {
+        "phase2"
+    }
+    fn run(&self, ctx: &mut StageCtx) -> Result<Verdict> {
+        ctx.run_phase2()?;
+        Ok(Verdict::Continue)
+    }
+}
+
+/// Built-in: encode + write the filtered output file.
+struct OutputStage;
+impl FilterStage for OutputStage {
+    fn name(&self) -> &str {
+        "output"
+    }
+    fn run(&self, ctx: &mut StageCtx) -> Result<Verdict> {
+        ctx.write_output()?;
+        Ok(Verdict::Continue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::engine::{EngineOpts, SkimEngine};
+    use crate::gen::{self, GenConfig};
+    use crate::troot::LocalFile;
+    use std::sync::Mutex;
+
+    // ---------------- ordering / registration ------------------------
+
+    struct Named(&'static str);
+    impl FilterStage for Named {
+        fn name(&self) -> &str {
+            self.0
+        }
+        fn run(&self, _ctx: &mut StageCtx) -> Result<Verdict> {
+            Ok(Verdict::Continue)
+        }
+    }
+
+    #[test]
+    fn builtin_order_matches_paper_phases() {
+        let p = Pipeline::builtin();
+        assert_eq!(
+            p.order(Hook::Group).unwrap(),
+            vec!["fetch", "decompress", "deserialize", "eval"]
+        );
+        assert_eq!(p.order(Hook::Job).unwrap(), vec!["phase2", "output"]);
+    }
+
+    #[test]
+    fn custom_stage_ordered_by_after() {
+        let mut p = Pipeline::builtin();
+        p.register(Hook::Group, &["eval"], Arc::new(Named("sample"))).unwrap();
+        p.register(Hook::Group, &["decompress"], Arc::new(Named("audit"))).unwrap();
+        let order = p.order(Hook::Group).unwrap();
+        let pos = |n: &str| order.iter().position(|x| x == n).unwrap();
+        assert!(pos("sample") > pos("eval"));
+        assert!(pos("audit") > pos("decompress"));
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut p = Pipeline::builtin();
+        assert!(p.register(Hook::Group, &[], Arc::new(Named("eval"))).is_err());
+        // Same name at the *other* hook is fine.
+        assert!(p.register(Hook::Job, &[], Arc::new(Named("eval"))).is_ok());
+    }
+
+    #[test]
+    fn unknown_after_is_error() {
+        let mut p = Pipeline::builtin();
+        p.register(Hook::Group, &["nonexistent"], Arc::new(Named("x"))).unwrap();
+        let err = p.order(Hook::Group).unwrap_err();
+        assert!(format!("{err}").contains("nonexistent"));
+    }
+
+    #[test]
+    fn cycle_is_error() {
+        let mut p = Pipeline::empty();
+        p.register(Hook::Group, &["b"], Arc::new(Named("a"))).unwrap();
+        p.register(Hook::Group, &["a"], Arc::new(Named("b"))).unwrap();
+        let err = p.validate().unwrap_err();
+        assert!(format!("{err}").contains("cycle"));
+    }
+
+    #[test]
+    fn forward_reference_between_custom_stages_resolves() {
+        let mut p = Pipeline::builtin();
+        // "late" is registered before "early" but ordered after it.
+        p.register(Hook::Group, &["early"], Arc::new(Named("late"))).unwrap();
+        p.register(Hook::Group, &["eval"], Arc::new(Named("early"))).unwrap();
+        let order = p.order(Hook::Group).unwrap();
+        let pos = |n: &str| order.iter().position(|x| x == n).unwrap();
+        assert!(pos("late") > pos("early"));
+    }
+
+    // ---------------- end-to-end with custom stages -------------------
+
+    fn dataset() -> std::path::PathBuf {
+        static PATH: std::sync::OnceLock<std::path::PathBuf> = std::sync::OnceLock::new();
+        PATH.get_or_init(|| {
+            let dir = std::env::temp_dir().join(format!("pipe_test_{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let path = dir.join("events.troot");
+            let cfg = GenConfig {
+                n_events: 900,
+                target_branches: 170,
+                n_hlt: 40,
+                basket_events: 200,
+                codec: Codec::Lz4,
+                seed: 21,
+            };
+            gen::generate(&cfg, &path).unwrap();
+            path
+        })
+        .clone()
+    }
+
+    fn run_skim(engine: &SkimEngine, outname: &str, opts: &EngineOpts) -> SkimResult {
+        let path = dataset();
+        let store: Arc<dyn ReadAt> = Arc::new(LocalFile::open(&path).unwrap());
+        let tl = Timeline::new();
+        let out = path.parent().unwrap().join(outname);
+        engine
+            .run(store, &gen::higgs_query("events.troot", outname), &tl, opts, &out)
+            .unwrap()
+    }
+
+    /// A sampling stage: keeps only even event ids after `eval`.
+    struct EvenSampler;
+    impl FilterStage for EvenSampler {
+        fn name(&self) -> &str {
+            "even-sampler"
+        }
+        fn run(&self, ctx: &mut StageCtx) -> Result<Verdict> {
+            if let Some(group) = &mut ctx.group {
+                for passes in &mut group.passes {
+                    passes.retain(|ev| ev % 2 == 0);
+                }
+            }
+            Ok(Verdict::Continue)
+        }
+    }
+
+    /// A per-branch byte-accounting stage hooked after `decompress`.
+    struct ByteAudit {
+        bytes: Mutex<std::collections::BTreeMap<String, u64>>,
+    }
+    impl FilterStage for ByteAudit {
+        fn name(&self) -> &str {
+            "byte-audit"
+        }
+        fn run(&self, ctx: &mut StageCtx) -> Result<Verdict> {
+            if let Some(group) = &ctx.group {
+                let mut tab = self.bytes.lock().unwrap();
+                for map in &group.raw {
+                    for (name, (raw, _)) in map {
+                        *tab.entry(name.clone()).or_insert(0) += raw.len() as u64;
+                    }
+                }
+            }
+            Ok(Verdict::Continue)
+        }
+    }
+
+    /// Vetoes every group.
+    struct VetoAll;
+    impl FilterStage for VetoAll {
+        fn name(&self) -> &str {
+            "veto-all"
+        }
+        fn run(&self, _ctx: &mut StageCtx) -> Result<Verdict> {
+            Ok(Verdict::Drop)
+        }
+    }
+
+    fn interp_opts() -> EngineOpts {
+        EngineOpts { use_pjrt: false, ..Default::default() }
+    }
+
+    #[test]
+    fn sampling_stage_thins_passes() {
+        let baseline = run_skim(&SkimEngine::new(None), "pipe_base.troot", &interp_opts());
+        assert!(baseline.n_pass > 0);
+
+        let mut engine = SkimEngine::new(None);
+        engine
+            .pipeline_mut()
+            .register(Hook::Group, &["eval"], Arc::new(EvenSampler))
+            .unwrap();
+        let sampled = run_skim(&engine, "pipe_sampled.troot", &interp_opts());
+        assert!(sampled.n_pass < baseline.n_pass);
+        // The output file is consistent with the thinned selection.
+        let r = TRootReader::open(
+            LocalFile::open(dataset().parent().unwrap().join("pipe_sampled.troot")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(r.n_events(), sampled.n_pass);
+    }
+
+    #[test]
+    fn byte_audit_stage_observes_decompressed_bytes() {
+        let audit = Arc::new(ByteAudit { bytes: Mutex::new(Default::default()) });
+        let mut engine = SkimEngine::new(None);
+        engine
+            .pipeline_mut()
+            .register(Hook::Group, &["decompress"], audit.clone())
+            .unwrap();
+        let res = run_skim(&engine, "pipe_audit.troot", &interp_opts());
+        assert!(res.n_pass > 0);
+        let tab = audit.bytes.lock().unwrap();
+        // Every criteria branch shows up with nonzero raw bytes.
+        assert!(!tab.is_empty());
+        assert!(tab.values().all(|&b| b > 0));
+        assert!(tab.contains_key("Jet_pt"));
+    }
+
+    #[test]
+    fn group_veto_drops_every_event() {
+        let mut engine = SkimEngine::new(None);
+        engine
+            .pipeline_mut()
+            .register(Hook::Group, &["eval"], Arc::new(VetoAll))
+            .unwrap();
+        let res = run_skim(&engine, "pipe_veto.troot", &interp_opts());
+        assert_eq!(res.n_pass, 0);
+        let r = TRootReader::open(
+            LocalFile::open(dataset().parent().unwrap().join("pipe_veto.troot")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(r.n_events(), 0);
+    }
+
+    #[test]
+    fn event_range_shards_partition_the_selection() {
+        let full = run_skim(&SkimEngine::new(None), "pipe_full.troot", &interp_opts());
+        let half = 450u64;
+        let lo_opts =
+            EngineOpts { use_pjrt: false, event_range: Some((0, half)), ..Default::default() };
+        let hi_opts =
+            EngineOpts { use_pjrt: false, event_range: Some((half, u64::MAX)), ..Default::default() };
+        let lo = run_skim(&SkimEngine::new(None), "pipe_lo.troot", &lo_opts);
+        let hi = run_skim(&SkimEngine::new(None), "pipe_hi.troot", &hi_opts);
+        assert_eq!(lo.n_events + hi.n_events, full.n_events);
+        assert_eq!(lo.n_pass + hi.n_pass, full.n_pass);
+        for s in 0..4 {
+            assert_eq!(lo.stage_funnel[s] + hi.stage_funnel[s], full.stage_funnel[s]);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! [`SkimJob`] — the top-level facade: one fluent entry point that the
+//! CLI, the DPU HTTP service, the eval harness and the examples all
+//! share.
+//!
+//! A job is a query plus a [`Deployment`] (where filtering runs, over
+//! which links) plus the local context (storage root, client output
+//! directory, optional PJRT runtime) plus any custom pipeline stages:
+//!
+//! ```ignore
+//! let report = SkimJob::new(query)
+//!     .storage("eval_data/storage")
+//!     .client_dir("eval_data/client")
+//!     .deployment(Deployment::skim_root(LinkModel::wan_1g()))
+//!     .stage(Hook::Group, &["eval"], Arc::new(MySampler))
+//!     .run()?;
+//! ```
+
+use crate::coordinator::{Coordinator, Deployment, JobReport};
+use crate::engine::{FilterStage, Hook, StageReg};
+use crate::net::LinkModel;
+use crate::query::SkimQuery;
+use crate::runtime::SkimRuntime;
+use crate::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// A configured skim job, ready to run. See the module docs.
+pub struct SkimJob<'rt> {
+    query: SkimQuery,
+    deployment: Deployment,
+    storage_root: PathBuf,
+    client_dir: PathBuf,
+    runtime: Option<&'rt SkimRuntime>,
+    stages: Vec<StageReg>,
+}
+
+impl<'rt> SkimJob<'rt> {
+    /// A job for `query` with defaults: the SkimROOT (DPU) preset over
+    /// a 1 Gbps WAN, storage in the current directory, outputs under
+    /// `skim_client/`, interpreter evaluation (no runtime).
+    pub fn new(query: SkimQuery) -> Self {
+        SkimJob {
+            query,
+            deployment: Deployment::skim_root(LinkModel::wan_1g()),
+            storage_root: PathBuf::from("."),
+            client_dir: PathBuf::from("skim_client"),
+            runtime: None,
+            stages: Vec::new(),
+        }
+    }
+
+    /// Directory the storage server exports (holds the input file).
+    pub fn storage(mut self, root: impl Into<PathBuf>) -> Self {
+        self.storage_root = root.into();
+        self
+    }
+
+    /// Directory where the filtered output lands at the client.
+    pub fn client_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.client_dir = dir.into();
+        self
+    }
+
+    /// The topology to run under (preset or builder-made).
+    pub fn deployment(mut self, deployment: Deployment) -> Self {
+        self.deployment = deployment;
+        self
+    }
+
+    /// PJRT runtime for vectorized evaluation (`None` = interpreter).
+    pub fn runtime(mut self, runtime: Option<&'rt SkimRuntime>) -> Self {
+        self.runtime = runtime;
+        self
+    }
+
+    /// Register a custom pipeline stage; it is installed into every
+    /// engine the deployment spins up (all shards of a fan-out).
+    pub fn stage(mut self, hook: Hook, after: &[&str], stage: Arc<dyn FilterStage>) -> Self {
+        self.stages.push(StageReg::new(hook, after, stage));
+        self
+    }
+
+    pub fn query(&self) -> &SkimQuery {
+        &self.query
+    }
+
+    pub fn deployment_ref(&self) -> &Deployment {
+        &self.deployment
+    }
+
+    /// Execute the job (with the deployment's WLCG-style retries).
+    pub fn run(&self) -> Result<JobReport> {
+        let coord = Coordinator::new(&self.storage_root, &self.client_dir, self.runtime);
+        coord.run_job_with(&self.query, &self.deployment, &self.stages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::coordinator::Placement;
+    use crate::engine::{StageCtx, Verdict};
+    use crate::gen::{self, GenConfig};
+
+    fn setup(tag: &str) -> (PathBuf, PathBuf) {
+        let dir = std::env::temp_dir().join(format!("job_{}_{tag}", std::process::id()));
+        let storage = dir.join("storage");
+        let client = dir.join("client");
+        std::fs::create_dir_all(&storage).unwrap();
+        let path = storage.join("events.troot");
+        if !path.exists() {
+            let cfg = GenConfig {
+                n_events: 700,
+                target_branches: 170,
+                n_hlt: 40,
+                basket_events: 200,
+                codec: Codec::Lz4,
+                seed: 5,
+            };
+            gen::generate(&cfg, &path).unwrap();
+        }
+        (storage, client)
+    }
+
+    #[test]
+    fn facade_runs_preset_deployment() {
+        let (storage, client) = setup("preset");
+        let report = SkimJob::new(gen::higgs_query("events.troot", "out.troot"))
+            .storage(&storage)
+            .client_dir(&client)
+            .run()
+            .unwrap();
+        assert_eq!(report.name, "skimroot");
+        assert!(report.result.n_pass > 0);
+        assert!(client.join("out.troot").exists());
+    }
+
+    /// Counts groups seen — exercises custom stages through the facade.
+    struct GroupCounter {
+        seen: std::sync::atomic::AtomicU64,
+    }
+    impl FilterStage for GroupCounter {
+        fn name(&self) -> &str {
+            "group-counter"
+        }
+        fn run(&self, ctx: &mut StageCtx) -> Result<Verdict> {
+            if ctx.group.is_some() {
+                self.seen.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            Ok(Verdict::Continue)
+        }
+    }
+
+    #[test]
+    fn facade_threads_custom_stages_into_deployments() {
+        let (storage, client) = setup("stages");
+        let counter = Arc::new(GroupCounter { seen: std::sync::atomic::AtomicU64::new(0) });
+        let dep = Deployment::builder()
+            .name("counted")
+            .placement(Placement::Client)
+            .link(LinkModel::dedicated_100g())
+            .use_pjrt(false)
+            .build()
+            .unwrap();
+        let report = SkimJob::new(gen::higgs_query("events.troot", "counted.troot"))
+            .storage(&storage)
+            .client_dir(&client)
+            .deployment(dep)
+            .stage(Hook::Group, &["eval"], counter.clone())
+            .run()
+            .unwrap();
+        assert!(report.result.n_pass > 0);
+        assert!(counter.seen.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    }
+}

@@ -1,24 +1,49 @@
 //! # SkimROOT — near-storage LHC data filtering
 //!
 //! Reproduction of *"SkimROOT: Accelerating LHC Data Filtering with
-//! Near-Storage Processing"* (CS.DC 2025) as a three-layer
-//! Rust + JAX + Pallas system:
+//! Near-Storage Processing"* (cs.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system, organized around two open APIs (see
+//! `ARCHITECTURE.md` for the full design):
 //!
-//! * **Layer 3 (this crate)** — the coordinator: a ROOT-like columnar
-//!   storage substrate ([`troot`]), compression codecs ([`compress`]),
-//!   an XRootD-like remote-access protocol with TTreeCache prefetching
-//!   ([`xrootd`]), a simulated network fabric ([`net`]), the JSON query
-//!   front-end ([`query`]), the two-phase multi-stage filtering engine
-//!   ([`engine`]), the DPU near-storage node model ([`dpu`]), and the
-//!   job coordinator ([`coordinator`]).
+//! ## The execution API, in two layers
+//!
+//! * **Stage pipeline** ([`engine::pipeline`]) — the skim itself is a
+//!   sequence of pluggable [`FilterStage`]s with netfilter-style
+//!   [`Verdict`] semantics (`Continue` / `Drop`), registered by name
+//!   with `after` ordering at two hooks: per cluster **group**
+//!   (`fetch → decompress → deserialize → eval`) and per **job**
+//!   (`phase2 → output`). Custom stages — byte accounting, sampling,
+//!   extra vetoes — slot in without forking the engine.
+//! * **Open topology** ([`coordinator`]) — *where* filtering runs is a
+//!   [`Deployment`] built from [`Placement`] (`Client`, `Server`, or
+//!   `Dpu(DpuConfig)`), link/disk models, execution policy, and an
+//!   optional multi-DPU `fan_out`. The paper's four methods
+//!   ([`Mode`]) are thin presets over the same builder, so the
+//!   Figure 4/5 comparison rows are ordinary deployments.
+//!
+//! [`SkimJob`] is the top-level facade tying both together; the CLI
+//! (`main.rs`), the DPU HTTP service ([`dpu::http`]), the eval harness
+//! ([`coordinator::eval`]) and the `examples/` all go through it.
+//!
+//! ## The three layers
+//!
+//! * **Layer 3 (this crate)** — a ROOT-like columnar storage substrate
+//!   ([`troot`]), compression codecs ([`compress`]), an XRootD-like
+//!   remote-access protocol with TTreeCache prefetching ([`xrootd`]),
+//!   a simulated network fabric ([`net`]), the JSON query front-end
+//!   ([`query`]), the two-phase multi-stage filtering engine
+//!   ([`engine`]), the DPU near-storage node and cluster models
+//!   ([`dpu`]), and the job coordinator ([`coordinator`]).
 //! * **Layer 2** — `python/compile/model.py`: the JAX selection graph
 //!   (preselection → object-level → event-level) lowered once to HLO
 //!   text by `python/compile/aot.py`.
 //! * **Layer 1** — `python/compile/kernels/skim.py`: the Pallas
 //!   cut-evaluation kernel that the JAX graph calls.
 //!
-//! Python never runs on the request path: the Rust binary loads the AOT
-//! artifacts through [`runtime`] (PJRT CPU client via the `xla` crate).
+//! Python never runs on the request path: the Rust binary loads the
+//! AOT artifacts through [`runtime`] (PJRT CPU client via the `xla`
+//! crate, behind the `pjrt` cargo feature; the default build uses the
+//! bit-identical scalar interpreter).
 
 pub mod cli;
 pub mod compress;
@@ -26,6 +51,7 @@ pub mod coordinator;
 pub mod dpu;
 pub mod engine;
 pub mod gen;
+pub mod job;
 pub mod metrics;
 pub mod net;
 pub mod query;
@@ -33,6 +59,10 @@ pub mod runtime;
 pub mod troot;
 pub mod util;
 pub mod xrootd;
+
+pub use coordinator::{Deployment, JobReport, Mode, Placement};
+pub use engine::{FilterStage, Hook, StageCtx, Verdict};
+pub use job::SkimJob;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;

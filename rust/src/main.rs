@@ -16,16 +16,16 @@
 
 use skimroot::cli::Args;
 use skimroot::compress::Codec;
-use skimroot::coordinator::{eval, Coordinator, Deployment, FaultConfig, Mode};
-use skimroot::dpu::http::{post_skim, DpuHttpServer, SkimHttpOutput};
-use skimroot::dpu::{DpuConfig, DpuNode};
+use skimroot::coordinator::{eval, Deployment, FaultConfig, Mode, Placement};
+use skimroot::dpu::http::{self, post_skim, DpuHttpServer};
+use skimroot::dpu::DpuConfig;
 use skimroot::gen::{self, GenConfig};
 use skimroot::metrics::Node;
 use skimroot::net::{DiskModel, LinkModel};
 use skimroot::query::SkimQuery;
 use skimroot::runtime::SkimRuntime;
 use skimroot::xrootd::XrdServer;
-use skimroot::{Error, Result};
+use skimroot::{Error, Result, SkimJob};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
@@ -65,10 +65,12 @@ COMMANDS:
   gen    --out FILE --events N [--branches 1749] [--hlt 677]
          [--basket 1000] [--codec lz4|zlib|xz|none] [--seed N]
   skim   --storage DIR (--query FILE | --higgs --input NAME)
-         [--mode client|client-opt|server|skimroot] [--link 1g|10g|100g]
-         [--artifacts DIR] [--client-dir DIR] [--fail-prob P] [--retries N]
+         [--mode client-legacy|client-opt|server-side|skimroot]
+         [--link 1g|10g|100g] [--fan-out N] [--artifacts DIR]
+         [--client-dir DIR] [--fail-prob P] [--retries N]
   serve  --root DIR --listen ADDR
   dpu    --root DIR --listen ADDR [--artifacts DIR] [--scratch DIR]
+         [--fan-out N]
   post   --dpu ADDR --query FILE --out FILE
   eval   --dir DIR [--fig 4a|4b|5a|5b|all] [--scale small|standard]
          [--artifacts DIR]"
@@ -145,12 +147,17 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
         max_retries: args.parse_num("retries", 3u32)?,
         seed: args.parse_num("fault-seed", 0u64)?,
     };
+    deployment.fan_out = args.parse_num("fan-out", 1usize)?;
 
-    let coord = Coordinator::new(storage, client_dir, runtime.as_ref());
-    let report = coord.run_job(&query, &deployment)?;
+    let report = SkimJob::new(query)
+        .storage(storage)
+        .client_dir(client_dir)
+        .runtime(runtime.as_ref())
+        .deployment(deployment)
+        .run()?;
     println!(
         "mode={} events={} pass={} ({:.3}%) attempts={} output={}",
-        report.mode.name(),
+        report.name,
         report.result.n_events,
         report.result.n_pass,
         100.0 * report.result.n_pass as f64 / report.result.n_events.max(1) as f64,
@@ -188,6 +195,7 @@ fn cmd_dpu(raw: Vec<String>) -> Result<()> {
     let root = args.require("root")?.to_string();
     let listen = args.require("listen")?;
     let scratch = args.get_or("scratch", "dpu_scratch").to_string();
+    let fan_out = args.parse_num("fan-out", 1usize)?;
     let runtime = load_runtime(&args);
     // Leak the runtime: the service runs for the process lifetime and
     // handler threads need a 'static borrow.
@@ -195,20 +203,19 @@ fn cmd_dpu(raw: Vec<String>) -> Result<()> {
 
     let listener = std::net::TcpListener::bind(listen)
         .map_err(|e| Error::Config(format!("bind {listen}: {e}")))?;
-    println!("DPU service on {listen} (separated-host mode), storage root={root}");
+    println!(
+        "DPU service on {listen} (separated-host mode, fan-out {fan_out}), storage root={root}"
+    );
 
-    let server = DpuHttpServer::new(move |query: &SkimQuery, timeline| {
-        let storage = XrdServer::new(&root, DiskModel::disk_pool());
-        storage.set_timeline(Some(timeline.clone()));
-        let dpu = DpuNode::new(DpuConfig::default(), storage, runtime, &scratch);
-        let out = dpu.run_query(query, timeline)?;
-        Ok(SkimHttpOutput {
-            n_events: out.result.n_events,
-            n_pass: out.result.n_pass,
-            elapsed: timeline.elapsed(),
-            output: out.output,
-        })
-    });
+    // Each POST /skim runs a SkimJob with DPU placement over `root`;
+    // the local link leaves the (real) HTTP transfer uncharged.
+    let deployment = Deployment::builder()
+        .name("dpu-http")
+        .placement(Placement::Dpu(DpuConfig::default()))
+        .link(LinkModel::local())
+        .fan_out(fan_out)
+        .build()?;
+    let server = DpuHttpServer::new(http::storage_handler(root, scratch, runtime, deployment));
     let stop = Arc::new(AtomicBool::new(false));
     server.serve(listener, stop).join().ok();
     Ok(())

@@ -166,6 +166,42 @@ impl Timeline {
         *tab.counters.entry(name).or_insert(0) += n;
     }
 
+    /// Fold another timeline's accounting into this one: real compute,
+    /// virtual transport, bytes and counters are all added. Used to
+    /// fold a parallel branch into the job timeline — e.g. a DPU
+    /// fan-out merges only its *critical* (slowest) shard's timeline,
+    /// so parallel hardware shows up as latency = max over shards, not
+    /// the sum.
+    pub fn merge_from(&self, other: &Timeline) {
+        if Arc::ptr_eq(&self.inner, &other.inner) {
+            return;
+        }
+        let (real, virt, bytes, counters) = {
+            let tab = other.inner.lock().unwrap();
+            (
+                tab.real.clone(),
+                tab.virt.clone(),
+                tab.bytes.clone(),
+                tab.counters.clone(),
+            )
+        };
+        let mut tab = self.inner.lock().unwrap();
+        for ((s, n), v) in real {
+            *tab.real.entry((s, n)).or_insert(0.0) += v;
+        }
+        for (s, v) in virt {
+            *tab.virt.entry(s).or_insert(0.0) += v;
+        }
+        for (s, b) in bytes {
+            *tab.bytes.entry(s).or_insert(0) += b;
+        }
+        for (k, c) in counters {
+            *tab.counters.entry(k).or_insert(0) += c;
+        }
+        self.virt_ns
+            .fetch_add(other.virt_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// Total stage seconds: real + virtual.
     pub fn stage_total(&self, stage: Stage) -> f64 {
         let tab = self.inner.lock().unwrap();
@@ -317,5 +353,26 @@ mod tests {
         let tl2 = tl.clone();
         tl2.charge(Stage::Other, 1.0);
         assert!((tl.stage_total(Stage::Other) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_from_folds_everything_once() {
+        let job = Timeline::new();
+        job.charge(Stage::BasketFetch, 1.0);
+        let shard = Timeline::new();
+        shard.add_real(Stage::Filter, Node::Dpu, 0.5);
+        shard.charge(Stage::BasketFetch, 2.0);
+        shard.add_bytes(Stage::BasketFetch, 100);
+        shard.count("dpu_jobs", 1);
+        job.merge_from(&shard);
+        assert!((job.stage_total(Stage::BasketFetch) - 3.0).abs() < 1e-9);
+        assert!((job.node_busy(Node::Dpu) - 0.5).abs() < 1e-9);
+        assert_eq!(job.bytes(Stage::BasketFetch), 100);
+        assert_eq!(job.counter("dpu_jobs"), 1);
+        // Merging a timeline into itself (same shared state) is a no-op.
+        let before = job.elapsed();
+        let alias = job.clone();
+        job.merge_from(&alias);
+        assert!((job.elapsed() - before).abs() < 1e-9);
     }
 }

@@ -359,6 +359,60 @@ mod tests {
     }
 
     #[test]
+    fn criteria_branch_outside_output_is_not_written() {
+        // The selection reads nElectron/HLT_IsoMu24, but the output
+        // keeps only MET_pt: criteria stay criteria (phase 1) without
+        // leaking into the output schema, and the only selected branch
+        // is output-only (phase 2).
+        let q = query(
+            r#"{
+                "input": "f", "output": "o", "branches": ["MET_pt"],
+                "selection": {
+                    "preselection": [ {"branch": "nElectron", "op": ">=", "value": 1} ],
+                    "event": {"triggers_any": ["HLT_IsoMu24"]}
+                }
+            }"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        assert_eq!(plan.output_branches, vec!["MET_pt"]);
+        assert_eq!(plan.criteria_branches, vec!["nElectron", "HLT_IsoMu24"]);
+        assert_eq!(plan.output_only_branches, vec!["MET_pt"]);
+        assert!(!plan.output_branches.contains(&"nElectron".to_string()));
+    }
+
+    #[test]
+    fn criteria_in_output_are_not_output_only() {
+        // Branches both selected and read by the selection are phase-1
+        // gathers, never phase-2 fetches.
+        let q = query(
+            r#"{
+                "input": "f", "output": "o",
+                "branches": ["MET_pt", "Jet_pt"],
+                "selection": {
+                    "event": {"ht": {"jet_pt": "Jet_pt", "object_pt_min": 30.0, "min": 100.0}}
+                }
+            }"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        assert_eq!(plan.criteria_branches, vec!["Jet_pt"]);
+        assert_eq!(plan.output_only_branches, vec!["MET_pt"]);
+        // Output keeps schema order regardless of criteria membership.
+        assert_eq!(plan.output_branches, vec!["Jet_pt", "MET_pt"]);
+    }
+
+    #[test]
+    fn curated_mapping_respects_force_all_in_plan() {
+        let forced = Q.replace(r#""branches":"#, r#""force_all": true, "branches":"#);
+        let plan = SkimPlan::build(&query(&forced), &meta()).unwrap();
+        // With force_all, the rare trigger survives into the output.
+        assert!(plan.output_branches.iter().any(|x| x == "HLT_Rare_v1"));
+        assert!(!plan.warnings.iter().any(|w| w.contains("curated")));
+        // And it lands in phase 2 (output-only), not in the criteria.
+        assert!(plan.output_only_branches.iter().any(|x| x == "HLT_Rare_v1"));
+        assert!(!plan.criteria_branches.iter().any(|x| x == "HLT_Rare_v1"));
+    }
+
+    #[test]
     fn oversized_program_warns_not_fails() {
         // 13 distinct object columns > KERNEL_MAX_OBJ_COLS.
         let mut branches = String::new();

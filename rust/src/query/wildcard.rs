@@ -219,4 +219,70 @@ mod tests {
     fn curated_list_size_matches_paper() {
         assert_eq!(CURATED_TRIGGERS.len(), 23);
     }
+
+    #[test]
+    fn glob_star_at_both_ends() {
+        assert!(glob_match("*Mu*", "HLT_IsoMu24"));
+        assert!(glob_match("*Mu*", "Mu"));
+        assert!(glob_match("*_pt*", "Jet_pt"));
+        assert!(glob_match("*_pt*", "Jet_pt_raw"));
+        assert!(!glob_match("*Mu*", "HLT_Ele32"));
+        // Leading/trailing stars may match empty runs.
+        assert!(glob_match("*Jet*", "Jet"));
+        assert!(glob_match("**x**", "x"));
+    }
+
+    #[test]
+    fn glob_question_mark_counts_chars_not_bytes() {
+        // `?` matches exactly one *character*, including multibyte ones.
+        assert!(glob_match("?", "é"));
+        assert!(glob_match("J?t_pt", "Jét_pt"));
+        assert!(glob_match("??", "ηφ"));
+        assert!(!glob_match("?", "ab"));
+        assert!(!glob_match("??", "é"));
+        // Mixed with literals and stars.
+        assert!(glob_match("*_?t", "Jet_pt"));
+        assert!(!glob_match("J?t", "Jt"));
+    }
+
+    #[test]
+    fn glob_empty_pattern_and_name_edges() {
+        assert!(glob_match("", ""));
+        assert!(!glob_match("", "x"));
+        assert!(glob_match("*", ""));
+        assert!(glob_match("***", ""));
+        assert!(!glob_match("?", ""));
+        assert!(!glob_match("a*", ""));
+    }
+
+    #[test]
+    fn expand_with_empty_pattern_warns_and_selects_nothing() {
+        let e = expand(&[String::new()], &schema(), false);
+        assert!(e.selected.is_empty());
+        assert_eq!(e.warnings.len(), 1);
+    }
+
+    #[test]
+    fn curated_mapping_only_hits_broad_hlt_wildcards() {
+        // An exact HLT name (no wildcard) bypasses the curated mapping
+        // even when the branch is not in the curated set.
+        let e = expand(&["HLT_Obscure_Path_v3".to_string()], &schema(), false);
+        assert_eq!(e.selected, vec!["HLT_Obscure_Path_v3"]);
+        assert!(e.warnings.is_empty());
+        // A narrower HLT wildcard is still "broad" (contains `*`).
+        let e2 = expand(&["HLT_*Rare*".to_string()], &schema(), false);
+        assert!(e2.selected.is_empty());
+        assert!(!e2.warnings.is_empty());
+    }
+
+    #[test]
+    fn force_all_vs_curated_on_same_schema() {
+        let curated = expand(&["HLT_*".to_string()], &schema(), false);
+        let forced = expand(&["HLT_*".to_string()], &schema(), true);
+        // force_all keeps a strict superset of the curated expansion.
+        assert!(curated.selected.iter().all(|b| forced.selected.contains(b)));
+        assert!(forced.selected.len() > curated.selected.len());
+        assert!(forced.warnings.is_empty());
+        assert!(curated.warnings[0].contains("force_all"));
+    }
 }

@@ -8,16 +8,20 @@
 //! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
 //! client, and exposes [`SkimRuntime::eval`].
 //!
+//! The PJRT/XLA backend is gated behind the **`pjrt` cargo feature**
+//! (it needs the `xla` crate, unavailable offline). Without the
+//! feature, [`SkimRuntime::load`] returns an error and every caller
+//! falls back to the scalar interpreter ([`crate::engine::interp`]),
+//! which produces bit-identical masks. The batch/parameter types below
+//! are shared by both paths and always compiled.
+//!
 //! Argument order (fixed by the manifest, keep in sync with `aot.py`):
 //! `cols[C,B,M], nobj[C,B], scalars[S,B], obj_cuts[K,5], groups[G,4],
 //! scalar_cuts[K2,5], ht[4], trig[1+S]` → tuple
 //! `(mask[B], stages[4,B], stage_counts[4], cum_counts[4], n_pass[1])`.
 
 use crate::query::plan::CutProgram;
-use crate::query::Json;
 use crate::{Error, Result};
-use std::collections::BTreeMap;
-use std::path::Path;
 
 /// Kernel capacities, read from the manifest (must agree with
 /// `crate::query::plan` constants for programs to pack).
@@ -30,36 +34,6 @@ pub struct Capacities {
     pub g: usize,
     pub n_stages: usize,
 }
-
-/// One compiled batch-shape variant.
-pub struct Variant {
-    pub name: String,
-    pub b: usize,
-    pub m: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The loaded runtime: PJRT client + compiled variants.
-pub struct SkimRuntime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    pub caps: Capacities,
-    variants: Vec<Variant>,
-    /// Serializes [`SkimRuntime::eval`]: the `xla` crate's executables
-    /// clone a non-atomic `Rc` of the client per output buffer, so all
-    /// refcount manipulation must happen under one lock.
-    exec_lock: std::sync::Mutex<()>,
-}
-
-// SAFETY: the underlying PJRT C API is thread-safe; the only
-// thread-unsafe state on the Rust side is the non-atomic `Rc` refcount
-// inside `xla::PjRtClient` / executables. All operations that touch
-// those refcounts (load-time compilation, `eval`'s buffer creation and
-// destruction) either happen before the runtime is shared or run under
-// `exec_lock`. Raw executable pointers are valid for the runtime's
-// lifetime.
-unsafe impl Send for SkimRuntime {}
-unsafe impl Sync for SkimRuntime {}
 
 /// Packed cut-program parameter bank (f32 rows as the kernel expects).
 #[derive(Debug, Clone, PartialEq)]
@@ -157,56 +131,42 @@ pub struct MaskResult {
     pub stages: Vec<Vec<f32>>,
 }
 
-impl SkimRuntime {
-    /// Load `manifest.json` + HLO artifacts from `dir` and compile.
-    pub fn load(dir: impl AsRef<Path>) -> Result<SkimRuntime> {
-        let dir = dir.as_ref();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
-            Error::Runtime(format!(
-                "cannot read {} (run `make artifacts` first): {e}",
-                manifest_path.display()
-            ))
-        })?;
-        let manifest = Json::parse(&text)?;
-        let caps_json = manifest.require("capacities")?;
-        let get = |k: &str| -> Result<usize> { Ok(caps_json.num_field(k)? as usize) };
-        let caps = Capacities {
-            c: get("C")?,
-            s: get("S")?,
-            k_obj: get("K_OBJ")?,
-            k_sc: get("K_SC")?,
-            g: get("G")?,
-            n_stages: get("N_STAGES")?,
-        };
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{SkimRuntime, Variant};
 
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
-        let mut variants = Vec::new();
-        let empty = BTreeMap::new();
-        let vmap = manifest
-            .require("variants")?
-            .as_obj()
-            .unwrap_or(&empty);
-        for (name, v) in vmap {
-            let b = v.num_field("B")? as usize;
-            let m = v.num_field("M")? as usize;
-            let file = v.str_field("file")?;
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
-                Error::Runtime(format!("parse {}: {e}", path.display()))
-            })?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
-            variants.push(Variant { name: name.clone(), b, m, exe });
-        }
-        if variants.is_empty() {
-            return Err(Error::Runtime("manifest lists no variants".into()));
-        }
-        variants.sort_by_key(|v| v.b);
-        Ok(SkimRuntime { client, caps, variants, exec_lock: std::sync::Mutex::new(()) })
+// ---------------------------------------------------------------------
+// Interpreter-only stub (default build): same surface, no PJRT. The
+// engine's `vectorized` path is unreachable because `load` never
+// yields a runtime, so the methods below only have to typecheck.
+// ---------------------------------------------------------------------
+
+/// One compiled batch-shape variant (stub: never instantiated).
+#[cfg(not(feature = "pjrt"))]
+pub struct Variant {
+    pub name: String,
+    pub b: usize,
+    pub m: usize,
+}
+
+/// The loaded runtime (stub: `load` always errors without the `pjrt`
+/// feature; callers fall back to the interpreter).
+#[cfg(not(feature = "pjrt"))]
+pub struct SkimRuntime {
+    pub caps: Capacities,
+    variants: Vec<Variant>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl SkimRuntime {
+    /// Always errors: the crate was built without the `pjrt` feature.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<SkimRuntime> {
+        Err(Error::Runtime(format!(
+            "cannot load PJRT artifacts from {}: built without the `pjrt` feature \
+             (interpreter path only; rebuild with `--features pjrt` and the `xla` crate)",
+            dir.as_ref().display()
+        )))
     }
 
     pub fn variants(&self) -> impl Iterator<Item = (&str, usize, usize)> {
@@ -219,68 +179,25 @@ impl SkimRuntime {
         self.variants
             .iter()
             .find(|v| v.b >= n)
-            .unwrap_or_else(|| self.variants.last().expect("nonempty"))
+            .unwrap_or_else(|| self.variants.last().expect("stub runtime has no variants"))
     }
 
     pub fn variant(&self, name: &str) -> Result<&Variant> {
-        self.variants
-            .iter()
-            .find(|v| v.name == name)
-            .ok_or_else(|| Error::Runtime(format!("no such variant '{name}'")))
+        Err(Error::Runtime(format!(
+            "no such variant '{name}': built without the `pjrt` feature"
+        )))
     }
 
-    /// Execute the kernel over one batch.
-    pub fn eval(&self, variant: &Variant, batch: &Batch, params: &CutParams) -> Result<MaskResult> {
-        let caps = &self.caps;
-        if batch.b != variant.b || batch.m != variant.m {
-            return Err(Error::Runtime(format!(
-                "batch shape ({}, {}) does not match variant {} ({}, {})",
-                batch.b, batch.m, variant.name, variant.b, variant.m
-            )));
-        }
-        let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
-            debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
-            xla::Literal::vec1(data)
-                .reshape(dims)
-                .map_err(|e| Error::Runtime(format!("literal reshape: {e}")))
-        };
-        // Hold the lock for the whole execute → literal extraction span:
-        // every PjRtBuffer created/dropped here clones the client Rc.
-        let _guard = self.exec_lock.lock().unwrap();
-        let args = [
-            lit(&batch.cols, &[caps.c as i64, batch.b as i64, batch.m as i64])?,
-            lit(&batch.nobj, &[caps.c as i64, batch.b as i64])?,
-            lit(&batch.scalars, &[caps.s as i64, batch.b as i64])?,
-            lit(&params.obj_cuts, &[caps.k_obj as i64, 5])?,
-            lit(&params.groups, &[caps.g as i64, 4])?,
-            lit(&params.scalar_cuts, &[caps.k_sc as i64, 5])?,
-            lit(&params.ht, &[4])?,
-            lit(&params.trig, &[1 + caps.s as i64])?,
-        ];
-        let result = variant
-            .exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| Error::Runtime(format!("execute: {e}")))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
-        let outs = result
-            .to_tuple()
-            .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
-        if outs.len() != 5 {
-            return Err(Error::Runtime(format!("expected 5 outputs, got {}", outs.len())));
-        }
-        let mask_full: Vec<f32> = outs[0]
-            .to_vec()
-            .map_err(|e| Error::Runtime(format!("mask: {e}")))?;
-        let stages_full: Vec<f32> = outs[1]
-            .to_vec()
-            .map_err(|e| Error::Runtime(format!("stages: {e}")))?;
-        let n = batch.n_valid.min(batch.b);
-        let mask = mask_full[..n].to_vec();
-        let stages = (0..caps.n_stages)
-            .map(|s| stages_full[s * batch.b..s * batch.b + n].to_vec())
-            .collect();
-        Ok(MaskResult { mask, stages })
+    /// Unreachable in stub builds (no runtime can be constructed).
+    pub fn eval(
+        &self,
+        _variant: &Variant,
+        _batch: &Batch,
+        _params: &CutParams,
+    ) -> Result<MaskResult> {
+        Err(Error::Runtime(
+            "vectorized eval unavailable: built without the `pjrt` feature".into(),
+        ))
     }
 }
 
@@ -288,18 +205,6 @@ impl SkimRuntime {
 mod tests {
     use super::*;
     use crate::query::plan::{HtParam, ObjCutParam, ObjGroup, ScalarCutParam};
-
-    fn artifacts_dir() -> std::path::PathBuf {
-        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    fn have_artifacts() -> bool {
-        artifacts_dir().join("manifest.json").exists()
-    }
-
-    fn runtime() -> SkimRuntime {
-        SkimRuntime::load(artifacts_dir()).expect("load artifacts")
-    }
 
     /// A program: ≥1 object with col0 > 25 and |col1| < 2.4, HT over
     /// col2 (pt>30) ≥ 100, trigger OR over scalar col 5.
@@ -330,85 +235,6 @@ mod tests {
     }
 
     #[test]
-    fn load_and_list_variants() {
-        if !have_artifacts() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let rt = runtime();
-        let names: Vec<_> = rt.variants().map(|(n, _, _)| n.to_string()).collect();
-        assert!(names.contains(&"small".to_string()));
-        assert!(names.contains(&"large".to_string()));
-        assert_eq!(rt.caps.c, 12);
-        assert_eq!(rt.caps.n_stages, 4);
-        // variant_for picks the smallest fitting batch.
-        assert_eq!(rt.variant_for(100).name, "small");
-        assert_eq!(rt.variant_for(1000).name, "large");
-        assert_eq!(rt.variant_for(100_000).name, "large");
-    }
-
-    #[test]
-    fn eval_matches_hand_computation() {
-        if !have_artifacts() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let rt = runtime();
-        let program = sample_program();
-        let params = CutParams::pack(&program, &rt.caps).unwrap();
-        let variant = rt.variant("small").unwrap();
-        let (b, m) = (variant.b, variant.m);
-        let mut batch = Batch::zeroed(&rt.caps, b, m);
-        batch.n_valid = 3;
-        let idx = |c: usize, ev: usize, slot: usize| (c * b + ev) * m + slot;
-
-        // Event 0: passes everything.
-        batch.cols[idx(0, 0, 0)] = 30.0; // pt 30 > 25
-        batch.cols[idx(1, 0, 0)] = 1.0;  // |eta| < 2.4
-        batch.nobj[0 * b] = 1.0;
-        batch.nobj[1 * b] = 1.0;
-        batch.cols[idx(2, 0, 0)] = 120.0; // HT 120 ≥ 100
-        batch.nobj[2 * b] = 1.0;
-        batch.scalars[0 * b] = 2.0; // nElectron ≥ 1
-        batch.scalars[5 * b] = 1.0; // trigger fired
-
-        // Event 1: fails eta.
-        batch.cols[idx(0, 1, 0)] = 30.0;
-        batch.cols[idx(1, 1, 0)] = 3.0; // |eta| ≥ 2.4
-        batch.nobj[0 * b + 1] = 1.0;
-        batch.nobj[1 * b + 1] = 1.0;
-        batch.cols[idx(2, 1, 0)] = 120.0;
-        batch.nobj[2 * b + 1] = 1.0;
-        batch.scalars[0 * b + 1] = 1.0;
-        batch.scalars[5 * b + 1] = 1.0;
-
-        // Event 2: fails preselection (nElectron = 0).
-        batch.scalars[0 * b + 2] = 0.0;
-        batch.scalars[5 * b + 2] = 1.0;
-
-        let out = rt.eval(variant, &batch, &params).unwrap();
-        assert_eq!(out.mask, vec![1.0, 0.0, 0.0]);
-        assert_eq!(out.stages[0], vec![1.0, 1.0, 0.0]); // preselection
-        assert_eq!(out.stages[1][1], 0.0); // object stage fails ev 1
-    }
-
-    #[test]
-    fn eval_empty_program_accepts_all() {
-        if !have_artifacts() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let rt = runtime();
-        let params = CutParams::pack(&CutProgram::default(), &rt.caps).unwrap();
-        let variant = rt.variant("small").unwrap();
-        let mut batch = Batch::zeroed(&rt.caps, variant.b, variant.m);
-        batch.n_valid = 10;
-        let out = rt.eval(variant, &batch, &params).unwrap();
-        assert_eq!(out.mask.len(), 10);
-        assert!(out.mask.iter().all(|&x| x == 1.0));
-    }
-
-    #[test]
     fn pack_rejects_oversized_programs() {
         let caps = Capacities { c: 12, s: 16, k_obj: 12, k_sc: 6, g: 4, n_stages: 4 };
         let mut program = CutProgram::default();
@@ -435,6 +261,8 @@ mod tests {
 
     #[test]
     fn load_missing_dir_errors() {
+        // Without `pjrt` this errors because the feature is off; with
+        // it, because the directory does not exist. Either way: Err.
         assert!(SkimRuntime::load("/nonexistent/dir").is_err());
     }
 }
