@@ -6,6 +6,12 @@
 //! batch layout, jagged collections padded/truncated to `M` object
 //! slots (selection semantics are defined over the first `M` objects;
 //! see DESIGN.md §Hardware-Adaptation).
+//!
+//! Column membership comes from the compiled [`CutProgram`]: both the
+//! fixed-function banks and any residual IR expressions register the
+//! branches they read in `obj_columns`/`scalar_columns`, so a batch
+//! assembled here always carries every column the evaluator (kernel or
+//! interpreter) will touch.
 
 use crate::query::plan::CutProgram;
 use crate::runtime::{Batch, Capacities};

@@ -7,8 +7,17 @@
 //! identical semantics (op codes, group counting over the first `M`
 //! objects, HT, trigger OR) — property tests in `rust/tests/` assert
 //! bit-identical masks against the PJRT path.
+//!
+//! Beyond the kernel's fixed-function stages, the interpreter
+//! evaluates the **full query IR**: residual [`CExpr`] expressions
+//! (arbitrary arithmetic, boolean structure and jagged aggregations
+//! compiled from [`crate::query::expr::Expr`]) run here, folded into
+//! the event-level funnel stage. Anything expressible in the IR is
+//! executable on this path; the kernel accelerates the subset that
+//! fits its capacity ([`CutProgram::fits_kernel`]).
 
-use crate::query::plan::CutProgram;
+use crate::query::expr::{AggOp, BinOp, UnaryOp};
+use crate::query::plan::{CExpr, CutProgram};
 use crate::runtime::{Batch, MaskResult};
 
 #[inline]
@@ -22,6 +31,150 @@ fn cmp(x: f32, op: u8, abs: bool, value: f32) -> bool {
         4 => x == value,
         5 => x != value,
         _ => false,
+    }
+}
+
+/// TCut truthiness: nonzero is true.
+#[inline]
+fn truthy(x: f32) -> bool {
+    x != 0.0
+}
+
+#[inline]
+fn bool_f32(b: bool) -> f32 {
+    b as u8 as f32
+}
+
+fn eval_unary(op: UnaryOp, x: f32) -> f32 {
+    match op {
+        UnaryOp::Neg => -x,
+        UnaryOp::Not => bool_f32(!truthy(x)),
+        UnaryOp::Abs => x.abs(),
+    }
+}
+
+fn eval_binary(op: BinOp, a: f32, b: f32) -> f32 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+        BinOp::Lt => bool_f32(a < b),
+        BinOp::Le => bool_f32(a <= b),
+        BinOp::Gt => bool_f32(a > b),
+        BinOp::Ge => bool_f32(a >= b),
+        BinOp::Eq => bool_f32(a == b),
+        BinOp::Ne => bool_f32(a != b),
+        BinOp::And => bool_f32(truthy(a) && truthy(b)),
+        BinOp::Or => bool_f32(truthy(a) || truthy(b)),
+        BinOp::Min => a.min(b),
+        BinOp::Max => a.max(b),
+    }
+}
+
+/// Evaluate an event-shaped compiled expression for event `ev`.
+/// Jagged references only occur inside aggregations (shape-checked at
+/// compile time); a stray one evaluates as 0.
+pub fn eval_event_expr(e: &CExpr, batch: &Batch, ev: usize) -> f32 {
+    match e {
+        CExpr::Num(v) => *v,
+        CExpr::Scalar(s) => batch.scalars[s * batch.b + ev],
+        CExpr::Jagged(_) => 0.0,
+        CExpr::Unary(op, x) => eval_unary(*op, eval_event_expr(x, batch, ev)),
+        CExpr::Binary(op, a, b) => {
+            eval_binary(*op, eval_event_expr(a, batch, ev), eval_event_expr(b, batch, ev))
+        }
+        CExpr::Agg { op, nobj, arg, pred } => {
+            // Selection semantics cover the first M object slots, like
+            // the kernel's group counting; validity comes from the
+            // representative column's multiplicity.
+            let n = (batch.nobj[nobj * batch.b + ev] as usize).min(batch.m);
+            let selected = |slot: usize| match pred {
+                Some(p) => truthy(eval_obj_expr(p, batch, ev, slot)),
+                None => true,
+            };
+            match op {
+                AggOp::Count => {
+                    let mut c = 0u32;
+                    for slot in 0..n {
+                        if selected(slot) && truthy(eval_obj_expr(arg, batch, ev, slot)) {
+                            c += 1;
+                        }
+                    }
+                    c as f32
+                }
+                AggOp::Any => {
+                    let mut any = false;
+                    for slot in 0..n {
+                        if selected(slot) && truthy(eval_obj_expr(arg, batch, ev, slot)) {
+                            any = true;
+                            break;
+                        }
+                    }
+                    bool_f32(any)
+                }
+                AggOp::All => {
+                    let mut all = true;
+                    for slot in 0..n {
+                        if selected(slot) && !truthy(eval_obj_expr(arg, batch, ev, slot)) {
+                            all = false;
+                            break;
+                        }
+                    }
+                    bool_f32(all)
+                }
+                AggOp::Sum => {
+                    let mut total = 0.0f32;
+                    for slot in 0..n {
+                        if selected(slot) {
+                            total += eval_obj_expr(arg, batch, ev, slot);
+                        }
+                    }
+                    total
+                }
+                AggOp::Max => {
+                    let mut best = f32::NEG_INFINITY;
+                    for slot in 0..n {
+                        if selected(slot) {
+                            best = best.max(eval_obj_expr(arg, batch, ev, slot));
+                        }
+                    }
+                    best
+                }
+                AggOp::Min => {
+                    let mut best = f32::INFINITY;
+                    for slot in 0..n {
+                        if selected(slot) {
+                            best = best.min(eval_obj_expr(arg, batch, ev, slot));
+                        }
+                    }
+                    best
+                }
+            }
+        }
+    }
+}
+
+/// Evaluate an object-shaped expression at object `slot` of event
+/// `ev`. Event-shaped parts (scalars, literals, nested aggregations)
+/// broadcast over slots.
+fn eval_obj_expr(e: &CExpr, batch: &Batch, ev: usize, slot: usize) -> f32 {
+    match e {
+        CExpr::Num(v) => *v,
+        CExpr::Scalar(s) => batch.scalars[s * batch.b + ev],
+        CExpr::Jagged(c) => batch.cols[(c * batch.b + ev) * batch.m + slot],
+        CExpr::Unary(op, x) => eval_unary(*op, eval_obj_expr(x, batch, ev, slot)),
+        CExpr::Binary(op, a, b) => eval_binary(
+            *op,
+            eval_obj_expr(a, batch, ev, slot),
+            eval_obj_expr(b, batch, ev, slot),
+        ),
+        // A nested aggregation is event-shaped (slot-invariant) but is
+        // re-reduced per slot here: O(M²) for cuts like
+        // `any(Muon_pt > max(Jet_pt))`. Acceptable at M ≤ 16; hoist
+        // event-shaped subtrees before the slot loop if this ever
+        // shows up hot.
+        CExpr::Agg { .. } => eval_event_expr(e, batch, ev),
     }
 }
 
@@ -61,8 +214,9 @@ pub fn eval(program: &CutProgram, batch: &Batch) -> MaskResult {
             obj &= count >= group.min_count;
         }
 
-        // stage 3: HT
-        let mut ht_ok = true;
+        // stage 3: event-level — HT unit plus residual IR expressions
+        // (anything beyond the kernel's fixed-function stages).
+        let mut event_ok = true;
         if let Some(ht) = &program.ht {
             let nv = batch.nobj[ht.col * b + ev] as usize;
             let mut total = 0.0f32;
@@ -72,7 +226,10 @@ pub fn eval(program: &CutProgram, batch: &Batch) -> MaskResult {
                     total += x;
                 }
             }
-            ht_ok = total >= ht.min_ht;
+            event_ok = total >= ht.min_ht;
+        }
+        for e in &program.exprs {
+            event_ok &= truthy(eval_event_expr(e, batch, ev));
         }
 
         // stage 4: trigger OR
@@ -87,9 +244,9 @@ pub fn eval(program: &CutProgram, batch: &Batch) -> MaskResult {
 
         stages[0][ev] = pre as u8 as f32;
         stages[1][ev] = obj as u8 as f32;
-        stages[2][ev] = ht_ok as u8 as f32;
+        stages[2][ev] = event_ok as u8 as f32;
         stages[3][ev] = trig_ok as u8 as f32;
-        mask[ev] = (pre && obj && ht_ok && trig_ok) as u8 as f32;
+        mask[ev] = (pre && obj && event_ok && trig_ok) as u8 as f32;
     }
 
     MaskResult { mask, stages }
@@ -183,5 +340,144 @@ mod tests {
         batch.nobj[2] = 1.0;
         let out = eval(&program, &batch);
         assert_eq!(out.mask, vec![1.0, 0.0, 0.0]);
+    }
+
+    // ---------------- residual IR expressions -------------------------
+
+    /// Batch with one jagged column (2 slots/object cap) and one scalar
+    /// column over 3 events: jagged [[40, 10], [5], []], scalar
+    /// [120, 50, 120].
+    fn ir_batch() -> Batch {
+        let (b, m) = (3, 2);
+        let mut batch = Batch::zeroed(&caps(), b, m);
+        batch.n_valid = 3;
+        batch.cols[0..2].copy_from_slice(&[40.0, 10.0]);
+        batch.nobj[0] = 2.0;
+        batch.cols[m] = 5.0;
+        batch.nobj[1] = 1.0;
+        batch.nobj[2] = 0.0;
+        batch.scalars[0..3].copy_from_slice(&[120.0, 50.0, 120.0]);
+        batch
+    }
+
+    #[test]
+    fn aggregation_semantics_over_jagged_slots() {
+        let batch = ir_batch();
+        let jag = || Box::new(CExpr::Jagged(0));
+        let gt20 = || {
+            Box::new(CExpr::Binary(
+                BinOp::Gt,
+                Box::new(CExpr::Jagged(0)),
+                Box::new(CExpr::Num(20.0)),
+            ))
+        };
+        let count =
+            CExpr::Agg { op: AggOp::Count, nobj: 0, arg: gt20(), pred: None };
+        assert_eq!(eval_event_expr(&count, &batch, 0), 1.0);
+        assert_eq!(eval_event_expr(&count, &batch, 1), 0.0);
+        assert_eq!(eval_event_expr(&count, &batch, 2), 0.0);
+
+        let sum_all = CExpr::Agg { op: AggOp::Sum, nobj: 0, arg: jag(), pred: None };
+        assert_eq!(eval_event_expr(&sum_all, &batch, 0), 50.0);
+        assert_eq!(eval_event_expr(&sum_all, &batch, 2), 0.0);
+
+        let sum_sel = CExpr::Agg { op: AggOp::Sum, nobj: 0, arg: jag(), pred: Some(gt20()) };
+        assert_eq!(eval_event_expr(&sum_sel, &batch, 0), 40.0);
+        assert_eq!(eval_event_expr(&sum_sel, &batch, 1), 0.0);
+
+        let max = CExpr::Agg { op: AggOp::Max, nobj: 0, arg: jag(), pred: None };
+        assert_eq!(eval_event_expr(&max, &batch, 0), 40.0);
+        assert_eq!(eval_event_expr(&max, &batch, 1), 5.0);
+        assert_eq!(eval_event_expr(&max, &batch, 2), f32::NEG_INFINITY);
+
+        let min = CExpr::Agg { op: AggOp::Min, nobj: 0, arg: jag(), pred: None };
+        assert_eq!(eval_event_expr(&min, &batch, 0), 10.0);
+        assert_eq!(eval_event_expr(&min, &batch, 2), f32::INFINITY);
+
+        let any = CExpr::Agg { op: AggOp::Any, nobj: 0, arg: gt20(), pred: None };
+        assert_eq!(eval_event_expr(&any, &batch, 0), 1.0);
+        assert_eq!(eval_event_expr(&any, &batch, 1), 0.0);
+        assert_eq!(eval_event_expr(&any, &batch, 2), 0.0);
+
+        let all = CExpr::Agg { op: AggOp::All, nobj: 0, arg: gt20(), pred: None };
+        assert_eq!(eval_event_expr(&all, &batch, 0), 0.0);
+        assert_eq!(eval_event_expr(&all, &batch, 2), 1.0); // vacuous
+    }
+
+    #[test]
+    fn arithmetic_and_boolean_ops() {
+        let batch = ir_batch();
+        // (scalar / 2 + 10) > 60 → ev0: 70 > 60 true; ev1: 35 false.
+        let e = CExpr::Binary(
+            BinOp::Gt,
+            Box::new(CExpr::Binary(
+                BinOp::Add,
+                Box::new(CExpr::Binary(
+                    BinOp::Div,
+                    Box::new(CExpr::Scalar(0)),
+                    Box::new(CExpr::Num(2.0)),
+                )),
+                Box::new(CExpr::Num(10.0)),
+            )),
+            Box::new(CExpr::Num(60.0)),
+        );
+        assert_eq!(eval_event_expr(&e, &batch, 0), 1.0);
+        assert_eq!(eval_event_expr(&e, &batch, 1), 0.0);
+
+        let not = CExpr::Unary(UnaryOp::Not, Box::new(e.clone()));
+        assert_eq!(eval_event_expr(&not, &batch, 0), 0.0);
+        assert_eq!(eval_event_expr(&not, &batch, 1), 1.0);
+
+        let neg_abs = CExpr::Unary(
+            UnaryOp::Abs,
+            Box::new(CExpr::Unary(UnaryOp::Neg, Box::new(CExpr::Scalar(0)))),
+        );
+        assert_eq!(eval_event_expr(&neg_abs, &batch, 1), 50.0);
+
+        let minmax = CExpr::Binary(
+            BinOp::Max,
+            Box::new(CExpr::Num(7.0)),
+            Box::new(CExpr::Binary(
+                BinOp::Min,
+                Box::new(CExpr::Scalar(0)),
+                Box::new(CExpr::Num(3.0)),
+            )),
+        );
+        assert_eq!(eval_event_expr(&minmax, &batch, 0), 7.0);
+    }
+
+    #[test]
+    fn residual_exprs_fold_into_event_stage() {
+        // mask = scalar > 100 || any(jagged > 20): ev0 both, ev1
+        // neither, ev2 scalar only.
+        let mut program = CutProgram::default();
+        program.scalar_columns.push("MET_pt".into());
+        program.obj_columns.push("Jet_pt".into());
+        program.exprs.push(CExpr::Binary(
+            BinOp::Or,
+            Box::new(CExpr::Binary(
+                BinOp::Gt,
+                Box::new(CExpr::Scalar(0)),
+                Box::new(CExpr::Num(100.0)),
+            )),
+            Box::new(CExpr::Agg {
+                op: AggOp::Any,
+                nobj: 0,
+                arg: Box::new(CExpr::Binary(
+                    BinOp::Gt,
+                    Box::new(CExpr::Jagged(0)),
+                    Box::new(CExpr::Num(20.0)),
+                )),
+                pred: None,
+            }),
+        ));
+        let batch = ir_batch();
+        let out = eval(&program, &batch);
+        assert_eq!(out.mask, vec![1.0, 0.0, 1.0]);
+        // Residuals are event-stage (index 2) decisions; other stages
+        // stay open.
+        assert_eq!(out.stages[2], vec![1.0, 0.0, 1.0]);
+        assert_eq!(out.stages[0], vec![1.0, 1.0, 1.0]);
+        assert_eq!(out.stages[3], vec![1.0, 1.0, 1.0]);
     }
 }

@@ -149,8 +149,9 @@ pub struct SkimResult {
     /// Events this job covered (whole file, or its `event_range`).
     pub n_events: u64,
     pub n_pass: u64,
-    /// Cumulative survivors after (preselection, +object, +HT,
-    /// +trigger) — the §3.2 funnel.
+    /// Cumulative survivors after (preselection, +object, +event,
+    /// +trigger) — the §3.2 funnel. The event stage covers the HT unit
+    /// plus any residual IR expressions of the open query frontend.
     pub stage_funnel: [u64; 4],
     pub output_path: std::path::PathBuf,
     pub output_bytes: u64,

@@ -35,7 +35,9 @@
 
 use super::{DecompMode, EngineOpts, SkimResult};
 use crate::metrics::{Node, Stage, Timeline};
-use crate::query::plan::SkimPlan;
+use crate::query::plan::{
+    SkimPlan, KERNEL_MAX_GROUPS, KERNEL_MAX_OBJ_CUTS, KERNEL_MAX_SCALAR_CUTS,
+};
 use crate::query::SkimQuery;
 use crate::runtime::{Batch, Capacities, CutParams, MaskResult, SkimRuntime, Variant};
 use crate::troot::{
@@ -447,9 +449,24 @@ impl<'a> StageCtx<'a> {
         if opts.use_pjrt && !vectorized {
             warnings.push("vectorized path unavailable; using interpreter".into());
         }
-        let caps = runtime
-            .map(|r| r.caps)
-            .unwrap_or(Capacities { c: 12, s: 16, k_obj: 12, k_sc: 6, g: 4, n_stages: 4 });
+        let caps = if vectorized {
+            runtime.expect("vectorized implies runtime").caps
+        } else {
+            // Interpreter batches are sized to the *program*, not the
+            // kernel's fixed banks: cut programs beyond kernel
+            // capacity (the fallback's whole point) still assemble
+            // without overflowing the column arrays. The cut-bank
+            // fields are unused on this path (CutParams::pack is
+            // vectorized-only); fill them with the kernel constants.
+            Capacities {
+                c: plan.program.obj_columns.len(),
+                s: plan.program.scalar_columns.len(),
+                k_obj: KERNEL_MAX_OBJ_CUTS,
+                k_sc: KERNEL_MAX_SCALAR_CUTS,
+                g: KERNEL_MAX_GROUPS,
+                n_stages: 4,
+            }
+        };
         let basket_events = meta.basket_events.max(1) as usize;
         let (batch_b, m, variant) = if vectorized {
             let rt = runtime.unwrap();
@@ -739,8 +756,10 @@ impl<'a> StageCtx<'a> {
     }
 
     fn eval_group(&mut self, group: &mut GroupState) -> Result<()> {
-        if self.plan.criteria_branches.is_empty() {
-            // No selection: everything passes.
+        if self.plan.program.is_trivial() {
+            // No cuts at all: everything passes. (Checked on the
+            // program, not the criteria list — a constant-only IR cut
+            // references no branches but still filters.)
             for (gi, &(_, lo, n)) in group.clusters.iter().enumerate() {
                 group.passes[gi] = (lo..lo + n as u64).collect();
             }

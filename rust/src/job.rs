@@ -88,6 +88,17 @@ impl<'rt> SkimJob<'rt> {
         &self.deployment
     }
 
+    /// Build and render the execution plan — the selection expression
+    /// tree, phase-1/phase-2 branch fetch sets and the kernel-fit
+    /// decision — without running the job (CLI `skim --explain`).
+    /// Reads only the input file's metadata from the storage root.
+    pub fn explain(&self) -> Result<String> {
+        let store = crate::troot::LocalFile::open(self.storage_root.join(&self.query.input))?;
+        let reader = crate::troot::TRootReader::open(store)?;
+        let plan = crate::query::plan::SkimPlan::build(&self.query, reader.meta())?;
+        Ok(plan.explain(&self.query))
+    }
+
     /// Execute the job (with the deployment's WLCG-style retries).
     pub fn run(&self) -> Result<JobReport> {
         let coord = Coordinator::new(&self.storage_root, &self.client_dir, self.runtime);
@@ -150,6 +161,41 @@ mod tests {
             }
             Ok(Verdict::Continue)
         }
+    }
+
+    #[test]
+    fn facade_explains_without_running() {
+        let (storage, client) = setup("explain");
+        let query = gen::higgs_query("events.troot", "unused.troot")
+            .with_cut_str("MET_pt > 25 || max(Jet_pt) > 60")
+            .unwrap();
+        let job = SkimJob::new(query).storage(&storage).client_dir(&client);
+        let text = job.explain().unwrap();
+        assert!(text.contains("selection expression:"));
+        assert!(text.contains("kernel fallback"), "{text}");
+        assert!(text.contains("residual IR expression"), "{text}");
+        // Explain must not execute the job.
+        assert!(!client.join("unused.troot").exists());
+    }
+
+    #[test]
+    fn facade_runs_cut_string_query_on_interpreter() {
+        let (storage, client) = setup("cutstr");
+        // `||` across a trigger and a kinematic aggregation — not
+        // expressible in the legacy structured schema.
+        let query = SkimQuery::new("events.troot", "cutstr.troot")
+            .keep(&["Muon_pt", "nMuon", "MET_pt"])
+            .with_cut_str("nMuon >= 1 && (HLT_IsoMu24 || max(Muon_pt) > 30)")
+            .unwrap();
+        let report = SkimJob::new(query)
+            .storage(&storage)
+            .client_dir(&client)
+            .run()
+            .unwrap();
+        assert!(!report.result.vectorized);
+        assert!(report.result.n_pass > 0);
+        assert!(report.result.n_pass < report.result.n_events);
+        assert!(client.join("cutstr.troot").exists());
     }
 
     #[test]

@@ -2,8 +2,20 @@
 //!
 //! Reproduction of *"SkimROOT: Accelerating LHC Data Filtering with
 //! Near-Storage Processing"* (cs.DC 2025) as a three-layer
-//! Rust + JAX + Pallas system, organized around two open APIs (see
+//! Rust + JAX + Pallas system, organized around three open APIs (see
 //! `ARCHITECTURE.md` for the full design):
+//!
+//! ## The query IR (Layer 0)
+//!
+//! What a skim *selects* is an open typed expression AST
+//! ([`query::expr::Expr`]): branch refs, arithmetic, boolean
+//! structure, jagged-collection aggregations. Frontends — the fluent
+//! Rust builder on [`SkimQuery`], the TCut-style cut-string parser
+//! ([`query::parse`]), and the legacy Figure-2c JSON schema (now
+//! sugar) — all lower to it; the planner ([`query::plan`]) classifies
+//! IR conjuncts onto the AOT kernel's fixed-function stages where they
+//! fit and compiles the rest for the interpreter, keeping
+//! `fits_kernel()` the honest vectorization gate.
 //!
 //! ## The execution API, in two layers
 //!
@@ -63,6 +75,7 @@ pub mod xrootd;
 pub use coordinator::{Deployment, JobReport, Mode, Placement};
 pub use engine::{FilterStage, Hook, StageCtx, Verdict};
 pub use job::SkimJob;
+pub use query::{Expr, SkimQuery};
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;

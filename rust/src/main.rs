@@ -64,10 +64,14 @@ USAGE: skimroot <command> [flags]
 COMMANDS:
   gen    --out FILE --events N [--branches 1749] [--hlt 677]
          [--basket 1000] [--codec lz4|zlib|xz|none] [--seed N]
-  skim   --storage DIR (--query FILE | --higgs --input NAME)
+  skim   --storage DIR (--query FILE | --higgs --input NAME |
+         --input NAME [--branches A,B,*]) [--cut 'EXPR'] [--explain]
          [--mode client-legacy|client-opt|server-side|skimroot]
          [--link 1g|10g|100g] [--fan-out N] [--artifacts DIR]
          [--client-dir DIR] [--fail-prob P] [--retries N]
+         (--cut takes a TCut-style string, e.g.
+          'nMuon >= 2 && (HLT_Mu50 || max(Muon_pt) > 100)';
+          --explain prints the compiled plan without running)
   serve  --root DIR --listen ADDR
   dpu    --root DIR --listen ADDR [--artifacts DIR] [--scratch DIR]
          [--fan-out N]
@@ -126,16 +130,40 @@ fn cmd_gen(raw: Vec<String>) -> Result<()> {
 }
 
 fn cmd_skim(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw, &["higgs", "no-runtime"])?;
+    let args = Args::parse(raw, &["higgs", "no-runtime", "explain"])?;
     let storage = args.require("storage")?;
-    let query = if args.switch("higgs") {
+    let mut query = if args.switch("higgs") {
         let input = args.require("input")?;
         gen::higgs_query(input, args.get_or("output", "skim_out.troot"))
-    } else {
-        let path = args.require("query")?;
+    } else if let Some(path) = args.get("query") {
         let text = std::fs::read_to_string(path)?;
         SkimQuery::from_json_text(&text)?
+    } else if let Some(input) = args.get("input") {
+        // Ad-hoc query built from flags (pair with --cut for the full
+        // selection surface without writing a JSON file).
+        let patterns: Vec<String> = args
+            .get("branches")
+            .map(|s| s.split(',').map(|p| p.trim().to_string()).collect())
+            .unwrap_or_else(|| vec!["*".to_string()]);
+        let pattern_refs: Vec<&str> = patterns.iter().map(|s| s.as_str()).collect();
+        SkimQuery::new(input, args.get_or("output", "skim_out.troot")).keep(&pattern_refs)
+    } else {
+        return Err(Error::Config(
+            "provide --query FILE, --higgs --input NAME, or --input NAME [--cut EXPR]".into(),
+        ));
     };
+    if let Some(cut) = args.get("cut") {
+        query = query.with_cut_str(cut)?;
+    }
+
+    if args.switch("explain") {
+        // Compile and print the plan (expression tree, phase-1/2 fetch
+        // sets, kernel-fit decision) without executing the job.
+        let job = SkimJob::new(query).storage(storage);
+        println!("{}", job.explain()?);
+        return Ok(());
+    }
+
     let mode = Mode::parse(args.get_or("mode", "skimroot"))?;
     let link = parse_link(args.get_or("link", "1g"))?;
     let runtime = load_runtime(&args);

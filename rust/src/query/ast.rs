@@ -1,4 +1,5 @@
-//! Query schema: the structured JSON selection format of Figure 2c.
+//! Query schema: the structured JSON selection format of Figure 2c,
+//! plus the open `cut` expression frontend.
 //!
 //! A query names the input dataset, the output file, the branches to
 //! keep (with wildcards), and a **multi-stage selection**:
@@ -10,6 +11,17 @@
 //!    multiplicity;
 //! 3. *event-level* — composite variables: HT (scalar sum of jet pT
 //!    above a threshold) and a trigger OR.
+//!
+//! Since the IR redesign the structured selection is **sugar over the
+//! open expression IR** ([`crate::query::expr::Expr`]):
+//! [`Selection::to_expr`] lowers the three stages onto ordinary
+//! expressions (HT becomes `sum(Jet_pt[Jet_pt > 30]) >= 200`, the
+//! trigger OR becomes plain `||`), and branch derivation
+//! ([`Selection::referenced_branches`]) walks the lowered IR. The
+//! legacy JSON payload parses byte-for-byte unchanged. Queries may
+//! additionally (or instead) carry a free-form `"cut"` string — the
+//! TCut-style frontend of [`crate::query::parse`] — which is ANDed
+//! with the structured stages.
 //!
 //! Example payload:
 //!
@@ -30,11 +42,14 @@
 //!       "ht": {"jet_pt": "Jet_pt", "object_pt_min": 30.0, "min": 200.0},
 //!       "triggers_any": ["HLT_IsoMu24", "HLT_Ele27_WPTight"]
 //!     }
-//!   }
+//!   },
+//!   "cut": "MET_pt > 100 || sum(Jet_pt[Jet_pt > 30]) > 250"
 //! }
 //! ```
 
+use super::expr::Expr;
 use super::json::Json;
+use super::parse;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 
@@ -109,6 +124,21 @@ impl CmpOp {
             CmpOp::AbsGt => (0, true),
         }
     }
+
+    /// Lower `lhs OP value` onto the IR (`AbsLt`/`AbsGt` wrap the lhs
+    /// in `abs(..)`).
+    pub fn lower(self, lhs: Expr, value: f64) -> Expr {
+        match self {
+            CmpOp::Gt => lhs.gt(value),
+            CmpOp::Ge => lhs.ge(value),
+            CmpOp::Lt => lhs.lt(value),
+            CmpOp::Le => lhs.le(value),
+            CmpOp::Eq => lhs.eq(value),
+            CmpOp::Ne => lhs.ne(value),
+            CmpOp::AbsLt => lhs.abs().lt(value),
+            CmpOp::AbsGt => lhs.abs().gt(value),
+        }
+    }
 }
 
 /// Scalar-branch cut (preselection stage).
@@ -163,30 +193,57 @@ pub struct Selection {
 }
 
 impl Selection {
-    /// All branches the selection reads (the *filtering criteria*
-    /// branches of §3.1).
-    pub fn referenced_branches(&self) -> Vec<String> {
-        let mut out: Vec<String> = Vec::new();
-        let mut push = |name: &str| {
-            if !out.iter().any(|n| n == name) {
-                out.push(name.to_string());
-            }
-        };
+    /// Lower the structured stages onto the open IR: preselection cuts
+    /// become scalar comparisons, each object group becomes
+    /// `count(cut && ..) >= min_count`, HT becomes
+    /// `sum(jet[jet > ptmin]) >= min`, and the trigger list becomes a
+    /// plain `||` chain — all ANDed left-to-right in stage order.
+    /// `None` for the empty selection (copy-all).
+    pub fn to_expr(&self) -> Option<Expr> {
+        let mut terms: Vec<Expr> = Vec::new();
         for c in &self.preselection {
-            push(&c.branch);
+            terms.push(c.op.lower(Expr::branch(&c.branch), c.value));
         }
         for sel in &self.objects {
+            let mut pred: Option<Expr> = None;
             for c in &sel.cuts {
-                push(&c.var);
+                let t = c.op.lower(Expr::branch(&c.var), c.value);
+                pred = Some(match pred {
+                    Some(p) => p.and(t),
+                    None => t,
+                });
+            }
+            if let Some(pred) = pred {
+                terms.push(Expr::count(pred).ge(sel.min_count as f64));
             }
         }
         if let Some(ht) = &self.event.ht {
-            push(&ht.jet_pt);
+            let jet = Expr::branch(&ht.jet_pt);
+            terms.push(
+                Expr::sum_if(jet, Expr::branch(&ht.jet_pt).gt(ht.object_pt_min)).ge(ht.min),
+            );
         }
-        for t in &self.event.triggers_any {
-            push(t);
+        if !self.event.triggers_any.is_empty() {
+            let mut trig: Option<Expr> = None;
+            for t in &self.event.triggers_any {
+                let b = Expr::branch(t);
+                trig = Some(match trig {
+                    Some(x) => x.or(b),
+                    None => b,
+                });
+            }
+            terms.extend(trig);
         }
-        out
+        terms.into_iter().reduce(|a, b| a.and(b))
+    }
+
+    /// All branches the selection reads (the *filtering criteria*
+    /// branches of §3.1) — derived by walking the lowered IR.
+    pub fn referenced_branches(&self) -> Vec<String> {
+        match self.to_expr() {
+            Some(e) => e.branches(),
+            None => Vec::new(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -210,49 +267,141 @@ pub struct SkimQuery {
     /// against the *full* schema.
     pub force_all: bool,
     pub selection: Selection,
+    /// Free-form IR cut, ANDed with the structured selection. Carried
+    /// in the JSON payload as a TCut-style `"cut"` string.
+    pub cut: Option<Expr>,
 }
 
 impl SkimQuery {
+    /// A fresh query: keep every branch, select every event. Chain the
+    /// fluent builders to shape it:
+    ///
+    /// ```
+    /// use skimroot::query::{Expr, SkimQuery};
+    ///
+    /// let q = SkimQuery::new("events.troot", "skim.troot")
+    ///     .keep(&["Muon_*", "MET_pt", "HLT_Mu50"])
+    ///     .with_cut(Expr::branch("nMuon").ge(2))
+    ///     .with_cut_str("HLT_Mu50 || max(Muon_pt) > 100")
+    ///     .unwrap();
+    /// assert_eq!(q.referenced_branches(), vec!["nMuon", "HLT_Mu50", "Muon_pt"]);
+    /// ```
+    pub fn new(input: impl Into<String>, output: impl Into<String>) -> SkimQuery {
+        SkimQuery {
+            input: input.into(),
+            output: output.into(),
+            branches: vec!["*".to_string()],
+            force_all: false,
+            selection: Selection::default(),
+            cut: None,
+        }
+    }
+
+    /// Output branch patterns to keep (wildcards allowed).
+    pub fn keep(mut self, patterns: &[&str]) -> Self {
+        self.branches = patterns.iter().map(|p| p.to_string()).collect();
+        self
+    }
+
+    /// Disable the curated wildcard mapping (§3.1).
+    pub fn force_all(mut self, force: bool) -> Self {
+        self.force_all = force;
+        self
+    }
+
+    /// AND an IR expression onto the query's cut (composes with the
+    /// structured selection and any earlier cut).
+    pub fn with_cut(mut self, expr: impl Into<Expr>) -> Self {
+        let expr = expr.into();
+        self.cut = Some(match self.cut.take() {
+            Some(prev) => prev.and(expr),
+            None => expr,
+        });
+        self
+    }
+
+    /// AND a TCut-style cut string onto the query.
+    pub fn with_cut_str(self, text: &str) -> Result<Self> {
+        Ok(self.with_cut(parse::parse_cut(text)?))
+    }
+
+    /// The complete selection as one IR expression: the lowered
+    /// structured stages ANDed with the free-form cut. `None` =
+    /// copy-all.
+    pub fn combined_cut(&self) -> Option<Expr> {
+        match (self.selection.to_expr(), self.cut.clone()) {
+            (Some(a), Some(b)) => Some(a.and(b)),
+            (Some(a), None) => Some(a),
+            (None, b) => b,
+        }
+    }
+
+    /// Every branch the query's selection reads (structured stages
+    /// first, then cut-only branches), deduplicated in first-use order.
+    pub fn referenced_branches(&self) -> Vec<String> {
+        let mut out = self.selection.referenced_branches();
+        if let Some(cut) = &self.cut {
+            for b in cut.branches() {
+                if !out.contains(&b) {
+                    out.push(b);
+                }
+            }
+        }
+        out
+    }
+
     /// Parse and validate a JSON query payload.
     pub fn from_json_text(text: &str) -> Result<SkimQuery> {
         Self::from_json(&Json::parse(text)?)
     }
 
     pub fn from_json(v: &Json) -> Result<SkimQuery> {
-        let input = v.str_field("input")?.to_string();
+        let input = str_at(v, "", "input")?;
         if input.is_empty() {
-            return Err(Error::query("'input' must not be empty"));
+            return Err(Error::query("input: must not be empty"));
         }
-        let output = v.str_field("output")?.to_string();
+        let output = str_at(v, "", "output")?;
         if output.is_empty() {
-            return Err(Error::query("'output' must not be empty"));
+            return Err(Error::query("output: must not be empty"));
         }
         let branches = match v.get("branches") {
             Some(Json::Arr(items)) => items
                 .iter()
-                .map(|b| {
+                .enumerate()
+                .map(|(i, b)| {
                     b.as_str()
                         .map(str::to_string)
-                        .ok_or_else(|| Error::query("'branches' entries must be strings"))
+                        .ok_or_else(|| Error::query(format!("branches[{i}]: must be a string")))
                 })
                 .collect::<Result<Vec<_>>>()?,
-            Some(_) => return Err(Error::query("'branches' must be an array")),
+            Some(_) => return Err(Error::query("branches: must be an array")),
             None => vec!["*".to_string()],
         };
         let force_all = match v.get("force_all") {
             Some(Json::Bool(b)) => *b,
-            Some(_) => return Err(Error::query("'force_all' must be a boolean")),
+            Some(_) => return Err(Error::query("force_all: must be a boolean")),
             None => false,
         };
         let selection = match v.get("selection") {
             Some(sel) => parse_selection(sel)?,
             None => Selection::default(),
         };
-        Ok(SkimQuery { input, output, branches, force_all, selection })
+        let cut = match v.get("cut") {
+            Some(Json::Str(s)) => match parse::parse_cut(s) {
+                Ok(e) => Some(e),
+                Err(Error::Query(msg)) => return Err(Error::query(format!("cut: {msg}"))),
+                Err(e) => return Err(e),
+            },
+            Some(_) => return Err(Error::query("cut: must be a string")),
+            None => None,
+        };
+        Ok(SkimQuery { input, output, branches, force_all, selection, cut })
     }
 
     /// Serialize back to the canonical JSON payload (used to POST the
-    /// query to the DPU and to hash job ids).
+    /// query to the DPU and to hash job ids). The `cut` field renders
+    /// as its canonical cut-string (absent when no cut is set, so
+    /// legacy payloads round-trip byte-for-byte).
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
         obj.insert("input".into(), Json::Str(self.input.clone()));
@@ -262,6 +411,9 @@ impl SkimQuery {
             Json::Arr(self.branches.iter().map(|b| Json::Str(b.clone())).collect()),
         );
         obj.insert("force_all".into(), Json::Bool(self.force_all));
+        if let Some(cut) = &self.cut {
+            obj.insert("cut".into(), Json::Str(cut.to_string()));
+        }
         let mut sel = BTreeMap::new();
         sel.insert(
             "preselection".into(),
@@ -336,59 +488,106 @@ impl SkimQuery {
     }
 }
 
+// ---- path-aware JSON field access -----------------------------------
+//
+// Validation errors carry the JSON path to the offending field
+// (`selection.objects[0].cuts[1].op: unknown operator '=>'`) instead
+// of a bare message.
+
+fn at(path: &str, key: &str) -> String {
+    if path.is_empty() {
+        key.to_string()
+    } else {
+        format!("{path}.{key}")
+    }
+}
+
+fn str_at(v: &Json, path: &str, key: &str) -> Result<String> {
+    match v.get(key) {
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(_) => Err(Error::query(format!("{}: must be a string", at(path, key)))),
+        None => Err(Error::query(format!("{}: missing required field", at(path, key)))),
+    }
+}
+
+fn num_at(v: &Json, path: &str, key: &str) -> Result<f64> {
+    match v.get(key) {
+        Some(Json::Num(n)) => Ok(*n),
+        Some(_) => Err(Error::query(format!("{}: must be a number", at(path, key)))),
+        None => Err(Error::query(format!("{}: missing required field", at(path, key)))),
+    }
+}
+
+fn arr_at<'a>(v: &'a Json, path: &str) -> Result<&'a [Json]> {
+    v.as_arr()
+        .ok_or_else(|| Error::query(format!("{path}: must be an array")))
+}
+
+fn op_at(item: &Json, path: &str) -> Result<CmpOp> {
+    let s = str_at(item, path, "op")?;
+    CmpOp::parse(&s)
+        .map_err(|_| Error::query(format!("{}: unknown operator '{s}'", at(path, "op"))))
+}
+
 fn parse_selection(v: &Json) -> Result<Selection> {
     let mut sel = Selection::default();
     if let Some(pre) = v.get("preselection") {
-        let items = pre
-            .as_arr()
-            .ok_or_else(|| Error::query("'preselection' must be an array"))?;
-        for item in items {
+        let items = arr_at(pre, "selection.preselection")?;
+        for (i, item) in items.iter().enumerate() {
+            let path = format!("selection.preselection[{i}]");
             sel.preselection.push(ScalarCut {
-                branch: item.str_field("branch")?.to_string(),
-                op: CmpOp::parse(item.str_field("op")?)?,
-                value: item.num_field("value")?,
+                branch: str_at(item, &path, "branch")?,
+                op: op_at(item, &path)?,
+                value: num_at(item, &path, "value")?,
             });
         }
     }
     if let Some(objs) = v.get("objects") {
-        let items = objs
-            .as_arr()
-            .ok_or_else(|| Error::query("'objects' must be an array"))?;
-        for item in items {
-            let collection = item.str_field("collection")?.to_string();
+        let items = arr_at(objs, "selection.objects")?;
+        for (i, item) in items.iter().enumerate() {
+            let path = format!("selection.objects[{i}]");
+            let collection = str_at(item, &path, "collection")?;
             let min_count = match item.get("min_count") {
                 Some(n) => {
-                    let f = n
-                        .as_f64()
-                        .ok_or_else(|| Error::query("'min_count' must be a number"))?;
+                    let f = n.as_f64().ok_or_else(|| {
+                        Error::query(format!("{}: must be a number", at(&path, "min_count")))
+                    })?;
                     if f < 0.0 || f.fract() != 0.0 {
-                        return Err(Error::query("'min_count' must be a non-negative integer"));
+                        return Err(Error::query(format!(
+                            "{}: must be a non-negative integer",
+                            at(&path, "min_count")
+                        )));
                     }
                     f as u32
                 }
                 None => 1,
             };
-            let cuts_json = item
-                .require("cuts")?
-                .as_arr()
-                .ok_or_else(|| Error::query("'cuts' must be an array"))?;
+            let cuts_path = at(&path, "cuts");
+            let cuts_json = match item.get("cuts") {
+                Some(c) => arr_at(c, &cuts_path)?,
+                None => {
+                    return Err(Error::query(format!("{cuts_path}: missing required field")));
+                }
+            };
             if cuts_json.is_empty() {
                 return Err(Error::query(format!(
-                    "object selection for '{collection}' has no cuts"
+                    "{cuts_path}: object selection for '{collection}' has no cuts"
                 )));
             }
             let mut cuts = Vec::new();
-            for c in cuts_json {
-                let var = c.str_field("var")?.to_string();
+            for (j, c) in cuts_json.iter().enumerate() {
+                let cpath = format!("{path}.cuts[{j}]");
+                let var = str_at(c, &cpath, "var")?;
                 if !var.starts_with(&format!("{collection}_")) {
                     return Err(Error::query(format!(
-                        "cut variable '{var}' does not belong to collection '{collection}'"
+                        "{}: cut variable '{var}' does not belong to collection '{collection}'",
+                        at(&cpath, "var")
                     )));
                 }
                 cuts.push(ObjectCut {
                     var,
-                    op: CmpOp::parse(c.str_field("op")?)?,
-                    value: c.num_field("value")?,
+                    op: op_at(c, &cpath)?,
+                    value: num_at(c, &cpath, "value")?,
                 });
             }
             sel.objects.push(ObjectSelection { collection, cuts, min_count });
@@ -396,20 +595,23 @@ fn parse_selection(v: &Json) -> Result<Selection> {
     }
     if let Some(ev) = v.get("event") {
         if let Some(ht) = ev.get("ht") {
+            let hpath = "selection.event.ht";
             sel.event.ht = Some(HtCut {
-                jet_pt: ht.str_field("jet_pt")?.to_string(),
+                jet_pt: str_at(ht, hpath, "jet_pt")?,
                 object_pt_min: ht.get("object_pt_min").and_then(|v| v.as_f64()).unwrap_or(0.0),
-                min: ht.num_field("min")?,
+                min: num_at(ht, hpath, "min")?,
             });
         }
         if let Some(trig) = ev.get("triggers_any") {
-            let items = trig
-                .as_arr()
-                .ok_or_else(|| Error::query("'triggers_any' must be an array"))?;
-            for t in items {
+            let items = arr_at(trig, "selection.event.triggers_any")?;
+            for (i, t) in items.iter().enumerate() {
                 sel.event.triggers_any.push(
                     t.as_str()
-                        .ok_or_else(|| Error::query("'triggers_any' entries must be strings"))?
+                        .ok_or_else(|| {
+                            Error::query(format!(
+                                "selection.event.triggers_any[{i}]: must be a string"
+                            ))
+                        })?
                         .to_string(),
                 );
             }
@@ -453,6 +655,7 @@ mod tests {
         let ht = q.selection.event.ht.as_ref().unwrap();
         assert_eq!(ht.min, 200.0);
         assert_eq!(q.selection.event.triggers_any.len(), 2);
+        assert!(q.cut.is_none());
     }
 
     #[test]
@@ -461,6 +664,47 @@ mod tests {
         let text = q.to_json().to_string();
         let q2 = SkimQuery::from_json_text(&text).unwrap();
         assert_eq!(q, q2);
+    }
+
+    #[test]
+    fn legacy_payload_serialization_is_stable() {
+        // A legacy (no-cut) query must serialize without any new
+        // fields: reserializing the parse of its own serialization is
+        // byte-identical, and no "cut" key appears.
+        let q = SkimQuery::from_json_text(SAMPLE).unwrap();
+        let text = q.to_json().to_string();
+        assert!(!text.contains("\"cut\""));
+        let q2 = SkimQuery::from_json_text(&text).unwrap();
+        assert_eq!(q2.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn cut_field_parses_and_roundtrips() {
+        let q = SkimQuery::from_json_text(
+            r#"{"input": "a.troot", "output": "b.troot",
+                "cut": "nMuon >= 2 && (HLT_Mu50 || max(Muon_pt) > 100)"}"#,
+        )
+        .unwrap();
+        assert!(q.cut.is_some());
+        assert_eq!(q.referenced_branches(), vec!["nMuon", "HLT_Mu50", "Muon_pt"]);
+        let text = q.to_json().to_string();
+        let q2 = SkimQuery::from_json_text(&text).unwrap();
+        assert_eq!(q, q2);
+    }
+
+    #[test]
+    fn selection_lowers_to_ir() {
+        let q = SkimQuery::from_json_text(SAMPLE).unwrap();
+        let e = q.selection.to_expr().unwrap();
+        assert_eq!(
+            e.to_string(),
+            "((((nElectron >= 1) && \
+               (count(((Electron_pt > 25) && (abs(Electron_eta) < 2.4))) >= 1)) && \
+               (sum(Jet_pt[(Jet_pt > 30)]) >= 200)) && \
+               (HLT_IsoMu24 || HLT_Ele27_WPTight))"
+        );
+        // The lowered form reparses to the identical AST.
+        assert_eq!(super::parse::parse_cut(&e.to_string()).unwrap(), e);
     }
 
     #[test]
@@ -478,6 +722,20 @@ mod tests {
     }
 
     #[test]
+    fn query_referenced_branches_merge_cut() {
+        let q = SkimQuery::from_json_text(SAMPLE)
+            .unwrap()
+            .with_cut_str("MET_pt > 100 && nElectron >= 1")
+            .unwrap();
+        let refs = q.referenced_branches();
+        // Cut-only branches appended; duplicates with the structured
+        // stages are not repeated.
+        assert_eq!(refs.iter().filter(|b| *b == "nElectron").count(), 1);
+        assert!(refs.iter().any(|b| b == "MET_pt"));
+        assert_eq!(refs.last().unwrap(), "MET_pt");
+    }
+
+    #[test]
     fn defaults_apply() {
         let q = SkimQuery::from_json_text(
             r#"{"input": "a.troot", "output": "b.troot"}"#,
@@ -486,6 +744,24 @@ mod tests {
         assert_eq!(q.branches, vec!["*"]);
         assert!(!q.force_all);
         assert!(q.selection.is_empty());
+        assert!(q.combined_cut().is_none());
+    }
+
+    #[test]
+    fn fluent_builder_composes_cuts() {
+        let q = SkimQuery::new("in.troot", "out.troot")
+            .keep(&["Muon_*", "MET_pt"])
+            .force_all(true)
+            .with_cut(Expr::branch("nMuon").ge(2))
+            .with_cut_str("MET_pt > 50")
+            .unwrap();
+        assert_eq!(q.branches, vec!["Muon_*", "MET_pt"]);
+        assert!(q.force_all);
+        assert_eq!(
+            q.cut.as_ref().unwrap().to_string(),
+            "((nMuon >= 2) && (MET_pt > 50))"
+        );
+        assert_eq!(q.combined_cut(), q.cut);
     }
 
     #[test]
@@ -495,12 +771,56 @@ mod tests {
             r#"{"input": "", "output": "b"}"#,                      // empty input
             r#"{"input": "a", "output": "b", "branches": "x"}"#,    // branches not array
             r#"{"input": "a", "output": "b", "force_all": 1}"#,     // force_all not bool
+            r#"{"input": "a", "output": "b", "cut": 7}"#,           // cut not a string
+            r#"{"input": "a", "output": "b", "cut": "x &&"}"#,      // malformed cut
             r#"{"input": "a", "output": "b", "selection": {"preselection": [{"branch": "x", "op": "~", "value": 1}]}}"#,
             r#"{"input": "a", "output": "b", "selection": {"objects": [{"collection": "El", "cuts": []}]}}"#,
             r#"{"input": "a", "output": "b", "selection": {"objects": [{"collection": "El", "cuts": [{"var": "Mu_pt", "op": ">", "value": 1}]}]}}"#,
             r#"{"input": "a", "output": "b", "selection": {"objects": [{"collection": "El", "min_count": -1, "cuts": [{"var": "El_pt", "op": ">", "value": 1}]}]}}"#,
         ] {
             assert!(SkimQuery::from_json_text(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn validation_errors_carry_json_paths() {
+        let cases = [
+            (
+                r#"{"input": "a", "output": "b", "selection": {"objects": [
+                    {"collection": "El", "cuts": [
+                        {"var": "El_pt", "op": ">", "value": 1},
+                        {"var": "El_eta", "op": "=>", "value": 2.4}]}]}}"#,
+                "selection.objects[0].cuts[1].op: unknown operator '=>'",
+            ),
+            (
+                r#"{"input": "a", "output": "b", "selection": {"preselection": [
+                    {"branch": "x", "op": ">"}]}}"#,
+                "selection.preselection[0].value: missing required field",
+            ),
+            (
+                r#"{"input": "a", "output": "b", "selection": {"objects": [
+                    {"collection": "El", "min_count": 1.5, "cuts": [
+                        {"var": "El_pt", "op": ">", "value": 1}]}]}}"#,
+                "selection.objects[0].min_count: must be a non-negative integer",
+            ),
+            (
+                r#"{"input": "a", "output": "b", "selection": {"event":
+                    {"triggers_any": ["HLT_X", 3]}}}"#,
+                "selection.event.triggers_any[1]: must be a string",
+            ),
+            (
+                r#"{"input": "a", "output": "b", "branches": ["ok", 1]}"#,
+                "branches[1]: must be a string",
+            ),
+            (
+                r#"{"input": "a", "output": "b", "cut": "a >< b"}"#,
+                "cut: cut parse error at char",
+            ),
+        ];
+        for (bad, needle) in cases {
+            let err = SkimQuery::from_json_text(bad).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains(needle), "expected '{needle}' in: {msg}");
         }
     }
 
@@ -516,5 +836,71 @@ mod tests {
         for op in [CmpOp::Gt, CmpOp::Ge, CmpOp::Lt, CmpOp::Le, CmpOp::Eq, CmpOp::Ne, CmpOp::AbsLt, CmpOp::AbsGt] {
             assert_eq!(CmpOp::parse(op.symbol()).unwrap(), op);
         }
+    }
+
+    #[test]
+    fn prop_query_json_roundtrip() {
+        use crate::util::Pcg32;
+        fn gen_selection(rng: &mut Pcg32) -> Selection {
+            let ops = [CmpOp::Gt, CmpOp::Ge, CmpOp::Lt, CmpOp::Le, CmpOp::Eq, CmpOp::Ne, CmpOp::AbsLt, CmpOp::AbsGt];
+            let op = |rng: &mut Pcg32| ops[rng.below(ops.len() as u32) as usize];
+            let val = |rng: &mut Pcg32| (rng.below(4000) as f64 - 2000.0) / 16.0;
+            let mut sel = Selection::default();
+            for i in 0..rng.below(3) {
+                sel.preselection.push(ScalarCut {
+                    branch: format!("scal{i}"),
+                    op: op(rng),
+                    value: val(rng),
+                });
+            }
+            for i in 0..rng.below(3) {
+                let coll = format!("C{i}");
+                let cuts = (0..1 + rng.below(3))
+                    .map(|j| ObjectCut {
+                        var: format!("{coll}_v{j}"),
+                        op: op(rng),
+                        value: val(rng),
+                    })
+                    .collect();
+                sel.objects.push(ObjectSelection {
+                    collection: coll,
+                    cuts,
+                    min_count: rng.below(4),
+                });
+            }
+            if rng.chance(0.5) {
+                sel.event.ht = Some(HtCut {
+                    jet_pt: "Jet_pt".into(),
+                    object_pt_min: val(rng).abs(),
+                    min: val(rng).abs(),
+                });
+            }
+            for i in 0..rng.below(3) {
+                sel.event.triggers_any.push(format!("HLT_T{i}"));
+            }
+            sel
+        }
+        crate::util::prop_check("skimquery-json-roundtrip", 40, |rng| {
+            let mut q = SkimQuery::new(
+                format!("in{}.troot", rng.below(10)),
+                format!("out{}.troot", rng.below(10)),
+            );
+            q.selection = gen_selection(rng);
+            q.force_all = rng.chance(0.3);
+            q.branches = (0..1 + rng.below(4)).map(|i| format!("B{i}_*")).collect();
+            if rng.chance(0.7) {
+                let cuts = [
+                    "nMuon >= 2",
+                    "MET_pt > 100 || sum(Jet_pt[Jet_pt > 30]) > 250",
+                    "abs(Muon_eta) < 2.4 && count(Jet_pt > 45) >= 2",
+                    "max(Muon_pt) > 52 || !(HLT_Mu50)",
+                ];
+                q = q.with_cut_str(cuts[rng.below(cuts.len() as u32) as usize]).unwrap();
+            }
+            let text = q.to_json().to_string();
+            let back = SkimQuery::from_json_text(&text)
+                .unwrap_or_else(|e| panic!("reparse failed for {text}: {e}"));
+            assert_eq!(back, q, "payload={text}");
+        });
     }
 }

@@ -1,0 +1,521 @@
+//! Layer 0 of the query surface: the open expression IR.
+//!
+//! A [`Expr`] is a typed AST over event data — the open replacement for
+//! the closed Figure-2c selection schema. It covers literals, branch
+//! references (scalar *and* jagged), arithmetic, comparisons, boolean
+//! structure (`&&` / `||` / `!`), `abs`/`min`/`max`, and
+//! jagged-collection aggregations (`count`, `sum`, `any`, `all`,
+//! `max`, `min`). The legacy structured selection lowers onto this IR
+//! ([`crate::query::ast::Selection::to_expr`]), so HT is the ordinary
+//! expression `sum(Jet_pt[Jet_pt > 30]) >= 200` and the trigger OR is
+//! plain `||` — the bespoke structs became sugar.
+//!
+//! Two value *shapes* exist (checked at plan time against the file
+//! schema): **event**-shaped expressions produce one value per event;
+//! **object**-shaped expressions (anything referencing a jagged
+//! branch outside an aggregation) produce one value per object of a
+//! collection. Aggregations reduce object shape to event shape;
+//! combining per-object values from *different* collections is an
+//! error. Booleans are TCut-style numerics: nonzero is true,
+//! comparisons yield `1.0`/`0.0`.
+//!
+//! Build expressions with the fluent API:
+//!
+//! ```
+//! use skimroot::query::expr::Expr;
+//!
+//! // sum(Jet_pt[Jet_pt > 30]) >= 200  &&  (HLT_IsoMu24 || HLT_Ele27_WPTight)
+//! let ht = Expr::sum_if(Expr::branch("Jet_pt"), Expr::branch("Jet_pt").gt(30.0)).ge(200.0);
+//! let trig = Expr::branch("HLT_IsoMu24").or(Expr::branch("HLT_Ele27_WPTight"));
+//! let cut = ht.and(trig);
+//!
+//! // Display renders the canonical cut-string form, which the
+//! // `query::parse` frontend parses back to the identical AST.
+//! let text = cut.to_string();
+//! assert_eq!(skimroot::query::parse_cut(&text).unwrap(), cut);
+//! assert_eq!(cut.branches(), vec!["Jet_pt", "HLT_IsoMu24", "HLT_Ele27_WPTight"]);
+//! ```
+//!
+//! or parse them from a TCut-style string ([`crate::query::parse`]).
+
+use std::fmt;
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryOp {
+    /// Arithmetic negation.
+    Neg,
+    /// Boolean not (`!x` — 1.0 if `x == 0`, else 0.0).
+    Not,
+    /// Absolute value (the `|eta| < 2.4` idiom).
+    Abs,
+}
+
+/// Binary operators. `Min`/`Max` are the two-argument forms
+/// (`min(a, b)`); the single-argument aggregations live in [`AggOp`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+    Min,
+    Max,
+}
+
+impl BinOp {
+    /// Infix symbol (`Min`/`Max` render as calls, not infix).
+    pub fn symbol(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Lt => "<",
+            BinOp::Le => "<=",
+            BinOp::Gt => ">",
+            BinOp::Ge => ">=",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+            BinOp::Min => "min",
+            BinOp::Max => "max",
+        }
+    }
+}
+
+/// Aggregations over a jagged (per-object) expression, reducing it to
+/// one event-level value. Selection semantics cover the first `M`
+/// object slots (the engine's padding capacity), matching the
+/// object-group counting of the fixed-function kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggOp {
+    /// Number of objects whose predicate holds.
+    Count,
+    /// Sum of the argument over (optionally predicate-selected) objects.
+    Sum,
+    /// 1.0 if any object satisfies the predicate.
+    Any,
+    /// 1.0 if every object satisfies the predicate (vacuously true).
+    All,
+    /// Maximum over selected objects (`-inf` if none).
+    Max,
+    /// Minimum over selected objects (`+inf` if none).
+    Min,
+}
+
+impl AggOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            AggOp::Count => "count",
+            AggOp::Sum => "sum",
+            AggOp::Any => "any",
+            AggOp::All => "all",
+            AggOp::Max => "max",
+            AggOp::Min => "min",
+        }
+    }
+}
+
+/// A query expression: the open IR every frontend lowers to (fluent
+/// builder, cut strings, the legacy JSON schema). See the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Numeric literal (must be finite for the string form to round-trip).
+    Num(f64),
+    /// Branch reference; resolved against the file schema at plan time
+    /// (scalar branches are event-shaped, jagged branches object-shaped).
+    Branch(String),
+    Unary(UnaryOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// Aggregation: `op(arg)` or `op(arg[pred])`. For `Count`/`Any`/
+    /// `All` the argument *is* the predicate.
+    Agg {
+        op: AggOp,
+        arg: Box<Expr>,
+        pred: Option<Box<Expr>>,
+    },
+}
+
+#[allow(clippy::should_implement_trait)]
+impl Expr {
+    pub fn num(v: f64) -> Expr {
+        Expr::Num(v)
+    }
+
+    pub fn branch(name: impl Into<String>) -> Expr {
+        Expr::Branch(name.into())
+    }
+
+    fn bin(self, op: BinOp, rhs: impl Into<Expr>) -> Expr {
+        Expr::Binary(op, Box::new(self), Box::new(rhs.into()))
+    }
+
+    // ---- comparisons -------------------------------------------------
+
+    pub fn gt(self, rhs: impl Into<Expr>) -> Expr {
+        self.bin(BinOp::Gt, rhs)
+    }
+
+    pub fn ge(self, rhs: impl Into<Expr>) -> Expr {
+        self.bin(BinOp::Ge, rhs)
+    }
+
+    pub fn lt(self, rhs: impl Into<Expr>) -> Expr {
+        self.bin(BinOp::Lt, rhs)
+    }
+
+    pub fn le(self, rhs: impl Into<Expr>) -> Expr {
+        self.bin(BinOp::Le, rhs)
+    }
+
+    pub fn eq(self, rhs: impl Into<Expr>) -> Expr {
+        self.bin(BinOp::Eq, rhs)
+    }
+
+    pub fn ne(self, rhs: impl Into<Expr>) -> Expr {
+        self.bin(BinOp::Ne, rhs)
+    }
+
+    // ---- boolean structure -------------------------------------------
+
+    pub fn and(self, rhs: impl Into<Expr>) -> Expr {
+        self.bin(BinOp::And, rhs)
+    }
+
+    pub fn or(self, rhs: impl Into<Expr>) -> Expr {
+        self.bin(BinOp::Or, rhs)
+    }
+
+    // ---- functions ---------------------------------------------------
+
+    pub fn abs(self) -> Expr {
+        Expr::Unary(UnaryOp::Abs, Box::new(self))
+    }
+
+    /// Two-argument minimum `min(self, rhs)`.
+    pub fn min(self, rhs: impl Into<Expr>) -> Expr {
+        self.bin(BinOp::Min, rhs)
+    }
+
+    /// Two-argument maximum `max(self, rhs)`.
+    pub fn max(self, rhs: impl Into<Expr>) -> Expr {
+        self.bin(BinOp::Max, rhs)
+    }
+
+    // ---- aggregations ------------------------------------------------
+
+    /// Low-level aggregation constructor; prefer the named helpers.
+    pub fn agg(op: AggOp, arg: Expr, pred: Option<Expr>) -> Expr {
+        Expr::Agg { op, arg: Box::new(arg), pred: pred.map(Box::new) }
+    }
+
+    /// `count(pred)` — objects satisfying the predicate.
+    pub fn count(pred: impl Into<Expr>) -> Expr {
+        Expr::agg(AggOp::Count, pred.into(), None)
+    }
+
+    /// `any(pred)` — 1.0 if at least one object satisfies the predicate.
+    pub fn any(pred: impl Into<Expr>) -> Expr {
+        Expr::agg(AggOp::Any, pred.into(), None)
+    }
+
+    /// `all(pred)` — 1.0 if every object satisfies the predicate.
+    pub fn all(pred: impl Into<Expr>) -> Expr {
+        Expr::agg(AggOp::All, pred.into(), None)
+    }
+
+    /// `sum(arg)` over all objects of the collection.
+    pub fn sum(arg: impl Into<Expr>) -> Expr {
+        Expr::agg(AggOp::Sum, arg.into(), None)
+    }
+
+    /// `sum(arg[pred])` — sum over objects passing the predicate (how
+    /// HT is spelled: `sum(Jet_pt[Jet_pt > 30])`).
+    pub fn sum_if(arg: impl Into<Expr>, pred: impl Into<Expr>) -> Expr {
+        Expr::agg(AggOp::Sum, arg.into(), Some(pred.into()))
+    }
+
+    /// `max(arg)` over the collection (`-inf` when empty).
+    pub fn max_of(arg: impl Into<Expr>) -> Expr {
+        Expr::agg(AggOp::Max, arg.into(), None)
+    }
+
+    /// `min(arg)` over the collection (`+inf` when empty).
+    pub fn min_of(arg: impl Into<Expr>) -> Expr {
+        Expr::agg(AggOp::Min, arg.into(), None)
+    }
+
+    // ---- introspection -----------------------------------------------
+
+    /// Branch names the expression reads, deduplicated, in first-use
+    /// (depth-first, left-to-right) order — the §3.1 filtering-criteria
+    /// derivation now walks this.
+    pub fn branches(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.walk_branches(&mut out);
+        out
+    }
+
+    fn walk_branches(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Num(_) => {}
+            Expr::Branch(name) => {
+                if !out.iter().any(|n| n == name) {
+                    out.push(name.clone());
+                }
+            }
+            Expr::Unary(_, x) => x.walk_branches(out),
+            Expr::Binary(_, a, b) => {
+                a.walk_branches(out);
+                b.walk_branches(out);
+            }
+            Expr::Agg { arg, pred, .. } => {
+                arg.walk_branches(out);
+                if let Some(p) = pred {
+                    p.walk_branches(out);
+                }
+            }
+        }
+    }
+
+    /// Multi-line indented rendering of the AST (the `--explain` view).
+    pub fn tree_string(&self) -> String {
+        let mut out = String::new();
+        self.tree_fmt(&mut out, 0);
+        out
+    }
+
+    fn tree_fmt(&self, out: &mut String, indent: usize) {
+        for _ in 0..indent {
+            out.push_str("  ");
+        }
+        match self {
+            Expr::Num(v) => {
+                out.push_str("num ");
+                fmt_num(out, *v);
+                out.push('\n');
+            }
+            Expr::Branch(name) => {
+                out.push_str("branch ");
+                out.push_str(name);
+                out.push('\n');
+            }
+            Expr::Unary(op, x) => {
+                let name = match op {
+                    UnaryOp::Neg => "neg",
+                    UnaryOp::Not => "not",
+                    UnaryOp::Abs => "abs",
+                };
+                out.push_str(name);
+                out.push('\n');
+                x.tree_fmt(out, indent + 1);
+            }
+            Expr::Binary(op, a, b) => {
+                out.push_str(op.symbol());
+                out.push('\n');
+                a.tree_fmt(out, indent + 1);
+                b.tree_fmt(out, indent + 1);
+            }
+            Expr::Agg { op, arg, pred } => {
+                out.push_str(op.name());
+                if pred.is_some() {
+                    out.push_str(" [filtered]");
+                }
+                out.push('\n');
+                arg.tree_fmt(out, indent + 1);
+                if let Some(p) = pred {
+                    p.tree_fmt(out, indent + 1);
+                }
+            }
+        }
+    }
+}
+
+// ---- operator-overload sugar ----------------------------------------
+
+impl<T: Into<Expr>> std::ops::Add<T> for Expr {
+    type Output = Expr;
+    fn add(self, rhs: T) -> Expr {
+        self.bin(BinOp::Add, rhs)
+    }
+}
+
+impl<T: Into<Expr>> std::ops::Sub<T> for Expr {
+    type Output = Expr;
+    fn sub(self, rhs: T) -> Expr {
+        self.bin(BinOp::Sub, rhs)
+    }
+}
+
+impl<T: Into<Expr>> std::ops::Mul<T> for Expr {
+    type Output = Expr;
+    fn mul(self, rhs: T) -> Expr {
+        self.bin(BinOp::Mul, rhs)
+    }
+}
+
+impl<T: Into<Expr>> std::ops::Div<T> for Expr {
+    type Output = Expr;
+    fn div(self, rhs: T) -> Expr {
+        self.bin(BinOp::Div, rhs)
+    }
+}
+
+impl std::ops::Neg for Expr {
+    type Output = Expr;
+    fn neg(self) -> Expr {
+        // Fold literal negation so `-3.5` and the parse of "-3.5"
+        // build the same node (Display/parse round-trip).
+        match self {
+            Expr::Num(v) => Expr::Num(-v),
+            e => Expr::Unary(UnaryOp::Neg, Box::new(e)),
+        }
+    }
+}
+
+impl std::ops::Not for Expr {
+    type Output = Expr;
+    fn not(self) -> Expr {
+        Expr::Unary(UnaryOp::Not, Box::new(self))
+    }
+}
+
+impl From<f64> for Expr {
+    fn from(v: f64) -> Expr {
+        Expr::Num(v)
+    }
+}
+
+impl From<i32> for Expr {
+    fn from(v: i32) -> Expr {
+        Expr::Num(v as f64)
+    }
+}
+
+impl From<&str> for Expr {
+    fn from(name: &str) -> Expr {
+        Expr::Branch(name.to_string())
+    }
+}
+
+impl From<String> for Expr {
+    fn from(name: String) -> Expr {
+        Expr::Branch(name)
+    }
+}
+
+fn fmt_num(out: &mut String, v: f64) {
+    use std::fmt::Write as _;
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+/// Canonical cut-string form: fully parenthesized so the parse of the
+/// rendering is always the identical AST (property-tested).
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Num(v) => {
+                let mut s = String::new();
+                fmt_num(&mut s, *v);
+                f.write_str(&s)
+            }
+            Expr::Branch(name) => f.write_str(name),
+            Expr::Unary(UnaryOp::Neg, x) => write!(f, "(-{x})"),
+            Expr::Unary(UnaryOp::Not, x) => write!(f, "!({x})"),
+            Expr::Unary(UnaryOp::Abs, x) => write!(f, "abs({x})"),
+            Expr::Binary(op @ (BinOp::Min | BinOp::Max), a, b) => {
+                write!(f, "{}({a}, {b})", op.symbol())
+            }
+            Expr::Binary(op, a, b) => write!(f, "({a} {} {b})", op.symbol()),
+            Expr::Agg { op, arg, pred: None } => write!(f, "{}({arg})", op.name()),
+            Expr::Agg { op, arg, pred: Some(p) } => write!(f, "{}({arg}[{p}])", op.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_constructs_expected_ast() {
+        let e = Expr::branch("nElectron").ge(1);
+        assert_eq!(
+            e,
+            Expr::Binary(
+                BinOp::Ge,
+                Box::new(Expr::Branch("nElectron".into())),
+                Box::new(Expr::Num(1.0)),
+            )
+        );
+        let ht = Expr::sum_if(Expr::branch("Jet_pt"), Expr::branch("Jet_pt").gt(30.0)).ge(200.0);
+        match &ht {
+            Expr::Binary(BinOp::Ge, lhs, _) => match lhs.as_ref() {
+                Expr::Agg { op: AggOp::Sum, pred: Some(_), .. } => {}
+                other => panic!("unexpected lhs: {other:?}"),
+            },
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn display_is_canonical() {
+        let e = Expr::branch("a").gt(25.0).and(Expr::branch("b").abs().lt(2.4));
+        assert_eq!(e.to_string(), "((a > 25) && (abs(b) < 2.4))");
+        let e = Expr::count(Expr::branch("Jet_pt").gt(30.0)).ge(2);
+        assert_eq!(e.to_string(), "(count((Jet_pt > 30)) >= 2)");
+        let e = Expr::sum_if(Expr::branch("j"), Expr::branch("j").gt(30.0));
+        assert_eq!(e.to_string(), "sum(j[(j > 30)])");
+        let e = Expr::branch("x").min(Expr::branch("y"));
+        assert_eq!(e.to_string(), "min(x, y)");
+        let e = Expr::max_of(Expr::branch("Muon_pt"));
+        assert_eq!(e.to_string(), "max(Muon_pt)");
+        let e = -(Expr::branch("x") + 1.0);
+        assert_eq!(e.to_string(), "(-(x + 1))");
+        let e = !Expr::branch("flag");
+        assert_eq!(e.to_string(), "!(flag)");
+        assert_eq!((-Expr::num(3.5)).to_string(), "-3.5");
+    }
+
+    #[test]
+    fn branches_deduplicate_in_order() {
+        let e = Expr::sum_if(Expr::branch("Jet_pt"), Expr::branch("Jet_pt").gt(30.0))
+            .ge(200.0)
+            .and(Expr::branch("MET_pt").gt(100.0))
+            .or(Expr::any(Expr::branch("Jet_pt").gt(0.0)));
+        assert_eq!(e.branches(), vec!["Jet_pt", "MET_pt"]);
+    }
+
+    #[test]
+    fn tree_rendering_indents() {
+        let e = Expr::branch("a").gt(1.0).and(Expr::branch("b"));
+        let t = e.tree_string();
+        assert!(t.starts_with("&&\n"));
+        assert!(t.contains("  >\n"));
+        assert!(t.contains("    branch a\n"));
+        assert!(t.contains("  branch b\n"));
+    }
+
+    #[test]
+    fn neg_folds_literals_only() {
+        assert_eq!(-Expr::num(2.0), Expr::Num(-2.0));
+        assert_eq!(
+            -Expr::branch("x"),
+            Expr::Unary(UnaryOp::Neg, Box::new(Expr::Branch("x".into())))
+        );
+    }
+}

@@ -1,23 +1,36 @@
-//! The JSON query front-end (§3.1) — SkimROOT's replacement for
-//! hand-written ROOT C++ filtering scripts.
+//! The query front-end (§3.1) — SkimROOT's replacement for
+//! hand-written ROOT C++ filtering scripts, layered over an open
+//! expression IR.
 //!
+//! * [`expr`] — **Layer 0**: the typed [`Expr`] AST (literals, branch
+//!   refs, arithmetic, comparisons, boolean structure, aggregations)
+//!   that every frontend lowers to;
+//! * [`parse`] — the TCut-style cut-string frontend
+//!   (`"nMuon >= 2 && (HLT_Mu50 || max(Muon_pt) > 100)"`);
 //! * [`json`] — hand-rolled JSON parser/serializer (no serde offline);
 //! * [`ast`] — the query schema: input/output, branch patterns,
-//!   `force_all`, and the multi-stage selection (preselection →
-//!   object-level → event-level), mirroring Figure 2c;
+//!   `force_all`, the Figure-2c structured selection (now sugar that
+//!   lowers onto the IR) and the free-form `"cut"` field;
 //! * [`wildcard`] — glob expansion of branch patterns against the file
 //!   schema, including the curated `HLT_*` → minimal-trigger-set
 //!   mapping with missing-branch warnings;
 //! * [`plan`] — query + file schema → [`plan::SkimPlan`]: the
 //!   criteria/output-only branch split that drives two-phase execution,
 //!   and the numeric [`plan::CutProgram`] consumed by both the scalar
-//!   interpreter and the AOT-compiled vectorized kernel.
+//!   interpreter and the AOT-compiled vectorized kernel. IR conjuncts
+//!   that match the kernel's fixed-function stages are classified onto
+//!   them; the rest compile to residual [`plan::CExpr`]s that keep
+//!   [`plan::CutProgram::fits_kernel`] honest.
 
 pub mod ast;
+pub mod expr;
 pub mod json;
+pub mod parse;
 pub mod plan;
 pub mod wildcard;
 
 pub use ast::{CmpOp, EventSelection, ObjectCut, ObjectSelection, ScalarCut, Selection, SkimQuery};
+pub use expr::{AggOp, BinOp, Expr, UnaryOp};
 pub use json::Json;
+pub use parse::parse_cut;
 pub use plan::{CutProgram, SkimPlan};

@@ -1,0 +1,733 @@
+//! TCut-style cut-string frontend for the query IR.
+//!
+//! Parses selection strings in the dialect ROOT users write —
+//! `"nElectron >= 1 && abs(Electron_eta) < 2.4 && (MET_pt > 100 || ht(30) > 200)"`
+//! — into the open [`Expr`] AST. Exposed via CLI `--cut` and the JSON
+//! payload's `"cut"` field.
+//!
+//! Grammar (precedence low → high; all binary operators at one level
+//! are left-associative, comparisons do not chain):
+//!
+//! ```text
+//! or     := and  ( '||' and )*
+//! and    := cmp  ( '&&' cmp )*
+//! cmp    := addx ( ('<'|'<='|'>'|'>='|'=='|'!=') addx )?
+//! addx   := mulx ( ('+'|'-') mulx )*
+//! mulx   := unary ( ('*'|'/') unary )*
+//! unary  := '!' unary | '-' unary | primary
+//! primary:= NUMBER
+//!         | '(' or ')'
+//!         | '|' or '|'                       -- absolute value bars
+//!         | IDENT                            -- branch reference
+//!         | IDENT '(' args ')'               -- function / aggregation
+//! ```
+//!
+//! Functions: `abs(x)`; two-argument `min(a, b)` / `max(a, b)`;
+//! aggregations `count(pred)`, `any(pred)`, `all(pred)`, `sum(x)`,
+//! `max(x)`, `min(x)` — each also accepting a `x[pred]` selection
+//! subscript (e.g. `sum(Jet_pt[Jet_pt > 30])`, `count(Jet_eta <
+//! 0[Jet_pt > 30])`); the subscript is only valid directly inside an
+//! aggregation call; and the derived event variables `ht(ptmin)` =
+//! `sum(Jet_pt[Jet_pt > ptmin])` and `njets(ptmin)` =
+//! `count(Jet_pt > ptmin)` (NanoAOD-convention jet collection).
+//!
+//! Limitation: inside absolute-value bars use `abs(...)` rather than a
+//! nested `||` (two adjacent pipes always lex as the or-operator).
+
+use super::expr::{AggOp, BinOp, Expr};
+use crate::{Error, Result};
+
+/// Nesting bound: cut strings arrive over the DPU HTTP service, so
+/// recursion depth must be bounded (a stack overflow aborts the
+/// process). Mirrors the JSON parser's depth cap.
+const MAX_DEPTH: usize = 128;
+
+/// Parse a cut string into the query IR.
+pub fn parse_cut(text: &str) -> Result<Expr> {
+    let tokens = lex(text)?;
+    let mut p = Parser { tokens, pos: 0, src_len: text.len(), depth: 0 };
+    let expr = p.or_expr()?;
+    match p.peek() {
+        None => Ok(expr),
+        Some(_) => Err(p.err("expected end of cut string")),
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(f64),
+    Ident(String),
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    EqEq,
+    NeEq,
+    AndAnd,
+    OrOr,
+    Bang,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    LParen,
+    RParen,
+    LBrack,
+    RBrack,
+    Pipe,
+    Comma,
+}
+
+impl Tok {
+    fn describe(&self) -> String {
+        match self {
+            Tok::Num(v) => format!("number {v}"),
+            Tok::Ident(s) => format!("identifier '{s}'"),
+            Tok::Lt => "'<'".into(),
+            Tok::Le => "'<='".into(),
+            Tok::Gt => "'>'".into(),
+            Tok::Ge => "'>='".into(),
+            Tok::EqEq => "'=='".into(),
+            Tok::NeEq => "'!='".into(),
+            Tok::AndAnd => "'&&'".into(),
+            Tok::OrOr => "'||'".into(),
+            Tok::Bang => "'!'".into(),
+            Tok::Plus => "'+'".into(),
+            Tok::Minus => "'-'".into(),
+            Tok::Star => "'*'".into(),
+            Tok::Slash => "'/'".into(),
+            Tok::LParen => "'('".into(),
+            Tok::RParen => "')'".into(),
+            Tok::LBrack => "'['".into(),
+            Tok::RBrack => "']'".into(),
+            Tok::Pipe => "'|'".into(),
+            Tok::Comma => "','".into(),
+        }
+    }
+}
+
+fn lex(text: &str) -> Result<Vec<(Tok, usize)>> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let err =
+        |pos: usize, msg: String| Error::query(format!("cut parse error at char {pos}: {msg}"));
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'(' => {
+                out.push((Tok::LParen, i));
+                i += 1;
+            }
+            b')' => {
+                out.push((Tok::RParen, i));
+                i += 1;
+            }
+            b'[' => {
+                out.push((Tok::LBrack, i));
+                i += 1;
+            }
+            b']' => {
+                out.push((Tok::RBrack, i));
+                i += 1;
+            }
+            b',' => {
+                out.push((Tok::Comma, i));
+                i += 1;
+            }
+            b'+' => {
+                out.push((Tok::Plus, i));
+                i += 1;
+            }
+            b'-' => {
+                out.push((Tok::Minus, i));
+                i += 1;
+            }
+            b'*' => {
+                out.push((Tok::Star, i));
+                i += 1;
+            }
+            b'/' => {
+                out.push((Tok::Slash, i));
+                i += 1;
+            }
+            b'<' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push((Tok::Le, i));
+                    i += 2;
+                } else {
+                    out.push((Tok::Lt, i));
+                    i += 1;
+                }
+            }
+            b'>' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push((Tok::Ge, i));
+                    i += 2;
+                } else {
+                    out.push((Tok::Gt, i));
+                    i += 1;
+                }
+            }
+            b'=' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push((Tok::EqEq, i));
+                    i += 2;
+                } else {
+                    return Err(err(i, "single '=' is not an operator (use '==')".into()));
+                }
+            }
+            b'!' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push((Tok::NeEq, i));
+                    i += 2;
+                } else {
+                    out.push((Tok::Bang, i));
+                    i += 1;
+                }
+            }
+            b'&' => {
+                if b.get(i + 1) == Some(&b'&') {
+                    out.push((Tok::AndAnd, i));
+                    i += 2;
+                } else {
+                    return Err(err(i, "single '&' is not an operator (use '&&')".into()));
+                }
+            }
+            b'|' => {
+                if b.get(i + 1) == Some(&b'|') {
+                    out.push((Tok::OrOr, i));
+                    i += 2;
+                } else {
+                    out.push((Tok::Pipe, i));
+                    i += 1;
+                }
+            }
+            b'0'..=b'9' => {
+                let start = i;
+                while matches!(b.get(i), Some(c) if c.is_ascii_digit()) {
+                    i += 1;
+                }
+                if b.get(i) == Some(&b'.') {
+                    i += 1;
+                    while matches!(b.get(i), Some(c) if c.is_ascii_digit()) {
+                        i += 1;
+                    }
+                }
+                if matches!(b.get(i), Some(b'e' | b'E')) {
+                    i += 1;
+                    if matches!(b.get(i), Some(b'+' | b'-')) {
+                        i += 1;
+                    }
+                    while matches!(b.get(i), Some(c) if c.is_ascii_digit()) {
+                        i += 1;
+                    }
+                }
+                let s = &text[start..i];
+                let v = s
+                    .parse::<f64>()
+                    .map_err(|_| err(start, format!("bad number '{s}'")))?;
+                // f64 parsing saturates overflow to infinity, which
+                // would not survive the canonical Display↔parse
+                // round-trip — reject it at the source.
+                if !v.is_finite() {
+                    return Err(err(start, format!("number literal '{s}' out of range")));
+                }
+                out.push((Tok::Num(v), start));
+            }
+            b'A'..=b'Z' | b'a'..=b'z' | b'_' => {
+                let start = i;
+                while matches!(b.get(i), Some(c) if c.is_ascii_alphanumeric() || *c == b'_') {
+                    i += 1;
+                }
+                out.push((Tok::Ident(text[start..i].to_string()), start));
+            }
+            other => {
+                return Err(err(i, format!("unexpected character '{}'", other as char)));
+            }
+        }
+    }
+    Ok(out)
+}
+
+struct Parser {
+    tokens: Vec<(Tok, usize)>,
+    pos: usize,
+    src_len: usize,
+    depth: usize,
+}
+
+impl Parser {
+    fn err(&self, msg: &str) -> Error {
+        let (at, got) = match self.tokens.get(self.pos) {
+            Some((tok, pos)) => (*pos, format!(" (found {})", tok.describe())),
+            None => (self.src_len, " (found end of input)".to_string()),
+        };
+        Error::query(format!("cut parse error at char {at}: {msg}{got}"))
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.tokens.get(self.pos).map(|(t, _)| t)
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.tokens.get(self.pos).map(|(t, _)| t.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, tok: &Tok) -> bool {
+        if self.peek() == Some(tok) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, tok: &Tok, what: &str) -> Result<()> {
+        if self.eat(tok) {
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {what}")))
+        }
+    }
+
+    /// Depth guard covering both recursion cycles (`primary` →
+    /// `or_expr` for parens/bars/calls, and `unary` → `unary` for
+    /// `!`/`-` chains).
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            Err(self.err("cut expression nesting too deep"))
+        } else {
+            Ok(())
+        }
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        self.enter()?;
+        let r = self.or_expr_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn or_expr_inner(&mut self) -> Result<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.eat(&Tok::OrOr) {
+            let rhs = self.and_expr()?;
+            lhs = lhs.or(rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.cmp_expr()?;
+        while self.eat(&Tok::AndAnd) {
+            let rhs = self.cmp_expr()?;
+            lhs = lhs.and(rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_op(&self) -> Option<BinOp> {
+        match self.peek() {
+            Some(Tok::Lt) => Some(BinOp::Lt),
+            Some(Tok::Le) => Some(BinOp::Le),
+            Some(Tok::Gt) => Some(BinOp::Gt),
+            Some(Tok::Ge) => Some(BinOp::Ge),
+            Some(Tok::EqEq) => Some(BinOp::Eq),
+            Some(Tok::NeEq) => Some(BinOp::Ne),
+            _ => None,
+        }
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let lhs = self.add_expr()?;
+        let Some(op) = self.cmp_op() else { return Ok(lhs) };
+        self.pos += 1;
+        let rhs = self.add_expr()?;
+        if self.cmp_op().is_some() {
+            return Err(self.err("comparisons do not chain; use '&&' (e.g. 'a < b && b < c')"));
+        }
+        Ok(Expr::Binary(op, Box::new(lhs), Box::new(rhs)))
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            if self.eat(&Tok::Plus) {
+                lhs = lhs + self.mul_expr()?;
+            } else if self.eat(&Tok::Minus) {
+                lhs = lhs - self.mul_expr()?;
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.unary()?;
+        loop {
+            if self.eat(&Tok::Star) {
+                lhs = lhs * self.unary()?;
+            } else if self.eat(&Tok::Slash) {
+                lhs = lhs / self.unary()?;
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn unary(&mut self) -> Result<Expr> {
+        self.enter()?;
+        let r = self.unary_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn unary_inner(&mut self) -> Result<Expr> {
+        if self.eat(&Tok::Bang) {
+            return Ok(!self.unary()?);
+        }
+        if self.eat(&Tok::Minus) {
+            // `-` folds into numeric literals (see `Neg` on `Expr`).
+            return Ok(-self.unary()?);
+        }
+        self.primary()
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.peek().cloned() {
+            Some(Tok::Num(v)) => {
+                self.pos += 1;
+                Ok(Expr::Num(v))
+            }
+            Some(Tok::LParen) => {
+                self.pos += 1;
+                let e = self.or_expr()?;
+                self.expect(&Tok::RParen, "')'")?;
+                Ok(e)
+            }
+            Some(Tok::Pipe) => {
+                self.pos += 1;
+                let e = self.or_expr()?;
+                self.expect(&Tok::Pipe, "closing '|'")?;
+                Ok(e.abs())
+            }
+            Some(Tok::Ident(name)) => {
+                self.pos += 1;
+                if self.eat(&Tok::LParen) {
+                    self.call(&name)
+                } else {
+                    Ok(Expr::Branch(name))
+                }
+            }
+            _ => Err(self.err("expected an expression")),
+        }
+    }
+
+    /// Parse `expr` with an optional `[pred]` selection subscript.
+    fn agg_arg(&mut self) -> Result<(Expr, Option<Expr>)> {
+        let arg = self.or_expr()?;
+        if self.eat(&Tok::LBrack) {
+            let pred = self.or_expr()?;
+            self.expect(&Tok::RBrack, "']'")?;
+            Ok((arg, Some(pred)))
+        } else {
+            Ok((arg, None))
+        }
+    }
+
+    /// `name` has been consumed along with its opening paren.
+    fn call(&mut self, name: &str) -> Result<Expr> {
+        let expr = match name {
+            "abs" => {
+                let e = self.or_expr()?;
+                e.abs()
+            }
+            // Arity disambiguates: `min(a, b)` is the two-argument
+            // function, `min(x)` / `min(x[p])` the aggregation.
+            "min" | "max" => {
+                let (first, pred) = self.agg_arg()?;
+                if self.eat(&Tok::Comma) {
+                    if pred.is_some() {
+                        return Err(
+                            self.err("selection subscript is not valid in two-argument min/max")
+                        );
+                    }
+                    let second = self.or_expr()?;
+                    if name == "min" {
+                        first.min(second)
+                    } else {
+                        first.max(second)
+                    }
+                } else {
+                    let op = if name == "min" { AggOp::Min } else { AggOp::Max };
+                    Expr::agg(op, first, pred)
+                }
+            }
+            "sum" => {
+                let (arg, pred) = self.agg_arg()?;
+                Expr::agg(AggOp::Sum, arg, pred)
+            }
+            // The argument is the predicate; an optional `[pred]`
+            // subscript adds a selection filter on top.
+            "count" | "any" | "all" => {
+                let (arg, pred) = self.agg_arg()?;
+                let op = match name {
+                    "count" => AggOp::Count,
+                    "any" => AggOp::Any,
+                    _ => AggOp::All,
+                };
+                Expr::agg(op, arg, pred)
+            }
+            // Derived event variables (NanoAOD conventions).
+            "ht" => {
+                let ptmin = self.or_expr()?;
+                Expr::sum_if(Expr::branch("Jet_pt"), Expr::branch("Jet_pt").gt(ptmin))
+            }
+            "njets" => {
+                let ptmin = self.or_expr()?;
+                Expr::count(Expr::branch("Jet_pt").gt(ptmin))
+            }
+            other => {
+                return Err(self.err(&format!(
+                    "unknown function '{other}' (known: abs, min, max, sum, count, any, all, \
+                     ht, njets)"
+                )));
+            }
+        };
+        self.expect(&Tok::RParen, "')'")?;
+        Ok(expr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::expr::Expr as E;
+
+    fn p(text: &str) -> Expr {
+        parse_cut(text).unwrap_or_else(|e| panic!("parse '{text}': {e}"))
+    }
+
+    #[test]
+    fn precedence_table() {
+        // Multiplication binds tighter than addition.
+        assert_eq!(p("1 + 2 * 3"), E::num(1.0) + (E::num(2.0) * E::num(3.0)));
+        // Addition binds tighter than comparison.
+        assert_eq!(p("a + 1 > b"), (E::branch("a") + 1.0).gt(E::branch("b")));
+        // Comparison binds tighter than `&&`, which binds tighter than `||`.
+        assert_eq!(
+            p("a > 1 && b < 2 || c == 3"),
+            E::branch("a").gt(1.0).and(E::branch("b").lt(2.0)).or(E::branch("c").eq(3.0))
+        );
+        // Unary binds tighter than binary.
+        assert_eq!(p("-a * b"), (-E::branch("a")) * E::branch("b"));
+        assert_eq!(p("!a && b"), (!E::branch("a")).and(E::branch("b")));
+        // Parens override.
+        assert_eq!(p("(1 + 2) * 3"), (E::num(1.0) + E::num(2.0)) * E::num(3.0));
+    }
+
+    #[test]
+    fn associativity_table() {
+        // Left-associative chains.
+        assert_eq!(p("10 - 3 - 2"), (E::num(10.0) - E::num(3.0)) - E::num(2.0));
+        assert_eq!(p("8 / 4 / 2"), (E::num(8.0) / E::num(4.0)) / E::num(2.0));
+        assert_eq!(
+            p("a && b && c"),
+            E::branch("a").and(E::branch("b")).and(E::branch("c"))
+        );
+        assert_eq!(
+            p("a || b || c"),
+            E::branch("a").or(E::branch("b")).or(E::branch("c"))
+        );
+    }
+
+    #[test]
+    fn abs_bars_and_abs_call_agree() {
+        assert_eq!(p("|Electron_eta| < 2.4"), p("abs(Electron_eta) < 2.4"));
+        assert_eq!(p("|a - b| > 1"), (E::branch("a") - E::branch("b")).abs().gt(1.0));
+    }
+
+    #[test]
+    fn aggregations_and_subscript() {
+        assert_eq!(
+            p("sum(Jet_pt[Jet_pt > 30]) >= 200"),
+            E::sum_if(E::branch("Jet_pt"), E::branch("Jet_pt").gt(30.0)).ge(200.0)
+        );
+        assert_eq!(
+            p("count(Jet_pt > 30) >= 2"),
+            E::count(E::branch("Jet_pt").gt(30.0)).ge(2.0)
+        );
+        assert_eq!(p("any(Muon_pt > 20)"), E::any(E::branch("Muon_pt").gt(20.0)));
+        assert_eq!(p("all(Muon_tightId == 1)"), E::all(E::branch("Muon_tightId").eq(1.0)));
+        // count/any/all accept a selection subscript too.
+        assert_eq!(
+            p("count(Jet_eta < 0[Jet_pt > 30])"),
+            E::agg(
+                AggOp::Count,
+                E::branch("Jet_eta").lt(0.0),
+                Some(E::branch("Jet_pt").gt(30.0))
+            )
+        );
+        // Arity disambiguation for min/max.
+        assert_eq!(p("max(Muon_pt)"), E::max_of(E::branch("Muon_pt")));
+        assert_eq!(p("max(a, b)"), E::branch("a").max(E::branch("b")));
+        assert_eq!(
+            p("min(Jet_eta[Jet_pt > 30])"),
+            E::agg(AggOp::Min, E::branch("Jet_eta"), Some(E::branch("Jet_pt").gt(30.0)))
+        );
+    }
+
+    #[test]
+    fn derived_event_variables_expand() {
+        assert_eq!(
+            p("ht(30) > 200"),
+            E::sum_if(E::branch("Jet_pt"), E::branch("Jet_pt").gt(30.0)).gt(200.0)
+        );
+        assert_eq!(p("njets(45) >= 4"), E::count(E::branch("Jet_pt").gt(45.0)).ge(4.0));
+    }
+
+    #[test]
+    fn numbers_and_negation() {
+        assert_eq!(p("-3.5"), E::Num(-3.5));
+        assert_eq!(p("1e3"), E::Num(1000.0));
+        assert_eq!(p("2.5e-2"), E::Num(0.025));
+        assert_eq!(p("- x"), -E::branch("x"));
+    }
+
+    #[test]
+    fn issue_example_parses() {
+        let e = p("nElectron >= 1 && |Electron_eta| < 2.4 && (MET_pt > 100 || ht(30) > 200)");
+        assert_eq!(
+            e.branches(),
+            vec!["nElectron", "Electron_eta", "MET_pt", "Jet_pt"]
+        );
+    }
+
+    #[test]
+    fn malformed_inputs_error_with_position() {
+        for (bad, needle) in [
+            ("", "expected an expression"),
+            ("a &&", "expected an expression"),
+            ("(a > 1", "expected ')'"),
+            ("a > 1)", "expected end"),
+            ("a = 1", "use '=='"),
+            ("a & b", "use '&&'"),
+            ("a < b < c", "do not chain"),
+            ("foo(1)", "unknown function 'foo'"),
+            ("count(", "expected an expression"),
+            ("sum(x[y)", "expected ']'"),
+            ("min(a[p], b)", "not valid in two-argument"),
+            ("a $ b", "unexpected character '$'"),
+            ("|a| |b|", "expected end"),
+            ("1e999", "out of range"),
+        ] {
+            let err = parse_cut(bad).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("cut parse error at char"), "{bad}: {msg}");
+            assert!(msg.contains(needle), "'{bad}' should mention '{needle}', got: {msg}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_bounded() {
+        // Untrusted cut strings (DPU HTTP) must not overflow the
+        // stack: both paren nesting and unary chains are bounded.
+        let deep_parens = "(".repeat(100_000) + "x" + &")".repeat(100_000);
+        let err = parse_cut(&deep_parens).unwrap_err();
+        assert!(format!("{err}").contains("nesting too deep"), "{err}");
+        let deep_bangs = "!".repeat(100_000) + "x";
+        let err = parse_cut(&deep_bangs).unwrap_err();
+        assert!(format!("{err}").contains("nesting too deep"), "{err}");
+        // Reasonable nesting still parses.
+        let ok = "(".repeat(40) + "x" + &")".repeat(40);
+        assert!(parse_cut(&ok).is_ok());
+    }
+
+    #[test]
+    fn prop_display_reparse_roundtrip() {
+        use crate::util::Pcg32;
+        fn gen(rng: &mut Pcg32, depth: usize, obj_ctx: bool) -> Expr {
+            let branch = |rng: &mut Pcg32| {
+                let names = ["Jet_pt", "Muon_eta", "MET_pt", "nJet", "HLT_X"];
+                E::branch(names[rng.below(names.len() as u32) as usize])
+            };
+            let num = |rng: &mut Pcg32| {
+                // Grid-quantized values avoid float-print edge cases
+                // while still covering negatives and fractions.
+                E::num((rng.below(4000) as f64 - 2000.0) / 16.0)
+            };
+            if depth >= 4 {
+                return if rng.chance(0.5) { branch(rng) } else { num(rng) };
+            }
+            match rng.below(10) {
+                0 => num(rng),
+                1 | 2 => branch(rng),
+                3 => {
+                    let inner = gen(rng, depth + 1, obj_ctx);
+                    match rng.below(3) {
+                        0 => inner.abs(),
+                        1 => !inner,
+                        _ => -inner,
+                    }
+                }
+                4..=7 => {
+                    let a = gen(rng, depth + 1, obj_ctx);
+                    let b = gen(rng, depth + 1, obj_ctx);
+                    match rng.below(14) {
+                        0 => a + b,
+                        1 => a - b,
+                        2 => a * b,
+                        3 => a / b,
+                        4 => a.lt(b),
+                        5 => a.le(b),
+                        6 => a.gt(b),
+                        7 => a.ge(b),
+                        8 => a.eq(b),
+                        9 => a.ne(b),
+                        10 => a.and(b),
+                        11 => a.or(b),
+                        12 => a.min(b),
+                        _ => a.max(b),
+                    }
+                }
+                _ => {
+                    // Aggregations only one level deep in object context.
+                    if obj_ctx {
+                        return branch(rng);
+                    }
+                    let arg = gen(rng, depth + 1, true);
+                    match rng.below(6) {
+                        0 => E::count(arg),
+                        1 => E::any(arg),
+                        2 => E::all(arg),
+                        3 => E::sum(arg),
+                        4 => E::sum_if(arg, gen(rng, depth + 1, true)),
+                        _ => E::agg(
+                            if rng.chance(0.5) { AggOp::Max } else { AggOp::Min },
+                            arg,
+                            if rng.chance(0.5) {
+                                Some(gen(rng, depth + 1, true))
+                            } else {
+                                None
+                            },
+                        ),
+                    }
+                }
+            }
+        }
+        crate::util::prop_check("cut-string-roundtrip", 60, |rng| {
+            let e = gen(rng, 0, false);
+            let text = e.to_string();
+            let back = parse_cut(&text)
+                .unwrap_or_else(|err| panic!("reparse failed for '{text}': {err}"));
+            assert_eq!(back, e, "text={text}");
+        });
+    }
+}

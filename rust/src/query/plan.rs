@@ -13,8 +13,19 @@
 //!    lists + opcode/threshold banks consumed identically by the Rust
 //!    scalar interpreter and the AOT Pallas kernel (which has fixed
 //!    capacity; programs exceeding it fall back to the interpreter).
+//!
+//! The open IR ([`Expr`]) compiles through the same funnel: top-level
+//! conjuncts of the query's `cut` are **classified** into the kernel's
+//! fixed-function stages where they match (simple scalar comparisons →
+//! preselection bank, `count(simple-cuts) >= k` → object groups,
+//! `sum(jet[jet > t]) >= h` → the HT unit, OR-of-flags → the trigger
+//! bank), so a cut string that *is* expressible in the legacy schema
+//! still rides the vectorized PJRT path. Anything else compiles to a
+//! residual [`CExpr`] evaluated by the interpreter —
+//! [`CutProgram::fits_kernel`] stays the honest gate.
 
 use super::ast::SkimQuery;
+use super::expr::{AggOp, BinOp, Expr, UnaryOp};
 use super::wildcard;
 use crate::troot::{BranchKind, DType, FileMeta};
 use crate::{Error, Result};
@@ -65,6 +76,31 @@ pub struct HtParam {
     pub min_ht: f32,
 }
 
+/// A compiled IR expression: [`Expr`] with branch references resolved
+/// to column indices of the owning [`CutProgram`]. Shape-checked at
+/// compile time: jagged column references only occur inside an `Agg`.
+/// Only the scalar interpreter evaluates these (the AOT kernel's
+/// fixed-function stages cannot).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CExpr {
+    Num(f32),
+    /// Index into [`CutProgram::scalar_columns`].
+    Scalar(usize),
+    /// Index into [`CutProgram::obj_columns`].
+    Jagged(usize),
+    Unary(UnaryOp, Box<CExpr>),
+    Binary(BinOp, Box<CExpr>, Box<CExpr>),
+    /// Aggregation over object slots. `nobj` is the obj-column index
+    /// whose per-event multiplicity bounds the valid slots (the first
+    /// jagged column the aggregation references).
+    Agg {
+        op: AggOp,
+        nobj: usize,
+        arg: Box<CExpr>,
+        pred: Option<Box<CExpr>>,
+    },
+}
+
 /// The numeric, engine-agnostic form of a selection.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct CutProgram {
@@ -80,16 +116,69 @@ pub struct CutProgram {
     /// Indices into `scalar_columns` of trigger flags (ORed; empty =
     /// no trigger requirement).
     pub triggers: Vec<usize>,
+    /// Residual IR expressions (event-level booleans, ANDed) beyond
+    /// the kernel's fixed-function stages. Interpreter-only.
+    pub exprs: Vec<CExpr>,
 }
 
 impl CutProgram {
-    /// Does this program fit the AOT kernel's fixed capacity?
+    /// Does this program fit the AOT kernel's fixed capacity? Honest
+    /// gate for the vectorized PJRT path: any residual IR expression
+    /// disqualifies it (the kernel has no general-expression unit).
     pub fn fits_kernel(&self) -> bool {
-        self.obj_columns.len() <= KERNEL_MAX_OBJ_COLS
-            && self.scalar_columns.len() <= KERNEL_MAX_SCALAR_COLS
-            && self.obj_cuts.len() <= KERNEL_MAX_OBJ_CUTS
-            && self.scalar_cuts.len() + self.triggers.len() <= KERNEL_MAX_SCALAR_CUTS + KERNEL_MAX_SCALAR_COLS
-            && self.groups.len() + self.ht.is_some() as usize <= KERNEL_MAX_GROUPS + 1
+        self.kernel_unfit_reasons().is_empty()
+    }
+
+    /// Why the vectorized path is unavailable (empty = it fits). Each
+    /// entry is one exceeded capacity or unsupported construct.
+    pub fn kernel_unfit_reasons(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if self.obj_columns.len() > KERNEL_MAX_OBJ_COLS {
+            out.push(format!(
+                "{} jagged columns exceed the kernel's {KERNEL_MAX_OBJ_COLS}",
+                self.obj_columns.len()
+            ));
+        }
+        if self.scalar_columns.len() > KERNEL_MAX_SCALAR_COLS {
+            out.push(format!(
+                "{} scalar columns exceed the kernel's {KERNEL_MAX_SCALAR_COLS}",
+                self.scalar_columns.len()
+            ));
+        }
+        if self.obj_cuts.len() > KERNEL_MAX_OBJ_CUTS {
+            out.push(format!(
+                "{} object cuts exceed the kernel's {KERNEL_MAX_OBJ_CUTS}",
+                self.obj_cuts.len()
+            ));
+        }
+        if self.scalar_cuts.len() > KERNEL_MAX_SCALAR_CUTS {
+            out.push(format!(
+                "{} scalar cuts exceed the kernel's {KERNEL_MAX_SCALAR_CUTS}",
+                self.scalar_cuts.len()
+            ));
+        }
+        if self.groups.len() > KERNEL_MAX_GROUPS {
+            out.push(format!(
+                "{} object groups exceed the kernel's {KERNEL_MAX_GROUPS}",
+                self.groups.len()
+            ));
+        }
+        if !self.exprs.is_empty() {
+            out.push(format!(
+                "{} residual IR expression(s) have no fixed-function kernel stage",
+                self.exprs.len()
+            ));
+        }
+        out
+    }
+
+    /// No cuts at all: every event passes (copy-all).
+    pub fn is_trivial(&self) -> bool {
+        self.scalar_cuts.is_empty()
+            && self.groups.is_empty()
+            && self.ht.is_none()
+            && self.triggers.is_empty()
+            && self.exprs.is_empty()
     }
 
     fn obj_col(&mut self, name: &str) -> usize {
@@ -138,7 +227,7 @@ impl SkimPlan {
             return Err(Error::query("no output branches selected"));
         }
 
-        // --- validate + compile the selection --------------------------
+        // --- validate + compile the structured selection ---------------
         let mut program = CutProgram::default();
 
         let require = |name: &str, kind: BranchKind| -> Result<DType> {
@@ -202,8 +291,13 @@ impl SkimPlan {
             program.triggers.push(col);
         }
 
+        // --- compile the free-form IR cut ------------------------------
+        if let Some(cut) = &query.cut {
+            compile_cut(&mut program, cut, meta)?;
+        }
+
         // --- two-phase branch split ------------------------------------
-        let criteria = query.selection.referenced_branches();
+        let criteria = query.referenced_branches();
         for c in &criteria {
             // Criteria branches must exist even if not in the output.
             if meta.branch(c).is_none() {
@@ -217,12 +311,12 @@ impl SkimPlan {
             .cloned()
             .collect();
 
-        if !program.fits_kernel() {
+        let unfit = program.kernel_unfit_reasons();
+        if !unfit.is_empty() {
             warnings.push(format!(
-                "cut program exceeds AOT kernel capacity ({} obj cols, {} obj cuts): \
+                "cut program exceeds AOT kernel capacity ({}): \
                  vectorized path unavailable, scalar interpreter will be used",
-                program.obj_columns.len(),
-                program.obj_cuts.len()
+                unfit.join("; ")
             ));
         }
 
@@ -233,6 +327,407 @@ impl SkimPlan {
             program,
             warnings,
         })
+    }
+
+    /// Human-readable rendering of the plan: the selection expression
+    /// tree, the phase-1/phase-2 branch fetch sets, the compiled
+    /// program summary and the kernel-fit decision (with reasons).
+    /// This is what `skimroot skim --explain` prints.
+    pub fn explain(&self, query: &SkimQuery) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "skim plan: '{}' -> '{}'", query.input, query.output);
+        out.push_str("\nselection expression:\n");
+        match query.combined_cut() {
+            Some(expr) => {
+                for line in expr.tree_string().lines() {
+                    let _ = writeln!(out, "  {line}");
+                }
+            }
+            None => out.push_str("  (none — every event passes, copy-all)\n"),
+        }
+        out.push_str("\nbranch fetch plan:\n");
+        let _ = writeln!(out, "  output branches:        {}", self.output_branches.len());
+        let _ = writeln!(
+            out,
+            "  phase 1 (criteria):     {} -> [{}]",
+            self.criteria_branches.len(),
+            self.criteria_branches.join(", ")
+        );
+        let _ = writeln!(
+            out,
+            "  phase 2 (output-only):  {} (fetched only for passing clusters)",
+            self.output_only_branches.len()
+        );
+        let p = &self.program;
+        out.push_str("\ncompiled cut program:\n");
+        let _ = writeln!(
+            out,
+            "  scalar cuts:   {}    object groups: {} ({} per-object cuts)",
+            p.scalar_cuts.len(),
+            p.groups.len(),
+            p.obj_cuts.len()
+        );
+        match &p.ht {
+            Some(ht) => {
+                let _ = writeln!(
+                    out,
+                    "  ht unit:       sum({col}[{col} > {pt}]) >= {min}",
+                    col = p.obj_columns[ht.col],
+                    pt = ht.object_pt_min,
+                    min = ht.min_ht
+                );
+            }
+            None => out.push_str("  ht unit:       (unused)\n"),
+        }
+        let _ = writeln!(out, "  trigger OR:    {} flag(s)", p.triggers.len());
+        let _ = writeln!(out, "  residual IR:   {} expression(s)", p.exprs.len());
+        out.push_str("\nevaluation path: ");
+        let unfit = p.kernel_unfit_reasons();
+        if unfit.is_empty() {
+            out.push_str(
+                "vectorized AOT kernel (program fits capacity; \
+                 requires loaded PJRT artifacts, else interpreter)\n",
+            );
+        } else {
+            out.push_str("scalar interpreter — kernel fallback because:\n");
+            for r in &unfit {
+                let _ = writeln!(out, "  - {r}");
+            }
+        }
+        if !self.warnings.is_empty() {
+            out.push_str("\nwarnings:\n");
+            for w in &self.warnings {
+                let _ = writeln!(out, "  - {w}");
+            }
+        }
+        out
+    }
+}
+
+// ---- IR compilation -------------------------------------------------
+
+/// Value shape of an expression: one value per event, or one value per
+/// object of a jagged collection.
+#[derive(Debug, Clone, PartialEq)]
+enum Shape {
+    Event,
+    Object(String),
+}
+
+fn combine_shapes(a: Shape, b: Shape) -> Result<Shape> {
+    match (a, b) {
+        (Shape::Event, s) | (s, Shape::Event) => Ok(s),
+        (Shape::Object(c1), Shape::Object(c2)) => {
+            if c1 == c2 {
+                Ok(Shape::Object(c1))
+            } else {
+                Err(Error::query(format!(
+                    "cut combines per-object values from different collections \
+                     ('{c1}' and '{c2}') in one expression"
+                )))
+            }
+        }
+    }
+}
+
+/// Resolve the shape of `e` against the file schema, validating branch
+/// existence, aggregation operands and collection consistency.
+fn shape_of(e: &Expr, meta: &FileMeta) -> Result<Shape> {
+    match e {
+        Expr::Num(_) => Ok(Shape::Event),
+        Expr::Branch(name) => {
+            let b = meta
+                .branch(name)
+                .ok_or_else(|| Error::query(format!("cut references unknown branch '{name}'")))?;
+            match b.desc.kind {
+                BranchKind::Scalar => Ok(Shape::Event),
+                BranchKind::Jagged => Ok(Shape::Object(b.desc.group.clone())),
+            }
+        }
+        Expr::Unary(_, x) => shape_of(x, meta),
+        Expr::Binary(_, a, b) => combine_shapes(shape_of(a, meta)?, shape_of(b, meta)?),
+        Expr::Agg { op, arg, pred } => {
+            let mut s = shape_of(arg, meta)?;
+            if let Some(p) = pred {
+                s = combine_shapes(s, shape_of(p, meta)?)?;
+            }
+            match s {
+                Shape::Object(_) => Ok(Shape::Event),
+                Shape::Event => Err(Error::query(format!(
+                    "aggregation '{}' requires a per-object (jagged) operand",
+                    op.name()
+                ))),
+            }
+        }
+    }
+}
+
+/// Split a top-level AND tree into its conjuncts, left-to-right.
+fn conjuncts(e: &Expr) -> Vec<&Expr> {
+    match e {
+        Expr::Binary(BinOp::And, a, b) => {
+            let mut v = conjuncts(a);
+            v.extend(conjuncts(b));
+            v
+        }
+        _ => vec![e],
+    }
+}
+
+/// Split an OR tree into its disjuncts, left-to-right.
+fn disjuncts(e: &Expr) -> Vec<&Expr> {
+    match e {
+        Expr::Binary(BinOp::Or, a, b) => {
+            let mut v = disjuncts(a);
+            v.extend(disjuncts(b));
+            v
+        }
+        _ => vec![e],
+    }
+}
+
+fn cmp_code(op: BinOp) -> Option<u8> {
+    match op {
+        BinOp::Gt => Some(0),
+        BinOp::Ge => Some(1),
+        BinOp::Lt => Some(2),
+        BinOp::Le => Some(3),
+        BinOp::Eq => Some(4),
+        BinOp::Ne => Some(5),
+        _ => None,
+    }
+}
+
+/// Match `branch OP literal` / `abs(branch) OP literal` →
+/// `(name, opcode, abs, value)`.
+fn as_simple_cmp(e: &Expr) -> Option<(&str, u8, bool, f64)> {
+    let Expr::Binary(op, lhs, rhs) = e else { return None };
+    let code = cmp_code(*op)?;
+    let Expr::Num(v) = rhs.as_ref() else { return None };
+    match lhs.as_ref() {
+        Expr::Branch(n) => Some((n.as_str(), code, false, *v)),
+        Expr::Unary(UnaryOp::Abs, inner) => match inner.as_ref() {
+            Expr::Branch(n) => Some((n.as_str(), code, true, *v)),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Compile the query's free-form cut into `program`: classify each
+/// top-level conjunct into the kernel's fixed-function stages where it
+/// matches, otherwise compile it to a residual [`CExpr`]. An
+/// object-shaped conjunct (e.g. a bare `Muon_pt > 30`) gets the TCut
+/// implicit-`any` treatment — the event passes if any object satisfies
+/// it — applied per conjunct (`A && obj` ≡ `A && any(obj)`, including
+/// the zero-object case), so event-level conjuncts keep their kernel
+/// classification.
+fn compile_cut(program: &mut CutProgram, expr: &Expr, meta: &FileMeta) -> Result<()> {
+    for term in conjuncts(expr) {
+        let wrapped;
+        let term = match shape_of(term, meta)? {
+            Shape::Event => term,
+            Shape::Object(_) => {
+                wrapped = Expr::any(term.clone());
+                &wrapped
+            }
+        };
+        if try_scalar_cut(program, term, meta)
+            || try_group(program, term, meta)
+            || try_any_group(program, term, meta)
+            || try_ht(program, term, meta)
+            || try_triggers(program, term, meta)
+        {
+            continue;
+        }
+        let compiled = compile_expr(program, term, meta)?;
+        program.exprs.push(compiled);
+    }
+    Ok(())
+}
+
+/// Conjunct classifier: simple scalar comparison → preselection bank.
+fn try_scalar_cut(program: &mut CutProgram, term: &Expr, meta: &FileMeta) -> bool {
+    let Some((name, op, abs, value)) = as_simple_cmp(term) else { return false };
+    let Some(b) = meta.branch(name) else { return false };
+    if b.desc.kind != BranchKind::Scalar {
+        return false;
+    }
+    let col = program.scalar_col(name);
+    program.scalar_cuts.push(ScalarCutParam { col, op, abs, value: value as f32 });
+    true
+}
+
+/// Shared body of the group classifiers: if `pred` is a conjunction of
+/// simple cuts over f32 jagged branches of one collection, compile it
+/// as an [`ObjGroup`] with the given `min_count` and return true.
+fn compile_group(
+    program: &mut CutProgram,
+    pred: &Expr,
+    meta: &FileMeta,
+    min_count: u32,
+) -> bool {
+    let mut cuts: Vec<(String, u8, bool, f64)> = Vec::new();
+    let mut collection: Option<String> = None;
+    for c in conjuncts(pred) {
+        let Some((name, op, abs, value)) = as_simple_cmp(c) else { return false };
+        let Some(b) = meta.branch(name) else { return false };
+        if b.desc.kind != BranchKind::Jagged || b.desc.dtype != DType::F32 {
+            return false;
+        }
+        match &collection {
+            None => collection = Some(b.desc.group.clone()),
+            Some(c0) if *c0 == b.desc.group => {}
+            Some(_) => return false,
+        }
+        cuts.push((name.to_string(), op, abs, value));
+    }
+    let Some(collection) = collection else { return false };
+    let start = program.obj_cuts.len();
+    for (name, op, abs, value) in cuts {
+        let col = program.obj_col(&name);
+        program.obj_cuts.push(ObjCutParam { col, op, abs, value: value as f32 });
+    }
+    program.groups.push(ObjGroup {
+        collection,
+        cut_range: start..program.obj_cuts.len(),
+        min_count,
+    });
+    true
+}
+
+/// Conjunct classifier: `count(simple-cuts over one collection) >= k`
+/// → object group.
+fn try_group(program: &mut CutProgram, term: &Expr, meta: &FileMeta) -> bool {
+    let Expr::Binary(BinOp::Ge, lhs, rhs) = term else { return false };
+    let Expr::Num(k) = rhs.as_ref() else { return false };
+    if *k < 0.0 || k.fract() != 0.0 || *k > u32::MAX as f64 {
+        return false;
+    }
+    let Expr::Agg { op: AggOp::Count, arg, pred: None } = lhs.as_ref() else {
+        return false;
+    };
+    compile_group(program, arg, meta, *k as u32)
+}
+
+/// Conjunct classifier: bare `any(simple-cuts)` → object group with
+/// `min_count` 1 (`any(p)` ≡ `count(p) >= 1`), so implicit-`any`
+/// wrapped object cuts stay on the kernel path.
+fn try_any_group(program: &mut CutProgram, term: &Expr, meta: &FileMeta) -> bool {
+    let Expr::Agg { op: AggOp::Any, arg, pred: None } = term else { return false };
+    compile_group(program, arg, meta, 1)
+}
+
+/// Conjunct classifier: `sum(jet[jet > t]) >= h` → the HT unit (one
+/// per program, matching the kernel).
+fn try_ht(program: &mut CutProgram, term: &Expr, meta: &FileMeta) -> bool {
+    if program.ht.is_some() {
+        return false;
+    }
+    let Expr::Binary(BinOp::Ge, lhs, rhs) = term else { return false };
+    let Expr::Num(h) = rhs.as_ref() else { return false };
+    let Expr::Agg { op: AggOp::Sum, arg, pred: Some(p) } = lhs.as_ref() else {
+        return false;
+    };
+    let Expr::Branch(jet) = arg.as_ref() else { return false };
+    let Expr::Binary(BinOp::Gt, pl, pr) = p.as_ref() else { return false };
+    let (Expr::Branch(jet2), Expr::Num(t)) = (pl.as_ref(), pr.as_ref()) else {
+        return false;
+    };
+    if jet != jet2 {
+        return false;
+    }
+    let Some(b) = meta.branch(jet) else { return false };
+    if b.desc.kind != BranchKind::Jagged || b.desc.dtype != DType::F32 {
+        return false;
+    }
+    let col = program.obj_col(jet);
+    program.ht = Some(HtParam { col, object_pt_min: *t as f32, min_ht: *h as f32 });
+    true
+}
+
+/// Conjunct classifier: OR of bare scalar flags → the trigger bank
+/// (one per program). Acceptance mirrors the legacy `triggers_any`
+/// compilation exactly (any scalar dtype), so every lowered legacy
+/// query classifies back to the identical program. Note the bank's
+/// `> 0.5` test — identical to nonzero truthiness for 0/1 flag
+/// branches, which is what trigger bits are; spell out `x != 0` in a
+/// cut string if a non-flag scalar needs exact nonzero semantics.
+fn try_triggers(program: &mut CutProgram, term: &Expr, meta: &FileMeta) -> bool {
+    if !program.triggers.is_empty() {
+        return false;
+    }
+    let mut names: Vec<&str> = Vec::new();
+    for leaf in disjuncts(term) {
+        let Expr::Branch(name) = leaf else { return false };
+        let Some(b) = meta.branch(name) else { return false };
+        if b.desc.kind != BranchKind::Scalar {
+            return false;
+        }
+        names.push(name);
+    }
+    let cols: Vec<usize> = names.iter().map(|n| program.scalar_col(n)).collect();
+    program.triggers = cols;
+    true
+}
+
+/// Resolve branch references to column indices, producing the
+/// interpreter-ready [`CExpr`]. Assumes `shape_of` validated the
+/// expression (branches exist, aggregations are object-shaped).
+fn compile_expr(program: &mut CutProgram, e: &Expr, meta: &FileMeta) -> Result<CExpr> {
+    Ok(match e {
+        Expr::Num(v) => CExpr::Num(*v as f32),
+        Expr::Branch(name) => {
+            let b = meta
+                .branch(name)
+                .ok_or_else(|| Error::query(format!("cut references unknown branch '{name}'")))?;
+            match b.desc.kind {
+                BranchKind::Scalar => CExpr::Scalar(program.scalar_col(name)),
+                BranchKind::Jagged => {
+                    if b.desc.dtype != DType::F32 {
+                        return Err(Error::query(format!(
+                            "cut variable '{name}' must be f32 (got {})",
+                            b.desc.dtype.name()
+                        )));
+                    }
+                    CExpr::Jagged(program.obj_col(name))
+                }
+            }
+        }
+        Expr::Unary(op, x) => CExpr::Unary(*op, Box::new(compile_expr(program, x, meta)?)),
+        Expr::Binary(op, a, b) => CExpr::Binary(
+            *op,
+            Box::new(compile_expr(program, a, meta)?),
+            Box::new(compile_expr(program, b, meta)?),
+        ),
+        Expr::Agg { op, arg, pred } => {
+            let carg = compile_expr(program, arg, meta)?;
+            let cpred = match pred {
+                Some(p) => Some(Box::new(compile_expr(program, p, meta)?)),
+                None => None,
+            };
+            let nobj = first_jagged(&carg)
+                .or_else(|| cpred.as_deref().and_then(first_jagged))
+                .ok_or_else(|| {
+                    Error::query(format!(
+                        "aggregation '{}' does not reference a jagged branch",
+                        op.name()
+                    ))
+                })?;
+            CExpr::Agg { op: *op, nobj, arg: Box::new(carg), pred: cpred }
+        }
+    })
+}
+
+/// First jagged column referenced at object shape (nested aggregations
+/// are event-shaped and do not count).
+fn first_jagged(e: &CExpr) -> Option<usize> {
+    match e {
+        CExpr::Jagged(c) => Some(*c),
+        CExpr::Num(_) | CExpr::Scalar(_) | CExpr::Agg { .. } => None,
+        CExpr::Unary(_, x) => first_jagged(x),
+        CExpr::Binary(_, a, b) => first_jagged(a).or_else(|| first_jagged(b)),
     }
 }
 
@@ -323,7 +818,146 @@ mod tests {
         assert_eq!(ht.col, 2);
         assert_eq!(ht.min_ht, 200.0);
         assert_eq!(p.triggers, vec![1]);
+        assert!(p.exprs.is_empty());
         assert!(p.fits_kernel());
+    }
+
+    #[test]
+    fn lowered_ir_compiles_to_identical_program() {
+        // The acceptance invariant: a legacy structured query and the
+        // same query expressed purely as its lowered IR cut compile to
+        // the *identical* CutProgram (stage classification reverses
+        // the lowering), so masks and the kernel-fit decision match.
+        let q_legacy = query(Q);
+        let mut q_ir = q_legacy.clone();
+        q_ir.cut = q_legacy.selection.to_expr();
+        q_ir.selection = Default::default();
+        let plan_legacy = SkimPlan::build(&q_legacy, &meta()).unwrap();
+        let plan_ir = SkimPlan::build(&q_ir, &meta()).unwrap();
+        assert_eq!(plan_legacy.program, plan_ir.program);
+        assert_eq!(plan_legacy.criteria_branches, plan_ir.criteria_branches);
+        assert_eq!(plan_legacy.output_only_branches, plan_ir.output_only_branches);
+        assert!(plan_ir.program.fits_kernel());
+
+        // Non-u8 trigger branches classify identically too (the
+        // legacy bank accepts any scalar dtype; so must the IR path).
+        let q_odd = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "selection": {"event": {"triggers_any": ["MET_pt", "run"]}}}"#,
+        );
+        let mut q_odd_ir = q_odd.clone();
+        q_odd_ir.cut = q_odd.selection.to_expr();
+        q_odd_ir.selection = Default::default();
+        let p_odd = SkimPlan::build(&q_odd, &meta()).unwrap();
+        let p_odd_ir = SkimPlan::build(&q_odd_ir, &meta()).unwrap();
+        assert_eq!(p_odd.program, p_odd_ir.program);
+        assert_eq!(p_odd.program.triggers.len(), 2);
+        assert!(p_odd_ir.program.exprs.is_empty());
+    }
+
+    #[test]
+    fn cut_string_classifies_into_kernel_stages() {
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "cut": "nElectron >= 1 && count(Electron_pt > 25 && abs(Electron_eta) < 2.4) >= 1 && sum(Jet_pt[Jet_pt > 30]) >= 200 && HLT_IsoMu24"}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        let p = &plan.program;
+        assert_eq!(p.scalar_cuts.len(), 1);
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.obj_cuts.len(), 2);
+        assert_eq!(p.groups[0].collection, "Electron");
+        assert!(p.ht.is_some());
+        assert_eq!(p.triggers.len(), 1);
+        assert!(p.exprs.is_empty());
+        assert!(p.fits_kernel(), "kernel-expressible cut string must fit");
+    }
+
+    #[test]
+    fn residual_expressions_disable_kernel() {
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "cut": "MET_pt > 100 || sum(Jet_pt[Jet_pt > 30]) > 250"}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        let p = &plan.program;
+        assert_eq!(p.exprs.len(), 1);
+        assert!(!p.fits_kernel());
+        let reasons = p.kernel_unfit_reasons();
+        assert!(reasons.iter().any(|r| r.contains("residual")), "{reasons:?}");
+        assert!(plan.warnings.iter().any(|w| w.contains("interpreter")));
+        // The jagged column is still a phase-1 criteria branch.
+        assert!(plan.criteria_branches.iter().any(|b| b == "Jet_pt"));
+    }
+
+    #[test]
+    fn object_shaped_cut_gets_implicit_any() {
+        // A bare per-object cut is implicitly `any(..)`, which
+        // classifies as `count(..) >= 1` — it stays kernel-eligible.
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "cut": "Muon_pt > 30"}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        let p = &plan.program;
+        assert!(p.exprs.is_empty());
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].collection, "Muon");
+        assert_eq!(p.groups[0].min_count, 1);
+        assert!(p.fits_kernel());
+
+        // A non-simple object predicate still lands in the residual IR.
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "cut": "Muon_pt * 2 > 30"}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        assert_eq!(plan.program.exprs.len(), 1);
+        match &plan.program.exprs[0] {
+            CExpr::Agg { op: AggOp::Any, .. } => {}
+            other => panic!("expected implicit any(), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn implicit_any_is_per_conjunct() {
+        // Event-level conjuncts keep their kernel classification even
+        // when an object-shaped conjunct sits next to them
+        // (`A && obj` ≡ `A && any(obj)`).
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "cut": "MET_pt > 100 && Muon_pt > 30"}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        let p = &plan.program;
+        assert_eq!(p.scalar_cuts.len(), 1);
+        assert_eq!(p.groups.len(), 1);
+        assert!(p.exprs.is_empty());
+        assert!(p.fits_kernel());
+    }
+
+    #[test]
+    fn mixed_collections_in_one_expression_rejected() {
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "cut": "any(Muon_pt > Electron_pt)"}"#,
+        );
+        let err = SkimPlan::build(&q, &meta()).unwrap_err();
+        assert!(format!("{err}").contains("different collections"), "{err}");
+    }
+
+    #[test]
+    fn cut_unknown_branch_and_bad_aggregation_rejected() {
+        for (cut, needle) in [
+            ("nTau >= 1", "unknown branch 'nTau'"),
+            ("count(MET_pt > 30) >= 1", "requires a per-object"),
+        ] {
+            let text = format!(
+                r#"{{"input": "f", "output": "o", "branches": ["MET_pt"], "cut": "{cut}"}}"#
+            );
+            let err = SkimPlan::build(&query(&text), &meta()).unwrap_err();
+            assert!(format!("{err}").contains(needle), "cut '{cut}': {err}");
+        }
     }
 
     #[test]
@@ -350,6 +984,7 @@ mod tests {
         assert!(plan.criteria_branches.is_empty());
         assert_eq!(plan.output_only_branches, plan.output_branches);
         assert!(plan.program.fits_kernel());
+        assert!(plan.program.is_trivial());
     }
 
     #[test]
@@ -440,5 +1075,25 @@ mod tests {
         let plan = SkimPlan::build(&query(&text), &m).unwrap();
         assert!(!plan.program.fits_kernel());
         assert!(plan.warnings.iter().any(|w| w.contains("interpreter")));
+    }
+
+    #[test]
+    fn explain_renders_plan_and_fallback_reason() {
+        let q = query(
+            r#"{"input": "f.troot", "output": "o.troot", "branches": ["MET_pt"],
+                "cut": "MET_pt > 100 || sum(Jet_pt[Jet_pt > 30]) > 250"}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        let text = plan.explain(&q);
+        assert!(text.contains("selection expression:"));
+        assert!(text.contains("||"));
+        assert!(text.contains("phase 1 (criteria)"));
+        assert!(text.contains("MET_pt"));
+        assert!(text.contains("scalar interpreter — kernel fallback because:"));
+        assert!(text.contains("residual IR expression"));
+
+        let fit = SkimPlan::build(&query(Q), &meta()).unwrap();
+        let text = fit.explain(&query(Q));
+        assert!(text.contains("vectorized AOT kernel"));
     }
 }

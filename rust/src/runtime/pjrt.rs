@@ -194,6 +194,7 @@ mod tests {
             scalar_cuts: vec![ScalarCutParam { col: 0, op: 1, abs: false, value: 1.0 }],
             ht: Some(HtParam { col: 2, object_pt_min: 30.0, min_ht: 100.0 }),
             triggers: vec![5],
+            exprs: vec![],
         }
     }
 

@@ -1,0 +1,246 @@
+//! Query-IR integration: the legacy structured schema and the open
+//! expression IR must select identical event sets, and cut strings
+//! beyond the legacy schema must run end-to-end on the interpreter
+//! with reference-checked semantics.
+
+use skimroot::engine::{EngineOpts, SkimEngine};
+use skimroot::gen::{self, GenConfig};
+use skimroot::metrics::Timeline;
+use skimroot::query::plan::SkimPlan;
+use skimroot::query::SkimQuery;
+use skimroot::troot::{ColumnData, ColumnValues, LocalFile, ReadAt, TRootReader};
+use std::sync::{Arc, OnceLock};
+
+fn workdir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("skim_ir_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Shared quickstart-sized dataset (full pipeline shape).
+fn dataset() -> std::path::PathBuf {
+    static PATH: OnceLock<std::path::PathBuf> = OnceLock::new();
+    PATH.get_or_init(|| {
+        let path = workdir().join("events.troot");
+        let cfg = GenConfig {
+            n_events: 1500,
+            target_branches: 220,
+            n_hlt: 40,
+            basket_events: 256,
+            codec: skimroot::compress::Codec::Lz4,
+            seed: 77,
+        };
+        gen::generate(&cfg, &path).unwrap();
+        path
+    })
+    .clone()
+}
+
+fn local_store() -> Arc<dyn ReadAt> {
+    Arc::new(LocalFile::open(dataset()).unwrap())
+}
+
+fn run(query: &SkimQuery, outname: &str) -> skimroot::engine::SkimResult {
+    let tl = Timeline::new();
+    let engine = SkimEngine::new(None);
+    let opts = EngineOpts { use_pjrt: false, ..Default::default() };
+    engine
+        .run(local_store(), query, &tl, &opts, workdir().join(outname))
+        .unwrap()
+}
+
+/// The acceptance invariant: every legacy Figure-2c JSON query lowers
+/// to the IR and selects the *identical* event set — compared here as
+/// compiled programs, pass counts, funnels and byte-identical output
+/// files on the quickstart dataset.
+#[test]
+fn legacy_schema_and_lowered_ir_select_identical_events() {
+    let q_legacy = gen::higgs_query("events.troot", "ir_legacy.troot");
+
+    // Same query expressed purely as its lowered IR cut.
+    let mut q_ir = q_legacy.clone();
+    q_ir.cut = q_legacy.selection.to_expr();
+    q_ir.selection = Default::default();
+    q_ir.output = "ir_expr.troot".to_string();
+
+    // Plans compile to the identical cut program (classification
+    // reverses the lowering), with the same branch split.
+    let reader = TRootReader::open(LocalFile::open(dataset()).unwrap()).unwrap();
+    let plan_legacy = SkimPlan::build(&q_legacy, reader.meta()).unwrap();
+    let plan_ir = SkimPlan::build(&q_ir, reader.meta()).unwrap();
+    assert_eq!(plan_legacy.program, plan_ir.program);
+    assert_eq!(plan_legacy.criteria_branches, plan_ir.criteria_branches);
+    assert!(plan_ir.program.fits_kernel(), "lowered legacy query must stay kernel-eligible");
+
+    // And the engine selects the same events (funnel + masks via the
+    // byte-identical filtered files).
+    let res_legacy = run(&q_legacy, "ir_legacy.troot");
+    let res_ir = run(&q_ir, "ir_expr.troot");
+    assert!(res_legacy.n_pass > 0);
+    assert_eq!(res_legacy.n_pass, res_ir.n_pass);
+    assert_eq!(res_legacy.stage_funnel, res_ir.stage_funnel);
+    let a = std::fs::read(workdir().join("ir_legacy.troot")).unwrap();
+    let b = std::fs::read(workdir().join("ir_expr.troot")).unwrap();
+    assert_eq!(a, b, "filtered outputs must be byte-identical");
+}
+
+/// A TCut-style string that *is* kernel-expressible compiles onto the
+/// fixed-function stages and matches the equivalent structured query.
+#[test]
+fn kernel_expressible_cut_string_matches_structured_query() {
+    let structured = SkimQuery::from_json_text(
+        r#"{"input": "events.troot", "output": "ir_struct.troot",
+            "branches": ["Electron_pt", "MET_pt"],
+            "selection": {
+                "preselection": [ {"branch": "MET_pt", "op": ">", "value": 25} ],
+                "objects": [
+                    { "collection": "Electron", "min_count": 1, "cuts": [
+                        {"var": "Electron_pt",  "op": ">",   "value": 25.0},
+                        {"var": "Electron_eta", "op": "|<|", "value": 2.4} ] }
+                ]
+            }}"#,
+    )
+    .unwrap();
+    let cut_string = SkimQuery::new("events.troot", "ir_cutstr.troot")
+        .keep(&["Electron_pt", "MET_pt"])
+        .with_cut_str("MET_pt > 25 && count(Electron_pt > 25 && |Electron_eta| < 2.4) >= 1")
+        .unwrap();
+
+    let reader = TRootReader::open(LocalFile::open(dataset()).unwrap()).unwrap();
+    let p1 = SkimPlan::build(&structured, reader.meta()).unwrap();
+    let p2 = SkimPlan::build(&cut_string, reader.meta()).unwrap();
+    assert_eq!(p1.program, p2.program);
+    assert!(p2.program.fits_kernel());
+
+    let r1 = run(&structured, "ir_struct.troot");
+    let r2 = run(&cut_string, "ir_cutstr.troot");
+    assert!(r1.n_pass > 0);
+    assert_eq!(r1.n_pass, r2.n_pass);
+    assert_eq!(r1.stage_funnel, r2.stage_funnel);
+}
+
+/// A cut inexpressible in the legacy schema (`||` across trigger and
+/// kinematics, plus a `max` aggregation) runs on the interpreter and
+/// matches an independent per-event reference evaluation from whole
+/// columns.
+#[test]
+fn inexpressible_cut_runs_and_matches_reference() {
+    let query = SkimQuery::new("events.troot", "ir_free.troot")
+        .keep(&["Muon_pt", "nMuon", "MET_pt"])
+        .with_cut_str("nMuon >= 1 && (MET_pt > 40 || max(Muon_pt) > 30)")
+        .unwrap();
+
+    let reader = TRootReader::open(LocalFile::open(dataset()).unwrap()).unwrap();
+    let plan = SkimPlan::build(&query, reader.meta()).unwrap();
+    assert!(!plan.program.fits_kernel());
+    assert!(plan
+        .program
+        .kernel_unfit_reasons()
+        .iter()
+        .any(|r| r.contains("residual")));
+
+    let res = run(&query, "ir_free.troot");
+    assert!(!res.vectorized);
+
+    // Independent reference: evaluate the cut per event from fully
+    // decoded columns (first 16 object slots, like the engine).
+    let n = reader.n_events() as usize;
+    let n_muon: Vec<f64> = match reader.read_branch_all("nMuon").unwrap() {
+        ColumnData::Scalar(v) => (0..n).map(|i| v.get_as_f64(i)).collect(),
+        _ => unreachable!(),
+    };
+    let met: Vec<f64> = match reader.read_branch_all("MET_pt").unwrap() {
+        ColumnData::Scalar(v) => (0..n).map(|i| v.get_as_f64(i)).collect(),
+        _ => unreachable!(),
+    };
+    let (mu_offs, mu_vals) = match reader.read_branch_all("Muon_pt").unwrap() {
+        ColumnData::Jagged { offsets, values: ColumnValues::F32(v) } => (offsets, v),
+        _ => unreachable!(),
+    };
+    let max_m = 16usize;
+    let mut expected = 0u64;
+    for ev in 0..n {
+        let lo = mu_offs[ev] as usize;
+        let hi = mu_offs[ev + 1] as usize;
+        let m = (hi - lo).min(max_m);
+        let mut mu_max = f32::NEG_INFINITY;
+        for x in &mu_vals[lo..lo + m] {
+            mu_max = mu_max.max(*x);
+        }
+        if n_muon[ev] >= 1.0 && (met[ev] > 40.0 || mu_max > 30.0) {
+            expected += 1;
+        }
+    }
+    assert!(expected > 0);
+    assert_eq!(res.n_pass, expected);
+}
+
+/// An object-shaped cut gets the TCut implicit-`any`, classifies to
+/// the same compiled program as the equivalent explicit object group,
+/// and selects the same events.
+#[test]
+fn implicit_any_matches_structured_object_group() {
+    let bare = SkimQuery::new("events.troot", "ir_bare.troot")
+        .keep(&["MET_pt"])
+        .with_cut_str("Muon_pt > 25")
+        .unwrap();
+    let structured = SkimQuery::from_json_text(
+        r#"{"input": "events.troot", "output": "ir_grp.troot",
+            "branches": ["MET_pt"],
+            "selection": {"objects": [
+                {"collection": "Muon", "min_count": 1, "cuts": [
+                    {"var": "Muon_pt", "op": ">", "value": 25.0}]}]}}"#,
+    )
+    .unwrap();
+    let reader = TRootReader::open(LocalFile::open(dataset()).unwrap()).unwrap();
+    let p_bare = SkimPlan::build(&bare, reader.meta()).unwrap();
+    let p_struct = SkimPlan::build(&structured, reader.meta()).unwrap();
+    assert_eq!(p_bare.program, p_struct.program);
+    let r_bare = run(&bare, "ir_bare.troot");
+    let r_struct = run(&structured, "ir_grp.troot");
+    assert!(r_bare.n_pass > 0);
+    assert_eq!(r_bare.n_pass, r_struct.n_pass);
+}
+
+/// A program wider than the kernel's fixed banks (17 ORed trigger
+/// flags → 17 scalar columns > 16) must run on the interpreter with a
+/// correctly-sized batch, not warn-then-panic.
+#[test]
+fn over_capacity_program_runs_on_interpreter() {
+    let flags = [
+        "HLT_IsoMu24",
+        "HLT_IsoMu27",
+        "HLT_Mu50",
+        "HLT_Ele27_WPTight",
+        "HLT_Ele32_WPTight",
+        "HLT_Ele35_WPTight",
+        "HLT_Photon200",
+        "HLT_PFMET120_PFMHT120",
+        "HLT_PFMETNoMu120_PFMHTNoMu120",
+        "HLT_PFHT1050",
+        "HLT_PFJet500",
+        "HLT_AK8PFJet400_TrimMass30",
+        "HLT_DoubleEle25_CaloIdL_MW",
+        "HLT_Mu17_TrkIsoVVL_Mu8_TrkIsoVVL_DZ_Mass3p8",
+        "HLT_Mu23_TrkIsoVVL_Ele12_CaloIdL_TrackIdL_IsoVL",
+        "HLT_Mu8_TrkIsoVVL_Ele23_CaloIdL_TrackIdL_IsoVL_DZ",
+        "HLT_DoublePFJets40_CaloBTagDeepCSV",
+    ];
+    let query = SkimQuery::new("events.troot", "ir_wide.troot")
+        .keep(&["MET_pt"])
+        .with_cut_str(&flags.join(" || "))
+        .unwrap();
+    let reader = TRootReader::open(LocalFile::open(dataset()).unwrap()).unwrap();
+    let plan = SkimPlan::build(&query, reader.meta()).unwrap();
+    assert_eq!(plan.program.scalar_columns.len(), 17);
+    assert!(!plan.program.fits_kernel());
+    assert!(plan
+        .program
+        .kernel_unfit_reasons()
+        .iter()
+        .any(|r| r.contains("scalar columns")));
+    let res = run(&query, "ir_wide.troot");
+    assert!(!res.vectorized);
+    assert!(res.n_pass > 0, "some of 17 ORed triggers should fire");
+    assert!(res.n_pass < res.n_events);
+}
