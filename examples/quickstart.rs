@@ -32,9 +32,11 @@ impl FilterStage for ByteAudit {
     fn run(&self, ctx: &mut StageCtx) -> skimroot::Result<Verdict> {
         if let Some(group) = &ctx.group {
             let mut tab = self.bytes.lock().unwrap();
+            // Per-cluster rows are Vecs in phase-1 slot order; resolve
+            // slot → branch name through the interned fetch set.
             for cluster in &group.raw {
-                for (branch, (raw, _)) in cluster {
-                    *tab.entry(branch.clone()).or_insert(0) += raw.len() as u64;
+                for (bm, (raw, _)) in ctx.phase1_branches().iter().zip(cluster) {
+                    *tab.entry(bm.desc.name.clone()).or_insert(0) += raw.len() as u64;
                 }
             }
         }

@@ -7,10 +7,39 @@
 
 #![allow(dead_code)]
 
+use std::io::Write as _;
 use std::time::Instant;
 
-/// Measure `f` `iters` times after `warmup` runs; prints median/min/max.
-pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) {
+/// Quick-iteration mode for CI smoke runs: `SKIM_BENCH_QUICK=1` caps
+/// warmup at 1 and measured iterations at 3 for every bench call, so
+/// the bench binaries *execute* in seconds instead of minutes.
+pub fn quick() -> bool {
+    std::env::var("SKIM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Machine-readable results: when `BENCH_JSON=path` is set, every
+/// `bench`/`bench_throughput` call appends one JSON record
+/// `{name, median, min, max, n}` (seconds) to that file — this is what
+/// populates the repo's `BENCH_*.json` perf trajectory.
+fn record_json(name: &str, median: f64, min: f64, max: f64, n: usize) {
+    let Ok(path) = std::env::var("BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    let esc = name.replace('\\', "\\\\").replace('"', "\\\"");
+    let line = format!(
+        "{{\"name\":\"{esc}\",\"median\":{median:.9},\"min\":{min:.9},\"max\":{max:.9},\"n\":{n}}}\n"
+    );
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            let _ = f.write_all(line.as_bytes());
+        }
+        Err(e) => eprintln!("BENCH_JSON: cannot open {path}: {e}"),
+    }
+}
+
+fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    let (warmup, iters) = if quick() { (warmup.min(1), iters.min(3)) } else { (warmup, iters) };
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
@@ -21,13 +50,22 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
         times.push(t0.elapsed().as_secs_f64());
     }
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times
+}
+
+/// Measure `f` `iters` times after `warmup` runs; prints median/min/max.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> T) {
+    let times = measure(warmup, iters, f);
     let median = times[times.len() / 2];
+    let (min, max) = (times[0], *times.last().unwrap());
     println!(
-        "{name:<44} median {:>12} (min {:>12}, max {:>12}, n={iters})",
+        "{name:<44} median {:>12} (min {:>12}, max {:>12}, n={})",
         skimroot::util::human_secs(median),
-        skimroot::util::human_secs(times[0]),
-        skimroot::util::human_secs(*times.last().unwrap()),
+        skimroot::util::human_secs(min),
+        skimroot::util::human_secs(max),
+        times.len(),
     );
+    record_json(name, median, min, max, times.len());
 }
 
 /// Throughput variant: reports MB/s over `bytes` processed per iter.
@@ -36,24 +74,17 @@ pub fn bench_throughput<T>(
     bytes: usize,
     warmup: usize,
     iters: usize,
-    mut f: impl FnMut() -> T,
+    f: impl FnMut() -> T,
 ) {
-    for _ in 0..warmup {
-        std::hint::black_box(f());
-    }
-    let mut times = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t0 = Instant::now();
-        std::hint::black_box(f());
-        times.push(t0.elapsed().as_secs_f64());
-    }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let times = measure(warmup, iters, f);
     let median = times[times.len() / 2];
     println!(
-        "{name:<44} {:>10.1} MB/s (median {:>12}, n={iters})",
+        "{name:<44} {:>10.1} MB/s (median {:>12}, n={})",
         bytes as f64 / median / 1e6,
         skimroot::util::human_secs(median),
+        times.len(),
     );
+    record_json(name, median, times[0], *times.last().unwrap(), times.len());
 }
 
 /// The figure benches run the eval suite at `SKIM_BENCH_SCALE`

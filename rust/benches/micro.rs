@@ -3,26 +3,42 @@
 //!
 //! * codec compress/decompress throughput (LZ4 vs zlib vs xz-like —
 //!   the Figure 4b decompression asymmetry);
-//! * vectorized PJRT cut evaluation vs the scalar interpreter;
+//! * cut evaluation: scalar interpreter vs the batch-vectorized
+//!   columnar interpreter vs the PJRT kernel;
 //! * basket decode (deserialization substrate);
-//! * TTreeCache round-trip reduction;
+//! * decompress+deserialize fan-out across 1/2/4 worker threads, plus
+//!   end-to-end group processing at `parallelism` 1/2/4 — the
+//!   threaded-engine tentpole, measured not asserted;
 //! * JSON query parsing.
+//!
+//! `BENCH_JSON=path` appends machine-readable records (see
+//! `harness.rs`); `SKIM_BENCH_QUICK=1` runs everything at smoke scale.
 
 mod harness;
 
 use skimroot::compress::{self, Codec};
-use skimroot::engine::interp;
+use skimroot::engine::{interp, EngineOpts, SkimEngine};
 use skimroot::gen;
+use skimroot::metrics::Timeline;
 use skimroot::query::plan::SkimPlan;
 use skimroot::runtime::{Batch, CutParams};
-use skimroot::troot::{basket, BranchDesc, ColumnData, DType};
+use skimroot::troot::{basket, BranchDesc, ColumnData, DType, LocalFile, ReadAt, TRootReader};
 use skimroot::util::Pcg32;
+use std::sync::Arc;
 
 fn main() {
     codec_benches();
     filter_benches();
     decode_benches();
+    thread_scaling_benches();
+    engine_parallelism_benches();
     json_benches();
+}
+
+fn bench_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("skimroot_bench_micro");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
 }
 
 fn codec_benches() {
@@ -53,12 +69,10 @@ fn codec_benches() {
     }
 }
 
-fn filter_benches() {
-    println!("\n== cut evaluation (2048-event batch, Higgs program) ==");
-    // Build the Higgs cut program against the generated schema.
-    let dir = std::env::temp_dir().join("skimroot_bench_micro");
-    std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join("micro.troot");
+/// Generate (once) the shared micro dataset and assemble one full
+/// batch of its criteria columns for `query`.
+fn assemble_batch(query: &skimroot::query::SkimQuery) -> (SkimPlan, Batch) {
+    let path = bench_dir().join("micro.troot");
     if !path.exists() {
         let cfg = gen::GenConfig {
             n_events: 2048,
@@ -70,32 +84,56 @@ fn filter_benches() {
         };
         gen::generate(&cfg, &path).unwrap();
     }
-    let reader =
-        skimroot::troot::TRootReader::open(skimroot::troot::LocalFile::open(&path).unwrap())
-            .unwrap();
-    let query = gen::higgs_query("micro.troot", "o.troot");
-    let plan = SkimPlan::build(&query, reader.meta()).unwrap();
+    let reader = TRootReader::open(LocalFile::open(&path).unwrap()).unwrap();
+    let plan = SkimPlan::build(query, reader.meta()).unwrap();
 
-    let runtime = harness::bench_runtime();
-    let caps = runtime
-        .as_ref()
-        .map(|r| r.caps)
-        .unwrap_or(skimroot::runtime::Capacities { c: 12, s: 16, k_obj: 12, k_sc: 6, g: 4, n_stages: 4 });
-
-    // Assemble a real batch from the file.
-    let mut decoded = std::collections::HashMap::new();
-    for name in &plan.criteria_branches {
-        let bm = reader.branch(name).unwrap().clone();
-        decoded.insert(name.clone(), reader.read_basket(&bm, 0).unwrap());
-    }
+    let caps = skimroot::runtime::Capacities {
+        c: plan.program.obj_columns.len().max(12),
+        s: plan.program.scalar_columns.len().max(16),
+        k_obj: 12,
+        k_sc: 6,
+        g: 4,
+        n_stages: 4,
+    };
+    // Decoded baskets indexed by the plan's dense BranchIds
+    // (= criteria order).
+    let decoded: Vec<skimroot::troot::DecodedBasket> = plan
+        .criteria_branches
+        .iter()
+        .map(|name| {
+            let bm = reader.branch(name).unwrap().clone();
+            reader.read_basket(&bm, 0).unwrap()
+        })
+        .collect();
     let (b, m) = (2048, 16);
     let mut batch = Batch::zeroed(&caps, b, m);
-    skimroot::engine::batch::append(&plan.program, &decoded, 0, 2048, &mut batch, 0).unwrap();
+    skimroot::engine::batch::append(
+        &plan.program,
+        &decoded,
+        &plan.obj_col_branch,
+        &plan.scalar_col_branch,
+        0,
+        2048,
+        &mut batch,
+        0,
+    )
+    .unwrap();
     batch.n_valid = 2048;
+    (plan, batch)
+}
 
-    harness::bench("interpreter eval (2048 events)", 2, 10, || {
+fn filter_benches() {
+    println!("\n== cut evaluation (2048-event batch, Higgs program) ==");
+    let (plan, batch) = assemble_batch(&gen::higgs_query("micro.troot", "o.troot"));
+
+    harness::bench("interp eval scalar (2048 events)", 2, 10, || {
         interp::eval(&plan.program, &batch)
     });
+    harness::bench("interp eval columnar (2048 events)", 2, 10, || {
+        interp::eval_columnar(&plan.program, &batch)
+    });
+
+    let runtime = harness::bench_runtime();
     if let Some(rt) = &runtime {
         let variant = rt.variant("large").unwrap();
         let params = CutParams::pack(&plan.program, &rt.caps).unwrap();
@@ -105,6 +143,23 @@ fn filter_benches() {
     } else {
         println!("(PJRT runtime unavailable: build artifacts first)");
     }
+
+    // A residual-IR cut (inexpressible in the kernel's fixed-function
+    // stages): the columnar path's whole-column expression sweeps vs
+    // per-event tree dispatch.
+    println!("\n== cut evaluation (2048-event batch, residual-IR cut) ==");
+    let q = skimroot::query::SkimQuery::new("micro.troot", "o.troot")
+        .keep(&["MET_pt"])
+        .with_cut_str("MET_pt > 20 || sum(Jet_pt[Jet_pt > 25]) > 150")
+        .unwrap();
+    let (rplan, rbatch) = assemble_batch(&q);
+    assert!(!rplan.program.exprs.is_empty(), "cut must compile to residual IR");
+    harness::bench("interp eval scalar (residual IR)", 2, 10, || {
+        interp::eval(&rplan.program, &rbatch)
+    });
+    harness::bench("interp eval columnar (residual IR)", 2, 10, || {
+        interp::eval_columnar(&rplan.program, &rbatch)
+    });
 }
 
 fn decode_benches() {
@@ -130,6 +185,95 @@ fn decode_benches() {
         }
         values
     });
+}
+
+/// The fan-out primitive in isolation: decompress + deserialize a set
+/// of LZ4 basket frames round-robin across 1/2/4 scoped threads —
+/// exactly the shape of the engine's threaded group stages.
+fn thread_scaling_benches() {
+    println!("\n== threaded decompress+deserialize (64 jagged baskets) ==");
+    let mut rng = Pcg32::new(17);
+    let desc = BranchDesc::jagged("Jet_pt", DType::F32, "Jet");
+    let n_events = 2_000usize;
+    let frames: Vec<Vec<u8>> = (0..64)
+        .map(|_| {
+            let per_event: Vec<Vec<f32>> = (0..n_events)
+                .map(|_| {
+                    (0..rng.poisson(5.5) as usize).map(|_| rng.exp(35.0) as f32).collect()
+                })
+                .collect();
+            let col = ColumnData::jagged_f32(&per_event);
+            compress::compress(Codec::Lz4, &basket::encode(&col, 0, n_events))
+        })
+        .collect();
+    let total: usize = frames.iter().map(|f| f.len()).sum();
+    for workers in [1usize, 2, 4] {
+        harness::bench_throughput(
+            &format!("decompress+deserialize ({workers} thread)"),
+            total,
+            1,
+            5,
+            || {
+                let mut shards: Vec<Vec<&[u8]>> = vec![Vec::new(); workers];
+                for (i, f) in frames.iter().enumerate() {
+                    shards[i % workers].push(f);
+                }
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = shards
+                        .into_iter()
+                        .map(|shard| {
+                            scope.spawn(|| {
+                                let mut decoded = 0usize;
+                                for frame in shard {
+                                    let raw = compress::decompress(frame).unwrap();
+                                    let dec =
+                                        basket::decode(&desc, &raw, 0, n_events).unwrap();
+                                    decoded += dec.values.len();
+                                }
+                                decoded
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+                })
+            },
+        );
+    }
+}
+
+/// End-to-end group processing through the real engine at
+/// `parallelism` 1/2/4: legacy fetch-all mode so the threaded
+/// decompress/deserialize stages carry the full branch census.
+fn engine_parallelism_benches() {
+    println!("\n== engine group processing (legacy mode, 180 branches) ==");
+    let path = bench_dir().join("micro_engine.troot");
+    if !path.exists() {
+        let cfg = gen::GenConfig {
+            n_events: 4096,
+            target_branches: 180,
+            n_hlt: 40,
+            basket_events: 512,
+            codec: Codec::Lz4,
+            seed: 11,
+        };
+        gen::generate(&cfg, &path).unwrap();
+    }
+    let query = gen::higgs_query("micro_engine.troot", "micro_engine_out.troot");
+    let out = bench_dir().join("micro_engine_out.troot");
+    for par in [1.0f64, 2.0, 4.0] {
+        let opts = EngineOpts {
+            use_pjrt: false,
+            two_phase: false,
+            parallelism: par,
+            cache_bytes: None,
+            ..Default::default()
+        };
+        harness::bench(&format!("engine run (parallelism={par})"), 1, 5, || {
+            let store: Arc<dyn ReadAt> = Arc::new(LocalFile::open(&path).unwrap());
+            let tl = Timeline::new();
+            SkimEngine::new(None).run(store, &query, &tl, &opts, &out).unwrap()
+        });
+    }
 }
 
 fn json_benches() {

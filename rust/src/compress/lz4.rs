@@ -133,9 +133,18 @@ fn emit_last_literals(out: &mut Vec<u8>, lits: &[u8]) {
 /// Decompress an LZ4 block into exactly `raw_len` bytes.
 pub fn decompress(block: &[u8], raw_len: usize) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(raw_len);
+    decompress_into(block, raw_len, &mut out)?;
+    Ok(out)
+}
+
+/// [`decompress`] into a reusable buffer (cleared first, capacity
+/// retained across calls).
+pub fn decompress_into(block: &[u8], raw_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    out.reserve(raw_len);
     if raw_len == 0 {
         if block.is_empty() {
-            return Ok(out);
+            return Ok(());
         }
         return Err(Error::Compress("lz4: nonempty block for empty output".into()));
     }
@@ -215,7 +224,7 @@ pub fn decompress(block: &[u8], raw_len: usize) -> Result<Vec<u8>> {
             out.len()
         )));
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

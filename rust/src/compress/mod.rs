@@ -131,25 +131,36 @@ pub fn frame_info(frame: &[u8]) -> Result<(Codec, usize, usize)> {
 
 /// Decompress a frame produced by [`compress`].
 pub fn decompress(frame: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    decompress_into(frame, &mut out)?;
+    Ok(out)
+}
+
+/// Decompress a frame into a caller-provided buffer (cleared first,
+/// capacity retained). The engine's selective phase-2 path reuses one
+/// scratch allocation across baskets instead of allocating per frame.
+pub fn decompress_into(frame: &[u8], out: &mut Vec<u8>) -> Result<()> {
     let (codec, raw_len, payload_len) = frame_info(frame)?;
     let crc_stored = u32::from_le_bytes(frame[11..15].try_into().unwrap());
     let payload = &frame[FRAME_HEADER_LEN..FRAME_HEADER_LEN + payload_len];
     if crc32fast::hash(payload) != crc_stored {
         return Err(Error::Compress("crc mismatch (corrupt basket)".into()));
     }
-    let out = match codec {
-        Codec::None => payload.to_vec(),
-        Codec::Lz4 => lz4::decompress(payload, raw_len)?,
-        Codec::Zlib => zlib_decompress(payload, raw_len)?,
-        Codec::XzLike => xz_like::decompress(payload, raw_len)?,
-    };
+    out.clear();
+    out.reserve(raw_len);
+    match codec {
+        Codec::None => out.extend_from_slice(payload),
+        Codec::Lz4 => lz4::decompress_into(payload, raw_len, out)?,
+        Codec::Zlib => zlib_decompress_into(payload, out)?,
+        Codec::XzLike => xz_like::decompress_into(payload, raw_len, out)?,
+    }
     if out.len() != raw_len {
         return Err(Error::Compress(format!(
             "raw length mismatch: got {} expected {raw_len}",
             out.len()
         )));
     }
-    Ok(out)
+    Ok(())
 }
 
 fn zlib_compress(data: &[u8]) -> Vec<u8> {
@@ -159,12 +170,11 @@ fn zlib_compress(data: &[u8]) -> Vec<u8> {
     enc.finish().expect("in-memory zlib finish cannot fail")
 }
 
-fn zlib_decompress(payload: &[u8], raw_len: usize) -> Result<Vec<u8>> {
-    let mut out = Vec::with_capacity(raw_len);
+fn zlib_decompress_into(payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
     let mut dec = flate2::read::ZlibDecoder::new(payload);
-    dec.read_to_end(&mut out)
+    dec.read_to_end(out)
         .map_err(|e| Error::Compress(format!("zlib: {e}")))?;
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -180,6 +190,24 @@ mod tests {
             for data in [&b""[..], b"a", b"ab", b"abc", b"aaaa", b"abcabcabcabc"] {
                 let frame = compress(codec, data);
                 assert_eq!(decompress(&frame).unwrap(), data, "codec={codec}");
+            }
+        }
+    }
+
+    #[test]
+    fn decompress_into_reuses_scratch_across_frames() {
+        // One scratch buffer drained across frames of varying sizes and
+        // codecs: every decode must match the one-shot path, and stale
+        // bytes from a previous (larger) frame must never leak.
+        let mut rng = Pcg32::new(7);
+        let mut scratch = Vec::new();
+        for codec in ALL {
+            for len in [10_000usize, 100, 0, 5_000] {
+                let data = rng.compressible_bytes(len, 0.5);
+                let frame = compress(codec, &data);
+                decompress_into(&frame, &mut scratch).unwrap();
+                assert_eq!(scratch, data, "codec={codec} len={len}");
+                assert_eq!(decompress(&frame).unwrap(), data);
             }
         }
     }

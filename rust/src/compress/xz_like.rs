@@ -375,8 +375,17 @@ pub fn compress(data: &[u8]) -> Vec<u8> {
 /// Decompress an xz-like stream into exactly `raw_len` bytes.
 pub fn decompress(stream: &[u8], raw_len: usize) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(raw_len);
+    decompress_into(stream, raw_len, &mut out)?;
+    Ok(out)
+}
+
+/// [`decompress`] into a reusable buffer (cleared first, capacity
+/// retained across calls).
+pub fn decompress_into(stream: &[u8], raw_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    out.reserve(raw_len);
     if raw_len == 0 {
-        return Ok(out);
+        return Ok(());
     }
     let mut dec = RangeDecoder::new(stream)?;
     let mut model = Model::new();
@@ -417,7 +426,7 @@ pub fn decompress(stream: &[u8], raw_len: usize) -> Result<Vec<u8>> {
             prev_byte = *out.last().expect("match produced bytes");
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

@@ -51,6 +51,11 @@ pub struct DpuConfig {
     pub core_slowdown: f64,
     /// Effective parallelism of the filtering pipeline across the ARM
     /// cores (calibrated on Fig. 5a's deserialize 16.8 s → 4.1 s ⇒ 4×).
+    /// Materialized by the engine as a real worker pool
+    /// ([`EngineOpts::workers`]): decompress/deserialize/batch-append
+    /// fan out across this many threads, with max-over-workers
+    /// latency attribution (the hardware decompression engine stays a
+    /// serial device regardless — see `engine/pipeline.rs`).
     pub parallelism: f64,
 }
 

@@ -9,28 +9,169 @@
 //!
 //! Column membership comes from the compiled [`CutProgram`]: both the
 //! fixed-function banks and any residual IR expressions register the
-//! branches they read in `obj_columns`/`scalar_columns`, so a batch
-//! assembled here always carries every column the evaluator (kernel or
-//! interpreter) will touch.
+//! branches they read in `obj_columns`/`scalar_columns`. Since the
+//! branch-interning refactor, basket *lookup* is positional: the
+//! caller passes the group's decoded baskets as a `Vec` indexed by
+//! [`BranchId`] plus the plan's column→branch maps
+//! ([`crate::query::plan::SkimPlan::obj_col_branch`]) — no string
+//! hashing per basket on the hot path.
+//!
+//! Each column's destination region in the batch is disjoint from
+//! every other column's, so [`append_par`] can fan the per-column
+//! fills across a scoped worker pool (the `Batch` arrays are split
+//! into per-column `&mut` chunks before spawning).
 
-use crate::query::plan::CutProgram;
+use crate::query::plan::{BranchId, CutProgram};
 use crate::runtime::{Batch, Capacities};
-use crate::troot::{BranchKind, ColumnValues, DecodedBasket};
+use crate::troot::{BranchKind, ColumnValues, DType, DecodedBasket};
 use crate::{Error, Result};
-use std::collections::HashMap;
+
+/// One column's fill work: the disjoint destination slices plus the
+/// source basket. Built after validation, so execution is infallible
+/// (workers can't early-return an error mid-scope).
+enum ColumnTask<'x> {
+    Obj { cols: &'x mut [f32], nobj: &'x mut [f32], basket: &'x DecodedBasket },
+    Scalar { vals: &'x mut [f32], basket: &'x DecodedBasket },
+}
+
+impl ColumnTask<'_> {
+    /// Fill events `[lo, lo + n)` at batch slot `dst`.
+    fn run(self, lo: u64, n: usize, dst: usize, m: usize) {
+        match self {
+            ColumnTask::Obj { cols, nobj, basket } => {
+                let values = basket.values_f32();
+                for ev in 0..n {
+                    let r = basket.jagged_range(lo + ev as u64);
+                    let take = (r.end - r.start).min(m);
+                    let at = (dst + ev) * m;
+                    cols[at..at + take].copy_from_slice(&values[r.start..r.start + take]);
+                    nobj[dst + ev] = take as f32;
+                }
+            }
+            ColumnTask::Scalar { vals, basket } => {
+                let base = (lo - basket.first_event) as usize;
+                // One dtype dispatch per column, not per event.
+                match &basket.values {
+                    ColumnValues::F32(v) => {
+                        vals[dst..dst + n].copy_from_slice(&v[base..base + n]);
+                    }
+                    ColumnValues::F64(v) => {
+                        for ev in 0..n {
+                            vals[dst + ev] = v[base + ev] as f32;
+                        }
+                    }
+                    ColumnValues::I32(v) => {
+                        for ev in 0..n {
+                            vals[dst + ev] = v[base + ev] as f32;
+                        }
+                    }
+                    ColumnValues::I64(v) => {
+                        for ev in 0..n {
+                            vals[dst + ev] = v[base + ev] as f32;
+                        }
+                    }
+                    ColumnValues::U8(v) => {
+                        for ev in 0..n {
+                            vals[dst + ev] = v[base + ev] as f32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Validate sources and slice the batch into per-column tasks.
+fn column_tasks<'x>(
+    program: &CutProgram,
+    decoded: &'x [DecodedBasket],
+    obj_src: &[BranchId],
+    scalar_src: &[BranchId],
+    batch: &'x mut Batch,
+) -> Result<Vec<ColumnTask<'x>>> {
+    let (b, m) = (batch.b, batch.m);
+    if obj_src.len() != program.obj_columns.len()
+        || scalar_src.len() != program.scalar_columns.len()
+    {
+        return Err(Error::Engine(
+            "column source maps do not match the cut program".into(),
+        ));
+    }
+    let fetch = |id: BranchId, name: &str| -> Result<&'x DecodedBasket> {
+        decoded.get(id.idx()).ok_or_else(|| {
+            Error::Engine(format!("missing decoded basket for '{name}'"))
+        })
+    };
+    let mut tasks = Vec::with_capacity(obj_src.len() + scalar_src.len());
+
+    // Per-obj-column slices: cols in [C,B,M] blocks, nobj in [C,B] rows.
+    let mut col_chunks = batch.cols.chunks_mut(b * m.max(1));
+    let mut nobj_chunks = batch.nobj.chunks_mut(b);
+    for (c, name) in program.obj_columns.iter().enumerate() {
+        let basket = fetch(obj_src[c], name)?;
+        if basket.kind != BranchKind::Jagged {
+            return Err(Error::Engine(format!("column '{name}' is not jagged")));
+        }
+        if basket.values.dtype() != DType::F32 {
+            return Err(Error::Engine(format!("jagged column '{name}' is not f32")));
+        }
+        let cols = col_chunks
+            .next()
+            .ok_or_else(|| Error::Engine(format!("batch has no slot for column '{name}'")))?;
+        let nobj = nobj_chunks
+            .next()
+            .ok_or_else(|| Error::Engine(format!("batch has no slot for column '{name}'")))?;
+        tasks.push(ColumnTask::Obj { cols, nobj, basket });
+    }
+
+    let mut scalar_chunks = batch.scalars.chunks_mut(b);
+    for (s, name) in program.scalar_columns.iter().enumerate() {
+        let basket = fetch(scalar_src[s], name)?;
+        if basket.kind != BranchKind::Scalar {
+            return Err(Error::Engine(format!("column '{name}' is not scalar")));
+        }
+        let vals = scalar_chunks
+            .next()
+            .ok_or_else(|| Error::Engine(format!("batch has no slot for column '{name}'")))?;
+        tasks.push(ColumnTask::Scalar { vals, basket });
+    }
+    Ok(tasks)
+}
 
 /// Append events `[lo, lo + n)` (global ids) into `batch` starting at
-/// event slot `dst`. `baskets` maps branch name → decoded basket
-/// covering that range. Used to *fill* a batch across cluster
-/// boundaries so one kernel invocation evaluates many clusters
-/// (amortizing PJRT call overhead).
+/// event slot `dst`. `decoded` holds the group's decoded baskets
+/// indexed by [`BranchId`]; `obj_src`/`scalar_src` map program columns
+/// to those ids (see [`crate::query::plan::SkimPlan`]). Used to *fill*
+/// a batch across cluster boundaries so one kernel invocation
+/// evaluates many clusters (amortizing PJRT call overhead).
 pub fn append(
     program: &CutProgram,
-    baskets: &HashMap<String, DecodedBasket>,
+    decoded: &[DecodedBasket],
+    obj_src: &[BranchId],
+    scalar_src: &[BranchId],
     lo: u64,
     n: usize,
     batch: &mut Batch,
     dst: usize,
+) -> Result<()> {
+    append_par(program, decoded, obj_src, scalar_src, lo, n, batch, dst, 1)
+}
+
+/// [`append`] with the per-column fills fanned across up to `workers`
+/// scoped threads. Column destinations are disjoint, so the split is
+/// a plain partition of `&mut` chunks; output is bit-identical to the
+/// serial path regardless of worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn append_par(
+    program: &CutProgram,
+    decoded: &[DecodedBasket],
+    obj_src: &[BranchId],
+    scalar_src: &[BranchId],
+    lo: u64,
+    n: usize,
+    batch: &mut Batch,
+    dst: usize,
+    workers: usize,
 ) -> Result<()> {
     let (b, m) = (batch.b, batch.m);
     if dst + n > b {
@@ -38,54 +179,44 @@ pub fn append(
             "append of {n} events at {dst} exceeds batch capacity {b}"
         )));
     }
-
-    for (c, name) in program.obj_columns.iter().enumerate() {
-        let basket = baskets
-            .get(name)
-            .ok_or_else(|| Error::Engine(format!("missing decoded basket for '{name}'")))?;
-        if basket.kind != BranchKind::Jagged {
-            return Err(Error::Engine(format!("column '{name}' is not jagged")));
+    let tasks = column_tasks(program, decoded, obj_src, scalar_src, batch)?;
+    // Threading pays off only when there is real per-column work;
+    // small windows run inline to avoid spawn overhead.
+    let fan_out = workers.min(tasks.len());
+    if fan_out <= 1 || n * tasks.len() < 4096 {
+        for task in tasks {
+            task.run(lo, n, dst, m);
         }
-        let values = basket.values_f32();
-        for ev in 0..n {
-            let global = lo + ev as u64;
-            let r = basket.jagged_range(global);
-            let take = (r.end - r.start).min(m);
-            let at = (c * b + dst + ev) * m;
-            batch.cols[at..at + take].copy_from_slice(&values[r.start..r.start + take]);
-            batch.nobj[c * b + dst + ev] = take as f32;
+    } else {
+        // Round-robin columns across workers; each worker owns its
+        // tasks (and their disjoint &mut slices) for the scope.
+        let mut shards: Vec<Vec<ColumnTask>> = Vec::new();
+        shards.resize_with(fan_out, Vec::new);
+        for (i, task) in tasks.into_iter().enumerate() {
+            shards[i % fan_out].push(task);
         }
-    }
-
-    for (s, name) in program.scalar_columns.iter().enumerate() {
-        let basket = baskets
-            .get(name)
-            .ok_or_else(|| Error::Engine(format!("missing decoded basket for '{name}'")))?;
-        if basket.kind != BranchKind::Scalar {
-            return Err(Error::Engine(format!("column '{name}' is not scalar")));
-        }
-        for ev in 0..n {
-            let global = lo + ev as u64;
-            let i = (global - basket.first_event) as usize;
-            let v = match &basket.values {
-                ColumnValues::F32(v) => v[i],
-                ColumnValues::F64(v) => v[i] as f32,
-                ColumnValues::I32(v) => v[i] as f32,
-                ColumnValues::I64(v) => v[i] as f32,
-                ColumnValues::U8(v) => v[i] as f32,
-            };
-            batch.scalars[s * b + dst + ev] = v;
-        }
+        std::thread::scope(|scope| {
+            for shard in shards {
+                scope.spawn(move || {
+                    for task in shard {
+                        task.run(lo, n, dst, m);
+                    }
+                });
+            }
+        });
     }
     batch.n_valid = batch.n_valid.max(dst + n);
     Ok(())
 }
 
 /// Assemble events `[lo, lo + n)` into a fresh padded batch.
+#[allow(clippy::too_many_arguments)]
 pub fn assemble(
     program: &CutProgram,
     caps: &Capacities,
-    baskets: &HashMap<String, DecodedBasket>,
+    decoded: &[DecodedBasket],
+    obj_src: &[BranchId],
+    scalar_src: &[BranchId],
     lo: u64,
     n: usize,
     b: usize,
@@ -95,7 +226,7 @@ pub fn assemble(
         return Err(Error::Engine(format!("chunk of {n} events exceeds batch capacity {b}")));
     }
     let mut batch = Batch::zeroed(caps, b, m);
-    append(program, baskets, lo, n, &mut batch, 0)?;
+    append(program, decoded, obj_src, scalar_src, lo, n, &mut batch, 0)?;
     batch.n_valid = n;
     Ok(batch)
 }
@@ -133,14 +264,12 @@ mod tests {
     fn assembles_jagged_with_padding_and_truncation() {
         let mut program = CutProgram::default();
         program.obj_columns.push("Electron_pt".into());
-        let mut baskets = HashMap::new();
-        baskets.insert(
-            "Electron_pt".to_string(),
-            decode_jagged(&[vec![1.0, 2.0], vec![], vec![3.0, 4.0, 5.0, 6.0, 7.0]], 100),
-        );
+        let decoded =
+            vec![decode_jagged(&[vec![1.0, 2.0], vec![], vec![3.0, 4.0, 5.0, 6.0, 7.0]], 100)];
         let b = 8;
         let m = 4; // truncates the 5-object event
-        let batch = assemble(&program, &caps(), &baskets, 100, 3, b, m).unwrap();
+        let batch =
+            assemble(&program, &caps(), &decoded, &[BranchId(0)], &[], 100, 3, b, m).unwrap();
         assert_eq!(batch.n_valid, 3);
         assert_eq!(&batch.cols[0..2], &[1.0, 2.0]);
         assert_eq!(batch.nobj[0], 2.0);
@@ -155,9 +284,9 @@ mod tests {
     fn assembles_scalars_with_dtype_conversion() {
         let mut program = CutProgram::default();
         program.scalar_columns.push("HLT_IsoMu24".into());
-        let mut baskets = HashMap::new();
-        baskets.insert("HLT_IsoMu24".to_string(), decode_scalar_u8(&[1, 0, 1], 50));
-        let batch = assemble(&program, &caps(), &baskets, 50, 3, 4, 2).unwrap();
+        let decoded = vec![decode_scalar_u8(&[1, 0, 1], 50)];
+        let batch =
+            assemble(&program, &caps(), &decoded, &[], &[BranchId(0)], 50, 3, 4, 2).unwrap();
         assert_eq!(&batch.scalars[0..3], &[1.0, 0.0, 1.0]);
     }
 
@@ -166,12 +295,10 @@ mod tests {
         // Assemble a chunk that starts mid-basket (lo > first_event).
         let mut program = CutProgram::default();
         program.obj_columns.push("J".into());
-        let mut baskets = HashMap::new();
-        baskets.insert(
-            "J".to_string(),
-            decode_jagged(&[vec![1.0], vec![2.0, 2.5], vec![3.0], vec![4.0]], 0),
-        );
-        let batch = assemble(&program, &caps(), &baskets, 2, 2, 4, 2).unwrap();
+        let decoded =
+            vec![decode_jagged(&[vec![1.0], vec![2.0, 2.5], vec![3.0], vec![4.0]], 0)];
+        let batch =
+            assemble(&program, &caps(), &decoded, &[BranchId(0)], &[], 2, 2, 4, 2).unwrap();
         assert_eq!(batch.cols[0], 3.0);
         assert_eq!(batch.cols[2], 4.0);
     }
@@ -180,20 +307,55 @@ mod tests {
     fn errors_on_missing_or_mismatched() {
         let mut program = CutProgram::default();
         program.obj_columns.push("nope".into());
-        let baskets = HashMap::new();
-        assert!(assemble(&program, &caps(), &baskets, 0, 1, 4, 2).is_err());
+        // BranchId points past the decoded set.
+        assert!(assemble(&program, &caps(), &[], &[BranchId(0)], &[], 0, 1, 4, 2).is_err());
 
         let mut program2 = CutProgram::default();
         program2.obj_columns.push("s".into());
-        let mut baskets2 = HashMap::new();
-        baskets2.insert("s".to_string(), decode_scalar_u8(&[1], 0));
-        assert!(assemble(&program2, &caps(), &baskets2, 0, 1, 4, 2).is_err());
+        let decoded2 = vec![decode_scalar_u8(&[1], 0)];
+        assert!(
+            assemble(&program2, &caps(), &decoded2, &[BranchId(0)], &[], 0, 1, 4, 2).is_err()
+        );
     }
 
     #[test]
     fn chunk_larger_than_batch_rejected() {
         let program = CutProgram::default();
-        let baskets = HashMap::new();
-        assert!(assemble(&program, &caps(), &baskets, 0, 10, 4, 2).is_err());
+        assert!(assemble(&program, &caps(), &[], &[], &[], 0, 10, 4, 2).is_err());
+    }
+
+    #[test]
+    fn parallel_append_matches_serial() {
+        // Many columns, enough events to clear the inline threshold:
+        // the fanned fill must be bit-identical to the serial one.
+        let mut program = CutProgram::default();
+        let n_ev = 600usize;
+        let per_event: Vec<Vec<f32>> = (0..n_ev)
+            .map(|i| (0..(i % 5)).map(|k| (i * 10 + k) as f32).collect())
+            .collect();
+        let mut decoded = Vec::new();
+        let mut obj_src = Vec::new();
+        for c in 0..6 {
+            program.obj_columns.push(format!("J{c}"));
+            decoded.push(decode_jagged(&per_event, 0));
+            obj_src.push(BranchId(c as u32));
+        }
+        let mut scalar_src = Vec::new();
+        for s in 0..4 {
+            program.scalar_columns.push(format!("S{s}"));
+            let vals: Vec<u8> = (0..n_ev).map(|i| ((i + s) % 7) as u8).collect();
+            decoded.push(decode_scalar_u8(&vals, 0));
+            scalar_src.push(BranchId((6 + s) as u32));
+        }
+        let (b, m) = (1024, 3);
+        let mut serial = Batch::zeroed(&caps(), b, m);
+        append(&program, &decoded, &obj_src, &scalar_src, 0, n_ev, &mut serial, 0).unwrap();
+        let mut fanned = Batch::zeroed(&caps(), b, m);
+        append_par(&program, &decoded, &obj_src, &scalar_src, 0, n_ev, &mut fanned, 0, 4)
+            .unwrap();
+        assert_eq!(serial.cols, fanned.cols);
+        assert_eq!(serial.nobj, fanned.nobj);
+        assert_eq!(serial.scalars, fanned.scalars);
+        assert_eq!(serial.n_valid, fanned.n_valid);
     }
 }

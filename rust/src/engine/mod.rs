@@ -9,11 +9,16 @@
 //!   branches, decompressing (software or DPU hardware engine),
 //!   deserializing into padded batches, and evaluating the cut program
 //!   — vectorized through the AOT PJRT kernel ([`crate::runtime`]) or
-//!   with the per-event [`interp`]reter. Consecutive clusters are
-//!   packed into one batch so a single kernel invocation evaluates
-//!   many clusters (PJRT call overhead is amortized). Values of
-//!   criteria branches that are also output branches are gathered for
-//!   passing events immediately (they are already in memory).
+//!   with the batch-vectorized columnar [`interp`]reter (the per-event
+//!   scalar evaluator is retained as its property-tested oracle).
+//!   Decompress/deserialize/batch-append fan out across
+//!   [`EngineOpts::workers`] real threads (branch names are interned
+//!   to dense ids at plan time, so the hot path is all `Vec`
+//!   indexing). Consecutive clusters are packed into one batch so a
+//!   single kernel invocation evaluates many clusters (PJRT call
+//!   overhead is amortized). Values of criteria branches that are also
+//!   output branches are gathered for passing events immediately (they
+//!   are already in memory).
 //! * **Phase 2** fetches *output-only* branches — only for clusters
 //!   containing passing events — and **selectively deserializes just
 //!   the passing events** (the per-event `GetEntry` path). This is the
@@ -84,11 +89,17 @@ pub struct EngineOpts {
     /// compute node; `None` disables (pure-substrate timings). See
     /// DESIGN.md §Execution-time model.
     pub deser_model: Option<DeserModel>,
-    /// Effective compute parallelism for the modeled deserialization
-    /// cost: WLCG client/server jobs are single-threaded (1.0); the
-    /// DPU filters across its 16 ARM cores (paper Fig. 5a: ClientOpt
-    /// deserialize 16.8 s vs DPU 4.1 s on identical output ⇒ effective
-    /// ≈ 4× after Amdahl losses).
+    /// Effective compute parallelism of the filtering pipeline: WLCG
+    /// client/server jobs are single-threaded (1.0); the DPU filters
+    /// across its 16 ARM cores (paper Fig. 5a: ClientOpt deserialize
+    /// 16.8 s vs DPU 4.1 s on identical output ⇒ effective ≈ 4× after
+    /// Amdahl losses). Since the threaded-engine refactor this is no
+    /// longer only a cost-model divisor: the engine spawns
+    /// [`EngineOpts::workers`] real worker threads for per-group
+    /// decompress / deserialize / batch-append, and the modeled
+    /// [`DeserModel`] cost is charged per worker and folded
+    /// max-over-workers (see `engine/pipeline.rs`). `parallelism = 1`
+    /// reproduces the legacy single-threaded timelines exactly.
     pub parallelism: f64,
     /// Restrict the skim to events in `[start, end)` — the sharding
     /// hook used by multi-DPU fan-out deployments
@@ -96,6 +107,21 @@ pub struct EngineOpts {
     /// Shard boundaries are honored exactly; fetches stay
     /// basket-granular at the edges.
     pub event_range: Option<(u64, u64)>,
+}
+
+impl EngineOpts {
+    /// Real worker threads the engine fans a group's (cluster × branch)
+    /// basket work across: the modeled `parallelism`, materialized
+    /// (rounded, at least one; capped at 64 so a miscalibrated model
+    /// can't fork-bomb the host).
+    pub fn workers(&self) -> usize {
+        let w = self.parallelism.round();
+        if w.is_finite() && w > 1.0 {
+            (w as usize).min(64)
+        } else {
+            1
+        }
+    }
 }
 
 impl Default for EngineOpts {

@@ -32,6 +32,33 @@
 //! registered `after: ["eval"]` that thins `group.passes` implements
 //! sampling; one registered `after: ["decompress"]` that sums
 //! `group.raw` byte lengths implements per-branch byte accounting.
+//!
+//! # Hot-path execution model (since the parallel-engine refactor)
+//!
+//! * **Branch interning** — branch names are resolved to dense
+//!   [`crate::query::plan::BranchId`]s at plan time; every per-cluster
+//!   store in [`GroupState`] is a plain `Vec` indexed by phase-1 slot
+//!   (see [`StageCtx::phase1_branches`]), so no string is hashed or
+//!   cloned per basket.
+//! * **Real threading** — `decompress` and `deserialize` fan the
+//!   group's (cluster × branch) baskets across
+//!   [`EngineOpts::workers`] scoped threads, and batch assembly fans
+//!   per-column fills the same way. Each worker wall-clocks its own
+//!   [`Timeline`]; afterwards the *critical* (slowest) worker is
+//!   folded into the job timeline via [`Timeline::merge_from`] — the
+//!   same max-over-workers attribution the DPU shard fan-out uses, so
+//!   parallel hardware shows up as latency = max, not sum. The one
+//!   exception is the DPU's hardware decompression engine
+//!   ([`DecompMode::HwEngine`]): a single serial device drains all
+//!   workers' frames back-to-back, so *every* worker's engine time is
+//!   folded (sum), keeping the Figure 5a calibration independent of
+//!   thread count. `parallelism = 1` takes the legacy in-line path and
+//!   reproduces its timelines exactly.
+//! * **Columnar evaluation** — the interpreter fallback runs
+//!   [`super::interp::eval_columnar`], which sweeps whole batch
+//!   columns per stage and stops once the cumulative funnel is dead;
+//!   masks and funnels are bit-identical to the retained scalar
+//!   oracle ([`super::interp::eval`]).
 
 use super::{DecompMode, EngineOpts, SkimResult};
 use crate::metrics::{Node, Stage, Timeline};
@@ -236,25 +263,32 @@ impl Pipeline {
 }
 
 /// Per-group scratch state flowing through the [`Hook::Group`] stages.
+///
+/// All per-cluster basket stores are `Vec`s indexed by **phase-1
+/// slot** (the fetch order, [`StageCtx::phase1_branches`]); criteria
+/// branches occupy the leading slots, positioned by their plan-time
+/// [`crate::query::plan::BranchId`]s. No name lookup happens per
+/// basket on the hot path — resolve names through
+/// [`StageCtx::phase1_branches`] when observing.
 pub struct GroupState {
     /// `(cluster index, first event id, event count)` per cluster in
     /// this group. Event ids are global; counts respect any
     /// [`EngineOpts::event_range`] restriction at range boundaries.
     pub clusters: Vec<(usize, u64, usize)>,
-    /// Per cluster: branch name → compressed basket frame (after the
+    /// Per cluster: phase-1 slot → compressed basket frame (after the
     /// built-in `fetch` stage). **Drained by `decompress`** — custom
     /// stages cannot order between the built-ins, so nothing observes
     /// frames; per-branch compressed sizes survive in each entry's
     /// [`BasketInfo`].
-    pub frames: Vec<HashMap<String, (Vec<u8>, BasketInfo)>>,
-    /// Per cluster: branch name → raw decompressed bytes (after
+    pub frames: Vec<Vec<(Vec<u8>, BasketInfo)>>,
+    /// Per cluster: phase-1 slot → raw decompressed bytes (after
     /// `decompress`). Retained until the group commits so custom
     /// stages can audit them — the memory cost of the observability
     /// API (≈ one group's decompressed working set).
-    pub raw: Vec<HashMap<String, (Vec<u8>, BasketInfo)>>,
-    /// Per cluster: branch name → typed decoded basket (after
+    pub raw: Vec<Vec<(Vec<u8>, BasketInfo)>>,
+    /// Per cluster: phase-1 slot → typed decoded basket (after
     /// `deserialize`).
-    pub decoded: Vec<HashMap<String, DecodedBasket>>,
+    pub decoded: Vec<Vec<DecodedBasket>>,
     /// Passing event ids per cluster in this group (after `eval`).
     /// Custom stages may thin these lists (sampling, extra vetoes);
     /// whatever remains when the group commits is gathered into the
@@ -325,37 +359,67 @@ impl OutputAcc {
     }
 }
 
-/// Decompress one basket frame, wall-clocking the work and attributing
-/// it per [`DecompMode`] (compute node's CPU, or the DPU's hardware
-/// engine at its calibrated speedup). The single source of truth for
-/// decompression cost accounting — both the group `decompress` stage
-/// and the phase-2 selective path go through here.
-fn decompress_attributed(timeline: &Timeline, opts: &EngineOpts, frame: &[u8]) -> Result<Vec<u8>> {
-    let t0 = Instant::now();
-    let raw = crate::compress::decompress(frame)?;
-    let dt = t0.elapsed().as_secs_f64();
+/// Attribute `dt` seconds of decompression per [`DecompMode`]: the
+/// compute node's CPU, or the DPU's hardware engine at its calibrated
+/// speedup. The single source of truth for decompression cost
+/// accounting — the serial path, the worker pool and the phase-2
+/// selective path all go through here.
+fn attribute_decomp_time(timeline: &Timeline, opts: &EngineOpts, dt: f64) {
     match opts.decomp {
         DecompMode::Software => timeline.add_real(Stage::Decompress, opts.compute_node, dt),
         DecompMode::HwEngine { speedup } => {
             timeline.add_real(Stage::Decompress, Node::DpuEngine, dt / speedup.max(1e-9))
         }
     }
+}
+
+/// Decompress one basket frame, wall-clocking the work and attributing
+/// it via [`attribute_decomp_time`] (plus the decompressed-byte
+/// count).
+fn decompress_attributed(timeline: &Timeline, opts: &EngineOpts, frame: &[u8]) -> Result<Vec<u8>> {
+    let t0 = Instant::now();
+    let raw = crate::compress::decompress(frame)?;
+    attribute_decomp_time(timeline, opts, t0.elapsed().as_secs_f64());
     timeline.add_bytes(Stage::Decompress, raw.len() as u64);
     Ok(raw)
 }
 
-/// Fetch + decompress the basket of `branch` covering event `lo`,
-/// charging transport virtually (via the store) and decompression via
-/// [`decompress_attributed`]. Free function over disjoint ctx fields
-/// so callers can hold other borrows.
-fn fetch_decompress(
+/// Fold per-worker timelines into the job timeline.
+///
+/// CPU workers run in parallel, so only the *critical* (slowest)
+/// worker's accounting is merged — latency = max over workers, the
+/// same attribution precedent as the DPU shard fan-out
+/// ([`crate::dpu::DpuCluster`]). A **serial device** (the DPU's
+/// hardware decompression engine) drains every worker's frames
+/// back-to-back, so all workers fold (sum) — keeping the engine's
+/// Figure 5a calibration independent of thread count.
+fn fold_worker_timelines(job: &Timeline, workers: &[Timeline], serial_device: bool) {
+    if serial_device {
+        for w in workers {
+            job.merge_from(w);
+        }
+    } else if let Some(critical) = workers
+        .iter()
+        .max_by(|a, b| a.elapsed().partial_cmp(&b.elapsed()).expect("finite"))
+    {
+        job.merge_from(critical);
+    }
+}
+
+/// Fetch + decompress the basket of `branch` covering event `lo` into
+/// the reusable `scratch` buffer, charging transport virtually (via
+/// the store) and decompression via [`attribute_decomp_time`]. Free
+/// function over disjoint ctx fields so callers can hold other
+/// borrows.
+fn fetch_decompress_into(
     reader: &TRootReader<Arc<dyn ReadAt>>,
     counters: &mut FetchCounters,
     timeline: &Timeline,
     opts: &EngineOpts,
     branch: &BranchMeta,
     lo: u64,
-) -> Result<(Vec<u8>, BasketInfo)> {
+    scratch: &mut Vec<u8>,
+) -> Result<BasketInfo> {
     let idx = branch.basket_for_event(lo).ok_or_else(|| {
         Error::Engine(format!(
             "branch {} has no basket for event {lo}",
@@ -366,8 +430,11 @@ fn fetch_decompress(
     let frame = reader.fetch_basket(branch, idx)?;
     counters.baskets += 1;
     counters.bytes += info.comp_len as u64;
-    let raw = decompress_attributed(timeline, opts, &frame)?;
-    Ok((raw, info))
+    let t0 = Instant::now();
+    crate::compress::decompress_into(&frame, scratch)?;
+    attribute_decomp_time(timeline, opts, t0.elapsed().as_secs_f64());
+    timeline.add_bytes(Stage::Decompress, scratch.len() as u64);
+    Ok(info)
 }
 
 /// The in-flight state of one skim job, visible to every stage.
@@ -406,14 +473,23 @@ pub struct StageCtx<'a> {
     /// `(cluster, lo, n)` windows this job iterates, range-restricted.
     cluster_window: Vec<(usize, u64, usize)>,
     next_window: usize,
-    /// Branches read in phase 1 (criteria; plus all output branches in
-    /// legacy single-phase mode).
+    /// Branches read in phase 1 (criteria — whose positions are the
+    /// plan's dense `BranchId`s — plus all output branches in legacy
+    /// single-phase mode). Position in this list is the slot every
+    /// [`GroupState`] per-cluster `Vec` is indexed by.
     phase1: Vec<BranchMeta>,
     /// Output-only branches (phase 2).
     output_only: Vec<BranchMeta>,
-    /// Branch names gathered from decoded phase-1 baskets at commit.
-    gather_now: Vec<String>,
-    accs: HashMap<String, OutputAcc>,
+    /// `(phase-1 slot, accumulator index)` pairs gathered from decoded
+    /// baskets at group commit — interned once at job start.
+    gather_now: Vec<(usize, usize)>,
+    /// Output accumulators, in `plan.output_branches` order.
+    accs: Vec<OutputAcc>,
+    /// Accumulator index of each `output_only` branch (phase 2).
+    output_only_accs: Vec<usize>,
+    /// Reusable batch scratch for `eval` (one allocation per job, not
+    /// per flush window).
+    scratch_batch: Option<Batch>,
     /// Passing events per absolute cluster id (feeds phase 2).
     cluster_pass: Vec<Vec<u64>>,
     counters: FetchCounters,
@@ -519,22 +595,12 @@ impl<'a> StageCtx<'a> {
 
         // Phase-1 fetch set: criteria (+ all output branches in legacy
         // mode, fully decoded for every cluster — the baseline's cost).
+        // Criteria occupy the leading slots, so their positions equal
+        // the plan's dense `BranchId`s.
         let mut phase1: Vec<BranchMeta> = criteria.clone();
         if !opts.two_phase {
             phase1.extend(output_only.iter().cloned());
         }
-        // Branch names gathered right after evaluation from the decoded
-        // baskets: criteria∩output in two-phase mode (already in
-        // memory), all output branches in legacy mode.
-        let gather_now: Vec<String> = if opts.two_phase {
-            criteria
-                .iter()
-                .map(|b| b.desc.name.clone())
-                .filter(|n| plan.output_branches.contains(n))
-                .collect()
-        } else {
-            plan.output_branches.clone()
-        };
 
         if let Some(c) = &cache {
             let mut ranges = Vec::new();
@@ -547,15 +613,50 @@ impl<'a> StageCtx<'a> {
             c.train(ranges);
         }
 
-        // Output accumulators.
-        let accs: HashMap<String, OutputAcc> = plan
+        // Output accumulators, in output schema order.
+        let accs: Vec<OutputAcc> = plan
             .output_branches
             .iter()
             .map(|name| {
                 let bm = branch_meta(name)?;
-                Ok((name.clone(), OutputAcc::new(bm.desc.clone())))
+                Ok(OutputAcc::new(bm.desc.clone()))
             })
             .collect::<Result<_>>()?;
+
+        // Intern the gather and phase-2 lookups once: names resolve to
+        // (phase-1 slot, accumulator index) pairs here, never on the
+        // per-group hot path. Gathered right after evaluation from the
+        // decoded baskets: criteria∩output in two-phase mode (already
+        // in memory), all output branches in legacy mode.
+        let phase1_slot: HashMap<&str, usize> = phase1
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (b.desc.name.as_str(), i))
+            .collect();
+        let acc_index: HashMap<&str, usize> = plan
+            .output_branches
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.as_str(), i))
+            .collect();
+        let gather_now: Vec<(usize, usize)> = if opts.two_phase {
+            criteria
+                .iter()
+                .filter_map(|b| {
+                    let name = b.desc.name.as_str();
+                    acc_index.get(name).map(|&ai| (phase1_slot[name], ai))
+                })
+                .collect()
+        } else {
+            plan.output_branches
+                .iter()
+                .map(|n| (phase1_slot[n.as_str()], acc_index[n.as_str()]))
+                .collect()
+        };
+        let output_only_accs: Vec<usize> = output_only
+            .iter()
+            .map(|b| acc_index[b.desc.name.as_str()])
+            .collect();
 
         Ok(StageCtx {
             opts,
@@ -583,6 +684,8 @@ impl<'a> StageCtx<'a> {
             output_only,
             gather_now,
             accs,
+            output_only_accs,
+            scratch_batch: None,
             cluster_pass: vec![Vec::new(); n_clusters_total],
             counters: FetchCounters::default(),
             output_path,
@@ -603,6 +706,17 @@ impl<'a> StageCtx<'a> {
     /// Did the vectorized PJRT path evaluate this job's cuts?
     pub fn vectorized(&self) -> bool {
         self.vectorized
+    }
+
+    /// The phase-1 branch set, in fetch order. Per-cluster rows of
+    /// [`GroupState::frames`]/[`GroupState::raw`]/[`GroupState::decoded`]
+    /// are indexed by position in this slice (criteria branches lead —
+    /// their positions are the plan's dense
+    /// [`crate::query::plan::BranchId`]s — followed, in legacy
+    /// single-phase mode, by the output-only branches). Custom stages
+    /// use this to resolve slot → branch name.
+    pub fn phase1_branches(&self) -> &[BranchMeta] {
+        &self.phase1
     }
 
     /// Start the next cluster group: pack consecutive clusters until
@@ -659,11 +773,16 @@ impl<'a> StageCtx<'a> {
             }
             self.pass_total += passes.len() as u64;
             let t0 = Instant::now();
-            for name in &self.gather_now {
-                let dec = group.decoded[gi].get(name).ok_or_else(|| {
-                    Error::Engine(format!("gather: missing decoded basket '{name}'"))
-                })?;
-                let acc = self.accs.get_mut(name).expect("acc exists");
+            for &(slot, acc_idx) in &self.gather_now {
+                let dec = group.decoded.get(gi).and_then(|row| row.get(slot)).ok_or_else(
+                    || {
+                        Error::Engine(format!(
+                            "gather: missing decoded basket '{}'",
+                            self.phase1[slot].desc.name
+                        ))
+                    },
+                )?;
+                let acc = &mut self.accs[acc_idx];
                 for &ev in passes {
                     acc.push_event(dec, ev);
                 }
@@ -678,7 +797,7 @@ impl<'a> StageCtx<'a> {
 
     fn fetch_group(&mut self, group: &mut GroupState) -> Result<()> {
         for &(_, lo, _) in &group.clusters {
-            let mut map = HashMap::new();
+            let mut row = Vec::with_capacity(self.phase1.len());
             for b in &self.phase1 {
                 let idx = b.basket_for_event(lo).ok_or_else(|| {
                     Error::Engine(format!(
@@ -693,65 +812,233 @@ impl<'a> StageCtx<'a> {
                 self.counters.baskets += 1;
                 self.counters.bytes += info.comp_len as u64;
                 group.fetched_bytes += info.comp_len as u64;
-                map.insert(b.desc.name.clone(), (frame, info));
+                row.push((frame, info));
             }
-            group.frames.push(map);
+            group.frames.push(row);
         }
         Ok(())
     }
 
     fn decompress_group(&mut self, group: &mut GroupState) -> Result<()> {
-        let timeline = self.timeline;
         // Frames are *consumed* here: custom stages always order after
         // the built-in chain (ties break by registration order), so
         // nothing can observe `frames` between `fetch` and
         // `decompress` — retaining compressed alongside raw bytes
         // would be pure memory waste at paper scale (1749 branches).
-        for frames in std::mem::take(&mut group.frames) {
-            let mut map = HashMap::new();
-            for (name, (frame, info)) in frames {
-                let raw = decompress_attributed(timeline, self.opts, &frame)?;
-                map.insert(name, (raw, info));
+        let frames = std::mem::take(&mut group.frames);
+        let n_baskets: usize = frames.iter().map(|f| f.len()).sum();
+        // Never spawn more workers than there are baskets to chew.
+        let workers = self.opts.workers().min(n_baskets);
+        if workers <= 1 || n_baskets < 2 {
+            // Legacy in-line path: `parallelism = 1` reproduces the
+            // single-threaded timelines exactly.
+            for cluster in frames {
+                let mut row = Vec::with_capacity(cluster.len());
+                for (frame, info) in cluster {
+                    let raw = decompress_attributed(self.timeline, self.opts, &frame)?;
+                    row.push((raw, info));
+                }
+                group.raw.push(row);
             }
-            group.raw.push(map);
+            return Ok(());
         }
+
+        // Fan the group's (cluster × branch) frames round-robin across
+        // scoped workers. Each worker owns its frames and wall-clocks
+        // its own timeline; decompressed bytes are tallied on the job
+        // timeline in full (they are a volume, not a latency).
+        let shape: Vec<usize> = frames.iter().map(|f| f.len()).collect();
+        let mut shards: Vec<Vec<(usize, usize, Vec<u8>, BasketInfo)>> = Vec::new();
+        shards.resize_with(workers, Vec::new);
+        let mut i = 0usize;
+        for (ci, cluster) in frames.into_iter().enumerate() {
+            for (slot, (frame, info)) in cluster.into_iter().enumerate() {
+                shards[i % workers].push((ci, slot, frame, info));
+                i += 1;
+            }
+        }
+        let opts = self.opts;
+        type DecompOut = (Timeline, u64, Vec<(usize, usize, Vec<u8>, BasketInfo)>);
+        let results: Vec<Result<DecompOut>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .map(|shard| {
+                    scope.spawn(move || -> Result<DecompOut> {
+                        let tl = Timeline::new();
+                        let mut bytes = 0u64;
+                        let mut out = Vec::with_capacity(shard.len());
+                        for (ci, slot, frame, info) in shard {
+                            let t0 = Instant::now();
+                            let raw = crate::compress::decompress(&frame)?;
+                            attribute_decomp_time(&tl, opts, t0.elapsed().as_secs_f64());
+                            bytes += raw.len() as u64;
+                            out.push((ci, slot, raw, info));
+                        }
+                        Ok((tl, bytes, out))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("decompress worker panicked"))
+                .collect()
+        });
+
+        let mut rows: Vec<Vec<Option<(Vec<u8>, BasketInfo)>>> =
+            shape.iter().map(|&len| vec![None; len]).collect();
+        let mut worker_tls = Vec::with_capacity(workers);
+        let mut total_bytes = 0u64;
+        for r in results {
+            let (tl, bytes, items) = r?;
+            worker_tls.push(tl);
+            total_bytes += bytes;
+            for (ci, slot, raw, info) in items {
+                rows[ci][slot] = Some((raw, info));
+            }
+        }
+        fold_worker_timelines(
+            self.timeline,
+            &worker_tls,
+            matches!(self.opts.decomp, DecompMode::HwEngine { .. }),
+        );
+        self.timeline.add_bytes(Stage::Decompress, total_bytes);
+        group.raw = rows
+            .into_iter()
+            .map(|row| {
+                row.into_iter()
+                    .map(|o| o.expect("every basket decompressed"))
+                    .collect()
+            })
+            .collect();
         Ok(())
     }
 
     fn deserialize_group(&mut self, group: &mut GroupState) -> Result<()> {
         let timeline = self.timeline;
         let node = self.opts.compute_node;
-        for raw_maps in &group.raw {
-            let mut map = HashMap::new();
-            for bm in &self.phase1 {
-                let desc = &bm.desc;
-                let (raw, info) = raw_maps.get(&desc.name).ok_or_else(|| {
-                    Error::Engine(format!(
-                        "deserialize: missing raw basket '{}'",
-                        desc.name
-                    ))
-                })?;
-                let t0 = Instant::now();
-                let dec = basket_codec::decode(
-                    desc,
-                    raw,
-                    info.first_event,
-                    info.n_events as usize,
-                )?;
-                timeline.add_real(Stage::Deserialize, node, t0.elapsed().as_secs_f64());
-                // Modeled ROOT streamer cost: every event of this
-                // basket is materialized (one GetEntry per event).
-                if let Some(model) = self.opts.deser_model {
-                    timeline.add_real(
-                        Stage::Deserialize,
-                        node,
-                        model.cost(info.n_events as u64, raw.len() as u64, self.opts.parallelism),
-                    );
-                }
-                map.insert(desc.name.clone(), dec);
+        for row in &group.raw {
+            if row.len() != self.phase1.len() {
+                return Err(Error::Engine(format!(
+                    "deserialize: expected {} baskets per cluster, found {}",
+                    self.phase1.len(),
+                    row.len()
+                )));
             }
-            group.decoded.push(map);
         }
+        let n_baskets: usize = group.raw.iter().map(|r| r.len()).sum();
+        // Never spawn more workers than there are baskets to chew.
+        let workers = self.opts.workers().min(n_baskets);
+        if workers <= 1 || n_baskets < 2 {
+            // Legacy in-line path: `parallelism = 1` reproduces the
+            // single-threaded timelines exactly (including the modeled
+            // cost's `parallelism` divisor).
+            for row in &group.raw {
+                let mut decs = Vec::with_capacity(row.len());
+                for (bm, (raw, info)) in self.phase1.iter().zip(row) {
+                    let t0 = Instant::now();
+                    let dec = basket_codec::decode(
+                        &bm.desc,
+                        raw,
+                        info.first_event,
+                        info.n_events as usize,
+                    )?;
+                    timeline.add_real(Stage::Deserialize, node, t0.elapsed().as_secs_f64());
+                    // Modeled ROOT streamer cost: every event of this
+                    // basket is materialized (one GetEntry per event).
+                    if let Some(model) = self.opts.deser_model {
+                        timeline.add_real(
+                            Stage::Deserialize,
+                            node,
+                            model.cost(
+                                info.n_events as u64,
+                                raw.len() as u64,
+                                self.opts.parallelism,
+                            ),
+                        );
+                    }
+                    decs.push(dec);
+                }
+                group.decoded.push(decs);
+            }
+            return Ok(());
+        }
+
+        // Fan (cluster × branch) baskets across scoped workers reading
+        // the retained raw bytes in place. The modeled GetEntry cost is
+        // charged per worker at `workers / parallelism` of the base
+        // rate: folding the critical worker then yields the same
+        // modeled total as the legacy `/ parallelism` divisor (exactly,
+        // up to round-robin imbalance) while attributing it to a real
+        // thread's critical path.
+        let scale = workers as f64 / self.opts.parallelism.max(1.0);
+        let items: Vec<(usize, usize)> = group
+            .raw
+            .iter()
+            .enumerate()
+            .flat_map(|(ci, row)| (0..row.len()).map(move |slot| (ci, slot)))
+            .collect();
+        let mut shards: Vec<Vec<(usize, usize)>> = vec![Vec::new(); workers];
+        for (i, item) in items.into_iter().enumerate() {
+            shards[i % workers].push(item);
+        }
+        let raw_rows = &group.raw;
+        let phase1 = &self.phase1;
+        let model = self.opts.deser_model;
+        type DeserOut = (Timeline, Vec<(usize, usize, DecodedBasket)>);
+        let results: Vec<Result<DeserOut>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .map(|shard| {
+                    scope.spawn(move || -> Result<DeserOut> {
+                        let tl = Timeline::new();
+                        let mut out = Vec::with_capacity(shard.len());
+                        for (ci, slot) in shard {
+                            let (raw, info) = &raw_rows[ci][slot];
+                            let t0 = Instant::now();
+                            let dec = basket_codec::decode(
+                                &phase1[slot].desc,
+                                raw,
+                                info.first_event,
+                                info.n_events as usize,
+                            )?;
+                            tl.add_real(Stage::Deserialize, node, t0.elapsed().as_secs_f64());
+                            if let Some(model) = model {
+                                tl.add_real(
+                                    Stage::Deserialize,
+                                    node,
+                                    model.cost(info.n_events as u64, raw.len() as u64, 1.0)
+                                        * scale,
+                                );
+                            }
+                            out.push((ci, slot, dec));
+                        }
+                        Ok((tl, out))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("deserialize worker panicked"))
+                .collect()
+        });
+
+        let mut rows: Vec<Vec<Option<DecodedBasket>>> =
+            group.raw.iter().map(|r| vec![None; r.len()]).collect();
+        let mut worker_tls = Vec::with_capacity(workers);
+        for r in results {
+            let (tl, items) = r?;
+            worker_tls.push(tl);
+            for (ci, slot, dec) in items {
+                rows[ci][slot] = Some(dec);
+            }
+        }
+        fold_worker_timelines(timeline, &worker_tls, false);
+        group.decoded = rows
+            .into_iter()
+            .map(|row| {
+                row.into_iter().map(|o| o.expect("every basket decoded")).collect()
+            })
+            .collect();
         Ok(())
     }
 
@@ -792,8 +1079,16 @@ impl<'a> StageCtx<'a> {
             v
         };
 
-        // Fill + evaluate in batch_b windows.
-        let mut batch = Batch::zeroed(&self.caps, self.batch_b, self.m);
+        // Fill + evaluate in batch_b windows, reusing one batch
+        // allocation for the whole job.
+        let mut batch = match self.scratch_batch.take() {
+            Some(mut b) => {
+                b.reset();
+                b
+            }
+            None => Batch::zeroed(&self.caps, self.batch_b, self.m),
+        };
+        let workers = self.opts.workers();
         let mut window: Vec<(usize, u64, usize, usize)> = Vec::new();
         for (gi, clo, cn, dst) in chunks {
             if dst == 0 && !window.is_empty() {
@@ -802,11 +1097,26 @@ impl<'a> StageCtx<'a> {
             let timeline = self.timeline;
             let node = self.opts.compute_node;
             let t0 = Instant::now();
-            super::batch::append(&self.plan.program, &group.decoded[gi], clo, cn, &mut batch, dst)?;
+            // Interned column fill: baskets indexed by BranchId, fanned
+            // per column across the worker pool. Wall-clocked on the
+            // driving thread, so the parallel section is charged at its
+            // critical path.
+            super::batch::append_par(
+                &self.plan.program,
+                &group.decoded[gi],
+                &self.plan.obj_col_branch,
+                &self.plan.scalar_col_branch,
+                clo,
+                cn,
+                &mut batch,
+                dst,
+                workers,
+            )?;
             timeline.add_real(Stage::Deserialize, node, t0.elapsed().as_secs_f64());
             window.push((gi, clo, cn, dst));
         }
         self.flush_window(&mut batch, &mut window, group)?;
+        self.scratch_batch = Some(batch);
         Ok(())
     }
 
@@ -833,7 +1143,7 @@ impl<'a> StageCtx<'a> {
             }
         }
         window.clear();
-        *batch = Batch::zeroed(&self.caps, self.batch_b, self.m);
+        batch.reset();
         Ok(())
     }
 
@@ -849,7 +1159,7 @@ impl<'a> StageCtx<'a> {
         }
         let timeline = self.timeline;
         Ok(timeline.stage(Stage::Filter, self.opts.compute_node, || {
-            super::interp::eval(&self.plan.program, batch)
+            super::interp::eval_columnar(&self.plan.program, batch)
         }))
     }
 
@@ -870,25 +1180,29 @@ impl<'a> StageCtx<'a> {
             }
             c.train(ranges);
         }
+        // One reusable decompression scratch for the whole selective
+        // pass (the raw basket is only read event-by-event here).
+        let mut scratch = Vec::new();
         for cluster in 0..self.cluster_pass.len() {
             if self.cluster_pass[cluster].is_empty() {
                 continue;
             }
             let lo = (cluster * self.basket_events) as u64;
-            for b in &self.output_only {
-                let (raw, info) = fetch_decompress(
+            for (oi, b) in self.output_only.iter().enumerate() {
+                let info = fetch_decompress_into(
                     &self.reader,
                     &mut self.counters,
                     self.timeline,
                     self.opts,
                     b,
                     lo,
+                    &mut scratch,
                 )?;
-                let acc = self.accs.get_mut(&b.desc.name).expect("acc exists");
+                let acc = &mut self.accs[self.output_only_accs[oi]];
                 let t0 = Instant::now();
                 let mut appended = 0usize;
                 for &ev in &self.cluster_pass[cluster] {
-                    appended += acc.push_event_raw(&raw, &info, ev)?;
+                    appended += acc.push_event_raw(&scratch, &info, ev)?;
                 }
                 self.timeline.add_real(
                     Stage::Deserialize,
@@ -922,8 +1236,9 @@ impl<'a> StageCtx<'a> {
             codec,
             self.meta.basket_events,
         );
-        for name in &self.plan.output_branches {
-            let acc = self.accs.remove(name).expect("acc exists");
+        // Accumulators were built in output schema order; drain them
+        // straight through.
+        for acc in std::mem::take(&mut self.accs) {
             let desc = acc.desc.clone();
             writer.add_branch(desc, acc.finish())?;
         }
@@ -1185,6 +1500,7 @@ mod tests {
     }
 
     /// A per-branch byte-accounting stage hooked after `decompress`.
+    /// Branch names resolve through the interned phase-1 slot order.
     struct ByteAudit {
         bytes: Mutex<std::collections::BTreeMap<String, u64>>,
     }
@@ -1195,9 +1511,9 @@ mod tests {
         fn run(&self, ctx: &mut StageCtx) -> Result<Verdict> {
             if let Some(group) = &ctx.group {
                 let mut tab = self.bytes.lock().unwrap();
-                for map in &group.raw {
-                    for (name, (raw, _)) in map {
-                        *tab.entry(name.clone()).or_insert(0) += raw.len() as u64;
+                for row in &group.raw {
+                    for (bm, (raw, _)) in ctx.phase1_branches().iter().zip(row) {
+                        *tab.entry(bm.desc.name.clone()).or_insert(0) += raw.len() as u64;
                     }
                 }
             }
@@ -1271,6 +1587,26 @@ mod tests {
         )
         .unwrap();
         assert_eq!(r.n_events(), 0);
+    }
+
+    #[test]
+    fn worker_pool_is_bit_identical_to_single_thread() {
+        // The threaded engine (decompress/deserialize/append fan-out)
+        // must produce the same selection, funnel and output file as
+        // the legacy in-line path — threading changes attribution, not
+        // results.
+        let base = run_skim(&SkimEngine::new(None), "pipe_par1.troot", &interp_opts());
+        for par in [2.0f64, 4.0] {
+            let opts = EngineOpts { use_pjrt: false, parallelism: par, ..Default::default() };
+            let name = format!("pipe_par{par}.troot");
+            let res = run_skim(&SkimEngine::new(None), &name, &opts);
+            assert_eq!(res.n_pass, base.n_pass, "parallelism {par}");
+            assert_eq!(res.stage_funnel, base.stage_funnel, "parallelism {par}");
+            assert_eq!(res.fetched_bytes, base.fetched_bytes, "parallelism {par}");
+            let a = std::fs::read(dataset().parent().unwrap().join("pipe_par1.troot")).unwrap();
+            let b = std::fs::read(dataset().parent().unwrap().join(&name)).unwrap();
+            assert_eq!(a, b, "output diverges at parallelism {par}");
+        }
     }
 
     #[test]

@@ -30,6 +30,23 @@ use super::wildcard;
 use crate::troot::{BranchKind, DType, FileMeta};
 use crate::{Error, Result};
 
+/// A dense, plan-time branch index: position of the branch in
+/// [`SkimPlan::criteria_branches`] (and therefore in the engine's
+/// phase-1 fetch order). The engine's per-cluster basket stores are
+/// plain `Vec`s indexed by `BranchId` — resolving names to ids once at
+/// plan time removes every per-basket string hash/clone from the hot
+/// path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BranchId(pub u32);
+
+impl BranchId {
+    /// The `Vec` index this id addresses.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
 /// Kernel capacity (must match `python/compile/kernels/skim.py`).
 pub const KERNEL_MAX_OBJ_COLS: usize = 12;
 pub const KERNEL_MAX_SCALAR_COLS: usize = 16;
@@ -213,6 +230,14 @@ pub struct SkimPlan {
     /// only for events that passed.
     pub output_only_branches: Vec<String>,
     pub program: CutProgram,
+    /// Interned source of each program jagged column:
+    /// `obj_col_branch[c]` is the [`BranchId`] (index into
+    /// `criteria_branches`) holding the basket that fills
+    /// `program.obj_columns[c]`.
+    pub obj_col_branch: Vec<BranchId>,
+    /// Interned source of each program scalar column (see
+    /// [`SkimPlan::obj_col_branch`]).
+    pub scalar_col_branch: Vec<BranchId>,
     pub warnings: Vec<String>,
 }
 
@@ -311,6 +336,34 @@ impl SkimPlan {
             .cloned()
             .collect();
 
+        // --- branch interning ------------------------------------------
+        // Every program column reads a criteria branch (the program was
+        // compiled from the same expressions `referenced_branches`
+        // walks); resolve each column's source to its dense BranchId
+        // once, here, so the engine never hashes a branch name per
+        // basket again.
+        let intern = |name: &str| -> Result<BranchId> {
+            criteria
+                .iter()
+                .position(|c| c.as_str() == name)
+                .map(|i| BranchId(i as u32))
+                .ok_or_else(|| {
+                    Error::query(format!(
+                        "internal: program column '{name}' missing from criteria set"
+                    ))
+                })
+        };
+        let obj_col_branch: Vec<BranchId> = program
+            .obj_columns
+            .iter()
+            .map(|n| intern(n))
+            .collect::<Result<_>>()?;
+        let scalar_col_branch: Vec<BranchId> = program
+            .scalar_columns
+            .iter()
+            .map(|n| intern(n))
+            .collect::<Result<_>>()?;
+
         let unfit = program.kernel_unfit_reasons();
         if !unfit.is_empty() {
             warnings.push(format!(
@@ -325,6 +378,8 @@ impl SkimPlan {
             criteria_branches: criteria,
             output_only_branches: output_only,
             program,
+            obj_col_branch,
+            scalar_col_branch,
             warnings,
         })
     }
@@ -820,6 +875,25 @@ mod tests {
         assert_eq!(p.triggers, vec![1]);
         assert!(p.exprs.is_empty());
         assert!(p.fits_kernel());
+    }
+
+    #[test]
+    fn column_sources_intern_to_criteria_ids() {
+        // Every program column maps to the dense id of its criteria
+        // branch — the engine indexes per-cluster basket Vecs with
+        // these, so the mapping must be exact and total.
+        let plan = SkimPlan::build(&query(Q), &meta()).unwrap();
+        let p = &plan.program;
+        assert_eq!(plan.obj_col_branch.len(), p.obj_columns.len());
+        assert_eq!(plan.scalar_col_branch.len(), p.scalar_columns.len());
+        for (c, name) in p.obj_columns.iter().enumerate() {
+            let id = plan.obj_col_branch[c];
+            assert_eq!(&plan.criteria_branches[id.idx()], name);
+        }
+        for (s, name) in p.scalar_columns.iter().enumerate() {
+            let id = plan.scalar_col_branch[s];
+            assert_eq!(&plan.criteria_branches[id.idx()], name);
+        }
     }
 
     #[test]

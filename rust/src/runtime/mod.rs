@@ -120,6 +120,16 @@ impl Batch {
             m,
         }
     }
+
+    /// Zero every value and forget validity, keeping the allocations —
+    /// the engine reuses one batch across flush windows and cluster
+    /// groups instead of re-allocating `zeroed` arrays per window.
+    pub fn reset(&mut self) {
+        self.cols.fill(0.0);
+        self.nobj.fill(0.0);
+        self.scalars.fill(0.0);
+        self.n_valid = 0;
+    }
 }
 
 /// Kernel outputs for one batch (padding trimmed to `n_valid`).

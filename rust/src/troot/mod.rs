@@ -32,7 +32,7 @@ pub mod reader;
 pub mod writer;
 
 pub use basket::DecodedBasket;
-pub use reader::{LocalFile, ReadAt, TRootReader};
+pub use reader::{coalesce_ranges, CoalescedSpan, LocalFile, ReadAt, TRootReader};
 pub use writer::TRootWriter;
 
 use crate::{Error, Result};
