@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 /// Parsed arguments for one (sub)command.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Tokens that were not `--flags` (subcommand operands).
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
@@ -39,19 +40,23 @@ impl Args {
         Ok(out)
     }
 
+    /// Value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key`, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Value of `--key`, erroring when absent.
     pub fn require(&self, key: &str) -> Result<&str> {
         self.get(key)
             .ok_or_else(|| Error::Config(format!("missing required flag --{key}")))
     }
 
+    /// Parse `--key` as a number, with a default when absent.
     pub fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
         match self.get(key) {
             None => Ok(default),
@@ -61,6 +66,7 @@ impl Args {
         }
     }
 
+    /// Whether the boolean switch `--name` was passed.
     pub fn switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }

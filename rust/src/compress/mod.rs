@@ -43,6 +43,7 @@ pub enum Codec {
 }
 
 impl Codec {
+    /// Stable frame-header id.
     pub fn id(self) -> u8 {
         match self {
             Codec::None => 0,
@@ -52,6 +53,7 @@ impl Codec {
         }
     }
 
+    /// Inverse of [`Codec::id`].
     pub fn from_id(id: u8) -> Result<Codec> {
         Ok(match id {
             0 => Codec::None,
@@ -62,6 +64,7 @@ impl Codec {
         })
     }
 
+    /// Canonical name (CLI spelling, Display).
     pub fn name(self) -> &'static str {
         match self {
             Codec::None => "none",

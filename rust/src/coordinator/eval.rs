@@ -25,9 +25,13 @@ use std::path::{Path, PathBuf};
 /// Dataset scale for an evaluation run.
 #[derive(Debug, Clone, Copy)]
 pub struct EvalScale {
+    /// Events per generated dataset.
     pub n_events: u64,
+    /// Total branch count (paper: 1749).
     pub target_branches: usize,
+    /// Number of `HLT_*` flags (paper: 677).
     pub n_hlt: usize,
+    /// Events per basket.
     pub basket_events: u32,
 }
 
@@ -46,12 +50,15 @@ impl EvalScale {
 
 /// Prepared on-disk evaluation environment.
 pub struct EvalEnv {
+    /// Storage directory the datasets live in.
     pub storage: PathBuf,
+    /// Client directory outputs land in.
     pub client: PathBuf,
     /// Catalog name of the LZ4-compressed dataset.
     pub lz4: String,
     /// Catalog name of the LZMA-class (xz-like) dataset.
     pub xz: String,
+    /// The scale the datasets were generated at.
     pub scale: EvalScale,
     /// Bandwidth scale factor: our LZ4 file size / the paper's 5 GB.
     /// Link and disk *bandwidths* are multiplied by this so the

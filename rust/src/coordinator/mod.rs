@@ -73,9 +73,11 @@ pub enum Mode {
 }
 
 impl Mode {
+    /// Every preset, in figure-row order.
     pub const ALL: [Mode; 4] =
         [Mode::ClientLegacy, Mode::ClientOpt, Mode::ServerSide, Mode::SkimRoot];
 
+    /// The preset's canonical CLI / figure-row name.
     pub fn name(self) -> &'static str {
         match self {
             Mode::ClientLegacy => "client-legacy",
@@ -141,8 +143,11 @@ impl Mode {
 /// `read_fail_prob`; the coordinator resubmits up to `max_retries`.
 #[derive(Debug, Clone, Copy)]
 pub struct FaultConfig {
+    /// Probability that any one storage read fails.
     pub read_fail_prob: f64,
+    /// Resubmissions before the job is abandoned.
     pub max_retries: u32,
+    /// Fault-stream seed (each attempt derives a distinct stream).
     pub seed: u64,
 }
 
@@ -154,16 +159,18 @@ impl Default for FaultConfig {
 
 /// Full testbed description for one job. Open: build any topology with
 /// [`Deployment::builder`]; the paper's four methods are presets.
-#[derive(Clone)]
+#[derive(Debug, Clone)]
 pub struct Deployment {
     /// Row label for reports (`client-legacy`, `skimroot`, or any
     /// custom name).
     pub name: String,
+    /// Where the filtering engine runs.
     pub placement: Placement,
     /// Client ↔ storage-site link (the 1/10/100 Gbps axis of Fig. 4a).
     pub client_link: LinkModel,
     /// Storage backend behind the XRootD server.
     pub disk: DiskModel,
+    /// WLCG-style failure injection + retry policy.
     pub fault: FaultConfig,
     /// TTreeCache capacity for remote clients (`None` disables).
     /// Server placement never uses a cache (§4: "TTreeCache does not
@@ -183,6 +190,7 @@ pub struct Deployment {
 }
 
 impl Deployment {
+    /// Start building a custom topology.
     pub fn builder() -> DeploymentBuilder {
         DeploymentBuilder::default()
     }
@@ -284,6 +292,7 @@ impl DeploymentBuilder {
         self
     }
 
+    /// Where the filtering engine runs.
     pub fn placement(mut self, placement: Placement) -> Self {
         self.placement = placement;
         self
@@ -301,6 +310,7 @@ impl DeploymentBuilder {
         self
     }
 
+    /// Failure injection + retry policy.
     pub fn fault(mut self, fault: FaultConfig) -> Self {
         self.fault = fault;
         self
@@ -312,11 +322,13 @@ impl DeploymentBuilder {
         self
     }
 
+    /// Two-phase execution (§3.2) vs legacy fetch-everything.
     pub fn two_phase(mut self, two_phase: bool) -> Self {
         self.two_phase = two_phase;
         self
     }
 
+    /// Vectorized PJRT kernel vs per-event interpreter.
     pub fn use_pjrt(mut self, use_pjrt: bool) -> Self {
         self.use_pjrt = use_pjrt;
         self
@@ -328,6 +340,7 @@ impl DeploymentBuilder {
         self
     }
 
+    /// Assemble and validate the deployment.
     pub fn build(self) -> Result<Deployment> {
         let name = self.name.unwrap_or_else(|| {
             match &self.placement {
@@ -357,12 +370,16 @@ impl DeploymentBuilder {
 pub struct JobReport {
     /// The deployment's report label.
     pub name: String,
+    /// The engine outcome (selection counts, funnel, output).
     pub result: SkimResult,
+    /// Full per-stage/per-node accounting for the job.
     pub timeline: Timeline,
     /// End-to-end latency (request submission → filtered file at the
     /// client), seconds.
     pub latency: f64,
+    /// Attempts including WLCG-style resubmissions (1 = first try).
     pub attempts: u32,
+    /// CPU utilization per node (busy / end-to-end).
     pub utilization: Vec<(Node, f64)>,
 }
 
@@ -426,9 +443,15 @@ pub struct Coordinator<'rt> {
     runtime: Option<&'rt SkimRuntime>,
     /// Where client-side outputs / shipped outputs land.
     client_dir: std::path::PathBuf,
+    /// Shared decompressed-basket cache installed into every engine
+    /// (the multi-tenant serving layer sets this; one-shot jobs don't).
+    basket_cache: Option<Arc<crate::serve::BasketCache>>,
 }
 
 impl<'rt> Coordinator<'rt> {
+    /// A coordinator reading inputs under `storage_root` and landing
+    /// filtered outputs under `client_dir`, evaluating with `runtime`
+    /// (`None` = the scalar interpreter).
     pub fn new(
         storage_root: impl Into<std::path::PathBuf>,
         client_dir: impl Into<std::path::PathBuf>,
@@ -438,7 +461,16 @@ impl<'rt> Coordinator<'rt> {
             storage_root: storage_root.into(),
             runtime,
             client_dir: client_dir.into(),
+            basket_cache: None,
         }
+    }
+
+    /// Install a shared [`crate::serve::BasketCache`] into every
+    /// engine this coordinator spins up (all placements, all fan-out
+    /// shards). See [`crate::engine::EngineOpts::basket_cache`].
+    pub fn with_basket_cache(mut self, cache: Arc<crate::serve::BasketCache>) -> Self {
+        self.basket_cache = Some(cache);
+        self
     }
 
     /// Run one skim job under `deployment`, with WLCG-style retries.
@@ -516,6 +548,8 @@ impl<'rt> Coordinator<'rt> {
         let out_path = self.client_dir.join(sanitize(&query.output));
         let server = XrdServer::new(&self.storage_root, deployment.disk);
         server.set_timeline(Some(timeline.clone()));
+        // Keep a stat handle: the DPU arm moves `server` into the node.
+        let server_stats = server.clone();
 
         let wrap_faults = |store: Arc<dyn ReadAt>| -> Arc<dyn ReadAt> {
             if deployment.fault.read_fail_prob > 0.0 {
@@ -529,7 +563,7 @@ impl<'rt> Coordinator<'rt> {
             }
         };
 
-        match &deployment.placement {
+        let result = match &deployment.placement {
             Placement::Client => {
                 let wire = Arc::new(LoopbackWire::new(
                     server,
@@ -545,6 +579,7 @@ impl<'rt> Coordinator<'rt> {
                     compute_node: Node::Client,
                     decomp: DecompMode::Software,
                     cache_bytes: deployment.cache_bytes,
+                    basket_cache: self.basket_cache.clone(),
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -569,6 +604,7 @@ impl<'rt> Coordinator<'rt> {
                     compute_node: Node::Server,
                     decomp: DecompMode::Software,
                     cache_bytes: None,
+                    basket_cache: self.basket_cache.clone(),
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -597,16 +633,22 @@ impl<'rt> Coordinator<'rt> {
                 }
                 let scratch = self.client_dir.join("dpu_scratch");
                 let out = if deployment.fan_out <= 1 {
-                    let dpu = DpuNode::new(config.clone(), server, self.runtime, &scratch);
+                    let mut dpu = DpuNode::new(config.clone(), server, self.runtime, &scratch);
+                    if let Some(cache) = &self.basket_cache {
+                        dpu = dpu.with_basket_cache(cache.clone());
+                    }
                     dpu.run_query_with(query, timeline, None, stages)?
                 } else {
-                    let cluster = DpuCluster::new(
+                    let mut cluster = DpuCluster::new(
                         deployment.fan_out,
                         config.clone(),
                         server,
                         self.runtime,
                         &scratch,
                     );
+                    if let Some(cache) = &self.basket_cache {
+                        cluster = cluster.with_basket_cache(cache.clone());
+                    }
                     cluster.run_query_with(query, timeline, stages)?
                 };
                 deployment.client_link.charge(
@@ -619,7 +661,16 @@ impl<'rt> Coordinator<'rt> {
                 result.output_path = out_path;
                 Ok(result)
             }
+        };
+        // Surface the storage server's served-byte count in the
+        // end-of-job metrics report (`pub_served` was write-only
+        // before): zero for placements that bypass the XRootD server
+        // (server-side local reads), so only nonzero totals are kept.
+        let served = server_stats.bytes_served();
+        if served > 0 {
+            timeline.count("xrd_bytes_served", served);
         }
+        result
     }
 }
 

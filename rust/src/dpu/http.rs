@@ -5,6 +5,17 @@
 //! http://<dpu>/skim`). The response body is the filtered troot file;
 //! job statistics come back in `X-Skim-*` headers.
 //!
+//! A server built with [`DpuHttpServer::with_scheduler`] additionally
+//! exposes the multi-tenant **asynchronous job API** over a
+//! [`SkimScheduler`]:
+//!
+//! * `POST /jobs` — submit a JSON query; `202 {"job": N}` on
+//!   admission, `429` when the queue is full;
+//! * `GET /jobs/<id>` — JSON status (state, events, pass counts,
+//!   shared-cache hits/misses);
+//! * `GET /jobs/<id>/result` — the filtered troot bytes of a finished
+//!   job (`409` while in flight, `500` with the message on failure).
+//!
 //! Hand-rolled request/response parsing (no HTTP crates offline):
 //! request line + headers + `Content-Length` body; responses are
 //! always `Connection: close`.
@@ -12,24 +23,30 @@
 use crate::coordinator::Deployment;
 use crate::job::SkimJob;
 use crate::metrics::Timeline;
-use crate::query::SkimQuery;
+use crate::query::{Json, SkimQuery};
 use crate::runtime::SkimRuntime;
+use crate::serve::{JobState, SkimScheduler};
 use crate::{Error, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
+/// Upper bound on an accepted request body (query payloads are small).
 pub const MAX_BODY: usize = 64 * 1024 * 1024;
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HttpRequest {
+    /// Request method (`GET`, `POST`, ...).
     pub method: String,
+    /// Request path (`/skim`, `/jobs/3`, ...).
     pub path: String,
+    /// Headers, keys lower-cased.
     pub headers: HashMap<String, String>,
+    /// Raw body bytes (`Content-Length`-framed).
     pub body: Vec<u8>,
 }
 
@@ -102,13 +119,18 @@ pub fn write_response(
 /// in-process node model and tests can plug in.
 pub struct DpuHttpServer<F> {
     handler: Arc<F>,
+    scheduler: Option<Arc<SkimScheduler>>,
 }
 
 /// What the executor returns: the filtered file plus summary stats.
 pub struct SkimHttpOutput {
+    /// The filtered troot file's bytes (the HTTP response body).
     pub output: Vec<u8>,
+    /// Events the job covered.
     pub n_events: u64,
+    /// Events passing the selection.
     pub n_pass: u64,
+    /// Modeled end-to-end latency in seconds.
     pub elapsed: f64,
 }
 
@@ -116,8 +138,16 @@ impl<F> DpuHttpServer<F>
 where
     F: Fn(&SkimQuery, &Timeline) -> Result<SkimHttpOutput> + Send + Sync + 'static,
 {
+    /// A server executing each synchronous `POST /skim` via `handler`.
     pub fn new(handler: F) -> Self {
-        DpuHttpServer { handler: Arc::new(handler) }
+        DpuHttpServer { handler: Arc::new(handler), scheduler: None }
+    }
+
+    /// Additionally expose the asynchronous `/jobs` API backed by
+    /// `scheduler` (see the module docs).
+    pub fn with_scheduler(mut self, scheduler: Arc<SkimScheduler>) -> Self {
+        self.scheduler = Some(scheduler);
+        self
     }
 
     /// Serve until `stop`; one thread per connection (the DPU has 16
@@ -128,15 +158,21 @@ where
         stop: Arc<AtomicBool>,
     ) -> std::thread::JoinHandle<()> {
         let handler = self.handler.clone();
+        let scheduler = self.scheduler.clone();
         listener.set_nonblocking(true).expect("set_nonblocking");
         std::thread::spawn(move || {
             let mut conns = Vec::new();
             while !stop.load(Ordering::Relaxed) {
+                // Reap finished connections: a long-lived service
+                // polled over `Connection: close` requests must not
+                // accumulate one dead JoinHandle per request.
+                conns.retain(|c: &std::thread::JoinHandle<()>| !c.is_finished());
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let handler = handler.clone();
+                        let scheduler = scheduler.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_connection(stream, &*handler);
+                            let _ = handle_connection(stream, &*handler, scheduler.as_ref());
                         }));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -152,7 +188,11 @@ where
     }
 }
 
-fn handle_connection<F>(mut stream: TcpStream, handler: &F) -> Result<()>
+fn handle_connection<F>(
+    mut stream: TcpStream,
+    handler: &F,
+    scheduler: Option<&Arc<SkimScheduler>>,
+) -> Result<()>
 where
     F: Fn(&SkimQuery, &Timeline) -> Result<SkimHttpOutput>,
 {
@@ -160,10 +200,15 @@ where
     let req = match read_request(&mut stream) {
         Ok(r) => r,
         Err(e) => {
-            let msg = format!("{{\"error\": \"{e}\"}}");
+            let msg = error_json(&e);
             return write_response(&mut stream, 400, "Bad Request", &[], msg.as_bytes());
         }
     };
+    if let Some(sched) = scheduler {
+        if req.path == "/jobs" || req.path.starts_with("/jobs/") {
+            return handle_jobs_route(&mut stream, &req, sched);
+        }
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => write_response(
             &mut stream,
@@ -182,7 +227,7 @@ where
             let query = match SkimQuery::from_json_text(text) {
                 Ok(q) => q,
                 Err(e) => {
-                    let msg = format!("{{\"error\": \"{e}\"}}");
+                    let msg = error_json(&e);
                     return write_response(
                         &mut stream,
                         422,
@@ -207,7 +252,7 @@ where
                     &out.output,
                 ),
                 Err(e) => {
-                    let msg = format!("{{\"error\": \"{e}\"}}");
+                    let msg = error_json(&e);
                     write_response(
                         &mut stream,
                         500,
@@ -219,6 +264,134 @@ where
             }
         }
         _ => write_response(&mut stream, 404, "Not Found", &[], b"not found"),
+    }
+}
+
+/// `{"error":"..."}` via the crate's JSON serializer (user-controlled
+/// error text — quotes, backslashes, control characters — is escaped
+/// by the shared `write_escaped`, not a second hand-rolled escaper).
+fn error_json(msg: impl std::fmt::Display) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(obj).to_string()
+}
+
+/// Compact JSON rendering of one job status (sorted keys).
+fn status_json(status: &crate::serve::JobStatus) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("job".to_string(), Json::Num(status.id as f64));
+    obj.insert("state".to_string(), Json::Str(status.state.name().to_string()));
+    obj.insert("events".to_string(), Json::Num(status.n_events as f64));
+    obj.insert("pass".to_string(), Json::Num(status.n_pass as f64));
+    obj.insert("latency_secs".to_string(), Json::Num(status.latency));
+    obj.insert("cache_hits".to_string(), Json::Num(status.cache_hits as f64));
+    obj.insert("cache_misses".to_string(), Json::Num(status.cache_misses as f64));
+    if let Some(e) = &status.error {
+        obj.insert("error".to_string(), Json::Str(e.clone()));
+    }
+    Json::Obj(obj).to_string()
+}
+
+/// The asynchronous job API: `POST /jobs`, `GET /jobs/<id>`,
+/// `GET /jobs/<id>/result`.
+fn handle_jobs_route(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    sched: &Arc<SkimScheduler>,
+) -> Result<()> {
+    let json = || ("Content-Type", "application/json".to_string());
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/jobs") => {
+            let text = match std::str::from_utf8(&req.body) {
+                Ok(t) => t,
+                Err(_) => {
+                    return write_response(stream, 400, "Bad Request", &[], b"non-utf8 body")
+                }
+            };
+            let query = match SkimQuery::from_json_text(text) {
+                Ok(q) => q,
+                Err(e) => {
+                    let msg = error_json(&e);
+                    return write_response(
+                        stream,
+                        422,
+                        "Unprocessable Entity",
+                        &[json()],
+                        msg.as_bytes(),
+                    );
+                }
+            };
+            match sched.submit(query) {
+                Ok(job) => {
+                    let mut obj = BTreeMap::new();
+                    obj.insert("job".to_string(), Json::Num(job as f64));
+                    let msg = Json::Obj(obj).to_string();
+                    write_response(stream, 202, "Accepted", &[json()], msg.as_bytes())
+                }
+                Err(e) => {
+                    let msg = error_json(&e);
+                    if sched.is_accepting() {
+                        // Admission control: the queue is full.
+                        write_response(stream, 429, "Too Many Requests", &[json()], msg.as_bytes())
+                    } else {
+                        // Shutting down: retrying is pointless.
+                        let hdr = [json()];
+                        write_response(stream, 503, "Service Unavailable", &hdr, msg.as_bytes())
+                    }
+                }
+            }
+        }
+        ("GET", path) => {
+            let rest = &path["/jobs/".len().min(path.len())..];
+            let (id_str, want_result) = match rest.strip_suffix("/result") {
+                Some(id) => (id, true),
+                None => (rest, false),
+            };
+            let id: u64 = match id_str.parse() {
+                Ok(id) => id,
+                Err(_) => {
+                    return write_response(stream, 400, "Bad Request", &[], b"bad job id")
+                }
+            };
+            let Some(status) = sched.status(id) else {
+                let msg = b"{\"error\": \"no such job\"}";
+                return write_response(stream, 404, "Not Found", &[json()], msg);
+            };
+            if !want_result {
+                let msg = status_json(&status);
+                return write_response(stream, 200, "OK", &[json()], msg.as_bytes());
+            }
+            match status.state {
+                JobState::Done => match sched.fetch_result(id) {
+                    Ok(bytes) => write_response(
+                        stream,
+                        200,
+                        "OK",
+                        &[
+                            ("Content-Type", "application/octet-stream".into()),
+                            ("X-Skim-Events", status.n_events.to_string()),
+                            ("X-Skim-Pass", status.n_pass.to_string()),
+                        ],
+                        &bytes,
+                    ),
+                    Err(e) => {
+                        let msg = error_json(&e);
+                        let hdr = [json()];
+                        write_response(stream, 500, "Internal Server Error", &hdr, msg.as_bytes())
+                    }
+                },
+                JobState::Failed => {
+                    let msg = status_json(&status);
+                    let hdr = [json()];
+                    write_response(stream, 500, "Internal Server Error", &hdr, msg.as_bytes())
+                }
+                _ => {
+                    let msg = status_json(&status);
+                    write_response(stream, 409, "Conflict", &[json()], msg.as_bytes())
+                }
+            }
+        }
+        _ => write_response(stream, 404, "Not Found", &[], b"not found"),
     }
 }
 
@@ -270,15 +443,28 @@ pub fn storage_handler(
 
 /// Minimal HTTP client for posting skim queries (what `curl` does).
 pub fn post_skim(addr: &str, query_json: &str) -> Result<(u16, HashMap<String, String>, Vec<u8>)> {
+    http_request(addr, "POST", "/skim", query_json.as_bytes())
+}
+
+/// Minimal one-shot HTTP client: `method path` with `body`, returning
+/// `(status, lower-cased headers, body)`. Used by the `/jobs` job API
+/// and the `skim_farm` example; each call opens a fresh connection
+/// (the server always answers `Connection: close`).
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<(u16, HashMap<String, String>, Vec<u8>)> {
     let mut stream = TcpStream::connect(addr)
         .map_err(|e| Error::protocol(format!("connect {addr}: {e}")))?;
     stream.set_nodelay(true).ok();
     write!(
         stream,
-        "POST /skim HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
-        query_json.len()
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        body.len()
     )?;
-    stream.write_all(query_json.as_bytes())?;
+    stream.write_all(body)?;
     stream.flush()?;
 
     // Parse response: status line, headers, body per Content-Length.
@@ -376,6 +562,85 @@ mod tests {
 
         stop.store(true, Ordering::Relaxed);
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn jobs_api_end_to_end() {
+        use crate::compress::Codec;
+        use crate::gen::{self, GenConfig};
+        let dir = std::env::temp_dir().join(format!("http_jobs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.troot");
+        if !path.exists() {
+            let cfg = GenConfig {
+                n_events: 600,
+                target_branches: 160,
+                n_hlt: 40,
+                basket_events: 200,
+                codec: Codec::Lz4,
+                seed: 53,
+            };
+            gen::generate(&cfg, &path).unwrap();
+        }
+        let mut cfg = crate::serve::ServeConfig::new(&dir);
+        cfg.workers = 1;
+        let sched = crate::serve::SkimScheduler::new(cfg).unwrap();
+
+        let server = DpuHttpServer::new(|_q: &SkimQuery, _tl: &Timeline| {
+            Err(crate::Error::Engine("sync path unused in this test".into()))
+        })
+        .with_scheduler(sched.clone());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = server.serve(listener, stop.clone());
+
+        // Submit.
+        let query = gen::higgs_query("events.troot", "http_jobs.troot");
+        let payload = query.to_json().to_string();
+        let (status, _, body) = http_request(&addr, "POST", "/jobs", payload.as_bytes()).unwrap();
+        assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+        let text = String::from_utf8(body).unwrap();
+        let id: u64 = text
+            .trim_start_matches("{\"job\":")
+            .trim_end_matches('}')
+            .parse()
+            .unwrap();
+
+        // Poll status until done.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            let (status, _, body) =
+                http_request(&addr, "GET", &format!("/jobs/{id}"), b"").unwrap();
+            assert_eq!(status, 200);
+            let text = String::from_utf8(body).unwrap();
+            if text.contains("\"state\":\"done\"") {
+                assert!(text.contains("\"cache_hits\""));
+                assert!(text.contains("\"latency_secs\""));
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "job never finished: {text}");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+
+        // Fetch the result bytes.
+        let (status, headers, bytes) =
+            http_request(&addr, "GET", &format!("/jobs/{id}/result"), b"").unwrap();
+        assert_eq!(status, 200);
+        assert!(bytes.len() > 100);
+        assert!(headers["x-skim-pass"].parse::<u64>().unwrap() > 0);
+
+        // Unknown job id.
+        let (status, _, _) = http_request(&addr, "GET", "/jobs/99999", b"").unwrap();
+        assert_eq!(status, 404);
+
+        // Malformed submission.
+        let (status, _, _) = http_request(&addr, "POST", "/jobs", b"{nope").unwrap();
+        assert_eq!(status, 422);
+
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+        sched.shutdown();
     }
 
     #[test]

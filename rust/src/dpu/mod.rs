@@ -75,15 +75,19 @@ impl Default for DpuConfig {
 /// A DPU bound to one storage server (in-process model; the TCP/HTTP
 /// deployment wraps this in [`http::DpuHttpServer`]).
 pub struct DpuNode<'rt> {
+    /// Hardware/firmware parameters of this node.
     pub config: DpuConfig,
     storage: XrdServer,
     runtime: Option<&'rt SkimRuntime>,
     /// Where the DPU stages filtered outputs before shipping them.
     scratch_dir: PathBuf,
+    /// Shared decompressed-basket cache (serving-layer deployments).
+    basket_cache: Option<Arc<crate::serve::BasketCache>>,
 }
 
 /// Outcome of one DPU-executed skim, including the bytes to ship back.
 pub struct DpuJobOutput {
+    /// The engine outcome (selection counts, funnel, output stats).
     pub result: SkimResult,
     /// The filtered file's bytes (read from DPU scratch, ready to
     /// transfer to the client).
@@ -91,13 +95,28 @@ pub struct DpuJobOutput {
 }
 
 impl<'rt> DpuNode<'rt> {
+    /// A DPU node attached to `storage`, staging outputs under
+    /// `scratch_dir`.
     pub fn new(
         config: DpuConfig,
         storage: XrdServer,
         runtime: Option<&'rt SkimRuntime>,
         scratch_dir: impl Into<PathBuf>,
     ) -> Self {
-        DpuNode { config, storage, runtime, scratch_dir: scratch_dir.into() }
+        DpuNode {
+            config,
+            storage,
+            runtime,
+            scratch_dir: scratch_dir.into(),
+            basket_cache: None,
+        }
+    }
+
+    /// Install a shared [`crate::serve::BasketCache`]: every job this
+    /// node runs consults it before fetching + decompressing a basket.
+    pub fn with_basket_cache(mut self, cache: Arc<crate::serve::BasketCache>) -> Self {
+        self.basket_cache = Some(cache);
+        self
     }
 
     /// Execute a skim query on the DPU: fetch baskets from the storage
@@ -137,6 +156,7 @@ impl<'rt> DpuNode<'rt> {
             max_objects: 16,
             parallelism: self.config.parallelism,
             event_range,
+            basket_cache: self.basket_cache.clone(),
             ..Default::default()
         };
         let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -203,10 +223,22 @@ impl<'rt> DpuCluster<'rt> {
         DpuCluster { nodes, scratch_root }
     }
 
+    /// Install a shared [`crate::serve::BasketCache`] into every node
+    /// of the cluster (shards share one server-side cache, exactly as
+    /// concurrent jobs do).
+    pub fn with_basket_cache(mut self, cache: Arc<crate::serve::BasketCache>) -> Self {
+        for node in &mut self.nodes {
+            node.basket_cache = Some(cache.clone());
+        }
+        self
+    }
+
+    /// Number of DPU nodes in the cluster.
     pub fn fan_out(&self) -> usize {
         self.nodes.len()
     }
 
+    /// [`DpuCluster::run_query_with`] without custom stages.
     pub fn run_query(&self, query: &SkimQuery, timeline: &Timeline) -> Result<DpuJobOutput> {
         self.run_query_with(query, timeline, &[])
     }

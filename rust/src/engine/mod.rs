@@ -61,7 +61,10 @@ pub enum DecompMode {
     /// On the DPU's hardware engine: wall time divided by `speedup`,
     /// attributed to [`Node::DpuEngine`] (not ARM-core CPU). Paper:
     /// 3.1 s software → 2.2 s engine ⇒ calibrated speedup ≈ 1.4.
-    HwEngine { speedup: f64 },
+    HwEngine {
+        /// Calibrated engine speedup over one-core software decode.
+        speedup: f64,
+    },
 }
 
 /// Engine configuration for one run.
@@ -73,6 +76,7 @@ pub struct EngineOpts {
     pub use_pjrt: bool,
     /// Node whose CPU the compute stages burn.
     pub compute_node: Node,
+    /// Where decompression runs (software CPU vs DPU engine).
     pub decomp: DecompMode,
     /// TTreeCache capacity; `None` disables the cache (local access).
     pub cache_bytes: Option<usize>,
@@ -107,6 +111,15 @@ pub struct EngineOpts {
     /// Shard boundaries are honored exactly; fetches stay
     /// basket-granular at the edges.
     pub event_range: Option<(u64, u64)>,
+    /// Shared server-side decompressed-basket cache
+    /// ([`crate::serve::BasketCache`]). When set, the `fetch` stage
+    /// (and the phase-2 selective fetch) consults it before touching
+    /// the store: hits skip both the read *and* the decompression,
+    /// misses load through it single-flight so concurrent jobs pay
+    /// for each cold basket once. `None` (the default, and every
+    /// one-shot job) preserves the uncached behavior exactly. See
+    /// `engine/pipeline.rs` and ARCHITECTURE.md § "Serving layer".
+    pub basket_cache: Option<std::sync::Arc<crate::serve::BasketCache>>,
 }
 
 impl EngineOpts {
@@ -137,6 +150,7 @@ impl Default for EngineOpts {
             deser_model: Some(DeserModel::root_like()),
             parallelism: 1.0,
             event_range: None,
+            basket_cache: None,
         }
     }
 }
@@ -157,6 +171,7 @@ pub struct DeserModel {
 }
 
 impl DeserModel {
+    /// The Figure-4b calibration (≈1.1 µs/entry, ~60 MB/s streaming).
     pub fn root_like() -> Self {
         DeserModel { per_entry: 1.1e-6, bytes_per_sec: 60e6 }
     }
@@ -174,19 +189,26 @@ impl DeserModel {
 pub struct SkimResult {
     /// Events this job covered (whole file, or its `event_range`).
     pub n_events: u64,
+    /// Events passing the full selection.
     pub n_pass: u64,
     /// Cumulative survivors after (preselection, +object, +event,
     /// +trigger) — the §3.2 funnel. The event stage covers the HT unit
     /// plus any residual IR expressions of the open query frontend.
     pub stage_funnel: [u64; 4],
+    /// Where the filtered file was written.
     pub output_path: std::path::PathBuf,
+    /// Size of the filtered file.
     pub output_bytes: u64,
+    /// Compressed baskets fetched from the store (shared-basket-cache
+    /// hits fetch nothing and are not counted).
     pub baskets_fetched: u64,
+    /// Compressed bytes fetched from the store.
     pub fetched_bytes: u64,
     /// TTreeCache effectiveness if a cache was used.
     pub cache: Option<CacheStats>,
     /// True if the vectorized PJRT path evaluated the cuts.
     pub vectorized: bool,
+    /// Engine warnings (planner fallbacks, interpreter use).
     pub warnings: Vec<String>,
 }
 
@@ -226,10 +248,12 @@ impl<'rt> SkimEngine<'rt> {
         Ok(engine)
     }
 
+    /// The engine's stage registry.
     pub fn pipeline(&self) -> &Pipeline {
         &self.pipeline
     }
 
+    /// Mutable access for registering custom stages.
     pub fn pipeline_mut(&mut self) -> &mut Pipeline {
         &mut self.pipeline
     }

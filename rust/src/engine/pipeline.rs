@@ -67,6 +67,7 @@ use crate::query::plan::{
 };
 use crate::query::SkimQuery;
 use crate::runtime::{Batch, Capacities, CutParams, MaskResult, SkimRuntime, Variant};
+use crate::serve::cache::{BasketCache, BasketKey};
 use crate::troot::{
     basket as basket_codec, BasketInfo, BranchKind, BranchMeta, ColumnData, ColumnValues,
     DecodedBasket, FileMeta, ReadAt, TRootReader,
@@ -119,12 +120,17 @@ pub(crate) struct Registration {
 /// [`crate::SkimJob`] into every engine a deployment spins up.
 #[derive(Clone)]
 pub struct StageReg {
+    /// Which hook the stage attaches to.
     pub hook: Hook,
+    /// Names of stages this one must run after.
     pub after: Vec<String>,
+    /// The stage itself.
     pub stage: Arc<dyn FilterStage>,
 }
 
 impl StageReg {
+    /// A portable registration of `stage` at `hook`, ordered after the
+    /// named stages.
     pub fn new(hook: Hook, after: &[&str], stage: Arc<dyn FilterStage>) -> Self {
         StageReg { hook, after: after.iter().map(|s| s.to_string()).collect(), stage }
     }
@@ -443,14 +449,18 @@ fn fetch_decompress_into(
 /// exposed read-only; mutable job state (`stage_funnel`, `warnings`,
 /// the current `group`) is public for stages to inspect and adjust.
 pub struct StageCtx<'a> {
+    /// The engine options this job runs under.
     pub opts: &'a EngineOpts,
+    /// The job timeline every stage accounts onto.
     pub timeline: &'a Timeline,
+    /// The compiled execution plan.
     pub plan: SkimPlan,
     /// The §3.2 funnel: cumulative survivors after (preselection,
     /// +object, +HT, +trigger).
     pub stage_funnel: [u64; 4],
     /// Events committed as passing so far (updated at group commit).
     pub pass_total: u64,
+    /// Warnings accumulated so far (stages may append).
     pub warnings: Vec<String>,
     /// The active cluster group, `Some` between `begin_group` and
     /// commit. Group-hook stages operate on this.
@@ -495,6 +505,14 @@ pub struct StageCtx<'a> {
     counters: FetchCounters,
     output_path: PathBuf,
     output_summary: Option<crate::troot::writer::WriteSummary>,
+    /// Interned [`BasketKey`] components for the shared basket cache
+    /// (empty when [`EngineOpts::basket_cache`] is `None`): the input
+    /// file name, plus one branch name per phase-1 slot and per
+    /// output-only branch — so key construction on the hot path is
+    /// refcount bumps, not string clones.
+    cache_file_key: Arc<str>,
+    cache_branch_keys: Vec<Arc<str>>,
+    cache_output_keys: Vec<Arc<str>>,
 }
 
 impl<'a> StageCtx<'a> {
@@ -658,6 +676,24 @@ impl<'a> StageCtx<'a> {
             .map(|b| acc_index[b.desc.name.as_str()])
             .collect();
 
+        // Intern shared-cache key components once per job.
+        let (cache_file_key, cache_branch_keys, cache_output_keys) =
+            if opts.basket_cache.is_some() {
+                (
+                    Arc::<str>::from(query.input.as_str()),
+                    phase1
+                        .iter()
+                        .map(|b| Arc::<str>::from(b.desc.name.as_str()))
+                        .collect(),
+                    output_only
+                        .iter()
+                        .map(|b| Arc::<str>::from(b.desc.name.as_str()))
+                        .collect(),
+                )
+            } else {
+                (Arc::<str>::from(""), Vec::new(), Vec::new())
+            };
+
         Ok(StageCtx {
             opts,
             timeline,
@@ -690,6 +726,9 @@ impl<'a> StageCtx<'a> {
             counters: FetchCounters::default(),
             output_path,
             output_summary: None,
+            cache_file_key,
+            cache_branch_keys,
+            cache_output_keys,
         })
     }
 
@@ -796,6 +835,9 @@ impl<'a> StageCtx<'a> {
     // ---------------- built-in stage bodies --------------------------
 
     fn fetch_group(&mut self, group: &mut GroupState) -> Result<()> {
+        if let Some(cache) = self.opts.basket_cache.clone() {
+            return self.fetch_group_cached(group, &cache);
+        }
         for &(_, lo, _) in &group.clusters {
             let mut row = Vec::with_capacity(self.phase1.len());
             for b in &self.phase1 {
@@ -816,6 +858,86 @@ impl<'a> StageCtx<'a> {
             }
             group.frames.push(row);
         }
+        Ok(())
+    }
+
+    /// Fetch + decompress one basket through the shared
+    /// [`BasketCache`] (single-flight). `phase2` selects the branch
+    /// table: `false` = phase-1 slot, `true` = output-only index. A
+    /// miss loads through the cache — charging this job's timeline for
+    /// transport and decompression exactly as the uncached path would
+    /// — and bumps the fetch counters; a hit charges nothing. Returns
+    /// the decompressed bytes, the basket's metadata and the hit flag.
+    fn fetch_basket_cached(
+        &mut self,
+        cache: &BasketCache,
+        phase2: bool,
+        slot: usize,
+        lo: u64,
+        hits: &mut u64,
+        misses: &mut u64,
+    ) -> Result<(Arc<Vec<u8>>, BasketInfo, bool)> {
+        let (b, branch_key) = if phase2 {
+            (&self.output_only[slot], &self.cache_output_keys[slot])
+        } else {
+            (&self.phase1[slot], &self.cache_branch_keys[slot])
+        };
+        let idx = b.basket_for_event(lo).ok_or_else(|| {
+            Error::Engine(format!(
+                "branch {} has no basket for event {lo}",
+                b.desc.name
+            ))
+        })?;
+        let info = b.baskets[idx];
+        let key = BasketKey {
+            file: self.cache_file_key.clone(),
+            branch: branch_key.clone(),
+            basket: idx as u32,
+        };
+        let reader = &self.reader;
+        let timeline = self.timeline;
+        let opts = self.opts;
+        let (raw, hit) = cache.get_or_load(key, || {
+            let frame = reader.fetch_basket(b, idx)?;
+            decompress_attributed(timeline, opts, &frame)
+        })?;
+        if hit {
+            *hits += 1;
+        } else {
+            *misses += 1;
+            self.counters.baskets += 1;
+            self.counters.bytes += info.comp_len as u64;
+        }
+        Ok((raw, info, hit))
+    }
+
+    /// Shared-cache fetch path: fetch **and decompress** through the
+    /// service-wide [`BasketCache`], filling [`GroupState::raw`]
+    /// directly (the built-in `decompress` stage then has no frames
+    /// left to chew). Hits skip both the store read and the
+    /// decompression — and charge nothing to this job's timeline;
+    /// misses load single-flight, with the loading job paying the
+    /// transport + decompress charges exactly as on the uncached path.
+    fn fetch_group_cached(&mut self, group: &mut GroupState, cache: &BasketCache) -> Result<()> {
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        for &(_, lo, _) in &group.clusters {
+            let mut row = Vec::with_capacity(self.phase1.len());
+            for slot in 0..self.phase1.len() {
+                let (raw, info, hit) =
+                    self.fetch_basket_cached(cache, false, slot, lo, &mut hits, &mut misses)?;
+                if !hit {
+                    group.fetched_bytes += info.comp_len as u64;
+                }
+                // The cache hands out shared `Arc`ed bytes; the
+                // per-group stores own their buffers, so a hit costs
+                // one memcpy instead of a fetch + decompress.
+                row.push(((*raw).clone(), info));
+            }
+            group.raw.push(row);
+        }
+        self.timeline.count("basket_cache_hits", hits);
+        self.timeline.count("basket_cache_misses", misses);
         Ok(())
     }
 
@@ -1182,27 +1304,43 @@ impl<'a> StageCtx<'a> {
         }
         // One reusable decompression scratch for the whole selective
         // pass (the raw basket is only read event-by-event here).
+        // With a shared basket cache the scratch is bypassed: phase-2
+        // baskets are served (and shared) through the cache too.
+        let cache_opt = self.opts.basket_cache.clone();
+        let mut hits = 0u64;
+        let mut misses = 0u64;
         let mut scratch = Vec::new();
         for cluster in 0..self.cluster_pass.len() {
             if self.cluster_pass[cluster].is_empty() {
                 continue;
             }
             let lo = (cluster * self.basket_events) as u64;
-            for (oi, b) in self.output_only.iter().enumerate() {
-                let info = fetch_decompress_into(
-                    &self.reader,
-                    &mut self.counters,
-                    self.timeline,
-                    self.opts,
-                    b,
-                    lo,
-                    &mut scratch,
-                )?;
+            for oi in 0..self.output_only.len() {
+                let raw_arc: Arc<Vec<u8>>;
+                let info: BasketInfo;
+                let raw_slice: &[u8] = if let Some(cache) = &cache_opt {
+                    let (data, inf, _hit) =
+                        self.fetch_basket_cached(cache, true, oi, lo, &mut hits, &mut misses)?;
+                    info = inf;
+                    raw_arc = data;
+                    raw_arc.as_slice()
+                } else {
+                    info = fetch_decompress_into(
+                        &self.reader,
+                        &mut self.counters,
+                        self.timeline,
+                        self.opts,
+                        &self.output_only[oi],
+                        lo,
+                        &mut scratch,
+                    )?;
+                    scratch.as_slice()
+                };
                 let acc = &mut self.accs[self.output_only_accs[oi]];
                 let t0 = Instant::now();
                 let mut appended = 0usize;
                 for &ev in &self.cluster_pass[cluster] {
-                    appended += acc.push_event_raw(&scratch, &info, ev)?;
+                    appended += acc.push_event_raw(raw_slice, &info, ev)?;
                 }
                 self.timeline.add_real(
                     Stage::Deserialize,
@@ -1222,6 +1360,10 @@ impl<'a> StageCtx<'a> {
                     );
                 }
             }
+        }
+        if cache_opt.is_some() {
+            self.timeline.count("basket_cache_hits", hits);
+            self.timeline.count("basket_cache_misses", misses);
         }
         Ok(())
     }
@@ -1607,6 +1749,33 @@ mod tests {
             let b = std::fs::read(dataset().parent().unwrap().join(&name)).unwrap();
             assert_eq!(a, b, "output diverges at parallelism {par}");
         }
+    }
+
+    #[test]
+    fn shared_basket_cache_is_transparent_and_hits_on_reuse() {
+        let base = run_skim(&SkimEngine::new(None), "pipe_nocache.troot", &interp_opts());
+        let cache = Arc::new(crate::serve::BasketCache::new(256 * 1000 * 1000));
+        let opts = EngineOpts {
+            use_pjrt: false,
+            basket_cache: Some(cache.clone()),
+            ..Default::default()
+        };
+        let first = run_skim(&SkimEngine::new(None), "pipe_cached1.troot", &opts);
+        let second = run_skim(&SkimEngine::new(None), "pipe_cached2.troot", &opts);
+        assert_eq!(first.n_pass, base.n_pass);
+        assert_eq!(second.stage_funnel, base.stage_funnel);
+        let dir = dataset().parent().unwrap().to_path_buf();
+        let a = std::fs::read(dir.join("pipe_nocache.troot")).unwrap();
+        let b = std::fs::read(dir.join("pipe_cached1.troot")).unwrap();
+        let c = std::fs::read(dir.join("pipe_cached2.troot")).unwrap();
+        assert_eq!(a, b, "cache must not change the output bytes");
+        assert_eq!(a, c, "hits must not change the output bytes");
+        let stats = cache.stats();
+        assert!(stats.misses > 0);
+        assert!(stats.hits >= stats.misses, "second run must hit everywhere");
+        // The second run was served entirely from the shared cache.
+        assert_eq!(second.baskets_fetched, 0);
+        assert_eq!(second.fetched_bytes, 0);
     }
 
     #[test]

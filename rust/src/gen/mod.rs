@@ -32,6 +32,7 @@ use crate::Result;
 /// Generator configuration.
 #[derive(Debug, Clone)]
 pub struct GenConfig {
+    /// Events to generate.
     pub n_events: u64,
     /// Total branch target (paper: 1749). The schema builder pads
     /// per-collection user variables to reach it exactly.
@@ -40,7 +41,9 @@ pub struct GenConfig {
     pub n_hlt: usize,
     /// Events per basket (ROOT default cluster ~1000 events).
     pub basket_events: u32,
+    /// Basket compression codec.
     pub codec: Codec,
+    /// Master seed (per-branch streams derive from it).
     pub seed: u64,
 }
 
@@ -100,6 +103,7 @@ const EVENT_SCALARS: [(&str, DType); 12] = [
 /// A branch in the generated schema, with its value model.
 #[derive(Debug, Clone)]
 pub struct GenBranch {
+    /// The branch's schema entry.
     pub desc: BranchDesc,
     model: ValueModel,
 }

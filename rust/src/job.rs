@@ -6,13 +6,20 @@
 //! which links) plus the local context (storage root, client output
 //! directory, optional PJRT runtime) plus any custom pipeline stages:
 //!
-//! ```ignore
+//! ```no_run
+//! use skimroot::net::LinkModel;
+//! use skimroot::{Deployment, SkimJob, SkimQuery};
+//!
+//! let query = SkimQuery::new("events.troot", "skim.troot")
+//!     .keep(&["Muon_*", "MET_pt"])
+//!     .with_cut_str("nMuon >= 2 && max(Muon_pt) > 30")?;
 //! let report = SkimJob::new(query)
 //!     .storage("eval_data/storage")
 //!     .client_dir("eval_data/client")
 //!     .deployment(Deployment::skim_root(LinkModel::wan_1g()))
-//!     .stage(Hook::Group, &["eval"], Arc::new(MySampler))
 //!     .run()?;
+//! println!("pass {}/{}", report.result.n_pass, report.result.n_events);
+//! # Ok::<(), skimroot::Error>(())
 //! ```
 
 use crate::coordinator::{Coordinator, Deployment, JobReport};
@@ -32,6 +39,7 @@ pub struct SkimJob<'rt> {
     client_dir: PathBuf,
     runtime: Option<&'rt SkimRuntime>,
     stages: Vec<StageReg>,
+    basket_cache: Option<Arc<crate::serve::BasketCache>>,
 }
 
 impl<'rt> SkimJob<'rt> {
@@ -46,6 +54,7 @@ impl<'rt> SkimJob<'rt> {
             client_dir: PathBuf::from("skim_client"),
             runtime: None,
             stages: Vec::new(),
+            basket_cache: None,
         }
     }
 
@@ -80,10 +89,21 @@ impl<'rt> SkimJob<'rt> {
         self
     }
 
+    /// Share a server-side decompressed-basket cache with other jobs:
+    /// every engine this job spins up consults `cache` before its
+    /// fetch/decompress stages. The multi-tenant serving layer
+    /// ([`crate::serve`]) installs one cache into every job it runs.
+    pub fn basket_cache(mut self, cache: Arc<crate::serve::BasketCache>) -> Self {
+        self.basket_cache = Some(cache);
+        self
+    }
+
+    /// The query this job will run.
     pub fn query(&self) -> &SkimQuery {
         &self.query
     }
 
+    /// The topology this job will run under.
     pub fn deployment_ref(&self) -> &Deployment {
         &self.deployment
     }
@@ -101,7 +121,10 @@ impl<'rt> SkimJob<'rt> {
 
     /// Execute the job (with the deployment's WLCG-style retries).
     pub fn run(&self) -> Result<JobReport> {
-        let coord = Coordinator::new(&self.storage_root, &self.client_dir, self.runtime);
+        let mut coord = Coordinator::new(&self.storage_root, &self.client_dir, self.runtime);
+        if let Some(cache) = &self.basket_cache {
+            coord = coord.with_basket_cache(cache.clone());
+        }
         coord.run_job_with(&self.query, &self.deployment, &self.stages)
     }
 }

@@ -52,10 +52,25 @@
 //! * **Layer 1** — `python/compile/kernels/skim.py`: the Pallas
 //!   cut-evaluation kernel that the JAX graph calls.
 //!
+//! ## The serving layer
+//!
+//! Beyond one-shot jobs, [`serve`] turns the system into a long-lived
+//! **multi-tenant skim service**: a bounded-worker-pool job scheduler
+//! with admission control ([`serve::SkimScheduler`]) and a shared
+//! server-side decompressed-basket cache ([`serve::BasketCache`],
+//! LRU by bytes, single-flight) that every concurrent job's engine
+//! consults before fetching + decompressing — so many queries over one
+//! hot dataset share scans instead of repeating them. The wire
+//! protocol grows `SubmitQuery` / `JobStatus` / `FetchResult` frames,
+//! the DPU HTTP endpoint grows `POST /jobs` routes, and the CLI
+//! front-end is `skimroot serve`.
+//!
 //! Python never runs on the request path: the Rust binary loads the
 //! AOT artifacts through [`runtime`] (PJRT CPU client via the `xla`
 //! crate, behind the `pjrt` cargo feature; the default build uses the
 //! bit-identical scalar interpreter).
+
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod compress;
@@ -68,6 +83,7 @@ pub mod metrics;
 pub mod net;
 pub mod query;
 pub mod runtime;
+pub mod serve;
 pub mod troot;
 pub mod util;
 pub mod xrootd;
@@ -76,6 +92,7 @@ pub use coordinator::{Deployment, JobReport, Mode, Placement};
 pub use engine::{FilterStage, Hook, StageCtx, Verdict};
 pub use job::SkimJob;
 pub use query::{Expr, SkimQuery};
+pub use serve::{BasketCache, SkimScheduler, SkimService};
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
@@ -83,31 +100,43 @@ pub type Result<T> = std::result::Result<T, Error>;
 /// Crate-wide error type.
 #[derive(Debug, thiserror::Error)]
 pub enum Error {
+    /// Underlying I/O failure (file system, sockets).
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
+    /// Malformed troot file or metadata.
     #[error("format error: {0}")]
     Format(String),
+    /// Codec failure (bad frame, checksum mismatch, unknown codec).
     #[error("compression error: {0}")]
     Compress(String),
+    /// Wire-protocol violation (framing, opcodes, HTTP parsing).
     #[error("protocol error: {0}")]
     Protocol(String),
+    /// Invalid query (JSON schema, cut-string syntax, planning).
     #[error("query error: {0}")]
     Query(String),
+    /// Filtering-engine failure.
     #[error("engine error: {0}")]
     Engine(String),
+    /// PJRT runtime unavailable or kernel evaluation failure.
     #[error("runtime error: {0}")]
     Runtime(String),
+    /// Invalid configuration (CLI flags, deployments, admission
+    /// control rejections).
     #[error("config error: {0}")]
     Config(String),
 }
 
 impl Error {
+    /// Shorthand for [`Error::Format`].
     pub fn format(msg: impl Into<String>) -> Self {
         Error::Format(msg.into())
     }
+    /// Shorthand for [`Error::Protocol`].
     pub fn protocol(msg: impl Into<String>) -> Self {
         Error::Protocol(msg.into())
     }
+    /// Shorthand for [`Error::Query`].
     pub fn query(msg: impl Into<String>) -> Self {
         Error::Query(msg.into())
     }

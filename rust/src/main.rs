@@ -5,9 +5,12 @@
 //! * `gen`   — generate a synthetic NanoAOD-like dataset.
 //! * `skim`  — run one skim job under any deployment mode (simulated
 //!   testbed: virtual links + real compute).
-//! * `serve` — run the XRootD-like storage server over TCP.
+//! * `serve` — run the **multi-tenant skim service** over TCP: a
+//!   bounded worker pool with admission control and a shared
+//!   decompressed-basket cache, answering `SubmitQuery` / `JobStatus`
+//!   / `FetchResult` frames *and* plain XRootD-like file access.
 //! * `dpu`   — run the DPU HTTP service (separated-host mode) backed
-//!   by a storage directory.
+//!   by a storage directory; includes the async `/jobs` API.
 //! * `post`  — submit a JSON query to a running DPU over HTTP and save
 //!   the filtered file (what the paper does with `curl`).
 //! * `eval`  — reproduce the paper's figures (4a, 4b, 5a, 5b).
@@ -21,10 +24,10 @@ use skimroot::dpu::http::{self, post_skim, DpuHttpServer};
 use skimroot::dpu::DpuConfig;
 use skimroot::gen::{self, GenConfig};
 use skimroot::metrics::Node;
-use skimroot::net::{DiskModel, LinkModel};
+use skimroot::net::LinkModel;
 use skimroot::query::SkimQuery;
 use skimroot::runtime::SkimRuntime;
-use skimroot::xrootd::XrdServer;
+use skimroot::serve::{ServeConfig, SkimScheduler, SkimService};
 use skimroot::{Error, Result, SkimJob};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -72,9 +75,16 @@ COMMANDS:
          (--cut takes a TCut-style string, e.g.
           'nMuon >= 2 && (HLT_Mu50 || max(Muon_pt) > 100)';
           --explain prints the compiled plan without running)
-  serve  --root DIR --listen ADDR
+  serve  --root DIR --listen ADDR [--workers N] [--queue-depth N]
+         [--cache-mb N] [--mode client-legacy|client-opt|server-side|
+         skimroot] [--fan-out N] [--work-dir DIR]
+         (multi-tenant skim service: SubmitQuery/JobStatus/FetchResult
+          frames + plain file access; --cache-mb 0 disables the shared
+          basket cache)
   dpu    --root DIR --listen ADDR [--artifacts DIR] [--scratch DIR]
-         [--fan-out N]
+         [--fan-out N] [--workers N] [--queue-depth N] [--cache-mb N]
+         (POST /skim runs synchronously; POST /jobs + GET /jobs/<id>
+          [/result] is the async multi-tenant API)
   post   --dpu ADDR --query FILE --out FILE
   eval   --dir DIR [--fig 4a|4b|5a|5b|all] [--scale small|standard]
          [--artifacts DIR]"
@@ -205,16 +215,40 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Build a [`ServeConfig`] from the shared `serve`/`dpu` flags.
+fn serve_config(args: &Args, root: &str, default_mode: &str) -> Result<ServeConfig> {
+    let mut cfg = ServeConfig::new(root);
+    cfg.workers = args.parse_num("workers", cfg.workers)?;
+    cfg.queue_depth = args.parse_num("queue-depth", cfg.queue_depth)?;
+    cfg.cache_bytes = args.parse_num("cache-mb", cfg.cache_bytes / 1_000_000)? * 1_000_000;
+    if let Some(dir) = args.get("work-dir") {
+        cfg.work_dir = dir.into();
+    }
+    // The real TCP/HTTP transfer is the output hop: keep the link
+    // local so no virtual output-transfer time is charged.
+    let mode = Mode::parse(args.get_or("mode", default_mode))?;
+    cfg.deployment = Deployment::new(mode, LinkModel::local());
+    cfg.deployment.fan_out = args.parse_num("fan-out", 1usize)?;
+    Ok(cfg)
+}
+
 fn cmd_serve(raw: Vec<String>) -> Result<()> {
     let args = Args::parse(raw, &[])?;
     let root = args.require("root")?;
     let listen = args.require("listen")?;
-    let server = XrdServer::new(root, DiskModel::ideal());
+    let cfg = serve_config(&args, root, "server-side")?;
+    let (workers, depth, cache) = (cfg.workers, cfg.queue_depth, cfg.cache_bytes);
+    let service = SkimService::new(cfg)?;
     let listener = std::net::TcpListener::bind(listen)
         .map_err(|e| Error::Config(format!("bind {listen}: {e}")))?;
-    println!("xrootd-like server on {listen}, root={root} (ctrl-c to stop)");
+    println!(
+        "multi-tenant skim service on {listen}, root={root} \
+         ({workers} workers, queue depth {depth}, {} basket cache; ctrl-c to stop)",
+        skimroot::util::human_bytes(cache),
+    );
     let stop = Arc::new(AtomicBool::new(false));
-    server.serve_tcp(listener, stop).join().ok();
+    service.serve_tcp(listener, stop).join().ok();
+    service.shutdown();
     Ok(())
 }
 
@@ -243,9 +277,15 @@ fn cmd_dpu(raw: Vec<String>) -> Result<()> {
         .link(LinkModel::local())
         .fan_out(fan_out)
         .build()?;
-    let server = DpuHttpServer::new(http::storage_handler(root, scratch, runtime, deployment));
+    // The async `/jobs` API runs through the multi-tenant scheduler
+    // (shared basket cache, admission control); the interpreter
+    // evaluates those jobs — bit-identical to the kernel path.
+    let sched = SkimScheduler::new(serve_config(&args, &root, "skimroot")?)?;
+    let server = DpuHttpServer::new(http::storage_handler(root, scratch, runtime, deployment))
+        .with_scheduler(sched.clone());
     let stop = Arc::new(AtomicBool::new(false));
     server.serve(listener, stop).join().ok();
+    sched.shutdown();
     Ok(())
 }
 

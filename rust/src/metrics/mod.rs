@@ -43,10 +43,12 @@ pub enum Stage {
     OutputWrite,
     /// Shipping the filtered file to the client.
     OutputTransfer,
+    /// Everything else (resubmission overhead, scheduling delay).
     Other,
 }
 
 impl Stage {
+    /// Report label for this stage.
     pub fn name(self) -> &'static str {
         match self {
             Stage::OpenMeta => "open/meta",
@@ -60,6 +62,7 @@ impl Stage {
         }
     }
 
+    /// Every stage, in breakdown-row order.
     pub const ALL: [Stage; 8] = [
         Stage::OpenMeta,
         Stage::BasketFetch,
@@ -75,8 +78,11 @@ impl Stage {
 /// Which machine does the work / pays the CPU time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Node {
+    /// The requesting analysis client.
     Client,
+    /// The storage server (data-transfer node).
     Server,
+    /// The DPU's ARM cores.
     Dpu,
     /// The DPU's hardware decompression engine: busy time is tracked but
     /// does **not** count as ARM-core CPU (the paper's §4 point that the
@@ -85,6 +91,7 @@ pub enum Node {
 }
 
 impl Node {
+    /// Report label for this node.
     pub fn name(self) -> &'static str {
         match self {
             Node::Client => "client",
@@ -121,6 +128,7 @@ impl Default for Timeline {
 }
 
 impl Timeline {
+    /// A fresh, empty timeline.
     pub fn new() -> Self {
         Timeline {
             inner: Arc::new(Mutex::new(Tables::default())),
@@ -238,11 +246,13 @@ impl Timeline {
         (self.node_busy(node) / total).min(1.0)
     }
 
+    /// Bytes recorded against `stage`.
     pub fn bytes(&self, stage: Stage) -> u64 {
         let tab = self.inner.lock().unwrap();
         tab.bytes.get(&stage).copied().unwrap_or(0)
     }
 
+    /// Value of the named counter (0 when never bumped).
     pub fn counter(&self, name: &str) -> u64 {
         let tab = self.inner.lock().unwrap();
         tab.counters.get(name).copied().unwrap_or(0)
@@ -254,7 +264,10 @@ impl Timeline {
         tab.counters.iter().map(|(k, v)| (k.to_string(), *v)).collect()
     }
 
-    /// A compact per-stage report (used by examples and benches).
+    /// A compact per-stage report (used by the CLI, examples and
+    /// benches). Includes every named counter — cache hit/miss rates,
+    /// round-trips, served bytes — so effectiveness numbers surface in
+    /// the end-of-job output rather than staying write-only.
     pub fn report(&self) -> StageReport {
         let mut rows = Vec::new();
         for stage in Stage::ALL {
@@ -263,15 +276,19 @@ impl Timeline {
                 rows.push((stage, total, self.bytes(stage)));
             }
         }
-        StageReport { rows, elapsed: self.elapsed() }
+        StageReport { rows, elapsed: self.elapsed(), counters: self.counters() }
     }
 }
 
 /// Rendered stage breakdown.
 #[derive(Debug, Clone)]
 pub struct StageReport {
+    /// `(stage, seconds, bytes)` rows, zero rows omitted.
     pub rows: Vec<(Stage, f64, u64)>,
+    /// End-to-end latency (Σ over stages), seconds.
     pub elapsed: f64,
+    /// Named counters, sorted by name (empty entries omitted).
+    pub counters: Vec<(String, u64)>,
 }
 
 impl std::fmt::Display for StageReport {
@@ -286,7 +303,14 @@ impl std::fmt::Display for StageReport {
                 if *bytes > 0 { crate::util::human_bytes(*bytes) } else { "-".into() }
             )?;
         }
-        write!(f, "{:<16} {:>12}", "TOTAL", crate::util::human_secs(self.elapsed))
+        write!(f, "{:<16} {:>12}", "TOTAL", crate::util::human_secs(self.elapsed))?;
+        if !self.counters.is_empty() {
+            write!(f, "\n\ncounters:")?;
+            for (name, value) in &self.counters {
+                write!(f, "\n  {name:<24} {value}")?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -345,6 +369,13 @@ mod tests {
         let s = tl.report().to_string();
         assert!(s.contains("basket fetch"));
         assert!(s.contains("TOTAL"));
+        assert!(!s.contains("counters"), "no counters section when empty");
+        // Named counters surface in the rendered report.
+        tl.count("basket_cache_hits", 12);
+        let s = tl.report().to_string();
+        assert!(s.contains("counters"));
+        assert!(s.contains("basket_cache_hits"));
+        assert!(s.contains("12"));
     }
 
     #[test]

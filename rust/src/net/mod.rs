@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 pub struct LinkModel {
     /// Name for reports ("1 Gbps WAN").
     pub label: &'static str,
+    /// Link bandwidth in bytes per second.
     pub bandwidth_bps: f64,
     /// Round-trip time charged once per request/response exchange.
     pub rtt_s: f64,
@@ -110,6 +111,7 @@ impl LinkModel {
 /// a WLCG disk pool).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DiskModel {
+    /// Name for reports ("disk pool", "nvme").
     pub label: &'static str,
     /// Cost of one random positioning (seek + rotational + request).
     pub seek_s: f64,
@@ -211,6 +213,7 @@ pub struct ModeledStore<R> {
 }
 
 impl<R> ModeledStore<R> {
+    /// Wrap `inner`, charging `disk` time to `timeline` per access.
     pub fn new(inner: R, disk: DiskModel, timeline: Timeline) -> Self {
         ModeledStore {
             inner,
@@ -275,11 +278,13 @@ pub struct ThrottledStream<S> {
 }
 
 impl<S> ThrottledStream<S> {
+    /// Pace `inner` at `bytes_per_sec` (infinite = no pacing).
     pub fn new(inner: S, bytes_per_sec: f64) -> Self {
         let burst = (bytes_per_sec / 20.0).max(16.0 * 1024.0);
         ThrottledStream { inner, bytes_per_sec, tokens: burst, last: Instant::now(), burst }
     }
 
+    /// The wrapped stream.
     pub fn get_ref(&self) -> &S {
         &self.inner
     }

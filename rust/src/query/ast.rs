@@ -57,17 +57,26 @@ use std::collections::BTreeMap;
 /// `|eta| < 2.4` acceptance cut).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CmpOp {
+    /// `>`.
     Gt,
+    /// `>=`.
     Ge,
+    /// `<`.
     Lt,
+    /// `<=`.
     Le,
+    /// `==`.
     Eq,
+    /// `!=`.
     Ne,
+    /// `|x| <` (absolute-value less-than).
     AbsLt,
+    /// `|x| >` (absolute-value greater-than).
     AbsGt,
 }
 
 impl CmpOp {
+    /// Parse the JSON-payload operator spelling (`">="`, `"|<|"`...).
     pub fn parse(s: &str) -> Result<CmpOp> {
         Ok(match s {
             ">" => CmpOp::Gt,
@@ -82,6 +91,7 @@ impl CmpOp {
         })
     }
 
+    /// The canonical spelling (inverse of [`CmpOp::parse`]).
     pub fn symbol(self) -> &'static str {
         match self {
             CmpOp::Gt => ">",
@@ -144,16 +154,22 @@ impl CmpOp {
 /// Scalar-branch cut (preselection stage).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScalarCut {
+    /// Scalar branch to test.
     pub branch: String,
+    /// Comparison operator.
     pub op: CmpOp,
+    /// Threshold.
     pub value: f64,
 }
 
 /// Per-object cut over one jagged variable.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ObjectCut {
+    /// Jagged branch to test (e.g. `Electron_pt`).
     pub var: String,
+    /// Comparison operator.
     pub op: CmpOp,
+    /// Threshold.
     pub value: f64,
 }
 
@@ -161,8 +177,11 @@ pub struct ObjectCut {
 /// objects of `collection` satisfy **all** `cuts`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ObjectSelection {
+    /// Collection prefix (`Electron`, `Jet`, ...).
     pub collection: String,
+    /// Per-object cuts, all of which must hold.
     pub cuts: Vec<ObjectCut>,
+    /// Minimum number of surviving objects.
     pub min_count: u32,
 }
 
@@ -170,14 +189,18 @@ pub struct ObjectSelection {
 /// `object_pt_min` must be at least `min`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HtCut {
+    /// The jet-pT branch summed (usually `Jet_pt`).
     pub jet_pt: String,
+    /// Per-object pT threshold for inclusion in the sum.
     pub object_pt_min: f64,
+    /// Minimum HT for the event to pass.
     pub min: f64,
 }
 
 /// Event-level selection: composite variables + trigger OR.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct EventSelection {
+    /// Optional HT requirement.
     pub ht: Option<HtCut>,
     /// Event passes if **any** listed trigger flag is set. Empty = no
     /// trigger requirement.
@@ -187,8 +210,11 @@ pub struct EventSelection {
 /// The full multi-stage selection.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct Selection {
+    /// Cheap scalar cuts, evaluated first.
     pub preselection: Vec<ScalarCut>,
+    /// Per-collection object groups.
     pub objects: Vec<ObjectSelection>,
+    /// Composite event-level stage (HT, trigger OR).
     pub event: EventSelection,
 }
 
@@ -246,6 +272,7 @@ impl Selection {
         }
     }
 
+    /// True when no stage carries any cut (copy-all).
     pub fn is_empty(&self) -> bool {
         self.preselection.is_empty()
             && self.objects.is_empty()
@@ -266,6 +293,8 @@ pub struct SkimQuery {
     /// Disable the curated wildcard mapping (§3.1): expand patterns
     /// against the *full* schema.
     pub force_all: bool,
+    /// The structured Figure-2c multi-stage selection (sugar over the
+    /// IR since the redesign).
     pub selection: Selection,
     /// Free-form IR cut, ANDed with the structured selection. Carried
     /// in the JSON payload as a TCut-style `"cut"` string.
@@ -321,6 +350,18 @@ impl SkimQuery {
     }
 
     /// AND a TCut-style cut string onto the query.
+    ///
+    /// ```
+    /// use skimroot::SkimQuery;
+    ///
+    /// let q = SkimQuery::new("in.troot", "out.troot")
+    ///     .with_cut_str("MET_pt > 100 || sum(Jet_pt[Jet_pt > 30]) > 250")
+    ///     .unwrap();
+    /// assert_eq!(
+    ///     q.combined_cut().unwrap().to_string(),
+    ///     "((MET_pt > 100) || (sum(Jet_pt[(Jet_pt > 30)]) > 250))"
+    /// );
+    /// ```
     pub fn with_cut_str(self, text: &str) -> Result<Self> {
         Ok(self.with_cut(parse::parse_cut(text)?))
     }
@@ -355,6 +396,8 @@ impl SkimQuery {
         Self::from_json(&Json::parse(text)?)
     }
 
+    /// Validate an already-parsed JSON payload (errors carry field
+    /// paths, e.g. `selection.objects[0].cuts[1].op`).
     pub fn from_json(v: &Json) -> Result<SkimQuery> {
         let input = str_at(v, "", "input")?;
         if input.is_empty() {

@@ -55,19 +55,33 @@ pub enum UnaryOp {
 /// (`min(a, b)`); the single-argument aggregations live in [`AggOp`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BinOp {
+    /// `+`.
     Add,
+    /// `-`.
     Sub,
+    /// `*`.
     Mul,
+    /// `/`.
     Div,
+    /// `<`.
     Lt,
+    /// `<=`.
     Le,
+    /// `>`.
     Gt,
+    /// `>=`.
     Ge,
+    /// `==`.
     Eq,
+    /// `!=`.
     Ne,
+    /// `&&` (TCut numerics: nonzero is true).
     And,
+    /// `||`.
     Or,
+    /// Two-argument `min(a, b)`.
     Min,
+    /// Two-argument `max(a, b)`.
     Max,
 }
 
@@ -114,6 +128,7 @@ pub enum AggOp {
 }
 
 impl AggOp {
+    /// The cut-string spelling of the aggregation.
     pub fn name(self) -> &'static str {
         match self {
             AggOp::Count => "count",
@@ -135,23 +150,30 @@ pub enum Expr {
     /// Branch reference; resolved against the file schema at plan time
     /// (scalar branches are event-shaped, jagged branches object-shaped).
     Branch(String),
+    /// Unary application (`-x`, `!x`, `abs(x)`).
     Unary(UnaryOp, Box<Expr>),
+    /// Binary application (arithmetic, comparison, boolean, min/max).
     Binary(BinOp, Box<Expr>, Box<Expr>),
     /// Aggregation: `op(arg)` or `op(arg[pred])`. For `Count`/`Any`/
     /// `All` the argument *is* the predicate.
     Agg {
+        /// Which aggregation.
         op: AggOp,
+        /// The per-object argument (the predicate for count/any/all).
         arg: Box<Expr>,
+        /// Optional object-selection predicate (`arg[pred]`).
         pred: Option<Box<Expr>>,
     },
 }
 
 #[allow(clippy::should_implement_trait)]
 impl Expr {
+    /// Numeric literal.
     pub fn num(v: f64) -> Expr {
         Expr::Num(v)
     }
 
+    /// Branch reference (also available via `Expr::from("name")`).
     pub fn branch(name: impl Into<String>) -> Expr {
         Expr::Branch(name.into())
     }
@@ -162,42 +184,51 @@ impl Expr {
 
     // ---- comparisons -------------------------------------------------
 
+    /// `self > rhs`.
     pub fn gt(self, rhs: impl Into<Expr>) -> Expr {
         self.bin(BinOp::Gt, rhs)
     }
 
+    /// `self >= rhs`.
     pub fn ge(self, rhs: impl Into<Expr>) -> Expr {
         self.bin(BinOp::Ge, rhs)
     }
 
+    /// `self < rhs`.
     pub fn lt(self, rhs: impl Into<Expr>) -> Expr {
         self.bin(BinOp::Lt, rhs)
     }
 
+    /// `self <= rhs`.
     pub fn le(self, rhs: impl Into<Expr>) -> Expr {
         self.bin(BinOp::Le, rhs)
     }
 
+    /// `self == rhs`.
     pub fn eq(self, rhs: impl Into<Expr>) -> Expr {
         self.bin(BinOp::Eq, rhs)
     }
 
+    /// `self != rhs`.
     pub fn ne(self, rhs: impl Into<Expr>) -> Expr {
         self.bin(BinOp::Ne, rhs)
     }
 
     // ---- boolean structure -------------------------------------------
 
+    /// `self && rhs` (nonzero is true).
     pub fn and(self, rhs: impl Into<Expr>) -> Expr {
         self.bin(BinOp::And, rhs)
     }
 
+    /// `self || rhs`.
     pub fn or(self, rhs: impl Into<Expr>) -> Expr {
         self.bin(BinOp::Or, rhs)
     }
 
     // ---- functions ---------------------------------------------------
 
+    /// `abs(self)` — the `|eta| < 2.4` idiom.
     pub fn abs(self) -> Expr {
         Expr::Unary(UnaryOp::Abs, Box::new(self))
     }

@@ -14,15 +14,22 @@ use std::fmt::Write as _;
 /// stable serialization (queries are hashed into job ids).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (kept as f64).
     Num(f64),
+    /// A string (escapes already decoded).
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (rejects trailing characters).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -36,6 +43,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// The object map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -43,6 +51,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -50,6 +59,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -57,6 +67,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -64,6 +75,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -82,12 +94,14 @@ impl Json {
             .ok_or_else(|| Error::query(format!("missing required field '{key}'")))
     }
 
+    /// Required string-typed field (path-aware error).
     pub fn str_field(&self, key: &str) -> Result<&str> {
         self.require(key)?
             .as_str()
             .ok_or_else(|| Error::query(format!("field '{key}' must be a string")))
     }
 
+    /// Required number-typed field (path-aware error).
     pub fn num_field(&self, key: &str) -> Result<f64> {
         self.require(key)?
             .as_f64()

@@ -47,29 +47,41 @@ impl BranchId {
     }
 }
 
-/// Kernel capacity (must match `python/compile/kernels/skim.py`).
+/// Kernel capacity (must match `python/compile/kernels/skim.py`):
+/// maximum jagged columns.
 pub const KERNEL_MAX_OBJ_COLS: usize = 12;
+/// Kernel capacity: maximum scalar columns.
 pub const KERNEL_MAX_SCALAR_COLS: usize = 16;
+/// Kernel capacity: maximum per-object cuts across all groups.
 pub const KERNEL_MAX_OBJ_CUTS: usize = 12;
+/// Kernel capacity: maximum preselection scalar cuts.
 pub const KERNEL_MAX_SCALAR_CUTS: usize = 6;
+/// Kernel capacity: maximum object groups.
 pub const KERNEL_MAX_GROUPS: usize = 4;
 
 /// One compiled per-object cut: `col` indexes [`CutProgram::obj_columns`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct ObjCutParam {
+    /// Index into [`CutProgram::obj_columns`].
     pub col: usize,
     /// 0 `>` · 1 `>=` · 2 `<` · 3 `<=` · 4 `==` · 5 `!=`
     pub op: u8,
+    /// Compare `|x|` instead of `x`.
     pub abs: bool,
+    /// Threshold.
     pub value: f32,
 }
 
 /// One compiled scalar cut: `col` indexes [`CutProgram::scalar_columns`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScalarCutParam {
+    /// Index into [`CutProgram::scalar_columns`].
     pub col: usize,
+    /// Comparison opcode (same coding as [`ObjCutParam::op`]).
     pub op: u8,
+    /// Compare `|x|` instead of `x`.
     pub abs: bool,
+    /// Threshold.
     pub value: f32,
 }
 
@@ -79,8 +91,11 @@ pub struct ScalarCutParam {
 /// same collection, hence the same multiplicity.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ObjGroup {
+    /// Collection prefix (for multiplicity lookup and reports).
     pub collection: String,
+    /// Indices into [`CutProgram::obj_cuts`] this group requires.
     pub cut_range: std::ops::Range<usize>,
+    /// Minimum surviving objects.
     pub min_count: u32,
 }
 
@@ -89,7 +104,9 @@ pub struct ObjGroup {
 pub struct HtParam {
     /// Index into `obj_columns` of the jet-pT column.
     pub col: usize,
+    /// Per-object pT threshold for inclusion in the sum.
     pub object_pt_min: f32,
+    /// Minimum HT for the event to pass.
     pub min_ht: f32,
 }
 
@@ -100,20 +117,27 @@ pub struct HtParam {
 /// fixed-function stages cannot).
 #[derive(Debug, Clone, PartialEq)]
 pub enum CExpr {
+    /// Numeric literal.
     Num(f32),
     /// Index into [`CutProgram::scalar_columns`].
     Scalar(usize),
     /// Index into [`CutProgram::obj_columns`].
     Jagged(usize),
+    /// Unary application.
     Unary(UnaryOp, Box<CExpr>),
+    /// Binary application.
     Binary(BinOp, Box<CExpr>, Box<CExpr>),
     /// Aggregation over object slots. `nobj` is the obj-column index
     /// whose per-event multiplicity bounds the valid slots (the first
     /// jagged column the aggregation references).
     Agg {
+        /// Which aggregation.
         op: AggOp,
+        /// Obj-column index bounding the valid slots.
         nobj: usize,
+        /// The per-object argument.
         arg: Box<CExpr>,
+        /// Optional object-selection predicate.
         pred: Option<Box<CExpr>>,
     },
 }
@@ -125,10 +149,13 @@ pub struct CutProgram {
     pub obj_columns: Vec<String>,
     /// Scalar columns (f32-convertible) the program reads.
     pub scalar_columns: Vec<String>,
+    /// Per-object cuts, grouped by [`CutProgram::groups`].
     pub obj_cuts: Vec<ObjCutParam>,
+    /// Object-level requirements over `obj_cuts` ranges.
     pub groups: Vec<ObjGroup>,
     /// Preselection scalar cuts (ANDed).
     pub scalar_cuts: Vec<ScalarCutParam>,
+    /// Optional HT requirement.
     pub ht: Option<HtParam>,
     /// Indices into `scalar_columns` of trigger flags (ORed; empty =
     /// no trigger requirement).
@@ -229,6 +256,7 @@ pub struct SkimPlan {
     /// Output branches *not* needed for filtering — fetched in phase 2,
     /// only for events that passed.
     pub output_only_branches: Vec<String>,
+    /// The compiled numeric cut program.
     pub program: CutProgram,
     /// Interned source of each program jagged column:
     /// `obj_col_branch[c]` is the [`BranchId`] (index into
@@ -238,6 +266,7 @@ pub struct SkimPlan {
     /// Interned source of each program scalar column (see
     /// [`SkimPlan::obj_col_branch`]).
     pub scalar_col_branch: Vec<BranchId>,
+    /// Planner warnings (unmatched patterns, curated-set fallbacks).
     pub warnings: Vec<String>,
 }
 

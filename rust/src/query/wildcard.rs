@@ -9,7 +9,8 @@
 
 /// The curated trigger set: the paper's "fewer than 23 specific
 /// triggers" that CMS analyses actually read. (Representative Run-3
-//  single-lepton / MET / jet paths.)
+/// single-lepton / MET / jet paths.) This is what a broad `HLT_*`
+/// wildcard maps to unless `force_all` is set.
 pub const CURATED_TRIGGERS: [&str; 23] = [
     "HLT_IsoMu24",
     "HLT_IsoMu27",

@@ -27,22 +27,33 @@ use crate::{Error, Result};
 /// `crate::query::plan` constants for programs to pack).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Capacities {
+    /// Jagged (object) columns.
     pub c: usize,
+    /// Scalar columns.
     pub s: usize,
+    /// Per-object cut slots.
     pub k_obj: usize,
+    /// Scalar cut slots.
     pub k_sc: usize,
+    /// Object-group slots.
     pub g: usize,
+    /// Funnel stages (4: pre, object, HT, trigger).
     pub n_stages: usize,
 }
 
 /// Packed cut-program parameter bank (f32 rows as the kernel expects).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CutParams {
-    pub obj_cuts: Vec<f32>,    // [K_OBJ * 5]
-    pub groups: Vec<f32>,      // [G * 4]
-    pub scalar_cuts: Vec<f32>, // [K_SC * 5]
-    pub ht: Vec<f32>,          // [4]
-    pub trig: Vec<f32>,        // [1 + S]
+    /// Object-cut bank, `[K_OBJ * 5]`.
+    pub obj_cuts: Vec<f32>,
+    /// Object-group bank, `[G * 4]`.
+    pub groups: Vec<f32>,
+    /// Scalar-cut bank, `[K_SC * 5]`.
+    pub scalar_cuts: Vec<f32>,
+    /// HT unit parameters, `[4]`.
+    pub ht: Vec<f32>,
+    /// Trigger mask, `[1 + S]` (leading enable flag).
+    pub trig: Vec<f32>,
 }
 
 impl CutParams {
@@ -105,11 +116,14 @@ pub struct Batch {
     pub scalars: Vec<f32>,
     /// Events actually populated (≤ B); the rest is padding.
     pub n_valid: usize,
+    /// Batch capacity in events.
     pub b: usize,
+    /// Object-slot capacity per event.
     pub m: usize,
 }
 
 impl Batch {
+    /// A zero-filled batch for the given capacities and shape.
     pub fn zeroed(caps: &Capacities, b: usize, m: usize) -> Batch {
         Batch {
             cols: vec![0.0; caps.c * b * m],
@@ -155,8 +169,11 @@ pub use pjrt::{SkimRuntime, Variant};
 /// One compiled batch-shape variant (stub: never instantiated).
 #[cfg(not(feature = "pjrt"))]
 pub struct Variant {
+    /// Variant name from the manifest.
     pub name: String,
+    /// Batch capacity in events.
     pub b: usize,
+    /// Object-slot capacity per event.
     pub m: usize,
 }
 
@@ -164,6 +181,7 @@ pub struct Variant {
 /// feature; callers fall back to the interpreter).
 #[cfg(not(feature = "pjrt"))]
 pub struct SkimRuntime {
+    /// Kernel capacities from the manifest.
     pub caps: Capacities,
     variants: Vec<Variant>,
 }
@@ -179,6 +197,7 @@ impl SkimRuntime {
         )))
     }
 
+    /// `(name, B, M)` of every compiled variant.
     pub fn variants(&self) -> impl Iterator<Item = (&str, usize, usize)> {
         self.variants.iter().map(|v| (v.name.as_str(), v.b, v.m))
     }
@@ -192,6 +211,7 @@ impl SkimRuntime {
             .unwrap_or_else(|| self.variants.last().expect("stub runtime has no variants"))
     }
 
+    /// Variant lookup by name (always errors in stub builds).
     pub fn variant(&self, name: &str) -> Result<&Variant> {
         Err(Error::Runtime(format!(
             "no such variant '{name}': built without the `pjrt` feature"

@@ -1,0 +1,402 @@
+//! The shared server-side **decompressed-basket cache**.
+//!
+//! A long-lived skim service answers many queries over the same hot
+//! datasets. Without sharing, every job re-reads and re-decompresses
+//! every criteria basket it touches — the redundancy the CMS
+//! Spark-based reduction stack and the real-time HEP query-service
+//! vision both exist to eliminate. [`BasketCache`] removes it at the
+//! natural unit of work: one *decompressed* basket, keyed by
+//! `(file, branch, basket index)`.
+//!
+//! Properties:
+//!
+//! * **LRU by bytes** — entries are evicted least-recently-used-first
+//!   once the decompressed working set exceeds the configured
+//!   capacity. An entry is never evicted by its own insertion (its
+//!   single-flight waiters must observe it first), so a basket larger
+//!   than the whole capacity is served normally and becomes the LRU
+//!   victim of the next insertion.
+//! * **Single-flight** — when N concurrent jobs touch the same cold
+//!   basket, exactly one performs the fetch + decompress; the other
+//!   N−1 block on the in-flight entry and then score *hits*. A failed
+//!   load wakes the waiters, and the next caller retries the load.
+//! * **First-toucher accounting** — the job that performs the load
+//!   charges its own [`crate::metrics::Timeline`] for the transport
+//!   and decompression; jobs that hit charge nothing. See
+//!   `ARCHITECTURE.md` § "Serving layer" for how this composes with
+//!   virtual-time latencies.
+//!
+//! The engine consults the cache in its `fetch` stage (and in the
+//! phase-2 selective fetch) when [`crate::engine::EngineOpts`] carries
+//! one — see `engine/pipeline.rs`. The multi-tenant scheduler
+//! ([`crate::serve::sched::SkimScheduler`]) installs a single cache
+//! into every job it runs.
+
+use crate::Result;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Cache key: one basket of one branch of one catalog file.
+///
+/// The components are `Arc<str>` so per-job key construction is two
+/// refcount bumps, not two string clones (jobs intern their file and
+/// phase-1 branch names once at start).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BasketKey {
+    /// Catalog-relative path of the input file.
+    pub file: Arc<str>,
+    /// Branch name.
+    pub branch: Arc<str>,
+    /// Basket index within the branch.
+    pub basket: u32,
+}
+
+/// Effectiveness counters for one [`BasketCache`] (lifetime totals).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BasketCacheStats {
+    /// Lookups served from memory (including single-flight waiters).
+    pub hits: u64,
+    /// Lookups that had to fetch + decompress.
+    pub misses: u64,
+    /// Entries evicted to respect the byte capacity.
+    pub evictions: u64,
+    /// Decompressed bytes inserted over the cache's lifetime.
+    pub inserted_bytes: u64,
+    /// Decompressed bytes served from memory (re-reads avoided).
+    pub hit_bytes: u64,
+    /// Decompressed bytes currently resident.
+    pub resident_bytes: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+}
+
+impl BasketCacheStats {
+    /// Hits as a fraction of all lookups (0 when the cache is unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+enum Slot {
+    /// Decompressed bytes plus the recency sequence the entry is filed
+    /// under in the LRU index.
+    Ready { data: Arc<Vec<u8>>, seq: u64 },
+    /// A load is in flight; waiters block on the condvar.
+    Pending,
+}
+
+#[derive(Default)]
+struct CacheState {
+    map: HashMap<BasketKey, Slot>,
+    /// Recency sequence → key; the smallest sequence is the LRU victim.
+    recency: BTreeMap<u64, BasketKey>,
+    next_seq: u64,
+    resident_bytes: u64,
+    stats: BasketCacheStats,
+}
+
+/// Shared decompressed-basket cache (see the module docs).
+///
+/// `Clone`-free by design: share it as `Arc<BasketCache>` (that is
+/// what [`crate::engine::EngineOpts::basket_cache`] and the scheduler
+/// take).
+///
+/// ```
+/// use skimroot::serve::{BasketCache, BasketKey};
+/// use std::sync::Arc;
+///
+/// let cache = BasketCache::new(1 << 20);
+/// let key = BasketKey { file: Arc::from("f.troot"), branch: Arc::from("Jet_pt"), basket: 0 };
+/// let (bytes, hit) = cache.get_or_load(key.clone(), || Ok(vec![1, 2, 3])).unwrap();
+/// assert!(!hit);
+/// let (again, hit) = cache.get_or_load(key, || unreachable!("cached")).unwrap();
+/// assert!(hit);
+/// assert_eq!(again, bytes);
+/// ```
+pub struct BasketCache {
+    capacity: u64,
+    state: Mutex<CacheState>,
+    cv: Condvar,
+}
+
+impl std::fmt::Debug for BasketCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let stats = self.stats();
+        f.debug_struct("BasketCache")
+            .field("capacity", &self.capacity)
+            .field("stats", &stats)
+            .finish()
+    }
+}
+
+impl BasketCache {
+    /// A cache holding at most `capacity` decompressed bytes.
+    pub fn new(capacity: u64) -> Self {
+        BasketCache {
+            capacity: capacity.max(1),
+            state: Mutex::new(CacheState::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Configured capacity in decompressed bytes.
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Snapshot of the lifetime counters plus current residency.
+    pub fn stats(&self) -> BasketCacheStats {
+        let st = self.state.lock().unwrap();
+        let mut stats = st.stats;
+        stats.resident_bytes = st.resident_bytes;
+        stats.entries = st.recency.len() as u64;
+        stats
+    }
+
+    /// Look up `key`, or run `load` (fetch + decompress) to fill it.
+    ///
+    /// Returns the decompressed bytes and whether the lookup was a hit.
+    /// Single-flight: concurrent callers of a cold key block until the
+    /// one in-flight `load` completes, then score hits on its result.
+    /// If the load fails the error propagates to the loading caller and
+    /// one blocked waiter retries the load.
+    pub fn get_or_load<F>(&self, key: BasketKey, load: F) -> Result<(Arc<Vec<u8>>, bool)>
+    where
+        F: FnOnce() -> Result<Vec<u8>>,
+    {
+        enum Action {
+            Hit(Arc<Vec<u8>>, u64),
+            Wait,
+            Load,
+        }
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let action = match st.map.get(&key) {
+                Some(Slot::Ready { data, seq }) => Action::Hit(data.clone(), *seq),
+                Some(Slot::Pending) => Action::Wait,
+                None => Action::Load,
+            };
+            match action {
+                Action::Hit(data, old_seq) => {
+                    let new_seq = st.next_seq;
+                    st.next_seq += 1;
+                    st.recency.remove(&old_seq);
+                    st.recency.insert(new_seq, key.clone());
+                    if let Some(Slot::Ready { seq, .. }) = st.map.get_mut(&key) {
+                        *seq = new_seq;
+                    }
+                    st.stats.hits += 1;
+                    st.stats.hit_bytes += data.len() as u64;
+                    return Ok((data, true));
+                }
+                Action::Wait => {
+                    st = self.cv.wait(st).unwrap();
+                }
+                Action::Load => break,
+            }
+        }
+        st.map.insert(key.clone(), Slot::Pending);
+        st.stats.misses += 1;
+        drop(st);
+
+        // Unwind guard: jobs are panic-isolated by the scheduler, so a
+        // panic inside `load` must not strand the Pending marker (every
+        // future toucher of this key would block forever). The guard
+        // removes the marker and wakes waiters unless defused by a
+        // normal return.
+        struct PendingGuard<'a> {
+            cache: &'a BasketCache,
+            key: Option<BasketKey>,
+        }
+        impl Drop for PendingGuard<'_> {
+            fn drop(&mut self) {
+                if let Some(key) = self.key.take() {
+                    let mut st = self.cache.state.lock().unwrap();
+                    st.map.remove(&key);
+                    self.cache.cv.notify_all();
+                }
+            }
+        }
+        let mut guard = PendingGuard { cache: self, key: Some(key.clone()) };
+        let result = load();
+        guard.key = None; // load returned without unwinding
+        drop(guard);
+        let mut st = self.state.lock().unwrap();
+        match result {
+            Ok(bytes) => {
+                let data = Arc::new(bytes);
+                let seq = st.next_seq;
+                st.next_seq += 1;
+                st.resident_bytes += data.len() as u64;
+                st.stats.inserted_bytes += data.len() as u64;
+                st.map.insert(key.clone(), Slot::Ready { data: data.clone(), seq });
+                st.recency.insert(seq, key);
+                while st.resident_bytes > self.capacity {
+                    let victim_seq = match st.recency.keys().next() {
+                        Some(&s) => s,
+                        None => break,
+                    };
+                    // Never evict the entry inserted by *this* call:
+                    // its single-flight waiters have not observed it
+                    // yet (evicting here would serialize them into N
+                    // sequential reloads). An over-capacity entry is
+                    // the LRU victim of the next insertion instead.
+                    if victim_seq == seq {
+                        break;
+                    }
+                    let victim = st.recency.remove(&victim_seq).expect("victim present");
+                    if let Some(Slot::Ready { data, .. }) = st.map.remove(&victim) {
+                        st.resident_bytes -= data.len() as u64;
+                    }
+                    st.stats.evictions += 1;
+                }
+                self.cv.notify_all();
+                Ok((data, false))
+            }
+            Err(e) => {
+                // Remove the pending marker so a waiter can retry.
+                st.map.remove(&key);
+                self.cv.notify_all();
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn key(branch: &str, basket: u32) -> BasketKey {
+        BasketKey { file: Arc::from("f.troot"), branch: Arc::from(branch), basket }
+    }
+
+    #[test]
+    fn hit_after_miss_and_stats() {
+        let cache = BasketCache::new(1 << 20);
+        let (a, hit) = cache.get_or_load(key("b", 0), || Ok(vec![1u8; 100])).unwrap();
+        assert!(!hit);
+        assert_eq!(a.len(), 100);
+        let (b, hit) = cache.get_or_load(key("b", 0), || panic!("must not load")).unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&a, &b));
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.evictions), (1, 1, 0));
+        assert_eq!(stats.resident_bytes, 100);
+        assert_eq!(stats.hit_bytes, 100);
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent_by_bytes() {
+        let cache = BasketCache::new(250);
+        cache.get_or_load(key("a", 0), || Ok(vec![0u8; 100])).unwrap();
+        cache.get_or_load(key("b", 0), || Ok(vec![0u8; 100])).unwrap();
+        // Touch "a" so "b" becomes the LRU victim.
+        cache.get_or_load(key("a", 0), || panic!("hit expected")).unwrap();
+        cache.get_or_load(key("c", 0), || Ok(vec![0u8; 100])).unwrap();
+        let stats = cache.stats();
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.resident_bytes, 200);
+        // "a" survived, "b" was evicted.
+        cache.get_or_load(key("a", 0), || panic!("a must still be cached")).unwrap();
+        let loaded = std::cell::Cell::new(false);
+        cache
+            .get_or_load(key("b", 0), || {
+                loaded.set(true);
+                Ok(vec![0u8; 10])
+            })
+            .unwrap();
+        assert!(loaded.get(), "b should have been evicted");
+    }
+
+    #[test]
+    fn oversized_entry_stays_until_next_insertion() {
+        let cache = BasketCache::new(10);
+        let (data, hit) = cache.get_or_load(key("big", 0), || Ok(vec![0u8; 100])).unwrap();
+        assert!(!hit);
+        assert_eq!(data.len(), 100);
+        // Not evicted within its own insertion: single-flight waiters
+        // must still be able to observe the entry.
+        assert_eq!(cache.stats().resident_bytes, 100);
+        assert_eq!(cache.stats().evictions, 0);
+        cache.get_or_load(key("big", 0), || panic!("still resident")).unwrap();
+        // The next insertion evicts it as the LRU victim.
+        cache.get_or_load(key("small", 0), || Ok(vec![0u8; 4])).unwrap();
+        assert_eq!(cache.stats().resident_bytes, 4);
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn failed_load_propagates_and_unblocks() {
+        let cache = BasketCache::new(1 << 20);
+        let err = cache
+            .get_or_load(key("x", 0), || Err(crate::Error::format("boom")))
+            .unwrap_err();
+        assert!(format!("{err}").contains("boom"));
+        // The key is loadable again after the failure.
+        let (data, hit) = cache.get_or_load(key("x", 0), || Ok(vec![7u8; 3])).unwrap();
+        assert!(!hit);
+        assert_eq!(&*data, &vec![7u8; 3]);
+    }
+
+    #[test]
+    fn panicking_load_does_not_wedge_the_key() {
+        let cache = BasketCache::new(1 << 20);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = cache.get_or_load(key("p", 0), || panic!("load blew up"));
+        }));
+        assert!(r.is_err());
+        // No stranded Pending marker: the key is loadable again.
+        let (data, hit) = cache.get_or_load(key("p", 0), || Ok(vec![9])).unwrap();
+        assert!(!hit);
+        assert_eq!(&*data, &vec![9]);
+    }
+
+    #[test]
+    fn single_flight_loads_once_across_threads() {
+        let cache = Arc::new(BasketCache::new(1 << 20));
+        let loads = Arc::new(AtomicU64::new(0));
+        let n = 8;
+        std::thread::scope(|scope| {
+            for _ in 0..n {
+                let cache = cache.clone();
+                let loads = loads.clone();
+                scope.spawn(move || {
+                    let (data, _) = cache
+                        .get_or_load(key("hot", 0), || {
+                            loads.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            Ok(vec![42u8; 64])
+                        })
+                        .unwrap();
+                    assert_eq!(data.len(), 64);
+                });
+            }
+        });
+        assert_eq!(loads.load(Ordering::Relaxed), 1, "exactly one load");
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, n - 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let cache = BasketCache::new(1 << 20);
+        cache.get_or_load(key("b", 0), || Ok(vec![1])).unwrap();
+        let (d, hit) = cache.get_or_load(key("b", 1), || Ok(vec![2])).unwrap();
+        assert!(!hit);
+        assert_eq!(&*d, &vec![2]);
+        let other_file =
+            BasketKey { file: Arc::from("g.troot"), branch: Arc::from("b"), basket: 0 };
+        let (d, hit) = cache.get_or_load(other_file, || Ok(vec![3])).unwrap();
+        assert!(!hit);
+        assert_eq!(&*d, &vec![3]);
+    }
+}

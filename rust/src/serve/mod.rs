@@ -1,0 +1,283 @@
+//! The multi-tenant skim service: a long-lived server answering many
+//! concurrent queries over one storage catalog, sharing scans through
+//! a server-side decompressed-basket cache.
+//!
+//! The one-shot paths (CLI `skim`, `POST /skim`) tear everything down
+//! after each job; at "millions of users" scale the serving layer must
+//! instead keep the hot state alive and multiplex. This module adds:
+//!
+//! * [`cache`] — the shared [`BasketCache`]: LRU by decompressed
+//!   bytes, keyed `(file, branch, basket)`, single-flight so N
+//!   concurrent jobs hitting one cold basket trigger one
+//!   read + decompress;
+//! * [`sched`] — the [`SkimScheduler`]: a bounded worker pool over
+//!   [`crate::SkimJob`]s with admission control (configurable queue
+//!   depth) and per-job status / result retrieval;
+//! * [`SkimService`] — the wire front-end: the XRootD-like protocol
+//!   ([`crate::xrootd::proto`]) grows `SubmitQuery` / `JobStatus` /
+//!   `FetchResult` frames, and the service answers those *plus* the
+//!   plain file-access frames (a skim server is still a storage
+//!   server), in-process or over real TCP;
+//! * [`SkimServiceClient`] — the client half over any
+//!   [`Wire`](crate::xrootd::client::Wire) (TCP for real deployments,
+//!   loopback for virtual-time benches).
+//!
+//! The DPU HTTP endpoint gains the same capability as `POST /jobs` +
+//! `GET /jobs/<id>[/result]` routes — see [`crate::dpu::http`]. The
+//! CLI front-end is `skimroot serve`.
+
+pub mod cache;
+pub mod sched;
+
+pub use cache::{BasketCache, BasketCacheStats, BasketKey};
+pub use sched::{JobId, JobState, JobStatus, ServeConfig, SkimScheduler};
+
+use crate::net::DiskModel;
+use crate::query::SkimQuery;
+use crate::xrootd::client::Wire;
+use crate::xrootd::proto::{Request, Response};
+use crate::xrootd::server::{serve_requests_tcp, XrdServer};
+use crate::{Error, Result};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+/// The multi-tenant skim service: job frames handled by a
+/// [`SkimScheduler`], file frames by an embedded [`XrdServer`] over
+/// the same catalog (a skim server is still a storage server).
+#[derive(Clone)]
+pub struct SkimService {
+    files: XrdServer,
+    sched: Arc<SkimScheduler>,
+}
+
+impl SkimService {
+    /// Start a service for `cfg`: spawns the scheduler's worker pool;
+    /// the embedded file server exports [`ServeConfig::storage_root`]
+    /// with the deployment's disk model.
+    pub fn new(cfg: ServeConfig) -> Result<SkimService> {
+        let files = XrdServer::new(&cfg.storage_root, cfg.deployment.disk);
+        let sched = SkimScheduler::new(cfg)?;
+        Ok(SkimService { files, sched })
+    }
+
+    /// The underlying scheduler (in-process submissions, cache stats).
+    pub fn scheduler(&self) -> &Arc<SkimScheduler> {
+        &self.sched
+    }
+
+    /// The embedded file server (raw byte reads over the catalog).
+    pub fn file_server(&self) -> &XrdServer {
+        &self.files
+    }
+
+    /// Handle one protocol request: job frames go to the scheduler,
+    /// everything else to the embedded file server.
+    pub fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::SubmitQuery { query_json } => {
+                let query = match SkimQuery::from_json_text(&query_json) {
+                    Ok(q) => q,
+                    Err(e) => return Response::Error { msg: e.to_string() },
+                };
+                match self.sched.submit(query) {
+                    Ok(job) => Response::JobAccepted { job },
+                    Err(e) => Response::Error { msg: e.to_string() },
+                }
+            }
+            Request::JobStatus { job } => match self.sched.status(job) {
+                Some(status) => Response::JobState {
+                    state: status.state.code(),
+                    n_events: status.n_events,
+                    n_pass: status.n_pass,
+                    latency_us: (status.latency * 1e6) as u64,
+                    cache_hits: status.cache_hits,
+                    cache_misses: status.cache_misses,
+                    msg: status.error.unwrap_or_default(),
+                },
+                None => Response::Error { msg: format!("no such job {job}") },
+            },
+            Request::FetchResult { job } => match self.sched.fetch_result(job) {
+                Ok(bytes) => Response::Data { data: bytes },
+                Err(e) => Response::Error { msg: e.to_string() },
+            },
+            other => self.files.handle(other),
+        }
+    }
+
+    /// Serve TCP connections until `stop` goes true (same framing and
+    /// shutdown behavior as [`XrdServer::serve_tcp`]).
+    pub fn serve_tcp(
+        &self,
+        listener: std::net::TcpListener,
+        stop: Arc<AtomicBool>,
+    ) -> std::thread::JoinHandle<()> {
+        let service = self.clone();
+        serve_requests_tcp(listener, stop, move |req| service.handle(req))
+    }
+
+    /// Stop the scheduler's worker pool (the TCP loop is stopped via
+    /// its `stop` flag).
+    pub fn shutdown(&self) {
+        self.sched.shutdown();
+    }
+}
+
+/// Convenience: a service over `storage_root` with all-default
+/// configuration and an ideal (uncharged) file-server disk.
+pub fn service_over(storage_root: impl Into<std::path::PathBuf>) -> Result<SkimService> {
+    let mut cfg = ServeConfig::new(storage_root);
+    cfg.deployment.disk = DiskModel::ideal();
+    SkimService::new(cfg)
+}
+
+/// Client half of the job frames, over any [`Wire`] (TCP for real
+/// deployments, [`crate::xrootd::LoopbackWire`] for virtual-time
+/// benches).
+pub struct SkimServiceClient {
+    wire: Arc<dyn Wire>,
+}
+
+impl SkimServiceClient {
+    /// A client speaking over `wire`.
+    pub fn new(wire: Arc<dyn Wire>) -> Self {
+        SkimServiceClient { wire }
+    }
+
+    /// Connect a TCP client to a `skimroot serve` address.
+    pub fn connect(addr: &str) -> Result<Self> {
+        Ok(SkimServiceClient { wire: Arc::new(crate::xrootd::TcpWire::connect(addr)?) })
+    }
+
+    /// Submit a query; returns the service-assigned job id.
+    pub fn submit(&self, query: &SkimQuery) -> Result<JobId> {
+        let query_json = query.to_json().to_string();
+        match self.wire.call(Request::SubmitQuery { query_json })? {
+            Response::JobAccepted { job } => Ok(job),
+            Response::Error { msg } => Err(Error::protocol(msg)),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Fetch the current status of `job`.
+    pub fn status(&self, job: JobId) -> Result<JobStatus> {
+        match self.wire.call(Request::JobStatus { job })? {
+            Response::JobState {
+                state,
+                n_events,
+                n_pass,
+                latency_us,
+                cache_hits,
+                cache_misses,
+                msg,
+            } => Ok(JobStatus {
+                id: job,
+                state: JobState::from_code(state)?,
+                n_events,
+                n_pass,
+                latency: latency_us as f64 / 1e6,
+                cache_hits,
+                cache_misses,
+                error: if msg.is_empty() { None } else { Some(msg) },
+            }),
+            Response::Error { msg } => Err(Error::protocol(msg)),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Fetch the filtered-file bytes of a finished job.
+    pub fn fetch_result(&self, job: JobId) -> Result<Vec<u8>> {
+        match self.wire.call(Request::FetchResult { job })? {
+            Response::Data { data } => Ok(data),
+            Response::Error { msg } => Err(Error::protocol(msg)),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Poll until `job` finishes, then return `(status, result bytes)`.
+    /// Errors if the job failed (carrying the service's message).
+    pub fn wait_result(&self, job: JobId) -> Result<(JobStatus, Vec<u8>)> {
+        loop {
+            let status = self.status(job)?;
+            match status.state {
+                JobState::Done => {
+                    let bytes = self.fetch_result(job)?;
+                    return Ok((status, bytes));
+                }
+                JobState::Failed => {
+                    return Err(Error::Engine(format!(
+                        "job {job} failed: {}",
+                        status.error.as_deref().unwrap_or("unknown error")
+                    )))
+                }
+                _ => std::thread::sleep(std::time::Duration::from_millis(2)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::gen::{self, GenConfig};
+    use std::sync::atomic::Ordering;
+
+    fn dataset(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("serve_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.troot");
+        if !path.exists() {
+            let cfg = GenConfig {
+                n_events: 600,
+                target_branches: 160,
+                n_hlt: 40,
+                basket_events: 200,
+                codec: Codec::Lz4,
+                seed: 47,
+            };
+            gen::generate(&cfg, &path).unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn tcp_submit_status_fetch_roundtrip() {
+        let root = dataset("tcp");
+        let service = service_over(&root).unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = service.serve_tcp(listener, stop.clone());
+
+        let client = SkimServiceClient::connect(&addr).unwrap();
+        let query = gen::higgs_query("events.troot", "tcp_out.troot");
+        let job = client.submit(&query).unwrap();
+        let (status, bytes) = client.wait_result(job).unwrap();
+        assert_eq!(status.state, JobState::Done);
+        assert!(status.n_pass > 0);
+        assert!(bytes.len() > 100);
+
+        // The service still answers plain file frames on the same
+        // socket protocol.
+        let xrd = crate::xrootd::XrdClient::new(client.wire.clone());
+        let file = xrd.open("events.troot").unwrap();
+        assert!(crate::troot::ReadAt::size(&file).unwrap() > 0);
+
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+        service.shutdown();
+    }
+
+    #[test]
+    fn malformed_query_rejected_over_wire() {
+        let root = dataset("badquery");
+        let service = service_over(&root).unwrap();
+        let resp = service.handle(Request::SubmitQuery { query_json: "{not json".into() });
+        assert!(matches!(resp, Response::Error { .. }));
+        let resp = service.handle(Request::JobStatus { job: 999 });
+        assert!(matches!(resp, Response::Error { .. }));
+        let resp = service.handle(Request::FetchResult { job: 999 });
+        assert!(matches!(resp, Response::Error { .. }));
+        service.shutdown();
+    }
+}

@@ -1,0 +1,592 @@
+//! The multi-tenant job scheduler: a bounded worker pool over
+//! [`SkimJob`]s with admission control and per-job status / result
+//! retrieval.
+//!
+//! Lifecycle of one job (see `ARCHITECTURE.md` § "Serving layer"):
+//!
+//! 1. **submit** — [`SkimScheduler::submit`] parses nothing (it takes a
+//!    validated [`SkimQuery`]) and applies *admission control*: if the
+//!    number of queued-but-not-yet-running jobs has reached the
+//!    configured [`ServeConfig::queue_depth`], the submission is
+//!    rejected immediately (WLCG-style back-pressure: resubmission is
+//!    the client's job, not a hidden unbounded queue's).
+//! 2. **admit / schedule** — accepted jobs enter a FIFO queue drained
+//!    by [`ServeConfig::workers`] worker threads. Each worker drives
+//!    the ordinary [`SkimJob`] facade under the service's
+//!    [`Deployment`] template, so a scheduled job is indistinguishable
+//!    from a one-shot CLI run — including custom pipeline stages and
+//!    WLCG retry semantics.
+//! 3. **shared-cache scan** — every job runs with the service's shared
+//!    [`BasketCache`] installed, so concurrent (and successive) jobs
+//!    over the same dataset decompress each basket once.
+//! 4. **stream result** — the filtered file's bytes are held in the
+//!    job table until fetched ([`SkimScheduler::fetch_result`]) or
+//!    dropped ([`SkimScheduler::forget`]).
+
+use super::cache::BasketCache;
+use crate::coordinator::Deployment;
+use crate::job::SkimJob;
+use crate::net::LinkModel;
+use crate::query::SkimQuery;
+use crate::{Error, Result};
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Job identifier handed out by [`SkimScheduler::submit`].
+pub type JobId = u64;
+
+/// Default worker-pool size for a skim service.
+pub const DEFAULT_WORKERS: usize = 4;
+/// Default admission-control queue depth.
+pub const DEFAULT_QUEUE_DEPTH: usize = 32;
+/// Default shared basket-cache capacity (decompressed bytes).
+pub const DEFAULT_CACHE_BYTES: u64 = 256 * 1000 * 1000;
+/// Default cap on completed job entries retained for status/result
+/// pickup (abandoned results must not leak forever).
+pub const DEFAULT_RETAINED_JOBS: usize = 256;
+
+/// Configuration of one multi-tenant skim service.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Directory the service's file catalog exports (job inputs are
+    /// catalog-relative, exactly as for one-shot jobs).
+    pub storage_root: PathBuf,
+    /// Scratch directory for per-job outputs (one subdirectory per
+    /// job, removed once the result bytes are captured). Defaults to a
+    /// unique directory under the system temp dir — deliberately
+    /// **outside** the exported catalog, so staged tenant outputs are
+    /// never readable through the service's file-serving frames.
+    pub work_dir: PathBuf,
+    /// Worker threads draining the queue. `0` accepts submissions but
+    /// never runs them — useful for tests of admission control.
+    pub workers: usize,
+    /// Admission control: submissions beyond this many *queued* jobs
+    /// are rejected (running jobs do not count).
+    pub queue_depth: usize,
+    /// Topology template every job runs under (placement, links,
+    /// disk, retries). The default is server-side filtering over a
+    /// free local link — the real TCP/HTTP response is the output
+    /// transfer, so no virtual transfer time should be charged.
+    pub deployment: Deployment,
+    /// Shared decompressed-basket cache capacity; `0` disables the
+    /// cache (every job re-reads and re-decompresses, as before).
+    pub cache_bytes: u64,
+    /// Cap on *completed* (done/failed) job entries kept in the table
+    /// for status/result pickup; beyond it the oldest completed
+    /// entries — result bytes included — are dropped, so clients that
+    /// abandon jobs cannot leak memory forever.
+    pub retained_jobs: usize,
+}
+
+impl ServeConfig {
+    /// Defaults for serving `storage_root`: [`DEFAULT_WORKERS`]
+    /// workers, [`DEFAULT_QUEUE_DEPTH`] queue slots, a
+    /// [`DEFAULT_CACHE_BYTES`] shared cache,
+    /// [`DEFAULT_RETAINED_JOBS`] retained completions, and server-side
+    /// placement over a local link.
+    pub fn new(storage_root: impl Into<PathBuf>) -> Self {
+        // Per-service-instance scratch, outside the exported catalog.
+        static INSTANCE: AtomicU64 = AtomicU64::new(0);
+        let instance = INSTANCE.fetch_add(1, Ordering::Relaxed);
+        let work_dir = std::env::temp_dir()
+            .join(format!("skimroot_serve_{}_{instance}", std::process::id()));
+        ServeConfig {
+            storage_root: storage_root.into(),
+            work_dir,
+            workers: DEFAULT_WORKERS,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            deployment: Deployment::server_side(LinkModel::local()),
+            cache_bytes: DEFAULT_CACHE_BYTES,
+            retained_jobs: DEFAULT_RETAINED_JOBS,
+        }
+    }
+}
+
+/// Coarse job state, as reported over the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, waiting for a worker.
+    Queued,
+    /// A worker is executing the skim.
+    Running,
+    /// Finished; the filtered bytes await [`SkimScheduler::fetch_result`].
+    Done,
+    /// The job errored (status carries the message).
+    Failed,
+}
+
+impl JobState {
+    /// Stable wire code (used by the protocol's `JobState` frame).
+    pub fn code(self) -> u8 {
+        match self {
+            JobState::Queued => 0,
+            JobState::Running => 1,
+            JobState::Done => 2,
+            JobState::Failed => 3,
+        }
+    }
+
+    /// Inverse of [`JobState::code`].
+    pub fn from_code(code: u8) -> Result<JobState> {
+        Ok(match code {
+            0 => JobState::Queued,
+            1 => JobState::Running,
+            2 => JobState::Done,
+            3 => JobState::Failed,
+            other => return Err(Error::protocol(format!("bad job state code {other}"))),
+        })
+    }
+
+    /// Human-readable name.
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// Point-in-time view of one job.
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    /// The id [`SkimScheduler::submit`] returned.
+    pub id: JobId,
+    /// Current coarse state.
+    pub state: JobState,
+    /// Events covered (0 until the job finishes).
+    pub n_events: u64,
+    /// Events passing the selection (0 until the job finishes).
+    pub n_pass: u64,
+    /// Modeled end-to-end latency in seconds (0 until finished).
+    pub latency: f64,
+    /// Shared-basket-cache hits this job scored.
+    pub cache_hits: u64,
+    /// Shared-basket-cache misses this job paid for.
+    pub cache_misses: u64,
+    /// Failure message when `state` is [`JobState::Failed`].
+    pub error: Option<String>,
+}
+
+struct JobEntry {
+    query: SkimQuery,
+    state: JobState,
+    output: Option<Vec<u8>>,
+    n_events: u64,
+    n_pass: u64,
+    latency: f64,
+    cache_hits: u64,
+    cache_misses: u64,
+    error: Option<String>,
+}
+
+struct SchedInner {
+    cfg: ServeConfig,
+    cache: Option<Arc<BasketCache>>,
+    queue: Mutex<VecDeque<JobId>>,
+    queue_cv: Condvar,
+    jobs: Mutex<HashMap<JobId, JobEntry>>,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// The bounded-worker-pool job scheduler (see the module docs).
+pub struct SkimScheduler {
+    inner: Arc<SchedInner>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl SkimScheduler {
+    /// Start a scheduler: spawns [`ServeConfig::workers`] worker
+    /// threads immediately.
+    pub fn new(cfg: ServeConfig) -> Result<Arc<SkimScheduler>> {
+        cfg.deployment.validate()?;
+        std::fs::create_dir_all(&cfg.work_dir)?;
+        let cache = if cfg.cache_bytes > 0 {
+            Some(Arc::new(BasketCache::new(cfg.cache_bytes)))
+        } else {
+            None
+        };
+        let n_workers = cfg.workers;
+        let inner = Arc::new(SchedInner {
+            cfg,
+            cache,
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            jobs: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+        });
+        let sched = Arc::new(SkimScheduler {
+            inner: inner.clone(),
+            workers: Mutex::new(Vec::new()),
+        });
+        let mut workers = sched.workers.lock().unwrap();
+        for _ in 0..n_workers {
+            let inner = inner.clone();
+            workers.push(std::thread::spawn(move || worker_loop(&inner)));
+        }
+        drop(workers);
+        Ok(sched)
+    }
+
+    /// The service's shared basket cache, if enabled.
+    pub fn basket_cache(&self) -> Option<&Arc<BasketCache>> {
+        self.inner.cache.as_ref()
+    }
+
+    /// False once [`SkimScheduler::shutdown`] has started: submissions
+    /// are rejected and clients should stop retrying (the HTTP layer
+    /// maps this to `503` rather than the admission-control `429`).
+    pub fn is_accepting(&self) -> bool {
+        !self.inner.stop.load(Ordering::Relaxed)
+    }
+
+    /// Aggregate shared-cache statistics (zeroed when disabled).
+    pub fn cache_stats(&self) -> super::cache::BasketCacheStats {
+        self.inner.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// Submit a job. Applies admission control: returns an error
+    /// without enqueuing when [`ServeConfig::queue_depth`] jobs are
+    /// already waiting (the client should back off and resubmit).
+    pub fn submit(&self, query: SkimQuery) -> Result<JobId> {
+        if self.inner.stop.load(Ordering::Relaxed) {
+            return Err(Error::Config("skim service is shutting down".into()));
+        }
+        let mut queue = self.inner.queue.lock().unwrap();
+        if queue.len() >= self.inner.cfg.queue_depth {
+            return Err(Error::Config(format!(
+                "skim service queue full ({} jobs waiting, depth {}); resubmit later",
+                queue.len(),
+                self.inner.cfg.queue_depth
+            )));
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        self.inner.jobs.lock().unwrap().insert(
+            id,
+            JobEntry {
+                query,
+                state: JobState::Queued,
+                output: None,
+                n_events: 0,
+                n_pass: 0,
+                latency: 0.0,
+                cache_hits: 0,
+                cache_misses: 0,
+                error: None,
+            },
+        );
+        queue.push_back(id);
+        self.inner.queue_cv.notify_one();
+        Ok(id)
+    }
+
+    /// Status of job `id`, or `None` for an unknown (or forgotten) id.
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        let jobs = self.inner.jobs.lock().unwrap();
+        jobs.get(&id).map(|e| JobStatus {
+            id,
+            state: e.state,
+            n_events: e.n_events,
+            n_pass: e.n_pass,
+            latency: e.latency,
+            cache_hits: e.cache_hits,
+            cache_misses: e.cache_misses,
+            error: e.error.clone(),
+        })
+    }
+
+    /// Filtered-file bytes of a [`JobState::Done`] job. The bytes are
+    /// handed out **once** — the table keeps only the job's summary
+    /// afterwards, so a long-lived service does not accumulate one
+    /// filtered file per job (this is what both wire front-ends call).
+    /// Errors for unknown ids, already-delivered results, failed jobs
+    /// (with the failure message) and jobs still queued or running.
+    pub fn fetch_result(&self, id: JobId) -> Result<Vec<u8>> {
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        let entry = jobs
+            .get_mut(&id)
+            .ok_or_else(|| Error::Config(format!("no such job {id}")))?;
+        match entry.state {
+            JobState::Done => entry
+                .output
+                .take()
+                .ok_or_else(|| Error::Config(format!("job {id} result already delivered"))),
+            JobState::Failed => Err(Error::Engine(format!(
+                "job {id} failed: {}",
+                entry.error.as_deref().unwrap_or("unknown error")
+            ))),
+            state => Err(Error::Config(format!(
+                "job {id} not finished (state: {})",
+                state.name()
+            ))),
+        }
+    }
+
+    /// Drop a job's table entry entirely (summary included).
+    /// [`SkimScheduler::fetch_result`] already releases the result
+    /// bytes; this additionally forgets the job's status.
+    pub fn forget(&self, id: JobId) {
+        self.inner.jobs.lock().unwrap().remove(&id);
+    }
+
+    /// Block until job `id` leaves the queue/running states, polling at
+    /// millisecond granularity. Returns the final status.
+    pub fn wait(&self, id: JobId) -> Result<JobStatus> {
+        loop {
+            let status = self
+                .status(id)
+                .ok_or_else(|| Error::Config(format!("no such job {id}")))?;
+            match status.state {
+                JobState::Done | JobState::Failed => return Ok(status),
+                _ => std::thread::sleep(std::time::Duration::from_millis(1)),
+            }
+        }
+    }
+
+    /// Stop the workers and join them. Queued jobs that never ran stay
+    /// [`JobState::Queued`] in the table. Idempotent.
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        self.inner.queue_cv.notify_all();
+        let mut workers = self.workers.lock().unwrap();
+        for handle in workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for SkimScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(inner: &SchedInner) {
+    loop {
+        let id = {
+            let mut queue = inner.queue.lock().unwrap();
+            loop {
+                if inner.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some(id) = queue.pop_front() {
+                    break id;
+                }
+                let (q, _timeout) = inner
+                    .queue_cv
+                    .wait_timeout(queue, std::time::Duration::from_millis(50))
+                    .unwrap();
+                queue = q;
+            }
+        };
+        run_one(inner, id);
+    }
+}
+
+/// Execute one admitted job through the ordinary [`SkimJob`] facade.
+fn run_one(inner: &SchedInner, id: JobId) {
+    let query = {
+        let mut jobs = inner.jobs.lock().unwrap();
+        match jobs.get_mut(&id) {
+            Some(entry) => {
+                entry.state = JobState::Running;
+                entry.query.clone()
+            }
+            // Forgotten while queued: nothing to do.
+            None => return,
+        }
+    };
+    let job_dir = inner.cfg.work_dir.join(format!("job{id}"));
+    let mut job = SkimJob::new(query)
+        .storage(&inner.cfg.storage_root)
+        .client_dir(&job_dir)
+        .deployment(inner.cfg.deployment.clone());
+    if let Some(cache) = &inner.cache {
+        job = job.basket_cache(cache.clone());
+    }
+    // Panic isolation: a panicking job must neither kill this worker
+    // (shrinking the pool for the service's lifetime) nor strand the
+    // job in `Running` with clients polling forever.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        job.run().and_then(|report| {
+            let bytes = std::fs::read(&report.result.output_path)?;
+            Ok((report, bytes))
+        })
+    }))
+    .unwrap_or_else(|panic| {
+        let msg = panic
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".into());
+        Err(Error::Engine(format!("job panicked: {msg}")))
+    });
+    // The per-job directory only staged the output; the bytes live in
+    // the job table now.
+    let _ = std::fs::remove_dir_all(&job_dir);
+    let mut jobs = inner.jobs.lock().unwrap();
+    let Some(entry) = jobs.get_mut(&id) else {
+        return; // forgotten mid-run
+    };
+    match outcome {
+        Ok((report, bytes)) => {
+            entry.state = JobState::Done;
+            entry.n_events = report.result.n_events;
+            entry.n_pass = report.result.n_pass;
+            entry.latency = report.latency;
+            entry.cache_hits = report.timeline.counter("basket_cache_hits");
+            entry.cache_misses = report.timeline.counter("basket_cache_misses");
+            entry.output = Some(bytes);
+        }
+        Err(e) => {
+            entry.state = JobState::Failed;
+            entry.error = Some(e.to_string());
+        }
+    }
+    // Bound retention: abandoned completions (results the client never
+    // fetched) must not accumulate forever. Oldest completed entries
+    // are dropped first; queued/running jobs are never touched.
+    let cap = inner.cfg.retained_jobs.max(1);
+    let mut completed: Vec<JobId> = jobs
+        .iter()
+        .filter(|(_, e)| matches!(e.state, JobState::Done | JobState::Failed))
+        .map(|(&id, _)| id)
+        .collect();
+    if completed.len() > cap {
+        completed.sort_unstable();
+        for victim in &completed[..completed.len() - cap] {
+            jobs.remove(victim);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::gen::{self, GenConfig};
+
+    fn dataset(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sched_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.troot");
+        if !path.exists() {
+            let cfg = GenConfig {
+                n_events: 600,
+                target_branches: 160,
+                n_hlt: 40,
+                basket_events: 200,
+                codec: Codec::Lz4,
+                seed: 31,
+            };
+            gen::generate(&cfg, &path).unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn submit_run_fetch_roundtrip() {
+        let root = dataset("roundtrip");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 2;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let id = sched
+            .submit(gen::higgs_query("events.troot", "out.troot"))
+            .unwrap();
+        let status = sched.wait(id).unwrap();
+        assert_eq!(status.state, JobState::Done);
+        assert!(status.n_pass > 0);
+        assert!(status.n_pass < status.n_events);
+        let bytes = sched.fetch_result(id).unwrap();
+        assert!(bytes.len() > 100);
+        sched.forget(id);
+        assert!(sched.status(id).is_none());
+        assert!(sched.fetch_result(id).is_err());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn admission_control_rejects_beyond_queue_depth() {
+        let root = dataset("admission");
+        let mut cfg = ServeConfig::new(&root);
+        // No workers: the queue never drains, so rejection is
+        // deterministic.
+        cfg.workers = 0;
+        cfg.queue_depth = 2;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let q = || gen::higgs_query("events.troot", "out.troot");
+        sched.submit(q()).unwrap();
+        sched.submit(q()).unwrap();
+        let err = sched.submit(q()).unwrap_err();
+        assert!(format!("{err}").contains("queue full"), "{err}");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn completed_entries_are_bounded() {
+        let root = dataset("retention");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 1;
+        cfg.retained_jobs = 2;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let mut ids = Vec::new();
+        for i in 0..4 {
+            let query = gen::higgs_query("events.troot", &format!("r{i}.troot"));
+            let id = sched.submit(query).unwrap();
+            sched.wait(id).unwrap();
+            ids.push(id);
+        }
+        // The oldest completions were dropped, the newest two survive.
+        assert!(sched.status(ids[0]).is_none());
+        assert!(sched.status(ids[1]).is_none());
+        assert!(sched.status(ids[2]).is_some());
+        assert!(sched.status(ids[3]).is_some());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn failed_job_reports_error() {
+        let root = dataset("failure");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 1;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let id = sched
+            .submit(gen::higgs_query("missing.troot", "out.troot"))
+            .unwrap();
+        let status = sched.wait(id).unwrap();
+        assert_eq!(status.state, JobState::Failed);
+        assert!(status.error.is_some());
+        let err = sched.fetch_result(id).unwrap_err();
+        assert!(format!("{err}").contains("failed"));
+        sched.shutdown();
+    }
+
+    #[test]
+    fn successive_jobs_share_the_basket_cache() {
+        let root = dataset("sharing");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 1;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let a = sched
+            .submit(gen::higgs_query("events.troot", "a.troot"))
+            .unwrap();
+        let a = sched.wait(a).unwrap();
+        let b = sched
+            .submit(gen::higgs_query("events.troot", "b.troot"))
+            .unwrap();
+        let b = sched.wait(b).unwrap();
+        assert_eq!(a.state, JobState::Done);
+        assert_eq!(b.state, JobState::Done);
+        assert!(a.cache_misses > 0, "first job populates the cache");
+        assert!(b.cache_hits > 0, "second job must hit the shared cache");
+        assert_eq!(a.n_pass, b.n_pass, "cache must not change the selection");
+        let stats = sched.cache_stats();
+        assert!(stats.hits >= b.cache_hits);
+        sched.shutdown();
+    }
+}

@@ -77,11 +77,15 @@ fn fill_le_bytes<T: Copy, const N: usize>(dst: &mut [u8], src: &[T], enc: impl F
 /// branches, the per-event offset array.
 #[derive(Debug, Clone)]
 pub struct DecodedBasket {
+    /// Global id of the first event in this basket.
     pub first_event: u64,
+    /// Events covered by this basket.
     pub n_events: usize,
+    /// Scalar vs jagged.
     pub kind: BranchKind,
     /// Present only for jagged baskets; `offsets.len() == n_events + 1`.
     pub offsets: Vec<u32>,
+    /// The typed values (concatenated per-object for jagged baskets).
     pub values: ColumnValues,
 }
 

@@ -37,21 +37,28 @@ pub use writer::TRootWriter;
 
 use crate::{Error, Result};
 
+/// File magic, leading the file and closing the trailer.
 pub const MAGIC: &[u8; 8] = b"TROOTv1\0";
+/// Trailer size: u64 metadata offset + 8-byte magic.
 pub const TRAILER_LEN: usize = 16;
 
 /// Element type of a branch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
+    /// 32-bit float (most kinematic variables).
     F32,
+    /// 64-bit float.
     F64,
+    /// 32-bit signed integer (ids, counts).
     I32,
+    /// 64-bit signed integer (run/event numbers).
     I64,
     /// Booleans and trigger flags (stored as one byte, 0/1).
     U8,
 }
 
 impl DType {
+    /// Element size in bytes.
     pub fn size(self) -> usize {
         match self {
             DType::F32 | DType::I32 => 4,
@@ -60,6 +67,7 @@ impl DType {
         }
     }
 
+    /// Stable metadata id.
     pub fn id(self) -> u8 {
         match self {
             DType::F32 => 0,
@@ -70,6 +78,7 @@ impl DType {
         }
     }
 
+    /// Inverse of [`DType::id`].
     pub fn from_id(id: u8) -> Result<DType> {
         Ok(match id {
             0 => DType::F32,
@@ -81,6 +90,7 @@ impl DType {
         })
     }
 
+    /// Human-readable name (`--explain` output, reports).
     pub fn name(self) -> &'static str {
         match self {
             DType::F32 => "f32",
@@ -96,7 +106,9 @@ impl DType {
 /// event, e.g. `Electron_pt` for all electrons in the event).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BranchKind {
+    /// One value per event.
     Scalar,
+    /// A variable-length vector per event.
     Jagged,
 }
 
@@ -105,7 +117,9 @@ pub enum BranchKind {
 pub struct BranchDesc {
     /// NanoAOD-style name, e.g. `Electron_pt`, `HLT_IsoMu24`, `nJet`.
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Scalar vs jagged.
     pub kind: BranchKind,
     /// Collection prefix for jagged branches (`Electron`, `Jet`, ...);
     /// empty for scalars. Jagged branches in the same group share their
@@ -114,10 +128,12 @@ pub struct BranchDesc {
 }
 
 impl BranchDesc {
+    /// A scalar (one value per event) branch.
     pub fn scalar(name: impl Into<String>, dtype: DType) -> Self {
         BranchDesc { name: name.into(), dtype, kind: BranchKind::Scalar, group: String::new() }
     }
 
+    /// A jagged branch in collection `group`.
     pub fn jagged(name: impl Into<String>, dtype: DType, group: impl Into<String>) -> Self {
         BranchDesc { name: name.into(), dtype, kind: BranchKind::Jagged, group: group.into() }
     }
@@ -142,7 +158,9 @@ pub struct BasketInfo {
 /// A branch plus its basket index, as recorded in file metadata.
 #[derive(Debug, Clone)]
 pub struct BranchMeta {
+    /// Static description (name, type, kind, group).
     pub desc: BranchDesc,
+    /// Location + extent of every basket, in event order.
     pub baskets: Vec<BasketInfo>,
 }
 
@@ -190,10 +208,12 @@ impl BranchMeta {
         start..end.max(start)
     }
 
+    /// Compressed bytes across all baskets of this branch.
     pub fn total_comp_bytes(&self) -> u64 {
         self.baskets.iter().map(|b| b.comp_len as u64).sum()
     }
 
+    /// Decompressed bytes across all baskets of this branch.
     pub fn total_raw_bytes(&self) -> u64 {
         self.baskets.iter().map(|b| b.raw_len as u64).sum()
     }
@@ -202,22 +222,28 @@ impl BranchMeta {
 /// Whole-file metadata (the "header" of §2.1; physically a footer).
 #[derive(Debug, Clone)]
 pub struct FileMeta {
+    /// Total events in the file.
     pub n_events: u64,
+    /// Codec every basket is compressed with.
     pub codec: crate::compress::Codec,
     /// Events per basket (cluster size).
     pub basket_events: u32,
+    /// The schema: every branch with its basket index.
     pub branches: Vec<BranchMeta>,
 }
 
 impl FileMeta {
+    /// Branch lookup by name.
     pub fn branch(&self, name: &str) -> Option<&BranchMeta> {
         self.branches.iter().find(|b| b.desc.name == name)
     }
 
+    /// Schema position of `name`.
     pub fn branch_index(&self, name: &str) -> Option<usize> {
         self.branches.iter().position(|b| b.desc.name == name)
     }
 
+    /// All branch names, in schema order.
     pub fn branch_names(&self) -> impl Iterator<Item = &str> {
         self.branches.iter().map(|b| b.desc.name.as_str())
     }
@@ -226,14 +252,20 @@ impl FileMeta {
 /// In-memory column values (input to the writer, output of the reader).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ColumnValues {
+    /// 32-bit floats.
     F32(Vec<f32>),
+    /// 64-bit floats.
     F64(Vec<f64>),
+    /// 32-bit signed integers.
     I32(Vec<i32>),
+    /// 64-bit signed integers.
     I64(Vec<i64>),
+    /// Bytes (flags/booleans).
     U8(Vec<u8>),
 }
 
 impl ColumnValues {
+    /// Number of stored values.
     pub fn len(&self) -> usize {
         match self {
             ColumnValues::F32(v) => v.len(),
@@ -244,10 +276,12 @@ impl ColumnValues {
         }
     }
 
+    /// True when no values are stored.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The element type of this column.
     pub fn dtype(&self) -> DType {
         match self {
             ColumnValues::F32(_) => DType::F32,
@@ -258,6 +292,7 @@ impl ColumnValues {
         }
     }
 
+    /// An empty column of the given type.
     pub fn empty(dtype: DType) -> Self {
         match dtype {
             DType::F32 => ColumnValues::F32(Vec::new()),
@@ -308,13 +343,20 @@ impl ColumnValues {
 /// A full column: scalar values or jagged values with per-event offsets.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ColumnData {
+    /// One value per event.
     Scalar(ColumnValues),
     /// `offsets.len() == n_events + 1`; event `i` owns
     /// `values[offsets[i]..offsets[i+1]]`.
-    Jagged { offsets: Vec<u32>, values: ColumnValues },
+    Jagged {
+        /// Per-event offsets into `values` (n_events + 1 entries).
+        offsets: Vec<u32>,
+        /// The concatenated per-object values.
+        values: ColumnValues,
+    },
 }
 
 impl ColumnData {
+    /// Number of events this column covers.
     pub fn n_events(&self) -> usize {
         match self {
             ColumnData::Scalar(v) => v.len(),
@@ -322,6 +364,7 @@ impl ColumnData {
         }
     }
 
+    /// Scalar vs jagged.
     pub fn kind(&self) -> BranchKind {
         match self {
             ColumnData::Scalar(_) => BranchKind::Scalar,
@@ -329,6 +372,7 @@ impl ColumnData {
         }
     }
 
+    /// The element type.
     pub fn dtype(&self) -> DType {
         match self {
             ColumnData::Scalar(v) => v.dtype(),
@@ -348,6 +392,7 @@ impl ColumnData {
         ColumnData::Jagged { offsets, values: ColumnValues::F32(values) }
     }
 
+    /// Build a scalar f32 column.
     pub fn scalar_f32(values: Vec<f32>) -> Self {
         ColumnData::Scalar(ColumnValues::F32(values))
     }

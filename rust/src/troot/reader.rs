@@ -51,7 +51,9 @@ pub trait ReadAt: Send + Sync {
 /// One coalesced read span covering several requested ranges.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CoalescedSpan {
+    /// Start offset of the merged read.
     pub offset: u64,
+    /// Length of the merged read.
     pub len: usize,
     /// Indices (into the request slice) of the ranges this span covers.
     pub members: Vec<usize>,
@@ -102,6 +104,7 @@ pub struct LocalFile {
 }
 
 impl LocalFile {
+    /// Open a file for positioned reads.
     pub fn open(path: impl AsRef<std::path::Path>) -> Result<Self> {
         Ok(LocalFile { file: std::fs::File::open(path)? })
     }
@@ -160,18 +163,22 @@ impl<R: ReadAt> TRootReader<R> {
         Ok(TRootReader { store, meta })
     }
 
+    /// Parsed file metadata (schema + basket index).
     pub fn meta(&self) -> &FileMeta {
         &self.meta
     }
 
+    /// The backing store.
     pub fn store(&self) -> &R {
         &self.store
     }
 
+    /// Total events in the file.
     pub fn n_events(&self) -> u64 {
         self.meta.n_events
     }
 
+    /// Branch lookup that errors on unknown names.
     pub fn branch(&self, name: &str) -> Result<&BranchMeta> {
         self.meta
             .branch(name)

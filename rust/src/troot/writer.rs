@@ -23,14 +23,20 @@ pub struct TRootWriter {
 /// Summary returned by [`TRootWriter::finalize`].
 #[derive(Debug, Clone)]
 pub struct WriteSummary {
+    /// Events written.
     pub n_events: u64,
+    /// Branches written.
     pub n_branches: usize,
+    /// Baskets written across all branches.
     pub n_baskets: usize,
+    /// Uncompressed payload bytes.
     pub raw_bytes: u64,
+    /// Final file size on disk.
     pub file_bytes: u64,
 }
 
 impl WriteSummary {
+    /// `raw_bytes / file_bytes` (0.0 for an empty file).
     pub fn compression_ratio(&self) -> f64 {
         if self.file_bytes == 0 {
             return 0.0;
@@ -40,6 +46,8 @@ impl WriteSummary {
 }
 
 impl TRootWriter {
+    /// A writer targeting `path`, compressing every basket with
+    /// `codec`, `basket_events` events per basket.
     pub fn new(path: impl Into<std::path::PathBuf>, codec: Codec, basket_events: u32) -> Self {
         assert!(basket_events > 0, "basket_events must be positive");
         TRootWriter {

@@ -13,10 +13,13 @@ pub struct Pcg32 {
 }
 
 impl Pcg32 {
+    /// Seeded generator on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
     }
 
+    /// Seeded generator on a specific stream (independent sequences
+    /// from one seed — the per-branch generation trick).
     pub fn with_stream(seed: u64, stream: u64) -> Self {
         let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
         rng.next_u32();
@@ -25,6 +28,7 @@ impl Pcg32 {
         rng
     }
 
+    /// Next uniform 32-bit draw.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old
@@ -35,6 +39,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next uniform 64-bit draw (two 32-bit draws).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }

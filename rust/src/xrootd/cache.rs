@@ -46,16 +46,21 @@ struct State {
 /// Cache effectiveness counters.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Planned reads served from the cached window.
     pub hits: u64,
+    /// Planned reads that triggered a prefetch.
     pub misses: u64,
     /// Reads not covered by the plan (metadata, unplanned baskets).
     pub passthrough: u64,
     /// Vector reads issued.
     pub prefetch_batches: u64,
+    /// Total bytes prefetched over the cache's lifetime.
     pub prefetched_bytes: u64,
 }
 
 impl<R: ReadAt> TTreeCache<R> {
+    /// A cache over `store` prefetching up to `capacity` bytes per
+    /// window.
     pub fn new(store: R, capacity: usize) -> Self {
         TTreeCache { store, capacity: capacity.max(1), state: Mutex::new(State::default()) }
     }
@@ -74,10 +79,12 @@ impl<R: ReadAt> TTreeCache<R> {
         st.window_bytes = 0;
     }
 
+    /// Lifetime effectiveness counters.
     pub fn stats(&self) -> CacheStats {
         self.state.lock().unwrap().stats
     }
 
+    /// The wrapped store.
     pub fn store(&self) -> &R {
         &self.store
     }

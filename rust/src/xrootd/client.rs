@@ -13,6 +13,7 @@ use std::sync::{Arc, Mutex};
 
 /// One request/response exchange with the storage server.
 pub trait Wire: Send + Sync {
+    /// Send one request and wait for its response.
     fn call(&self, req: Request) -> Result<Response>;
 
     /// Human label for reports.
@@ -34,10 +35,12 @@ pub struct LoopbackWire {
 }
 
 impl LoopbackWire {
+    /// A wire to `server` charging `link` time onto `timeline`.
     pub fn new(server: super::XrdServer, link: LinkModel, timeline: Timeline) -> Self {
         LoopbackWire { server, link, timeline, stage: AtomicU8::new(stage_id(Stage::BasketFetch)) }
     }
 
+    /// Change which stage subsequent transfer time is attributed to.
     pub fn set_stage(&self, stage: Stage) {
         self.stage.store(stage_id(stage), Ordering::Relaxed);
     }
@@ -85,6 +88,7 @@ pub struct TcpWire {
 }
 
 impl TcpWire {
+    /// Connect to a server's TCP endpoint.
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = std::net::TcpStream::connect(addr)
             .map_err(|e| Error::protocol(format!("connect {addr}: {e}")))?;
@@ -112,10 +116,12 @@ pub struct XrdClient {
 }
 
 impl XrdClient {
+    /// A client speaking over `wire`.
     pub fn new(wire: Arc<dyn Wire>) -> Self {
         XrdClient { wire }
     }
 
+    /// The underlying wire (shared with open files).
     pub fn wire(&self) -> &Arc<dyn Wire> {
         &self.wire
     }
@@ -150,6 +156,7 @@ pub struct RemoteFile {
 }
 
 impl RemoteFile {
+    /// Release the server-side handle.
     pub fn close(&self) -> Result<()> {
         match self.wire.call(Request::Close { fd: self.fd })? {
             Response::Done => Ok(()),

@@ -5,32 +5,126 @@
 
 use crate::{Error, Result};
 
+/// Upper bound on one frame's payload (read and write side).
 pub const MAX_FRAME: usize = 512 * 1024 * 1024;
 
+/// Client → server request (see the module docs for the framing).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Request {
     /// Open a file by (catalog-relative) path.
-    Open { path: String },
+    Open {
+        /// Catalog-relative file path.
+        path: String,
+    },
     /// File size of an open handle.
-    Stat { fd: u32 },
+    Stat {
+        /// Handle returned by [`Response::Opened`].
+        fd: u32,
+    },
     /// Positioned read.
-    Read { fd: u32, offset: u64, len: u32 },
+    Read {
+        /// Handle returned by [`Response::Opened`].
+        fd: u32,
+        /// Absolute byte offset.
+        offset: u64,
+        /// Bytes to read.
+        len: u32,
+    },
     /// Vector read: many ranges, one round-trip.
-    ReadV { fd: u32, ranges: Vec<(u64, u32)> },
-    Close { fd: u32 },
+    ReadV {
+        /// Handle returned by [`Response::Opened`].
+        fd: u32,
+        /// `(offset, len)` ranges to fetch.
+        ranges: Vec<(u64, u32)>,
+    },
+    /// Release an open handle.
+    Close {
+        /// Handle returned by [`Response::Opened`].
+        fd: u32,
+    },
     /// Upload a file (the DPU ships the filtered output back through
     /// the same protocol).
-    Put { path: String, data: Vec<u8> },
+    Put {
+        /// Catalog-relative destination path.
+        path: String,
+        /// File contents.
+        data: Vec<u8>,
+    },
+    /// Submit a skim job to a multi-tenant service
+    /// ([`crate::serve::SkimService`]); answered by
+    /// [`Response::JobAccepted`] or an admission-control error.
+    SubmitQuery {
+        /// The JSON query payload ([`crate::query::SkimQuery`]).
+        query_json: String,
+    },
+    /// Poll a submitted job; answered by [`Response::JobState`].
+    JobStatus {
+        /// Id from [`Response::JobAccepted`].
+        job: u64,
+    },
+    /// Fetch a finished job's filtered-file bytes; answered by
+    /// [`Response::Data`].
+    FetchResult {
+        /// Id from [`Response::JobAccepted`].
+        job: u64,
+    },
 }
 
+/// Server → client reply, paired with the [`Request`] opcodes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Response {
-    Opened { fd: u32, size: u64 },
-    Stats { size: u64 },
-    Data { data: Vec<u8> },
-    DataV { chunks: Vec<Vec<u8>> },
+    /// File opened.
+    Opened {
+        /// Handle for subsequent reads.
+        fd: u32,
+        /// File size in bytes.
+        size: u64,
+    },
+    /// Answer to [`Request::Stat`].
+    Stats {
+        /// File size in bytes.
+        size: u64,
+    },
+    /// Payload of a positioned read (or a fetched job result).
+    Data {
+        /// The requested bytes.
+        data: Vec<u8>,
+    },
+    /// Payload of a vector read, one chunk per requested range.
+    DataV {
+        /// Chunks in request order.
+        chunks: Vec<Vec<u8>>,
+    },
+    /// Acknowledgement with no payload.
     Done,
-    Error { msg: String },
+    /// Request failed; the connection stays usable.
+    Error {
+        /// Human-readable failure description.
+        msg: String,
+    },
+    /// A submitted skim job was admitted to the queue.
+    JobAccepted {
+        /// Service-assigned job id.
+        job: u64,
+    },
+    /// Current state of a submitted job
+    /// ([`crate::serve::JobState::code`] codes).
+    JobState {
+        /// Coarse state code (queued / running / done / failed).
+        state: u8,
+        /// Events the finished job covered (0 while in flight).
+        n_events: u64,
+        /// Events passing the selection (0 while in flight).
+        n_pass: u64,
+        /// Modeled end-to-end latency in microseconds (0 in flight).
+        latency_us: u64,
+        /// Shared basket-cache hits the job scored.
+        cache_hits: u64,
+        /// Shared basket-cache misses the job paid for.
+        cache_misses: u64,
+        /// Failure message (empty unless the job failed).
+        msg: String,
+    },
 }
 
 fn put_str(out: &mut Vec<u8>, s: &str) {
@@ -98,6 +192,7 @@ impl<'a> Cursor<'a> {
 }
 
 impl Request {
+    /// Serialize to the wire form (opcode + fields).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         match self {
@@ -133,10 +228,25 @@ impl Request {
                 put_str(&mut out, path);
                 put_bytes(&mut out, data);
             }
+            Request::SubmitQuery { query_json } => {
+                // u32-length bytes, not a u16 string: query payloads
+                // with large branch lists can exceed 64 KiB.
+                out.push(7);
+                put_bytes(&mut out, query_json.as_bytes());
+            }
+            Request::JobStatus { job } => {
+                out.push(8);
+                out.extend_from_slice(&job.to_le_bytes());
+            }
+            Request::FetchResult { job } => {
+                out.push(9);
+                out.extend_from_slice(&job.to_le_bytes());
+            }
         }
         out
     }
 
+    /// Parse one frame payload; rejects trailing bytes.
     pub fn decode(buf: &[u8]) -> Result<Request> {
         let mut c = Cursor::new(buf);
         let req = match c.u8()? {
@@ -157,6 +267,12 @@ impl Request {
             }
             5 => Request::Close { fd: c.u32()? },
             6 => Request::Put { path: c.str()?, data: c.bytes()? },
+            7 => Request::SubmitQuery {
+                query_json: String::from_utf8(c.bytes()?)
+                    .map_err(|_| Error::protocol("invalid utf-8 in query"))?,
+            },
+            8 => Request::JobStatus { job: c.u64()? },
+            9 => Request::FetchResult { job: c.u64()? },
             op => return Err(Error::protocol(format!("bad request opcode {op}"))),
         };
         if !c.finished() {
@@ -167,6 +283,7 @@ impl Request {
 }
 
 impl Response {
+    /// Serialize to the wire form (opcode + fields).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         match self {
@@ -195,10 +312,33 @@ impl Response {
                 out.push(6);
                 put_str(&mut out, msg);
             }
+            Response::JobAccepted { job } => {
+                out.push(7);
+                out.extend_from_slice(&job.to_le_bytes());
+            }
+            Response::JobState {
+                state,
+                n_events,
+                n_pass,
+                latency_us,
+                cache_hits,
+                cache_misses,
+                msg,
+            } => {
+                out.push(8);
+                out.push(*state);
+                out.extend_from_slice(&n_events.to_le_bytes());
+                out.extend_from_slice(&n_pass.to_le_bytes());
+                out.extend_from_slice(&latency_us.to_le_bytes());
+                out.extend_from_slice(&cache_hits.to_le_bytes());
+                out.extend_from_slice(&cache_misses.to_le_bytes());
+                put_str(&mut out, msg);
+            }
         }
         out
     }
 
+    /// Parse one frame payload; rejects trailing bytes.
     pub fn decode(buf: &[u8]) -> Result<Response> {
         let mut c = Cursor::new(buf);
         let resp = match c.u8()? {
@@ -218,6 +358,16 @@ impl Response {
             }
             5 => Response::Done,
             6 => Response::Error { msg: c.str()? },
+            7 => Response::JobAccepted { job: c.u64()? },
+            8 => Response::JobState {
+                state: c.u8()?,
+                n_events: c.u64()?,
+                n_pass: c.u64()?,
+                latency_us: c.u64()?,
+                cache_hits: c.u64()?,
+                cache_misses: c.u64()?,
+                msg: c.str()?,
+            },
             op => return Err(Error::protocol(format!("bad response opcode {op}"))),
         };
         if !c.finished() {
@@ -266,6 +416,10 @@ mod tests {
             Request::ReadV { fd: 0, ranges: vec![] },
             Request::Close { fd: 7 },
             Request::Put { path: "out.troot".into(), data: vec![1, 2, 3] },
+            Request::SubmitQuery { query_json: "{\"input\": \"f\"}".into() },
+            Request::SubmitQuery { query_json: "x".repeat(100_000) },
+            Request::JobStatus { job: u64::MAX },
+            Request::FetchResult { job: 12 },
         ];
         for r in reqs {
             assert_eq!(Request::decode(&r.encode()).unwrap(), r);
@@ -281,6 +435,16 @@ mod tests {
             Response::DataV { chunks: vec![vec![1], vec![], vec![2, 3]] },
             Response::Done,
             Response::Error { msg: "no such file".into() },
+            Response::JobAccepted { job: 3 },
+            Response::JobState {
+                state: 2,
+                n_events: 1_000_000,
+                n_pass: 777,
+                latency_us: 2_500_000,
+                cache_hits: 42,
+                cache_misses: 7,
+                msg: String::new(),
+            },
         ];
         for r in resps {
             assert_eq!(Response::decode(&r.encode()).unwrap(), r);

@@ -58,10 +58,14 @@ impl XrdServer {
         *self.inner.timeline.lock().unwrap() = timeline;
     }
 
+    /// The backend disk model this server charges for reads.
     pub fn disk(&self) -> DiskModel {
         self.inner.disk
     }
 
+    /// Total payload bytes served over the server's lifetime (READ and
+    /// READV responses). Surfaced in the end-of-job metrics report as
+    /// the `xrd_bytes_served` counter.
     pub fn bytes_served(&self) -> u64 {
         self.inner.pub_served.0.load(Ordering::Relaxed)
     }
@@ -155,6 +159,12 @@ impl XrdServer {
                 std::fs::write(&full, &data)?;
                 Ok(Response::Done)
             }
+            Request::SubmitQuery { .. }
+            | Request::JobStatus { .. }
+            | Request::FetchResult { .. } => Err(Error::protocol(
+                "this endpoint serves files only; submit skim jobs to a \
+                 multi-tenant service (`skimroot serve`)",
+            )),
         }
     }
 
@@ -166,60 +176,82 @@ impl XrdServer {
         stop: Arc<AtomicBool>,
     ) -> std::thread::JoinHandle<()> {
         let server = self.clone();
-        listener.set_nonblocking(true).expect("set_nonblocking");
-        std::thread::spawn(move || {
-            let mut conns = Vec::new();
-            while !stop.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        stream.set_nonblocking(false).ok();
-                        let server = server.clone();
-                        let stop = stop.clone();
-                        conns.push(std::thread::spawn(move || {
-                            server.serve_connection(stream, stop);
-                        }));
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(2));
-                    }
-                    Err(_) => break,
-                }
-            }
-            for c in conns {
-                let _ = c.join();
-            }
-        })
+        serve_requests_tcp(listener, stop, move |req| server.handle(req))
     }
+}
 
-    fn serve_connection(&self, mut stream: std::net::TcpStream, stop: Arc<AtomicBool>) {
-        // Periodic read timeout so idle connections observe `stop` and
-        // shutdown joins cleanly even with live clients.
-        stream
-            .set_read_timeout(Some(std::time::Duration::from_millis(200)))
-            .ok();
-        loop {
-            if stop.load(Ordering::Relaxed) {
-                return;
-            }
-            let frame = match read_frame(&mut stream) {
-                Ok(f) => f,
-                Err(crate::Error::Io(e))
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    ) =>
-                {
-                    continue; // idle: re-check stop
+/// Serve the framed request/response protocol over TCP until `stop`
+/// goes true, dispatching each decoded [`Request`] to `handle` — the
+/// accept loop shared by [`XrdServer::serve_tcp`] (plain file serving)
+/// and [`crate::serve::SkimService::serve_tcp`] (file serving + skim
+/// job frames). One thread per connection.
+pub fn serve_requests_tcp<H>(
+    listener: std::net::TcpListener,
+    stop: Arc<AtomicBool>,
+    handle: H,
+) -> std::thread::JoinHandle<()>
+where
+    H: Fn(Request) -> Response + Send + Sync + Clone + 'static,
+{
+    listener.set_nonblocking(true).expect("set_nonblocking");
+    std::thread::spawn(move || {
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !stop.load(Ordering::Relaxed) {
+            // Reap finished connections so a long-lived service does
+            // not accumulate one dead JoinHandle per client.
+            conns.retain(|c| !c.is_finished());
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).ok();
+                    let handle = handle.clone();
+                    let stop = stop.clone();
+                    conns.push(std::thread::spawn(move || {
+                        serve_connection(stream, stop, handle);
+                    }));
                 }
-                Err(_) => return, // disconnect
-            };
-            let resp = match Request::decode(&frame) {
-                Ok(req) => self.handle(req),
-                Err(e) => Response::Error { msg: e.to_string() },
-            };
-            if write_frame(&mut stream, &resp.encode()).is_err() {
-                return;
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(_) => break,
             }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+    })
+}
+
+fn serve_connection<H>(mut stream: std::net::TcpStream, stop: Arc<AtomicBool>, handle: H)
+where
+    H: Fn(Request) -> Response,
+{
+    // Periodic read timeout so idle connections observe `stop` and
+    // shutdown joins cleanly even with live clients.
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(200)))
+        .ok();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(crate::Error::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue; // idle: re-check stop
+            }
+            Err(_) => return, // disconnect
+        };
+        let resp = match Request::decode(&frame) {
+            Ok(req) => handle(req),
+            Err(e) => Response::Error { msg: e.to_string() },
+        };
+        if write_frame(&mut stream, &resp.encode()).is_err() {
+            return;
         }
     }
 }
