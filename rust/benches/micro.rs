@@ -32,6 +32,7 @@ fn main() {
     decode_benches();
     thread_scaling_benches();
     engine_parallelism_benches();
+    dataset_benches();
     json_benches();
 }
 
@@ -274,6 +275,44 @@ fn engine_parallelism_benches() {
             SkimEngine::new(None).run(store, &query, &tl, &opts, &out).unwrap()
         });
     }
+}
+
+/// End-to-end dataset skims: the same 4096 events skimmed as one file
+/// vs as a 4-file dataset (per-file jobs + deterministic merge) —
+/// what the catalog layer costs/saves at job granularity.
+fn dataset_benches() {
+    println!("\n== dataset skims (one file vs 4-file dataset, end-to-end) ==");
+    let root = bench_dir().join("dataset_root");
+    let single = root.join("single.troot");
+    if !single.exists() {
+        let cfg = gen::GenConfig {
+            n_events: 4096,
+            target_branches: 180,
+            n_hlt: 40,
+            basket_events: 512,
+            codec: Codec::Lz4,
+            seed: 23,
+        };
+        gen::generate(&cfg, &single).unwrap();
+        let part_cfg = gen::GenConfig { n_events: 1024, ..cfg };
+        gen::generate_dataset(&part_cfg, root.join("store"), 4, "bench").unwrap();
+    }
+    let dep = skimroot::coordinator::Deployment::server_side(skimroot::net::LinkModel::local());
+    let run = |input: &str, output: &str| {
+        let report = skimroot::SkimJob::new(gen::higgs_query(input, output))
+            .storage(&root)
+            .client_dir(bench_dir().join("dataset_client"))
+            .deployment(dep.clone())
+            .run()
+            .unwrap();
+        report.result.n_pass
+    };
+    harness::bench("e2e skim one file (4096 events)", 1, 5, || {
+        run("single.troot", "bench_single.troot")
+    });
+    harness::bench("e2e skim 4-file dataset (4x1024 events)", 1, 5, || {
+        run("store/part*.troot", "bench_ds.troot")
+    });
 }
 
 fn json_benches() {

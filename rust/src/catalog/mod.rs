@@ -1,0 +1,267 @@
+//! The catalog layer: resolving a [`DatasetSpec`] against a storage
+//! root into an ordered, validated list of catalog-relative files.
+//!
+//! This is the boundary where a query's *lexical* dataset spec
+//! ([`crate::query::DatasetSpec`]) meets the exported file catalog:
+//!
+//! * **validation** — every resolved entry must stay inside the
+//!   storage root. Paths that could escape it (absolute paths, any
+//!   `..`, backslashes) are rejected with a [`crate::Error::Config`]
+//!   *before* anything is opened — this is the wire-level
+//!   path-traversal gate for remotely submitted queries;
+//! * **glob expansion** — patterns are matched against a recursive
+//!   walk of the storage export and returned **sorted**, so a glob
+//!   dataset has one deterministic file order everywhere (CLI, TCP
+//!   service, HTTP jobs API);
+//! * **named catalogs** — `catalog:NAME` reads `NAME.catalog` in the
+//!   storage root (one file per line, `#` comments), preserving the
+//!   catalog's listed order;
+//! * **striping** — [`lane_of`] is the shared file → DPU-lane
+//!   placement rule used by the coordinator's fan-out.
+//!
+//! Resolution is lexical beyond globs: explicit files and catalog
+//! entries are *not* checked for existence here (a missing file fails
+//! that file at open time, with per-file fault isolation), matching
+//! the single-file job contract where a bad path fails at open.
+
+use crate::query::wildcard::glob_match;
+use crate::query::DatasetSpec;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Maximum directory depth a glob walk descends below the storage
+/// root (defensive bound against pathological or cyclic exports).
+const MAX_WALK_DEPTH: usize = 16;
+
+/// Validate one catalog-relative path: non-empty, relative, forward
+/// slashes only, and free of `..` — the same rule the XRootD-like
+/// file server enforces, applied *before* any job work happens.
+pub fn validate_entry(path: &str) -> Result<()> {
+    if path.is_empty() {
+        return Err(Error::Config("dataset entry must not be empty".into()));
+    }
+    if path.starts_with('/') || path.contains('\\') || path.contains("..") {
+        return Err(Error::Config(format!(
+            "dataset entry '{path}' escapes the storage root (absolute \
+             paths, '..' and backslashes are rejected)"
+        )));
+    }
+    Ok(())
+}
+
+/// Resolve a dataset spec against `root` into an ordered list of
+/// validated catalog-relative files. See the module docs for the
+/// per-variant rules.
+pub fn resolve(spec: &DatasetSpec, root: &Path) -> Result<Vec<String>> {
+    match spec {
+        DatasetSpec::File(path) => {
+            validate_entry(path)?;
+            Ok(vec![path.clone()])
+        }
+        DatasetSpec::Files(files) => {
+            if files.is_empty() {
+                return Err(Error::Config("dataset file list is empty".into()));
+            }
+            for f in files {
+                validate_entry(f)?;
+            }
+            Ok(files.clone())
+        }
+        DatasetSpec::Glob(pattern) => {
+            validate_entry(pattern)?;
+            let files = list_glob(root, pattern)?;
+            if files.is_empty() {
+                return Err(Error::Config(format!(
+                    "dataset glob '{pattern}' matched no files under the storage root"
+                )));
+            }
+            Ok(files)
+        }
+        DatasetSpec::Catalog(name) => {
+            validate_entry(name)?;
+            read_catalog(root, name)
+        }
+    }
+}
+
+/// Expand a glob pattern against a recursive walk of `root`: every
+/// regular file whose root-relative path (forward slashes) matches is
+/// returned, sorted lexicographically.
+pub fn list_glob(root: &Path, pattern: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    walk(root, "", pattern, 0, &mut out)?;
+    out.sort_unstable();
+    Ok(out)
+}
+
+fn walk(
+    dir: &Path,
+    prefix: &str,
+    pattern: &str,
+    depth: usize,
+    out: &mut Vec<String>,
+) -> Result<()> {
+    if depth > MAX_WALK_DEPTH {
+        return Ok(());
+    }
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        // A missing/unreadable root yields an empty listing; the
+        // caller turns that into a "matched no files" config error.
+        Err(_) => return Ok(()),
+    };
+    for entry in entries {
+        let entry = entry?;
+        let Ok(name) = entry.file_name().into_string() else {
+            continue; // non-UTF-8 names cannot be catalog entries
+        };
+        let rel = if prefix.is_empty() { name.clone() } else { format!("{prefix}/{name}") };
+        let ft = entry.file_type()?;
+        if ft.is_dir() {
+            walk(&entry.path(), &rel, pattern, depth + 1, out)?;
+        } else if ft.is_file() && glob_match(pattern, &rel) {
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Read a named catalog: `NAME.catalog` (the suffix is appended
+/// unless already present), itself a catalog-relative path under the
+/// storage root; one file per line in listed order, blank lines and
+/// `#` comments skipped. Entries are resolved **relative to the
+/// catalog file's own directory** (so a dataset generated under
+/// `store/` carries a self-contained `store/NAME.catalog`), and every
+/// resulting path is validated.
+pub fn read_catalog(root: &Path, name: &str) -> Result<Vec<String>> {
+    let file = if name.ends_with(".catalog") {
+        name.to_string()
+    } else {
+        format!("{name}.catalog")
+    };
+    let text = std::fs::read_to_string(root.join(&file))
+        .map_err(|e| Error::Config(format!("catalog '{name}': cannot read {file}: {e}")))?;
+    let prefix = match std::path::Path::new(&file).parent() {
+        Some(p) if !p.as_os_str().is_empty() => {
+            format!("{}/", p.to_string_lossy())
+        }
+        _ => String::new(),
+    };
+    let mut files = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let entry = format!("{prefix}{line}");
+        validate_entry(&entry)?;
+        files.push(entry);
+    }
+    if files.is_empty() {
+        return Err(Error::Config(format!("catalog '{name}' lists no files")));
+    }
+    Ok(files)
+}
+
+/// The file → lane placement rule for striping a dataset across
+/// `lanes` DPU nodes: files go round-robin, so consecutive files land
+/// on different nodes and every lane's share differs by at most one.
+pub fn lane_of(file_index: usize, lanes: usize) -> usize {
+    file_index % lanes.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("catalog_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("store")).unwrap();
+        for name in ["store/b.troot", "store/a.troot", "store/c.troot", "top.troot"] {
+            std::fs::write(dir.join(name), b"x").unwrap();
+        }
+        std::fs::write(dir.join("notes.txt"), b"x").unwrap();
+        dir
+    }
+
+    #[test]
+    fn validate_rejects_escapes() {
+        for bad in ["", "/etc/passwd", "../secret", "a/../b", "a\\b", "a..b"] {
+            assert!(validate_entry(bad).is_err(), "should reject {bad:?}");
+        }
+        for ok in ["a.troot", "store/a.troot", "deep/er/f.troot"] {
+            assert!(validate_entry(ok).is_ok(), "should accept {ok:?}");
+        }
+    }
+
+    #[test]
+    fn glob_lists_sorted_matches() {
+        let root = setup("glob");
+        let spec = DatasetSpec::parse("store/*.troot");
+        let files = resolve(&spec, &root).unwrap();
+        assert_eq!(files, vec!["store/a.troot", "store/b.troot", "store/c.troot"]);
+        // Pattern touching every .troot, including the top-level one.
+        let all = resolve(&DatasetSpec::parse("*.troot"), &root).unwrap();
+        assert!(all.contains(&"top.troot".to_string()));
+        // Non-matching glob is a config error.
+        let err = resolve(&DatasetSpec::parse("nope/*.troot"), &root).unwrap_err();
+        assert!(format!("{err}").contains("matched no files"), "{err}");
+    }
+
+    #[test]
+    fn explicit_files_keep_order_without_existence_check() {
+        let root = setup("files");
+        let spec = DatasetSpec::Files(vec!["store/c.troot".into(), "missing.troot".into()]);
+        assert_eq!(resolve(&spec, &root).unwrap(), vec!["store/c.troot", "missing.troot"]);
+        assert!(resolve(&DatasetSpec::Files(Vec::new()), &root).is_err());
+    }
+
+    #[test]
+    fn named_catalog_reads_listed_order() {
+        let root = setup("named");
+        std::fs::write(
+            root.join("run.catalog"),
+            "# run-2018 files\nstore/c.troot\n\nstore/a.troot\n",
+        )
+        .unwrap();
+        let files = resolve(&DatasetSpec::Catalog("run".into()), &root).unwrap();
+        assert_eq!(files, vec!["store/c.troot", "store/a.troot"]);
+        assert!(resolve(&DatasetSpec::Catalog("absent".into()), &root).is_err());
+        std::fs::write(root.join("bad.catalog"), "../oops\n").unwrap();
+        let err = resolve(&DatasetSpec::Catalog("bad".into()), &root).unwrap_err();
+        assert!(format!("{err}").contains("escapes the storage root"), "{err}");
+    }
+
+    #[test]
+    fn nested_catalog_entries_resolve_relative_to_the_catalog() {
+        let root = setup("nested");
+        // A self-contained dataset directory: catalog next to its
+        // files, entries without the directory prefix.
+        std::fs::write(root.join("store/set.catalog"), "a.troot\nb.troot\n").unwrap();
+        let files = resolve(&DatasetSpec::Catalog("store/set".into()), &root).unwrap();
+        assert_eq!(files, vec!["store/a.troot", "store/b.troot"]);
+    }
+
+    #[test]
+    fn traversal_rejected_for_every_variant() {
+        let root = setup("trav");
+        for spec in [
+            DatasetSpec::File("../../secret".into()),
+            DatasetSpec::Files(vec!["ok.troot".into(), "/abs.troot".into()]),
+            DatasetSpec::Glob("../*.troot".into()),
+            DatasetSpec::Catalog("../cat".into()),
+        ] {
+            let err = resolve(&spec, &root).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{spec:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn lane_striping_is_round_robin() {
+        assert_eq!(lane_of(0, 4), 0);
+        assert_eq!(lane_of(5, 4), 1);
+        assert_eq!(lane_of(3, 1), 0);
+        assert_eq!(lane_of(7, 0), 0); // degenerate lanes clamp to 1
+    }
+}

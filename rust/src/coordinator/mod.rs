@@ -370,17 +370,23 @@ impl DeploymentBuilder {
 pub struct JobReport {
     /// The deployment's report label.
     pub name: String,
-    /// The engine outcome (selection counts, funnel, output).
+    /// The engine outcome (selection counts, funnel, output). For a
+    /// dataset job this is the aggregate over its files, and the
+    /// output is the deterministic merge of the per-file skims.
     pub result: SkimResult,
     /// Full per-stage/per-node accounting for the job.
     pub timeline: Timeline,
     /// End-to-end latency (request submission → filtered file at the
     /// client), seconds.
     pub latency: f64,
-    /// Attempts including WLCG-style resubmissions (1 = first try).
+    /// Attempts including WLCG-style resubmissions (1 = first try;
+    /// for dataset jobs, summed over files).
     pub attempts: u32,
     /// CPU utilization per node (busy / end-to-end).
     pub utilization: Vec<(Node, f64)>,
+    /// Per-file outcomes for dataset jobs, in resolved dataset order.
+    /// Empty for single-file jobs, whose report shape is unchanged.
+    pub files: Vec<FileReport>,
 }
 
 impl JobReport {
@@ -392,6 +398,41 @@ impl JobReport {
             .filter(|&(_, t)| t > 0.0)
             .collect()
     }
+
+    /// Files in the job's dataset (0 for single-file jobs).
+    pub fn files_total(&self) -> usize {
+        self.files.len()
+    }
+
+    /// Dataset files that skimmed successfully.
+    pub fn files_done(&self) -> usize {
+        self.files.iter().filter(|f| f.error.is_none()).count()
+    }
+
+    /// Dataset files that failed after exhausting their retries
+    /// (fault-isolated: the rest of the job still completed).
+    pub fn files_failed(&self) -> usize {
+        self.files.len() - self.files_done()
+    }
+}
+
+/// Outcome of one file of a dataset job (per-file timeline summary +
+/// failure detail; see [`JobReport::files`]).
+#[derive(Debug, Clone)]
+pub struct FileReport {
+    /// Catalog-relative path of the file.
+    pub path: String,
+    /// Events the file's skim covered (0 if it failed).
+    pub n_events: u64,
+    /// Events passing the selection (0 if it failed).
+    pub n_pass: u64,
+    /// Attempts including per-file WLCG-style resubmissions.
+    pub attempts: u32,
+    /// Modeled elapsed seconds on the file's private timeline.
+    pub elapsed: f64,
+    /// Failure message when the file failed after all retries; `None`
+    /// for a successful file.
+    pub error: Option<String>,
 }
 
 /// A `ReadAt` wrapper that injects deterministic read failures.
@@ -480,7 +521,17 @@ impl<'rt> Coordinator<'rt> {
 
     /// [`Coordinator::run_job`] with custom pipeline stages registered
     /// into every engine the deployment spins up (each shard of a
-    /// fan-out deployment gets the same stages).
+    /// fan-out deployment, and each file of a dataset, gets the same
+    /// stages).
+    ///
+    /// The query's input is a [`crate::query::DatasetSpec`]; it is
+    /// resolved (and traversal-validated) against the storage root
+    /// here. Single-file specs keep the exact legacy job contract:
+    /// whole-job retries, one engine run, unchanged report shape.
+    /// Multi-file specs go through the dataset path: per-file
+    /// execution with per-file retries and fault isolation,
+    /// file-granular striping across DPU fan-out lanes, and a
+    /// deterministic merge (see `ARCHITECTURE.md` § "Dataset layer").
     ///
     /// The stage `Arc`s are shared across retry attempts and shards:
     /// a *stateful* stage (e.g. a byte-audit accumulator) observes all
@@ -494,6 +545,23 @@ impl<'rt> Coordinator<'rt> {
         stages: &[StageReg],
     ) -> Result<JobReport> {
         deployment.validate()?;
+        // Resolve the dataset up front. This is also the
+        // path-traversal gate: entries that could escape the storage
+        // root are rejected with a config error before any I/O.
+        let files = crate::catalog::resolve(&query.input, &self.storage_root)?;
+        if query.input.is_single() {
+            return self.run_single_file(query, deployment, stages);
+        }
+        self.run_dataset(query, &files, deployment, stages)
+    }
+
+    /// The legacy single-file job: whole-job WLCG-style retries.
+    fn run_single_file(
+        &self,
+        query: &SkimQuery,
+        deployment: &Deployment,
+        stages: &[StageReg],
+    ) -> Result<JobReport> {
         let timeline = Timeline::new();
         let mut attempts = 0;
         loop {
@@ -508,10 +576,7 @@ impl<'rt> Coordinator<'rt> {
                 Ok(result) => {
                     timeline.count("attempts", 1);
                     let latency = timeline.elapsed();
-                    let utilization = [Node::Client, Node::Server, Node::Dpu, Node::DpuEngine]
-                        .iter()
-                        .map(|&n| (n, timeline.utilization(n)))
-                        .collect();
+                    let utilization = node_utilization(&timeline);
                     return Ok(JobReport {
                         name: deployment.name.clone(),
                         result,
@@ -519,6 +584,7 @@ impl<'rt> Coordinator<'rt> {
                         latency,
                         attempts,
                         utilization,
+                        files: Vec::new(),
                     });
                 }
                 Err(e) => {
@@ -536,6 +602,203 @@ impl<'rt> Coordinator<'rt> {
         }
     }
 
+    /// The dataset path: execute each resolved file as its own
+    /// fault-isolated sub-job, then merge deterministically.
+    ///
+    /// * **Striping** — for DPU placements the file list is striped
+    ///   round-robin across the `fan_out` lanes
+    ///   ([`crate::catalog::lane_of`]); whole files are the placement
+    ///   unit (locality: one file's baskets stay on one node's
+    ///   wire/cache), replacing the single-file cluster-range split as
+    ///   the only fan-out axis. Client/server placements run the files
+    ///   sequentially on one lane.
+    /// * **Fault isolation** — each file gets its own retry loop
+    ///   ([`FaultConfig::max_retries`]); a file that exhausts its
+    ///   retries (e.g. one corrupt input) fails *that file*, recorded
+    ///   in [`JobReport::files`] and the result warnings, while the
+    ///   rest of the dataset completes. The job errors only when
+    ///   every file failed.
+    /// * **Virtual-time accounting** — every file runs on a private
+    ///   timeline; lanes model parallel hardware, so only the critical
+    ///   (slowest) lane's accounting folds into the job timeline, and
+    ///   the merge + output transfer land on top.
+    /// * **Determinism** — per-file outputs are merged in resolved
+    ///   dataset order through [`crate::troot::merge`], so the merged
+    ///   bytes are independent of fan-out and completion order (the
+    ///   dataset tests cross-check against a serial single-file loop).
+    fn run_dataset(
+        &self,
+        query: &SkimQuery,
+        files: &[String],
+        deployment: &Deployment,
+        stages: &[StageReg],
+    ) -> Result<JobReport> {
+        let timeline = Timeline::new();
+        std::fs::create_dir_all(&self.client_dir)?;
+        // Keyed by output name so concurrent dataset jobs with
+        // distinct outputs never share a staging directory (same-output
+        // concurrency already races on the final file, as it always
+        // has for single-file jobs). Removed after the merge.
+        let parts_dir = self
+            .client_dir
+            .join(format!("dataset_parts_{}", sanitize(&query.output)));
+        std::fs::create_dir_all(&parts_dir)?;
+        let lanes = match &deployment.placement {
+            Placement::Dpu(_) => deployment.fan_out.max(1),
+            _ => 1,
+        };
+
+        let mut lane_timelines: Vec<Vec<Timeline>> = vec![Vec::new(); lanes];
+        let mut file_reports: Vec<FileReport> = Vec::with_capacity(files.len());
+        let mut part_paths: Vec<std::path::PathBuf> = Vec::new();
+        let mut part_results: Vec<SkimResult> = Vec::new();
+        let mut total_attempts: u32 = 0;
+        for (idx, file) in files.iter().enumerate() {
+            // The output name flows into DPU scratch staging too, so
+            // it carries the job's output to stay collision-free
+            // across concurrent dataset jobs.
+            let part_name = format!("part{idx:05}_{}", sanitize(&query.output));
+            let sub = query.for_file(file, part_name.clone());
+            let part_path = parts_dir.join(&part_name);
+            let file_tl = Timeline::new();
+            let mut attempts = 0u32;
+            let outcome = loop {
+                attempts += 1;
+                // Distinct fault stream per (file, attempt).
+                let attempt_seed = deployment
+                    .fault
+                    .seed
+                    .wrapping_add((idx as u64 + 1).wrapping_mul(0xa076_1d64_78bd_642f))
+                    .wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(attempts as u64));
+                match self.execute_placement(
+                    &sub, deployment, &file_tl, attempt_seed, stages, &part_path, 1, false,
+                ) {
+                    Ok(result) => break Ok(result),
+                    Err(e) => {
+                        file_tl.count("failures", 1);
+                        if attempts > deployment.fault.max_retries {
+                            break Err(e);
+                        }
+                        // Per-file resubmission overhead.
+                        file_tl.charge(Stage::Other, 1.0);
+                    }
+                }
+            };
+            file_tl.count("attempts", attempts as u64);
+            total_attempts = total_attempts.saturating_add(attempts);
+            let report = match outcome {
+                Ok(result) => {
+                    let fr = FileReport {
+                        path: file.clone(),
+                        n_events: result.n_events,
+                        n_pass: result.n_pass,
+                        attempts,
+                        elapsed: file_tl.elapsed(),
+                        error: None,
+                    };
+                    part_paths.push(part_path);
+                    part_results.push(result);
+                    fr
+                }
+                Err(e) => FileReport {
+                    path: file.clone(),
+                    n_events: 0,
+                    n_pass: 0,
+                    attempts,
+                    elapsed: file_tl.elapsed(),
+                    error: Some(e.to_string()),
+                },
+            };
+            file_reports.push(report);
+            lane_timelines[crate::catalog::lane_of(idx, lanes)].push(file_tl);
+        }
+
+        // Lanes model parallel hardware: only the critical (slowest)
+        // lane's modeled time folds into the job timeline, exactly
+        // like DPU shards — but counters are *real work totals*
+        // (attempts, failures, cache hits, served bytes), so every
+        // lane contributes those.
+        let lane_elapsed =
+            |lane: usize| lane_timelines[lane].iter().map(|t| t.elapsed()).sum::<f64>();
+        let critical = (0..lanes)
+            .max_by(|&a, &b| {
+                lane_elapsed(a).partial_cmp(&lane_elapsed(b)).expect("finite")
+            })
+            .expect("at least one lane");
+        for (lane, tls) in lane_timelines.iter().enumerate() {
+            for tl in tls {
+                if lane == critical {
+                    timeline.merge_from(tl);
+                } else {
+                    timeline.merge_counters_from(tl);
+                }
+            }
+        }
+
+        let done = file_reports.iter().filter(|f| f.error.is_none()).count();
+        timeline.count("files_total", files.len() as u64);
+        timeline.count("files_done", done as u64);
+        timeline.count("files_failed", (files.len() - done) as u64);
+        if done == 0 {
+            let first = file_reports
+                .iter()
+                .find_map(|f| f.error.clone())
+                .unwrap_or_default();
+            let _ = std::fs::remove_dir_all(&parts_dir);
+            return Err(Error::Engine(format!(
+                "dataset job failed: all {} files failed; first error: {first}",
+                files.len()
+            )));
+        }
+
+        // Deterministic merge in resolved dataset order; attributed to
+        // the node that holds the parts.
+        let out_path = self.client_dir.join(sanitize(&query.output));
+        let merge_node = match &deployment.placement {
+            Placement::Client => Node::Client,
+            Placement::Server => Node::Server,
+            Placement::Dpu(_) => Node::Dpu,
+        };
+        let t0 = std::time::Instant::now();
+        let merge_outcome = crate::troot::merge::concat_files(&part_paths, &out_path);
+        timeline.add_real(Stage::OutputWrite, merge_node, t0.elapsed().as_secs_f64());
+        // The parts only staged the merge inputs; drop them either way.
+        let _ = std::fs::remove_dir_all(&parts_dir);
+        let summary = merge_outcome?;
+        // Only the merged file crosses the client link (parts live
+        // where they were produced; client placements already hold
+        // them locally).
+        if !matches!(deployment.placement, Placement::Client) {
+            deployment
+                .client_link
+                .charge(&timeline, Stage::OutputTransfer, summary.file_bytes);
+        }
+
+        let mut result = SkimResult::merge_parts(part_results.iter());
+        result.output_path = out_path;
+        result.output_bytes = summary.file_bytes;
+        for f in file_reports.iter().filter(|f| f.error.is_some()) {
+            result.warnings.push(format!(
+                "dataset file '{}' failed after {} attempts: {}",
+                f.path,
+                f.attempts,
+                f.error.as_deref().unwrap_or("unknown error")
+            ));
+        }
+
+        let latency = timeline.elapsed();
+        let utilization = node_utilization(&timeline);
+        Ok(JobReport {
+            name: deployment.name.clone(),
+            result,
+            timeline,
+            latency,
+            attempts: total_attempts,
+            utilization,
+            files: file_reports,
+        })
+    }
+
     fn run_attempt(
         &self,
         query: &SkimQuery,
@@ -546,6 +809,40 @@ impl<'rt> Coordinator<'rt> {
     ) -> Result<SkimResult> {
         std::fs::create_dir_all(&self.client_dir)?;
         let out_path = self.client_dir.join(sanitize(&query.output));
+        self.execute_placement(
+            query,
+            deployment,
+            timeline,
+            fault_seed,
+            stages,
+            &out_path,
+            deployment.fan_out,
+            true,
+        )
+    }
+
+    /// Run one single-file engine pass under the deployment's
+    /// placement, writing the filtered file to `out_path`.
+    ///
+    /// `dpu_fan_out` controls intra-file cluster-range sharding on DPU
+    /// placements (single-file jobs pass the deployment's `fan_out`;
+    /// the dataset path passes 1 — whole files are its placement
+    /// unit, which keeps per-file outputs identical to single-file
+    /// runs). `ship_output` charges the final client-link hop (the
+    /// dataset path ships only the merged file, once).
+    #[allow(clippy::too_many_arguments)]
+    fn execute_placement(
+        &self,
+        query: &SkimQuery,
+        deployment: &Deployment,
+        timeline: &Timeline,
+        fault_seed: u64,
+        stages: &[StageReg],
+        out_path: &std::path::Path,
+        dpu_fan_out: usize,
+        ship_output: bool,
+    ) -> Result<SkimResult> {
+        let input_path = query.input.single_path()?;
         let server = XrdServer::new(&self.storage_root, deployment.disk);
         server.set_timeline(Some(timeline.clone()));
         // Keep a stat handle: the DPU arm moves `server` into the node.
@@ -571,7 +868,7 @@ impl<'rt> Coordinator<'rt> {
                     timeline.clone(),
                 ));
                 let client = XrdClient::new(wire);
-                let remote: Arc<dyn ReadAt> = Arc::new(client.open(&query.input)?);
+                let remote: Arc<dyn ReadAt> = Arc::new(client.open(input_path)?);
                 let store = wrap_faults(remote);
                 let opts = EngineOpts {
                     two_phase: deployment.two_phase,
@@ -585,13 +882,13 @@ impl<'rt> Coordinator<'rt> {
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;
                 // Output is produced directly on the client: no final
                 // transfer hop.
-                engine.run(store, query, timeline, &opts, &out_path)
+                engine.run(store, query, timeline, &opts, out_path)
             }
             Placement::Server => {
                 // Local reads: no XRootD in the path, no TTreeCache
                 // (§4: "TTreeCache does not function for local ROOT
                 // file access"), per-basket disk seeks.
-                let local = LocalFile::open(self.storage_root.join(&query.input))?;
+                let local = LocalFile::open(self.storage_root.join(input_path))?;
                 let modeled: Arc<dyn ReadAt> = Arc::new(crate::net::ModeledStore::new(
                     local,
                     deployment.disk,
@@ -608,13 +905,15 @@ impl<'rt> Coordinator<'rt> {
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;
-                let result = engine.run(store, query, timeline, &opts, &out_path)?;
-                // Ship the filtered file to the client.
-                deployment.client_link.charge(
-                    timeline,
-                    Stage::OutputTransfer,
-                    result.output_bytes,
-                );
+                let result = engine.run(store, query, timeline, &opts, out_path)?;
+                if ship_output {
+                    // Ship the filtered file to the client.
+                    deployment.client_link.charge(
+                        timeline,
+                        Stage::OutputTransfer,
+                        result.output_bytes,
+                    );
+                }
                 Ok(result)
             }
             Placement::Dpu(config) => {
@@ -632,7 +931,7 @@ impl<'rt> Coordinator<'rt> {
                     }
                 }
                 let scratch = self.client_dir.join("dpu_scratch");
-                let out = if deployment.fan_out <= 1 {
+                let out = if dpu_fan_out <= 1 {
                     let mut dpu = DpuNode::new(config.clone(), server, self.runtime, &scratch);
                     if let Some(cache) = &self.basket_cache {
                         dpu = dpu.with_basket_cache(cache.clone());
@@ -640,7 +939,7 @@ impl<'rt> Coordinator<'rt> {
                     dpu.run_query_with(query, timeline, None, stages)?
                 } else {
                     let mut cluster = DpuCluster::new(
-                        deployment.fan_out,
+                        dpu_fan_out,
                         config.clone(),
                         server,
                         self.runtime,
@@ -651,14 +950,16 @@ impl<'rt> Coordinator<'rt> {
                     }
                     cluster.run_query_with(query, timeline, stages)?
                 };
-                deployment.client_link.charge(
-                    timeline,
-                    Stage::OutputTransfer,
-                    out.output.len() as u64,
-                );
-                std::fs::write(&out_path, &out.output)?;
+                if ship_output {
+                    deployment.client_link.charge(
+                        timeline,
+                        Stage::OutputTransfer,
+                        out.output.len() as u64,
+                    );
+                }
+                std::fs::write(out_path, &out.output)?;
                 let mut result = out.result;
-                result.output_path = out_path;
+                result.output_path = out_path.to_path_buf();
                 Ok(result)
             }
         };
@@ -672,6 +973,14 @@ impl<'rt> Coordinator<'rt> {
         }
         result
     }
+}
+
+/// Per-node CPU utilization rows for a finished job timeline.
+fn node_utilization(timeline: &Timeline) -> Vec<(Node, f64)> {
+    [Node::Client, Node::Server, Node::Dpu, Node::DpuEngine]
+        .iter()
+        .map(|&n| (n, timeline.utilization(n)))
+        .collect()
 }
 
 fn sanitize(name: &str) -> String {
@@ -910,6 +1219,165 @@ mod tests {
         let r = crate::troot::TRootReader::open(LocalFile::open(&out).unwrap()).unwrap();
         assert_eq!(r.meta().branches.len(), 89);
         assert_eq!(r.n_events(), fanned.result.n_pass);
+    }
+
+    // ---------------- dataset-layer coverage --------------------------
+
+    /// A 3-file dataset under its own storage root, plus a catalog.
+    fn setup_dataset(tag: &str) -> (std::path::PathBuf, std::path::PathBuf) {
+        let dir =
+            std::env::temp_dir().join(format!("coord_ds_{}_{tag}", std::process::id()));
+        let storage = dir.join("storage");
+        let client = dir.join("client");
+        std::fs::create_dir_all(storage.join("store")).unwrap();
+        for i in 0..3u64 {
+            let path = storage.join(format!("store/part{i}.troot"));
+            if !path.exists() {
+                let cfg = GenConfig {
+                    n_events: 400,
+                    target_branches: 160,
+                    n_hlt: 40,
+                    basket_events: 200,
+                    codec: Codec::Lz4,
+                    seed: 100 + i,
+                };
+                gen::generate(&cfg, &path).unwrap();
+            }
+        }
+        std::fs::write(
+            storage.join("all.catalog"),
+            "store/part0.troot\nstore/part1.troot\nstore/part2.troot\n",
+        )
+        .unwrap();
+        (storage, client)
+    }
+
+    #[test]
+    fn dataset_glob_aggregates_files_and_merges() {
+        let (storage, client) = setup_dataset("glob");
+        let coord = Coordinator::new(&storage, &client, None);
+        let q = gen::higgs_query("store/*.troot", "ds.troot");
+        let report = coord
+            .run_job(&q, &Deployment::client_opt(LinkModel::dedicated_100g()))
+            .unwrap();
+        assert_eq!(report.files_total(), 3);
+        assert_eq!(report.files_done(), 3);
+        assert_eq!(report.files_failed(), 0);
+        assert_eq!(
+            report.result.n_events,
+            report.files.iter().map(|f| f.n_events).sum::<u64>()
+        );
+        assert_eq!(report.result.n_events, 1200);
+        assert!(report.result.n_pass > 0);
+        assert_eq!(report.timeline.counter("files_total"), 3);
+        assert_eq!(report.timeline.counter("files_done"), 3);
+        // The merged output holds exactly the passing events.
+        let r = crate::troot::TRootReader::open(
+            LocalFile::open(client.join("ds.troot")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(r.n_events(), report.result.n_pass);
+    }
+
+    #[test]
+    fn dataset_named_catalog_matches_glob_byte_for_byte() {
+        let (storage, client) = setup_dataset("catalog");
+        let coord = Coordinator::new(&storage, &client, None);
+        let dep = Deployment::client_opt(LinkModel::dedicated_100g());
+        let a = coord
+            .run_job(&gen::higgs_query("store/*.troot", "a.troot"), &dep)
+            .unwrap();
+        let b = coord
+            .run_job(&gen::higgs_query("catalog:all", "b.troot"), &dep)
+            .unwrap();
+        assert_eq!(a.result.n_pass, b.result.n_pass);
+        assert_eq!(
+            std::fs::read(client.join("a.troot")).unwrap(),
+            std::fs::read(client.join("b.troot")).unwrap()
+        );
+    }
+
+    #[test]
+    fn dataset_rejects_path_traversal_with_config_error() {
+        let (storage, client) = setup_dataset("traversal");
+        let coord = Coordinator::new(&storage, &client, None);
+        let dep = Deployment::client_opt(LinkModel::dedicated_100g());
+        for input in ["../../secret.troot", "/etc/passwd"] {
+            let q = SkimQuery::new(input, "out.troot");
+            let err = coord.run_job(&q, &dep).err().expect("traversal must be rejected");
+            match err {
+                Error::Config(msg) => {
+                    assert!(msg.contains("escapes the storage root"), "{msg}")
+                }
+                other => panic!("expected config error for {input}, got {other}"),
+            }
+        }
+        // Explicit lists are validated entry-by-entry too.
+        let q = SkimQuery::new(
+            vec!["store/part0.troot".to_string(), "../leak.troot".to_string()],
+            "out.troot",
+        );
+        assert!(matches!(coord.run_job(&q, &dep), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn dataset_isolates_per_file_failures() {
+        let (storage, client) = setup_dataset("faulty");
+        // A dataset where one entry does not exist: that file fails,
+        // the others complete, and the job still succeeds.
+        let mut q = gen::higgs_query("store/part0.troot", "iso.troot");
+        q.input = crate::query::DatasetSpec::Files(vec![
+            "store/part0.troot".into(),
+            "store/missing.troot".into(),
+            "store/part2.troot".into(),
+        ]);
+        let coord = Coordinator::new(&storage, &client, None);
+        let mut dep = Deployment::client_opt(LinkModel::dedicated_100g());
+        dep.fault.max_retries = 1;
+        let report = coord.run_job(&q, &dep).unwrap();
+        assert_eq!(report.files_total(), 3);
+        assert_eq!(report.files_done(), 2);
+        assert_eq!(report.files_failed(), 1);
+        assert!(report.files[1].error.is_some());
+        assert!(report.files[1].attempts >= 2, "failed file retried");
+        assert!(report
+            .result
+            .warnings
+            .iter()
+            .any(|w| w.contains("store/missing.troot")));
+        assert_eq!(report.result.n_events, 800);
+        // All files failing fails the job.
+        q.input = crate::query::DatasetSpec::Files(vec![
+            "store/gone1.troot".into(),
+            "store/gone2.troot".into(),
+        ]);
+        let err = coord.run_job(&q, &dep).unwrap_err();
+        assert!(format!("{err}").contains("all 2 files failed"), "{err}");
+    }
+
+    #[test]
+    fn dataset_stripes_files_across_dpu_lanes() {
+        let (storage, client) = setup_dataset("stripe");
+        let coord = Coordinator::new(&storage, &client, None);
+        let q = gen::higgs_query("store/*.troot", "striped.troot");
+        let single = coord
+            .run_job(&q, &Deployment::skim_root(LinkModel::wan_1g()))
+            .unwrap();
+        let single_bytes = std::fs::read(client.join("striped.troot")).unwrap();
+        let dep = Deployment::builder()
+            .name("skimroot-x3")
+            .placement(Placement::Dpu(DpuConfig::default()))
+            .link(LinkModel::wan_1g())
+            .fan_out(3)
+            .build()
+            .unwrap();
+        let fanned = coord.run_job(&q, &dep).unwrap();
+        // Same selection, byte-identical merged output regardless of
+        // fan-out, and the fanned run's critical lane carries ~1 of
+        // the 3 files, so it finishes faster.
+        assert_eq!(fanned.result.n_pass, single.result.n_pass);
+        assert!(fanned.latency < single.latency, "{} vs {}", fanned.latency, single.latency);
+        assert_eq!(single_bytes, std::fs::read(client.join("striped.troot")).unwrap());
     }
 
     #[test]

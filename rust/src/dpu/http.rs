@@ -276,7 +276,10 @@ fn error_json(msg: impl std::fmt::Display) -> String {
     Json::Obj(obj).to_string()
 }
 
-/// Compact JSON rendering of one job status (sorted keys).
+/// Compact JSON rendering of one job status (sorted keys). Dataset
+/// jobs additionally report `files_done`/`files_total` and any
+/// fault-isolated per-file failures; single-file statuses keep their
+/// exact legacy shape.
 fn status_json(status: &crate::serve::JobStatus) -> String {
     let mut obj = BTreeMap::new();
     obj.insert("job".to_string(), Json::Num(status.id as f64));
@@ -286,6 +289,16 @@ fn status_json(status: &crate::serve::JobStatus) -> String {
     obj.insert("latency_secs".to_string(), Json::Num(status.latency));
     obj.insert("cache_hits".to_string(), Json::Num(status.cache_hits as f64));
     obj.insert("cache_misses".to_string(), Json::Num(status.cache_misses as f64));
+    if status.files_total > 0 {
+        obj.insert("files_done".to_string(), Json::Num(status.files_done as f64));
+        obj.insert("files_total".to_string(), Json::Num(status.files_total as f64));
+        if !status.file_errors.is_empty() {
+            obj.insert(
+                "file_errors".to_string(),
+                Json::Arr(status.file_errors.iter().map(|e| Json::Str(e.clone())).collect()),
+            );
+        }
+    }
     if let Some(e) = &status.error {
         obj.insert("error".to_string(), Json::Str(e.clone()));
     }

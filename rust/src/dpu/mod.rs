@@ -26,8 +26,7 @@ use crate::metrics::{Node, Stage, Timeline};
 use crate::net::LinkModel;
 use crate::query::SkimQuery;
 use crate::runtime::SkimRuntime;
-use crate::troot::{ColumnData, FileMeta, ReadAt, TRootReader, TRootWriter};
-use crate::xrootd::cache::CacheStats;
+use crate::troot::{FileMeta, ReadAt, TRootReader};
 use crate::xrootd::{LoopbackWire, XrdClient, XrdServer};
 use crate::{Error, Result};
 use std::path::PathBuf;
@@ -142,7 +141,7 @@ impl<'rt> DpuNode<'rt> {
             timeline.clone(),
         ));
         let client = XrdClient::new(wire);
-        let remote = Arc::new(client.open(&query.input)?);
+        let remote = Arc::new(client.open(query.input.single_path()?)?);
 
         std::fs::create_dir_all(&self.scratch_dir)?;
         let out_path = self.scratch_dir.join(sanitize(&query.output));
@@ -262,7 +261,7 @@ impl<'rt> DpuCluster<'rt> {
         if self.nodes.len() == 1 {
             return self.nodes[0].run_query_with(query, timeline, None, stages);
         }
-        let meta = self.nodes[0].open_meta(&query.input, timeline)?;
+        let meta = self.nodes[0].open_meta(query.input.single_path()?, timeline)?;
         let n_events = meta.n_events;
         let be = meta.basket_events.max(1) as u64;
         let n_clusters = n_events.div_ceil(be);
@@ -300,7 +299,8 @@ impl<'rt> DpuCluster<'rt> {
     }
 
     /// Concatenate shard outputs (in shard order, which is event
-    /// order) into one filtered troot file.
+    /// order) into one filtered troot file, through the shared
+    /// deterministic merge path ([`crate::troot::merge`]).
     fn merge(
         &self,
         query: &SkimQuery,
@@ -315,131 +315,24 @@ impl<'rt> DpuCluster<'rt> {
         }
 
         // Aggregate shard stats (and the union of warnings) before the
-        // output buffers are consumed by the readers below.
-        let mut n_events = 0u64;
-        let mut n_pass = 0u64;
-        let mut stage_funnel = [0u64; 4];
-        let mut baskets_fetched = 0u64;
-        let mut fetched_bytes = 0u64;
-        let mut cache: Option<CacheStats> = None;
-        let mut vectorized = true;
-        let mut warnings: Vec<String> = Vec::new();
-        for s in &shards {
-            n_events += s.result.n_events;
-            n_pass += s.result.n_pass;
-            for (acc, x) in stage_funnel.iter_mut().zip(s.result.stage_funnel) {
-                *acc += x;
-            }
-            baskets_fetched += s.result.baskets_fetched;
-            fetched_bytes += s.result.fetched_bytes;
-            cache = merge_cache_stats(cache, s.result.cache);
-            vectorized &= s.result.vectorized;
-            for w in &s.result.warnings {
-                if !warnings.contains(w) {
-                    warnings.push(w.clone());
-                }
-            }
-        }
+        // output buffers are consumed by the merge readers.
+        let mut result = SkimResult::merge_parts(shards.iter().map(|s| &s.result));
 
         let t0 = Instant::now();
-        let readers: Vec<TRootReader<MemStore>> = shards
-            .into_iter()
-            .map(|s| TRootReader::open(MemStore(s.output)))
-            .collect::<Result<Vec<_>>>()?;
-        let meta0 = readers[0].meta().clone();
-
         std::fs::create_dir_all(&self.scratch_root)?;
         let merged_path = self
             .scratch_root
             .join(format!("merged_{}", sanitize(&query.output)));
-        let mut writer = TRootWriter::new(&merged_path, meta0.codec, meta0.basket_events);
-        for b in &meta0.branches {
-            let cols: Vec<ColumnData> = readers
-                .iter()
-                .map(|r| r.read_branch_all(&b.desc.name))
-                .collect::<Result<Vec<_>>>()?;
-            writer.add_branch(b.desc.clone(), concat_columns(cols)?)?;
-        }
-        let summary = writer.finalize()?;
+        let parts: Vec<Vec<u8>> = shards.into_iter().map(|s| s.output).collect();
+        let summary = crate::troot::merge::concat_buffers(parts, &merged_path)?;
         // Merging is DPU-side compute (the cluster's data-movement
         // layer), attributed like the output write it replaces.
         timeline.add_real(Stage::OutputWrite, Node::Dpu, t0.elapsed().as_secs_f64());
 
-        let result = SkimResult {
-            n_events,
-            n_pass,
-            stage_funnel,
-            output_path: merged_path.clone(),
-            output_bytes: summary.file_bytes,
-            baskets_fetched,
-            fetched_bytes,
-            cache,
-            vectorized,
-            warnings,
-        };
+        result.output_path = merged_path.clone();
+        result.output_bytes = summary.file_bytes;
         let output = std::fs::read(&merged_path)?;
         Ok(DpuJobOutput { result, output })
-    }
-}
-
-/// In-memory [`ReadAt`] store over a shard's output bytes.
-struct MemStore(Vec<u8>);
-
-impl ReadAt for MemStore {
-    fn read_at(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
-        let o = offset as usize;
-        self.0
-            .get(o..o + len)
-            .map(|s| s.to_vec())
-            .ok_or_else(|| Error::format("mem store read out of bounds"))
-    }
-
-    fn size(&self) -> Result<u64> {
-        Ok(self.0.len() as u64)
-    }
-}
-
-/// Concatenate whole columns in shard order (scalar: append values;
-/// jagged: rebase offsets).
-fn concat_columns(cols: Vec<ColumnData>) -> Result<ColumnData> {
-    let mut iter = cols.into_iter();
-    let mut acc = iter
-        .next()
-        .ok_or_else(|| Error::Engine("concat of zero columns".into()))?;
-    for col in iter {
-        match (&mut acc, col) {
-            (ColumnData::Scalar(a), ColumnData::Scalar(b)) => {
-                let n = b.len();
-                a.extend_from_range(&b, 0..n);
-            }
-            (
-                ColumnData::Jagged { offsets, values },
-                ColumnData::Jagged { offsets: bo, values: bv },
-            ) => {
-                let base = *offsets.last().unwrap_or(&0);
-                for &o in &bo[1..] {
-                    offsets.push(base + o);
-                }
-                let n = bv.len();
-                values.extend_from_range(&bv, 0..n);
-            }
-            _ => return Err(Error::Engine("shard column kind mismatch".into())),
-        }
-    }
-    Ok(acc)
-}
-
-fn merge_cache_stats(a: Option<CacheStats>, b: Option<CacheStats>) -> Option<CacheStats> {
-    match (a, b) {
-        (Some(x), Some(y)) => Some(CacheStats {
-            hits: x.hits + y.hits,
-            misses: x.misses + y.misses,
-            passthrough: x.passthrough + y.passthrough,
-            prefetch_batches: x.prefetch_batches + y.prefetch_batches,
-            prefetched_bytes: x.prefetched_bytes + y.prefetched_bytes,
-        }),
-        (x, None) => x,
-        (None, y) => y,
     }
 }
 
@@ -455,6 +348,7 @@ mod tests {
     use crate::compress::Codec;
     use crate::gen::{self, GenConfig};
     use crate::net::DiskModel;
+    use crate::troot::merge::MemStore;
     use crate::troot::LocalFile;
 
     fn setup() -> (XrdServer, std::path::PathBuf) {
@@ -591,20 +485,6 @@ mod tests {
     fn scratch_name_sanitized() {
         assert_eq!(sanitize("../../etc/passwd"), ".._.._etc_passwd");
         assert_eq!(sanitize("ok-file.troot"), "ok-file.troot");
-    }
-
-    #[test]
-    fn concat_rebases_jagged_offsets() {
-        let a = ColumnData::jagged_f32(&[vec![1.0, 2.0], vec![3.0]]);
-        let b = ColumnData::jagged_f32(&[vec![], vec![4.0, 5.0]]);
-        let merged = concat_columns(vec![a, b]).unwrap();
-        match merged {
-            ColumnData::Jagged { offsets, values } => {
-                assert_eq!(offsets, vec![0, 2, 3, 3, 5]);
-                assert_eq!(values.len(), 5);
-            }
-            _ => unreachable!(),
-        }
     }
 
     #[test]

@@ -212,6 +212,60 @@ pub struct SkimResult {
     pub warnings: Vec<String>,
 }
 
+impl SkimResult {
+    /// Fold per-part results — event-range shards of a DPU fan-out or
+    /// per-file results of a dataset job — into one aggregate: counts
+    /// and funnels add, cache stats merge, `vectorized` is the AND
+    /// over parts, warnings are deduplicated in first-seen order. The
+    /// caller sets `output_path` / `output_bytes` after writing the
+    /// merged file (they start empty / zero here).
+    pub fn merge_parts<'a>(parts: impl IntoIterator<Item = &'a SkimResult>) -> SkimResult {
+        let mut acc = SkimResult {
+            n_events: 0,
+            n_pass: 0,
+            stage_funnel: [0; 4],
+            output_path: std::path::PathBuf::new(),
+            output_bytes: 0,
+            baskets_fetched: 0,
+            fetched_bytes: 0,
+            cache: None,
+            vectorized: true,
+            warnings: Vec::new(),
+        };
+        for s in parts {
+            acc.n_events += s.n_events;
+            acc.n_pass += s.n_pass;
+            for (a, x) in acc.stage_funnel.iter_mut().zip(s.stage_funnel) {
+                *a += x;
+            }
+            acc.baskets_fetched += s.baskets_fetched;
+            acc.fetched_bytes += s.fetched_bytes;
+            acc.cache = merge_cache_stats(acc.cache, s.cache);
+            acc.vectorized &= s.vectorized;
+            for w in &s.warnings {
+                if !acc.warnings.contains(w) {
+                    acc.warnings.push(w.clone());
+                }
+            }
+        }
+        acc
+    }
+}
+
+fn merge_cache_stats(a: Option<CacheStats>, b: Option<CacheStats>) -> Option<CacheStats> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(CacheStats {
+            hits: x.hits + y.hits,
+            misses: x.misses + y.misses,
+            passthrough: x.passthrough + y.passthrough,
+            prefetch_batches: x.prefetch_batches + y.prefetch_batches,
+            prefetched_bytes: x.prefetched_bytes + y.prefetched_bytes,
+        }),
+        (x, None) => x,
+        (None, y) => y,
+    }
+}
+
 /// The filtering engine: an optional PJRT runtime handle plus the
 /// stage [`Pipeline`]. Without a runtime only the interpreter path is
 /// available; with the default pipeline it reproduces the paper's

@@ -680,7 +680,9 @@ impl<'a> StageCtx<'a> {
         let (cache_file_key, cache_branch_keys, cache_output_keys) =
             if opts.basket_cache.is_some() {
                 (
-                    Arc::<str>::from(query.input.as_str()),
+                    // Single-file key: dataset jobs are decomposed into
+                    // per-file queries before they reach the engine.
+                    Arc::<str>::from(query.input.to_string()),
                     phase1
                         .iter()
                         .map(|b| Arc::<str>::from(b.desc.name.as_str()))

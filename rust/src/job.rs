@@ -4,7 +4,13 @@
 //!
 //! A job is a query plus a [`Deployment`] (where filtering runs, over
 //! which links) plus the local context (storage root, client output
-//! directory, optional PJRT runtime) plus any custom pipeline stages:
+//! directory, optional PJRT runtime) plus any custom pipeline stages.
+//! The query's input is a dataset spec ([`crate::query::DatasetSpec`]):
+//! one file keeps the legacy single-file contract, while a glob
+//! (`"store/*.troot"`), an explicit list or a `catalog:NAME` reference
+//! runs the whole dataset — per-file fault isolation, DPU striping and
+//! a deterministic merged output (see [`crate::catalog`] and the
+//! coordinator's dataset path):
 //!
 //! ```no_run
 //! use skimroot::net::LinkModel;
@@ -111,12 +117,28 @@ impl<'rt> SkimJob<'rt> {
     /// Build and render the execution plan — the selection expression
     /// tree, phase-1/phase-2 branch fetch sets and the kernel-fit
     /// decision — without running the job (CLI `skim --explain`).
-    /// Reads only the input file's metadata from the storage root.
+    /// Reads only file metadata from the storage root. For a dataset
+    /// query the resolved file list is rendered first and the plan is
+    /// built against the first file's schema (per-file fetch sets are
+    /// identical across a homogeneous dataset).
     pub fn explain(&self) -> Result<String> {
-        let store = crate::troot::LocalFile::open(self.storage_root.join(&self.query.input))?;
+        let files = crate::catalog::resolve(&self.query.input, &self.storage_root)?;
+        let store = crate::troot::LocalFile::open(self.storage_root.join(&files[0]))?;
         let reader = crate::troot::TRootReader::open(store)?;
         let plan = crate::query::plan::SkimPlan::build(&self.query, reader.meta())?;
-        Ok(plan.explain(&self.query))
+        let mut out = String::new();
+        if !self.query.input.is_single() {
+            out.push_str(&format!(
+                "dataset: {} files resolved from '{}'\n",
+                files.len(),
+                self.query.input
+            ));
+            for f in &files {
+                out.push_str(&format!("  {f}\n"));
+            }
+        }
+        out.push_str(&plan.explain(&self.query));
+        Ok(out)
     }
 
     /// Execute the job (with the deployment's WLCG-style retries).

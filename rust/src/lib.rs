@@ -37,6 +37,17 @@
 //! (`main.rs`), the DPU HTTP service ([`dpu::http`]), the eval harness
 //! ([`coordinator::eval`]) and the `examples/` all go through it.
 //!
+//! ## The dataset layer
+//!
+//! The unit of work is a **dataset**, not a file: a query's input is
+//! a [`DatasetSpec`] — one file (the legacy contract, unchanged), an
+//! explicit list, a glob over the storage export, or a named catalog
+//! — resolved and traversal-validated by [`catalog`]. Multi-file jobs
+//! run per file with fault isolation and per-file retries, stripe
+//! whole files across DPU fan-out lanes, and merge deterministically
+//! through [`troot::merge`] (byte-stable regardless of fan-out,
+//! parallelism and completion order).
+//!
 //! ## The three layers
 //!
 //! * **Layer 3 (this crate)** — a ROOT-like columnar storage substrate
@@ -72,6 +83,7 @@
 
 #![warn(missing_docs)]
 
+pub mod catalog;
 pub mod cli;
 pub mod compress;
 pub mod coordinator;
@@ -91,7 +103,7 @@ pub mod xrootd;
 pub use coordinator::{Deployment, JobReport, Mode, Placement};
 pub use engine::{FilterStage, Hook, StageCtx, Verdict};
 pub use job::SkimJob;
-pub use query::{Expr, SkimQuery};
+pub use query::{DatasetSpec, Expr, SkimQuery};
 pub use serve::{BasketCache, SkimScheduler, SkimService};
 
 /// Crate-wide result alias.

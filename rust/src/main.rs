@@ -67,12 +67,18 @@ USAGE: skimroot <command> [flags]
 COMMANDS:
   gen    --out FILE --events N [--branches 1749] [--hlt 677]
          [--basket 1000] [--codec lz4|zlib|xz|none] [--seed N]
-  skim   --storage DIR (--query FILE | --higgs --input NAME |
-         --input NAME [--branches A,B,*]) [--cut 'EXPR'] [--explain]
+         [--files N [--catalog NAME]]
+         (--files N treats --out as a directory and writes an N-file
+          dataset partNNN.troot plus a NAME.catalog listing)
+  skim   --storage DIR (--query FILE | --higgs --input SPEC |
+         --input SPEC [--branches A,B,*]) [--cut 'EXPR'] [--explain]
          [--mode client-legacy|client-opt|server-side|skimroot]
          [--link 1g|10g|100g] [--fan-out N] [--artifacts DIR]
          [--client-dir DIR] [--fail-prob P] [--retries N]
-         (--cut takes a TCut-style string, e.g.
+         (SPEC is a dataset spec: one file, a glob like
+          'store/*.troot', or catalog:NAME — multi-file datasets run
+          per file with fault isolation and merge deterministically;
+          --cut takes a TCut-style string, e.g.
           'nMuon >= 2 && (HLT_Mu50 || max(Muon_pt) > 100)';
           --explain prints the compiled plan without running)
   serve  --root DIR --listen ADDR [--workers N] [--queue-depth N]
@@ -126,6 +132,29 @@ fn cmd_gen(raw: Vec<String>) -> Result<()> {
         seed: args.parse_num("seed", 0x5eed_cafeu64)?,
     };
     let out = args.require("out")?;
+    let n_files: usize = args.parse_num("files", 1usize)?;
+    if args.get("files").is_some() {
+        // --files given (any N ≥ 1): dataset mode, --out is a
+        // directory — a 1-file dataset still gets its catalog.
+        if n_files == 0 {
+            return Err(Error::Config("--files must be at least 1".into()));
+        }
+        let catalog = args.get_or("catalog", "dataset");
+        let summaries = gen::generate_dataset(&cfg, out, n_files, catalog)?;
+        let events: u64 = summaries.iter().map(|s| s.n_events).sum();
+        let bytes: u64 = summaries.iter().map(|s| s.file_bytes).sum();
+        // The hint treats the generated directory itself as the
+        // storage root — always valid; prefix the inputs yourself when
+        // exporting a parent directory instead.
+        println!(
+            "wrote {n_files}-file dataset under {out}: {} events total, {} on disk; \
+             catalog {catalog}.catalog (skim it with --storage {out} \
+             --input 'part*.troot' or --input catalog:{catalog})",
+            events,
+            skimroot::util::human_bytes(bytes),
+        );
+        return Ok(());
+    }
     let summary = gen::generate(&cfg, out)?;
     println!(
         "wrote {out}: {} events, {} branches, {} baskets, {} raw → {} ({}x)",
@@ -202,6 +231,24 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
         report.attempts,
         skimroot::util::human_bytes(report.result.output_bytes),
     );
+    if !report.files.is_empty() {
+        println!("files: {}/{} ok", report.files_done(), report.files_total());
+        for f in &report.files {
+            match &f.error {
+                Some(e) => println!(
+                    "  FAIL {} (attempts {}): {e}",
+                    f.path, f.attempts
+                ),
+                None => println!(
+                    "  ok   {} events={} pass={} ({})",
+                    f.path,
+                    f.n_events,
+                    f.n_pass,
+                    skimroot::util::human_secs(f.elapsed)
+                ),
+            }
+        }
+    }
     println!("\n{}", report.timeline.report());
     println!("\nutilization:");
     for (node, u) in &report.utilization {

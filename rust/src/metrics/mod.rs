@@ -210,6 +210,23 @@ impl Timeline {
             .fetch_add(other.virt_ns.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
+    /// Fold only another timeline's **counters** into this one.
+    /// Counters are real work totals (attempts, cache hits, served
+    /// bytes) that must be summed across *all* parallel branches, even
+    /// when only the critical branch's modeled time is folded via
+    /// [`Timeline::merge_from`] — the dataset layer uses this for its
+    /// non-critical lanes.
+    pub fn merge_counters_from(&self, other: &Timeline) {
+        if Arc::ptr_eq(&self.inner, &other.inner) {
+            return;
+        }
+        let counters = other.inner.lock().unwrap().counters.clone();
+        let mut tab = self.inner.lock().unwrap();
+        for (k, c) in counters {
+            *tab.counters.entry(k).or_insert(0) += c;
+        }
+    }
+
     /// Total stage seconds: real + virtual.
     pub fn stage_total(&self, stage: Stage) -> f64 {
         let tab = self.inner.lock().unwrap();

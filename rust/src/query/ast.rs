@@ -47,6 +47,7 @@
 //! }
 //! ```
 
+use super::dataset::DatasetSpec;
 use super::expr::Expr;
 use super::json::Json;
 use super::parse;
@@ -284,8 +285,11 @@ impl Selection {
 /// A complete skim request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SkimQuery {
-    /// Catalog-relative path of the input file.
-    pub input: String,
+    /// The input dataset: one catalog-relative file (the legacy
+    /// single-file job), an explicit file list, a glob over the
+    /// storage export, or a named catalog. See
+    /// [`crate::query::DatasetSpec`] and [`crate::catalog`].
+    pub input: DatasetSpec,
     /// Output file name for the filtered result.
     pub output: String,
     /// Branch patterns to keep in the output (wildcards allowed).
@@ -303,10 +307,12 @@ pub struct SkimQuery {
 
 impl SkimQuery {
     /// A fresh query: keep every branch, select every event. Chain the
-    /// fluent builders to shape it:
+    /// fluent builders to shape it. The input accepts any dataset-spec
+    /// spelling — a single file, a glob over the storage export, or a
+    /// `catalog:NAME` reference:
     ///
     /// ```
-    /// use skimroot::query::{Expr, SkimQuery};
+    /// use skimroot::query::{DatasetSpec, Expr, SkimQuery};
     ///
     /// let q = SkimQuery::new("events.troot", "skim.troot")
     ///     .keep(&["Muon_*", "MET_pt", "HLT_Mu50"])
@@ -314,8 +320,11 @@ impl SkimQuery {
     ///     .with_cut_str("HLT_Mu50 || max(Muon_pt) > 100")
     ///     .unwrap();
     /// assert_eq!(q.referenced_branches(), vec!["nMuon", "HLT_Mu50", "Muon_pt"]);
+    ///
+    /// let d = SkimQuery::new("store/*.troot", "skim.troot");
+    /// assert_eq!(d.input, DatasetSpec::Glob("store/*.troot".into()));
     /// ```
-    pub fn new(input: impl Into<String>, output: impl Into<String>) -> SkimQuery {
+    pub fn new(input: impl Into<DatasetSpec>, output: impl Into<String>) -> SkimQuery {
         SkimQuery {
             input: input.into(),
             output: output.into(),
@@ -324,6 +333,16 @@ impl SkimQuery {
             selection: Selection::default(),
             cut: None,
         }
+    }
+
+    /// The per-file sub-query the dataset layer executes: same
+    /// selection and branch patterns, input pinned to one resolved
+    /// file, output renamed to the per-file part name.
+    pub fn for_file(&self, path: &str, part_output: impl Into<String>) -> SkimQuery {
+        let mut q = self.clone();
+        q.input = DatasetSpec::File(path.to_string());
+        q.output = part_output.into();
+        q
     }
 
     /// Output branch patterns to keep (wildcards allowed).
@@ -399,10 +418,36 @@ impl SkimQuery {
     /// Validate an already-parsed JSON payload (errors carry field
     /// paths, e.g. `selection.objects[0].cuts[1].op`).
     pub fn from_json(v: &Json) -> Result<SkimQuery> {
-        let input = str_at(v, "", "input")?;
-        if input.is_empty() {
-            return Err(Error::query("input: must not be empty"));
-        }
+        // `input` is a string for single-file / glob / catalog specs
+        // (legacy payloads unchanged) or an array of strings for an
+        // explicit dataset file list.
+        let input = match v.get("input") {
+            Some(Json::Str(s)) => {
+                if s.is_empty() {
+                    return Err(Error::query("input: must not be empty"));
+                }
+                DatasetSpec::parse(s)
+            }
+            Some(Json::Arr(items)) => {
+                if items.is_empty() {
+                    return Err(Error::query("input: file list must not be empty"));
+                }
+                let files = items
+                    .iter()
+                    .enumerate()
+                    .map(|(i, f)| {
+                        f.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| Error::query(format!("input[{i}]: must be a string")))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                DatasetSpec::Files(files)
+            }
+            Some(_) => {
+                return Err(Error::query("input: must be a string or an array of strings"))
+            }
+            None => return Err(Error::query("input: missing required field")),
+        };
         let output = str_at(v, "", "output")?;
         if output.is_empty() {
             return Err(Error::query("output: must not be empty"));
@@ -447,7 +492,13 @@ impl SkimQuery {
     /// legacy payloads round-trip byte-for-byte).
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
-        obj.insert("input".into(), Json::Str(self.input.clone()));
+        let input_json = match &self.input {
+            DatasetSpec::Files(files) => {
+                Json::Arr(files.iter().map(|f| Json::Str(f.clone())).collect())
+            }
+            spec => Json::Str(spec.to_string()),
+        };
+        obj.insert("input".into(), input_json);
         obj.insert("output".into(), Json::Str(self.output.clone()));
         obj.insert(
             "branches".into(),
@@ -776,6 +827,42 @@ mod tests {
         assert_eq!(refs.iter().filter(|b| *b == "nElectron").count(), 1);
         assert!(refs.iter().any(|b| b == "MET_pt"));
         assert_eq!(refs.last().unwrap(), "MET_pt");
+    }
+
+    #[test]
+    fn dataset_input_forms_roundtrip() {
+        // Glob spelling stays a string field.
+        let q = SkimQuery::from_json_text(
+            r#"{"input": "store/*.troot", "output": "b.troot"}"#,
+        )
+        .unwrap();
+        assert_eq!(q.input, DatasetSpec::Glob("store/*.troot".into()));
+        let q2 = SkimQuery::from_json_text(&q.to_json().to_string()).unwrap();
+        assert_eq!(q, q2);
+        // Named catalog.
+        let q = SkimQuery::from_json_text(
+            r#"{"input": "catalog:run2018", "output": "b.troot"}"#,
+        )
+        .unwrap();
+        assert_eq!(q.input, DatasetSpec::Catalog("run2018".into()));
+        assert_eq!(SkimQuery::from_json_text(&q.to_json().to_string()).unwrap(), q);
+        // Explicit file list serializes as an array.
+        let q = SkimQuery::from_json_text(
+            r#"{"input": ["a.troot", "b.troot"], "output": "b.troot"}"#,
+        )
+        .unwrap();
+        assert_eq!(q.input, DatasetSpec::Files(vec!["a.troot".into(), "b.troot".into()]));
+        let text = q.to_json().to_string();
+        assert!(text.contains(r#""input":["a.troot","b.troot"]"#), "{text}");
+        assert_eq!(SkimQuery::from_json_text(&text).unwrap(), q);
+        // Invalid list payloads.
+        for bad in [
+            r#"{"input": [], "output": "b"}"#,
+            r#"{"input": ["a", 3], "output": "b"}"#,
+            r#"{"input": 7, "output": "b"}"#,
+        ] {
+            assert!(SkimQuery::from_json_text(bad).is_err(), "should reject: {bad}");
+        }
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! The dataset specification: what a skim job reads.
+//!
+//! SkimROOT's premise is *dataset*-scale reduction — the paper filters
+//! an LHC dataset, not a file — and real HEP reductions iterate
+//! catalogs of thousands of files. [`DatasetSpec`] makes the dataset
+//! the first-class input unit of a [`super::SkimQuery`]:
+//!
+//! * [`DatasetSpec::File`] — one catalog-relative file, the legacy
+//!   single-file job (exact pre-dataset behavior, byte-for-byte);
+//! * [`DatasetSpec::Files`] — an explicit ordered file list;
+//! * [`DatasetSpec::Glob`] — a glob pattern expanded against the
+//!   storage export at planning time (`store/*.troot`);
+//! * [`DatasetSpec::Catalog`] — a named catalog: a `<name>.catalog`
+//!   text file in the storage root listing one file per line.
+//!
+//! The spec is *lexical*: it names files but does not touch storage.
+//! Resolution against a storage root — listing globs, reading catalog
+//! files, and the path-traversal validation gate — lives in
+//! [`crate::catalog`].
+//!
+//! In the JSON payload the `"input"` field stays a string for
+//! single-file, glob and catalog specs (legacy payloads parse and
+//! reserialize byte-for-byte), and becomes an array of strings for an
+//! explicit file list.
+
+use std::fmt;
+
+/// What a query reads: one file, an explicit list, a glob over the
+/// storage export, or a named catalog. See the module docs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DatasetSpec {
+    /// One catalog-relative file path (the legacy single-file job).
+    File(String),
+    /// An explicit ordered list of catalog-relative file paths.
+    Files(Vec<String>),
+    /// A glob pattern (`*`, `?`) expanded against the storage export.
+    Glob(String),
+    /// A named catalog: `<name>.catalog` in the storage root, one
+    /// file per line (`#` comments allowed).
+    Catalog(String),
+}
+
+impl DatasetSpec {
+    /// Parse the string spelling of a spec: `catalog:NAME` names a
+    /// catalog, anything containing a glob metacharacter (`*`, `?`)
+    /// is a glob, everything else is a single file path.
+    ///
+    /// ```
+    /// use skimroot::query::DatasetSpec;
+    ///
+    /// assert_eq!(DatasetSpec::parse("events.troot"), DatasetSpec::File("events.troot".into()));
+    /// assert_eq!(DatasetSpec::parse("store/*.troot"), DatasetSpec::Glob("store/*.troot".into()));
+    /// assert_eq!(DatasetSpec::parse("catalog:run2018"), DatasetSpec::Catalog("run2018".into()));
+    /// ```
+    pub fn parse(s: &str) -> DatasetSpec {
+        if let Some(name) = s.strip_prefix("catalog:") {
+            DatasetSpec::Catalog(name.to_string())
+        } else if s.contains(['*', '?']) {
+            DatasetSpec::Glob(s.to_string())
+        } else {
+            DatasetSpec::File(s.to_string())
+        }
+    }
+
+    /// The single file path when this is a legacy single-file spec.
+    pub fn as_single(&self) -> Option<&str> {
+        match self {
+            DatasetSpec::File(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// True for the legacy single-file spec (the exact pre-dataset job
+    /// contract; multi-file specs go through the dataset layer).
+    pub fn is_single(&self) -> bool {
+        matches!(self, DatasetSpec::File(_))
+    }
+
+    /// The single file path, erroring for multi-file specs — used by
+    /// execution layers that operate strictly per file (the engine,
+    /// the DPU node): the coordinator decomposes dataset jobs into
+    /// per-file queries before they reach those layers.
+    pub fn single_path(&self) -> crate::Result<&str> {
+        self.as_single().ok_or_else(|| {
+            crate::Error::Engine(format!(
+                "dataset spec '{self}' reached a single-file execution path \
+                 (the coordinator should have decomposed it per file)"
+            ))
+        })
+    }
+}
+
+impl fmt::Display for DatasetSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DatasetSpec::File(p) | DatasetSpec::Glob(p) => f.write_str(p),
+            DatasetSpec::Catalog(name) => write!(f, "catalog:{name}"),
+            DatasetSpec::Files(files) => f.write_str(&files.join(",")),
+        }
+    }
+}
+
+impl From<&str> for DatasetSpec {
+    fn from(s: &str) -> Self {
+        DatasetSpec::parse(s)
+    }
+}
+
+impl From<String> for DatasetSpec {
+    fn from(s: String) -> Self {
+        DatasetSpec::parse(&s)
+    }
+}
+
+impl From<&String> for DatasetSpec {
+    fn from(s: &String) -> Self {
+        DatasetSpec::parse(s)
+    }
+}
+
+impl From<Vec<String>> for DatasetSpec {
+    fn from(files: Vec<String>) -> Self {
+        DatasetSpec::Files(files)
+    }
+}
+
+impl From<&[&str]> for DatasetSpec {
+    fn from(files: &[&str]) -> Self {
+        DatasetSpec::Files(files.iter().map(|f| f.to_string()).collect())
+    }
+}
+
+// Keep `assert_eq!(query.input, "events.troot")`-style comparisons
+// (and ordinary call sites) working across the String → DatasetSpec
+// refactor: a spec equals the string it parses from. `Files` has no
+// string spelling (its display form is lossy), so it never equals
+// one — compare explicit lists as specs, not strings.
+impl PartialEq<str> for DatasetSpec {
+    fn eq(&self, other: &str) -> bool {
+        match self {
+            DatasetSpec::File(p) | DatasetSpec::Glob(p) => p == other,
+            DatasetSpec::Catalog(name) => {
+                other.strip_prefix("catalog:") == Some(name.as_str())
+            }
+            DatasetSpec::Files(_) => false,
+        }
+    }
+}
+
+impl PartialEq<&str> for DatasetSpec {
+    fn eq(&self, other: &&str) -> bool {
+        <DatasetSpec as PartialEq<str>>::eq(self, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_classifies_specs() {
+        assert_eq!(DatasetSpec::parse("a/b.troot"), DatasetSpec::File("a/b.troot".into()));
+        assert_eq!(DatasetSpec::parse("a/*.troot"), DatasetSpec::Glob("a/*.troot".into()));
+        assert_eq!(DatasetSpec::parse("part?.troot"), DatasetSpec::Glob("part?.troot".into()));
+        assert_eq!(DatasetSpec::parse("catalog:x"), DatasetSpec::Catalog("x".into()));
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        for spec in [
+            DatasetSpec::File("events.troot".into()),
+            DatasetSpec::Glob("store/*.troot".into()),
+            DatasetSpec::Catalog("run2018".into()),
+        ] {
+            assert_eq!(DatasetSpec::parse(&spec.to_string()), spec);
+        }
+    }
+
+    #[test]
+    fn single_path_accessors() {
+        let f = DatasetSpec::File("x.troot".into());
+        assert!(f.is_single());
+        assert_eq!(f.as_single(), Some("x.troot"));
+        assert_eq!(f.single_path().unwrap(), "x.troot");
+        let g = DatasetSpec::Glob("*.troot".into());
+        assert!(!g.is_single());
+        assert!(g.as_single().is_none());
+        assert!(g.single_path().is_err());
+    }
+
+    #[test]
+    fn from_impls() {
+        assert_eq!(DatasetSpec::from("a.troot"), DatasetSpec::File("a.troot".into()));
+        assert_eq!(
+            DatasetSpec::from(vec!["a".to_string(), "b".to_string()]),
+            DatasetSpec::Files(vec!["a".into(), "b".into()])
+        );
+        assert_eq!(DatasetSpec::File("a.troot".into()), "a.troot");
+    }
+}

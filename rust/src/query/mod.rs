@@ -8,9 +8,12 @@
 //! * [`parse`] — the TCut-style cut-string frontend
 //!   (`"nMuon >= 2 && (HLT_Mu50 || max(Muon_pt) > 100)"`);
 //! * [`json`] — hand-rolled JSON parser/serializer (no serde offline);
-//! * [`ast`] — the query schema: input/output, branch patterns,
-//!   `force_all`, the Figure-2c structured selection (now sugar that
-//!   lowers onto the IR) and the free-form `"cut"` field;
+//! * [`ast`] — the query schema: input dataset/output, branch
+//!   patterns, `force_all`, the Figure-2c structured selection (now
+//!   sugar that lowers onto the IR) and the free-form `"cut"` field;
+//! * [`dataset`] — the [`DatasetSpec`] input unit: one file, an
+//!   explicit list, a glob over the storage export, or a named
+//!   catalog (resolution lives in [`crate::catalog`]);
 //! * [`wildcard`] — glob expansion of branch patterns against the file
 //!   schema, including the curated `HLT_*` → minimal-trigger-set
 //!   mapping with missing-branch warnings;
@@ -23,6 +26,7 @@
 //!   [`plan::CutProgram::fits_kernel`] honest.
 
 pub mod ast;
+pub mod dataset;
 pub mod expr;
 pub mod json;
 pub mod parse;
@@ -30,6 +34,7 @@ pub mod plan;
 pub mod wildcard;
 
 pub use ast::{CmpOp, EventSelection, ObjectCut, ObjectSelection, ScalarCut, Selection, SkimQuery};
+pub use dataset::DatasetSpec;
 pub use expr::{AggOp, BinOp, Expr, UnaryOp};
 pub use json::Json;
 pub use parse::parse_cut;

@@ -92,7 +92,10 @@ impl SkimService {
                     latency_us: (status.latency * 1e6) as u64,
                     cache_hits: status.cache_hits,
                     cache_misses: status.cache_misses,
+                    files_done: status.files_done,
+                    files_total: status.files_total,
                     msg: status.error.unwrap_or_default(),
+                    file_errors: status.file_errors,
                 },
                 None => Response::Error { msg: format!("no such job {job}") },
             },
@@ -168,7 +171,10 @@ impl SkimServiceClient {
                 latency_us,
                 cache_hits,
                 cache_misses,
+                files_done,
+                files_total,
                 msg,
+                file_errors,
             } => Ok(JobStatus {
                 id: job,
                 state: JobState::from_code(state)?,
@@ -178,7 +184,21 @@ impl SkimServiceClient {
                 cache_hits,
                 cache_misses,
                 error: if msg.is_empty() { None } else { Some(msg) },
+                files_total,
+                files_done,
+                file_errors,
             }),
+            Response::Error { msg } => Err(Error::protocol(msg)),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// List the files a dataset spec resolves to on the service's
+    /// catalog (the `ListCatalog` frame) — preview a glob or
+    /// `catalog:NAME` before submitting a query over it.
+    pub fn list_dataset(&self, spec: &str) -> Result<Vec<String>> {
+        match self.wire.call(Request::ListCatalog { spec: spec.into() })? {
+            Response::Listing { files } => Ok(files),
             Response::Error { msg } => Err(Error::protocol(msg)),
             other => Err(Error::protocol(format!("unexpected response {other:?}"))),
         }
@@ -278,6 +298,79 @@ mod tests {
         assert!(matches!(resp, Response::Error { .. }));
         let resp = service.handle(Request::FetchResult { job: 999 });
         assert!(matches!(resp, Response::Error { .. }));
+        service.shutdown();
+    }
+
+    #[test]
+    fn traversal_queries_rejected_over_wire() {
+        // The path-traversal gate at the wire boundary: a remotely
+        // submitted query whose input (or dataset entries) escapes
+        // the storage root must be rejected as a config error, before
+        // any job is enqueued.
+        let root = dataset("wiretrav");
+        let service = service_over(&root).unwrap();
+        for payload in [
+            r#"{"input": "../../secret", "output": "o.troot"}"#,
+            r#"{"input": "/etc/passwd", "output": "o.troot"}"#,
+            r#"{"input": ["events.troot", "../leak"], "output": "o.troot"}"#,
+            r#"{"input": "catalog:../escape", "output": "o.troot"}"#,
+        ] {
+            match service.handle(Request::SubmitQuery { query_json: payload.into() }) {
+                Response::Error { msg } => {
+                    assert!(msg.contains("escapes the storage root"), "{payload}: {msg}")
+                }
+                other => panic!("{payload}: expected error, got {other:?}"),
+            }
+        }
+        // Listing requests are gated identically.
+        match service.file_server().handle(Request::ListCatalog { spec: "../*".into() }) {
+            Response::Error { msg } => {
+                assert!(msg.contains("escapes the storage root"), "{msg}")
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        service.shutdown();
+    }
+
+    #[test]
+    fn dataset_job_over_tcp_with_listing() {
+        let root = dataset("tcpds");
+        // Two more files so a glob resolves to a 3-file dataset.
+        for i in 0..2u64 {
+            let path = root.join(format!("extra{i}.troot"));
+            if !path.exists() {
+                let cfg = GenConfig {
+                    n_events: 200,
+                    target_branches: 160,
+                    n_hlt: 40,
+                    basket_events: 100,
+                    codec: Codec::Lz4,
+                    seed: 90 + i,
+                };
+                gen::generate(&cfg, &path).unwrap();
+            }
+        }
+        let service = service_over(&root).unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = service.serve_tcp(listener, stop.clone());
+
+        let client = SkimServiceClient::connect(&addr).unwrap();
+        // Preview the dataset by spec, then submit a query over it.
+        let files = client.list_dataset("*.troot").unwrap();
+        assert_eq!(files.len(), 3, "{files:?}");
+        let query = gen::higgs_query("*.troot", "ds_tcp.troot");
+        let job = client.submit(&query).unwrap();
+        let (status, bytes) = client.wait_result(job).unwrap();
+        assert_eq!(status.state, JobState::Done);
+        assert_eq!(status.files_total, 3);
+        assert_eq!(status.files_done, 3);
+        assert!(status.file_errors.is_empty());
+        assert!(bytes.len() > 100);
+
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
         service.shutdown();
     }
 }

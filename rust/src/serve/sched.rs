@@ -5,21 +5,35 @@
 //! Lifecycle of one job (see `ARCHITECTURE.md` § "Serving layer"):
 //!
 //! 1. **submit** — [`SkimScheduler::submit`] parses nothing (it takes a
-//!    validated [`SkimQuery`]) and applies *admission control*: if the
-//!    number of queued-but-not-yet-running jobs has reached the
-//!    configured [`ServeConfig::queue_depth`], the submission is
-//!    rejected immediately (WLCG-style back-pressure: resubmission is
-//!    the client's job, not a hidden unbounded queue's).
-//! 2. **admit / schedule** — accepted jobs enter a FIFO queue drained
-//!    by [`ServeConfig::workers`] worker threads. Each worker drives
-//!    the ordinary [`SkimJob`] facade under the service's
-//!    [`Deployment`] template, so a scheduled job is indistinguishable
-//!    from a one-shot CLI run — including custom pipeline stages and
-//!    WLCG retry semantics.
-//! 3. **shared-cache scan** — every job runs with the service's shared
-//!    [`BasketCache`] installed, so concurrent (and successive) jobs
-//!    over the same dataset decompress each basket once.
-//! 4. **stream result** — the filtered file's bytes are held in the
+//!    validated [`SkimQuery`]) but *resolves the dataset*: the query's
+//!    input spec is expanded against the service's storage root
+//!    ([`crate::catalog::resolve`]), which is also the wire-level
+//!    path-traversal gate — entries escaping the catalog are rejected
+//!    with a config error before anything is enqueued. Admission
+//!    control applies per job: if [`ServeConfig::queue_depth`] jobs
+//!    are already waiting, the submission is rejected immediately
+//!    (WLCG-style back-pressure: resubmission is the client's job,
+//!    not a hidden unbounded queue's).
+//! 2. **decompose / schedule** — a single-file job enqueues one task;
+//!    a dataset job enqueues **one task per file**, so concurrent
+//!    tenants interleave at file granularity on the shared worker
+//!    pool (a thousand-file dataset cannot monopolize the service
+//!    between one small job's files). Each task drives the ordinary
+//!    [`SkimJob`] facade under the service's [`Deployment`] template.
+//! 3. **shared-cache scan** — every task runs with the service's
+//!    shared [`BasketCache`] installed, so concurrent (and
+//!    successive) jobs over the same dataset decompress each basket
+//!    once.
+//! 4. **merge** — per-file outputs are staged as files under the
+//!    service's work dir (not pinned in the job table). When a
+//!    dataset job's last file task completes, the finishing worker
+//!    merges them **in dataset order** through
+//!    [`crate::troot::merge`]: the merged bytes are independent of
+//!    which worker finished which file first. Failed
+//!    files are fault-isolated: they are reported per file
+//!    ([`JobStatus::file_errors`]) while the remaining files merge;
+//!    the job fails only if every file failed.
+//! 5. **stream result** — the filtered file's bytes are held in the
 //!    job table until fetched ([`SkimScheduler::fetch_result`]) or
 //!    dropped ([`SkimScheduler::forget`]).
 
@@ -51,10 +65,11 @@ pub const DEFAULT_RETAINED_JOBS: usize = 256;
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Directory the service's file catalog exports (job inputs are
-    /// catalog-relative, exactly as for one-shot jobs).
+    /// catalog-relative, exactly as for one-shot jobs; dataset specs
+    /// resolve against this root at submission).
     pub storage_root: PathBuf,
-    /// Scratch directory for per-job outputs (one subdirectory per
-    /// job, removed once the result bytes are captured). Defaults to a
+    /// Scratch directory for per-task outputs (one subdirectory per
+    /// task, removed once the result bytes are captured). Defaults to a
     /// unique directory under the system temp dir — deliberately
     /// **outside** the exported catalog, so staged tenant outputs are
     /// never readable through the service's file-serving frames.
@@ -63,7 +78,8 @@ pub struct ServeConfig {
     /// never runs them — useful for tests of admission control.
     pub workers: usize,
     /// Admission control: submissions beyond this many *queued* jobs
-    /// are rejected (running jobs do not count).
+    /// are rejected (running jobs do not count; a dataset job counts
+    /// once however many file tasks it decomposes into).
     pub queue_depth: usize,
     /// Topology template every job runs under (placement, links,
     /// disk, retries). The default is server-side filtering over a
@@ -109,7 +125,8 @@ impl ServeConfig {
 pub enum JobState {
     /// Accepted, waiting for a worker.
     Queued,
-    /// A worker is executing the skim.
+    /// A worker is executing the skim (for dataset jobs: at least one
+    /// file task has started).
     Running,
     /// Finished; the filtered bytes await [`SkimScheduler::fetch_result`].
     Done,
@@ -157,11 +174,13 @@ pub struct JobStatus {
     pub id: JobId,
     /// Current coarse state.
     pub state: JobState,
-    /// Events covered (0 until the job finishes).
+    /// Events covered so far (accumulates per finished file for
+    /// dataset jobs).
     pub n_events: u64,
-    /// Events passing the selection (0 until the job finishes).
+    /// Events passing the selection so far.
     pub n_pass: u64,
-    /// Modeled end-to-end latency in seconds (0 until finished).
+    /// Modeled latency in seconds (summed per-file for dataset jobs —
+    /// the serial-equivalent virtual time).
     pub latency: f64,
     /// Shared-basket-cache hits this job scored.
     pub cache_hits: u64,
@@ -169,6 +188,24 @@ pub struct JobStatus {
     pub cache_misses: u64,
     /// Failure message when `state` is [`JobState::Failed`].
     pub error: Option<String>,
+    /// Files in the job's dataset (0 for single-file jobs, whose
+    /// status shape is unchanged).
+    pub files_total: u64,
+    /// Dataset files completed successfully so far.
+    pub files_done: u64,
+    /// Per-file failure detail, formatted `"<path>: <error>"` —
+    /// fault-isolated failures that did *not* fail the whole job.
+    pub file_errors: Vec<String>,
+}
+
+/// One unit of queued work: a whole single-file job, or one file of a
+/// decomposed dataset job.
+#[derive(Debug, Clone, Copy)]
+enum Task {
+    /// A legacy single-file job, executed in one piece.
+    Whole(JobId),
+    /// One file of a dataset job (index into the job's resolved list).
+    File { job: JobId, index: usize },
 }
 
 struct JobEntry {
@@ -181,12 +218,47 @@ struct JobEntry {
     cache_hits: u64,
     cache_misses: u64,
     error: Option<String>,
+    /// Resolved dataset files (empty for single-file jobs).
+    files: Vec<String>,
+    /// Per-file outputs awaiting the deterministic merge, staged as
+    /// files under [`ServeConfig::work_dir`] — a thousand-file
+    /// dataset must not pin every part's bytes in the job table while
+    /// the worker pool trickles through it.
+    parts: Vec<Option<PathBuf>>,
+    /// Files finished successfully.
+    files_done: u64,
+    /// Fault-isolated per-file failures: `(index, message)`.
+    file_errors: Vec<(usize, String)>,
+    /// Guard so exactly one worker runs the final merge.
+    merging: bool,
+}
+
+impl JobEntry {
+    fn new(query: SkimQuery, files: Vec<String>) -> JobEntry {
+        let n = files.len();
+        JobEntry {
+            query,
+            state: JobState::Queued,
+            output: None,
+            n_events: 0,
+            n_pass: 0,
+            latency: 0.0,
+            cache_hits: 0,
+            cache_misses: 0,
+            error: None,
+            files,
+            parts: (0..n).map(|_| None).collect(),
+            files_done: 0,
+            file_errors: Vec::new(),
+            merging: false,
+        }
+    }
 }
 
 struct SchedInner {
     cfg: ServeConfig,
     cache: Option<Arc<BasketCache>>,
-    queue: Mutex<VecDeque<JobId>>,
+    queue: Mutex<VecDeque<Task>>,
     queue_cv: Condvar,
     jobs: Mutex<HashMap<JobId, JobEntry>>,
     next_id: AtomicU64,
@@ -250,38 +322,43 @@ impl SkimScheduler {
         self.inner.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
-    /// Submit a job. Applies admission control: returns an error
-    /// without enqueuing when [`ServeConfig::queue_depth`] jobs are
-    /// already waiting (the client should back off and resubmit).
+    /// Submit a job. The input dataset spec is resolved (and
+    /// traversal-validated) against the service's storage root — a
+    /// query naming files outside the catalog is rejected here, at
+    /// the wire boundary, with a config error. Admission control then
+    /// applies per job: an error is returned without enqueuing when
+    /// [`ServeConfig::queue_depth`] jobs are already waiting (the
+    /// client should back off and resubmit). Dataset jobs decompose
+    /// into one queued task per file.
     pub fn submit(&self, query: SkimQuery) -> Result<JobId> {
         if self.inner.stop.load(Ordering::Relaxed) {
             return Err(Error::Config("skim service is shutting down".into()));
         }
+        let files = crate::catalog::resolve(&query.input, &self.inner.cfg.storage_root)?;
+        let is_dataset = !query.input.is_single();
         let mut queue = self.inner.queue.lock().unwrap();
-        if queue.len() >= self.inner.cfg.queue_depth {
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        let queued = jobs.values().filter(|e| e.state == JobState::Queued).count();
+        if queued >= self.inner.cfg.queue_depth {
             return Err(Error::Config(format!(
                 "skim service queue full ({} jobs waiting, depth {}); resubmit later",
-                queue.len(),
+                queued,
                 self.inner.cfg.queue_depth
             )));
         }
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        self.inner.jobs.lock().unwrap().insert(
-            id,
-            JobEntry {
-                query,
-                state: JobState::Queued,
-                output: None,
-                n_events: 0,
-                n_pass: 0,
-                latency: 0.0,
-                cache_hits: 0,
-                cache_misses: 0,
-                error: None,
-            },
-        );
-        queue.push_back(id);
-        self.inner.queue_cv.notify_one();
+        if is_dataset {
+            let n = files.len();
+            jobs.insert(id, JobEntry::new(query, files));
+            for index in 0..n {
+                queue.push_back(Task::File { job: id, index });
+            }
+            self.inner.queue_cv.notify_all();
+        } else {
+            jobs.insert(id, JobEntry::new(query, Vec::new()));
+            queue.push_back(Task::Whole(id));
+            self.inner.queue_cv.notify_one();
+        }
         Ok(id)
     }
 
@@ -297,6 +374,13 @@ impl SkimScheduler {
             cache_hits: e.cache_hits,
             cache_misses: e.cache_misses,
             error: e.error.clone(),
+            files_total: e.files.len() as u64,
+            files_done: e.files_done,
+            file_errors: e
+                .file_errors
+                .iter()
+                .map(|(i, msg)| format!("{}: {msg}", e.files[*i]))
+                .collect(),
         })
     }
 
@@ -368,14 +452,14 @@ impl Drop for SkimScheduler {
 
 fn worker_loop(inner: &SchedInner) {
     loop {
-        let id = {
+        let task = {
             let mut queue = inner.queue.lock().unwrap();
             loop {
                 if inner.stop.load(Ordering::Relaxed) {
                     return;
                 }
-                if let Some(id) = queue.pop_front() {
-                    break id;
+                if let Some(task) = queue.pop_front() {
+                    break task;
                 }
                 let (q, _timeout) = inner
                     .queue_cv
@@ -384,12 +468,72 @@ fn worker_loop(inner: &SchedInner) {
                 queue = q;
             }
         };
-        run_one(inner, id);
+        match task {
+            Task::Whole(id) => run_whole(inner, id),
+            Task::File { job, index } => run_file(inner, job, index),
+        }
     }
 }
 
-/// Execute one admitted job through the ordinary [`SkimJob`] facade.
-fn run_one(inner: &SchedInner, id: JobId) {
+/// Execute one query through the ordinary [`SkimJob`] facade, staging
+/// its output under `job_dir` (removed afterwards), panic-isolated: a
+/// panicking job must neither kill the worker (shrinking the pool for
+/// the service's lifetime) nor strand the entry in `Running` with
+/// clients polling forever.
+fn execute_query(
+    inner: &SchedInner,
+    query: SkimQuery,
+    job_dir: &std::path::Path,
+) -> Result<(crate::coordinator::JobReport, Vec<u8>)> {
+    let mut job = SkimJob::new(query)
+        .storage(&inner.cfg.storage_root)
+        .client_dir(job_dir)
+        .deployment(inner.cfg.deployment.clone());
+    if let Some(cache) = &inner.cache {
+        job = job.basket_cache(cache.clone());
+    }
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        job.run().and_then(|report| {
+            let bytes = std::fs::read(&report.result.output_path)?;
+            Ok((report, bytes))
+        })
+    }))
+    .unwrap_or_else(|panic| Err(Error::Engine(format!("job panicked: {}", panic_msg(&panic)))));
+    // The per-task directory only staged the output; the bytes live in
+    // the job table now.
+    let _ = std::fs::remove_dir_all(job_dir);
+    outcome
+}
+
+/// Best-effort human-readable payload of a caught panic.
+fn panic_msg(panic: &(dyn std::any::Any + Send)) -> String {
+    panic
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
+/// Bound retention: abandoned completions (results the client never
+/// fetched) must not accumulate forever. Oldest completed entries are
+/// dropped first; queued/running jobs are never touched.
+fn enforce_retention(jobs: &mut HashMap<JobId, JobEntry>, cap: usize) {
+    let cap = cap.max(1);
+    let mut completed: Vec<JobId> = jobs
+        .iter()
+        .filter(|(_, e)| matches!(e.state, JobState::Done | JobState::Failed))
+        .map(|(&id, _)| id)
+        .collect();
+    if completed.len() > cap {
+        completed.sort_unstable();
+        for victim in &completed[..completed.len() - cap] {
+            jobs.remove(victim);
+        }
+    }
+}
+
+/// Execute one admitted single-file job in one piece.
+fn run_whole(inner: &SchedInner, id: JobId) {
     let query = {
         let mut jobs = inner.jobs.lock().unwrap();
         match jobs.get_mut(&id) {
@@ -402,33 +546,7 @@ fn run_one(inner: &SchedInner, id: JobId) {
         }
     };
     let job_dir = inner.cfg.work_dir.join(format!("job{id}"));
-    let mut job = SkimJob::new(query)
-        .storage(&inner.cfg.storage_root)
-        .client_dir(&job_dir)
-        .deployment(inner.cfg.deployment.clone());
-    if let Some(cache) = &inner.cache {
-        job = job.basket_cache(cache.clone());
-    }
-    // Panic isolation: a panicking job must neither kill this worker
-    // (shrinking the pool for the service's lifetime) nor strand the
-    // job in `Running` with clients polling forever.
-    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        job.run().and_then(|report| {
-            let bytes = std::fs::read(&report.result.output_path)?;
-            Ok((report, bytes))
-        })
-    }))
-    .unwrap_or_else(|panic| {
-        let msg = panic
-            .downcast_ref::<String>()
-            .cloned()
-            .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
-            .unwrap_or_else(|| "<non-string panic>".into());
-        Err(Error::Engine(format!("job panicked: {msg}")))
-    });
-    // The per-job directory only staged the output; the bytes live in
-    // the job table now.
-    let _ = std::fs::remove_dir_all(&job_dir);
+    let outcome = execute_query(inner, query, &job_dir);
     let mut jobs = inner.jobs.lock().unwrap();
     let Some(entry) = jobs.get_mut(&id) else {
         return; // forgotten mid-run
@@ -448,21 +566,100 @@ fn run_one(inner: &SchedInner, id: JobId) {
             entry.error = Some(e.to_string());
         }
     }
-    // Bound retention: abandoned completions (results the client never
-    // fetched) must not accumulate forever. Oldest completed entries
-    // are dropped first; queued/running jobs are never touched.
-    let cap = inner.cfg.retained_jobs.max(1);
-    let mut completed: Vec<JobId> = jobs
-        .iter()
-        .filter(|(_, e)| matches!(e.state, JobState::Done | JobState::Failed))
-        .map(|(&id, _)| id)
-        .collect();
-    if completed.len() > cap {
-        completed.sort_unstable();
-        for victim in &completed[..completed.len() - cap] {
-            jobs.remove(victim);
+    enforce_retention(&mut jobs, inner.cfg.retained_jobs);
+}
+
+/// Execute one file task of a decomposed dataset job; the worker that
+/// completes the job's last file runs the deterministic merge.
+fn run_file(inner: &SchedInner, id: JobId, index: usize) {
+    let sub = {
+        let mut jobs = inner.jobs.lock().unwrap();
+        match jobs.get_mut(&id) {
+            Some(entry) => {
+                if entry.state == JobState::Queued {
+                    entry.state = JobState::Running;
+                }
+                let file = entry.files[index].clone();
+                entry.query.for_file(&file, format!("part{index:05}.troot"))
+            }
+            // Forgotten while queued: nothing to do.
+            None => return,
+        }
+    };
+    let job_dir = inner.cfg.work_dir.join(format!("job{id}_part{index}"));
+    // Stage the part on disk (outside the lock): the table holds only
+    // its path until the merge.
+    let outcome = execute_query(inner, sub, &job_dir).and_then(|(report, bytes)| {
+        let part_path = inner.cfg.work_dir.join(format!("job{id}_part{index}.part"));
+        std::fs::write(&part_path, &bytes)?;
+        Ok((report, part_path))
+    });
+    let mut jobs = inner.jobs.lock().unwrap();
+    let Some(entry) = jobs.get_mut(&id) else {
+        return; // forgotten mid-run
+    };
+    match outcome {
+        Ok((report, part_path)) => {
+            entry.parts[index] = Some(part_path);
+            entry.files_done += 1;
+            entry.n_events += report.result.n_events;
+            entry.n_pass += report.result.n_pass;
+            entry.latency += report.latency;
+            entry.cache_hits += report.timeline.counter("basket_cache_hits");
+            entry.cache_misses += report.timeline.counter("basket_cache_misses");
+        }
+        Err(e) => entry.file_errors.push((index, e.to_string())),
+    }
+    let completed =
+        entry.files_done as usize + entry.file_errors.len() == entry.files.len();
+    if !completed || entry.merging {
+        return;
+    }
+    entry.merging = true;
+    // Take the part paths out (index order preserved) and merge
+    // without holding the table lock; pollers observe `Running`
+    // meanwhile.
+    let parts: Vec<PathBuf> = entry.parts.iter_mut().filter_map(|p| p.take()).collect();
+    let n_files = entry.files.len();
+    drop(jobs);
+    let merged: Result<Vec<u8>> = if parts.is_empty() {
+        Err(Error::Engine(format!("all {n_files} dataset files failed")))
+    } else {
+        // Panic-isolated like the per-file execution: a merge that
+        // panics must mark the job Failed, not kill this worker and
+        // strand the entry in `Running`.
+        let path = inner.cfg.work_dir.join(format!("job{id}_merged.troot"));
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::troot::merge::concat_files(&parts, &path).and_then(|_| {
+                let bytes = std::fs::read(&path)?;
+                let _ = std::fs::remove_file(&path);
+                Ok(bytes)
+            })
+        }))
+        .unwrap_or_else(|panic| {
+            Err(Error::Engine(format!("dataset merge panicked: {}", panic_msg(&panic))))
+        });
+        // The staged parts only fed the merge; drop them either way.
+        for part in &parts {
+            let _ = std::fs::remove_file(part);
+        }
+        outcome
+    };
+    let mut jobs = inner.jobs.lock().unwrap();
+    let Some(entry) = jobs.get_mut(&id) else {
+        return; // forgotten mid-merge
+    };
+    match merged {
+        Ok(bytes) => {
+            entry.state = JobState::Done;
+            entry.output = Some(bytes);
+        }
+        Err(e) => {
+            entry.state = JobState::Failed;
+            entry.error = Some(e.to_string());
         }
     }
+    enforce_retention(&mut jobs, inner.cfg.retained_jobs);
 }
 
 #[cfg(test)]
@@ -489,6 +686,27 @@ mod tests {
         dir
     }
 
+    /// Like [`dataset`], plus 3 small part files under `store/`.
+    fn multi_dataset(tag: &str) -> PathBuf {
+        let dir = dataset(tag);
+        std::fs::create_dir_all(dir.join("store")).unwrap();
+        for i in 0..3u64 {
+            let path = dir.join(format!("store/f{i}.troot"));
+            if !path.exists() {
+                let cfg = GenConfig {
+                    n_events: 300,
+                    target_branches: 160,
+                    n_hlt: 40,
+                    basket_events: 150,
+                    codec: Codec::Lz4,
+                    seed: 700 + i,
+                };
+                gen::generate(&cfg, &path).unwrap();
+            }
+        }
+        dir
+    }
+
     #[test]
     fn submit_run_fetch_roundtrip() {
         let root = dataset("roundtrip");
@@ -502,6 +720,7 @@ mod tests {
         assert_eq!(status.state, JobState::Done);
         assert!(status.n_pass > 0);
         assert!(status.n_pass < status.n_events);
+        assert_eq!(status.files_total, 0, "single-file status shape unchanged");
         let bytes = sched.fetch_result(id).unwrap();
         assert!(bytes.len() > 100);
         sched.forget(id);
@@ -587,6 +806,85 @@ mod tests {
         assert_eq!(a.n_pass, b.n_pass, "cache must not change the selection");
         let stats = sched.cache_stats();
         assert!(stats.hits >= b.cache_hits);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn dataset_job_decomposes_merges_and_reports_files() {
+        let root = multi_dataset("ds");
+        let mut cfg = ServeConfig::new(&root);
+        // Multiple workers: file tasks complete in nondeterministic
+        // order, which must not change the merged bytes.
+        cfg.workers = 3;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let id = sched
+            .submit(gen::higgs_query("store/*.troot", "ds.troot"))
+            .unwrap();
+        let status = sched.wait(id).unwrap();
+        assert_eq!(status.state, JobState::Done);
+        assert_eq!(status.files_total, 3);
+        assert_eq!(status.files_done, 3);
+        assert!(status.file_errors.is_empty());
+        assert_eq!(status.n_events, 900);
+        let merged = sched.fetch_result(id).unwrap();
+
+        // Reference: skim the files one by one through single-file
+        // jobs and merge serially, in resolved (sorted) order.
+        let mut parts = Vec::new();
+        for i in 0..3 {
+            let id = sched
+                .submit(gen::higgs_query(
+                    &format!("store/f{i}.troot"),
+                    &format!("ref{i}.troot"),
+                ))
+                .unwrap();
+            sched.wait(id).unwrap();
+            parts.push(sched.fetch_result(id).unwrap());
+        }
+        let ref_path = std::env::temp_dir()
+            .join(format!("sched_ref_{}_merge.troot", std::process::id()));
+        crate::troot::merge::concat_buffers(parts, &ref_path).unwrap();
+        assert_eq!(merged, std::fs::read(&ref_path).unwrap());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn dataset_job_isolates_file_failures() {
+        let root = multi_dataset("dsiso");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 2;
+        cfg.deployment.fault.max_retries = 0;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let mut q = gen::higgs_query("store/f0.troot", "iso.troot");
+        q.input = crate::query::DatasetSpec::Files(vec![
+            "store/f0.troot".into(),
+            "store/absent.troot".into(),
+            "store/f2.troot".into(),
+        ]);
+        let id = sched.submit(q).unwrap();
+        let status = sched.wait(id).unwrap();
+        assert_eq!(status.state, JobState::Done, "{:?}", status.error);
+        assert_eq!(status.files_total, 3);
+        assert_eq!(status.files_done, 2);
+        assert_eq!(status.file_errors.len(), 1);
+        assert!(status.file_errors[0].starts_with("store/absent.troot:"));
+        assert!(sched.fetch_result(id).unwrap().len() > 100);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn traversal_rejected_at_submission() {
+        let root = dataset("trav");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 0;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        for input in ["../../secret", "/etc/passwd"] {
+            let err = sched
+                .submit(gen::higgs_query(input, "out.troot"))
+                .unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{input}: {err}");
+            assert!(format!("{err}").contains("escapes the storage root"), "{err}");
+        }
         sched.shutdown();
     }
 }

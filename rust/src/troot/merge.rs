@@ -1,0 +1,246 @@
+//! Deterministic merge of per-part skim outputs into one troot file —
+//! the data-plane half of the dataset layer.
+//!
+//! Both multi-part execution paths end here: the multi-DPU fan-out
+//! ([`crate::dpu::DpuCluster`]) merges event-range shards, and the
+//! dataset coordinator ([`crate::coordinator`]) merges per-file skim
+//! outputs. Parts are concatenated **in the caller-given order**
+//! (shard order = event order; dataset order = resolved file order),
+//! whole columns at a time: scalar columns append values, jagged
+//! columns rebase offsets. The output is written with the first
+//! part's codec and basket size, branch-by-branch in the first
+//! part's schema order — so the merged bytes are a pure function of
+//! the ordered part contents, independent of which part *finished*
+//! first. The dataset tests cross-check this against a serial
+//! single-file loop, byte for byte.
+
+use super::{ColumnData, LocalFile, ReadAt, TRootReader, TRootWriter};
+use crate::troot::writer::WriteSummary;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// In-memory [`ReadAt`] store over one part's output bytes.
+pub struct MemStore(pub Vec<u8>);
+
+impl ReadAt for MemStore {
+    fn read_at(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let o = offset as usize;
+        self.0
+            .get(o..o + len)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error::format("mem store read out of bounds"))
+    }
+
+    fn size(&self) -> Result<u64> {
+        Ok(self.0.len() as u64)
+    }
+}
+
+/// Concatenate whole columns in part order (scalar: append values;
+/// jagged: rebase offsets).
+pub fn concat_columns(cols: Vec<ColumnData>) -> Result<ColumnData> {
+    let mut iter = cols.into_iter();
+    let mut acc = iter
+        .next()
+        .ok_or_else(|| Error::Engine("concat of zero columns".into()))?;
+    for col in iter {
+        match (&mut acc, col) {
+            (ColumnData::Scalar(a), ColumnData::Scalar(b)) => {
+                let n = b.len();
+                a.extend_from_range(&b, 0..n);
+            }
+            (
+                ColumnData::Jagged { offsets, values },
+                ColumnData::Jagged { offsets: bo, values: bv },
+            ) => {
+                let base = *offsets.last().unwrap_or(&0);
+                for &o in &bo[1..] {
+                    offsets.push(base + o);
+                }
+                let n = bv.len();
+                values.extend_from_range(&bv, 0..n);
+            }
+            _ => return Err(Error::Engine("part column kind mismatch".into())),
+        }
+    }
+    Ok(acc)
+}
+
+/// Concatenate already-opened part readers, in order, into one troot
+/// file at `out_path`. All parts must share the first part's branch
+/// schema (names, kinds and dtypes, in order — checked up front so a
+/// heterogeneous dataset errors instead of panicking mid-append); the
+/// merged file inherits its codec and basket size.
+pub fn concat_readers<R: ReadAt>(
+    readers: &[TRootReader<R>],
+    out_path: impl AsRef<Path>,
+) -> Result<WriteSummary> {
+    let first = readers
+        .first()
+        .ok_or_else(|| Error::Engine("merge of zero parts".into()))?;
+    let meta0 = first.meta().clone();
+    for (i, r) in readers.iter().enumerate().skip(1) {
+        let m = r.meta();
+        if m.branches.len() != meta0.branches.len()
+            || m.branches.iter().zip(&meta0.branches).any(|(a, b)| {
+                a.desc.name != b.desc.name
+                    || a.desc.kind != b.desc.kind
+                    || a.desc.dtype != b.desc.dtype
+            })
+        {
+            return Err(Error::Engine(format!(
+                "dataset part {i} schema mismatch: parts must share one \
+                 branch schema to merge"
+            )));
+        }
+    }
+    let mut writer = TRootWriter::new(out_path.as_ref(), meta0.codec, meta0.basket_events);
+    for b in &meta0.branches {
+        let cols: Vec<ColumnData> = readers
+            .iter()
+            .map(|r| r.read_branch_all(&b.desc.name))
+            .collect::<Result<Vec<_>>>()?;
+        writer.add_branch(b.desc.clone(), concat_columns(cols)?)?;
+    }
+    writer.finalize()
+}
+
+/// Concatenate in-memory part outputs (in order) into one troot file.
+pub fn concat_buffers(
+    parts: Vec<Vec<u8>>,
+    out_path: impl AsRef<Path>,
+) -> Result<WriteSummary> {
+    let readers: Vec<TRootReader<MemStore>> = parts
+        .into_iter()
+        .map(|p| TRootReader::open(MemStore(p)))
+        .collect::<Result<Vec<_>>>()?;
+    concat_readers(&readers, out_path)
+}
+
+/// Concatenate on-disk part files (in order) into one troot file.
+pub fn concat_files(
+    parts: &[impl AsRef<Path>],
+    out_path: impl AsRef<Path>,
+) -> Result<WriteSummary> {
+    let readers: Vec<TRootReader<LocalFile>> = parts
+        .iter()
+        .map(|p| TRootReader::open(LocalFile::open(p)?))
+        .collect::<Result<Vec<_>>>()?;
+    concat_readers(&readers, out_path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::troot::{BranchDesc, ColumnValues, DType};
+
+    fn part(path: &Path, scalars: &[f32], jagged: &[Vec<f32>]) -> Vec<u8> {
+        let mut w = TRootWriter::new(path, Codec::Lz4, 2);
+        w.add_branch(
+            BranchDesc::scalar("MET_pt", DType::F32),
+            ColumnData::Scalar(ColumnValues::F32(scalars.to_vec())),
+        )
+        .unwrap();
+        w.add_branch(
+            BranchDesc::jagged("Jet_pt", DType::F32, "Jet"),
+            ColumnData::jagged_f32(jagged),
+        )
+        .unwrap();
+        w.finalize().unwrap();
+        std::fs::read(path).unwrap()
+    }
+
+    fn dir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("troot_merge_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn concat_rebases_jagged_offsets() {
+        let a = ColumnData::jagged_f32(&[vec![1.0, 2.0], vec![3.0]]);
+        let b = ColumnData::jagged_f32(&[vec![], vec![4.0, 5.0]]);
+        let merged = concat_columns(vec![a, b]).unwrap();
+        match merged {
+            ColumnData::Jagged { offsets, values } => {
+                assert_eq!(offsets, vec![0, 2, 3, 3, 5]);
+                assert_eq!(values.len(), 5);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn merge_is_order_determined_not_completion_determined() {
+        let d = dir();
+        let a = part(&d.join("a.troot"), &[1.0, 2.0], &[vec![9.0], vec![]]);
+        let b = part(&d.join("b.troot"), &[3.0], &[vec![7.0, 8.0]]);
+        let out1 = d.join("m1.troot");
+        let out2 = d.join("m2.troot");
+        concat_buffers(vec![a.clone(), b.clone()], &out1).unwrap();
+        // Same part order again — e.g. after parts completed in the
+        // opposite order and were re-sorted by index — same bytes.
+        concat_buffers(vec![a.clone(), b.clone()], &out2).unwrap();
+        assert_eq!(std::fs::read(&out1).unwrap(), std::fs::read(&out2).unwrap());
+        let r = TRootReader::open(LocalFile::open(&out1).unwrap()).unwrap();
+        assert_eq!(r.n_events(), 3);
+        // Different part order is a *different* dataset: bytes differ.
+        let out3 = d.join("m3.troot");
+        concat_buffers(vec![b, a], &out3).unwrap();
+        assert_ne!(std::fs::read(&out1).unwrap(), std::fs::read(&out3).unwrap());
+    }
+
+    #[test]
+    fn merge_rejects_schema_mismatch_and_zero_parts() {
+        let d = dir();
+        let a = part(&d.join("s1.troot"), &[1.0], &[vec![]]);
+        let mut w = TRootWriter::new(d.join("s2.troot"), Codec::Lz4, 2);
+        w.add_branch(
+            BranchDesc::scalar("Other_pt", DType::F32),
+            ColumnData::Scalar(ColumnValues::F32(vec![1.0])),
+        )
+        .unwrap();
+        w.add_branch(
+            BranchDesc::jagged("Jet_pt", DType::F32, "Jet"),
+            ColumnData::jagged_f32(&[vec![]]),
+        )
+        .unwrap();
+        w.finalize().unwrap();
+        let b = std::fs::read(d.join("s2.troot")).unwrap();
+        let err = concat_buffers(vec![a.clone(), b], d.join("bad.troot")).unwrap_err();
+        assert!(format!("{err}").contains("schema mismatch"), "{err}");
+        assert!(concat_buffers(Vec::new(), d.join("none.troot")).is_err());
+
+        // Same names and kinds but a different element type must also
+        // error (not panic inside the column append).
+        let mut w = TRootWriter::new(d.join("s3.troot"), Codec::Lz4, 2);
+        w.add_branch(
+            BranchDesc::scalar("MET_pt", DType::I32),
+            ColumnData::Scalar(ColumnValues::I32(vec![7])),
+        )
+        .unwrap();
+        w.add_branch(
+            BranchDesc::jagged("Jet_pt", DType::F32, "Jet"),
+            ColumnData::jagged_f32(&[vec![]]),
+        )
+        .unwrap();
+        w.finalize().unwrap();
+        let c = std::fs::read(d.join("s3.troot")).unwrap();
+        let err = concat_buffers(vec![a, c], d.join("bad2.troot")).unwrap_err();
+        assert!(format!("{err}").contains("schema mismatch"), "{err}");
+    }
+
+    #[test]
+    fn disk_and_memory_paths_agree() {
+        let d = dir();
+        let a = part(&d.join("f1.troot"), &[1.0, 2.0], &[vec![1.0], vec![2.0]]);
+        let _ = part(&d.join("f2.troot"), &[4.0], &[vec![]]);
+        let out_mem = d.join("out_mem.troot");
+        let out_disk = d.join("out_disk.troot");
+        let b = std::fs::read(d.join("f2.troot")).unwrap();
+        concat_buffers(vec![a, b], &out_mem).unwrap();
+        concat_files(&[d.join("f1.troot"), d.join("f2.troot")], &out_disk).unwrap();
+        assert_eq!(std::fs::read(&out_mem).unwrap(), std::fs::read(&out_disk).unwrap());
+    }
+}

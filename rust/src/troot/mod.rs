@@ -28,6 +28,7 @@
 //! ```
 
 pub mod basket;
+pub mod merge;
 pub mod reader;
 pub mod writer;
 

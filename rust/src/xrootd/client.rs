@@ -146,6 +146,17 @@ impl XrdClient {
             other => Err(Error::protocol(format!("unexpected response {other:?}"))),
         }
     }
+
+    /// List the files a dataset spec (glob, `catalog:NAME`, single
+    /// file) resolves to on the server — how a remote client previews
+    /// a dataset before submitting a query over it.
+    pub fn list(&self, spec: &str) -> Result<Vec<String>> {
+        match self.wire.call(Request::ListCatalog { spec: spec.into() })? {
+            Response::Listing { files } => Ok(files),
+            Response::Error { msg } => Err(Error::protocol(msg)),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
 }
 
 /// An open remote file handle.

@@ -68,6 +68,14 @@ pub enum Request {
         /// Id from [`Response::JobAccepted`].
         job: u64,
     },
+    /// List the files a dataset spec resolves to on this server
+    /// (glob, `catalog:NAME`, single file) — how remote clients
+    /// preview and submit dataset queries by name. Answered by
+    /// [`Response::Listing`].
+    ListCatalog {
+        /// Dataset-spec spelling ([`crate::query::DatasetSpec`]).
+        spec: String,
+    },
 }
 
 /// Server → client reply, paired with the [`Request`] opcodes.
@@ -122,8 +130,21 @@ pub enum Response {
         cache_hits: u64,
         /// Shared basket-cache misses the job paid for.
         cache_misses: u64,
+        /// Dataset files completed successfully so far.
+        files_done: u64,
+        /// Files in the job's dataset (0 for single-file jobs).
+        files_total: u64,
         /// Failure message (empty unless the job failed).
         msg: String,
+        /// Per-file failure detail (`"<path>: <error>"`) for
+        /// fault-isolated dataset file failures.
+        file_errors: Vec<String>,
+    },
+    /// Answer to [`Request::ListCatalog`]: the resolved file list, in
+    /// dataset order.
+    Listing {
+        /// Catalog-relative files the spec resolved to.
+        files: Vec<String>,
     },
 }
 
@@ -242,6 +263,10 @@ impl Request {
                 out.push(9);
                 out.extend_from_slice(&job.to_le_bytes());
             }
+            Request::ListCatalog { spec } => {
+                out.push(10);
+                put_str(&mut out, spec);
+            }
         }
         out
     }
@@ -273,6 +298,7 @@ impl Request {
             },
             8 => Request::JobStatus { job: c.u64()? },
             9 => Request::FetchResult { job: c.u64()? },
+            10 => Request::ListCatalog { spec: c.str()? },
             op => return Err(Error::protocol(format!("bad request opcode {op}"))),
         };
         if !c.finished() {
@@ -323,7 +349,10 @@ impl Response {
                 latency_us,
                 cache_hits,
                 cache_misses,
+                files_done,
+                files_total,
                 msg,
+                file_errors,
             } => {
                 out.push(8);
                 out.push(*state);
@@ -332,7 +361,22 @@ impl Response {
                 out.extend_from_slice(&latency_us.to_le_bytes());
                 out.extend_from_slice(&cache_hits.to_le_bytes());
                 out.extend_from_slice(&cache_misses.to_le_bytes());
+                out.extend_from_slice(&files_done.to_le_bytes());
+                out.extend_from_slice(&files_total.to_le_bytes());
                 put_str(&mut out, msg);
+                // u32 count: thousand-file catalogs can fail per file
+                // far beyond a u16's range.
+                out.extend_from_slice(&(file_errors.len() as u32).to_le_bytes());
+                for e in file_errors {
+                    put_str(&mut out, e);
+                }
+            }
+            Response::Listing { files } => {
+                out.push(9);
+                out.extend_from_slice(&(files.len() as u32).to_le_bytes());
+                for f in files {
+                    put_str(&mut out, f);
+                }
             }
         }
         out
@@ -359,15 +403,50 @@ impl Response {
             5 => Response::Done,
             6 => Response::Error { msg: c.str()? },
             7 => Response::JobAccepted { job: c.u64()? },
-            8 => Response::JobState {
-                state: c.u8()?,
-                n_events: c.u64()?,
-                n_pass: c.u64()?,
-                latency_us: c.u64()?,
-                cache_hits: c.u64()?,
-                cache_misses: c.u64()?,
-                msg: c.str()?,
-            },
+            8 => {
+                let state = c.u8()?;
+                let n_events = c.u64()?;
+                let n_pass = c.u64()?;
+                let latency_us = c.u64()?;
+                let cache_hits = c.u64()?;
+                let cache_misses = c.u64()?;
+                let files_done = c.u64()?;
+                let files_total = c.u64()?;
+                let msg = c.str()?;
+                let n = c.u32()? as usize;
+                if n > 1_000_000 {
+                    return Err(Error::protocol("too many file errors"));
+                }
+                let mut file_errors = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    file_errors.push(c.str()?);
+                }
+                Response::JobState {
+                    state,
+                    n_events,
+                    n_pass,
+                    latency_us,
+                    cache_hits,
+                    cache_misses,
+                    files_done,
+                    files_total,
+                    msg,
+                    file_errors,
+                }
+            }
+            9 => {
+                let n = c.u32()? as usize;
+                if n > 1_000_000 {
+                    return Err(Error::protocol("too many listing entries"));
+                }
+                // Cap the preallocation: the count is attacker-
+                // controlled and precedes any validated payload.
+                let mut files = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    files.push(c.str()?);
+                }
+                Response::Listing { files }
+            }
             op => return Err(Error::protocol(format!("bad response opcode {op}"))),
         };
         if !c.finished() {
@@ -420,6 +499,8 @@ mod tests {
             Request::SubmitQuery { query_json: "x".repeat(100_000) },
             Request::JobStatus { job: u64::MAX },
             Request::FetchResult { job: 12 },
+            Request::ListCatalog { spec: "store/*.troot".into() },
+            Request::ListCatalog { spec: "catalog:run2018".into() },
         ];
         for r in reqs {
             assert_eq!(Request::decode(&r.encode()).unwrap(), r);
@@ -443,8 +524,25 @@ mod tests {
                 latency_us: 2_500_000,
                 cache_hits: 42,
                 cache_misses: 7,
+                files_done: 0,
+                files_total: 0,
                 msg: String::new(),
+                file_errors: Vec::new(),
             },
+            Response::JobState {
+                state: 1,
+                n_events: 600,
+                n_pass: 3,
+                latency_us: 1,
+                cache_hits: 0,
+                cache_misses: 0,
+                files_done: 2,
+                files_total: 4,
+                msg: String::new(),
+                file_errors: vec!["store/bad.troot: truncated".into()],
+            },
+            Response::Listing { files: vec!["a.troot".into(), "store/b.troot".into()] },
+            Response::Listing { files: Vec::new() },
         ];
         for r in resps {
             assert_eq!(Response::decode(&r.encode()).unwrap(), r);

@@ -159,6 +159,17 @@ impl XrdServer {
                 std::fs::write(&full, &data)?;
                 Ok(Response::Done)
             }
+            Request::ListCatalog { spec } => {
+                // Resolve the dataset spec against the exported root —
+                // the same (traversal-validating) resolution the job
+                // layers use, so remote clients can preview exactly
+                // what a glob or `catalog:NAME` submission will cover.
+                let spec = crate::query::DatasetSpec::parse(&spec);
+                let files = crate::catalog::resolve(&spec, &self.inner.root)?;
+                // Listing costs one metadata seek.
+                self.charge_disk(self.inner.disk.seek_s);
+                Ok(Response::Listing { files })
+            }
             Request::SubmitQuery { .. }
             | Request::JobStatus { .. }
             | Request::FetchResult { .. } => Err(Error::protocol(

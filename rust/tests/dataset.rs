@@ -1,0 +1,312 @@
+//! Dataset-layer integration tests: merge determinism, fault
+//! isolation, and byte-identity of the dataset path against a serial
+//! single-file loop — across the SkimJob facade (CLI surface), the
+//! TCP service and the HTTP jobs API, under fan-out 1 and 4 and
+//! engine parallelism 1/2/4.
+
+use skimroot::compress::Codec;
+use skimroot::coordinator::{Deployment, Placement};
+use skimroot::dpu::http::{http_request, DpuHttpServer};
+use skimroot::dpu::DpuConfig;
+use skimroot::gen::{self, GenConfig};
+use skimroot::net::LinkModel;
+use skimroot::query::DatasetSpec;
+use skimroot::serve::{ServeConfig, SkimScheduler, SkimServiceClient};
+use skimroot::{SkimJob, SkimQuery};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const N_FILES: usize = 4;
+
+/// A fresh 4-file dataset under its own storage root.
+fn setup(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ds_it_{}_{tag}", std::process::id()));
+    let store = dir.join("storage/store");
+    if !store.join("part003.troot").exists() {
+        let cfg = GenConfig {
+            n_events: 500,
+            target_branches: 160,
+            n_hlt: 40,
+            basket_events: 200,
+            codec: Codec::Lz4,
+            seed: 41,
+        };
+        gen::generate_dataset(&cfg, &store, N_FILES, "all").unwrap();
+    }
+    dir
+}
+
+fn query(output: &str) -> SkimQuery {
+    gen::higgs_query("store/part*.troot", output)
+}
+
+/// Reference bytes: skim each file alone through single-file jobs
+/// (the pre-dataset code path) and merge the outputs serially, in
+/// resolved dataset order.
+fn serial_reference(dir: &std::path::Path, dep: &Deployment, tag: &str) -> Vec<u8> {
+    let storage = dir.join("storage");
+    let files =
+        skimroot::catalog::resolve(&DatasetSpec::parse("store/part*.troot"), &storage).unwrap();
+    assert_eq!(files.len(), N_FILES);
+    let mut parts = Vec::new();
+    for (i, file) in files.iter().enumerate() {
+        let q = query("unused.troot").for_file(file, format!("ref{tag}{i}.troot"));
+        let report = SkimJob::new(q)
+            .storage(&storage)
+            .client_dir(dir.join(format!("ref_client_{tag}")))
+            .deployment(dep.clone())
+            .run()
+            .unwrap();
+        assert!(report.files.is_empty(), "single-file jobs keep the legacy report");
+        parts.push(std::fs::read(&report.result.output_path).unwrap());
+    }
+    let out = dir.join(format!("ref_{tag}_merged.troot"));
+    skimroot::troot::merge::concat_buffers(parts, &out).unwrap();
+    std::fs::read(&out).unwrap()
+}
+
+#[test]
+fn dataset_equals_serial_concat_under_fan_out_1_and_4() {
+    let dir = setup("fanout");
+    let storage = dir.join("storage");
+    let reference = serial_reference(&dir, &Deployment::skim_root(LinkModel::wan_1g()), "dpu");
+    for fan_out in [1usize, 4] {
+        let dep = Deployment::builder()
+            .name("dpu-ds")
+            .placement(Placement::Dpu(DpuConfig::default()))
+            .link(LinkModel::wan_1g())
+            .fan_out(fan_out)
+            .build()
+            .unwrap();
+        let report = SkimJob::new(query(&format!("out_x{fan_out}.troot")))
+            .storage(&storage)
+            .client_dir(dir.join(format!("client_x{fan_out}")))
+            .deployment(dep)
+            .run()
+            .unwrap();
+        assert_eq!(report.files_total(), N_FILES);
+        assert_eq!(report.files_done(), N_FILES);
+        let bytes = std::fs::read(&report.result.output_path).unwrap();
+        assert_eq!(bytes, reference, "fan_out={fan_out} diverged from serial loop");
+    }
+}
+
+#[test]
+fn dataset_equals_serial_concat_on_client_and_server_placements() {
+    let dir = setup("placements");
+    let storage = dir.join("storage");
+    for (tag, dep) in [
+        ("copt", Deployment::client_opt(LinkModel::dedicated_100g())),
+        ("srv", Deployment::server_side(LinkModel::dedicated_100g())),
+    ] {
+        let reference = serial_reference(&dir, &dep, tag);
+        let report = SkimJob::new(query(&format!("out_{tag}.troot")))
+            .storage(&storage)
+            .client_dir(dir.join(format!("client_{tag}")))
+            .deployment(dep)
+            .run()
+            .unwrap();
+        let bytes = std::fs::read(&report.result.output_path).unwrap();
+        assert_eq!(bytes, reference, "{tag} placement diverged from serial loop");
+    }
+}
+
+#[test]
+fn dataset_bytes_invariant_under_engine_parallelism() {
+    let dir = setup("par");
+    let storage = dir.join("storage");
+    let mut outputs = Vec::new();
+    for par in [1.0f64, 2.0, 4.0] {
+        let dep = Deployment::builder()
+            .name("dpu-par")
+            .placement(Placement::Dpu(DpuConfig { parallelism: par, ..DpuConfig::default() }))
+            .link(LinkModel::wan_1g())
+            .build()
+            .unwrap();
+        let report = SkimJob::new(query(&format!("out_p{par}.troot")))
+            .storage(&storage)
+            .client_dir(dir.join(format!("client_p{par}")))
+            .deployment(dep)
+            .run()
+            .unwrap();
+        outputs.push(std::fs::read(&report.result.output_path).unwrap());
+    }
+    assert_eq!(outputs[0], outputs[1], "parallelism 2 changed the merged bytes");
+    assert_eq!(outputs[0], outputs[2], "parallelism 4 changed the merged bytes");
+}
+
+#[test]
+fn truncated_file_is_fault_isolated() {
+    let dir = setup("trunc");
+    let storage = dir.join("storage");
+    // Truncate one part mid-file.
+    let victim = storage.join("store/part001.troot");
+    let bytes = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &bytes[..bytes.len() / 4]).unwrap();
+
+    let mut dep = Deployment::client_opt(LinkModel::dedicated_100g());
+    dep.fault.max_retries = 1;
+    let report = SkimJob::new(query("out_trunc.troot"))
+        .storage(&storage)
+        .client_dir(dir.join("client_trunc"))
+        .deployment(dep.clone())
+        .run()
+        .unwrap();
+    assert_eq!(report.files_total(), N_FILES);
+    assert_eq!(report.files_done(), N_FILES - 1);
+    assert_eq!(report.files_failed(), 1);
+    let failed = report.files.iter().find(|f| f.error.is_some()).unwrap();
+    assert_eq!(failed.path, "store/part001.troot");
+    assert!(failed.attempts >= 2, "failed file must have been retried");
+    assert!(report
+        .result
+        .warnings
+        .iter()
+        .any(|w| w.contains("part001.troot")));
+    // The surviving files merged: the output equals the serial merge
+    // of the other three parts.
+    let files = skimroot::catalog::resolve(
+        &DatasetSpec::parse("store/part*.troot"),
+        &storage,
+    )
+    .unwrap();
+    let mut parts = Vec::new();
+    for (i, file) in files.iter().enumerate() {
+        if file.ends_with("part001.troot") {
+            continue;
+        }
+        let q = query("unused.troot").for_file(file, format!("tr{i}.troot"));
+        let r = SkimJob::new(q)
+            .storage(&storage)
+            .client_dir(dir.join("client_trunc_ref"))
+            .deployment(dep.clone())
+            .run()
+            .unwrap();
+        parts.push(std::fs::read(&r.result.output_path).unwrap());
+    }
+    let ref_path = dir.join("trunc_ref.troot");
+    skimroot::troot::merge::concat_buffers(parts, &ref_path).unwrap();
+    assert_eq!(
+        std::fs::read(&report.result.output_path).unwrap(),
+        std::fs::read(&ref_path).unwrap()
+    );
+}
+
+#[test]
+fn dataset_over_tcp_service_matches_serial_concat() {
+    let dir = setup("tcp");
+    let storage = dir.join("storage");
+    let reference =
+        serial_reference(&dir, &Deployment::server_side(LinkModel::local()), "tcp");
+
+    let mut cfg = ServeConfig::new(&storage);
+    cfg.deployment.disk = skimroot::net::DiskModel::ideal();
+    cfg.workers = 3; // file tasks complete out of order
+    let service = skimroot::SkimService::new(cfg).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = service.serve_tcp(listener, stop.clone());
+
+    let client = SkimServiceClient::connect(&addr).unwrap();
+    // Dataset submission by name over the wire: list, then query.
+    // (`generate_dataset` wrote a self-contained store/all.catalog.)
+    let listed = client.list_dataset("catalog:store/all").unwrap();
+    assert_eq!(listed.len(), N_FILES);
+    assert_eq!(listed[0], "store/part000.troot");
+    let job = client.submit(&query("tcp_ds.troot")).unwrap();
+    let (status, bytes) = client.wait_result(job).unwrap();
+    assert_eq!(status.files_total, N_FILES as u64);
+    assert_eq!(status.files_done, N_FILES as u64);
+    assert!(status.file_errors.is_empty());
+    assert_eq!(bytes, reference, "TCP service diverged from serial loop");
+
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+    service.shutdown();
+}
+
+#[test]
+fn dataset_over_http_jobs_api_matches_serial_concat() {
+    let dir = setup("http");
+    let storage = dir.join("storage");
+    let reference =
+        serial_reference(&dir, &Deployment::server_side(LinkModel::local()), "http");
+
+    let mut cfg = ServeConfig::new(&storage);
+    cfg.deployment.disk = skimroot::net::DiskModel::ideal();
+    cfg.workers = 2;
+    let sched = SkimScheduler::new(cfg).unwrap();
+    let server = DpuHttpServer::new(|_q: &SkimQuery, _tl: &skimroot::metrics::Timeline| {
+        Err(skimroot::Error::Engine("sync path unused".into()))
+    })
+    .with_scheduler(sched.clone());
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = server.serve(listener, stop.clone());
+
+    let payload = query("http_ds.troot").to_json().to_string();
+    let (status, _, body) = http_request(&addr, "POST", "/jobs", payload.as_bytes()).unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let text = String::from_utf8(body).unwrap();
+    let id: u64 = text
+        .trim_start_matches("{\"job\":")
+        .trim_end_matches('}')
+        .parse()
+        .unwrap();
+
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let (code, _, body) = http_request(&addr, "GET", &format!("/jobs/{id}"), b"").unwrap();
+        assert_eq!(code, 200);
+        let text = String::from_utf8(body).unwrap();
+        if text.contains("\"state\":\"done\"") {
+            assert!(text.contains(&format!("\"files_total\":{N_FILES}")), "{text}");
+            assert!(text.contains(&format!("\"files_done\":{N_FILES}")), "{text}");
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "job never finished: {text}");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let (code, _, bytes) =
+        http_request(&addr, "GET", &format!("/jobs/{id}/result"), b"").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(bytes, reference, "HTTP jobs API diverged from serial loop");
+
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+    sched.shutdown();
+}
+
+#[test]
+fn traversal_rejected_across_surfaces() {
+    let dir = setup("trav");
+    let storage = dir.join("storage");
+    // SkimJob facade.
+    let q = SkimQuery::new("../../etc/passwd", "out.troot");
+    let err = SkimJob::new(q)
+        .storage(&storage)
+        .client_dir(dir.join("client_trav"))
+        .deployment(Deployment::client_opt(LinkModel::dedicated_100g()))
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, skimroot::Error::Config(_)), "{err}");
+
+    // TCP wire: submission rejected before enqueue.
+    let mut cfg = ServeConfig::new(&storage);
+    cfg.workers = 0;
+    let service = skimroot::SkimService::new(cfg).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = service.serve_tcp(listener, stop.clone());
+    let client = SkimServiceClient::connect(&addr).unwrap();
+    let err = client
+        .submit(&SkimQuery::new("../secret.troot", "o.troot"))
+        .unwrap_err();
+    assert!(format!("{err}").contains("escapes the storage root"), "{err}");
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+    service.shutdown();
+}
