@@ -9,6 +9,8 @@
 //! * decompress+deserialize fan-out across 1/2/4 worker threads, plus
 //!   end-to-end group processing at `parallelism` 1/2/4 — the
 //!   threaded-engine tentpole, measured not asserted;
+//! * zone-map pruning: the same cut run end-to-end with and without
+//!   the `.tridx` basket index, at high and low selectivity;
 //! * JSON query parsing.
 //!
 //! `BENCH_JSON=path` appends machine-readable records (see
@@ -33,6 +35,7 @@ fn main() {
     thread_scaling_benches();
     engine_parallelism_benches();
     dataset_benches();
+    zone_map_benches();
     json_benches();
 }
 
@@ -313,6 +316,48 @@ fn dataset_benches() {
     harness::bench("e2e skim 4-file dataset (4x1024 events)", 1, 5, || {
         run("store/part*.troot", "bench_ds.troot")
     });
+}
+
+/// Zone-map pruning end-to-end: the identical query run with and
+/// without the basket index installed. The high-selectivity cut on the
+/// `event` counter branch provably kills 7 of 8 baskets (the pruned run
+/// skips their read + decompress + deserialize); the low-selectivity
+/// cut prunes nothing, measuring the index's overhead when it cannot
+/// help. Output bytes are identical either way — that invariant is
+/// property-tested in the engine, not here.
+fn zone_map_benches() {
+    println!("\n== zone-map pruning (8x512-event baskets, end-to-end) ==");
+    let path = bench_dir().join("micro_engine.troot");
+    if !path.exists() {
+        let cfg = gen::GenConfig {
+            n_events: 4096,
+            target_branches: 180,
+            n_hlt: 40,
+            basket_events: 512,
+            codec: Codec::Lz4,
+            seed: 11,
+        };
+        gen::generate(&cfg, &path).unwrap();
+    }
+    let index = Arc::new(skimroot::index::FileIndex::build_from_file(&path).unwrap());
+    let out = bench_dir().join("micro_zone_out.troot");
+    for (label, cut) in [
+        ("selective cut", "event >= 1003584"),
+        ("broad cut", "MET_pt > 1.0"),
+    ] {
+        let query = skimroot::query::SkimQuery::new("micro_engine.troot", "zone_out.troot")
+            .keep(&["MET_pt", "event", "nJet"])
+            .with_cut_str(cut)
+            .unwrap();
+        for (mode, zone_map) in [("full scan", None), ("pruned", Some(index.clone()))] {
+            let opts = EngineOpts { use_pjrt: false, zone_map, ..Default::default() };
+            harness::bench(&format!("e2e {label} {mode} (4096 events)"), 1, 5, || {
+                let store: Arc<dyn ReadAt> = Arc::new(LocalFile::open(&path).unwrap());
+                let tl = Timeline::new();
+                SkimEngine::new(None).run(store, &query, &tl, &opts, &out).unwrap()
+            });
+        }
+    }
 }
 
 fn json_benches() {

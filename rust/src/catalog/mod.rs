@@ -17,7 +17,16 @@
 //!   storage root (one file per line, `#` comments), preserving the
 //!   catalog's listed order;
 //! * **striping** — [`lane_of`] is the shared file → DPU-lane
-//!   placement rule used by the coordinator's fan-out.
+//!   placement rule used by the coordinator's fan-out;
+//! * **materialized skims** — [`register_materialized`] copies a skim
+//!   output (plus a freshly derived `.tridx` zone-map sidecar) under
+//!   `skims/` and writes a `NAME.catalog` carrying the skim's
+//!   [`Lineage`] as structured comments, so the result is itself an
+//!   ordinary `catalog:NAME` input to later queries.
+//!
+//! Zone-map sidecars (`*.tridx`, [`crate::index`]) live next to their
+//! data files but are **never** catalog entries: the glob walk skips
+//! them, so `store/part*` cannot accidentally skim an index file.
 //!
 //! Resolution is lexical beyond globs: explicit files and catalog
 //! entries are *not* checked for existence here (a missing file fails
@@ -119,7 +128,10 @@ fn walk(
         let ft = entry.file_type()?;
         if ft.is_dir() {
             walk(&entry.path(), &rel, pattern, depth + 1, out)?;
-        } else if ft.is_file() && glob_match(pattern, &rel) {
+        } else if ft.is_file()
+            && !crate::index::is_sidecar_name(&name)
+            && glob_match(pattern, &rel)
+        {
             out.push(rel);
         }
     }
@@ -168,6 +180,106 @@ pub fn read_catalog(root: &Path, name: &str) -> Result<Vec<String>> {
 /// on different nodes and every lane's share differs by at most one.
 pub fn lane_of(file_index: usize, lanes: usize) -> usize {
     file_index % lanes.max(1)
+}
+
+// ---------------- materialized skims ---------------------------------
+
+/// Directory under the storage root where materialized skim outputs
+/// are copied.
+pub const SKIMS_DIR: &str = "skims";
+
+/// Marker comment on the first line of a catalog written by
+/// [`register_materialized`].
+const MATERIALIZED_MARKER: &str = "# skimroot:materialized";
+
+/// Provenance of a materialized skim, recorded as structured comments
+/// in its catalog file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lineage {
+    /// Display form of the source [`DatasetSpec`] the skim ran over.
+    pub source: String,
+    /// Canonical display of the skim's combined cut expression, or
+    /// `"(none)"` for a copy-all skim.
+    pub cut: String,
+}
+
+/// Register a finished skim output as a first-class catalog entry:
+/// copy `output_path` to `<root>/skims/<name>.troot`, derive and save
+/// its `.tridx` zone-map sidecar (so re-skimming the skim prunes too),
+/// and write `<root>/<name>.catalog` carrying the [`Lineage`] as
+/// structured comments. The result resolves as `catalog:<name>` like
+/// any dataset. Returns the catalog-relative path of the copied file.
+///
+/// `name` must be a plain filesystem-safe identifier (letters, digits,
+/// `.`/`-`/`_`): the catalog is written at the storage root, so a
+/// nested name would silently shift its entry prefix.
+pub fn register_materialized(
+    root: &Path,
+    name: &str,
+    output_path: &Path,
+    source: &DatasetSpec,
+    cut: Option<&crate::query::Expr>,
+) -> Result<String> {
+    if name.is_empty()
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '.' || c == '-' || c == '_')
+    {
+        return Err(Error::Config(format!(
+            "materialized skim name '{name}' must be non-empty and use only \
+             letters, digits, '.', '-' and '_'"
+        )));
+    }
+    let skims = root.join(SKIMS_DIR);
+    std::fs::create_dir_all(&skims)?;
+    let rel = format!("{SKIMS_DIR}/{name}.troot");
+    let data = skims.join(format!("{name}.troot"));
+    std::fs::copy(output_path, &data)?;
+    // Derive the skim's own zone map after the fact (the generic
+    // `skimroot index` path); later skims over this entry prune too.
+    crate::index::FileIndex::build_from_file(&data)?
+        .save(crate::index::sidecar_path(&data))?;
+    let cut_text = cut.map_or_else(|| "(none)".to_string(), |e| e.to_string());
+    let listing = format!(
+        "{MATERIALIZED_MARKER}\n# source: {source}\n# cut: {cut_text}\n{rel}\n"
+    );
+    std::fs::write(root.join(format!("{name}.catalog")), listing)?;
+    Ok(rel)
+}
+
+/// Read back the [`Lineage`] of `catalog:<name>`. Returns `Ok(None)`
+/// for a catalog that exists but was not written by
+/// [`register_materialized`]; errors only if the catalog file itself
+/// cannot be read.
+pub fn read_lineage(root: &Path, name: &str) -> Result<Option<Lineage>> {
+    let file = if name.ends_with(".catalog") {
+        name.to_string()
+    } else {
+        format!("{name}.catalog")
+    };
+    let text = std::fs::read_to_string(root.join(&file))
+        .map_err(|e| Error::Config(format!("catalog '{name}': cannot read {file}: {e}")))?;
+    let mut lines = text.lines();
+    if lines.next().map(str::trim) != Some(MATERIALIZED_MARKER) {
+        return Ok(None);
+    }
+    let mut source = None;
+    let mut cut = None;
+    for line in lines {
+        let line = line.trim();
+        if let Some(s) = line.strip_prefix("# source: ") {
+            source = Some(s.to_string());
+        } else if let Some(c) = line.strip_prefix("# cut: ") {
+            cut = Some(c.to_string());
+        }
+    }
+    match (source, cut) {
+        (Some(source), Some(cut)) => Ok(Some(Lineage { source, cut })),
+        _ => Err(Error::Config(format!(
+            "catalog '{name}' carries the materialized marker but its \
+             lineage comments are incomplete"
+        ))),
+    }
 }
 
 #[cfg(test)]
@@ -263,5 +375,98 @@ mod tests {
         assert_eq!(lane_of(5, 4), 1);
         assert_eq!(lane_of(3, 1), 0);
         assert_eq!(lane_of(7, 0), 0); // degenerate lanes clamp to 1
+    }
+
+    #[test]
+    fn empty_glob_is_a_config_error_not_an_empty_job() {
+        let root = setup("emptyglob");
+        let err = resolve(&DatasetSpec::parse("store/*.parquet"), &root).unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+        assert!(format!("{err}").contains("matched no files"), "{err}");
+        // A glob over a nonexistent root behaves the same (no panic).
+        let err = resolve(
+            &DatasetSpec::parse("store/*.troot"),
+            &root.join("does_not_exist"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("matched no files"), "{err}");
+    }
+
+    #[test]
+    fn nested_directories_sort_into_one_deterministic_order() {
+        let root = setup("nestsort");
+        std::fs::create_dir_all(root.join("store/run2/deep")).unwrap();
+        std::fs::create_dir_all(root.join("store/run1")).unwrap();
+        for name in [
+            "store/run2/z.troot",
+            "store/run2/deep/m.troot",
+            "store/run1/k.troot",
+        ] {
+            std::fs::write(root.join(name), b"x").unwrap();
+        }
+        let files = resolve(&DatasetSpec::parse("store/*"), &root).unwrap();
+        assert_eq!(
+            files,
+            vec![
+                "store/a.troot",
+                "store/b.troot",
+                "store/c.troot",
+                "store/run1/k.troot",
+                "store/run2/deep/m.troot",
+                "store/run2/z.troot",
+            ]
+        );
+    }
+
+    #[test]
+    fn sidecars_never_resolve_as_data_files() {
+        let root = setup("sidecars");
+        std::fs::write(root.join("store/a.troot.tridx"), b"idx").unwrap();
+        // Even a glob that would lexically match the sidecar skips it.
+        let files = resolve(&DatasetSpec::parse("store/*"), &root).unwrap();
+        assert_eq!(files, vec!["store/a.troot", "store/b.troot", "store/c.troot"]);
+        let files = resolve(&DatasetSpec::parse("store/a.troot*"), &root).unwrap();
+        assert_eq!(files, vec!["store/a.troot"]);
+
+        // An orphaned sidecar (data file deleted, index left behind)
+        // stays invisible rather than resurfacing as a bogus entry.
+        std::fs::remove_file(root.join("store/a.troot")).unwrap();
+        let files = resolve(&DatasetSpec::parse("store/*"), &root).unwrap();
+        assert_eq!(files, vec!["store/b.troot", "store/c.troot"]);
+    }
+
+    #[test]
+    fn materialized_skim_registers_and_reads_lineage() {
+        let root = setup("mat");
+        // A real troot file to materialize (content matters: the
+        // register path derives a sidecar from it).
+        let src = crate::gen::GenConfig::tiny(60);
+        let out = root.join("job_out.troot");
+        crate::gen::generate(&src, &out).unwrap();
+
+        let spec = DatasetSpec::parse("store/*.troot");
+        let cut = crate::query::parse_cut("MET_pt > 20").unwrap();
+        let rel = register_materialized(&root, "hot_met", &out, &spec, Some(&cut)).unwrap();
+        assert_eq!(rel, "skims/hot_met.troot");
+        assert!(root.join("skims/hot_met.troot").is_file());
+        assert!(root.join("skims/hot_met.troot.tridx").is_file());
+
+        // Resolves like any named catalog.
+        let files = resolve(&DatasetSpec::Catalog("hot_met".into()), &root).unwrap();
+        assert_eq!(files, vec!["skims/hot_met.troot"]);
+
+        // Lineage roundtrips; the source spec is re-parseable.
+        let lin = read_lineage(&root, "hot_met").unwrap().expect("materialized");
+        assert_eq!(DatasetSpec::parse(&lin.source), spec);
+        assert_eq!(lin.cut, cut.to_string());
+
+        // A hand-written catalog has no lineage.
+        std::fs::write(root.join("plain.catalog"), "store/a.troot\n").unwrap();
+        assert_eq!(read_lineage(&root, "plain").unwrap(), None);
+
+        // Unsafe names are rejected before anything is written.
+        assert!(register_materialized(&root, "../evil", &out, &spec, None).is_err());
+        assert!(register_materialized(&root, "a/b", &out, &spec, None).is_err());
+        assert!(register_materialized(&root, "", &out, &spec, None).is_err());
     }
 }

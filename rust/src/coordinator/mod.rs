@@ -848,6 +848,22 @@ impl<'rt> Coordinator<'rt> {
         // Keep a stat handle: the DPU arm moves `server` into the node.
         let server_stats = server.clone();
 
+        // Load the input's `.tridx` zone-map sidecar, if one sits next
+        // to the data file. An unreadable/corrupt sidecar degrades to a
+        // full scan with a warning — it must never fail the job; the
+        // engine digest-validates a loaded one the same way.
+        let (zone_map, zone_warning) =
+            match crate::index::load_sidecar(&self.storage_root.join(input_path)) {
+                Ok(Some(idx)) => (Some(Arc::new(idx)), None),
+                Ok(None) => (None, None),
+                Err(e) => (
+                    None,
+                    Some(format!(
+                        "corrupt zone-map sidecar for {input_path} ignored ({e}); running a full scan"
+                    )),
+                ),
+            };
+
         let wrap_faults = |store: Arc<dyn ReadAt>| -> Arc<dyn ReadAt> {
             if deployment.fault.read_fail_prob > 0.0 {
                 Arc::new(FlakyStore::new(
@@ -877,6 +893,7 @@ impl<'rt> Coordinator<'rt> {
                     decomp: DecompMode::Software,
                     cache_bytes: deployment.cache_bytes,
                     basket_cache: self.basket_cache.clone(),
+                    zone_map: zone_map.clone(),
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -902,6 +919,7 @@ impl<'rt> Coordinator<'rt> {
                     decomp: DecompMode::Software,
                     cache_bytes: None,
                     basket_cache: self.basket_cache.clone(),
+                    zone_map: zone_map.clone(),
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -936,6 +954,9 @@ impl<'rt> Coordinator<'rt> {
                     if let Some(cache) = &self.basket_cache {
                         dpu = dpu.with_basket_cache(cache.clone());
                     }
+                    if let Some(zm) = &zone_map {
+                        dpu = dpu.with_zone_map(zm.clone());
+                    }
                     dpu.run_query_with(query, timeline, None, stages)?
                 } else {
                     let mut cluster = DpuCluster::new(
@@ -947,6 +968,9 @@ impl<'rt> Coordinator<'rt> {
                     );
                     if let Some(cache) = &self.basket_cache {
                         cluster = cluster.with_basket_cache(cache.clone());
+                    }
+                    if let Some(zm) = &zone_map {
+                        cluster = cluster.with_zone_map(zm.clone());
                     }
                     cluster.run_query_with(query, timeline, stages)?
                 };
@@ -971,7 +995,15 @@ impl<'rt> Coordinator<'rt> {
         if served > 0 {
             timeline.count("xrd_bytes_served", served);
         }
-        result
+        match result {
+            Ok(mut r) => {
+                if let Some(w) = zone_warning {
+                    r.warnings.push(w);
+                }
+                Ok(r)
+            }
+            err => err,
+        }
     }
 }
 

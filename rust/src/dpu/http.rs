@@ -12,7 +12,7 @@
 //! * `POST /jobs` — submit a JSON query; `202 {"job": N}` on
 //!   admission, `429` when the queue is full;
 //! * `GET /jobs/<id>` — JSON status (state, events, pass counts,
-//!   shared-cache hits/misses);
+//!   shared-cache hits/misses, zone-map baskets pruned/scanned);
 //! * `GET /jobs/<id>/result` — the filtered troot bytes of a finished
 //!   job (`409` while in flight, `500` with the message on failure).
 //!
@@ -289,6 +289,8 @@ fn status_json(status: &crate::serve::JobStatus) -> String {
     obj.insert("latency_secs".to_string(), Json::Num(status.latency));
     obj.insert("cache_hits".to_string(), Json::Num(status.cache_hits as f64));
     obj.insert("cache_misses".to_string(), Json::Num(status.cache_misses as f64));
+    obj.insert("baskets_pruned".to_string(), Json::Num(status.baskets_pruned as f64));
+    obj.insert("baskets_scanned".to_string(), Json::Num(status.baskets_scanned as f64));
     if status.files_total > 0 {
         obj.insert("files_done".to_string(), Json::Num(status.files_done as f64));
         obj.insert("files_total".to_string(), Json::Num(status.files_total as f64));
@@ -629,6 +631,9 @@ mod tests {
             let text = String::from_utf8(body).unwrap();
             if text.contains("\"state\":\"done\"") {
                 assert!(text.contains("\"cache_hits\""));
+                assert!(text.contains("\"cache_misses\""));
+                assert!(text.contains("\"baskets_pruned\""));
+                assert!(text.contains("\"baskets_scanned\""));
                 assert!(text.contains("\"latency_secs\""));
                 break;
             }

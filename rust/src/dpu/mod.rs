@@ -82,6 +82,9 @@ pub struct DpuNode<'rt> {
     scratch_dir: PathBuf,
     /// Shared decompressed-basket cache (serving-layer deployments).
     basket_cache: Option<Arc<crate::serve::BasketCache>>,
+    /// Zone-map sidecar of the input file (basket pruning); the engine
+    /// digest-validates it, so a stale map degrades to a full scan.
+    zone_map: Option<Arc<crate::index::FileIndex>>,
 }
 
 /// Outcome of one DPU-executed skim, including the bytes to ship back.
@@ -108,6 +111,7 @@ impl<'rt> DpuNode<'rt> {
             runtime,
             scratch_dir: scratch_dir.into(),
             basket_cache: None,
+            zone_map: None,
         }
     }
 
@@ -115,6 +119,13 @@ impl<'rt> DpuNode<'rt> {
     /// node runs consults it before fetching + decompressing a basket.
     pub fn with_basket_cache(mut self, cache: Arc<crate::serve::BasketCache>) -> Self {
         self.basket_cache = Some(cache);
+        self
+    }
+
+    /// Install the input file's zone-map sidecar: the engine prunes
+    /// provably-dead baskets before fetching them over PCIe.
+    pub fn with_zone_map(mut self, zone_map: Arc<crate::index::FileIndex>) -> Self {
+        self.zone_map = Some(zone_map);
         self
     }
 
@@ -156,6 +167,7 @@ impl<'rt> DpuNode<'rt> {
             parallelism: self.config.parallelism,
             event_range,
             basket_cache: self.basket_cache.clone(),
+            zone_map: self.zone_map.clone(),
             ..Default::default()
         };
         let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -228,6 +240,17 @@ impl<'rt> DpuCluster<'rt> {
     pub fn with_basket_cache(mut self, cache: Arc<crate::serve::BasketCache>) -> Self {
         for node in &mut self.nodes {
             node.basket_cache = Some(cache.clone());
+        }
+        self
+    }
+
+    /// Install the input file's zone-map sidecar into every node: each
+    /// shard prunes its own provably-dead baskets (summaries cover
+    /// whole baskets, so pruning stays sound under the cluster's
+    /// event-range split).
+    pub fn with_zone_map(mut self, zone_map: Arc<crate::index::FileIndex>) -> Self {
+        for node in &mut self.nodes {
+            node.zone_map = Some(zone_map.clone());
         }
         self
     }

@@ -120,6 +120,16 @@ pub struct EngineOpts {
     /// one-shot job) preserves the uncached behavior exactly. See
     /// `engine/pipeline.rs` and ARCHITECTURE.md § "Serving layer".
     pub basket_cache: Option<std::sync::Arc<crate::serve::BasketCache>>,
+    /// Zone-map index of the input file (from a `.tridx` sidecar).
+    /// When set and the plan compiled [`crate::query::ZonePredicate`]s,
+    /// the fetch stage skips clusters the index proves dead — before
+    /// any read, decompression or deserialization. The index digest is
+    /// verified against the file's metadata first; a mismatch (stale
+    /// sidecar) is ignored with a warning and the run degrades to a
+    /// full scan. Output bytes, `n_pass` and `n_events` are identical
+    /// with or without a zone map; only `stage_funnel` tallies differ
+    /// (pruned events never enter the funnel). `None` disables pruning.
+    pub zone_map: Option<std::sync::Arc<crate::index::FileIndex>>,
 }
 
 impl EngineOpts {
@@ -151,6 +161,7 @@ impl Default for EngineOpts {
             parallelism: 1.0,
             event_range: None,
             basket_cache: None,
+            zone_map: None,
         }
     }
 }

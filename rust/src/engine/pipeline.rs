@@ -469,6 +469,12 @@ pub struct StageCtx<'a> {
     reader: TRootReader<Arc<dyn ReadAt>>,
     meta: FileMeta,
     cache: Option<Arc<TTreeCache<Arc<dyn ReadAt>>>>,
+    /// Digest-validated zone map ([`EngineOpts::zone_map`] after the
+    /// staleness check): `None` when no sidecar was supplied, the
+    /// digest mismatched the input's metadata (stale — a warning was
+    /// pushed and the job full-scans), or the plan compiled no
+    /// [`crate::query::ZonePredicate`]s to prune with.
+    zone_map: Option<Arc<crate::index::FileIndex>>,
     runtime: Option<&'a SkimRuntime>,
     vectorized: bool,
     caps: Capacities,
@@ -537,6 +543,23 @@ impl<'a> StageCtx<'a> {
         let meta = reader.meta().clone();
         let plan = SkimPlan::build(query, &meta)?;
         let mut warnings = plan.warnings.clone();
+
+        // --- zone map (basket pruning) -------------------------------
+        // Validate the sidecar against *this* input before trusting a
+        // single summary: a digest mismatch means the data file was
+        // rewritten after the index was built, so the sidecar is
+        // ignored (full scan) rather than risking a wrong answer.
+        let zone_map = match &opts.zone_map {
+            Some(zm) if zm.digest != crate::index::meta_digest(&meta) => {
+                warnings.push(
+                    "stale zone-map sidecar ignored (digest mismatch); running a full scan"
+                        .into(),
+                );
+                None
+            }
+            Some(zm) if !plan.zone_predicates.is_empty() => Some(zm.clone()),
+            _ => None,
+        };
 
         // --- evaluation strategy -------------------------------------
         let vectorized = opts.use_pjrt && plan.program.fits_kernel() && runtime.is_some();
@@ -707,6 +730,7 @@ impl<'a> StageCtx<'a> {
             reader,
             meta,
             cache,
+            zone_map,
             runtime,
             vectorized,
             caps,
@@ -836,7 +860,49 @@ impl<'a> StageCtx<'a> {
 
     // ---------------- built-in stage bodies --------------------------
 
+    /// Drop provably-dead clusters from the group *before any I/O*:
+    /// a cluster whose zone-map summaries refute one of the plan's
+    /// [`crate::query::ZonePredicate`]s (each a necessary condition of
+    /// the full selection) cannot contain a passing event, so its
+    /// baskets are never fetched, decompressed or deserialized.
+    /// Cluster index == basket index for every branch (the writer
+    /// emits cluster-aligned baskets; the digest check pins
+    /// `basket_events`), and a summary covers the whole basket, so
+    /// pruning stays sound under [`EngineOpts::event_range`] shards.
+    /// `passes` is retained in lockstep (all entries are still empty
+    /// at fetch time); `cluster_pass` rows of pruned clusters simply
+    /// stay empty, so phase 2 skips them too.
+    fn prune_group(&mut self, group: &mut GroupState) {
+        let zm = match &self.zone_map {
+            Some(z) => z,
+            None => return,
+        };
+        let preds = &self.plan.zone_predicates;
+        let keep: Vec<bool> = group
+            .clusters
+            .iter()
+            .map(|&(cl, _, _)| !preds.iter().any(|p| p.dead(zm, cl)))
+            .collect();
+        let dead = keep.iter().filter(|&&k| !k).count();
+        if dead == 0 {
+            return;
+        }
+        let mut it = keep.iter();
+        group.clusters.retain(|_| *it.next().unwrap());
+        let mut it = keep.iter();
+        group.passes.retain(|_| *it.next().unwrap());
+        self.timeline
+            .count("baskets_pruned", (dead * self.phase1.len()) as u64);
+    }
+
     fn fetch_group(&mut self, group: &mut GroupState) -> Result<()> {
+        self.prune_group(group);
+        // Phase-1 baskets this group will actually read (post-prune);
+        // `baskets_pruned + baskets_scanned` is the full criteria scan.
+        self.timeline.count(
+            "baskets_scanned",
+            (group.clusters.len() * self.phase1.len()) as u64,
+        );
         if let Some(cache) = self.opts.basket_cache.clone() {
             return self.fetch_group_cached(group, &cache);
         }
@@ -1795,5 +1861,125 @@ mod tests {
         for s in 0..4 {
             assert_eq!(lo.stage_funnel[s] + hi.stage_funnel[s], full.stage_funnel[s]);
         }
+    }
+
+    // ---------------- zone-map basket pruning -------------------------
+
+    /// Run a cut-string skim over the shared fixture, returning the
+    /// result *and* the timeline (for the prune counters).
+    fn run_cut(outname: &str, cut: &str, opts: &EngineOpts) -> (SkimResult, Timeline) {
+        let path = dataset();
+        let store: Arc<dyn ReadAt> = Arc::new(LocalFile::open(&path).unwrap());
+        let tl = Timeline::new();
+        let out = path.parent().unwrap().join(outname);
+        let query = SkimQuery::new("events.troot", outname)
+            .keep(&["MET_pt", "event", "nJet", "Jet_pt"])
+            .with_cut_str(cut)
+            .unwrap();
+        let res = SkimEngine::new(None).run(store, &query, &tl, opts, &out).unwrap();
+        (res, tl)
+    }
+
+    /// The fixture's zone map, derived once from the data file (the
+    /// legacy `skimroot index` path — byte-identical to writer-derived).
+    fn dataset_index() -> Arc<crate::index::FileIndex> {
+        static IDX: std::sync::OnceLock<Arc<crate::index::FileIndex>> =
+            std::sync::OnceLock::new();
+        IDX.get_or_init(|| {
+            Arc::new(crate::index::FileIndex::build_from_file(dataset()).unwrap())
+        })
+        .clone()
+    }
+
+    #[test]
+    fn zone_map_prunes_dead_baskets_and_output_is_byte_identical() {
+        // The `event` counter is 1_000_000 + ev over 900 events in five
+        // 200-event baskets, so this cut provably kills baskets 0-1 and
+        // provably keeps 2-4 — deterministic prune counts.
+        let cut = "event >= 1000400";
+        let (base, base_tl) = run_cut("pipe_zm_base.troot", cut, &interp_opts());
+        assert_eq!(base.n_pass, 500);
+        assert_eq!(base_tl.counter("baskets_pruned"), 0);
+        assert_eq!(base_tl.counter("baskets_scanned"), 5);
+
+        let opts = EngineOpts {
+            use_pjrt: false,
+            zone_map: Some(dataset_index()),
+            ..Default::default()
+        };
+        let (pruned, tl) = run_cut("pipe_zm_pruned.troot", cut, &opts);
+        assert_eq!(pruned.n_pass, base.n_pass);
+        assert_eq!(pruned.n_events, base.n_events);
+        // One criteria branch (`event`) × 2 dead clusters / 3 live.
+        assert_eq!(tl.counter("baskets_pruned"), 2);
+        assert_eq!(tl.counter("baskets_scanned"), 3);
+        assert!(pruned.fetched_bytes < base.fetched_bytes);
+        assert!(pruned.warnings.is_empty(), "{:?}", pruned.warnings);
+
+        let dir = dataset().parent().unwrap().to_path_buf();
+        let a = std::fs::read(dir.join("pipe_zm_base.troot")).unwrap();
+        let b = std::fs::read(dir.join("pipe_zm_pruned.troot")).unwrap();
+        assert_eq!(a, b, "pruning must not change the output bytes");
+    }
+
+    #[test]
+    fn zone_map_pruning_matches_the_oracle_across_cut_shapes() {
+        // Property check against the scalar-oracle path: for a spread
+        // of operators (>, <, >=, ==, !=, conjunctions, trigger-style
+        // flags) the pruned run must be byte-identical to the full
+        // scan, whatever the zone maps happened to refute.
+        let opts_zm = EngineOpts {
+            use_pjrt: false,
+            zone_map: Some(dataset_index()),
+            ..Default::default()
+        };
+        let dir = dataset().parent().unwrap().to_path_buf();
+        for (i, cut) in [
+            "MET_pt > 200",
+            "MET_pt < 1.0",
+            "MET_pt >= 150 && nJet >= 3",
+            "event == 1000513",
+            "event != 1000000",
+            "HLT_IsoMu24 > 0.5 && event < 1000200",
+            "PV_z < -0.1",
+        ]
+        .iter()
+        .enumerate()
+        {
+            let base_name = format!("pipe_zmo_{i}_base.troot");
+            let zm_name = format!("pipe_zmo_{i}_zm.troot");
+            let (base, _) = run_cut(&base_name, cut, &interp_opts());
+            let (zm, _) = run_cut(&zm_name, cut, &opts_zm);
+            assert_eq!(zm.n_pass, base.n_pass, "cut {cut}");
+            let a = std::fs::read(dir.join(&base_name)).unwrap();
+            let b = std::fs::read(dir.join(&zm_name)).unwrap();
+            assert_eq!(a, b, "cut {cut} diverges under pruning");
+        }
+    }
+
+    #[test]
+    fn stale_zone_map_warns_and_degrades_to_a_full_scan() {
+        let cut = "event >= 1000400";
+        let (base, _) = run_cut("pipe_zm_full.troot", cut, &interp_opts());
+        let mut stale = (*dataset_index()).clone();
+        stale.digest ^= 0xdead_beef;
+        let opts = EngineOpts {
+            use_pjrt: false,
+            zone_map: Some(Arc::new(stale)),
+            ..Default::default()
+        };
+        let (res, tl) = run_cut("pipe_zm_stale.troot", cut, &opts);
+        assert!(
+            res.warnings.iter().any(|w| w.contains("stale zone-map")),
+            "{:?}",
+            res.warnings
+        );
+        assert_eq!(tl.counter("baskets_pruned"), 0);
+        assert_eq!(tl.counter("baskets_scanned"), 5);
+        assert_eq!(res.n_pass, base.n_pass);
+        let dir = dataset().parent().unwrap().to_path_buf();
+        let a = std::fs::read(dir.join("pipe_zm_full.troot")).unwrap();
+        let b = std::fs::read(dir.join("pipe_zm_stale.troot")).unwrap();
+        assert_eq!(a, b, "a stale sidecar must not change results");
     }
 }

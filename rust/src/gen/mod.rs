@@ -308,7 +308,10 @@ fn gen_column(cfg: &GenConfig, branch_idx: usize, branch: &GenBranch, mults: &[V
     }
 }
 
-/// Generate a full dataset at `path`. Returns the write summary.
+/// Generate a full dataset at `path`, plus its `.tridx` zone-map
+/// sidecar (derived for free at write time — selective skims over
+/// generated data prune dead baskets out of the box). Returns the
+/// write summary.
 pub fn generate(cfg: &GenConfig, path: impl AsRef<std::path::Path>) -> Result<crate::troot::writer::WriteSummary> {
     let branches = schema(cfg);
     let mults: Vec<Vec<u32>> = (0..COLLECTIONS.len()).map(|ci| multiplicities(cfg, ci)).collect();
@@ -317,15 +320,17 @@ pub fn generate(cfg: &GenConfig, path: impl AsRef<std::path::Path>) -> Result<cr
         let col = gen_column(cfg, i, b, &mults);
         writer.add_branch(b.desc.clone(), col)?;
     }
-    writer.finalize()
+    let summary = writer.finalize()?;
+    summary.index.save(crate::index::sidecar_path(path.as_ref()))?;
+    Ok(summary)
 }
 
 /// Generate a multi-file dataset under `dir`: `n_files` files named
 /// `partNNN.troot` (each with the full schema shape and a distinct
-/// per-file seed stream) plus a `<catalog_name>.catalog` listing them
-/// in order — ready for glob (`dir/part*.troot`) or
-/// `catalog:<catalog_name>` dataset queries. Returns the per-file
-/// write summaries in file order.
+/// per-file seed stream, each with its `.tridx` zone-map sidecar)
+/// plus a `<catalog_name>.catalog` listing them in order — ready for
+/// glob (`dir/part*.troot`) or `catalog:<catalog_name>` dataset
+/// queries. Returns the per-file write summaries in file order.
 pub fn generate_dataset(
     cfg: &GenConfig,
     dir: impl AsRef<std::path::Path>,
@@ -524,11 +529,26 @@ mod tests {
     }
 
     #[test]
+    fn generated_files_carry_loadable_sidecars() {
+        let cfg = GenConfig::tiny(300);
+        let path = tmp("sidecar.troot");
+        let summary = generate(&cfg, &path).unwrap();
+        let loaded = crate::index::load_sidecar(&path).unwrap().expect("sidecar written");
+        assert_eq!(loaded, summary.index);
+        // The sidecar is current: its digest matches the data file.
+        let r = TRootReader::open(LocalFile::open(&path).unwrap()).unwrap();
+        assert_eq!(loaded.digest, crate::index::meta_digest(r.meta()));
+    }
+
+    #[test]
     fn generate_dataset_writes_parts_and_catalog() {
         let dir = tmp("multi_ds");
         let cfg = GenConfig::tiny(120);
         let summaries = generate_dataset(&cfg, &dir, 3, "all").unwrap();
         assert_eq!(summaries.len(), 3);
+        for i in 0..3 {
+            assert!(dir.join(format!("part{i:03}.troot.tridx")).is_file());
+        }
         let listing = std::fs::read_to_string(dir.join("all.catalog")).unwrap();
         assert_eq!(listing, "part000.troot\npart001.troot\npart002.troot\n");
         // Distinct seed streams: the parts differ, but every part

@@ -1,0 +1,696 @@
+//! Zone-map index subsystem: per-basket summaries for basket-level
+//! pruning, stored in `.tridx` sidecar files next to their data files.
+//!
+//! A [`FileIndex`] records, for every basket of every branch, a
+//! [`BasketSummary`] — min/max over the basket's values (in the f32
+//! domain the filter engine compares in), the value count (events for
+//! scalar branches, total objects for jagged ones) and the NaN count.
+//! The planner compiles each conjunct of a selection into a
+//! [`crate::query::ZonePredicate`]; the engine's fetch stage evaluates
+//! those against the index and skips read + decompress + deserialize
+//! for clusters that provably contain no passing event (see
+//! `engine/pipeline.rs` and ARCHITECTURE.md § "Zone-map index
+//! subsystem").
+//!
+//! Indexes come from two places, guaranteed byte-identical:
+//!
+//! * [`crate::troot::TRootWriter::finalize`] derives one for free at
+//!   write time (the column values are already in memory) and returns
+//!   it on the [`crate::troot::writer::WriteSummary`];
+//! * [`FileIndex::build_from_file`] re-derives it after the fact for
+//!   legacy files (the `skimroot index` CLI command).
+//!
+//! **Staleness**: the index carries a digest of the data file's
+//! metadata footer ([`meta_digest`]). Consumers compare digests before
+//! trusting a sidecar; on mismatch the sidecar is ignored with a
+//! warning and the engine falls back to a full scan — a stale or
+//! corrupt index can cost performance, never correctness.
+//!
+//! # Sidecar format (`.tridx`)
+//!
+//! ```text
+//! [ 8B magic "TRIDXv1\0" ]
+//! [ u32 version = 1 ]
+//! [ u64 data-file meta digest ]
+//! [ u64 n_events ] [ u32 basket_events ] [ u32 branch count ]
+//! per branch:
+//!   [ u16 name len ][ name bytes ][ u32 basket count ]
+//!   per basket: [ f32 min ][ f32 max ][ u64 n_values ][ u64 n_nan ]
+//! [ u64 FNV-1a checksum over all preceding bytes ]
+//! ```
+//!
+//! All integers and floats little-endian. Empty baskets (a jagged
+//! branch with zero objects in the cluster) store `min = +inf`,
+//! `max = -inf`.
+
+use crate::troot::{ColumnData, ColumnValues, FileMeta, ReadAt, TRootReader};
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Magic bytes leading every `.tridx` sidecar.
+pub const TRIDX_MAGIC: &[u8; 8] = b"TRIDXv1\0";
+/// Sidecar format version.
+pub const TRIDX_VERSION: u32 = 1;
+/// Sidecar file extension (appended to the data file's full name:
+/// `events.troot` → `events.troot.tridx`).
+pub const SIDECAR_EXT: &str = "tridx";
+
+/// The sidecar path for a data file: the full data filename with
+/// `.tridx` appended, in the same directory.
+pub fn sidecar_path(data: &Path) -> PathBuf {
+    let mut name = data
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_default();
+    name.push(".");
+    name.push(SIDECAR_EXT);
+    data.with_file_name(name)
+}
+
+/// True when `name` is a sidecar filename (used by the catalog walker
+/// so data-file globs never pick up `.tridx` files).
+pub fn is_sidecar_name(name: &str) -> bool {
+    name.ends_with(".tridx")
+}
+
+/// FNV-1a 64-bit over a byte slice (digests and the sidecar checksum).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Content digest of a data file's metadata footer: FNV-1a over a
+/// canonical serialization of event count, codec, basket geometry and
+/// every branch's schema + basket index. Cheap (no payload read) and
+/// sensitive to any rewrite of the file — rewriting even one basket
+/// moves offsets, so a stale sidecar cannot go undetected.
+pub fn meta_digest(meta: &FileMeta) -> u64 {
+    let mut out = Vec::new();
+    out.extend_from_slice(&meta.n_events.to_le_bytes());
+    out.push(meta.codec.id());
+    out.extend_from_slice(&meta.basket_events.to_le_bytes());
+    out.extend_from_slice(&(meta.branches.len() as u32).to_le_bytes());
+    for b in &meta.branches {
+        out.extend_from_slice(&(b.desc.name.len() as u16).to_le_bytes());
+        out.extend_from_slice(b.desc.name.as_bytes());
+        out.push(b.desc.dtype.id());
+        out.push(match b.desc.kind {
+            crate::troot::BranchKind::Scalar => 0,
+            crate::troot::BranchKind::Jagged => 1,
+        });
+        out.extend_from_slice(&(b.desc.group.len() as u16).to_le_bytes());
+        out.extend_from_slice(b.desc.group.as_bytes());
+        out.extend_from_slice(&(b.baskets.len() as u32).to_le_bytes());
+        for k in &b.baskets {
+            out.extend_from_slice(&k.offset.to_le_bytes());
+            out.extend_from_slice(&k.comp_len.to_le_bytes());
+            out.extend_from_slice(&k.raw_len.to_le_bytes());
+            out.extend_from_slice(&k.first_event.to_le_bytes());
+            out.extend_from_slice(&k.n_events.to_le_bytes());
+        }
+    }
+    fnv1a(&out)
+}
+
+/// Zone summary of one basket: value range, value count, NaN count.
+///
+/// Min/max are computed over the values **converted to f32 exactly as
+/// the filter engine converts them** (`engine/batch.rs` casts every
+/// scalar dtype with `as f32`), so range tests agree with the
+/// interpreter's f32 comparisons at rounding boundaries. NaNs are
+/// excluded from the range and counted separately — NaN fails every
+/// comparison except `!=`, which [`BasketSummary::may_satisfy`]
+/// handles explicitly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BasketSummary {
+    /// Smallest non-NaN value (`+inf` when the basket holds none).
+    pub min: f32,
+    /// Largest non-NaN value (`-inf` when the basket holds none).
+    pub max: f32,
+    /// Values in the basket: events for a scalar branch, total objects
+    /// for a jagged branch.
+    pub n_values: u64,
+    /// Values that are NaN.
+    pub n_nan: u64,
+}
+
+impl Default for BasketSummary {
+    fn default() -> Self {
+        BasketSummary::empty()
+    }
+}
+
+impl BasketSummary {
+    /// The summary of zero values.
+    pub fn empty() -> Self {
+        BasketSummary {
+            min: f32::INFINITY,
+            max: f32::NEG_INFINITY,
+            n_values: 0,
+            n_nan: 0,
+        }
+    }
+
+    /// Fold one value into the summary.
+    pub fn add(&mut self, x: f32) {
+        self.n_values += 1;
+        if x.is_nan() {
+            self.n_nan += 1;
+            return;
+        }
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    /// Could **any** value in this basket satisfy `cmp(x, op, value)`
+    /// (with `|x|` when `abs`)? `op` uses the kernel encoding
+    /// (0 `>`, 1 `>=`, 2 `<`, 3 `<=`, 4 `==`, 5 `!=`). Returning
+    /// `false` licenses pruning, so every uncertain case answers
+    /// `true`; the comparison semantics mirror `engine/interp.rs`
+    /// exactly (NaN fails ops 0–4 and passes op 5).
+    pub fn may_satisfy(&self, op: u8, abs: bool, value: f32) -> bool {
+        if op == 5 && self.n_nan > 0 {
+            // A NaN value satisfies `!=` unconditionally.
+            return true;
+        }
+        if self.n_values == self.n_nan {
+            // No non-NaN values (or no values at all): ops 0–4 cannot
+            // be satisfied, and `!=` was handled above.
+            return false;
+        }
+        let (lo, hi) = if abs {
+            if self.min >= 0.0 {
+                (self.min, self.max)
+            } else if self.max <= 0.0 {
+                (-self.max, -self.min)
+            } else {
+                (0.0, self.max.max(-self.min))
+            }
+        } else {
+            (self.min, self.max)
+        };
+        match op {
+            0 => hi > value,
+            1 => hi >= value,
+            2 => lo < value,
+            3 => lo <= value,
+            4 => lo <= value && value <= hi,
+            5 => !(lo == hi && hi == value),
+            // Unknown op: never prune.
+            _ => true,
+        }
+    }
+}
+
+/// Summarize one basket's slice of a full column: events `[lo, hi)`
+/// for a scalar column, their objects for a jagged one. This is the
+/// single summary routine both index producers share, so writer-derived
+/// and reader-derived indexes are byte-identical.
+pub fn summarize(col: &ColumnData, lo: usize, hi: usize) -> BasketSummary {
+    match col {
+        ColumnData::Scalar(v) => summarize_values(v, lo, hi),
+        ColumnData::Jagged { offsets, values } => {
+            summarize_values(values, offsets[lo] as usize, offsets[hi] as usize)
+        }
+    }
+}
+
+fn summarize_values(v: &ColumnValues, lo: usize, hi: usize) -> BasketSummary {
+    let mut s = BasketSummary::empty();
+    match v {
+        ColumnValues::F32(x) => x[lo..hi].iter().for_each(|&e| s.add(e)),
+        ColumnValues::F64(x) => x[lo..hi].iter().for_each(|&e| s.add(e as f32)),
+        ColumnValues::I32(x) => x[lo..hi].iter().for_each(|&e| s.add(e as f32)),
+        ColumnValues::I64(x) => x[lo..hi].iter().for_each(|&e| s.add(e as f32)),
+        ColumnValues::U8(x) => x[lo..hi].iter().for_each(|&e| s.add(e as f32)),
+    }
+    s
+}
+
+/// Zone summaries for every basket of one branch, in basket order
+/// (basket index == cluster index: the writer emits exactly one basket
+/// per branch per cluster).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BranchZones {
+    /// Branch name.
+    pub name: String,
+    /// One summary per basket, in event order.
+    pub baskets: Vec<BasketSummary>,
+}
+
+/// The zone-map index of one data file (the in-memory form of a
+/// `.tridx` sidecar).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileIndex {
+    /// [`meta_digest`] of the data file this index describes; consumers
+    /// must verify it against the file's actual metadata before
+    /// pruning.
+    pub digest: u64,
+    /// Events in the data file.
+    pub n_events: u64,
+    /// Events per basket (cluster size) of the data file.
+    pub basket_events: u32,
+    /// Per-branch zone summaries, in the data file's schema order.
+    pub branches: Vec<BranchZones>,
+}
+
+impl FileIndex {
+    /// Zone summaries of the named branch.
+    pub fn branch(&self, name: &str) -> Option<&BranchZones> {
+        self.branches.iter().find(|b| b.name == name)
+    }
+
+    /// Summary of one basket of one branch.
+    pub fn summary(&self, branch: &str, basket: usize) -> Option<&BasketSummary> {
+        self.branch(branch).and_then(|b| b.baskets.get(basket))
+    }
+
+    /// Could any value of `branch` in `basket` satisfy the comparison?
+    /// Unknown branches or out-of-range baskets answer `true` (never
+    /// prune on missing information).
+    pub fn may_match(&self, branch: &str, basket: usize, op: u8, abs: bool, value: f32) -> bool {
+        match self.summary(branch, basket) {
+            Some(s) => s.may_satisfy(op, abs, value),
+            None => true,
+        }
+    }
+
+    /// Derive the index from an open reader by scanning every branch —
+    /// the after-the-fact path for legacy files (`skimroot index`).
+    /// Byte-identical to the index [`crate::troot::TRootWriter`]
+    /// derives at write time: both call [`summarize`] over the same
+    /// per-cluster event ranges.
+    pub fn build_from_reader<R: ReadAt>(reader: &TRootReader<R>) -> Result<FileIndex> {
+        let meta = reader.meta();
+        let mut branches = Vec::with_capacity(meta.branches.len());
+        for b in &meta.branches {
+            let col = reader.read_branch_all(&b.desc.name)?;
+            let mut baskets = Vec::with_capacity(b.baskets.len());
+            for k in &b.baskets {
+                let lo = k.first_event as usize;
+                baskets.push(summarize(&col, lo, lo + k.n_events as usize));
+            }
+            branches.push(BranchZones { name: b.desc.name.clone(), baskets });
+        }
+        Ok(FileIndex {
+            digest: meta_digest(meta),
+            n_events: meta.n_events,
+            basket_events: meta.basket_events,
+            branches,
+        })
+    }
+
+    /// [`FileIndex::build_from_reader`] over a local file path.
+    pub fn build_from_file(path: impl AsRef<Path>) -> Result<FileIndex> {
+        let reader = TRootReader::open(crate::troot::LocalFile::open(path)?)?;
+        FileIndex::build_from_reader(&reader)
+    }
+
+    /// Serialize to the `.tridx` wire format (see the module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(TRIDX_MAGIC);
+        out.extend_from_slice(&TRIDX_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.digest.to_le_bytes());
+        out.extend_from_slice(&self.n_events.to_le_bytes());
+        out.extend_from_slice(&self.basket_events.to_le_bytes());
+        out.extend_from_slice(&(self.branches.len() as u32).to_le_bytes());
+        for b in &self.branches {
+            out.extend_from_slice(&(b.name.len() as u16).to_le_bytes());
+            out.extend_from_slice(b.name.as_bytes());
+            out.extend_from_slice(&(b.baskets.len() as u32).to_le_bytes());
+            for s in &b.baskets {
+                out.extend_from_slice(&s.min.to_le_bytes());
+                out.extend_from_slice(&s.max.to_le_bytes());
+                out.extend_from_slice(&s.n_values.to_le_bytes());
+                out.extend_from_slice(&s.n_nan.to_le_bytes());
+            }
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse the `.tridx` wire format. Any structural damage — bad
+    /// magic, unknown version, truncation, checksum mismatch — is an
+    /// [`Error::Format`]; callers treat that exactly like a stale
+    /// sidecar (warn and full-scan).
+    pub fn decode(bytes: &[u8]) -> Result<FileIndex> {
+        if bytes.len() < TRIDX_MAGIC.len() + 8 || &bytes[..TRIDX_MAGIC.len()] != TRIDX_MAGIC {
+            return Err(Error::format("not a tridx sidecar (bad magic)"));
+        }
+        let body_len = bytes.len() - 8;
+        let stored = u64::from_le_bytes(bytes[body_len..].try_into().unwrap());
+        if fnv1a(&bytes[..body_len]) != stored {
+            return Err(Error::format("tridx sidecar checksum mismatch"));
+        }
+        let mut c = Cursor { buf: &bytes[..body_len], pos: TRIDX_MAGIC.len() };
+        let version = c.u32()?;
+        if version != TRIDX_VERSION {
+            return Err(Error::format(format!("unsupported tridx version {version}")));
+        }
+        let digest = c.u64()?;
+        let n_events = c.u64()?;
+        let basket_events = c.u32()?;
+        let n_branches = c.u32()? as usize;
+        let mut branches = Vec::with_capacity(n_branches.min(1 << 20));
+        for _ in 0..n_branches {
+            let name = c.str16()?;
+            let n_baskets = c.u32()? as usize;
+            let mut baskets = Vec::with_capacity(n_baskets.min(1 << 20));
+            for _ in 0..n_baskets {
+                let min = f32::from_le_bytes(c.take(4)?.try_into().unwrap());
+                let max = f32::from_le_bytes(c.take(4)?.try_into().unwrap());
+                let n_values = c.u64()?;
+                let n_nan = c.u64()?;
+                baskets.push(BasketSummary { min, max, n_values, n_nan });
+            }
+            branches.push(BranchZones { name, baskets });
+        }
+        if c.pos != body_len {
+            return Err(Error::format("tridx sidecar has trailing bytes"));
+        }
+        Ok(FileIndex { digest, n_events, basket_events, branches })
+    }
+
+    /// Write the sidecar to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.encode())?;
+        Ok(())
+    }
+
+    /// Read and parse a sidecar file.
+    pub fn load(path: impl AsRef<Path>) -> Result<FileIndex> {
+        FileIndex::decode(&std::fs::read(path)?)
+    }
+}
+
+/// Load the sidecar next to `data` if one exists: `Ok(None)` when the
+/// data file has no sidecar, `Err` when a sidecar exists but cannot be
+/// parsed (the caller warns and proceeds unindexed).
+pub fn load_sidecar(data: &Path) -> Result<Option<FileIndex>> {
+    let p = sidecar_path(data);
+    if !p.exists() {
+        return Ok(None);
+    }
+    FileIndex::load(&p).map(Some)
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| Error::format("tridx sidecar truncated"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str16(&mut self) -> Result<String> {
+        let len = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
+        String::from_utf8(self.take(len)?.to_vec())
+            .map_err(|_| Error::format("tridx sidecar branch name is not UTF-8"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::troot::{BranchDesc, DType, TRootWriter};
+
+    fn dir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tridx_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_index() -> FileIndex {
+        FileIndex {
+            digest: 0x1122_3344_5566_7788,
+            n_events: 4,
+            basket_events: 2,
+            branches: vec![
+                BranchZones {
+                    name: "pt".into(),
+                    baskets: vec![
+                        BasketSummary { min: -1.5, max: 2.0, n_values: 2, n_nan: 0 },
+                        BasketSummary { min: 3.0, max: 8.0, n_values: 2, n_nan: 1 },
+                    ],
+                },
+                BranchZones { name: "n".into(), baskets: vec![BasketSummary::empty()] },
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let idx = sample_index();
+        let bytes = idx.encode();
+        assert_eq!(FileIndex::decode(&bytes).unwrap(), idx);
+    }
+
+    /// Golden bytes for the v1 sidecar format: an accidental layout
+    /// change (field order, widths, checksum) fails here before it can
+    /// silently orphan every sidecar in the wild.
+    #[test]
+    fn golden_file_matches_v1_layout() {
+        let golden: Vec<u8> = vec![
+            // magic "TRIDXv1\0"
+            0x54, 0x52, 0x49, 0x44, 0x58, 0x76, 0x31, 0x00,
+            // version 1
+            0x01, 0x00, 0x00, 0x00,
+            // digest 0x1122334455667788
+            0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11,
+            // n_events 4
+            0x04, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // basket_events 2, branch count 2
+            0x02, 0x00, 0x00, 0x00, 0x02, 0x00, 0x00, 0x00,
+            // branch "pt", 2 baskets
+            0x02, 0x00, 0x70, 0x74, 0x02, 0x00, 0x00, 0x00,
+            // basket 0: min -1.5, max 2.0, n_values 2, n_nan 0
+            0x00, 0x00, 0xc0, 0xbf, 0x00, 0x00, 0x00, 0x40,
+            0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // basket 1: min 3.0, max 8.0, n_values 2, n_nan 1
+            0x00, 0x00, 0x40, 0x40, 0x00, 0x00, 0x00, 0x41,
+            0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // branch "n", 1 empty basket (min +inf, max -inf)
+            0x01, 0x00, 0x6e, 0x01, 0x00, 0x00, 0x00,
+            0x00, 0x00, 0x80, 0x7f, 0x00, 0x00, 0x80, 0xff,
+            0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // FNV-1a checksum of everything above
+            0x45, 0xe1, 0x42, 0x0e, 0x74, 0xd0, 0x47, 0x96,
+        ];
+        assert_eq!(sample_index().encode(), golden);
+        assert_eq!(FileIndex::decode(&golden).unwrap(), sample_index());
+    }
+
+    #[test]
+    fn decode_rejects_damage() {
+        let idx = sample_index();
+        let good = idx.encode();
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(FileIndex::decode(&bad).is_err());
+        // Flipped payload byte → checksum mismatch.
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x01;
+        assert!(FileIndex::decode(&bad).is_err());
+        // Truncation.
+        assert!(FileIndex::decode(&good[..good.len() - 3]).is_err());
+        assert!(FileIndex::decode(&good[..4]).is_err());
+        // Unknown version (checksum recomputed to isolate the check).
+        let mut bad = good[..good.len() - 8].to_vec();
+        bad[8] = 9;
+        let sum = fnv1a(&bad);
+        bad.extend_from_slice(&sum.to_le_bytes());
+        let err = FileIndex::decode(&bad).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+    }
+
+    #[test]
+    fn may_satisfy_range_ops() {
+        let s = BasketSummary { min: 10.0, max: 20.0, n_values: 5, n_nan: 0 };
+        // op 0: >
+        assert!(s.may_satisfy(0, false, 19.9));
+        assert!(!s.may_satisfy(0, false, 20.0));
+        // op 1: >=
+        assert!(s.may_satisfy(1, false, 20.0));
+        assert!(!s.may_satisfy(1, false, 20.1));
+        // op 2: <
+        assert!(s.may_satisfy(2, false, 10.1));
+        assert!(!s.may_satisfy(2, false, 10.0));
+        // op 3: <=
+        assert!(s.may_satisfy(3, false, 10.0));
+        assert!(!s.may_satisfy(3, false, 9.9));
+        // op 4: ==
+        assert!(s.may_satisfy(4, false, 15.0));
+        assert!(!s.may_satisfy(4, false, 25.0));
+        assert!(!s.may_satisfy(4, false, 5.0));
+        // op 5: != (range is not a single point → some value may differ)
+        assert!(s.may_satisfy(5, false, 15.0));
+        // Unknown op never prunes.
+        assert!(s.may_satisfy(17, false, 1e9));
+    }
+
+    #[test]
+    fn may_satisfy_abs_straddles_zero() {
+        let s = BasketSummary { min: -5.0, max: 3.0, n_values: 4, n_nan: 0 };
+        // |x| ranges over [0, 5].
+        assert!(s.may_satisfy(0, true, 4.9));
+        assert!(!s.may_satisfy(0, true, 5.0));
+        assert!(s.may_satisfy(2, true, 0.5));
+        assert!(s.may_satisfy(4, true, 4.0));
+        assert!(!s.may_satisfy(4, true, 6.0));
+        // Entirely negative: |x| ∈ [2, 7].
+        let n = BasketSummary { min: -7.0, max: -2.0, n_values: 4, n_nan: 0 };
+        assert!(n.may_satisfy(0, true, 6.9));
+        assert!(!n.may_satisfy(0, true, 7.0));
+        assert!(!n.may_satisfy(2, true, 2.0));
+        assert!(n.may_satisfy(2, true, 2.1));
+    }
+
+    #[test]
+    fn may_satisfy_nan_and_empty() {
+        // All-NaN basket: only `!=` can be satisfied.
+        let s = BasketSummary { min: f32::INFINITY, max: f32::NEG_INFINITY, n_values: 3, n_nan: 3 };
+        for op in 0..5u8 {
+            assert!(!s.may_satisfy(op, false, 0.0), "op {op}");
+        }
+        assert!(s.may_satisfy(5, false, 0.0));
+        // Empty basket (no objects in the cluster): nothing satisfies.
+        let e = BasketSummary::empty();
+        for op in 0..6u8 {
+            assert!(!e.may_satisfy(op, false, 0.0), "op {op}");
+        }
+        // Constant basket: `!=` its value is dead, anything else lives.
+        let c = BasketSummary { min: 7.0, max: 7.0, n_values: 4, n_nan: 0 };
+        assert!(!c.may_satisfy(5, false, 7.0));
+        assert!(c.may_satisfy(5, false, 7.5));
+        // ... unless a NaN hides in the basket.
+        let cn = BasketSummary { min: 7.0, max: 7.0, n_values: 5, n_nan: 1 };
+        assert!(cn.may_satisfy(5, false, 7.0));
+    }
+
+    #[test]
+    fn summarize_scalar_and_jagged() {
+        let col = ColumnData::scalar_f32(vec![3.0, f32::NAN, -1.0, 8.0]);
+        let s = summarize(&col, 0, 4);
+        assert_eq!(s, BasketSummary { min: -1.0, max: 8.0, n_values: 4, n_nan: 1 });
+        let s = summarize(&col, 1, 2);
+        assert_eq!(s.n_values, 1);
+        assert_eq!(s.n_nan, 1);
+
+        let j = ColumnData::jagged_f32(&[vec![1.0, 2.0], vec![], vec![5.0]]);
+        let s = summarize(&j, 0, 2);
+        assert_eq!(s, BasketSummary { min: 1.0, max: 2.0, n_values: 2, n_nan: 0 });
+        let s = summarize(&j, 1, 2);
+        assert_eq!(s, BasketSummary::empty());
+    }
+
+    #[test]
+    fn writer_and_reader_derived_indexes_agree() {
+        let d = dir();
+        let path = d.join("agree.troot");
+        let mut w = TRootWriter::new(&path, Codec::Lz4, 3);
+        w.add_branch(
+            BranchDesc::scalar("met", DType::F32),
+            ColumnData::scalar_f32(vec![5.0, -2.0, 9.0, 1.0, 4.0, 6.0, 0.0]),
+        )
+        .unwrap();
+        w.add_branch(
+            BranchDesc::jagged("Jet_pt", DType::F32, "Jet"),
+            ColumnData::jagged_f32(&[
+                vec![30.0, 12.0],
+                vec![],
+                vec![55.0],
+                vec![18.0, 44.0, 2.0],
+                vec![],
+                vec![],
+                vec![7.0],
+            ]),
+        )
+        .unwrap();
+        w.add_branch(
+            BranchDesc::scalar("run", DType::I64),
+            ColumnData::Scalar(ColumnValues::I64(vec![1, 1, 1, 2, 2, 2, 2])),
+        )
+        .unwrap();
+        let summary = w.finalize().unwrap();
+        let derived = FileIndex::build_from_file(&path).unwrap();
+        assert_eq!(summary.index, derived);
+        assert_eq!(summary.index.encode(), derived.encode());
+        // 7 events at 3 per basket → 3 baskets per branch.
+        assert_eq!(derived.branch("met").unwrap().baskets.len(), 3);
+        // Jagged summaries count objects, not events.
+        let jets = derived.branch("Jet_pt").unwrap();
+        assert_eq!(jets.baskets[0].n_values, 2);
+        assert_eq!(jets.baskets[1].n_values, 4);
+        assert_eq!(jets.baskets[2].n_values, 1);
+        // Digest matches the file it came from.
+        let r = TRootReader::open(crate::troot::LocalFile::open(&path).unwrap()).unwrap();
+        assert_eq!(derived.digest, meta_digest(r.meta()));
+    }
+
+    #[test]
+    fn save_load_and_sidecar_paths() {
+        let d = dir();
+        let data = d.join("events.troot");
+        let side = sidecar_path(&data);
+        assert_eq!(side.file_name().unwrap(), "events.troot.tridx");
+        assert!(is_sidecar_name("events.troot.tridx"));
+        assert!(!is_sidecar_name("events.troot"));
+        let idx = sample_index();
+        idx.save(&side).unwrap();
+        assert_eq!(FileIndex::load(&side).unwrap(), idx);
+        assert_eq!(load_sidecar(&data).unwrap().unwrap(), idx);
+        assert!(load_sidecar(&d.join("absent.troot")).unwrap().is_none());
+        // A corrupt sidecar is an error (callers warn + full-scan).
+        std::fs::write(&side, b"garbage").unwrap();
+        assert!(load_sidecar(&data).is_err());
+        let _ = std::fs::remove_file(&side);
+    }
+
+    #[test]
+    fn digest_tracks_rewrites() {
+        let d = dir();
+        let path = d.join("digest.troot");
+        let write = |vals: Vec<f32>| {
+            let mut w = TRootWriter::new(&path, Codec::Lz4, 2);
+            w.add_branch(BranchDesc::scalar("x", DType::F32), ColumnData::scalar_f32(vals))
+                .unwrap();
+            w.finalize().unwrap()
+        };
+        let a = write(vec![1.0, 2.0, 3.0]);
+        let b = write(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_ne!(a.index.digest, b.index.digest);
+    }
+}

@@ -46,6 +46,7 @@ pub struct SkimJob<'rt> {
     runtime: Option<&'rt SkimRuntime>,
     stages: Vec<StageReg>,
     basket_cache: Option<Arc<crate::serve::BasketCache>>,
+    materialize_as: Option<String>,
 }
 
 impl<'rt> SkimJob<'rt> {
@@ -61,6 +62,7 @@ impl<'rt> SkimJob<'rt> {
             runtime: None,
             stages: Vec::new(),
             basket_cache: None,
+            materialize_as: None,
         }
     }
 
@@ -104,6 +106,18 @@ impl<'rt> SkimJob<'rt> {
         self
     }
 
+    /// Register the finished skim output back into the storage root's
+    /// catalog as `catalog:<name>` (a **materialized skim**): the
+    /// output is copied under `skims/`, a `.tridx` zone-map sidecar is
+    /// derived for it, and `<name>.catalog` records its lineage
+    /// (source dataset + canonical cut). Later queries can use
+    /// `catalog:<name>` as an ordinary input (CLI:
+    /// `skim --materialize NAME`).
+    pub fn materialize(mut self, name: impl Into<String>) -> Self {
+        self.materialize_as = Some(name.into());
+        self
+    }
+
     /// The query this job will run.
     pub fn query(&self) -> &SkimQuery {
         &self.query
@@ -141,13 +155,25 @@ impl<'rt> SkimJob<'rt> {
         Ok(out)
     }
 
-    /// Execute the job (with the deployment's WLCG-style retries).
+    /// Execute the job (with the deployment's WLCG-style retries),
+    /// then register the output as a materialized skim if
+    /// [`SkimJob::materialize`] was requested.
     pub fn run(&self) -> Result<JobReport> {
         let mut coord = Coordinator::new(&self.storage_root, &self.client_dir, self.runtime);
         if let Some(cache) = &self.basket_cache {
             coord = coord.with_basket_cache(cache.clone());
         }
-        coord.run_job_with(&self.query, &self.deployment, &self.stages)
+        let report = coord.run_job_with(&self.query, &self.deployment, &self.stages)?;
+        if let Some(name) = &self.materialize_as {
+            crate::catalog::register_materialized(
+                &self.storage_root,
+                name,
+                &report.result.output_path,
+                &self.query.input,
+                self.query.combined_cut().as_ref(),
+            )?;
+        }
+        Ok(report)
     }
 }
 
@@ -241,6 +267,48 @@ mod tests {
         assert!(report.result.n_pass > 0);
         assert!(report.result.n_pass < report.result.n_events);
         assert!(client.join("cutstr.troot").exists());
+    }
+
+    #[test]
+    fn materialized_skim_is_reskimmable_via_catalog_name() {
+        let (storage, client) = setup("materialize");
+        // Skim once, registering the output as `catalog:met_skim`.
+        let first = SkimJob::new(
+            SkimQuery::new("events.troot", "met_pass.troot")
+                .keep(&["MET_pt", "nJet", "Jet_pt", "event"])
+                .with_cut_str("MET_pt > 30")
+                .unwrap(),
+        )
+        .storage(&storage)
+        .client_dir(&client)
+        .materialize("met_skim")
+        .run()
+        .unwrap();
+        assert!(first.result.n_pass > 0);
+        assert!(storage.join("skims/met_skim.troot").is_file());
+        assert!(storage.join("skims/met_skim.troot.tridx").is_file());
+
+        // The lineage records where the skim came from.
+        let lin = crate::catalog::read_lineage(&storage, "met_skim")
+            .unwrap()
+            .expect("materialized entry");
+        assert_eq!(lin.source, "events.troot");
+        assert!(lin.cut.contains("MET_pt"), "{}", lin.cut);
+
+        // The materialized entry is an ordinary input: skim the skim.
+        let second = SkimJob::new(
+            SkimQuery::new("catalog:met_skim", "met_tight.troot")
+                .keep(&["MET_pt", "nJet"])
+                .with_cut_str("MET_pt > 60")
+                .unwrap(),
+        )
+        .storage(&storage)
+        .client_dir(&client)
+        .run()
+        .unwrap();
+        assert_eq!(second.result.n_events, first.result.n_pass);
+        assert!(second.result.n_pass < second.result.n_events);
+        assert!(client.join("met_tight.troot").exists());
     }
 
     #[test]

@@ -48,6 +48,14 @@
 //! through [`troot::merge`] (byte-stable regardless of fan-out,
 //! parallelism and completion order).
 //!
+//! Data files can carry **zone-map sidecars** ([`index`], `.tridx`):
+//! per-basket min/max summaries that the planner compiles conjuncts
+//! against so the engine skips provably-dead baskets before any I/O —
+//! with staleness detection so a mismatched sidecar degrades to a full
+//! scan, never a wrong answer. Skim outputs can be registered back
+//! into the catalog as **materialized skims** carrying lineage,
+//! re-skimmable via `catalog:NAME` like any dataset.
+//!
 //! ## The three layers
 //!
 //! * **Layer 3 (this crate)** — a ROOT-like columnar storage substrate
@@ -90,6 +98,7 @@ pub mod coordinator;
 pub mod dpu;
 pub mod engine;
 pub mod gen;
+pub mod index;
 pub mod job;
 pub mod metrics;
 pub mod net;

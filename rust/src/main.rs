@@ -5,6 +5,9 @@
 //! * `gen`   — generate a synthetic NanoAOD-like dataset.
 //! * `skim`  — run one skim job under any deployment mode (simulated
 //!   testbed: virtual links + real compute).
+//! * `index` — build `.tridx` zone-map sidecars for existing troot
+//!   files (gen writes them automatically; this is the
+//!   after-the-fact path for legacy files).
 //! * `serve` — run the **multi-tenant skim service** over TCP: a
 //!   bounded worker pool with admission control and a shared
 //!   decompressed-basket cache, answering `SubmitQuery` / `JobStatus`
@@ -42,6 +45,7 @@ fn main() {
     let result = match cmd.as_str() {
         "gen" => cmd_gen(raw),
         "skim" => cmd_skim(raw),
+        "index" => cmd_index(raw),
         "serve" => cmd_serve(raw),
         "dpu" => cmd_dpu(raw),
         "post" => cmd_post(raw),
@@ -75,12 +79,18 @@ COMMANDS:
          [--mode client-legacy|client-opt|server-side|skimroot]
          [--link 1g|10g|100g] [--fan-out N] [--artifacts DIR]
          [--client-dir DIR] [--fail-prob P] [--retries N]
+         [--materialize NAME]
          (SPEC is a dataset spec: one file, a glob like
           'store/*.troot', or catalog:NAME — multi-file datasets run
           per file with fault isolation and merge deterministically;
           --cut takes a TCut-style string, e.g.
           'nMuon >= 2 && (HLT_Mu50 || max(Muon_pt) > 100)';
-          --explain prints the compiled plan without running)
+          --explain prints the compiled plan without running;
+          --materialize registers the output in the storage catalog
+          as catalog:NAME with lineage, re-skimmable by name)
+  index  [--force] FILE...
+         (build .tridx zone-map sidecars next to existing troot files;
+          fresh sidecars are skipped unless --force)
   serve  --root DIR --listen ADDR [--workers N] [--queue-depth N]
          [--cache-mb N] [--mode client-legacy|client-opt|server-side|
          skimroot] [--fan-out N] [--work-dir DIR]
@@ -168,6 +178,42 @@ fn cmd_gen(raw: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_index(raw: Vec<String>) -> Result<()> {
+    use skimroot::troot::{LocalFile, TRootReader};
+    let args = Args::parse(raw, &["force"])?;
+    if args.positional.is_empty() {
+        return Err(Error::Config(
+            "usage: skimroot index [--force] FILE... (writes FILE.tridx next to each file)"
+                .into(),
+        ));
+    }
+    for path in &args.positional {
+        let path = std::path::Path::new(path);
+        if !args.switch("force") {
+            // Freshness check needs only the metadata, not a scan.
+            let reader = TRootReader::open(LocalFile::open(path)?)?;
+            let digest = skimroot::index::meta_digest(reader.meta());
+            if let Ok(Some(existing)) = skimroot::index::load_sidecar(path) {
+                if existing.digest == digest {
+                    println!("{}: sidecar up to date", path.display());
+                    continue;
+                }
+            }
+        }
+        let idx = skimroot::index::FileIndex::build_from_file(path)?;
+        let sidecar = skimroot::index::sidecar_path(path);
+        idx.save(&sidecar)?;
+        println!(
+            "{}: wrote {} ({} branches x {} baskets)",
+            path.display(),
+            sidecar.display(),
+            idx.branches.len(),
+            idx.branches.first().map(|b| b.baskets.len()).unwrap_or(0),
+        );
+    }
+    Ok(())
+}
+
 fn cmd_skim(raw: Vec<String>) -> Result<()> {
     let args = Args::parse(raw, &["higgs", "no-runtime", "explain"])?;
     let storage = args.require("storage")?;
@@ -216,12 +262,15 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
     };
     deployment.fan_out = args.parse_num("fan-out", 1usize)?;
 
-    let report = SkimJob::new(query)
+    let mut job = SkimJob::new(query)
         .storage(storage)
         .client_dir(client_dir)
         .runtime(runtime.as_ref())
-        .deployment(deployment)
-        .run()?;
+        .deployment(deployment);
+    if let Some(name) = args.get("materialize") {
+        job = job.materialize(name);
+    }
+    let report = job.run()?;
     println!(
         "mode={} events={} pass={} ({:.3}%) attempts={} output={}",
         report.name,
@@ -258,6 +307,12 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
     }
     for w in &report.result.warnings {
         println!("[warn] {w}");
+    }
+    if let Some(name) = args.get("materialize") {
+        println!(
+            "materialized as catalog:{name} under {storage} \
+             (re-skim with --input catalog:{name})"
+        );
     }
     Ok(())
 }

@@ -38,4 +38,4 @@ pub use dataset::DatasetSpec;
 pub use expr::{AggOp, BinOp, Expr, UnaryOp};
 pub use json::Json;
 pub use parse::parse_cut;
-pub use plan::{CutProgram, SkimPlan};
+pub use plan::{CutProgram, SkimPlan, ZoneCmp, ZonePredicate};

@@ -110,6 +110,63 @@ pub struct HtParam {
     pub min_ht: f32,
 }
 
+/// One zone-map comparison: "some value of `branch` in the basket
+/// could satisfy `cmp(x, op, value)`" (with `|x|` when `abs`). The
+/// branch name is kept (not a [`BranchId`]) because zone maps are
+/// keyed by the *file's* schema, not the plan's criteria order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ZoneCmp {
+    /// Branch whose basket summary is consulted.
+    pub branch: String,
+    /// Comparison opcode (same coding as [`ObjCutParam::op`]).
+    pub op: u8,
+    /// Compare `|x|` instead of `x`.
+    pub abs: bool,
+    /// Threshold.
+    pub value: f32,
+}
+
+/// A necessary condition for *any* event of a cluster to pass the
+/// selection, evaluable against a [`crate::index::FileIndex`] without
+/// touching data. Each predicate is implied by one top-level conjunct
+/// of the compiled program, so a cluster where any predicate is
+/// **dead** (provably unsatisfiable) can be skipped entirely:
+///
+/// * a scalar preselection cut needs some scalar value in the basket
+///   satisfying it;
+/// * an object group with `min_count >= 1` needs, for each of its
+///   cuts, at least one object value satisfying that cut;
+/// * an HT requirement with `min_ht > 0` needs at least one jet above
+///   `object_pt_min` (an empty sum is 0);
+/// * a trigger OR needs some flag value `> 0.5` for some flag.
+///
+/// Residual IR expressions never produce predicates (they are extra
+/// ANDed conjuncts — ignoring them is conservative), and `min_count =
+/// 0` groups are vacuously satisfiable. Missing branches or baskets in
+/// the index always count as satisfiable, so pruning can only ever
+/// skip clusters the full scan would also reject.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ZonePredicate {
+    /// A single necessary comparison.
+    Cmp(ZoneCmp),
+    /// A disjunction (the trigger OR): dead only when *every* arm is.
+    Or(Vec<ZoneCmp>),
+}
+
+impl ZonePredicate {
+    /// Is this predicate provably unsatisfiable for cluster `basket`
+    /// according to `index`? (Basket index == cluster index: the
+    /// writer emits one basket per branch per cluster.)
+    pub fn dead(&self, index: &crate::index::FileIndex, basket: usize) -> bool {
+        let live =
+            |c: &ZoneCmp| index.may_match(&c.branch, basket, c.op, c.abs, c.value);
+        match self {
+            ZonePredicate::Cmp(c) => !live(c),
+            ZonePredicate::Or(cs) => !cs.is_empty() && cs.iter().all(|c| !live(c)),
+        }
+    }
+}
+
 /// A compiled IR expression: [`Expr`] with branch references resolved
 /// to column indices of the owning [`CutProgram`]. Shape-checked at
 /// compile time: jagged column references only occur inside an `Agg`.
@@ -266,6 +323,10 @@ pub struct SkimPlan {
     /// Interned source of each program scalar column (see
     /// [`SkimPlan::obj_col_branch`]).
     pub scalar_col_branch: Vec<BranchId>,
+    /// Necessary per-cluster conditions compiled from the program's
+    /// conjuncts, for zone-map basket pruning (empty for trivial
+    /// programs — nothing to prune against).
+    pub zone_predicates: Vec<ZonePredicate>,
     /// Planner warnings (unmatched patterns, curated-set fallbacks).
     pub warnings: Vec<String>,
 }
@@ -402,6 +463,7 @@ impl SkimPlan {
             ));
         }
 
+        let zone_predicates = compile_zone_predicates(&program);
         Ok(SkimPlan {
             output_branches: expansion.selected,
             criteria_branches: criteria,
@@ -409,6 +471,7 @@ impl SkimPlan {
             program,
             obj_col_branch,
             scalar_col_branch,
+            zone_predicates,
             warnings,
         })
     }
@@ -466,6 +529,11 @@ impl SkimPlan {
         }
         let _ = writeln!(out, "  trigger OR:    {} flag(s)", p.triggers.len());
         let _ = writeln!(out, "  residual IR:   {} expression(s)", p.exprs.len());
+        let _ = writeln!(
+            out,
+            "  zone preds:    {} (basket pruning when a .tridx sidecar is present)",
+            self.zone_predicates.len()
+        );
         out.push_str("\nevaluation path: ");
         let unfit = p.kernel_unfit_reasons();
         if unfit.is_empty() {
@@ -487,6 +555,59 @@ impl SkimPlan {
         }
         out
     }
+}
+
+/// Derive the zone predicates a compiled program licenses (see
+/// [`ZonePredicate`] for the per-conjunct soundness argument).
+fn compile_zone_predicates(program: &CutProgram) -> Vec<ZonePredicate> {
+    let mut preds = Vec::new();
+    for c in &program.scalar_cuts {
+        preds.push(ZonePredicate::Cmp(ZoneCmp {
+            branch: program.scalar_columns[c.col].clone(),
+            op: c.op,
+            abs: c.abs,
+            value: c.value,
+        }));
+    }
+    for g in &program.groups {
+        if g.min_count == 0 {
+            // "At least zero objects" holds vacuously; nothing to prune.
+            continue;
+        }
+        for c in &program.obj_cuts[g.cut_range.clone()] {
+            preds.push(ZonePredicate::Cmp(ZoneCmp {
+                branch: program.obj_columns[c.col].clone(),
+                op: c.op,
+                abs: c.abs,
+                value: c.value,
+            }));
+        }
+    }
+    if let Some(ht) = &program.ht {
+        if ht.min_ht > 0.0 {
+            preds.push(ZonePredicate::Cmp(ZoneCmp {
+                branch: program.obj_columns[ht.col].clone(),
+                op: 0,
+                abs: false,
+                value: ht.object_pt_min,
+            }));
+        }
+    }
+    if !program.triggers.is_empty() {
+        preds.push(ZonePredicate::Or(
+            program
+                .triggers
+                .iter()
+                .map(|&s| ZoneCmp {
+                    branch: program.scalar_columns[s].clone(),
+                    op: 0,
+                    abs: false,
+                    value: 0.5,
+                })
+                .collect(),
+        ));
+    }
+    preds
 }
 
 // ---- IR compilation -------------------------------------------------
@@ -904,6 +1025,127 @@ mod tests {
         assert_eq!(p.triggers, vec![1]);
         assert!(p.exprs.is_empty());
         assert!(p.fits_kernel());
+    }
+
+    #[test]
+    fn zone_predicates_cover_every_prunable_conjunct() {
+        let plan = SkimPlan::build(&query(Q), &meta()).unwrap();
+        // 1 scalar cut + 2 object cuts (min_count 1) + HT + trigger OR.
+        assert_eq!(plan.zone_predicates.len(), 5);
+        assert_eq!(
+            plan.zone_predicates[0],
+            ZonePredicate::Cmp(ZoneCmp {
+                branch: "nElectron".into(),
+                op: 1,
+                abs: false,
+                value: 1.0
+            })
+        );
+        assert_eq!(
+            plan.zone_predicates[2],
+            ZonePredicate::Cmp(ZoneCmp {
+                branch: "Electron_eta".into(),
+                op: 2,
+                abs: true,
+                value: 2.4
+            })
+        );
+        // HT compiles to "some jet above object_pt_min".
+        assert_eq!(
+            plan.zone_predicates[3],
+            ZonePredicate::Cmp(ZoneCmp {
+                branch: "Jet_pt".into(),
+                op: 0,
+                abs: false,
+                value: 30.0
+            })
+        );
+        // Triggers compile to an OR over flags > 0.5.
+        assert_eq!(
+            plan.zone_predicates[4],
+            ZonePredicate::Or(vec![ZoneCmp {
+                branch: "HLT_IsoMu24".into(),
+                op: 0,
+                abs: false,
+                value: 0.5
+            }])
+        );
+    }
+
+    #[test]
+    fn zone_predicates_skip_unprunable_conjuncts() {
+        // A copy-all query prunes nothing.
+        let q = query(r#"{"input": "f", "output": "o", "branches": ["MET_pt"]}"#);
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        assert!(plan.zone_predicates.is_empty());
+        // min_count = 0 groups hold vacuously — no predicate.
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "selection": {"objects": [
+                    {"collection": "Electron", "min_count": 0, "cuts": [
+                        {"var": "Electron_pt", "op": ">", "value": 25.0}]}]}}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        assert!(plan.zone_predicates.is_empty());
+        // Residual IR expressions never produce predicates.
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "cut": "MET_pt + nElectron > 3"}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        assert!(!plan.program.exprs.is_empty());
+        assert!(plan.zone_predicates.is_empty());
+    }
+
+    #[test]
+    fn zone_predicate_death_against_an_index() {
+        use crate::index::{BasketSummary, BranchZones, FileIndex};
+        let idx = FileIndex {
+            digest: 0,
+            n_events: 4,
+            basket_events: 2,
+            branches: vec![
+                BranchZones {
+                    name: "MET_pt".into(),
+                    baskets: vec![
+                        BasketSummary { min: 10.0, max: 40.0, n_values: 2, n_nan: 0 },
+                        BasketSummary { min: 90.0, max: 120.0, n_values: 2, n_nan: 0 },
+                    ],
+                },
+                BranchZones {
+                    name: "HLT_IsoMu24".into(),
+                    baskets: vec![
+                        BasketSummary { min: 0.0, max: 0.0, n_values: 2, n_nan: 0 },
+                        BasketSummary { min: 0.0, max: 1.0, n_values: 2, n_nan: 0 },
+                    ],
+                },
+            ],
+        };
+        let cut = |value: f32| {
+            ZonePredicate::Cmp(ZoneCmp { branch: "MET_pt".into(), op: 0, abs: false, value })
+        };
+        assert!(cut(50.0).dead(&idx, 0));
+        assert!(!cut(50.0).dead(&idx, 1));
+        assert!(!cut(5.0).dead(&idx, 0));
+        // Unknown branch / out-of-range basket: never dead.
+        let unknown = ZonePredicate::Cmp(ZoneCmp {
+            branch: "nope".into(),
+            op: 0,
+            abs: false,
+            value: 1e9,
+        });
+        assert!(!unknown.dead(&idx, 0));
+        assert!(!cut(50.0).dead(&idx, 7));
+        // Trigger OR: dead only when every flag is all-zero.
+        let or = ZonePredicate::Or(vec![ZoneCmp {
+            branch: "HLT_IsoMu24".into(),
+            op: 0,
+            abs: false,
+            value: 0.5,
+        }]);
+        assert!(or.dead(&idx, 0));
+        assert!(!or.dead(&idx, 1));
+        assert!(!ZonePredicate::Or(Vec::new()).dead(&idx, 0));
     }
 
     #[test]

@@ -92,6 +92,8 @@ impl SkimService {
                     latency_us: (status.latency * 1e6) as u64,
                     cache_hits: status.cache_hits,
                     cache_misses: status.cache_misses,
+                    baskets_pruned: status.baskets_pruned,
+                    baskets_scanned: status.baskets_scanned,
                     files_done: status.files_done,
                     files_total: status.files_total,
                     msg: status.error.unwrap_or_default(),
@@ -171,6 +173,8 @@ impl SkimServiceClient {
                 latency_us,
                 cache_hits,
                 cache_misses,
+                baskets_pruned,
+                baskets_scanned,
                 files_done,
                 files_total,
                 msg,
@@ -183,6 +187,8 @@ impl SkimServiceClient {
                 latency: latency_us as f64 / 1e6,
                 cache_hits,
                 cache_misses,
+                baskets_pruned,
+                baskets_scanned,
                 error: if msg.is_empty() { None } else { Some(msg) },
                 files_total,
                 files_done,
@@ -282,6 +288,48 @@ mod tests {
         let xrd = crate::xrootd::XrdClient::new(client.wire.clone());
         let file = xrd.open("events.troot").unwrap();
         assert!(crate::troot::ReadAt::size(&file).unwrap() > 0);
+
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+        service.shutdown();
+    }
+
+    #[test]
+    fn pruned_tcp_job_reports_counters_and_bytes_match_direct_run() {
+        let root = dataset("tcpprune");
+        let service = service_over(&root).unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = service.serve_tcp(listener, stop.clone());
+
+        // `event` is the counter branch: the cut provably kills the
+        // first two of three 200-event baskets, and the `.tridx`
+        // sidecar gen wrote is picked up server-side.
+        let client = SkimServiceClient::connect(&addr).unwrap();
+        let query = SkimQuery::new("events.troot", "pruned_tcp.troot")
+            .keep(&["MET_pt", "event"])
+            .with_cut_str("event >= 1000400")
+            .unwrap();
+        let job = client.submit(&query).unwrap();
+        let (status, bytes) = client.wait_result(job).unwrap();
+        assert_eq!(status.state, JobState::Done, "{:?}", status.error);
+        assert_eq!(status.n_pass, 200);
+        assert_eq!(status.baskets_pruned, 2, "prune counters must cross the wire");
+        assert_eq!(status.baskets_scanned, 1);
+
+        // The same query through the one-shot SkimJob facade must
+        // produce byte-identical output.
+        let work = std::env::temp_dir()
+            .join(format!("serve_pruneclient_{}", std::process::id()));
+        std::fs::create_dir_all(&work).unwrap();
+        let report = crate::job::SkimJob::new(query)
+            .storage(&root)
+            .client_dir(&work)
+            .run()
+            .unwrap();
+        assert_eq!(report.timeline.counter("baskets_pruned"), 2);
+        assert_eq!(bytes, std::fs::read(&report.result.output_path).unwrap());
 
         stop.store(true, Ordering::Relaxed);
         handle.join().unwrap();

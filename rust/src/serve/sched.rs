@@ -186,6 +186,13 @@ pub struct JobStatus {
     pub cache_hits: u64,
     /// Shared-basket-cache misses this job paid for.
     pub cache_misses: u64,
+    /// Criteria baskets skipped by zone-map pruning (0 when the input
+    /// had no `.tridx` sidecar or the cut compiled no zone predicates).
+    pub baskets_pruned: u64,
+    /// Criteria baskets actually read; `baskets_pruned +
+    /// baskets_scanned` is the full criteria scan the job would have
+    /// paid without the index.
+    pub baskets_scanned: u64,
     /// Failure message when `state` is [`JobState::Failed`].
     pub error: Option<String>,
     /// Files in the job's dataset (0 for single-file jobs, whose
@@ -217,6 +224,8 @@ struct JobEntry {
     latency: f64,
     cache_hits: u64,
     cache_misses: u64,
+    baskets_pruned: u64,
+    baskets_scanned: u64,
     error: Option<String>,
     /// Resolved dataset files (empty for single-file jobs).
     files: Vec<String>,
@@ -245,6 +254,8 @@ impl JobEntry {
             latency: 0.0,
             cache_hits: 0,
             cache_misses: 0,
+            baskets_pruned: 0,
+            baskets_scanned: 0,
             error: None,
             files,
             parts: (0..n).map(|_| None).collect(),
@@ -373,6 +384,8 @@ impl SkimScheduler {
             latency: e.latency,
             cache_hits: e.cache_hits,
             cache_misses: e.cache_misses,
+            baskets_pruned: e.baskets_pruned,
+            baskets_scanned: e.baskets_scanned,
             error: e.error.clone(),
             files_total: e.files.len() as u64,
             files_done: e.files_done,
@@ -559,6 +572,8 @@ fn run_whole(inner: &SchedInner, id: JobId) {
             entry.latency = report.latency;
             entry.cache_hits = report.timeline.counter("basket_cache_hits");
             entry.cache_misses = report.timeline.counter("basket_cache_misses");
+            entry.baskets_pruned = report.timeline.counter("baskets_pruned");
+            entry.baskets_scanned = report.timeline.counter("baskets_scanned");
             entry.output = Some(bytes);
         }
         Err(e) => {
@@ -607,6 +622,8 @@ fn run_file(inner: &SchedInner, id: JobId, index: usize) {
             entry.latency += report.latency;
             entry.cache_hits += report.timeline.counter("basket_cache_hits");
             entry.cache_misses += report.timeline.counter("basket_cache_misses");
+            entry.baskets_pruned += report.timeline.counter("baskets_pruned");
+            entry.baskets_scanned += report.timeline.counter("baskets_scanned");
         }
         Err(e) => entry.file_errors.push((index, e.to_string())),
     }
@@ -726,6 +743,28 @@ mod tests {
         sched.forget(id);
         assert!(sched.status(id).is_none());
         assert!(sched.fetch_result(id).is_err());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn status_reports_zone_map_prune_counters() {
+        let root = dataset("prune");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 1;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        // `event` is the 1_000_000 + ev counter branch; the cut kills
+        // the first two of three 200-event baskets, and gen wrote the
+        // `.tridx` sidecar the coordinator picks up automatically.
+        let query = SkimQuery::new("events.troot", "pruned.troot")
+            .keep(&["MET_pt", "event"])
+            .with_cut_str("event >= 1000400")
+            .unwrap();
+        let id = sched.submit(query).unwrap();
+        let status = sched.wait(id).unwrap();
+        assert_eq!(status.state, JobState::Done, "{:?}", status.error);
+        assert_eq!(status.n_pass, 200);
+        assert_eq!(status.baskets_pruned, 2);
+        assert_eq!(status.baskets_scanned, 1);
         sched.shutdown();
     }
 

@@ -33,6 +33,10 @@ pub struct WriteSummary {
     pub raw_bytes: u64,
     /// Final file size on disk.
     pub file_bytes: u64,
+    /// Zone-map index of the written file, derived for free while the
+    /// columns were in memory (callers persist it with
+    /// [`crate::index::FileIndex::save`] next to the data file).
+    pub index: crate::index::FileIndex,
 }
 
 impl WriteSummary {
@@ -116,6 +120,14 @@ impl TRootWriter {
             .map(|(desc, _)| BranchMeta { desc: desc.clone(), baskets: Vec::new() })
             .collect();
 
+        let mut zones: Vec<crate::index::BranchZones> = self
+            .columns
+            .iter()
+            .map(|(desc, _)| crate::index::BranchZones {
+                name: desc.name.clone(),
+                baskets: Vec::new(),
+            })
+            .collect();
         let mut raw_bytes = 0u64;
         let mut n_baskets = 0usize;
         let mut lo = 0u64;
@@ -132,6 +144,9 @@ impl TRootWriter {
                     first_event: lo,
                     n_events: (hi - lo) as u32,
                 });
+                zones[bi]
+                    .baskets
+                    .push(crate::index::summarize(data, lo as usize, hi as usize));
                 offset += frame.len() as u64;
                 raw_bytes += raw.len() as u64;
                 n_baskets += 1;
@@ -153,12 +168,19 @@ impl TRootWriter {
         w.flush()?;
 
         let file_bytes = meta_offset + meta_bytes.len() as u64 + super::TRAILER_LEN as u64;
+        let index = crate::index::FileIndex {
+            digest: crate::index::meta_digest(&meta),
+            n_events,
+            basket_events: self.basket_events,
+            branches: zones,
+        };
         Ok(WriteSummary {
             n_events,
             n_branches: meta.branches.len(),
             n_baskets,
             raw_bytes,
             file_bytes,
+            index,
         })
     }
 }

@@ -130,6 +130,11 @@ pub enum Response {
         cache_hits: u64,
         /// Shared basket-cache misses the job paid for.
         cache_misses: u64,
+        /// Criteria baskets skipped by zone-map pruning.
+        baskets_pruned: u64,
+        /// Criteria baskets actually read (`baskets_pruned +
+        /// baskets_scanned` is the full criteria scan).
+        baskets_scanned: u64,
         /// Dataset files completed successfully so far.
         files_done: u64,
         /// Files in the job's dataset (0 for single-file jobs).
@@ -349,6 +354,8 @@ impl Response {
                 latency_us,
                 cache_hits,
                 cache_misses,
+                baskets_pruned,
+                baskets_scanned,
                 files_done,
                 files_total,
                 msg,
@@ -361,6 +368,8 @@ impl Response {
                 out.extend_from_slice(&latency_us.to_le_bytes());
                 out.extend_from_slice(&cache_hits.to_le_bytes());
                 out.extend_from_slice(&cache_misses.to_le_bytes());
+                out.extend_from_slice(&baskets_pruned.to_le_bytes());
+                out.extend_from_slice(&baskets_scanned.to_le_bytes());
                 out.extend_from_slice(&files_done.to_le_bytes());
                 out.extend_from_slice(&files_total.to_le_bytes());
                 put_str(&mut out, msg);
@@ -410,6 +419,8 @@ impl Response {
                 let latency_us = c.u64()?;
                 let cache_hits = c.u64()?;
                 let cache_misses = c.u64()?;
+                let baskets_pruned = c.u64()?;
+                let baskets_scanned = c.u64()?;
                 let files_done = c.u64()?;
                 let files_total = c.u64()?;
                 let msg = c.str()?;
@@ -428,6 +439,8 @@ impl Response {
                     latency_us,
                     cache_hits,
                     cache_misses,
+                    baskets_pruned,
+                    baskets_scanned,
                     files_done,
                     files_total,
                     msg,
@@ -524,6 +537,8 @@ mod tests {
                 latency_us: 2_500_000,
                 cache_hits: 42,
                 cache_misses: 7,
+                baskets_pruned: 1234,
+                baskets_scanned: 56,
                 files_done: 0,
                 files_total: 0,
                 msg: String::new(),
@@ -536,6 +551,8 @@ mod tests {
                 latency_us: 1,
                 cache_hits: 0,
                 cache_misses: 0,
+                baskets_pruned: 0,
+                baskets_scanned: 9,
                 files_done: 2,
                 files_total: 4,
                 msg: String::new(),
