@@ -14,7 +14,11 @@
 //! * the shared decompressed-basket cache reports a **nonzero hit
 //!   rate**: the clients' cuts overlap on the hot criteria branches,
 //!   so the service decompresses each shared basket once instead of
-//!   once per job.
+//!   once per job;
+//! * with a batching window enabled (`ServeConfig::batch_window_ms`),
+//!   the concurrent same-file jobs merge into **shared-scan batches**:
+//!   a **nonzero shared-scan rate** shows members received decoded
+//!   baskets from one union pass instead of fetching them themselves.
 //!
 //! ```sh
 //! cargo run --release --example skim_farm
@@ -56,6 +60,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut cfg = ServeConfig::new(&storage);
     cfg.workers = n_clients.min(8);
     cfg.work_dir = dir.join("serve_work");
+    // Batch same-file jobs arriving within the window into one shared
+    // scan (generous window: every concurrent submit must land in it).
+    cfg.batch_window_ms = 250;
     let deployment = cfg.deployment.clone();
     let service = SkimService::new(cfg)?;
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
@@ -85,7 +92,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     };
 
     // Fire all clients concurrently against the one server.
-    let results: Vec<(usize, u64, Vec<u8>)> = std::thread::scope(|scope| {
+    let results: Vec<(usize, u64, u64, Vec<u8>)> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..n_clients)
             .map(|i| {
                 let addr = addr.clone();
@@ -95,14 +102,18 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     let job = client.submit(&query).expect("submit");
                     let (status, bytes) = client.wait_result(job).expect("job result");
                     println!(
-                        "client {i}: job {job} pass {}/{} (cache {} hits / {} misses) [{}]",
+                        "client {i}: job {job} pass {}/{} (cache {} hits / {} misses, \
+                         batch {}x{}, scan_shared {}) [{}]",
                         status.n_pass,
                         status.n_events,
                         status.cache_hits,
                         status.cache_misses,
+                        status.batch_id,
+                        status.batch_members,
+                        status.scan_shared,
                         cuts[i % cuts.len()],
                     );
-                    (i, status.n_pass, bytes)
+                    (i, status.n_pass, status.scan_shared, bytes)
                 })
             })
             .collect();
@@ -111,7 +122,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // Serial reference: the same queries, one-shot, no service, no
     // shared cache. Outputs must be byte-identical.
-    for (i, n_pass, served_bytes) in &results {
+    for (i, n_pass, _, served_bytes) in &results {
         let report = SkimJob::new(query_for(*i))
             .storage(&storage)
             .client_dir(dir.join(format!("serial{i}")))
@@ -139,6 +150,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     assert!(
         stats.hits > 0,
         "overlapping cuts must share decompressed baskets"
+    );
+    let scan_shared: u64 = results.iter().map(|(_, _, s, _)| s).sum();
+    println!("shared-scan rate: {scan_shared} basket views served by batch scans");
+    assert!(
+        scan_shared > 0,
+        "concurrent same-file jobs must batch into shared scans"
     );
 
     stop.store(true, Ordering::Relaxed);

@@ -68,6 +68,14 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> T) {
     record_json(name, median, min, max, times.len());
 }
 
+/// Record a single deterministic measurement — modeled (virtual-time)
+/// latencies from the deployment cost model don't jitter, so they need
+/// no warmup/iteration statistics and make stable CI gates.
+pub fn record_model(name: &str, seconds: f64) {
+    println!("{name:<44} model  {:>12}", skimroot::util::human_secs(seconds));
+    record_json(name, seconds, seconds, seconds, 1);
+}
+
 /// Throughput variant: reports MB/s over `bytes` processed per iter.
 pub fn bench_throughput<T>(
     name: &str,

@@ -11,6 +11,9 @@
 //!   threaded-engine tentpole, measured not asserted;
 //! * zone-map pruning: the same cut run end-to-end with and without
 //!   the `.tridx` basket index, at high and low selectivity;
+//! * shared-scan batching: four overlapping cuts run as one batched
+//!   shared scan vs four independent jobs — wall-clock measured, and
+//!   the deterministic modeled latencies recorded for the CI gate;
 //! * JSON query parsing.
 //!
 //! `BENCH_JSON=path` appends machine-readable records (see
@@ -36,6 +39,7 @@ fn main() {
     engine_parallelism_benches();
     dataset_benches();
     zone_map_benches();
+    shared_scan_benches();
     json_benches();
 }
 
@@ -358,6 +362,83 @@ fn zone_map_benches() {
             });
         }
     }
+}
+
+/// Shared-scan quartet: four overlapping cuts on one file run as one
+/// batched shared scan (`Coordinator::run_shared`) vs four independent
+/// solo jobs. Wall-clock is measured for both; the **modeled**
+/// (virtual-time) latencies are recorded via `record_model` — those are
+/// deterministic cost-model outputs, so CI gates the batched/independent
+/// ratio on them without run-to-run jitter. Member virtual time under
+/// sharing is the `1/N` fold of the batch scan plus the member's own
+/// phase 2, so the sums compared here are directly meaningful.
+fn shared_scan_benches() {
+    println!("\n== shared-scan batch (4 overlapping cuts, one file) ==");
+    let path = bench_dir().join("micro_engine.troot");
+    if !path.exists() {
+        let cfg = gen::GenConfig {
+            n_events: 4096,
+            target_branches: 180,
+            n_hlt: 40,
+            basket_events: 512,
+            codec: Codec::Lz4,
+            seed: 11,
+        };
+        gen::generate(&cfg, &path).unwrap();
+    }
+    let cuts = [
+        "MET_pt > 20",
+        "MET_pt > 35",
+        "MET_pt > 20 && nJet >= 2",
+        "MET_pt > 50 || nJet >= 4",
+    ];
+    let mk = |i: usize, out: String| {
+        skimroot::query::SkimQuery::new("micro_engine.troot", out)
+            .keep(&["MET_pt", "nJet"])
+            .with_cut_str(cuts[i])
+            .unwrap()
+    };
+    let dep = skimroot::coordinator::Deployment::server_side(skimroot::net::LinkModel::local());
+    let client = bench_dir().join("shared_client");
+    let batch: Vec<_> = (0..cuts.len()).map(|i| mk(i, format!("quartet{i}.troot"))).collect();
+
+    harness::bench("shared-scan quartet batched e2e", 1, 5, || {
+        skimroot::coordinator::Coordinator::new(bench_dir(), &client, None)
+            .run_shared(&batch, &dep, 1)
+            .unwrap()
+    });
+    harness::bench("shared-scan quartet independent e2e", 1, 5, || {
+        (0..cuts.len())
+            .map(|i| {
+                skimroot::SkimJob::new(mk(i, format!("solo{i}.troot")))
+                    .storage(bench_dir())
+                    .client_dir(&client)
+                    .deployment(dep.clone())
+                    .run()
+                    .unwrap()
+            })
+            .count()
+    });
+
+    // Deterministic virtual-time records for the CI gate.
+    let reports = skimroot::coordinator::Coordinator::new(bench_dir(), &client, None)
+        .run_shared(&batch, &dep, 1)
+        .unwrap();
+    let batched: f64 = reports.iter().map(|r| r.timeline.elapsed()).sum();
+    let independent: f64 = (0..cuts.len())
+        .map(|i| {
+            skimroot::SkimJob::new(mk(i, format!("solo{i}.troot")))
+                .storage(bench_dir())
+                .client_dir(&client)
+                .deployment(dep.clone())
+                .run()
+                .unwrap()
+                .timeline
+                .elapsed()
+        })
+        .sum();
+    harness::record_model("shared-scan quartet batched (virtual)", batched);
+    harness::record_model("shared-scan quartet independent (virtual)", independent);
 }
 
 fn json_benches() {

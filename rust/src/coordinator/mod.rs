@@ -387,6 +387,10 @@ pub struct JobReport {
     /// Per-file outcomes for dataset jobs, in resolved dataset order.
     /// Empty for single-file jobs, whose report shape is unchanged.
     pub files: Vec<FileReport>,
+    /// When this job ran as a member of a shared-scan batch
+    /// ([`Coordinator::run_shared`]): the batch identity. `None` for
+    /// solo runs.
+    pub batch: Option<crate::mqo::BatchInfo>,
 }
 
 impl JobReport {
@@ -555,6 +559,220 @@ impl<'rt> Coordinator<'rt> {
         self.run_dataset(query, &files, deployment, stages)
     }
 
+    /// Run a batch of compatible queries as **one shared scan**: a
+    /// single phase-1 fetch → decompress → deserialize pass over the
+    /// union of the members' criteria branches serves every member
+    /// (see [`crate::mqo`] for the planner and
+    /// [`crate::engine::run_shared`] for the executor). Per-member
+    /// masks, funnels and output files are byte-identical to solo
+    /// [`Coordinator::run_job`] runs.
+    ///
+    /// Requirements: every query targets the **same resolved single
+    /// file**, and the deployment passes
+    /// [`crate::mqo::deployment_incompatibility`] (client or server
+    /// placement, two-phase, `fan_out` 1, no fault injection) — the
+    /// scheduler checks the same predicate before forming batches and
+    /// falls back to solo runs otherwise. The shared pass always
+    /// evaluates members on the scalar interpreter (kernel batch
+    /// shapes are per-member), which is bit-identical to the kernel.
+    ///
+    /// Attribution: the shared pass charges the batch once, then
+    /// amortizes across members as exact integer counter shares and
+    /// `1/N` virtual-time slices; each member's phase-2 and output
+    /// work stays on its own timeline. Member outputs land under
+    /// collision-free `b<batch>_m<i>_` names in the client dir, and
+    /// every report carries [`JobReport::batch`] identity.
+    pub fn run_shared(
+        &self,
+        queries: &[SkimQuery],
+        deployment: &Deployment,
+        batch_id: u64,
+    ) -> Result<Vec<JobReport>> {
+        deployment.validate()?;
+        if queries.is_empty() {
+            return Err(Error::Config("shared-scan batch has no members".into()));
+        }
+        if let Some(reason) = crate::mqo::deployment_incompatibility(deployment) {
+            return Err(Error::Config(format!(
+                "deployment cannot host shared scans: {reason}"
+            )));
+        }
+        // Every member must resolve to the same single file — the
+        // batching window keys on exactly this.
+        let files = crate::catalog::resolve(&queries[0].input, &self.storage_root)?;
+        if !queries[0].input.is_single() || files.len() != 1 {
+            return Err(Error::Config("shared scans require single-file members".into()));
+        }
+        for q in &queries[1..] {
+            if !q.input.is_single()
+                || crate::catalog::resolve(&q.input, &self.storage_root)? != files
+            {
+                return Err(Error::Config(
+                    "shared-scan members must target the same resolved dataset".into(),
+                ));
+            }
+        }
+        let input_path = files[0].as_str();
+        std::fs::create_dir_all(&self.client_dir)?;
+
+        let n = queries.len();
+        let batch_timeline = Timeline::new();
+        let member_timelines: Vec<Timeline> = (0..n).map(|_| Timeline::new()).collect();
+
+        // Zone-map sidecar: loaded once, validated per member context
+        // (a corrupt sidecar degrades every member to a full scan with
+        // a warning, exactly like solo runs).
+        let (zone_map, zone_warning) =
+            match crate::index::load_sidecar(&self.storage_root.join(input_path)) {
+                Ok(Some(idx)) => (Some(Arc::new(idx)), None),
+                Ok(None) => (None, None),
+                Err(e) => (
+                    None,
+                    Some(format!(
+                        "corrupt zone-map sidecar for {input_path} ignored ({e}); running a full scan"
+                    )),
+                ),
+            };
+
+        // One store per member (phase-2 selective fetches charge the
+        // member's timeline) plus one for the shared scan (charges the
+        // batch timeline) — mirroring the solo placement arms.
+        let mk_store = |tl: &Timeline| -> Result<(Arc<dyn ReadAt>, Option<XrdServer>)> {
+            match &deployment.placement {
+                Placement::Client => {
+                    let server = XrdServer::new(&self.storage_root, deployment.disk);
+                    server.set_timeline(Some(tl.clone()));
+                    let stats = server.clone();
+                    let wire = Arc::new(LoopbackWire::new(
+                        server,
+                        deployment.client_link,
+                        tl.clone(),
+                    ));
+                    let store: Arc<dyn ReadAt> =
+                        Arc::new(XrdClient::new(wire).open(input_path)?);
+                    Ok((store, Some(stats)))
+                }
+                Placement::Server => {
+                    let local = LocalFile::open(self.storage_root.join(input_path))?;
+                    let store: Arc<dyn ReadAt> = Arc::new(crate::net::ModeledStore::new(
+                        local,
+                        deployment.disk,
+                        tl.clone(),
+                    ));
+                    Ok((store, None))
+                }
+                Placement::Dpu(_) => Err(Error::Config(
+                    "shared scans cannot run on DPU placements".into(),
+                )),
+            }
+        };
+        let (scan_store, scan_server) = mk_store(&batch_timeline)?;
+        let mut member_stores: Vec<Arc<dyn ReadAt>> = Vec::with_capacity(n);
+        let mut member_servers: Vec<Option<XrdServer>> = Vec::with_capacity(n);
+        for tl in &member_timelines {
+            let (store, server) = mk_store(tl)?;
+            member_stores.push(store);
+            member_servers.push(server);
+        }
+
+        let opts = EngineOpts {
+            two_phase: true,
+            use_pjrt: false,
+            compute_node: match &deployment.placement {
+                Placement::Server => Node::Server,
+                _ => Node::Client,
+            },
+            decomp: DecompMode::Software,
+            cache_bytes: match &deployment.placement {
+                Placement::Client => deployment.cache_bytes,
+                _ => None,
+            },
+            basket_cache: self.basket_cache.clone(),
+            zone_map: zone_map.clone(),
+            ..Default::default()
+        };
+        // Collision-free member output names: two members may request
+        // the same output file name.
+        let out_paths: Vec<std::path::PathBuf> = queries
+            .iter()
+            .enumerate()
+            .map(|(i, q)| {
+                self.client_dir
+                    .join(format!("b{batch_id}_m{i}_{}", sanitize(&q.output)))
+            })
+            .collect();
+
+        let mut results = crate::engine::run_shared(
+            scan_store,
+            &member_stores,
+            queries,
+            &member_timelines,
+            &batch_timeline,
+            &opts,
+            &out_paths,
+        )?;
+
+        // Ship each member's output to the client (a no-op for client
+        // placements, where the output is already local).
+        if !matches!(deployment.placement, Placement::Client) {
+            for (result, tl) in results.iter().zip(&member_timelines) {
+                deployment
+                    .client_link
+                    .charge(tl, Stage::OutputTransfer, result.output_bytes);
+            }
+        }
+        // Served-byte accounting, solo-parity: each member's own
+        // (phase-2) server total lands on its timeline; the scan
+        // server's total is charged to the batch and amortized in
+        // exact integer shares.
+        if let Some(stats) = scan_server {
+            let served = stats.bytes_served();
+            if served > 0 {
+                batch_timeline.count("xrd_bytes_served", served);
+                for (i, tl) in member_timelines.iter().enumerate() {
+                    let share = crate::mqo::amortized_share(served, n, i);
+                    if share > 0 {
+                        tl.count("xrd_bytes_served", share);
+                    }
+                }
+            }
+        }
+        for (server, tl) in member_servers.iter().zip(&member_timelines) {
+            if let Some(stats) = server {
+                let served = stats.bytes_served();
+                if served > 0 {
+                    tl.count("xrd_bytes_served", served);
+                }
+            }
+        }
+        if let Some(w) = zone_warning {
+            for r in &mut results {
+                r.warnings.push(w.clone());
+            }
+        }
+
+        let info = crate::mqo::BatchInfo { id: batch_id, members: n as u32 };
+        Ok(results
+            .into_iter()
+            .zip(member_timelines)
+            .map(|(result, timeline)| {
+                timeline.count("attempts", 1);
+                let latency = timeline.elapsed();
+                let utilization = node_utilization(&timeline);
+                JobReport {
+                    name: deployment.name.clone(),
+                    result,
+                    timeline,
+                    latency,
+                    attempts: 1,
+                    utilization,
+                    files: Vec::new(),
+                    batch: Some(info),
+                }
+            })
+            .collect())
+    }
+
     /// The legacy single-file job: whole-job WLCG-style retries.
     fn run_single_file(
         &self,
@@ -585,6 +803,7 @@ impl<'rt> Coordinator<'rt> {
                         attempts,
                         utilization,
                         files: Vec::new(),
+                        batch: None,
                     });
                 }
                 Err(e) => {
@@ -796,6 +1015,7 @@ impl<'rt> Coordinator<'rt> {
             attempts: total_attempts,
             utilization,
             files: file_reports,
+            batch: None,
         })
     }
 
@@ -1410,6 +1630,130 @@ mod tests {
         assert_eq!(fanned.result.n_pass, single.result.n_pass);
         assert!(fanned.latency < single.latency, "{} vs {}", fanned.latency, single.latency);
         assert_eq!(single_bytes, std::fs::read(client.join("striped.troot")).unwrap());
+    }
+
+    // ---------------- shared-scan batches -----------------------------
+
+    fn cut_query(cut: &str, outname: &str) -> SkimQuery {
+        SkimQuery::new("events.troot", outname)
+            .keep(&["MET_pt", "event", "nJet", "Jet_pt", "nMuon", "Muon_pt"])
+            .with_cut_str(cut)
+            .unwrap()
+    }
+
+    #[test]
+    fn shared_batch_is_byte_identical_to_solo_runs_and_dpu_fanout() {
+        let (storage, client) = setup_named(Codec::Lz4, "mqo_id");
+        let coord = Coordinator::new(&storage, &client, None);
+        let cuts = [
+            "MET_pt > 25 || max(Jet_pt) > 60",
+            "nMuon >= 1 && max(Muon_pt) > 30",
+            "MET_pt > 60",
+        ];
+        let queries: Vec<SkimQuery> = cuts
+            .iter()
+            .enumerate()
+            .map(|(i, c)| cut_query(c, &format!("mqo{i}.troot")))
+            .collect();
+
+        let mut dep = Deployment::server_side(LinkModel::local());
+        dep.use_pjrt = false;
+        let reports = coord.run_shared(&queries, &dep, 7).unwrap();
+        assert_eq!(reports.len(), 3);
+
+        let mut client_dep = Deployment::client_opt(LinkModel::wan_1g());
+        client_dep.use_pjrt = false;
+        let mut dpu_dep = Deployment::skim_root(LinkModel::wan_1g());
+        dpu_dep.fan_out = 4;
+
+        for (i, q) in queries.iter().enumerate() {
+            let r = &reports[i];
+            assert_eq!(r.batch, Some(crate::mqo::BatchInfo { id: 7, members: 3 }));
+            assert_eq!(r.attempts, 1);
+            assert!(r.timeline.counter("scan_shared") > 0, "member {i} saw no shared scan");
+            let shared_bytes = std::fs::read(&r.result.output_path).unwrap();
+
+            // Solo on the same deployment: byte-identical output,
+            // identical mask and funnel.
+            let solo = coord.run_job(q, &dep).unwrap();
+            assert_eq!(r.result.n_pass, solo.result.n_pass, "member {i}");
+            assert_eq!(r.result.stage_funnel, solo.result.stage_funnel, "member {i}");
+            let solo_bytes = std::fs::read(&solo.result.output_path).unwrap();
+            assert_eq!(shared_bytes, solo_bytes, "member {i} vs server solo");
+
+            // And across placements: client solo and DPU fan_out-4
+            // solo produce the same bytes too (solo outputs are
+            // placement- and fan-out-invariant).
+            let csolo = coord.run_job(q, &client_dep).unwrap();
+            assert_eq!(
+                shared_bytes,
+                std::fs::read(&csolo.result.output_path).unwrap(),
+                "member {i} vs client solo"
+            );
+            let dsolo = coord.run_job(q, &dpu_dep).unwrap();
+            assert_eq!(
+                shared_bytes,
+                std::fs::read(&dsolo.result.output_path).unwrap(),
+                "member {i} vs dpu fan-out 4 solo"
+            );
+        }
+
+        // Amortized scan shares sum to a consistent whole: every
+        // member carries a nonzero slice of the one scan.
+        let scanned: u64 =
+            reports.iter().map(|r| r.timeline.counter("baskets_scanned")).sum();
+        assert!(scanned > 0);
+    }
+
+    #[test]
+    fn shared_batch_rejects_mixed_datasets_and_unsupported_deployments() {
+        let (storage, client) = setup_named(Codec::Lz4, "mqo_rej");
+        // A second, different file in the same storage root.
+        let other = storage.join("other.troot");
+        if !other.exists() {
+            let cfg = GenConfig {
+                n_events: 400,
+                target_branches: 180,
+                n_hlt: 40,
+                basket_events: 200,
+                codec: Codec::Lz4,
+                seed: 12,
+            };
+            gen::generate(&cfg, &other).unwrap();
+        }
+        let coord = Coordinator::new(&storage, &client, None);
+        let mut dep = Deployment::server_side(LinkModel::local());
+        dep.use_pjrt = false;
+
+        // Mixed resolved datasets must not batch.
+        let mixed = [
+            cut_query("MET_pt > 25", "mix0.troot"),
+            SkimQuery::new("other.troot", "mix1.troot")
+                .keep(&["MET_pt"])
+                .with_cut_str("MET_pt > 25")
+                .unwrap(),
+        ];
+        let err = coord.run_shared(&mixed, &dep, 1).unwrap_err();
+        assert!(format!("{err}").contains("same resolved dataset"), "{err}");
+
+        // Unsupported deployments are refused with the predicate's
+        // reason.
+        let same = [cut_query("MET_pt > 25", "a.troot"), cut_query("MET_pt > 60", "b.troot")];
+        let mut faulty = Deployment::server_side(LinkModel::local());
+        faulty.fault.read_fail_prob = 0.5;
+        for bad in [
+            Deployment::skim_root(LinkModel::wan_1g()),
+            Deployment::client_legacy(LinkModel::wan_1g()),
+            faulty,
+        ] {
+            let err = coord.run_shared(&same, &bad, 2).unwrap_err();
+            assert!(
+                format!("{err}").contains("cannot host shared scans"),
+                "{bad:?} → {err}"
+            );
+        }
+        // Empty batches are refused.
+        assert!(coord.run_shared(&[], &dep, 3).is_err());
     }
 
     #[test]

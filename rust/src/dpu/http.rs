@@ -278,8 +278,10 @@ fn error_json(msg: impl std::fmt::Display) -> String {
 
 /// Compact JSON rendering of one job status (sorted keys). Dataset
 /// jobs additionally report `files_done`/`files_total` and any
-/// fault-isolated per-file failures; single-file statuses keep their
-/// exact legacy shape.
+/// fault-isolated per-file failures; shared-scan members additionally
+/// report `batch_id`/`batch_members`; solo single-file statuses keep
+/// their exact legacy shape plus the always-present `scan_shared`
+/// counter (0 when the job fetched everything itself).
 fn status_json(status: &crate::serve::JobStatus) -> String {
     let mut obj = BTreeMap::new();
     obj.insert("job".to_string(), Json::Num(status.id as f64));
@@ -291,6 +293,11 @@ fn status_json(status: &crate::serve::JobStatus) -> String {
     obj.insert("cache_misses".to_string(), Json::Num(status.cache_misses as f64));
     obj.insert("baskets_pruned".to_string(), Json::Num(status.baskets_pruned as f64));
     obj.insert("baskets_scanned".to_string(), Json::Num(status.baskets_scanned as f64));
+    obj.insert("scan_shared".to_string(), Json::Num(status.scan_shared as f64));
+    if status.batch_members > 0 {
+        obj.insert("batch_id".to_string(), Json::Num(status.batch_id as f64));
+        obj.insert("batch_members".to_string(), Json::Num(status.batch_members as f64));
+    }
     if status.files_total > 0 {
         obj.insert("files_done".to_string(), Json::Num(status.files_done as f64));
         obj.insert("files_total".to_string(), Json::Num(status.files_total as f64));
@@ -634,6 +641,9 @@ mod tests {
                 assert!(text.contains("\"cache_misses\""));
                 assert!(text.contains("\"baskets_pruned\""));
                 assert!(text.contains("\"baskets_scanned\""));
+                assert!(text.contains("\"scan_shared\""));
+                // Solo run: batch identity stays off the wire.
+                assert!(!text.contains("\"batch_id\""), "{text}");
                 assert!(text.contains("\"latency_secs\""));
                 break;
             }
@@ -655,6 +665,111 @@ mod tests {
         // Malformed submission.
         let (status, _, _) = http_request(&addr, "POST", "/jobs", b"{nope").unwrap();
         assert_eq!(status, 422);
+
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+        sched.shutdown();
+    }
+
+    /// Pull the integer value of `key` out of a flat status JSON body.
+    fn json_u64(text: &str, key: &str) -> u64 {
+        let pat = format!("\"{key}\":");
+        let start = text.find(&pat).unwrap_or_else(|| panic!("{key} missing in {text}"));
+        let rest = &text[start + pat.len()..];
+        let end = rest.find([',', '}']).unwrap();
+        rest[..end].trim().parse().unwrap()
+    }
+
+    #[test]
+    fn batched_http_jobs_report_batch_info_and_bytes_match_solo() {
+        use crate::compress::Codec;
+        use crate::gen::{self, GenConfig};
+        let dir = std::env::temp_dir().join(format!("http_batch_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.troot");
+        if !path.exists() {
+            let cfg = GenConfig {
+                n_events: 600,
+                target_branches: 160,
+                n_hlt: 40,
+                basket_events: 200,
+                codec: Codec::Lz4,
+                seed: 53,
+            };
+            gen::generate(&cfg, &path).unwrap();
+        }
+        let mut cfg = crate::serve::ServeConfig::new(&dir);
+        cfg.deployment.disk = crate::net::DiskModel::ideal();
+        // Generous window: both submissions must land inside it even
+        // on a slow CI box.
+        cfg.batch_window_ms = 150;
+        let sched = crate::serve::SkimScheduler::new(cfg).unwrap();
+
+        let server = DpuHttpServer::new(|_q: &SkimQuery, _tl: &Timeline| {
+            Err(crate::Error::Engine("sync path unused in this test".into()))
+        })
+        .with_scheduler(sched.clone());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = server.serve(listener, stop.clone());
+
+        let mk = |cut: &str, out: &str| {
+            SkimQuery::new("events.troot", out)
+                .keep(&["MET_pt", "nJet", "Jet_pt"])
+                .with_cut_str(cut)
+                .unwrap()
+        };
+        let cuts = ["MET_pt > 25", "MET_pt > 25 && nJet >= 2"];
+        let ids: Vec<u64> = cuts
+            .iter()
+            .enumerate()
+            .map(|(i, cut)| {
+                let payload = mk(cut, &format!("hb{i}.troot")).to_json().to_string();
+                let (status, _, body) =
+                    http_request(&addr, "POST", "/jobs", payload.as_bytes()).unwrap();
+                assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+                let text = String::from_utf8(body).unwrap();
+                text.trim_start_matches("{\"job\":").trim_end_matches('}').parse().unwrap()
+            })
+            .collect();
+
+        for (i, &id) in ids.iter().enumerate() {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+            let text = loop {
+                let (status, _, body) =
+                    http_request(&addr, "GET", &format!("/jobs/{id}"), b"").unwrap();
+                assert_eq!(status, 200);
+                let text = String::from_utf8(body).unwrap();
+                if text.contains("\"state\":\"done\"") {
+                    break text;
+                }
+                assert!(!text.contains("\"state\":\"failed\""), "{text}");
+                assert!(std::time::Instant::now() < deadline, "job never finished: {text}");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            };
+            assert_eq!(json_u64(&text, "batch_members"), 2, "{text}");
+            assert!(json_u64(&text, "batch_id") > 0, "{text}");
+            assert!(json_u64(&text, "scan_shared") > 0, "member {i} saw no shared scan");
+
+            // Byte-identity against the one-shot SkimJob facade.
+            let (status, _, bytes) =
+                http_request(&addr, "GET", &format!("/jobs/{id}/result"), b"").unwrap();
+            assert_eq!(status, 200);
+            let work =
+                std::env::temp_dir().join(format!("http_batchref_{}_{i}", std::process::id()));
+            std::fs::create_dir_all(&work).unwrap();
+            let report = crate::job::SkimJob::new(mk(cuts[i], &format!("hr{i}.troot")))
+                .storage(&dir)
+                .client_dir(&work)
+                .run()
+                .unwrap();
+            assert_eq!(
+                bytes,
+                std::fs::read(&report.result.output_path).unwrap(),
+                "member {i} batched bytes differ from solo"
+            );
+        }
 
         stop.store(true, Ordering::Relaxed);
         handle.join().unwrap();

@@ -41,8 +41,10 @@
 pub mod batch;
 pub mod interp;
 pub mod pipeline;
+mod shared;
 
 pub use pipeline::{FilterStage, GroupState, Hook, Pipeline, StageCtx, StageReg, Verdict};
+pub use shared::run_shared;
 
 use crate::compress::Codec;
 use crate::metrics::{Node, Timeline};

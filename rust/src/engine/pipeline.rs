@@ -382,7 +382,11 @@ fn attribute_decomp_time(timeline: &Timeline, opts: &EngineOpts, dt: f64) {
 /// Decompress one basket frame, wall-clocking the work and attributing
 /// it via [`attribute_decomp_time`] (plus the decompressed-byte
 /// count).
-fn decompress_attributed(timeline: &Timeline, opts: &EngineOpts, frame: &[u8]) -> Result<Vec<u8>> {
+pub(crate) fn decompress_attributed(
+    timeline: &Timeline,
+    opts: &EngineOpts,
+    frame: &[u8],
+) -> Result<Vec<u8>> {
     let t0 = Instant::now();
     let raw = crate::compress::decompress(frame)?;
     attribute_decomp_time(timeline, opts, t0.elapsed().as_secs_f64());
@@ -895,6 +899,25 @@ impl<'a> StageCtx<'a> {
             .count("baskets_pruned", (dead * self.phase1.len()) as u64);
     }
 
+    /// Is `cluster` provably dead for *this* query's zone predicates?
+    /// The same liveness test [`Self::prune_group`] applies, exposed
+    /// per cluster so the shared-scan executor
+    /// ([`crate::engine::run_shared`]) can skip a basket only when it
+    /// is dead for **every** batch member while each member still
+    /// prunes by its own predicates (keeping funnels and masks
+    /// byte-identical to a solo run). Always `false` without a
+    /// digest-validated zone-map sidecar.
+    pub(crate) fn zone_dead(&self, cluster: usize) -> bool {
+        match &self.zone_map {
+            Some(zm) => self
+                .plan
+                .zone_predicates
+                .iter()
+                .any(|p| p.dead(zm, cluster)),
+            None => false,
+        }
+    }
+
     fn fetch_group(&mut self, group: &mut GroupState) -> Result<()> {
         self.prune_group(group);
         // Phase-1 baskets this group will actually read (post-prune);
@@ -1232,7 +1255,7 @@ impl<'a> StageCtx<'a> {
         Ok(())
     }
 
-    fn eval_group(&mut self, group: &mut GroupState) -> Result<()> {
+    pub(crate) fn eval_group(&mut self, group: &mut GroupState) -> Result<()> {
         if self.plan.program.is_trivial() {
             // No cuts at all: everything passes. (Checked on the
             // program, not the criteria list — a constant-only IR cut
@@ -1353,7 +1376,7 @@ impl<'a> StageCtx<'a> {
         }))
     }
 
-    fn run_phase2(&mut self) -> Result<()> {
+    pub(crate) fn run_phase2(&mut self) -> Result<()> {
         if !(self.opts.two_phase && !self.output_only.is_empty() && self.pass_total > 0) {
             return Ok(());
         }
@@ -1436,7 +1459,7 @@ impl<'a> StageCtx<'a> {
         Ok(())
     }
 
-    fn write_output(&mut self) -> Result<()> {
+    pub(crate) fn write_output(&mut self) -> Result<()> {
         let codec = self.opts.output_codec.unwrap_or(self.meta.codec);
         let timeline = self.timeline;
         let node = self.opts.compute_node;

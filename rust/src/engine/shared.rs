@@ -1,0 +1,558 @@
+//! Shared-scan executor: one basket pass serves N concurrent queries.
+//!
+//! The execution half of the multi-query optimizer ([`crate::mqo`]).
+//! Given K compatible queries over the **same input file**, this module
+//! drives exactly one fetch → decompress → deserialize pass per
+//! surviving basket of the *union* phase-1 fetch set, then evaluates
+//! every member's cut program columnar against its own remapped view of
+//! the shared decoded baskets. Member masks, funnels, phase-2 selective
+//! fetches and output files are **byte-identical** to running each job
+//! alone — sharing changes where bytes are decoded once, never what any
+//! member computes.
+//!
+//! # How byte-identity is preserved
+//!
+//! Each member gets its own full [`StageCtx`] (plan, funnel,
+//! accumulators, phase-2 state, output writer) over its own store and
+//! timeline, driven in lockstep through the same `begin_group` /
+//! `eval_group` / `commit_group` sequence the solo pipeline uses. On
+//! the two-phase interpreter path the group packing depends only on the
+//! file's cluster layout and `basket_events` — identical for every
+//! member — so groups align 1:1 across members. The executor replaces
+//! only the *fetch + decompress + deserialize* of each group: baskets
+//! are decoded once from the union branch set, and each member's
+//! [`GroupState::decoded`] rows are assembled by indexing the union row
+//! through its [`crate::mqo::MemberMap::slot_map`] (decoded baskets are
+//! cheap-to-clone column data). `eval_group` then sees exactly the
+//! bytes a solo run would have produced.
+//!
+//! # Zone-map pruning under sharing
+//!
+//! Each member prunes by its **own** [`crate::query::ZonePredicate`]s —
+//! via [`StageCtx::zone_dead`] — so its funnel and mask stay identical
+//! to its solo run. The shared pass skips a cluster's baskets only when
+//! the cluster is provably dead for *every* member.
+//!
+//! # Counter and virtual-time attribution
+//!
+//! The one shared pass charges its transport, decompression and
+//! deserialization to the **batch timeline** (and its
+//! `baskets_scanned` / `baskets_pruned` / cache counters, once). Each
+//! member timeline records only its own eval, phase-2 and output work,
+//! plus a `scan_shared` counter (baskets whose decode it received from
+//! the shared pass). At the end, [`crate::mqo::amortize`] folds the
+//! batch accounting into the members as exact integer counter shares
+//! and `1/N` virtual-time slices — so per-member numbers stay
+//! meaningful in aggregate instead of a first toucher absorbing the
+//! whole scan.
+
+use super::pipeline::{decompress_attributed, GroupState, StageCtx};
+use super::{EngineOpts, SkimResult};
+use crate::metrics::{Stage, Timeline};
+use crate::mqo::{self, SharedScanPlan};
+use crate::query::plan::SkimPlan;
+use crate::query::SkimQuery;
+use crate::serve::cache::BasketKey;
+use crate::troot::{basket as basket_codec, BranchMeta, DecodedBasket, ReadAt, TRootReader};
+use crate::{Error, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Run K compatible queries over one input file as a single shared
+/// scan.
+///
+/// * `scan_store` — the store the one shared pass reads phase-1
+///   baskets from; its (virtual) transport charges go to
+///   `batch_timeline`. When [`EngineOpts::basket_cache`] is set, scan
+///   baskets load through the shared cache under the same keys solo
+///   runs use, so batches and solo jobs warm each other.
+/// * `member_stores` / `member_timelines` / `out_paths` — one per
+///   query, in member order. Phase-2 selective fetches and output
+///   writes run per member against the member's own store and are
+///   charged to the member's own timeline, exactly as solo.
+///
+/// Requirements (the caller — [`crate::coordinator::Coordinator::run_shared`]
+/// — checks the deployment-level predicate first, this function
+/// re-validates the engine-level part): every query targets the same
+/// file, `opts.two_phase`, `!opts.use_pjrt` (interpreter path, so
+/// member group packing is layout-determined and identical), and no
+/// `opts.event_range` shard.
+///
+/// Returns one [`SkimResult`] per member, in member order. Note:
+/// `baskets_fetched` / `fetched_bytes` in a member's result cover only
+/// its phase-2 fetches — the shared phase-1 volume lives on the batch
+/// timeline and is amortized onto member timelines, not results.
+pub fn run_shared(
+    scan_store: Arc<dyn ReadAt>,
+    member_stores: &[Arc<dyn ReadAt>],
+    queries: &[SkimQuery],
+    member_timelines: &[Timeline],
+    batch_timeline: &Timeline,
+    opts: &EngineOpts,
+    out_paths: &[PathBuf],
+) -> Result<Vec<SkimResult>> {
+    let n = queries.len();
+    if n == 0 {
+        return Err(Error::Engine("shared scan: no member queries".into()));
+    }
+    if member_stores.len() != n || member_timelines.len() != n || out_paths.len() != n {
+        return Err(Error::Engine(format!(
+            "shared scan: {} queries but {} stores / {} timelines / {} outputs",
+            n,
+            member_stores.len(),
+            member_timelines.len(),
+            out_paths.len()
+        )));
+    }
+    if !opts.two_phase {
+        return Err(Error::Engine(
+            "shared scan requires two-phase mode (legacy mode folds outputs into phase 1)"
+                .into(),
+        ));
+    }
+    if opts.use_pjrt {
+        return Err(Error::Engine(
+            "shared scan requires the interpreter path (kernel batch shapes differ per member)"
+                .into(),
+        ));
+    }
+    if opts.event_range.is_some() {
+        return Err(Error::Engine("shared scan cannot run on an event-range shard".into()));
+    }
+
+    // One full per-member context each: plan, funnel, accumulators,
+    // phase-2 state, output writer. Members never fetch phase 1
+    // themselves (their TTreeCache training is lazy), so building the
+    // contexts costs metadata reads only.
+    let mut ctxs: Vec<StageCtx> = Vec::with_capacity(n);
+    for i in 0..n {
+        ctxs.push(StageCtx::new(
+            None,
+            member_stores[i].clone(),
+            &queries[i],
+            &member_timelines[i],
+            opts,
+            out_paths[i].clone(),
+        )?);
+    }
+
+    // Merge the members' phase-1 fetch sets into the union scan plan.
+    let plans: Vec<&SkimPlan> = ctxs.iter().map(|c| &c.plan).collect();
+    let shared = SharedScanPlan::from_plans(&plans);
+    let union_len = shared.union_len();
+
+    // The one scan-side reader. Branch metadata is resolved once per
+    // union slot; transport charges go to the batch timeline via
+    // whatever model wraps `scan_store`.
+    let scan_reader = TRootReader::open(scan_store)?;
+    let mut scan_branches: Vec<BranchMeta> = Vec::with_capacity(union_len);
+    for name in &shared.union_branches {
+        scan_branches.push(scan_reader.branch(name)?.clone());
+    }
+    let cache = opts.basket_cache.clone();
+    // Same key shape solo jobs intern, so shared and solo runs hit
+    // each other's cache entries.
+    let scan_file_key: Arc<str> = queries[0].input.to_string().into();
+    let scan_branch_keys: Vec<Arc<str>> =
+        shared.union_branches.iter().map(|b| b.as_str().into()).collect();
+
+    loop {
+        // Lockstep group formation: identical cluster layout + opts
+        // mean every member packs the same clusters. Verified, not
+        // assumed.
+        let more: Vec<bool> = ctxs.iter_mut().map(|c| c.begin_group()).collect();
+        if more.iter().any(|&m| m != more[0]) {
+            return Err(Error::Engine("shared scan: member group iteration diverged".into()));
+        }
+        if !more[0] {
+            break;
+        }
+        let mut groups: Vec<GroupState> = ctxs
+            .iter_mut()
+            .map(|c| c.group.take().expect("begin_group set the group"))
+            .collect();
+        let clusters = groups[0].clusters.clone();
+        for g in &groups[1..] {
+            if g.clusters != clusters {
+                return Err(Error::Engine("shared scan: member group packing diverged".into()));
+            }
+        }
+
+        // Per-member cluster liveness under each member's own zone
+        // predicates; the scan skips a cluster only when every member
+        // refutes it.
+        let keeps: Vec<Vec<bool>> = ctxs
+            .iter()
+            .map(|ctx| clusters.iter().map(|&(cl, _, _)| !ctx.zone_dead(cl)).collect())
+            .collect();
+
+        // The one shared pass: fetch + decompress + deserialize each
+        // union basket of each surviving cluster exactly once, charged
+        // to the batch timeline.
+        let mut decoded: Vec<Option<Vec<DecodedBasket>>> = Vec::with_capacity(clusters.len());
+        decoded.resize_with(clusters.len(), || None);
+        let (mut live, mut dead) = (0u64, 0u64);
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for (pos, &(_, lo, _)) in clusters.iter().enumerate() {
+            if !keeps.iter().any(|k| k[pos]) {
+                dead += 1;
+                continue;
+            }
+            live += 1;
+            let mut row = Vec::with_capacity(union_len);
+            for (slot, bm) in scan_branches.iter().enumerate() {
+                let idx = bm.basket_for_event(lo).ok_or_else(|| {
+                    Error::Engine(format!(
+                        "branch {} has no basket for event {lo}",
+                        bm.desc.name
+                    ))
+                })?;
+                let info = bm.baskets[idx];
+                let raw: Vec<u8> = match &cache {
+                    Some(cache) => {
+                        let key = BasketKey {
+                            file: scan_file_key.clone(),
+                            branch: scan_branch_keys[slot].clone(),
+                            basket: idx as u32,
+                        };
+                        let (data, hit) = cache.get_or_load(key, || {
+                            let frame = scan_reader.fetch_basket(bm, idx)?;
+                            decompress_attributed(batch_timeline, opts, &frame)
+                        })?;
+                        if hit {
+                            hits += 1;
+                        } else {
+                            misses += 1;
+                        }
+                        (*data).clone()
+                    }
+                    None => {
+                        let frame = scan_reader.fetch_basket(bm, idx)?;
+                        decompress_attributed(batch_timeline, opts, &frame)?
+                    }
+                };
+                let t0 = Instant::now();
+                let dec = basket_codec::decode(
+                    &bm.desc,
+                    &raw,
+                    info.first_event,
+                    info.n_events as usize,
+                )?;
+                batch_timeline.add_real(
+                    Stage::Deserialize,
+                    opts.compute_node,
+                    t0.elapsed().as_secs_f64(),
+                );
+                if let Some(model) = opts.deser_model {
+                    batch_timeline.add_real(
+                        Stage::Deserialize,
+                        opts.compute_node,
+                        model.cost(info.n_events as u64, raw.len() as u64, opts.parallelism),
+                    );
+                }
+                row.push(dec);
+            }
+            decoded[pos] = Some(row);
+        }
+        batch_timeline.count("baskets_scanned", live * union_len as u64);
+        if dead > 0 {
+            batch_timeline.count("baskets_pruned", dead * union_len as u64);
+        }
+        if cache.is_some() {
+            batch_timeline.count("basket_cache_hits", hits);
+            batch_timeline.count("basket_cache_misses", misses);
+        }
+
+        // Per member: retain the clusters *it* keeps, inject its
+        // remapped decoded view, evaluate and commit — the same
+        // eval/commit code a solo run executes, over identical bytes.
+        for (mi, (ctx, mut g)) in ctxs.iter_mut().zip(groups).enumerate() {
+            let keep = &keeps[mi];
+            let mut it = keep.iter();
+            g.clusters.retain(|_| *it.next().unwrap());
+            let mut it = keep.iter();
+            g.passes.retain(|_| *it.next().unwrap());
+            let map = &shared.members[mi].slot_map;
+            for (pos, &k) in keep.iter().enumerate() {
+                if !k {
+                    continue;
+                }
+                let row = decoded[pos].as_ref().expect("surviving cluster was decoded");
+                g.decoded.push(map.iter().map(|&u| row[u].clone()).collect());
+            }
+            member_timelines[mi]
+                .count("scan_shared", (g.clusters.len() * map.len()) as u64);
+            ctx.eval_group(&mut g)?;
+            ctx.group = Some(g);
+            ctx.commit_group()?;
+        }
+    }
+
+    // Per-member tail: phase-2 selective fetch over the member's own
+    // store (charged to the member), output write, result assembly.
+    let mut results = Vec::with_capacity(n);
+    for mut ctx in ctxs {
+        ctx.run_phase2()?;
+        ctx.write_output()?;
+        results.push(ctx.finish()?);
+    }
+
+    // Fold the once-charged scan accounting into the members: exact
+    // integer counter shares + 1/N virtual-time slices.
+    mqo::amortize(batch_timeline, member_timelines);
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::engine::SkimEngine;
+    use crate::gen::{self, GenConfig};
+    use crate::serve::cache::BasketCache;
+    use crate::troot::LocalFile;
+    use crate::util::Pcg32;
+
+    fn dataset() -> PathBuf {
+        static PATH: std::sync::OnceLock<PathBuf> = std::sync::OnceLock::new();
+        PATH.get_or_init(|| {
+            let dir = std::env::temp_dir().join(format!("shared_test_{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let path = dir.join("events.troot");
+            let cfg = GenConfig {
+                n_events: 900,
+                target_branches: 170,
+                n_hlt: 40,
+                basket_events: 200,
+                codec: Codec::Lz4,
+                seed: 33,
+            };
+            gen::generate(&cfg, &path).unwrap();
+            path
+        })
+        .clone()
+    }
+
+    fn query_for(cut: &str, outname: &str) -> SkimQuery {
+        SkimQuery::new("events.troot", outname)
+            .keep(&["MET_pt", "event", "nJet", "Jet_pt", "nMuon", "Muon_pt"])
+            .with_cut_str(cut)
+            .unwrap()
+    }
+
+    fn interp_opts() -> EngineOpts {
+        EngineOpts { use_pjrt: false, ..Default::default() }
+    }
+
+    /// Solo reference run of one cut; returns the result, timeline and
+    /// output bytes.
+    fn solo(cut: &str, outname: &str, opts: &EngineOpts) -> (SkimResult, Timeline, Vec<u8>) {
+        let path = dataset();
+        let store: Arc<dyn ReadAt> = Arc::new(LocalFile::open(&path).unwrap());
+        let tl = Timeline::new();
+        let out = path.parent().unwrap().join(outname);
+        let res = SkimEngine::new(None)
+            .run(store, &query_for(cut, outname), &tl, opts, &out)
+            .unwrap();
+        let bytes = std::fs::read(&out).unwrap();
+        (res, tl, bytes)
+    }
+
+    /// Shared run of several cuts; returns per-member (result, output
+    /// bytes), the member timelines and the batch timeline.
+    #[allow(clippy::type_complexity)]
+    fn shared(
+        cuts: &[&str],
+        tag: &str,
+        opts: &EngineOpts,
+    ) -> (Vec<(SkimResult, Vec<u8>)>, Vec<Timeline>, Timeline) {
+        let path = dataset();
+        let dir = path.parent().unwrap();
+        let n = cuts.len();
+        let scan_store: Arc<dyn ReadAt> = Arc::new(LocalFile::open(&path).unwrap());
+        let member_stores: Vec<Arc<dyn ReadAt>> = (0..n)
+            .map(|_| Arc::new(LocalFile::open(&path).unwrap()) as Arc<dyn ReadAt>)
+            .collect();
+        let outnames: Vec<String> =
+            (0..n).map(|i| format!("{tag}_m{i}.troot")).collect();
+        let queries: Vec<SkimQuery> = cuts
+            .iter()
+            .zip(&outnames)
+            .map(|(cut, out)| query_for(cut, out))
+            .collect();
+        let out_paths: Vec<PathBuf> = outnames.iter().map(|o| dir.join(o)).collect();
+        let member_tls: Vec<Timeline> = (0..n).map(|_| Timeline::new()).collect();
+        let batch_tl = Timeline::new();
+        let results = run_shared(
+            scan_store,
+            &member_stores,
+            &queries,
+            &member_tls,
+            &batch_tl,
+            opts,
+            &out_paths,
+        )
+        .unwrap();
+        let paired = results
+            .into_iter()
+            .zip(&out_paths)
+            .map(|(r, p)| (r, std::fs::read(p).unwrap()))
+            .collect();
+        (paired, member_tls, batch_tl)
+    }
+
+    #[test]
+    fn shared_outputs_masks_and_funnels_match_solo() {
+        let cuts =
+            ["MET_pt > 25 || max(Jet_pt) > 60", "nMuon >= 1 && max(Muon_pt) > 30", "MET_pt > 60"];
+        let (members, _tls, _batch) = shared(&cuts, "id3", &interp_opts());
+        for (i, cut) in cuts.iter().enumerate() {
+            let (sres, _stl, sbytes) = solo(cut, &format!("id3_solo{i}.troot"), &interp_opts());
+            let (res, bytes) = &members[i];
+            assert_eq!(res.n_pass, sres.n_pass, "member {i} mask diverged");
+            assert_eq!(res.stage_funnel, sres.stage_funnel, "member {i} funnel diverged");
+            assert_eq!(res.n_events, sres.n_events);
+            assert_eq!(bytes, &sbytes, "member {i} output bytes diverged");
+        }
+    }
+
+    #[test]
+    fn shared_scan_fetches_each_union_basket_exactly_once() {
+        // 900 events / 200-event baskets = 5 clusters. A cold shared
+        // cache observes every (branch, basket) load exactly once —
+        // that *is* the "one pass serves N queries" guarantee.
+        let cache = Arc::new(BasketCache::new(64 << 20));
+        let opts = EngineOpts {
+            use_pjrt: false,
+            basket_cache: Some(cache.clone()),
+            ..Default::default()
+        };
+        let cuts = ["MET_pt > 25", "MET_pt > 60", "MET_pt > 25 && nJet >= 2"];
+        let (members, tls, batch) = shared(&cuts, "once", &opts);
+        // Union criteria = {MET_pt, nJet} → 2 branches × 5 clusters.
+        assert_eq!(batch.counter("baskets_scanned"), 10);
+        assert_eq!(batch.counter("basket_cache_misses"), 10, "each union basket loads once");
+        assert_eq!(batch.counter("basket_cache_hits"), 0);
+        // Amortized member shares sum back to the batch totals.
+        let scanned: u64 = tls.iter().map(|t| t.counter("baskets_scanned")).sum();
+        let misses: u64 = tls.iter().map(|t| t.counter("basket_cache_misses")).sum();
+        assert_eq!(scanned, 10);
+        assert_eq!(misses, 10);
+        // Every member saw the shared scan: cuts 1 and 3 read 1 and 2
+        // phase-1 branches × 5 clusters respectively.
+        assert_eq!(tls[0].counter("scan_shared"), 5);
+        assert_eq!(tls[2].counter("scan_shared"), 10);
+        assert!(members.iter().all(|(r, _)| r.n_events == 900));
+    }
+
+    #[test]
+    fn zone_pruning_is_per_member_and_scan_skips_only_all_dead_clusters() {
+        // `event` = 1_000_000 + ev over five 200-event baskets:
+        // "event >= 1000400" kills clusters 0-1; "event >= 1000700"
+        // kills clusters 0-2. Scan-dead = intersection {0,1} → 3 of 5
+        // clusters scanned; member B additionally skips cluster 2 on
+        // its own predicate (scan_shared 2, not 3).
+        let zm = Arc::new(crate::index::FileIndex::build_from_file(dataset()).unwrap());
+        let opts = EngineOpts {
+            use_pjrt: false,
+            zone_map: Some(zm.clone()),
+            ..Default::default()
+        };
+        let cuts = ["event >= 1000400", "event >= 1000700"];
+        let (members, tls, batch) = shared(&cuts, "zm", &opts);
+        // Union criteria = {event} → 1 branch.
+        assert_eq!(batch.counter("baskets_scanned"), 3);
+        assert_eq!(batch.counter("baskets_pruned"), 2);
+        assert_eq!(tls[0].counter("scan_shared"), 3);
+        assert_eq!(tls[1].counter("scan_shared"), 2);
+        // Byte-identical to solo *unpruned* runs (pruning is an
+        // optimization, never a semantic change) — and funnels match
+        // solo *pruned* runs.
+        for (i, cut) in cuts.iter().enumerate() {
+            let (_u, _utl, ubytes) = solo(cut, &format!("zm_flat{i}.troot"), &interp_opts());
+            let (pres, _ptl, pbytes) = solo(cut, &format!("zm_solo{i}.troot"), &opts);
+            assert_eq!(ubytes, pbytes);
+            let (res, bytes) = &members[i];
+            assert_eq!(bytes, &ubytes, "member {i} output bytes diverged");
+            assert_eq!(res.stage_funnel, pres.stage_funnel);
+            assert!(res.warnings.is_empty(), "{:?}", res.warnings);
+        }
+    }
+
+    #[test]
+    fn random_cut_pairs_and_triples_are_byte_identical_across_parallelism() {
+        let pool = [
+            "MET_pt > 25",
+            "MET_pt > 60",
+            "nJet >= 2",
+            "max(Jet_pt) > 40",
+            "MET_pt > 25 || max(Jet_pt) > 60",
+            "nMuon >= 1 && (HLT_IsoMu24 || max(Muon_pt) > 30)",
+            "event >= 1000400",
+            "MET_pt > 100 && nElectron >= 1",
+        ];
+        let mut rng = Pcg32::new(0x5ca1_ab1e);
+        for trial in 0..4 {
+            let k = 2 + rng.below(2) as usize;
+            let cuts: Vec<&str> =
+                (0..k).map(|_| pool[rng.below(pool.len() as u32) as usize]).collect();
+            // Solo references once, at parallelism 1 (solo outputs are
+            // config-invariant; see the pipeline's bit-identity tests).
+            let refs: Vec<(SkimResult, Vec<u8>)> = cuts
+                .iter()
+                .enumerate()
+                .map(|(i, cut)| {
+                    let (r, _tl, b) =
+                        solo(cut, &format!("prop{trial}_solo{i}.troot"), &interp_opts());
+                    (r, b)
+                })
+                .collect();
+            for par in [1.0, 2.0, 4.0] {
+                let opts = EngineOpts { use_pjrt: false, parallelism: par, ..Default::default() };
+                let (members, _tls, _batch) =
+                    shared(&cuts, &format!("prop{trial}_p{par}"), &opts);
+                for (i, ((res, bytes), (rres, rbytes))) in
+                    members.iter().zip(&refs).enumerate()
+                {
+                    assert_eq!(
+                        res.n_pass, rres.n_pass,
+                        "trial {trial} par {par} member {i} ({})",
+                        cuts[i]
+                    );
+                    assert_eq!(res.stage_funnel, rres.stage_funnel);
+                    assert_eq!(bytes, rbytes, "trial {trial} par {par} member {i} bytes");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shared_run_rejects_incompatible_opts() {
+        let path = dataset();
+        let store: Arc<dyn ReadAt> = Arc::new(LocalFile::open(&path).unwrap());
+        let q = query_for("MET_pt > 25", "rej.troot");
+        let tl = Timeline::new();
+        let out = path.parent().unwrap().join("rej.troot");
+        for bad in [
+            EngineOpts { use_pjrt: true, ..Default::default() },
+            EngineOpts { use_pjrt: false, two_phase: false, ..Default::default() },
+            EngineOpts {
+                use_pjrt: false,
+                event_range: Some((0, 100)),
+                ..Default::default()
+            },
+        ] {
+            let err = run_shared(
+                store.clone(),
+                &[store.clone()],
+                std::slice::from_ref(&q),
+                std::slice::from_ref(&tl),
+                &Timeline::new(),
+                &bad,
+                std::slice::from_ref(&out),
+            );
+            assert!(err.is_err());
+        }
+    }
+}

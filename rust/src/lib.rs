@@ -84,6 +84,17 @@
 //! the DPU HTTP endpoint grows `POST /jobs` routes, and the CLI
 //! front-end is `skimroot serve`.
 //!
+//! On top of the cache sits the **shared-scan batch executor**
+//! ([`mqo`] + [`engine::run_shared`]): jobs submitted within a short
+//! batching window (`skimroot serve --batch-window-ms`) that target
+//! the same resolved dataset are merged into one batch whose single
+//! fetch → decompress → deserialize pass over the *union* of the
+//! members' criteria branches serves every member — per-member masks,
+//! funnels and output files stay byte-identical to solo runs, and
+//! scan costs are charged once to the batch then amortized across
+//! members as exact integer counter shares and `1/N` virtual-time
+//! slices.
+//!
 //! Python never runs on the request path: the Rust binary loads the
 //! AOT artifacts through [`runtime`] (PJRT CPU client via the `xla`
 //! crate, behind the `pjrt` cargo feature; the default build uses the
@@ -101,6 +112,7 @@ pub mod gen;
 pub mod index;
 pub mod job;
 pub mod metrics;
+pub mod mqo;
 pub mod net;
 pub mod query;
 pub mod runtime;

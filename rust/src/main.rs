@@ -92,11 +92,12 @@ COMMANDS:
          (build .tridx zone-map sidecars next to existing troot files;
           fresh sidecars are skipped unless --force)
   serve  --root DIR --listen ADDR [--workers N] [--queue-depth N]
-         [--cache-mb N] [--mode client-legacy|client-opt|server-side|
-         skimroot] [--fan-out N] [--work-dir DIR]
+         [--cache-mb N] [--batch-window-ms N] [--mode client-legacy|
+         client-opt|server-side|skimroot] [--fan-out N] [--work-dir DIR]
          (multi-tenant skim service: SubmitQuery/JobStatus/FetchResult
           frames + plain file access; --cache-mb 0 disables the shared
-          basket cache)
+          basket cache; --batch-window-ms N merges same-file jobs
+          arriving within N ms into one shared scan, 0 disables)
   dpu    --root DIR --listen ADDR [--artifacts DIR] [--scratch DIR]
          [--fan-out N] [--workers N] [--queue-depth N] [--cache-mb N]
          (POST /skim runs synchronously; POST /jobs + GET /jobs/<id>
@@ -323,6 +324,7 @@ fn serve_config(args: &Args, root: &str, default_mode: &str) -> Result<ServeConf
     cfg.workers = args.parse_num("workers", cfg.workers)?;
     cfg.queue_depth = args.parse_num("queue-depth", cfg.queue_depth)?;
     cfg.cache_bytes = args.parse_num("cache-mb", cfg.cache_bytes / 1_000_000)? * 1_000_000;
+    cfg.batch_window_ms = args.parse_num("batch-window-ms", cfg.batch_window_ms)?;
     if let Some(dir) = args.get("work-dir") {
         cfg.work_dir = dir.into();
     }

@@ -1,0 +1,318 @@
+//! Multi-query optimizer: merge K compatible skim plans into one
+//! shared scan.
+//!
+//! SkimROOT's scarce resource is data movement at the storage server,
+//! yet N tenants skimming the same hot dataset still paid one full
+//! fetch + decompress + deserialize pass *per job* — the
+//! [`crate::serve::BasketCache`] amortizes read + decompress, but not
+//! deserialize + eval-side batch assembly. The classic answer (shared
+//! scans / multi-query optimization) is to run **one** scan and fan its
+//! decoded baskets out to every subscribed query.
+//!
+//! This module is the planning half of that move:
+//!
+//! * [`SharedScanPlan::from_plans`] merges the members' phase-1 fetch
+//!   sets into a **union** branch list with a shared interned slot
+//!   space, and records a per-member `slot_map` so each member's
+//!   decoded-basket view (indexed by its own dense
+//!   [`crate::query::plan::BranchId`]s) can be assembled from the union
+//!   row by plain `Vec` indexing. Member cut programs, funnels and
+//!   residual `CExpr`s stay separate — sharing changes *where bytes are
+//!   decoded once*, never what any member computes.
+//! * [`amortized_share`] / [`amortize`] implement the counter-attribution
+//!   rule: shared-scan costs are charged **once** to the batch timeline,
+//!   then folded into the members as exact integer shares (counters) and
+//!   `1/N` virtual-time slices (stage totals) — so sums across members
+//!   remain meaningful instead of the first toucher absorbing the whole
+//!   scan.
+//! * [`deployment_incompatibility`] is the compatibility predicate the
+//!   scheduler consults before batching jobs at all.
+//!
+//! The execution half lives in `engine/shared.rs`
+//! ([`crate::engine::run_shared`]); batch formation lives in
+//! [`crate::serve::SkimScheduler`].
+
+use crate::coordinator::{Deployment, Placement};
+use crate::metrics::{Stage, Timeline};
+use crate::query::plan::SkimPlan;
+use std::collections::HashMap;
+
+/// Identity of one formed batch: attached to every member's
+/// [`crate::coordinator::JobReport`] and surfaced as `batched_with`
+/// through every status surface (JobStatus → wire → HTTP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchInfo {
+    /// Service-unique batch id (0 is never assigned).
+    pub id: u64,
+    /// Number of member jobs the batch's one scan served.
+    pub members: u32,
+}
+
+/// One member's remapping from its private phase-1 slot space into the
+/// union scan's slot space.
+#[derive(Debug, Clone)]
+pub struct MemberMap {
+    /// Member phase-1 slot (the member plan's dense
+    /// [`crate::query::plan::BranchId`], i.e. its position in that
+    /// plan's `criteria_branches`) → union slot.
+    pub slot_map: Vec<usize>,
+}
+
+/// The merged phase-1 plan of K compatible [`SkimPlan`]s over one
+/// resolved dataset: the union fetch set plus per-member remappings.
+#[derive(Debug, Clone)]
+pub struct SharedScanPlan {
+    /// Union of every member's `criteria_branches`, interned in
+    /// first-use order (member 0's branches lead). Position in this
+    /// list is the union slot id.
+    pub union_branches: Vec<String>,
+    /// Per-member slot maps, in member order.
+    pub members: Vec<MemberMap>,
+}
+
+impl SharedScanPlan {
+    /// Merge the members' phase-1 fetch sets. Branch names are interned
+    /// into one shared slot space in first-use order; each member gets
+    /// a dense `slot_map` from its own `BranchId`s into that space.
+    pub fn from_plans(plans: &[&SkimPlan]) -> SharedScanPlan {
+        let mut union_branches: Vec<String> = Vec::new();
+        let mut interned: HashMap<String, usize> = HashMap::new();
+        let mut members = Vec::with_capacity(plans.len());
+        for plan in plans {
+            let slot_map = plan
+                .criteria_branches
+                .iter()
+                .map(|name| {
+                    *interned.entry(name.clone()).or_insert_with(|| {
+                        union_branches.push(name.clone());
+                        union_branches.len() - 1
+                    })
+                })
+                .collect::<Vec<usize>>();
+            members.push(MemberMap { slot_map });
+        }
+        SharedScanPlan { union_branches, members }
+    }
+
+    /// Number of branches the one shared pass fetches per cluster.
+    pub fn union_len(&self) -> usize {
+        self.union_branches.len()
+    }
+}
+
+/// Counters the shared scan charges once to the batch timeline and
+/// then reports per member as amortized shares (see [`amortize`]).
+pub const SHARED_COUNTERS: [&str; 5] = [
+    "baskets_scanned",
+    "baskets_pruned",
+    "basket_cache_hits",
+    "basket_cache_misses",
+    "xrd_bytes_served",
+];
+
+/// Exact integer split of a shared total across `n` members: member
+/// `i` gets `total / n`, with the remainder going to the first
+/// `total % n` members — shares always sum back to `total`, so
+/// per-member counters stay meaningful in aggregate.
+pub fn amortized_share(total: u64, n: usize, i: usize) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let n64 = n as u64;
+    total / n64 + u64::from((i as u64) < total % n64)
+}
+
+/// Fold the batch timeline's shared-scan accounting into the member
+/// timelines:
+///
+/// * every [`SHARED_COUNTERS`] counter splits into exact integer
+///   shares via [`amortized_share`] (sums across members == the batch
+///   total — the scan is counted once, not once per member);
+/// * every stage's batch total (virtual transport + real compute of
+///   the one shared pass) is charged to each member at `1/N` as
+///   virtual time, so member latencies reflect "my slice of the scan
+///   plus my own eval/phase-2/output work".
+///
+/// The batch timeline itself keeps the actual once-charged totals —
+/// callers that want the unamortized truth read it before dropping it.
+pub fn amortize(batch: &Timeline, members: &[Timeline]) {
+    let n = members.len();
+    if n == 0 {
+        return;
+    }
+    for name in SHARED_COUNTERS {
+        let total = batch.counter(name);
+        if total == 0 {
+            continue;
+        }
+        for (i, member) in members.iter().enumerate() {
+            let share = amortized_share(total, n, i);
+            if share > 0 {
+                member.count(name, share);
+            }
+        }
+    }
+    for stage in Stage::ALL {
+        let share = batch.stage_total(stage) / n as f64;
+        if share > 0.0 {
+            for member in members {
+                member.charge(stage, share);
+            }
+        }
+    }
+}
+
+/// The static half of the batch-compatibility predicate: can this
+/// service deployment host shared scans at all? Returns the reason it
+/// cannot, or `None` when it can. The dynamic half — "same resolved
+/// single-file dataset" — is checked per batch by the scheduler and
+/// re-checked by [`crate::coordinator::Coordinator::run_shared`].
+///
+/// Shared scans require two-phase execution (so member batch grouping
+/// is identical and per-member masks/funnels/outputs are
+/// byte-identical to solo runs) on a client or server placement with
+/// no fault injection; anything else falls back to solo runs. A
+/// `use_pjrt` preference is *not* disqualifying: member programs have
+/// per-member kernel shapes, so the shared pass always evaluates on
+/// the scalar interpreter — which is bit-identical to the kernel, so
+/// outputs still match the member's solo run.
+pub fn deployment_incompatibility(dep: &Deployment) -> Option<&'static str> {
+    if matches!(dep.placement, Placement::Dpu(_)) {
+        return Some("DPU placements shard by event range, not by query");
+    }
+    if dep.fan_out > 1 {
+        return Some("fan_out > 1 shards the scan");
+    }
+    if !dep.two_phase {
+        return Some("legacy single-phase mode folds outputs into phase 1");
+    }
+    if dep.fault.read_fail_prob > 0.0 {
+        return Some("fault injection needs per-job retry streams");
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkModel;
+
+    fn plan_for(cut: &str, keep: &[&str]) -> SkimPlan {
+        let dir = std::env::temp_dir().join(format!("mqo_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.troot");
+        if !path.exists() {
+            let cfg = crate::gen::GenConfig {
+                n_events: 400,
+                target_branches: 160,
+                n_hlt: 40,
+                basket_events: 200,
+                codec: crate::compress::Codec::Lz4,
+                seed: 31,
+            };
+            crate::gen::generate(&cfg, &path).unwrap();
+        }
+        let reader = crate::troot::TRootReader::open(
+            crate::troot::LocalFile::open(&path).unwrap(),
+        )
+        .unwrap();
+        let q = crate::query::SkimQuery::new("events.troot", "o.troot")
+            .keep(keep)
+            .with_cut_str(cut)
+            .unwrap();
+        SkimPlan::build(&q, reader.meta()).unwrap()
+    }
+
+    #[test]
+    fn union_interns_in_first_use_order_and_slot_maps_round_trip() {
+        let a = plan_for("MET_pt > 20 && nJet >= 2", &["MET_pt"]);
+        let b = plan_for("nJet >= 1 && max(Jet_pt) > 30", &["Jet_pt"]);
+        let shared = SharedScanPlan::from_plans(&[&a, &b]);
+        // Member 0's criteria lead the union, member 1 adds only its
+        // novel branches.
+        assert_eq!(
+            &shared.union_branches[..a.criteria_branches.len()],
+            &a.criteria_branches[..]
+        );
+        let novel: Vec<&String> = b
+            .criteria_branches
+            .iter()
+            .filter(|n| !a.criteria_branches.contains(n))
+            .collect();
+        assert_eq!(
+            shared.union_len(),
+            a.criteria_branches.len() + novel.len(),
+            "union must dedup overlapping criteria"
+        );
+        // Every member slot map points at its own branch name.
+        for (plan, member) in [(&a, &shared.members[0]), (&b, &shared.members[1])] {
+            assert_eq!(member.slot_map.len(), plan.criteria_branches.len());
+            for (bid, &slot) in member.slot_map.iter().enumerate() {
+                assert_eq!(shared.union_branches[slot], plan.criteria_branches[bid]);
+            }
+        }
+        // The shared criteria branch maps to the same union slot.
+        let overlap = "nJet";
+        let sa = a.criteria_branches.iter().position(|n| n == overlap).unwrap();
+        let sb = b.criteria_branches.iter().position(|n| n == overlap).unwrap();
+        assert_eq!(shared.members[0].slot_map[sa], shared.members[1].slot_map[sb]);
+    }
+
+    #[test]
+    fn identical_plans_share_every_slot() {
+        let a = plan_for("MET_pt > 20", &["MET_pt", "nJet"]);
+        let b = plan_for("MET_pt > 50", &["MET_pt", "nJet"]);
+        let shared = SharedScanPlan::from_plans(&[&a, &b]);
+        assert_eq!(shared.union_len(), a.criteria_branches.len());
+        assert_eq!(shared.members[0].slot_map, shared.members[1].slot_map);
+    }
+
+    #[test]
+    fn amortized_shares_sum_to_the_total() {
+        for (total, n) in [(0u64, 3usize), (1, 3), (7, 3), (9, 3), (100, 7), (5, 1)] {
+            let sum: u64 = (0..n).map(|i| amortized_share(total, n, i)).sum();
+            assert_eq!(sum, total, "total {total} over {n} members");
+            // Shares differ by at most one (fair split).
+            let shares: Vec<u64> = (0..n).map(|i| amortized_share(total, n, i)).collect();
+            let (min, max) = (shares.iter().min().unwrap(), shares.iter().max().unwrap());
+            assert!(max - min <= 1, "{shares:?}");
+        }
+    }
+
+    #[test]
+    fn amortize_splits_counters_exactly_and_time_evenly() {
+        let batch = Timeline::new();
+        batch.count("baskets_scanned", 10);
+        batch.count("basket_cache_misses", 7);
+        batch.charge(Stage::BasketFetch, 3.0);
+        let members = [Timeline::new(), Timeline::new(), Timeline::new()];
+        amortize(&batch, &members);
+        let scanned: u64 = members.iter().map(|m| m.counter("baskets_scanned")).sum();
+        let misses: u64 = members.iter().map(|m| m.counter("basket_cache_misses")).sum();
+        assert_eq!(scanned, 10);
+        assert_eq!(misses, 7);
+        for m in &members {
+            assert!((m.stage_total(Stage::BasketFetch) - 1.0).abs() < 1e-9);
+        }
+        // The batch timeline keeps the unamortized truth.
+        assert_eq!(batch.counter("baskets_scanned"), 10);
+    }
+
+    #[test]
+    fn compatibility_predicate_rejects_unsupported_deployments() {
+        // The stock presets prefer the kernel (`use_pjrt`), which is
+        // fine: the shared pass just evaluates on the interpreter.
+        assert!(deployment_incompatibility(&Deployment::server_side(LinkModel::local()))
+            .is_none());
+        assert!(deployment_incompatibility(&Deployment::client_opt(LinkModel::wan_1g()))
+            .is_none());
+
+        assert!(deployment_incompatibility(&Deployment::skim_root(LinkModel::wan_1g()))
+            .is_some());
+        assert!(deployment_incompatibility(&Deployment::client_legacy(LinkModel::wan_1g()))
+            .is_some());
+        let mut faulty = Deployment::server_side(LinkModel::local());
+        faulty.fault.read_fail_prob = 0.5;
+        assert!(deployment_incompatibility(&faulty).is_some());
+    }
+}

@@ -94,6 +94,9 @@ impl SkimService {
                     cache_misses: status.cache_misses,
                     baskets_pruned: status.baskets_pruned,
                     baskets_scanned: status.baskets_scanned,
+                    scan_shared: status.scan_shared,
+                    batch_id: status.batch_id,
+                    batch_members: status.batch_members,
                     files_done: status.files_done,
                     files_total: status.files_total,
                     msg: status.error.unwrap_or_default(),
@@ -175,6 +178,9 @@ impl SkimServiceClient {
                 cache_misses,
                 baskets_pruned,
                 baskets_scanned,
+                scan_shared,
+                batch_id,
+                batch_members,
                 files_done,
                 files_total,
                 msg,
@@ -189,6 +195,9 @@ impl SkimServiceClient {
                 cache_misses,
                 baskets_pruned,
                 baskets_scanned,
+                scan_shared,
+                batch_id,
+                batch_members,
                 error: if msg.is_empty() { None } else { Some(msg) },
                 files_total,
                 files_done,
@@ -330,6 +339,62 @@ mod tests {
             .unwrap();
         assert_eq!(report.timeline.counter("baskets_pruned"), 2);
         assert_eq!(bytes, std::fs::read(&report.result.output_path).unwrap());
+
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+        service.shutdown();
+    }
+
+    #[test]
+    fn batched_tcp_jobs_report_batch_info_and_bytes_match_solo() {
+        let root = dataset("tcpbatch");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.deployment.disk = DiskModel::ideal();
+        // Generous window: both submissions must land inside it even
+        // on a slow CI box.
+        cfg.batch_window_ms = 150;
+        let service = SkimService::new(cfg).unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = service.serve_tcp(listener, stop.clone());
+
+        let client = SkimServiceClient::connect(&addr).unwrap();
+        let mk = |cut: &str, out: &str| {
+            SkimQuery::new("events.troot", out)
+                .keep(&["MET_pt", "nJet", "Jet_pt"])
+                .with_cut_str(cut)
+                .unwrap()
+        };
+        let cuts = ["MET_pt > 25", "MET_pt > 25 && nJet >= 2"];
+        let jobs: Vec<JobId> = cuts
+            .iter()
+            .enumerate()
+            .map(|(i, cut)| client.submit(&mk(cut, &format!("wb{i}.troot"))).unwrap())
+            .collect();
+        for (i, &job) in jobs.iter().enumerate() {
+            let (status, bytes) = client.wait_result(job).unwrap();
+            assert_eq!(status.state, JobState::Done, "{:?}", status.error);
+            assert_eq!(status.batch_members, 2, "batch info must cross the wire");
+            assert!(status.batch_id > 0);
+            assert!(status.scan_shared > 0, "member {i} saw no shared scan");
+
+            // The same query through the one-shot SkimJob facade must
+            // produce byte-identical output.
+            let work = std::env::temp_dir()
+                .join(format!("serve_batchclient_{}_{i}", std::process::id()));
+            std::fs::create_dir_all(&work).unwrap();
+            let report = crate::job::SkimJob::new(mk(cuts[i], &format!("ref{i}.troot")))
+                .storage(&root)
+                .client_dir(&work)
+                .run()
+                .unwrap();
+            assert_eq!(
+                bytes,
+                std::fs::read(&report.result.output_path).unwrap(),
+                "member {i} batched bytes differ from solo"
+            );
+        }
 
         stop.store(true, Ordering::Relaxed);
         handle.join().unwrap();

@@ -20,11 +20,23 @@
 //!    pool (a thousand-file dataset cannot monopolize the service
 //!    between one small job's files). Each task drives the ordinary
 //!    [`SkimJob`] facade under the service's [`Deployment`] template.
-//! 3. **shared-cache scan** — every task runs with the service's
+//! 3. **batch formation** (optional) — with
+//!    [`ServeConfig::batch_window_ms`] nonzero, single-file jobs first
+//!    land in a short **batching window keyed by their resolved
+//!    file**: compatible jobs that arrive within the window merge into
+//!    one shared-scan batch task ([`crate::mqo`]), so N concurrent
+//!    cuts over one hot file pay one phase-1 fetch → decompress →
+//!    deserialize pass instead of N. Jobs stay [`JobState::Queued`]
+//!    (and count against admission control) while the window is open;
+//!    a batch flushes when the window expires or it reaches
+//!    [`MAX_BATCH_MEMBERS`]. Batch execution is panic-isolated and
+//!    falls back to independent solo runs on any shared-scan error, so
+//!    batching can change performance but never outcomes.
+//! 4. **shared-cache scan** — every task runs with the service's
 //!    shared [`BasketCache`] installed, so concurrent (and
 //!    successive) jobs over the same dataset decompress each basket
 //!    once.
-//! 4. **merge** — per-file outputs are staged as files under the
+//! 5. **merge** — per-file outputs are staged as files under the
 //!    service's work dir (not pinned in the job table). When a
 //!    dataset job's last file task completes, the finishing worker
 //!    merges them **in dataset order** through
@@ -33,12 +45,12 @@
 //!    files are fault-isolated: they are reported per file
 //!    ([`JobStatus::file_errors`]) while the remaining files merge;
 //!    the job fails only if every file failed.
-//! 5. **stream result** — the filtered file's bytes are held in the
+//! 6. **stream result** — the filtered file's bytes are held in the
 //!    job table until fetched ([`SkimScheduler::fetch_result`]) or
 //!    dropped ([`SkimScheduler::forget`]).
 
 use super::cache::BasketCache;
-use crate::coordinator::Deployment;
+use crate::coordinator::{Coordinator, Deployment};
 use crate::job::SkimJob;
 use crate::net::LinkModel;
 use crate::query::SkimQuery;
@@ -47,6 +59,7 @@ use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Job identifier handed out by [`SkimScheduler::submit`].
 pub type JobId = u64;
@@ -60,6 +73,9 @@ pub const DEFAULT_CACHE_BYTES: u64 = 256 * 1000 * 1000;
 /// Default cap on completed job entries retained for status/result
 /// pickup (abandoned results must not leak forever).
 pub const DEFAULT_RETAINED_JOBS: usize = 256;
+/// A pending shared-scan batch flushes as soon as it reaches this many
+/// members, even before its window expires.
+pub const MAX_BATCH_MEMBERS: usize = 8;
 
 /// Configuration of one multi-tenant skim service.
 #[derive(Debug, Clone)]
@@ -94,6 +110,17 @@ pub struct ServeConfig {
     /// entries — result bytes included — are dropped, so clients that
     /// abandon jobs cannot leak memory forever.
     pub retained_jobs: usize,
+    /// Shared-scan batching window in milliseconds; `0` (the default)
+    /// disables batching entirely. When nonzero, single-file jobs wait
+    /// up to this long for same-file companions and are then executed
+    /// as **one** shared scan ([`crate::mqo`]): per-member outputs stay
+    /// byte-identical to solo runs, but the batch pays one phase-1
+    /// basket pass instead of one per member. Requires at least one
+    /// worker (the worker pool flushes expired windows) and a
+    /// deployment that passes
+    /// [`crate::mqo::deployment_incompatibility`] — scheduler
+    /// construction rejects the combination otherwise.
+    pub batch_window_ms: u64,
 }
 
 impl ServeConfig {
@@ -116,6 +143,7 @@ impl ServeConfig {
             deployment: Deployment::server_side(LinkModel::local()),
             cache_bytes: DEFAULT_CACHE_BYTES,
             retained_jobs: DEFAULT_RETAINED_JOBS,
+            batch_window_ms: 0,
         }
     }
 }
@@ -193,6 +221,15 @@ pub struct JobStatus {
     /// baskets_scanned` is the full criteria scan the job would have
     /// paid without the index.
     pub baskets_scanned: u64,
+    /// Decoded-basket views this job received from a shared scan
+    /// instead of fetching itself (0 for solo runs): clusters
+    /// evaluated × the member's phase-1 branch count.
+    pub scan_shared: u64,
+    /// Identity of the shared-scan batch this job ran in (0 = solo:
+    /// batch ids start at 1).
+    pub batch_id: u64,
+    /// Member jobs the batch's one scan served (0 = solo).
+    pub batch_members: u64,
     /// Failure message when `state` is [`JobState::Failed`].
     pub error: Option<String>,
     /// Files in the job's dataset (0 for single-file jobs, whose
@@ -205,14 +242,26 @@ pub struct JobStatus {
     pub file_errors: Vec<String>,
 }
 
-/// One unit of queued work: a whole single-file job, or one file of a
-/// decomposed dataset job.
-#[derive(Debug, Clone, Copy)]
+/// One unit of queued work: a whole single-file job, one file of a
+/// decomposed dataset job, or a formed shared-scan batch.
+#[derive(Debug, Clone)]
 enum Task {
     /// A legacy single-file job, executed in one piece.
     Whole(JobId),
     /// One file of a dataset job (index into the job's resolved list).
     File { job: JobId, index: usize },
+    /// A flushed batching window: these jobs run as one shared scan.
+    Batch(Vec<JobId>),
+}
+
+/// An open batching window: same-file jobs accumulate here until the
+/// deadline passes (or [`MAX_BATCH_MEMBERS`] is reached), then flush to
+/// the queue as one [`Task::Batch`].
+struct PendingBatch {
+    /// The members' shared resolved file (catalog-relative).
+    key: String,
+    jobs: Vec<JobId>,
+    deadline: Instant,
 }
 
 struct JobEntry {
@@ -226,6 +275,9 @@ struct JobEntry {
     cache_misses: u64,
     baskets_pruned: u64,
     baskets_scanned: u64,
+    scan_shared: u64,
+    batch_id: u64,
+    batch_members: u64,
     error: Option<String>,
     /// Resolved dataset files (empty for single-file jobs).
     files: Vec<String>,
@@ -256,6 +308,9 @@ impl JobEntry {
             cache_misses: 0,
             baskets_pruned: 0,
             baskets_scanned: 0,
+            scan_shared: 0,
+            batch_id: 0,
+            batch_members: 0,
             error: None,
             files,
             parts: (0..n).map(|_| None).collect(),
@@ -272,7 +327,14 @@ struct SchedInner {
     queue: Mutex<VecDeque<Task>>,
     queue_cv: Condvar,
     jobs: Mutex<HashMap<JobId, JobEntry>>,
+    /// Open batching windows (empty forever when
+    /// [`ServeConfig::batch_window_ms`] is 0). Lock discipline: never
+    /// held together with `queue` or `jobs` — flush paths take the
+    /// batch out of `pending` first, then enqueue.
+    pending: Mutex<Vec<PendingBatch>>,
     next_id: AtomicU64,
+    /// Batch ids start at 1: status surfaces use 0 for "not batched".
+    next_batch: AtomicU64,
     stop: AtomicBool,
 }
 
@@ -287,6 +349,13 @@ impl SkimScheduler {
     /// threads immediately.
     pub fn new(cfg: ServeConfig) -> Result<Arc<SkimScheduler>> {
         cfg.deployment.validate()?;
+        if cfg.batch_window_ms > 0 {
+            if let Some(reason) = crate::mqo::deployment_incompatibility(&cfg.deployment) {
+                return Err(Error::Config(format!(
+                    "batch_window_ms requires a deployment that can host shared scans: {reason}"
+                )));
+            }
+        }
         std::fs::create_dir_all(&cfg.work_dir)?;
         let cache = if cfg.cache_bytes > 0 {
             Some(Arc::new(BasketCache::new(cfg.cache_bytes)))
@@ -300,7 +369,9 @@ impl SkimScheduler {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
             jobs: Mutex::new(HashMap::new()),
+            pending: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(1),
+            next_batch: AtomicU64::new(1),
             stop: AtomicBool::new(false),
         });
         let sched = Arc::new(SkimScheduler {
@@ -365,10 +436,44 @@ impl SkimScheduler {
                 queue.push_back(Task::File { job: id, index });
             }
             self.inner.queue_cv.notify_all();
-        } else {
-            jobs.insert(id, JobEntry::new(query, Vec::new()));
+            return Ok(id);
+        }
+        // Single-file job: with a batching window open, it parks in
+        // the window (still Queued, still counted by admission
+        // control) instead of enqueuing straight away.
+        let batchable = self.inner.cfg.batch_window_ms > 0 && files.len() == 1;
+        let key = if batchable { Some(files.into_iter().next().unwrap()) } else { None };
+        jobs.insert(id, JobEntry::new(query, Vec::new()));
+        let Some(key) = key else {
             queue.push_back(Task::Whole(id));
             self.inner.queue_cv.notify_one();
+            return Ok(id);
+        };
+        // Lock discipline: drop the queue + jobs locks before touching
+        // the pending window.
+        drop(jobs);
+        drop(queue);
+        let full = {
+            let mut pending = self.inner.pending.lock().unwrap();
+            if let Some(pos) = pending.iter().position(|b| b.key == key) {
+                pending[pos].jobs.push(id);
+                if pending[pos].jobs.len() >= MAX_BATCH_MEMBERS {
+                    Some(pending.remove(pos).jobs)
+                } else {
+                    None
+                }
+            } else {
+                pending.push(PendingBatch {
+                    key,
+                    jobs: vec![id],
+                    deadline: Instant::now()
+                        + Duration::from_millis(self.inner.cfg.batch_window_ms),
+                });
+                None
+            }
+        };
+        if let Some(batch) = full {
+            enqueue_batch(&self.inner, batch);
         }
         Ok(id)
     }
@@ -386,6 +491,9 @@ impl SkimScheduler {
             cache_misses: e.cache_misses,
             baskets_pruned: e.baskets_pruned,
             baskets_scanned: e.baskets_scanned,
+            scan_shared: e.scan_shared,
+            batch_id: e.batch_id,
+            batch_members: e.batch_members,
             error: e.error.clone(),
             files_total: e.files.len() as u64,
             files_done: e.files_done,
@@ -465,27 +573,72 @@ impl Drop for SkimScheduler {
 
 fn worker_loop(inner: &SchedInner) {
     loop {
+        // Expired batching windows flush outside the queue lock, at
+        // least once per 50 ms wakeup while any worker is idle.
+        flush_due_batches(inner);
         let task = {
             let mut queue = inner.queue.lock().unwrap();
-            loop {
-                if inner.stop.load(Ordering::Relaxed) {
-                    return;
+            if inner.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match queue.pop_front() {
+                Some(task) => Some(task),
+                None => {
+                    let (mut q, _timeout) = inner
+                        .queue_cv
+                        .wait_timeout(queue, Duration::from_millis(50))
+                        .unwrap();
+                    if inner.stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    q.pop_front()
                 }
-                if let Some(task) = queue.pop_front() {
-                    break task;
-                }
-                let (q, _timeout) = inner
-                    .queue_cv
-                    .wait_timeout(queue, std::time::Duration::from_millis(50))
-                    .unwrap();
-                queue = q;
             }
         };
         match task {
-            Task::Whole(id) => run_whole(inner, id),
-            Task::File { job, index } => run_file(inner, job, index),
+            Some(Task::Whole(id)) => run_whole(inner, id),
+            Some(Task::File { job, index }) => run_file(inner, job, index),
+            Some(Task::Batch(ids)) => run_batch(inner, ids),
+            // Timed out empty: loop back to check window deadlines.
+            None => {}
         }
     }
+}
+
+/// Move every expired batching window to the run queue. Windows flush
+/// as one [`Task::Batch`] (or degrade to [`Task::Whole`] when only one
+/// job arrived inside the window).
+fn flush_due_batches(inner: &SchedInner) {
+    let due: Vec<Vec<JobId>> = {
+        let mut pending = inner.pending.lock().unwrap();
+        let now = Instant::now();
+        let mut due = Vec::new();
+        pending.retain_mut(|batch| {
+            if batch.deadline <= now {
+                due.push(std::mem::take(&mut batch.jobs));
+                false
+            } else {
+                true
+            }
+        });
+        due
+    };
+    for jobs in due {
+        enqueue_batch(inner, jobs);
+    }
+}
+
+/// Enqueue a flushed window; a batch of one degrades to an ordinary
+/// solo task.
+fn enqueue_batch(inner: &SchedInner, mut jobs: Vec<JobId>) {
+    let task = match jobs.len() {
+        0 => return,
+        1 => Task::Whole(jobs.remove(0)),
+        _ => Task::Batch(jobs),
+    };
+    let mut queue = inner.queue.lock().unwrap();
+    queue.push_back(task);
+    inner.queue_cv.notify_all();
 }
 
 /// Execute one query through the ordinary [`SkimJob`] facade, staging
@@ -545,6 +698,25 @@ fn enforce_retention(jobs: &mut HashMap<JobId, JobEntry>, cap: usize) {
     }
 }
 
+/// Record a finished single-piece run (solo or shared-scan member)
+/// into its table entry.
+fn finish_entry(entry: &mut JobEntry, report: &crate::coordinator::JobReport, bytes: Vec<u8>) {
+    entry.state = JobState::Done;
+    entry.n_events = report.result.n_events;
+    entry.n_pass = report.result.n_pass;
+    entry.latency = report.latency;
+    entry.cache_hits = report.timeline.counter("basket_cache_hits");
+    entry.cache_misses = report.timeline.counter("basket_cache_misses");
+    entry.baskets_pruned = report.timeline.counter("baskets_pruned");
+    entry.baskets_scanned = report.timeline.counter("baskets_scanned");
+    entry.scan_shared = report.timeline.counter("scan_shared");
+    if let Some(batch) = report.batch {
+        entry.batch_id = batch.id;
+        entry.batch_members = u64::from(batch.members);
+    }
+    entry.output = Some(bytes);
+}
+
 /// Execute one admitted single-file job in one piece.
 fn run_whole(inner: &SchedInner, id: JobId) {
     let query = {
@@ -565,23 +737,89 @@ fn run_whole(inner: &SchedInner, id: JobId) {
         return; // forgotten mid-run
     };
     match outcome {
-        Ok((report, bytes)) => {
-            entry.state = JobState::Done;
-            entry.n_events = report.result.n_events;
-            entry.n_pass = report.result.n_pass;
-            entry.latency = report.latency;
-            entry.cache_hits = report.timeline.counter("basket_cache_hits");
-            entry.cache_misses = report.timeline.counter("basket_cache_misses");
-            entry.baskets_pruned = report.timeline.counter("baskets_pruned");
-            entry.baskets_scanned = report.timeline.counter("baskets_scanned");
-            entry.output = Some(bytes);
-        }
+        Ok((report, bytes)) => finish_entry(entry, &report, bytes),
         Err(e) => {
             entry.state = JobState::Failed;
             entry.error = Some(e.to_string());
         }
     }
     enforce_retention(&mut jobs, inner.cfg.retained_jobs);
+}
+
+/// Execute a flushed batching window as **one shared scan**
+/// ([`Coordinator::run_shared`]): a single phase-1 pass over the union
+/// of the members' criteria branches serves every member, with
+/// scan costs charged once and amortized across members
+/// ([`crate::mqo::amortize`]). Panic-isolated like every task; any
+/// shared-scan failure (or panic) falls the members back to
+/// independent solo runs — batching must never change outcomes, only
+/// cost.
+fn run_batch(inner: &SchedInner, ids: Vec<JobId>) {
+    // Collect the surviving members (forgotten-while-queued ids drop
+    // out) and mark them Running under one lock.
+    let members: Vec<(JobId, SkimQuery)> = {
+        let mut jobs = inner.jobs.lock().unwrap();
+        ids.iter()
+            .filter_map(|&id| {
+                jobs.get_mut(&id).map(|entry| {
+                    entry.state = JobState::Running;
+                    (id, entry.query.clone())
+                })
+            })
+            .collect()
+    };
+    match members.len() {
+        0 => return,
+        // Attrition below two members: no scan left to share.
+        1 => return run_whole(inner, members[0].0),
+        _ => {}
+    }
+    let batch_id = inner.next_batch.fetch_add(1, Ordering::Relaxed);
+    let batch_dir = inner.cfg.work_dir.join(format!("batch{batch_id}"));
+    let queries: Vec<SkimQuery> = members.iter().map(|(_, q)| q.clone()).collect();
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut coord = Coordinator::new(&inner.cfg.storage_root, &batch_dir, None);
+        if let Some(cache) = &inner.cache {
+            coord = coord.with_basket_cache(cache.clone());
+        }
+        coord
+            .run_shared(&queries, &inner.cfg.deployment, batch_id)
+            .and_then(|reports| {
+                reports
+                    .into_iter()
+                    .map(|report| {
+                        let bytes = std::fs::read(&report.result.output_path)?;
+                        Ok((report, bytes))
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+    }))
+    .unwrap_or_else(|panic| {
+        Err(Error::Engine(format!("shared scan panicked: {}", panic_msg(&panic))))
+    });
+    // The batch directory only staged member outputs; their bytes are
+    // in hand (or the batch failed) either way.
+    let _ = std::fs::remove_dir_all(&batch_dir);
+    match outcome {
+        Ok(results) => {
+            let mut jobs = inner.jobs.lock().unwrap();
+            for ((id, _), (report, bytes)) in members.iter().zip(results) {
+                if let Some(entry) = jobs.get_mut(id) {
+                    finish_entry(entry, &report, bytes);
+                }
+            }
+            enforce_retention(&mut jobs, inner.cfg.retained_jobs);
+        }
+        // Fallback: the batch failed as a unit (one member's bad query
+        // can poison the shared plan), so isolate the members again
+        // and run each solo — individually panic-guarded, individually
+        // reported.
+        Err(_) => {
+            for (id, _) in &members {
+                run_whole(inner, *id);
+            }
+        }
+    }
 }
 
 /// Execute one file task of a decomposed dataset job; the worker that
@@ -909,6 +1147,119 @@ mod tests {
         assert!(status.file_errors[0].starts_with("store/absent.troot:"));
         assert!(sched.fetch_result(id).unwrap().len() > 100);
         sched.shutdown();
+    }
+
+    fn cut_job(cut: &str, outname: &str) -> SkimQuery {
+        SkimQuery::new("events.troot", outname)
+            .keep(&["MET_pt", "event", "nJet", "Jet_pt"])
+            .with_cut_str(cut)
+            .unwrap()
+    }
+
+    #[test]
+    fn batched_jobs_share_one_scan_and_stay_byte_identical() {
+        let root = dataset("batchid");
+        let cuts =
+            ["MET_pt > 25", "MET_pt > 60", "MET_pt > 25 && nJet >= 2"];
+
+        // Reference: the same three jobs solo (no batching window).
+        let mut solo_cfg = ServeConfig::new(&root);
+        solo_cfg.workers = 1;
+        let solo = SkimScheduler::new(solo_cfg).unwrap();
+        let mut solo_bytes = Vec::new();
+        let mut solo_pass = Vec::new();
+        for (i, cut) in cuts.iter().enumerate() {
+            let id = solo.submit(cut_job(cut, &format!("solo{i}.troot"))).unwrap();
+            let status = solo.wait(id).unwrap();
+            assert_eq!(status.state, JobState::Done, "{:?}", status.error);
+            assert_eq!(status.batch_members, 0, "solo runs are not batched");
+            assert_eq!(status.scan_shared, 0);
+            solo_pass.push(status.n_pass);
+            solo_bytes.push(solo.fetch_result(id).unwrap());
+        }
+        solo.shutdown();
+
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 2;
+        cfg.batch_window_ms = 60;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let ids: Vec<JobId> = cuts
+            .iter()
+            .enumerate()
+            .map(|(i, cut)| sched.submit(cut_job(cut, &format!("b{i}.troot"))).unwrap())
+            .collect();
+        let statuses: Vec<JobStatus> =
+            ids.iter().map(|&id| sched.wait(id).unwrap()).collect();
+        for (i, status) in statuses.iter().enumerate() {
+            assert_eq!(status.state, JobState::Done, "{:?}", status.error);
+            assert_eq!(status.batch_members, 3, "member {i} must report its batch");
+            assert_eq!(status.batch_id, statuses[0].batch_id, "one batch for all");
+            assert!(status.batch_id > 0);
+            assert!(status.scan_shared > 0, "member {i} saw no shared scan");
+            assert_eq!(status.n_pass, solo_pass[i], "member {i} selection changed");
+            let bytes = sched.fetch_result(ids[i]).unwrap();
+            assert_eq!(bytes, solo_bytes[i], "member {i} output differs from solo");
+        }
+        // The one scan was charged once and amortized: members' scanned
+        // baskets sum to the batch total — at most union branches (2:
+        // MET_pt, nJet) × clusters (3 for 600 events at 200/basket) —
+        // not the ~12 three independent scans would report.
+        let scanned: u64 = statuses.iter().map(|s| s.baskets_scanned).sum();
+        assert!(scanned > 0);
+        assert!(scanned <= 6, "amortized sum must equal one shared scan, got {scanned}");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn lone_job_in_window_degrades_to_solo() {
+        let root = dataset("batchsolo");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 1;
+        cfg.batch_window_ms = 20;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let id = sched.submit(cut_job("MET_pt > 25", "lone.troot")).unwrap();
+        let status = sched.wait(id).unwrap();
+        assert_eq!(status.state, JobState::Done, "{:?}", status.error);
+        assert_eq!(status.batch_members, 0, "a batch of one is just a solo run");
+        assert_eq!(status.batch_id, 0);
+        assert_eq!(status.scan_shared, 0);
+        assert!(sched.fetch_result(id).unwrap().len() > 100);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn different_files_do_not_batch() {
+        let root = multi_dataset("batchmix");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 2;
+        cfg.batch_window_ms = 60;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        // Same window in time, different resolved files: each lands in
+        // its own window and runs solo.
+        let a = sched.submit(cut_job("MET_pt > 25", "mix_a.troot")).unwrap();
+        let mut q = cut_job("MET_pt > 25", "mix_b.troot");
+        q.input = crate::query::DatasetSpec::File("store/f0.troot".into());
+        let b = sched.submit(q).unwrap();
+        for id in [a, b] {
+            let status = sched.wait(id).unwrap();
+            assert_eq!(status.state, JobState::Done, "{:?}", status.error);
+            assert_eq!(status.batch_members, 0, "mixed files must not batch");
+            assert_eq!(status.scan_shared, 0);
+        }
+        sched.shutdown();
+    }
+
+    #[test]
+    fn batch_window_rejects_incompatible_deployment() {
+        let root = dataset("batchrej");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.batch_window_ms = 10;
+        cfg.deployment = Deployment::skim_root(LinkModel::wan_1g());
+        let err = SkimScheduler::new(cfg).unwrap_err();
+        assert!(
+            format!("{err}").contains("can host shared scans"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -135,6 +135,13 @@ pub enum Response {
         /// Criteria baskets actually read (`baskets_pruned +
         /// baskets_scanned` is the full criteria scan).
         baskets_scanned: u64,
+        /// Decoded-basket views received from a shared batch scan
+        /// instead of fetched by this job itself (0 for solo runs).
+        scan_shared: u64,
+        /// Shared-scan batch id the job ran in (0 = not batched).
+        batch_id: u64,
+        /// Member jobs that batch's one scan served (0 = not batched).
+        batch_members: u64,
         /// Dataset files completed successfully so far.
         files_done: u64,
         /// Files in the job's dataset (0 for single-file jobs).
@@ -356,6 +363,9 @@ impl Response {
                 cache_misses,
                 baskets_pruned,
                 baskets_scanned,
+                scan_shared,
+                batch_id,
+                batch_members,
                 files_done,
                 files_total,
                 msg,
@@ -370,6 +380,9 @@ impl Response {
                 out.extend_from_slice(&cache_misses.to_le_bytes());
                 out.extend_from_slice(&baskets_pruned.to_le_bytes());
                 out.extend_from_slice(&baskets_scanned.to_le_bytes());
+                out.extend_from_slice(&scan_shared.to_le_bytes());
+                out.extend_from_slice(&batch_id.to_le_bytes());
+                out.extend_from_slice(&batch_members.to_le_bytes());
                 out.extend_from_slice(&files_done.to_le_bytes());
                 out.extend_from_slice(&files_total.to_le_bytes());
                 put_str(&mut out, msg);
@@ -421,6 +434,9 @@ impl Response {
                 let cache_misses = c.u64()?;
                 let baskets_pruned = c.u64()?;
                 let baskets_scanned = c.u64()?;
+                let scan_shared = c.u64()?;
+                let batch_id = c.u64()?;
+                let batch_members = c.u64()?;
                 let files_done = c.u64()?;
                 let files_total = c.u64()?;
                 let msg = c.str()?;
@@ -441,6 +457,9 @@ impl Response {
                     cache_misses,
                     baskets_pruned,
                     baskets_scanned,
+                    scan_shared,
+                    batch_id,
+                    batch_members,
                     files_done,
                     files_total,
                     msg,
@@ -539,6 +558,9 @@ mod tests {
                 cache_misses: 7,
                 baskets_pruned: 1234,
                 baskets_scanned: 56,
+                scan_shared: 112,
+                batch_id: 5,
+                batch_members: 3,
                 files_done: 0,
                 files_total: 0,
                 msg: String::new(),
@@ -553,6 +575,9 @@ mod tests {
                 cache_misses: 0,
                 baskets_pruned: 0,
                 baskets_scanned: 9,
+                scan_shared: 0,
+                batch_id: 0,
+                batch_members: 0,
                 files_done: 2,
                 files_total: 4,
                 msg: String::new(),
