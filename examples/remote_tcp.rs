@@ -19,7 +19,7 @@ use skimroot::gen::{self, GenConfig};
 use skimroot::net::{DiskModel, LinkModel};
 use skimroot::troot::{LocalFile, TRootReader};
 use skimroot::xrootd::{Request, Response, TcpWire, Wire, XrdServer};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -105,9 +105,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         reader.meta().branches.len()
     );
 
-    stop.store(true, Ordering::Relaxed);
-    xrd_thread.join().ok();
-    http_thread.join().ok();
+    // One stop flag drives both accept loops; each needs its own poke.
+    skimroot::xrootd::server::stop_serving(xrd_addr, &stop, xrd_thread);
+    skimroot::xrootd::server::stop_serving(http_addr, &stop, http_thread);
     println!("\nremote_tcp OK");
     Ok(())
 }

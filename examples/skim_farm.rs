@@ -29,7 +29,7 @@ use skimroot::compress::Codec;
 use skimroot::gen::{self, GenConfig};
 use skimroot::serve::{ServeConfig, SkimService, SkimServiceClient};
 use skimroot::SkimJob;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -158,8 +158,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "concurrent same-file jobs must batch into shared scans"
     );
 
-    stop.store(true, Ordering::Relaxed);
-    handle.join().ok();
+    skimroot::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
     service.shutdown();
     println!("\nskim_farm OK: {n_clients} concurrent jobs, byte-identical to serial runs");
     Ok(())

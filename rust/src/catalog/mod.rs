@@ -130,6 +130,7 @@ fn walk(
             walk(&entry.path(), &rel, pattern, depth + 1, out)?;
         } else if ft.is_file()
             && !crate::index::is_sidecar_name(&name)
+            && !is_tmp_name(&name)
             && glob_match(pattern, &rel)
         {
             out.push(rel);
@@ -192,6 +193,16 @@ pub const SKIMS_DIR: &str = "skims";
 /// [`register_materialized`].
 const MATERIALIZED_MARKER: &str = "# skimroot:materialized";
 
+/// Prefix of staging files written by [`register_materialized`] before
+/// their rename into place. Names carrying it never resolve as catalog
+/// entries and are swept by [`clean_orphans`] at startup.
+const TMP_PREFIX: &str = ".tmp.";
+
+/// Whether a file name is a materialization staging temporary.
+pub fn is_tmp_name(name: &str) -> bool {
+    name.starts_with(TMP_PREFIX)
+}
+
 /// Provenance of a materialized skim, recorded as structured comments
 /// in its catalog file.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -234,17 +245,63 @@ pub fn register_materialized(
     std::fs::create_dir_all(&skims)?;
     let rel = format!("{SKIMS_DIR}/{name}.troot");
     let data = skims.join(format!("{name}.troot"));
-    std::fs::copy(output_path, &data)?;
+    // Crash-safe commit protocol: every file is staged under a
+    // [`TMP_PREFIX`] name and renamed into place, and the root
+    // `NAME.catalog` is renamed *last* — the catalog is the commit
+    // record. A crash at any point leaves either staging temporaries
+    // or skim files without their catalog; both are swept by
+    // [`clean_orphans`] before the next process serves.
+    let tmp_data = skims.join(format!("{TMP_PREFIX}{name}.troot"));
+    std::fs::copy(output_path, &tmp_data)?;
+    std::fs::rename(&tmp_data, &data)?;
     // Derive the skim's own zone map after the fact (the generic
     // `skimroot index` path); later skims over this entry prune too.
-    crate::index::FileIndex::build_from_file(&data)?
-        .save(crate::index::sidecar_path(&data))?;
+    let tmp_sidecar = skims.join(format!("{TMP_PREFIX}{name}.troot.tridx"));
+    crate::index::FileIndex::build_from_file(&data)?.save(&tmp_sidecar)?;
+    std::fs::rename(&tmp_sidecar, crate::index::sidecar_path(&data))?;
     let cut_text = cut.map_or_else(|| "(none)".to_string(), |e| e.to_string());
     let listing = format!(
         "{MATERIALIZED_MARKER}\n# source: {source}\n# cut: {cut_text}\n{rel}\n"
     );
-    std::fs::write(root.join(format!("{name}.catalog")), listing)?;
+    let tmp_catalog = root.join(format!("{TMP_PREFIX}{name}.catalog"));
+    std::fs::write(&tmp_catalog, listing)?;
+    std::fs::rename(&tmp_catalog, root.join(format!("{name}.catalog")))?;
     Ok(rel)
+}
+
+/// Startup crash recovery for [`register_materialized`]: sweep
+/// (a) staging temporaries left at the storage root and under
+/// `skims/`, and (b) skim data/sidecar files whose `NAME.catalog`
+/// commit record never appeared — a crash between the data rename and
+/// the catalog rename orphans them. `skims/` is written exclusively by
+/// the materialization path, so an uncatalogued file there is always
+/// an orphan, never user data.
+///
+/// Best-effort by design: the sweep must never stop a service from
+/// starting, so unreadable directories and failed removals are
+/// silently skipped (the next startup retries them).
+pub fn clean_orphans(root: &Path) {
+    let skims = root.join(SKIMS_DIR);
+    for dir in [root, skims.as_path()] {
+        let Ok(entries) = std::fs::read_dir(dir) else { continue };
+        for entry in entries.flatten() {
+            let Ok(name) = entry.file_name().into_string() else { continue };
+            if is_tmp_name(&name) {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+    let Ok(entries) = std::fs::read_dir(&skims) else { return };
+    for entry in entries.flatten() {
+        let Ok(name) = entry.file_name().into_string() else { continue };
+        let Some(stem) = name.strip_suffix(".troot") else {
+            continue; // sidecars ride along with their data file below
+        };
+        if !root.join(format!("{stem}.catalog")).is_file() {
+            let _ = std::fs::remove_file(entry.path());
+            let _ = std::fs::remove_file(crate::index::sidecar_path(&entry.path()));
+        }
+    }
 }
 
 /// Read back the [`Lineage`] of `catalog:<name>`. Returns `Ok(None)`
@@ -468,5 +525,42 @@ mod tests {
         assert!(register_materialized(&root, "../evil", &out, &spec, None).is_err());
         assert!(register_materialized(&root, "a/b", &out, &spec, None).is_err());
         assert!(register_materialized(&root, "", &out, &spec, None).is_err());
+    }
+
+    #[test]
+    fn clean_orphans_sweeps_staging_and_uncatalogued_skims() {
+        let root = setup("orphans");
+        let src = crate::gen::GenConfig::tiny(60);
+        let out = root.join("job_out.troot");
+        crate::gen::generate(&src, &out).unwrap();
+        let spec = DatasetSpec::parse("store/*.troot");
+
+        // A committed skim: catalog present, must survive the sweep.
+        register_materialized(&root, "keeper", &out, &spec, None).unwrap();
+
+        // Crash debris: staging temporaries at both levels, and a
+        // data/sidecar pair whose catalog commit never happened.
+        std::fs::write(root.join(".tmp.half.catalog"), b"x").unwrap();
+        std::fs::write(root.join("skims/.tmp.half.troot"), b"x").unwrap();
+        std::fs::copy(&out, root.join("skims/lost.troot")).unwrap();
+        std::fs::write(root.join("skims/lost.troot.tridx"), b"idx").unwrap();
+
+        // The staging temporary is already invisible to resolution.
+        let files = resolve(&DatasetSpec::parse("skims/*"), &root).unwrap();
+        assert!(!files.iter().any(|f| f.contains(".tmp.")), "{files:?}");
+
+        clean_orphans(&root);
+        assert!(!root.join(".tmp.half.catalog").exists());
+        assert!(!root.join("skims/.tmp.half.troot").exists());
+        assert!(!root.join("skims/lost.troot").exists());
+        assert!(!root.join("skims/lost.troot.tridx").exists());
+        assert!(root.join("skims/keeper.troot").is_file(), "committed skim survives");
+        assert!(root.join("skims/keeper.troot.tridx").is_file());
+        assert!(root.join("keeper.catalog").is_file());
+
+        // Idempotent, and harmless on a root with no skims dir at all.
+        clean_orphans(&root);
+        clean_orphans(&root.join("does_not_exist"));
+        assert!(root.join("skims/keeper.troot").is_file());
     }
 }

@@ -24,15 +24,24 @@
 //! no-op for client placements, where the output is already there).
 //!
 //! The coordinator also models WLCG's operational reality (§1: "jobs
-//! frequently fail and require resubmission"): a [`FaultConfig`]
-//! injects storage-read failures; failed attempts burn their time on
-//! the job timeline and the job is retried, exactly like a WLCG
-//! resubmission.
+//! frequently fail and require resubmission"): a [`FaultPlan`]
+//! injects storage faults from a seeded taxonomy — read errors,
+//! corrupt frames, CRC-breaking payload corruption, virtual-time read
+//! stalls, deterministic fail-at-read-N ([`crate::lifecycle`]). Failed
+//! attempts burn their time on the job timeline and the job is
+//! resubmitted after exponential backoff with deterministic jitter
+//! (charged as virtual time, so retries count toward deadlines), up
+//! to [`FaultPlan::max_retries`] — or fewer when the per-file circuit
+//! breaker ([`FaultPlan::breaker_after`]) trips first. Jobs carry a
+//! [`crate::lifecycle::JobCtl`]: cooperative cancellation and
+//! virtual-time deadlines are terminal (never retried).
 
 pub mod eval;
 
 use crate::dpu::{DpuCluster, DpuConfig, DpuNode};
 use crate::engine::{DecompMode, EngineOpts, SkimEngine, SkimResult, StageReg};
+use crate::lifecycle::{self, JobCtl};
+pub use crate::lifecycle::{FaultKind, FaultPlan};
 use crate::metrics::{Node, Stage, Timeline};
 use crate::net::{DiskModel, LinkModel};
 use crate::query::SkimQuery;
@@ -139,24 +148,6 @@ impl Mode {
     }
 }
 
-/// WLCG-style failure injection: each storage read fails with
-/// `read_fail_prob`; the coordinator resubmits up to `max_retries`.
-#[derive(Debug, Clone, Copy)]
-pub struct FaultConfig {
-    /// Probability that any one storage read fails.
-    pub read_fail_prob: f64,
-    /// Resubmissions before the job is abandoned.
-    pub max_retries: u32,
-    /// Fault-stream seed (each attempt derives a distinct stream).
-    pub seed: u64,
-}
-
-impl Default for FaultConfig {
-    fn default() -> Self {
-        FaultConfig { read_fail_prob: 0.0, max_retries: 3, seed: 0 }
-    }
-}
-
 /// Full testbed description for one job. Open: build any topology with
 /// [`Deployment::builder`]; the paper's four methods are presets.
 #[derive(Debug, Clone)]
@@ -170,8 +161,9 @@ pub struct Deployment {
     pub client_link: LinkModel,
     /// Storage backend behind the XRootD server.
     pub disk: DiskModel,
-    /// WLCG-style failure injection + retry policy.
-    pub fault: FaultConfig,
+    /// WLCG-style failure injection + retry policy (the fault
+    /// taxonomy: [`crate::lifecycle::FaultPlan`]).
+    pub fault: FaultPlan,
     /// TTreeCache capacity for remote clients (`None` disables).
     /// Server placement never uses a cache (§4: "TTreeCache does not
     /// function for local ROOT file access"); DPU placements use the
@@ -262,7 +254,7 @@ pub struct DeploymentBuilder {
     placement: Placement,
     link: LinkModel,
     disk: DiskModel,
-    fault: FaultConfig,
+    fault: FaultPlan,
     cache_bytes: Option<usize>,
     two_phase: bool,
     use_pjrt: bool,
@@ -276,7 +268,7 @@ impl Default for DeploymentBuilder {
             placement: Placement::Client,
             link: LinkModel::wan_1g(),
             disk: DiskModel::disk_pool(),
-            fault: FaultConfig::default(),
+            fault: FaultPlan::default(),
             cache_bytes: Some(crate::xrootd::DEFAULT_CACHE_BYTES),
             two_phase: true,
             use_pjrt: true,
@@ -311,7 +303,7 @@ impl DeploymentBuilder {
     }
 
     /// Failure injection + retry policy.
-    pub fn fault(mut self, fault: FaultConfig) -> Self {
+    pub fn fault(mut self, fault: FaultPlan) -> Self {
         self.fault = fault;
         self
     }
@@ -439,41 +431,114 @@ pub struct FileReport {
     pub error: Option<String>,
 }
 
-/// A `ReadAt` wrapper that injects deterministic read failures.
-struct FlakyStore<R> {
+/// A `ReadAt` wrapper that injects deterministic faults from a
+/// [`FaultPlan`]'s seeded stream — one decision per read, keyed by
+/// `(attempt seed, read index)`, so a given attempt always injects the
+/// same faults at the same reads regardless of thread interleaving.
+struct FaultStore<R> {
     inner: R,
-    fail_prob: f64,
-    rng_state: AtomicU64,
+    plan: FaultPlan,
+    /// Attempt-derived stream seed (distinct per resubmission).
+    seed: u64,
+    /// 1-based read index counter for this attempt.
+    reads: AtomicU64,
+    /// Charged with stalls and `faults_injected` counts.
+    timeline: Timeline,
 }
 
-impl<R> FlakyStore<R> {
-    fn new(inner: R, fail_prob: f64, seed: u64) -> Self {
-        FlakyStore { inner, fail_prob, rng_state: AtomicU64::new(seed) }
+impl<R> FaultStore<R> {
+    fn new(inner: R, plan: FaultPlan, seed: u64, timeline: Timeline) -> Self {
+        FaultStore { inner, plan, seed, reads: AtomicU64::new(0), timeline }
     }
 
-    fn should_fail(&self) -> bool {
-        if self.fail_prob <= 0.0 {
-            return false;
+    /// Decide whether this read is selected for injection; counts the
+    /// injection when it is.
+    fn inject(&self) -> Option<FaultKind> {
+        let idx = self.reads.fetch_add(1, Ordering::Relaxed) + 1;
+        let hit = match self.plan.kind {
+            FaultKind::FailAtRead => {
+                self.plan.fail_at_read > 0 && idx == self.plan.fail_at_read
+            }
+            _ => {
+                self.plan.fail_prob > 0.0 && {
+                    let mut rng = Pcg32::new(
+                        self.seed
+                            .wrapping_add(idx.wrapping_mul(0x2545_f491_4f6c_dd1d)),
+                    );
+                    rng.chance(self.plan.fail_prob)
+                }
+            }
+        };
+        if hit {
+            self.timeline.count("faults_injected", 1);
+            Some(self.plan.kind)
+        } else {
+            None
         }
-        let s = self.rng_state.fetch_add(1, Ordering::Relaxed);
-        let mut rng = Pcg32::new(s);
-        rng.chance(self.fail_prob)
+    }
+
+    /// Apply one injected fault to a successful read's buffers.
+    /// Returns an error for the failing kinds, corrupted/stalled data
+    /// for the rest.
+    fn apply(&self, kind: FaultKind, bufs: &mut [Vec<u8>]) -> Result<()> {
+        match kind {
+            FaultKind::ReadError | FaultKind::FailAtRead => {
+                Err(Error::Io(std::io::Error::other("injected storage fault")))
+            }
+            FaultKind::CorruptFrame => {
+                // Flip the leading bytes: a basket frame loses its
+                // magic; metadata reads surface as format errors.
+                if let Some(buf) = bufs.iter_mut().find(|b| !b.is_empty()) {
+                    for b in buf.iter_mut().take(4) {
+                        *b ^= 0x5a;
+                    }
+                }
+                Ok(())
+            }
+            FaultKind::DecompressCorrupt => {
+                // Flip the trailing payload bytes: the frame header
+                // stays intact and the decompressor's CRC trips.
+                if let Some(buf) = bufs.iter_mut().find(|b| !b.is_empty()) {
+                    let n = buf.len();
+                    for b in buf[n.saturating_sub(4)..].iter_mut() {
+                        *b ^= 0x5a;
+                    }
+                }
+                Ok(())
+            }
+            FaultKind::StallRead => {
+                // A hung storage server: clean data after a
+                // virtual-time stall that counts toward deadlines.
+                self.timeline
+                    .charge(Stage::BasketFetch, self.plan.stall_s.max(0.0));
+                Ok(())
+            }
+        }
     }
 }
 
-impl<R: ReadAt> ReadAt for FlakyStore<R> {
+impl<R: ReadAt> ReadAt for FaultStore<R> {
     fn read_at(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
-        if self.should_fail() {
-            return Err(Error::Io(std::io::Error::other("injected storage fault")));
+        match self.inject() {
+            None => self.inner.read_at(offset, len),
+            Some(kind) => {
+                let mut buf = [self.inner.read_at(offset, len)?];
+                self.apply(kind, &mut buf)?;
+                let [data] = buf;
+                Ok(data)
+            }
         }
-        self.inner.read_at(offset, len)
     }
 
     fn read_vec(&self, ranges: &[(u64, usize)]) -> Result<Vec<Vec<u8>>> {
-        if self.should_fail() {
-            return Err(Error::Io(std::io::Error::other("injected storage fault")));
+        match self.inject() {
+            None => self.inner.read_vec(ranges),
+            Some(kind) => {
+                let mut bufs = self.inner.read_vec(ranges)?;
+                self.apply(kind, &mut bufs)?;
+                Ok(bufs)
+            }
         }
-        self.inner.read_vec(ranges)
     }
 
     fn size(&self) -> Result<u64> {
@@ -491,6 +556,9 @@ pub struct Coordinator<'rt> {
     /// Shared decompressed-basket cache installed into every engine
     /// (the multi-tenant serving layer sets this; one-shot jobs don't).
     basket_cache: Option<Arc<crate::serve::BasketCache>>,
+    /// Lifecycle controls threaded into every engine this coordinator
+    /// runs: cooperative cancellation + virtual-time deadline.
+    ctl: JobCtl,
 }
 
 impl<'rt> Coordinator<'rt> {
@@ -507,7 +575,18 @@ impl<'rt> Coordinator<'rt> {
             runtime,
             client_dir: client_dir.into(),
             basket_cache: None,
+            ctl: JobCtl::none(),
         }
+    }
+
+    /// Install job lifecycle controls ([`JobCtl`]): the cancel token
+    /// and virtual-time deadline are checked at every basket-group
+    /// boundary of every engine this coordinator spins up, and between
+    /// retry attempts. Cancellation and expired deadlines are
+    /// terminal — never resubmitted.
+    pub fn with_ctl(mut self, ctl: JobCtl) -> Self {
+        self.ctl = ctl;
+        self
     }
 
     /// Install a shared [`crate::serve::BasketCache`] into every
@@ -588,6 +667,28 @@ impl<'rt> Coordinator<'rt> {
         deployment: &Deployment,
         batch_id: u64,
     ) -> Result<Vec<JobReport>> {
+        self.run_shared_ctl(queries, deployment, batch_id, &[])?
+            .into_iter()
+            .collect()
+    }
+
+    /// [`Coordinator::run_shared`] with per-member lifecycle controls.
+    ///
+    /// `ctls` carries one [`JobCtl`] per member (or is empty: no
+    /// controls). A member whose token is cancelled — or whose
+    /// virtual-time deadline expires — **detaches** from the batch at
+    /// the next group boundary: it stops receiving decoded baskets,
+    /// writes no output, and its slot in the returned vector carries
+    /// the terminal error, while the remaining members complete
+    /// normally. Batch-level failures (divergence, store errors in the
+    /// shared pass) still fail the whole call.
+    pub fn run_shared_ctl(
+        &self,
+        queries: &[SkimQuery],
+        deployment: &Deployment,
+        batch_id: u64,
+        ctls: &[JobCtl],
+    ) -> Result<Vec<Result<JobReport>>> {
         deployment.validate()?;
         if queries.is_empty() {
             return Err(Error::Config("shared-scan batch has no members".into()));
@@ -710,15 +811,19 @@ impl<'rt> Coordinator<'rt> {
             &batch_timeline,
             &opts,
             &out_paths,
+            ctls,
         )?;
 
         // Ship each member's output to the client (a no-op for client
-        // placements, where the output is already local).
+        // placements, where the output is already local; detached
+        // members produced no output to ship).
         if !matches!(deployment.placement, Placement::Client) {
             for (result, tl) in results.iter().zip(&member_timelines) {
-                deployment
-                    .client_link
-                    .charge(tl, Stage::OutputTransfer, result.output_bytes);
+                if let Ok(result) = result {
+                    deployment
+                        .client_link
+                        .charge(tl, Stage::OutputTransfer, result.output_bytes);
+                }
             }
         }
         // Served-byte accounting, solo-parity: each member's own
@@ -746,7 +851,7 @@ impl<'rt> Coordinator<'rt> {
             }
         }
         if let Some(w) = zone_warning {
-            for r in &mut results {
+            for r in results.iter_mut().flatten() {
                 r.warnings.push(w.clone());
             }
         }
@@ -757,9 +862,16 @@ impl<'rt> Coordinator<'rt> {
             .zip(member_timelines)
             .map(|(result, timeline)| {
                 timeline.count("attempts", 1);
+                let result = match result {
+                    Ok(result) => result,
+                    Err(e) => {
+                        note_terminal(&timeline, &e);
+                        return Err(e);
+                    }
+                };
                 let latency = timeline.elapsed();
                 let utilization = node_utilization(&timeline);
-                JobReport {
+                Ok(JobReport {
                     name: deployment.name.clone(),
                     result,
                     timeline,
@@ -768,12 +880,14 @@ impl<'rt> Coordinator<'rt> {
                     utilization,
                     files: Vec::new(),
                     batch: Some(info),
-                }
+                })
             })
             .collect())
     }
 
-    /// The legacy single-file job: whole-job WLCG-style retries.
+    /// The legacy single-file job: whole-job WLCG-style retries with
+    /// exponential backoff, a circuit breaker, and terminal
+    /// cancel/deadline outcomes.
     fn run_single_file(
         &self,
         query: &SkimQuery,
@@ -781,16 +895,24 @@ impl<'rt> Coordinator<'rt> {
         stages: &[StageReg],
     ) -> Result<JobReport> {
         let timeline = Timeline::new();
+        let plan = deployment.fault;
         let mut attempts = 0;
         loop {
             attempts += 1;
+            // A cancel raised between attempts — or a deadline burned
+            // through by backoff charges — terminates before the next
+            // attempt spends anything.
+            if let Err(e) = self.ctl.check(&timeline) {
+                note_terminal(&timeline, &e);
+                return Err(e);
+            }
             // Each attempt gets a distinct fault stream: a resubmitted
             // job does not hit the identical failure.
-            let attempt_seed = deployment
-                .fault
+            let attempt_seed = plan
                 .seed
                 .wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(attempts as u64));
-            match self.run_attempt(query, deployment, &timeline, attempt_seed, stages) {
+            match self.run_attempt(query, deployment, &timeline, attempt_seed, attempts, stages)
+            {
                 Ok(result) => {
                     timeline.count("attempts", 1);
                     let latency = timeline.elapsed();
@@ -808,14 +930,25 @@ impl<'rt> Coordinator<'rt> {
                 }
                 Err(e) => {
                     timeline.count("attempts", 1);
+                    if lifecycle::is_terminal(&e) {
+                        note_terminal(&timeline, &e);
+                        return Err(e);
+                    }
                     timeline.count("failures", 1);
-                    if attempts > deployment.fault.max_retries {
+                    // Single-file jobs fail as a whole, so every
+                    // failure here is consecutive: the breaker caps
+                    // the retry budget early for hopeless inputs.
+                    if plan.breaker_tripped(attempts) {
+                        return Err(Error::Engine(format!(
+                            "job failed after {attempts} attempts (circuit breaker open): {e}"
+                        )));
+                    }
+                    if plan.retries_exhausted(attempts) {
                         return Err(Error::Engine(format!(
                             "job failed after {attempts} attempts: {e}"
                         )));
                     }
-                    // Resubmission overhead (scheduling delay in WLCG).
-                    timeline.charge(Stage::Other, 1.0);
+                    charge_backoff(&timeline, attempts, plan.seed);
                 }
             }
         }
@@ -832,7 +965,7 @@ impl<'rt> Coordinator<'rt> {
     ///   the only fan-out axis. Client/server placements run the files
     ///   sequentially on one lane.
     /// * **Fault isolation** — each file gets its own retry loop
-    ///   ([`FaultConfig::max_retries`]); a file that exhausts its
+    ///   ([`FaultPlan::max_retries`]); a file that exhausts its
     ///   retries (e.g. one corrupt input) fails *that file*, recorded
     ///   in [`JobReport::files`] and the result warnings, while the
     ///   rest of the dataset completes. The job errors only when
@@ -867,7 +1000,12 @@ impl<'rt> Coordinator<'rt> {
             _ => 1,
         };
 
+        let plan = deployment.fault;
         let mut lane_timelines: Vec<Vec<Timeline>> = vec![Vec::new(); lanes];
+        // Virtual time already consumed per lane: job-level deadlines
+        // are measured on the critical-path model, so each file checks
+        // against the deadline minus what its lane has already spent.
+        let mut lane_consumed: Vec<f64> = vec![0.0; lanes];
         let mut file_reports: Vec<FileReport> = Vec::with_capacity(files.len());
         let mut part_paths: Vec<std::path::PathBuf> = Vec::new();
         let mut part_results: Vec<SkimResult> = Vec::new();
@@ -880,29 +1018,54 @@ impl<'rt> Coordinator<'rt> {
             let sub = query.for_file(file, part_name.clone());
             let part_path = parts_dir.join(&part_name);
             let file_tl = Timeline::new();
+            let lane = crate::catalog::lane_of(idx, lanes);
+            let file_ctl = self.ctl.at_offset(lane_consumed[lane]);
             let mut attempts = 0u32;
+            let mut consecutive = 0u32;
             let outcome = loop {
                 attempts += 1;
+                if let Err(e) = file_ctl.check(&file_tl) {
+                    break Err(e);
+                }
                 // Distinct fault stream per (file, attempt).
-                let attempt_seed = deployment
-                    .fault
+                let attempt_seed = plan
                     .seed
                     .wrapping_add((idx as u64 + 1).wrapping_mul(0xa076_1d64_78bd_642f))
                     .wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(attempts as u64));
                 match self.execute_placement(
-                    &sub, deployment, &file_tl, attempt_seed, stages, &part_path, 1, false,
+                    &sub, deployment, &file_tl, &file_ctl, attempt_seed, attempts, stages,
+                    &part_path, 1, false,
                 ) {
                     Ok(result) => break Ok(result),
+                    Err(e) if lifecycle::is_terminal(&e) => break Err(e),
                     Err(e) => {
                         file_tl.count("failures", 1);
-                        if attempts > deployment.fault.max_retries {
+                        consecutive += 1;
+                        // The circuit breaker converts a persistently
+                        // failing file into the degraded per-file
+                        // result without burning the full retry
+                        // budget.
+                        if plan.breaker_tripped(consecutive) {
+                            break Err(Error::Engine(format!(
+                                "circuit breaker open after {consecutive} consecutive failures: {e}"
+                            )));
+                        }
+                        if plan.retries_exhausted(attempts) {
                             break Err(e);
                         }
-                        // Per-file resubmission overhead.
-                        file_tl.charge(Stage::Other, 1.0);
+                        charge_backoff(&file_tl, attempts, plan.seed);
                     }
                 }
             };
+            // Cancellation and expired deadlines are job-terminal, not
+            // per-file degradation: stop the dataset, clean the parts.
+            if let Err(e) = &outcome {
+                if lifecycle::is_terminal(e) {
+                    note_terminal(&timeline, e);
+                    let _ = std::fs::remove_dir_all(&parts_dir);
+                    return Err(outcome.unwrap_err());
+                }
+            }
             file_tl.count("attempts", attempts as u64);
             total_attempts = total_attempts.saturating_add(attempts);
             let report = match outcome {
@@ -929,7 +1092,8 @@ impl<'rt> Coordinator<'rt> {
                 },
             };
             file_reports.push(report);
-            lane_timelines[crate::catalog::lane_of(idx, lanes)].push(file_tl);
+            lane_consumed[lane] += file_tl.elapsed();
+            lane_timelines[lane].push(file_tl);
         }
 
         // Lanes model parallel hardware: only the critical (slowest)
@@ -1025,6 +1189,7 @@ impl<'rt> Coordinator<'rt> {
         deployment: &Deployment,
         timeline: &Timeline,
         fault_seed: u64,
+        attempt: u32,
         stages: &[StageReg],
     ) -> Result<SkimResult> {
         std::fs::create_dir_all(&self.client_dir)?;
@@ -1033,7 +1198,9 @@ impl<'rt> Coordinator<'rt> {
             query,
             deployment,
             timeline,
+            &self.ctl,
             fault_seed,
+            attempt,
             stages,
             &out_path,
             deployment.fan_out,
@@ -1056,7 +1223,9 @@ impl<'rt> Coordinator<'rt> {
         query: &SkimQuery,
         deployment: &Deployment,
         timeline: &Timeline,
+        ctl: &JobCtl,
         fault_seed: u64,
+        attempt: u32,
         stages: &[StageReg],
         out_path: &std::path::Path,
         dpu_fan_out: usize,
@@ -1084,13 +1253,13 @@ impl<'rt> Coordinator<'rt> {
                 ),
             };
 
+        let fault = deployment.fault;
         let wrap_faults = |store: Arc<dyn ReadAt>| -> Arc<dyn ReadAt> {
-            if deployment.fault.read_fail_prob > 0.0 {
-                Arc::new(FlakyStore::new(
-                    store,
-                    deployment.fault.read_fail_prob,
-                    fault_seed,
-                ))
+            // `fail_attempts` gating lives here: once the plan stops
+            // injecting for this attempt, the store isn't wrapped at
+            // all, so recovered attempts run the exact clean path.
+            if fault.active_on_attempt(attempt) {
+                Arc::new(FaultStore::new(store, fault, fault_seed, timeline.clone()))
             } else {
                 store
             }
@@ -1114,6 +1283,7 @@ impl<'rt> Coordinator<'rt> {
                     cache_bytes: deployment.cache_bytes,
                     basket_cache: self.basket_cache.clone(),
                     zone_map: zone_map.clone(),
+                    ctl: ctl.clone(),
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -1140,6 +1310,7 @@ impl<'rt> Coordinator<'rt> {
                     cache_bytes: None,
                     basket_cache: self.basket_cache.clone(),
                     zone_map: zone_map.clone(),
+                    ctl: ctl.clone(),
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -1156,21 +1327,33 @@ impl<'rt> Coordinator<'rt> {
             }
             Placement::Dpu(config) => {
                 // The DPU path: PCIe-attached near-storage filtering.
-                // (Fault injection applies inside the DPU's fetch path
-                // through the storage server; model faults at the job
-                // level by wrapping the DPU scratch read — the DPU
-                // retries whole jobs like any WLCG worker.)
-                if deployment.fault.read_fail_prob > 0.0 {
+                // (Fault injection is modeled at the job level — the
+                // DPU retries whole jobs like any WLCG worker. Failing
+                // kinds abort the attempt; a stall charges its virtual
+                // time and proceeds with clean data.)
+                if fault.active_on_attempt(attempt) {
                     let mut rng = Pcg32::new(fault_seed);
-                    if rng.chance(deployment.fault.read_fail_prob) {
-                        return Err(Error::Io(std::io::Error::other(
-                            "injected DPU job fault",
-                        )));
+                    let hit = match fault.kind {
+                        FaultKind::FailAtRead => true,
+                        _ => rng.chance(fault.fail_prob),
+                    };
+                    if hit {
+                        timeline.count("faults_injected", 1);
+                        match fault.kind {
+                            FaultKind::StallRead => timeline
+                                .charge(Stage::BasketFetch, fault.stall_s.max(0.0)),
+                            _ => {
+                                return Err(Error::Io(std::io::Error::other(
+                                    "injected DPU job fault",
+                                )))
+                            }
+                        }
                     }
                 }
                 let scratch = self.client_dir.join("dpu_scratch");
                 let out = if dpu_fan_out <= 1 {
-                    let mut dpu = DpuNode::new(config.clone(), server, self.runtime, &scratch);
+                    let mut dpu = DpuNode::new(config.clone(), server, self.runtime, &scratch)
+                        .with_ctl(ctl.clone());
                     if let Some(cache) = &self.basket_cache {
                         dpu = dpu.with_basket_cache(cache.clone());
                     }
@@ -1185,7 +1368,8 @@ impl<'rt> Coordinator<'rt> {
                         server,
                         self.runtime,
                         &scratch,
-                    );
+                    )
+                    .with_ctl(ctl.clone());
                     if let Some(cache) = &self.basket_cache {
                         cluster = cluster.with_basket_cache(cache.clone());
                     }
@@ -1224,6 +1408,25 @@ impl<'rt> Coordinator<'rt> {
             }
             err => err,
         }
+    }
+}
+
+/// Charge one resubmission's exponential backoff (with deterministic
+/// jitter) as virtual time, and record the `retries` / `backoff_us`
+/// counters that flow through to job status surfaces.
+fn charge_backoff(timeline: &Timeline, attempt: u32, seed: u64) {
+    let delay = lifecycle::backoff_delay(attempt, seed);
+    timeline.charge(Stage::Other, delay);
+    timeline.count("retries", 1);
+    timeline.count("backoff_us", (delay * 1e6) as u64);
+}
+
+/// Record a terminal lifecycle outcome on the timeline counters.
+fn note_terminal(timeline: &Timeline, e: &Error) {
+    match e {
+        Error::Cancelled(_) => timeline.count("cancelled", 1),
+        Error::DeadlineExceeded(_) => timeline.count("deadline_exceeded", 1),
+        _ => {}
     }
 }
 
@@ -1344,11 +1547,17 @@ mod tests {
         let (storage, client) = setup_named(Codec::Lz4, "faults");
         let coord = Coordinator::new(&storage, &client, None);
         let mut dep = Deployment::client_opt(LinkModel::dedicated_100g());
-        dep.fault = FaultConfig { read_fail_prob: 0.3, max_retries: 50, seed: 3 };
+        dep.fault = FaultPlan::read_errors(0.3, 50, 3);
         let report = coord.run_job(&query(), &dep).unwrap();
         assert!(report.attempts > 1, "expected at least one resubmission");
         assert!(report.result.n_pass > 0);
         assert!(report.timeline.counter("failures") > 0);
+        // Each resubmission charged backoff virtual time + counters.
+        let retries = report.timeline.counter("retries");
+        assert_eq!(retries, report.attempts as u64 - 1);
+        assert!(report.timeline.counter("backoff_us") > 0);
+        assert!(report.timeline.counter("faults_injected") > 0);
+        assert!(report.timeline.stage_total(Stage::Other) > 0.0);
     }
 
     #[test]
@@ -1356,8 +1565,105 @@ mod tests {
         let (storage, client) = setup_named(Codec::Lz4, "hopeless");
         let coord = Coordinator::new(&storage, &client, None);
         let mut dep = Deployment::client_opt(LinkModel::dedicated_100g());
-        dep.fault = FaultConfig { read_fail_prob: 1.0, max_retries: 2, seed: 3 };
+        dep.fault = FaultPlan::read_errors(1.0, 2, 3);
         assert!(coord.run_job(&query(), &dep).is_err());
+    }
+
+    #[test]
+    fn fault_taxonomy_recovers_byte_identical_after_deterministic_retry() {
+        // Every corruption-flavored fault kind with `fail_attempts: 1`
+        // fails the first attempt and recovers clean on resubmission —
+        // the recovered output must be byte-identical to a fault-free
+        // run.
+        let (storage, client) = setup_named(Codec::Lz4, "taxonomy");
+        let coord = Coordinator::new(&storage, &client, None);
+        let clean = coord
+            .run_job(&query(), &Deployment::client_opt(LinkModel::dedicated_100g()))
+            .unwrap();
+        let clean_bytes = std::fs::read(&clean.result.output_path).unwrap();
+        for kind in [
+            FaultKind::ReadError,
+            FaultKind::CorruptFrame,
+            FaultKind::DecompressCorrupt,
+            FaultKind::FailAtRead,
+        ] {
+            let mut dep = Deployment::client_opt(LinkModel::dedicated_100g());
+            dep.fault = FaultPlan {
+                kind,
+                fail_prob: 1.0,
+                fail_at_read: 3,
+                fail_attempts: 1,
+                max_retries: 3,
+                seed: 9,
+                ..Default::default()
+            };
+            let report = coord.run_job(&query(), &dep).unwrap();
+            assert_eq!(report.attempts, 2, "{kind:?} should fail exactly once");
+            assert!(report.timeline.counter("faults_injected") > 0, "{kind:?}");
+            assert_eq!(report.timeline.counter("retries"), 1, "{kind:?}");
+            assert_eq!(
+                std::fs::read(&report.result.output_path).unwrap(),
+                clean_bytes,
+                "{kind:?} recovered output diverged from the clean run"
+            );
+        }
+    }
+
+    #[test]
+    fn stalled_reads_trip_virtual_time_deadlines() {
+        let (storage, client) = setup_named(Codec::Lz4, "stall");
+        // Stalls alone: job succeeds, just slower in virtual time.
+        let mut dep = Deployment::client_opt(LinkModel::dedicated_100g());
+        dep.fault = FaultPlan {
+            kind: FaultKind::StallRead,
+            fail_prob: 1.0,
+            stall_s: 30.0,
+            seed: 5,
+            ..Default::default()
+        };
+        let coord = Coordinator::new(&storage, &client, None);
+        let slow = coord.run_job(&query(), &dep).unwrap();
+        assert!(slow.latency > 30.0, "stalls must charge virtual time");
+        // Same plan under a deadline: deterministic DeadlineExceeded
+        // (virtual time, so wall-clock speed is irrelevant).
+        let coord = Coordinator::new(&storage, &client, None)
+            .with_ctl(JobCtl::with_deadline_ms(5_000));
+        match coord.run_job(&query(), &dep) {
+            Err(Error::DeadlineExceeded(_)) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pre_cancelled_job_is_terminal_without_attempts() {
+        let (storage, client) = setup_named(Codec::Lz4, "precancel");
+        let token = crate::lifecycle::CancelToken::new();
+        token.cancel();
+        let coord = Coordinator::new(&storage, &client, None)
+            .with_ctl(JobCtl { cancel: Some(token), deadline_s: None });
+        let dep = Deployment::client_opt(LinkModel::dedicated_100g());
+        match coord.run_job(&query(), &dep) {
+            Err(Error::Cancelled(_)) => {}
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn circuit_breaker_stops_retrying_before_budget_exhausts() {
+        let (storage, client) = setup_named(Codec::Lz4, "breaker");
+        let coord = Coordinator::new(&storage, &client, None);
+        let mut dep = Deployment::client_opt(LinkModel::dedicated_100g());
+        dep.fault = FaultPlan {
+            fail_prob: 1.0,
+            max_retries: 50,
+            breaker_after: 2,
+            seed: 3,
+            ..Default::default()
+        };
+        let err = coord.run_job(&query(), &dep).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("circuit breaker open"), "{msg}");
+        assert!(msg.contains("after 2 attempts"), "{msg}");
     }
 
     #[test]
@@ -1740,7 +2046,7 @@ mod tests {
         // reason.
         let same = [cut_query("MET_pt > 25", "a.troot"), cut_query("MET_pt > 60", "b.troot")];
         let mut faulty = Deployment::server_side(LinkModel::local());
-        faulty.fault.read_fail_prob = 0.5;
+        faulty.fault.fail_prob = 0.5;
         for bad in [
             Deployment::skim_root(LinkModel::wan_1g()),
             Deployment::client_legacy(LinkModel::wan_1g()),

@@ -10,11 +10,18 @@
 //! [`SkimScheduler`]:
 //!
 //! * `POST /jobs` — submit a JSON query; `202 {"job": N}` on
-//!   admission, `429` when the queue is full;
+//!   admission, `429` when the queue is full, `503` with `Retry-After`
+//!   while the service drains. An `X-Skim-Deadline-Ms` request header
+//!   attaches a virtual-time deadline to the job;
 //! * `GET /jobs/<id>` — JSON status (state, events, pass counts,
-//!   shared-cache hits/misses, zone-map baskets pruned/scanned);
+//!   shared-cache hits/misses, zone-map baskets pruned/scanned, and
+//!   the lifecycle counters: retries, faults injected, backoff time,
+//!   cancelled / deadline-exceeded flags);
+//! * `DELETE /jobs/<id>` — cancel the job (idempotent; returns the
+//!   resulting status JSON);
 //! * `GET /jobs/<id>/result` — the filtered troot bytes of a finished
-//!   job (`409` while in flight, `500` with the message on failure).
+//!   job (`409` while in flight, `500` with the status JSON when the
+//!   job failed, was cancelled or exceeded its deadline).
 //!
 //! Hand-rolled request/response parsing (no HTTP crates offline):
 //! request line + headers + `Content-Length` body; responses are
@@ -159,15 +166,21 @@ where
     ) -> std::thread::JoinHandle<()> {
         let handler = self.handler.clone();
         let scheduler = self.scheduler.clone();
-        listener.set_nonblocking(true).expect("set_nonblocking");
         std::thread::spawn(move || {
             let mut conns = Vec::new();
-            while !stop.load(Ordering::Relaxed) {
+            // Blocking accept (no poll interval); stop with
+            // [`crate::xrootd::server::stop_serving`], which pokes the
+            // listener so the kernel-blocked accept observes the flag.
+            loop {
+                let accepted = listener.accept();
+                if stop.load(Ordering::SeqCst) {
+                    break; // `accepted` may be the stop poke — drop it
+                }
                 // Reap finished connections: a long-lived service
                 // polled over `Connection: close` requests must not
                 // accumulate one dead JoinHandle per request.
                 conns.retain(|c: &std::thread::JoinHandle<()>| !c.is_finished());
-                match listener.accept() {
+                match accepted {
                     Ok((stream, _)) => {
                         let handler = handler.clone();
                         let scheduler = scheduler.clone();
@@ -175,9 +188,7 @@ where
                             let _ = handle_connection(stream, &*handler, scheduler.as_ref());
                         }));
                     }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(2));
-                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::ConnectionAborted => continue,
                     Err(_) => break,
                 }
             }
@@ -294,6 +305,14 @@ fn status_json(status: &crate::serve::JobStatus) -> String {
     obj.insert("baskets_pruned".to_string(), Json::Num(status.baskets_pruned as f64));
     obj.insert("baskets_scanned".to_string(), Json::Num(status.baskets_scanned as f64));
     obj.insert("scan_shared".to_string(), Json::Num(status.scan_shared as f64));
+    obj.insert("retries".to_string(), Json::Num(status.retries as f64));
+    obj.insert("faults_injected".to_string(), Json::Num(status.faults_injected as f64));
+    obj.insert("backoff_us".to_string(), Json::Num(status.backoff_us as f64));
+    obj.insert("cancelled".to_string(), Json::Num(status.cancelled as f64));
+    obj.insert(
+        "deadline_exceeded".to_string(),
+        Json::Num(status.deadline_exceeded as f64),
+    );
     if status.batch_members > 0 {
         obj.insert("batch_id".to_string(), Json::Num(status.batch_id as f64));
         obj.insert("batch_members".to_string(), Json::Num(status.batch_members as f64));
@@ -343,7 +362,23 @@ fn handle_jobs_route(
                     );
                 }
             };
-            match sched.submit(query) {
+            // Optional virtual-time deadline, in milliseconds.
+            let deadline_ms: u64 = match req.headers.get("x-skim-deadline-ms") {
+                None => 0,
+                Some(v) => match v.parse() {
+                    Ok(ms) => ms,
+                    Err(_) => {
+                        return write_response(
+                            stream,
+                            400,
+                            "Bad Request",
+                            &[],
+                            b"bad X-Skim-Deadline-Ms header",
+                        )
+                    }
+                },
+            };
+            match sched.submit_with_deadline(query, deadline_ms) {
                 Ok(job) => {
                     let mut obj = BTreeMap::new();
                     obj.insert("job".to_string(), Json::Num(job as f64));
@@ -356,10 +391,29 @@ fn handle_jobs_route(
                         // Admission control: the queue is full.
                         write_response(stream, 429, "Too Many Requests", &[json()], msg.as_bytes())
                     } else {
-                        // Shutting down: retrying is pointless.
-                        let hdr = [json()];
+                        // Draining or shutting down: the rejection is
+                        // retriable against a restarted service.
+                        let hdr = [json(), ("Retry-After", "1".to_string())];
                         write_response(stream, 503, "Service Unavailable", &hdr, msg.as_bytes())
                     }
+                }
+            }
+        }
+        ("DELETE", path) => {
+            let id: u64 = match path["/jobs/".len().min(path.len())..].parse() {
+                Ok(id) => id,
+                Err(_) => {
+                    return write_response(stream, 400, "Bad Request", &[], b"bad job id")
+                }
+            };
+            match sched.cancel(id) {
+                Ok(status) => {
+                    let msg = status_json(&status);
+                    write_response(stream, 200, "OK", &[json()], msg.as_bytes())
+                }
+                Err(_) => {
+                    let msg = b"{\"error\": \"no such job\"}";
+                    write_response(stream, 404, "Not Found", &[json()], msg)
                 }
             }
         }
@@ -402,12 +456,14 @@ fn handle_jobs_route(
                         write_response(stream, 500, "Internal Server Error", &hdr, msg.as_bytes())
                     }
                 },
-                JobState::Failed => {
+                // Terminal without a product: the status JSON (which
+                // names the state and carries the error) is the body.
+                JobState::Failed | JobState::Cancelled | JobState::DeadlineExceeded => {
                     let msg = status_json(&status);
                     let hdr = [json()];
                     write_response(stream, 500, "Internal Server Error", &hdr, msg.as_bytes())
                 }
-                _ => {
+                JobState::Queued | JobState::Running => {
                     let msg = status_json(&status);
                     write_response(stream, 409, "Conflict", &[json()], msg.as_bytes())
                 }
@@ -478,14 +534,29 @@ pub fn http_request(
     path: &str,
     body: &[u8],
 ) -> Result<(u16, HashMap<String, String>, Vec<u8>)> {
+    http_request_with_headers(addr, method, path, &[], body)
+}
+
+/// [`http_request`] with extra request headers (e.g.
+/// `X-Skim-Deadline-Ms` on a `POST /jobs` submission).
+pub fn http_request_with_headers(
+    addr: &str,
+    method: &str,
+    path: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<(u16, HashMap<String, String>, Vec<u8>)> {
     let mut stream = TcpStream::connect(addr)
         .map_err(|e| Error::protocol(format!("connect {addr}: {e}")))?;
     stream.set_nodelay(true).ok();
-    write!(
-        stream,
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
-        body.len()
-    )?;
+    let mut head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n"
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+    stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()?;
 
@@ -582,8 +653,7 @@ mod tests {
         assert_eq!(headers["x-skim-pass"], "7");
         assert_eq!(headers["x-skim-events"], "100");
 
-        stop.store(true, Ordering::Relaxed);
-        handle.join().unwrap();
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
     }
 
     #[test]
@@ -666,8 +736,7 @@ mod tests {
         let (status, _, _) = http_request(&addr, "POST", "/jobs", b"{nope").unwrap();
         assert_eq!(status, 422);
 
-        stop.store(true, Ordering::Relaxed);
-        handle.join().unwrap();
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
         sched.shutdown();
     }
 
@@ -771,9 +840,135 @@ mod tests {
             );
         }
 
-        stop.store(true, Ordering::Relaxed);
-        handle.join().unwrap();
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
         sched.shutdown();
+    }
+
+    #[test]
+    fn lifecycle_over_http_cancel_deadline_and_drain() {
+        use crate::compress::Codec;
+        use crate::gen::{self, GenConfig};
+        let dir = std::env::temp_dir().join(format!("http_life_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.troot");
+        if !path.exists() {
+            let cfg = GenConfig {
+                n_events: 600,
+                target_branches: 160,
+                n_hlt: 40,
+                basket_events: 200,
+                codec: Codec::Lz4,
+                seed: 53,
+            };
+            gen::generate(&cfg, &path).unwrap();
+        }
+        // One worker over a stalling disk (virtual time only): a
+        // deadlined job expires deterministically, an undeadlined one
+        // completes, and queued jobs can be cancelled over the wire.
+        let mut cfg = crate::serve::ServeConfig::new(&dir);
+        cfg.deployment.disk = crate::net::DiskModel::ideal();
+        cfg.workers = 1;
+        cfg.deployment.fault.kind = crate::coordinator::FaultKind::StallRead;
+        cfg.deployment.fault.fail_prob = 1.0;
+        cfg.deployment.fault.stall_s = 60.0;
+        cfg.deployment.fault.seed = 13;
+        let sched = crate::serve::SkimScheduler::new(cfg).unwrap();
+
+        let server = DpuHttpServer::new(|_q: &SkimQuery, _tl: &Timeline| {
+            Err(crate::Error::Engine("sync path unused in this test".into()))
+        })
+        .with_scheduler(sched.clone());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = server.serve(listener, stop.clone());
+
+        // A malformed deadline header never reaches the scheduler.
+        let payload = gen::higgs_query("events.troot", "hd.troot").to_json().to_string();
+        let (status, _, _) = http_request_with_headers(
+            &addr,
+            "POST",
+            "/jobs",
+            &[("X-Skim-Deadline-Ms", "soon")],
+            payload.as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(status, 400);
+
+        // Deadline attached via header: the stalled job expires.
+        let (status, _, body) = http_request_with_headers(
+            &addr,
+            "POST",
+            "/jobs",
+            &[("X-Skim-Deadline-Ms", "1000")],
+            payload.as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+        let text = String::from_utf8(body).unwrap();
+        let id: u64 =
+            text.trim_start_matches("{\"job\":").trim_end_matches('}').parse().unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let text = loop {
+            let (status, _, body) =
+                http_request(&addr, "GET", &format!("/jobs/{id}"), b"").unwrap();
+            assert_eq!(status, 200);
+            let text = String::from_utf8(body).unwrap();
+            if text.contains("\"state\":\"deadline-exceeded\"") {
+                break text;
+            }
+            assert!(!text.contains("\"state\":\"done\""), "{text}");
+            assert!(std::time::Instant::now() < deadline, "never expired: {text}");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        assert_eq!(json_u64(&text, "deadline_exceeded"), 1, "{text}");
+        assert!(json_u64(&text, "faults_injected") > 0, "{text}");
+        // Its result endpoint reports the terminal state, not 409.
+        let (status, _, _) =
+            http_request(&addr, "GET", &format!("/jobs/{id}/result"), b"").unwrap();
+        assert_eq!(status, 500);
+
+        // Cancel over the wire. Submit then DELETE: the single worker
+        // may pick the job up first, so poll the DELETE until the job
+        // is terminal — cancellation is cooperative and idempotent.
+        let (status, _, body) =
+            http_request(&addr, "POST", "/jobs", payload.as_bytes()).unwrap();
+        assert_eq!(status, 202);
+        let text = String::from_utf8(body).unwrap();
+        let victim: u64 =
+            text.trim_start_matches("{\"job\":").trim_end_matches('}').parse().unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let text = loop {
+            let (status, _, body) =
+                http_request(&addr, "DELETE", &format!("/jobs/{victim}"), b"").unwrap();
+            assert_eq!(status, 200);
+            let text = String::from_utf8(body).unwrap();
+            if !text.contains("\"state\":\"queued\"") && !text.contains("\"state\":\"running\"")
+            {
+                break text;
+            }
+            assert!(std::time::Instant::now() < deadline, "never terminal: {text}");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        assert!(
+            text.contains("\"state\":\"cancelled\"") || text.contains("\"state\":\"done\""),
+            "{text}"
+        );
+
+        // Unknown ids and garbage ids.
+        let (status, _, _) = http_request(&addr, "DELETE", "/jobs/99999", b"").unwrap();
+        assert_eq!(status, 404);
+        let (status, _, _) = http_request(&addr, "DELETE", "/jobs/zzz", b"").unwrap();
+        assert_eq!(status, 400);
+
+        // Drain: new submissions get a retriable 503.
+        sched.drain(crate::serve::DrainPolicy::Cancel);
+        let (status, headers, _) =
+            http_request(&addr, "POST", "/jobs", payload.as_bytes()).unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(headers.get("retry-after").map(String::as_str), Some("1"));
+
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
     }
 
     #[test]
@@ -790,7 +985,6 @@ mod tests {
         assert_eq!(status, 422);
         assert!(String::from_utf8_lossy(&body).contains("error"));
 
-        stop.store(true, Ordering::Relaxed);
-        handle.join().unwrap();
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
     }
 }

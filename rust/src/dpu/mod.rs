@@ -85,6 +85,9 @@ pub struct DpuNode<'rt> {
     /// Zone-map sidecar of the input file (basket pruning); the engine
     /// digest-validates it, so a stale map degrades to a full scan.
     zone_map: Option<Arc<crate::index::FileIndex>>,
+    /// Job lifecycle controls, checked at the engine's basket-group
+    /// boundaries (cooperative cancel + virtual-time deadline).
+    ctl: crate::lifecycle::JobCtl,
 }
 
 /// Outcome of one DPU-executed skim, including the bytes to ship back.
@@ -112,7 +115,15 @@ impl<'rt> DpuNode<'rt> {
             scratch_dir: scratch_dir.into(),
             basket_cache: None,
             zone_map: None,
+            ctl: crate::lifecycle::JobCtl::none(),
         }
+    }
+
+    /// Install job lifecycle controls ([`crate::lifecycle::JobCtl`]):
+    /// the node's engine checks them at every basket-group boundary.
+    pub fn with_ctl(mut self, ctl: crate::lifecycle::JobCtl) -> Self {
+        self.ctl = ctl;
+        self
     }
 
     /// Install a shared [`crate::serve::BasketCache`]: every job this
@@ -168,6 +179,7 @@ impl<'rt> DpuNode<'rt> {
             event_range,
             basket_cache: self.basket_cache.clone(),
             zone_map: self.zone_map.clone(),
+            ctl: self.ctl.clone(),
             ..Default::default()
         };
         let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -251,6 +263,15 @@ impl<'rt> DpuCluster<'rt> {
     pub fn with_zone_map(mut self, zone_map: Arc<crate::index::FileIndex>) -> Self {
         for node in &mut self.nodes {
             node.zone_map = Some(zone_map.clone());
+        }
+        self
+    }
+
+    /// Install job lifecycle controls into every node of the cluster:
+    /// one cancel token / deadline covers all shards of the job.
+    pub fn with_ctl(mut self, ctl: crate::lifecycle::JobCtl) -> Self {
+        for node in &mut self.nodes {
+            node.ctl = ctl.clone();
         }
         self
     }

@@ -132,6 +132,13 @@ pub struct EngineOpts {
     /// with or without a zone map; only `stage_funnel` tallies differ
     /// (pruned events never enter the funnel). `None` disables pruning.
     pub zone_map: Option<std::sync::Arc<crate::index::FileIndex>>,
+    /// Job lifecycle controls ([`crate::lifecycle::JobCtl`]): an
+    /// optional cooperative [`crate::lifecycle::CancelToken`] and an
+    /// optional virtual-time deadline. The engine checks them at every
+    /// basket-group boundary and before phase 2, so a cancel or an
+    /// expired deadline surfaces within one group of work. The default
+    /// (inactive) adds no checks and preserves the legacy contract.
+    pub ctl: crate::lifecycle::JobCtl,
 }
 
 impl EngineOpts {
@@ -164,6 +171,7 @@ impl Default for EngineOpts {
             event_range: None,
             basket_cache: None,
             zone_map: None,
+            ctl: crate::lifecycle::JobCtl::none(),
         }
     }
 }
@@ -347,6 +355,10 @@ impl<'rt> SkimEngine<'rt> {
             StageCtx::new(self.runtime, store, query, timeline, opts, output_path.into())?;
 
         while ctx.begin_group() {
+            // Cooperative lifecycle checkpoint: a cancel or an expired
+            // virtual-time deadline surfaces at the group boundary,
+            // before any more fetch/decompress work is spent.
+            opts.ctl.check(timeline)?;
             let mut vetoed = false;
             for reg in &group_order {
                 match reg.stage.run(&mut ctx)? {
@@ -364,6 +376,7 @@ impl<'rt> SkimEngine<'rt> {
             }
         }
 
+        opts.ctl.check(timeline)?;
         for reg in &job_order {
             if let Verdict::Drop = reg.stage.run(&mut ctx)? {
                 break;

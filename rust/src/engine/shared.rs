@@ -48,6 +48,7 @@
 
 use super::pipeline::{decompress_attributed, GroupState, StageCtx};
 use super::{EngineOpts, SkimResult};
+use crate::lifecycle::JobCtl;
 use crate::metrics::{Stage, Timeline};
 use crate::mqo::{self, SharedScanPlan};
 use crate::query::plan::SkimPlan;
@@ -79,10 +80,19 @@ use std::time::Instant;
 /// member group packing is layout-determined and identical), and no
 /// `opts.event_range` shard.
 ///
-/// Returns one [`SkimResult`] per member, in member order. Note:
-/// `baskets_fetched` / `fetched_bytes` in a member's result cover only
-/// its phase-2 fetches — the shared phase-1 volume lives on the batch
-/// timeline and is amortized onto member timelines, not results.
+/// Returns one `Result<SkimResult>` per member, in member order: `Ok`
+/// for members that completed, `Err` for members that **detached** —
+/// their [`JobCtl`] was cancelled or their virtual-time deadline
+/// expired at a group boundary. A detached member stops receiving
+/// decoded baskets and writes no output, while the rest of the batch
+/// completes normally; batch-level failures (divergence, scan-store
+/// errors) still fail the whole call. `ctls` carries one control block
+/// per member, or is empty (no controls — every member completes or
+/// the batch fails). Note: `baskets_fetched` / `fetched_bytes` in a
+/// member's result cover only its phase-2 fetches — the shared phase-1
+/// volume lives on the batch timeline and is amortized onto member
+/// timelines, not results.
+#[allow(clippy::too_many_arguments)]
 pub fn run_shared(
     scan_store: Arc<dyn ReadAt>,
     member_stores: &[Arc<dyn ReadAt>],
@@ -91,7 +101,8 @@ pub fn run_shared(
     batch_timeline: &Timeline,
     opts: &EngineOpts,
     out_paths: &[PathBuf],
-) -> Result<Vec<SkimResult>> {
+    ctls: &[JobCtl],
+) -> Result<Vec<Result<SkimResult>>> {
     let n = queries.len();
     if n == 0 {
         return Err(Error::Engine("shared scan: no member queries".into()));
@@ -103,6 +114,13 @@ pub fn run_shared(
             member_stores.len(),
             member_timelines.len(),
             out_paths.len()
+        )));
+    }
+    if !ctls.is_empty() && ctls.len() != n {
+        return Err(Error::Engine(format!(
+            "shared scan: {} queries but {} lifecycle controls",
+            n,
+            ctls.len()
         )));
     }
     if !opts.two_phase {
@@ -157,6 +175,14 @@ pub fn run_shared(
     let scan_branch_keys: Vec<Arc<str>> =
         shared.union_branches.iter().map(|b| b.as_str().into()).collect();
 
+    // A member whose cancel token fires — or whose virtual-time
+    // deadline expires — detaches: its slot records the terminal
+    // error, it keeps driving `begin_group` (lockstep must not
+    // diverge) but votes every cluster dead and skips eval/commit.
+    let mut detached: Vec<Option<Error>> = Vec::with_capacity(n);
+    detached.resize_with(n, || None);
+    let ctl_for = |i: usize| -> Option<&JobCtl> { ctls.get(i) };
+
     loop {
         // Lockstep group formation: identical cluster layout + opts
         // mean every member packs the same clusters. Verified, not
@@ -179,12 +205,32 @@ pub fn run_shared(
             }
         }
 
+        // Lifecycle checkpoint at the group boundary: a cancelled or
+        // past-deadline member detaches here, without killing the
+        // batch for the remaining members.
+        for i in 0..n {
+            if detached[i].is_none() {
+                if let Some(ctl) = ctl_for(i) {
+                    if let Err(e) = ctl.check(&member_timelines[i]) {
+                        detached[i] = Some(e);
+                    }
+                }
+            }
+        }
+
         // Per-member cluster liveness under each member's own zone
         // predicates; the scan skips a cluster only when every member
-        // refutes it.
+        // refutes it. Detached members vote every cluster dead — the
+        // scan never fetches on their behalf again.
         let keeps: Vec<Vec<bool>> = ctxs
             .iter()
-            .map(|ctx| clusters.iter().map(|&(cl, _, _)| !ctx.zone_dead(cl)).collect())
+            .enumerate()
+            .map(|(i, ctx)| {
+                if detached[i].is_some() {
+                    return vec![false; clusters.len()];
+                }
+                clusters.iter().map(|&(cl, _, _)| !ctx.zone_dead(cl)).collect()
+            })
             .collect();
 
         // The one shared pass: fetch + decompress + deserialize each
@@ -267,7 +313,13 @@ pub fn run_shared(
         // Per member: retain the clusters *it* keeps, inject its
         // remapped decoded view, evaluate and commit — the same
         // eval/commit code a solo run executes, over identical bytes.
+        // Detached members drop their group uncommitted (the solo
+        // abort path) and do no further work.
         for (mi, (ctx, mut g)) in ctxs.iter_mut().zip(groups).enumerate() {
+            if detached[mi].is_some() {
+                drop(g);
+                continue;
+            }
             let keep = &keeps[mi];
             let mut it = keep.iter();
             g.clusters.retain(|_| *it.next().unwrap());
@@ -291,11 +343,34 @@ pub fn run_shared(
 
     // Per-member tail: phase-2 selective fetch over the member's own
     // store (charged to the member), output write, result assembly.
-    let mut results = Vec::with_capacity(n);
-    for mut ctx in ctxs {
-        ctx.run_phase2()?;
-        ctx.write_output()?;
-        results.push(ctx.finish()?);
+    // Detached members surface their terminal error instead; a final
+    // checkpoint catches cancels/deadlines raised after the last
+    // group but before the (potentially expensive) phase-2 fetch.
+    let mut results: Vec<Result<SkimResult>> = Vec::with_capacity(n);
+    for (i, mut ctx) in ctxs.into_iter().enumerate() {
+        if detached[i].is_none() {
+            if let Some(ctl) = ctl_for(i) {
+                if let Err(e) = ctl.check(&member_timelines[i]) {
+                    detached[i] = Some(e);
+                }
+            }
+        }
+        if let Some(e) = detached[i].take() {
+            results.push(Err(e));
+            continue;
+        }
+        let member = (move || {
+            ctx.run_phase2()?;
+            ctx.write_output()?;
+            ctx.finish()
+        })();
+        match member {
+            Ok(result) => results.push(Ok(result)),
+            // Member-tail lifecycle errors detach that member; any
+            // other tail failure is batch-fatal, exactly as before.
+            Err(e) if crate::lifecycle::is_terminal(&e) => results.push(Err(e)),
+            Err(e) => return Err(e),
+        }
     }
 
     // Fold the once-charged scan accounting into the members: exact
@@ -392,12 +467,13 @@ mod tests {
             &batch_tl,
             opts,
             &out_paths,
+            &[],
         )
         .unwrap();
         let paired = results
             .into_iter()
             .zip(&out_paths)
-            .map(|(r, p)| (r, std::fs::read(p).unwrap()))
+            .map(|(r, p)| (r.unwrap(), std::fs::read(p).unwrap()))
             .collect();
         (paired, member_tls, batch_tl)
     }
@@ -551,8 +627,57 @@ mod tests {
                 &Timeline::new(),
                 &bad,
                 std::slice::from_ref(&out),
+                &[],
             );
             assert!(err.is_err());
+        }
+    }
+
+    #[test]
+    fn cancelled_member_detaches_without_killing_the_batch() {
+        let path = dataset();
+        let dir = path.parent().unwrap();
+        let cuts = ["MET_pt > 25", "MET_pt > 60", "nJet >= 2"];
+        let n = cuts.len();
+        let scan_store: Arc<dyn ReadAt> = Arc::new(LocalFile::open(&path).unwrap());
+        let member_stores: Vec<Arc<dyn ReadAt>> = (0..n)
+            .map(|_| Arc::new(LocalFile::open(&path).unwrap()) as Arc<dyn ReadAt>)
+            .collect();
+        let queries: Vec<SkimQuery> = cuts
+            .iter()
+            .enumerate()
+            .map(|(i, c)| query_for(c, &format!("detach_m{i}.troot")))
+            .collect();
+        let out_paths: Vec<PathBuf> =
+            (0..n).map(|i| dir.join(format!("detach_m{i}.troot"))).collect();
+        let member_tls: Vec<Timeline> = (0..n).map(|_| Timeline::new()).collect();
+        // Member 1 is cancelled before the batch starts; 0 and 2 run.
+        let ctls: Vec<JobCtl> = (0..n).map(|_| JobCtl::with_deadline_ms(0)).collect();
+        ctls[1].cancel.as_ref().unwrap().cancel();
+        let _ = std::fs::remove_file(&out_paths[1]);
+        let results = run_shared(
+            scan_store,
+            &member_stores,
+            &queries,
+            &member_tls,
+            &Timeline::new(),
+            &interp_opts(),
+            &out_paths,
+            &ctls,
+        )
+        .unwrap();
+        assert!(matches!(results[1], Err(Error::Cancelled(_))), "{:?}", results[1]);
+        assert!(!out_paths[1].exists(), "detached member must write no output");
+        for i in [0usize, 2] {
+            let res = results[i].as_ref().unwrap();
+            let (sres, _tl, sbytes) =
+                solo(cuts[i], &format!("detach_solo{i}.troot"), &interp_opts());
+            assert_eq!(res.n_pass, sres.n_pass, "member {i}");
+            assert_eq!(
+                std::fs::read(&out_paths[i]).unwrap(),
+                sbytes,
+                "surviving member {i} output diverged"
+            );
         }
     }
 }

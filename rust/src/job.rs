@@ -30,6 +30,7 @@
 
 use crate::coordinator::{Coordinator, Deployment, JobReport};
 use crate::engine::{FilterStage, Hook, StageReg};
+use crate::lifecycle::JobCtl;
 use crate::net::LinkModel;
 use crate::query::SkimQuery;
 use crate::runtime::SkimRuntime;
@@ -47,6 +48,7 @@ pub struct SkimJob<'rt> {
     stages: Vec<StageReg>,
     basket_cache: Option<Arc<crate::serve::BasketCache>>,
     materialize_as: Option<String>,
+    ctl: JobCtl,
 }
 
 impl<'rt> SkimJob<'rt> {
@@ -63,6 +65,7 @@ impl<'rt> SkimJob<'rt> {
             stages: Vec::new(),
             basket_cache: None,
             materialize_as: None,
+            ctl: JobCtl::none(),
         }
     }
 
@@ -104,6 +107,34 @@ impl<'rt> SkimJob<'rt> {
     pub fn basket_cache(mut self, cache: Arc<crate::serve::BasketCache>) -> Self {
         self.basket_cache = Some(cache);
         self
+    }
+
+    /// Virtual-time deadline in milliseconds (`0` = none). The job is
+    /// aborted with [`crate::Error::DeadlineExceeded`] once its
+    /// timeline's elapsed virtual time — real compute plus modeled
+    /// transport, stalls and retry backoff — passes the deadline.
+    /// Checked cooperatively at basket-group boundaries, so the job
+    /// stops within one group of the deadline. Also installs a fresh
+    /// cancel token, retrievable via [`SkimJob::cancel_token`].
+    pub fn deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.ctl = JobCtl::with_deadline_ms(deadline_ms);
+        self
+    }
+
+    /// Use an externally-created control block (shared cancel token
+    /// and/or deadline). The serving layer uses this to wire one token
+    /// per scheduler job through to the engines.
+    pub fn ctl(mut self, ctl: JobCtl) -> Self {
+        self.ctl = ctl;
+        self
+    }
+
+    /// The cancel token this job will honor, if any: call
+    /// [`crate::lifecycle::CancelToken::cancel`] from another thread to
+    /// stop the job at the next basket-group boundary with
+    /// [`crate::Error::Cancelled`].
+    pub fn cancel_token(&self) -> Option<crate::lifecycle::CancelToken> {
+        self.ctl.cancel.clone()
     }
 
     /// Register the finished skim output back into the storage root's
@@ -162,6 +193,9 @@ impl<'rt> SkimJob<'rt> {
         let mut coord = Coordinator::new(&self.storage_root, &self.client_dir, self.runtime);
         if let Some(cache) = &self.basket_cache {
             coord = coord.with_basket_cache(cache.clone());
+        }
+        if self.ctl.is_active() {
+            coord = coord.with_ctl(self.ctl.clone());
         }
         let report = coord.run_job_with(&self.query, &self.deployment, &self.stages)?;
         if let Some(name) = &self.materialize_as {

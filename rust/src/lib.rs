@@ -111,6 +111,7 @@ pub mod engine;
 pub mod gen;
 pub mod index;
 pub mod job;
+pub mod lifecycle;
 pub mod metrics;
 pub mod mqo;
 pub mod net;
@@ -124,6 +125,7 @@ pub mod xrootd;
 pub use coordinator::{Deployment, JobReport, Mode, Placement};
 pub use engine::{FilterStage, Hook, StageCtx, Verdict};
 pub use job::SkimJob;
+pub use lifecycle::{CancelToken, FaultKind, FaultPlan, JobCtl};
 pub use query::{DatasetSpec, Expr, SkimQuery};
 pub use serve::{BasketCache, SkimScheduler, SkimService};
 
@@ -158,6 +160,14 @@ pub enum Error {
     /// control rejections).
     #[error("config error: {0}")]
     Config(String),
+    /// The job was cooperatively cancelled ([`lifecycle::CancelToken`]).
+    /// Terminal: retry loops never resubmit a cancelled job.
+    #[error("cancelled: {0}")]
+    Cancelled(String),
+    /// The job's virtual-time deadline passed ([`lifecycle::JobCtl`]).
+    /// Terminal: retry loops never resubmit past the deadline.
+    #[error("deadline exceeded: {0}")]
+    DeadlineExceeded(String),
 }
 
 impl Error {

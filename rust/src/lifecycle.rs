@@ -1,0 +1,370 @@
+//! Job lifecycle primitives: cooperative cancellation, virtual-time
+//! deadlines, the fault taxonomy, and the retry/backoff policy.
+//!
+//! The WLCG setting the paper reproduces is defined by operational
+//! failure ("jobs frequently fail and require resubmission", §1). This
+//! module is the substrate the serving stack hardens itself with:
+//!
+//! * [`CancelToken`] / [`JobCtl`] — a cooperative cancel flag plus an
+//!   optional **virtual-time deadline**, threaded through
+//!   [`crate::engine::EngineOpts`] and checked at basket-group
+//!   boundaries. Deadlines are measured on the job's
+//!   [`crate::metrics::Timeline`] (`elapsed()` = real compute +
+//!   modeled transport), so a stalled-read fault deterministically
+//!   trips a deadline regardless of wall-clock speed.
+//! * [`FaultKind`] / [`FaultPlan`] — the fault taxonomy, generalizing
+//!   the old read-error-only `FaultConfig`: injected read errors,
+//!   corrupt basket frames (bad magic), payload corruption (CRC
+//!   mismatch in the decompressor), virtual-time read stalls, and
+//!   deterministic fail-at-read-N. All faults derive from the plan's
+//!   seeded stream, so every run is reproducible.
+//! * [`backoff_delay`] — exponential backoff with deterministic
+//!   jitter, charged as *virtual* time on the job timeline (replacing
+//!   the old fixed 1 s resubmission constant), so retries both model
+//!   WLCG scheduling delay and count toward the job's deadline.
+//!
+//! Terminal outcomes surface as the dedicated error variants
+//! [`crate::Error::Cancelled`] and [`crate::Error::DeadlineExceeded`];
+//! retry loops treat both as non-retriable.
+
+use crate::metrics::Timeline;
+use crate::util::Pcg32;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A cooperative cancellation flag, cheaply cloneable and shared
+/// between the submitting surface (scheduler, wire, HTTP) and the
+/// engine, which polls it at basket-group boundaries.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, uncancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation. Idempotent; the engine observes it at the
+    /// next group boundary.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    /// Has cancellation been requested?
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Per-job lifecycle controls: an optional [`CancelToken`] and an
+/// optional virtual-time deadline in seconds. The default (`none`) is
+/// a job that can neither be cancelled nor time out — the legacy
+/// contract, unchanged.
+#[derive(Debug, Clone, Default)]
+pub struct JobCtl {
+    /// Cooperative cancel flag (`None` = not cancellable).
+    pub cancel: Option<CancelToken>,
+    /// Deadline in **virtual seconds** on the job timeline (`None` =
+    /// no deadline). Compared against `Timeline::elapsed()`, which
+    /// sums real compute and modeled transport — including injected
+    /// stalls and backoff charges.
+    pub deadline_s: Option<f64>,
+}
+
+impl JobCtl {
+    /// No cancellation, no deadline (the legacy contract).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// A control block with a fresh token and an optional deadline in
+    /// milliseconds (`0` = none, matching the wire encoding).
+    pub fn with_deadline_ms(deadline_ms: u64) -> Self {
+        JobCtl {
+            cancel: Some(CancelToken::new()),
+            deadline_s: (deadline_ms > 0).then(|| deadline_ms as f64 / 1000.0),
+        }
+    }
+
+    /// A view of this control block for a sub-timeline that starts
+    /// `consumed` virtual seconds into the job: the cancel token is
+    /// shared, the deadline shrinks by what the job has already spent
+    /// (may go negative — the next check trips immediately). Used by
+    /// the dataset path, where each file runs on a private timeline.
+    pub fn at_offset(&self, consumed: f64) -> JobCtl {
+        JobCtl {
+            cancel: self.cancel.clone(),
+            deadline_s: self.deadline_s.map(|d| d - consumed),
+        }
+    }
+
+    /// Is any control active (worth checking at group boundaries)?
+    pub fn is_active(&self) -> bool {
+        self.cancel.is_some() || self.deadline_s.is_some()
+    }
+
+    /// The cooperative checkpoint: returns [`Error::Cancelled`] when
+    /// the token is set, [`Error::DeadlineExceeded`] when the
+    /// timeline's virtual clock has passed the deadline, `Ok` else.
+    pub fn check(&self, timeline: &Timeline) -> Result<()> {
+        if let Some(token) = &self.cancel {
+            if token.is_cancelled() {
+                return Err(Error::Cancelled("job cancelled".into()));
+            }
+        }
+        if let Some(deadline) = self.deadline_s {
+            let elapsed = timeline.elapsed();
+            if elapsed > deadline {
+                return Err(Error::DeadlineExceeded(format!(
+                    "deadline {deadline:.3}s exceeded at {elapsed:.3}s virtual time"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Is this error a terminal lifecycle outcome (never retried)?
+pub fn is_terminal(err: &Error) -> bool {
+    matches!(err, Error::Cancelled(_) | Error::DeadlineExceeded(_))
+}
+
+/// The fault taxonomy: what a [`FaultPlan`] injects into storage reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The read itself fails with an I/O error (the legacy
+    /// `FaultConfig` behavior).
+    ReadError,
+    /// The read succeeds but the leading bytes are flipped — a basket
+    /// frame loses its magic, surfacing as a format/compression error
+    /// in the decoder.
+    CorruptFrame,
+    /// The read succeeds but the trailing payload bytes are flipped —
+    /// the decompressor's CRC check fails ("crc mismatch").
+    DecompressCorrupt,
+    /// The read succeeds after charging a **virtual-time stall** to
+    /// the job timeline: data is clean, but the stall counts toward
+    /// the job's deadline (a hung storage server, not a corrupt one).
+    StallRead,
+    /// Deterministically fail the Nth read of the attempt
+    /// ([`FaultPlan::fail_at_read`], 1-based) with an I/O error.
+    FailAtRead,
+}
+
+impl FaultKind {
+    /// Every kind, in taxonomy order (the chaos matrix iterates this).
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::ReadError,
+        FaultKind::CorruptFrame,
+        FaultKind::DecompressCorrupt,
+        FaultKind::StallRead,
+        FaultKind::FailAtRead,
+    ];
+
+    /// Canonical CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::ReadError => "read-error",
+            FaultKind::CorruptFrame => "corrupt-frame",
+            FaultKind::DecompressCorrupt => "decompress-corrupt",
+            FaultKind::StallRead => "stall-read",
+            FaultKind::FailAtRead => "fail-at-read",
+        }
+    }
+
+    /// Parse a CLI name; unknown names list every valid spelling.
+    pub fn parse(s: &str) -> Result<FaultKind> {
+        FaultKind::ALL
+            .into_iter()
+            .find(|k| k.name() == s)
+            .ok_or_else(|| {
+                let valid: Vec<&str> = FaultKind::ALL.iter().map(|k| k.name()).collect();
+                Error::Config(format!(
+                    "unknown fault kind '{s}'; valid kinds: {}",
+                    valid.join(", ")
+                ))
+            })
+    }
+}
+
+/// WLCG-style failure injection + retry policy, generalizing the old
+/// read-error-only `FaultConfig` into a deterministic fault taxonomy.
+///
+/// Selection: for probabilistic kinds each read is selected with
+/// `fail_prob` from a stream seeded by `(seed, attempt, read index)`;
+/// [`FaultKind::FailAtRead`] selects exactly read `fail_at_read`.
+/// When `fail_attempts > 0`, injection stops after that many attempts
+/// — a guaranteed-recovery fault for byte-identity testing.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    /// What gets injected.
+    pub kind: FaultKind,
+    /// Probability that any one storage read is selected for injection
+    /// (ignored by [`FaultKind::FailAtRead`]).
+    pub fail_prob: f64,
+    /// For [`FaultKind::FailAtRead`]: the 1-based read index that
+    /// fails (`0` disables the kind).
+    pub fail_at_read: u64,
+    /// Inject only on the first N attempts (`0` = every attempt).
+    /// `fail_attempts: 1` makes the first attempt fail and every
+    /// resubmission run clean — deterministic retry-success.
+    pub fail_attempts: u32,
+    /// Virtual seconds charged per stalled read
+    /// ([`FaultKind::StallRead`]).
+    pub stall_s: f64,
+    /// Resubmissions before the job (or dataset file) is abandoned.
+    pub max_retries: u32,
+    /// Circuit breaker: consecutive failures before retrying stops
+    /// early and the failure is surfaced as the degraded per-file
+    /// result (`0` = disabled, burn all retries).
+    pub breaker_after: u32,
+    /// Fault-stream seed (each attempt derives a distinct stream).
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            kind: FaultKind::ReadError,
+            fail_prob: 0.0,
+            fail_at_read: 0,
+            fail_attempts: 0,
+            stall_s: 0.0,
+            max_retries: 3,
+            breaker_after: 0,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// The legacy constructor shape: seeded read errors with
+    /// probability `fail_prob`, `max_retries` resubmissions.
+    pub fn read_errors(fail_prob: f64, max_retries: u32, seed: u64) -> Self {
+        FaultPlan { fail_prob, max_retries, seed, ..Default::default() }
+    }
+
+    /// Does this plan inject anything at all? (Shared-scan batches and
+    /// the fault-wrapping fast path key off this.)
+    pub fn active(&self) -> bool {
+        self.fail_prob > 0.0 || self.fail_at_read > 0
+    }
+
+    /// Does this plan inject on the given 1-based attempt?
+    pub fn active_on_attempt(&self, attempt: u32) -> bool {
+        self.active() && (self.fail_attempts == 0 || attempt <= self.fail_attempts)
+    }
+
+    /// Retry-cap check shared by the job and per-file retry loops.
+    pub fn retries_exhausted(&self, attempts: u32) -> bool {
+        attempts > self.max_retries
+    }
+
+    /// Circuit-breaker check: `true` once `consecutive` failures have
+    /// hit the configured trip point.
+    pub fn breaker_tripped(&self, consecutive: u32) -> bool {
+        self.breaker_after > 0 && consecutive >= self.breaker_after
+    }
+}
+
+/// Exponential backoff with deterministic jitter for resubmission
+/// `attempt` (1-based: the delay charged *after* that attempt fails).
+///
+/// `0.25 s · 2^(attempt-1)`, capped at 8 s, scaled by a jitter factor
+/// in `[0.5, 1.5)` drawn from a stream seeded by `(seed, attempt)` —
+/// fully deterministic per plan seed, strictly positive, and charged
+/// as virtual time so it counts toward deadlines.
+pub fn backoff_delay(attempt: u32, seed: u64) -> f64 {
+    const BASE_S: f64 = 0.25;
+    const CAP_S: f64 = 8.0;
+    let exp = attempt.saturating_sub(1).min(10);
+    let raw = (BASE_S * (1u64 << exp) as f64).min(CAP_S);
+    let mut rng = Pcg32::new(
+        seed.wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(attempt as u64)),
+    );
+    raw * (0.5 + rng.f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_is_sticky_and_shared() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        assert!(!t.is_cancelled());
+        clone.cancel();
+        assert!(t.is_cancelled());
+        t.cancel(); // idempotent
+        assert!(clone.is_cancelled());
+    }
+
+    #[test]
+    fn ctl_check_reports_cancel_then_deadline() {
+        let tl = Timeline::new();
+        let ctl = JobCtl::with_deadline_ms(1_000);
+        assert!(ctl.is_active());
+        assert!(ctl.check(&tl).is_ok());
+        tl.charge(crate::metrics::Stage::Other, 2.0);
+        assert!(matches!(ctl.check(&tl), Err(Error::DeadlineExceeded(_))));
+        // Cancellation takes precedence over the deadline.
+        ctl.cancel.as_ref().unwrap().cancel();
+        assert!(matches!(ctl.check(&tl), Err(Error::Cancelled(_))));
+        assert!(JobCtl::none().check(&tl).is_ok());
+    }
+
+    #[test]
+    fn fault_kind_parse_roundtrips_and_lists_valid_names() {
+        for kind in FaultKind::ALL {
+            assert_eq!(FaultKind::parse(kind.name()).unwrap(), kind);
+        }
+        let err = FaultKind::parse("bit-rot").unwrap_err();
+        let msg = format!("{err}");
+        for kind in FaultKind::ALL {
+            assert!(msg.contains(kind.name()), "missing {} in: {msg}", kind.name());
+        }
+    }
+
+    #[test]
+    fn fault_plan_attempt_gating() {
+        let plan = FaultPlan { fail_prob: 1.0, fail_attempts: 2, ..Default::default() };
+        assert!(plan.active());
+        assert!(plan.active_on_attempt(1));
+        assert!(plan.active_on_attempt(2));
+        assert!(!plan.active_on_attempt(3));
+        let always = FaultPlan { fail_prob: 1.0, ..Default::default() };
+        assert!(always.active_on_attempt(999));
+        assert!(!FaultPlan::default().active());
+        assert!(FaultPlan { fail_at_read: 3, ..Default::default() }.active());
+    }
+
+    #[test]
+    fn breaker_and_retry_caps() {
+        let plan = FaultPlan { max_retries: 2, breaker_after: 3, ..Default::default() };
+        assert!(!plan.retries_exhausted(2));
+        assert!(plan.retries_exhausted(3));
+        assert!(!plan.breaker_tripped(2));
+        assert!(plan.breaker_tripped(3));
+        assert!(!FaultPlan::default().breaker_tripped(u32::MAX));
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_with_bounded_jitter() {
+        for seed in [0u64, 7, 0xdead_beef] {
+            let mut prev_cap = 0.0f64;
+            for attempt in 1..=6 {
+                let d = backoff_delay(attempt, seed);
+                let raw = (0.25 * (1u64 << (attempt - 1)) as f64).min(8.0);
+                assert!(d >= raw * 0.5 && d < raw * 1.5, "attempt {attempt}: {d}");
+                assert!(d > prev_cap * 0.49, "not growing: {d} after {prev_cap}");
+                prev_cap = raw;
+            }
+            // Deterministic per (seed, attempt).
+            assert_eq!(backoff_delay(3, seed), backoff_delay(3, seed));
+        }
+        // Capped.
+        assert!(backoff_delay(40, 1) < 8.0 * 1.5);
+    }
+}

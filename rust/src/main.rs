@@ -22,7 +22,7 @@
 
 use skimroot::cli::Args;
 use skimroot::compress::Codec;
-use skimroot::coordinator::{eval, Deployment, FaultConfig, Mode, Placement};
+use skimroot::coordinator::{eval, Deployment, FaultKind, FaultPlan, Mode, Placement};
 use skimroot::dpu::http::{self, post_skim, DpuHttpServer};
 use skimroot::dpu::DpuConfig;
 use skimroot::gen::{self, GenConfig};
@@ -78,8 +78,11 @@ COMMANDS:
          --input SPEC [--branches A,B,*]) [--cut 'EXPR'] [--explain]
          [--mode client-legacy|client-opt|server-side|skimroot]
          [--link 1g|10g|100g] [--fan-out N] [--artifacts DIR]
-         [--client-dir DIR] [--fail-prob P] [--retries N]
-         [--materialize NAME]
+         [--client-dir DIR] [--deadline-ms N] [--materialize NAME]
+         [--fault-kind read-error|corrupt-frame|decompress-corrupt|
+          stall-read|fail-at-read] [--fail-prob P] [--fault-at N]
+         [--fail-attempts N] [--stall-s S] [--retries N]
+         [--breaker-after N] [--fault-seed N]
          (SPEC is a dataset spec: one file, a glob like
           'store/*.troot', or catalog:NAME — multi-file datasets run
           per file with fault isolation and merge deterministically;
@@ -256,9 +259,14 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
     let client_dir = args.get_or("client-dir", "skim_client");
 
     let mut deployment = Deployment::new(mode, link);
-    deployment.fault = FaultConfig {
-        read_fail_prob: args.parse_num("fail-prob", 0.0f64)?,
+    deployment.fault = FaultPlan {
+        kind: FaultKind::parse(args.get_or("fault-kind", "read-error"))?,
+        fail_prob: args.parse_num("fail-prob", 0.0f64)?,
+        fail_at_read: args.parse_num("fault-at", 0u64)?,
+        fail_attempts: args.parse_num("fail-attempts", 0u32)?,
+        stall_s: args.parse_num("stall-s", 0.0f64)?,
         max_retries: args.parse_num("retries", 3u32)?,
+        breaker_after: args.parse_num("breaker-after", 0u32)?,
         seed: args.parse_num("fault-seed", 0u64)?,
     };
     deployment.fan_out = args.parse_num("fan-out", 1usize)?;
@@ -267,7 +275,8 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
         .storage(storage)
         .client_dir(client_dir)
         .runtime(runtime.as_ref())
-        .deployment(deployment);
+        .deployment(deployment)
+        .deadline_ms(args.parse_num("deadline-ms", 0u64)?);
     if let Some(name) = args.get("materialize") {
         job = job.materialize(name);
     }

@@ -186,7 +186,7 @@ pub fn deployment_incompatibility(dep: &Deployment) -> Option<&'static str> {
     if !dep.two_phase {
         return Some("legacy single-phase mode folds outputs into phase 1");
     }
-    if dep.fault.read_fail_prob > 0.0 {
+    if dep.fault.active() {
         return Some("fault injection needs per-job retry streams");
     }
     None
@@ -312,7 +312,10 @@ mod tests {
         assert!(deployment_incompatibility(&Deployment::client_legacy(LinkModel::wan_1g()))
             .is_some());
         let mut faulty = Deployment::server_side(LinkModel::local());
-        faulty.fault.read_fail_prob = 0.5;
+        faulty.fault.fail_prob = 0.5;
         assert!(deployment_incompatibility(&faulty).is_some());
+        let mut fail_at = Deployment::server_side(LinkModel::local());
+        fail_at.fault.fail_at_read = 2;
+        assert!(deployment_incompatibility(&fail_at).is_some());
     }
 }

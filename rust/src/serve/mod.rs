@@ -30,7 +30,7 @@ pub mod cache;
 pub mod sched;
 
 pub use cache::{BasketCache, BasketCacheStats, BasketKey};
-pub use sched::{JobId, JobState, JobStatus, ServeConfig, SkimScheduler};
+pub use sched::{DrainPolicy, JobId, JobState, JobStatus, ServeConfig, SkimScheduler};
 
 use crate::net::DiskModel;
 use crate::query::SkimQuery;
@@ -74,35 +74,23 @@ impl SkimService {
     /// everything else to the embedded file server.
     pub fn handle(&self, req: Request) -> Response {
         match req {
-            Request::SubmitQuery { query_json } => {
+            Request::SubmitQuery { query_json, deadline_ms } => {
                 let query = match SkimQuery::from_json_text(&query_json) {
                     Ok(q) => q,
                     Err(e) => return Response::Error { msg: e.to_string() },
                 };
-                match self.sched.submit(query) {
+                match self.sched.submit_with_deadline(query, deadline_ms) {
                     Ok(job) => Response::JobAccepted { job },
                     Err(e) => Response::Error { msg: e.to_string() },
                 }
             }
             Request::JobStatus { job } => match self.sched.status(job) {
-                Some(status) => Response::JobState {
-                    state: status.state.code(),
-                    n_events: status.n_events,
-                    n_pass: status.n_pass,
-                    latency_us: (status.latency * 1e6) as u64,
-                    cache_hits: status.cache_hits,
-                    cache_misses: status.cache_misses,
-                    baskets_pruned: status.baskets_pruned,
-                    baskets_scanned: status.baskets_scanned,
-                    scan_shared: status.scan_shared,
-                    batch_id: status.batch_id,
-                    batch_members: status.batch_members,
-                    files_done: status.files_done,
-                    files_total: status.files_total,
-                    msg: status.error.unwrap_or_default(),
-                    file_errors: status.file_errors,
-                },
+                Some(status) => status_frame(&status),
                 None => Response::Error { msg: format!("no such job {job}") },
+            },
+            Request::CancelJob { job } => match self.sched.cancel(job) {
+                Ok(status) => status_frame(&status),
+                Err(e) => Response::Error { msg: e.to_string() },
             },
             Request::FetchResult { job } => match self.sched.fetch_result(job) {
                 Ok(bytes) => Response::Data { data: bytes },
@@ -123,10 +111,46 @@ impl SkimService {
         serve_requests_tcp(listener, stop, move |req| service.handle(req))
     }
 
+    /// Graceful drain ([`SkimScheduler::drain`]): stop admission —
+    /// further submissions get a retriable error — then settle
+    /// in-flight work by `policy` and stop the workers. The TCP loop
+    /// keeps answering status/fetch frames until its `stop` flag goes
+    /// true, so clients can still collect results after the drain.
+    pub fn drain(&self, policy: DrainPolicy) {
+        self.sched.drain(policy);
+    }
+
     /// Stop the scheduler's worker pool (the TCP loop is stopped via
     /// its `stop` flag).
     pub fn shutdown(&self) {
         self.sched.shutdown();
+    }
+}
+
+/// Render a [`JobStatus`] as its wire frame (shared by the status and
+/// cancel handlers — both answer with the job's current state).
+fn status_frame(status: &JobStatus) -> Response {
+    Response::JobState {
+        state: status.state.code(),
+        n_events: status.n_events,
+        n_pass: status.n_pass,
+        latency_us: (status.latency * 1e6) as u64,
+        cache_hits: status.cache_hits,
+        cache_misses: status.cache_misses,
+        baskets_pruned: status.baskets_pruned,
+        baskets_scanned: status.baskets_scanned,
+        scan_shared: status.scan_shared,
+        batch_id: status.batch_id,
+        batch_members: status.batch_members,
+        files_done: status.files_done,
+        files_total: status.files_total,
+        retries: status.retries,
+        faults_injected: status.faults_injected,
+        backoff_us: status.backoff_us,
+        cancelled: status.cancelled,
+        deadline_exceeded: status.deadline_exceeded,
+        msg: status.error.clone().unwrap_or_default(),
+        file_errors: status.file_errors.clone(),
     }
 }
 
@@ -158,9 +182,28 @@ impl SkimServiceClient {
 
     /// Submit a query; returns the service-assigned job id.
     pub fn submit(&self, query: &SkimQuery) -> Result<JobId> {
+        self.submit_with_deadline(query, 0)
+    }
+
+    /// [`SkimServiceClient::submit`] with a virtual-time deadline in
+    /// milliseconds (`0` = none): the service ends the job
+    /// [`JobState::DeadlineExceeded`] once its modeled latency passes
+    /// the deadline.
+    pub fn submit_with_deadline(&self, query: &SkimQuery, deadline_ms: u64) -> Result<JobId> {
         let query_json = query.to_json().to_string();
-        match self.wire.call(Request::SubmitQuery { query_json })? {
+        match self.wire.call(Request::SubmitQuery { query_json, deadline_ms })? {
             Response::JobAccepted { job } => Ok(job),
+            Response::Error { msg } => Err(Error::protocol(msg)),
+            other => Err(Error::protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Cancel `job` on the service
+    /// ([`SkimScheduler::cancel`] semantics; idempotent). Returns the
+    /// post-cancel status.
+    pub fn cancel(&self, job: JobId) -> Result<JobStatus> {
+        match self.wire.call(Request::CancelJob { job })? {
+            resp @ Response::JobState { .. } => parse_status(job, resp),
             Response::Error { msg } => Err(Error::protocol(msg)),
             other => Err(Error::protocol(format!("unexpected response {other:?}"))),
         }
@@ -169,40 +212,7 @@ impl SkimServiceClient {
     /// Fetch the current status of `job`.
     pub fn status(&self, job: JobId) -> Result<JobStatus> {
         match self.wire.call(Request::JobStatus { job })? {
-            Response::JobState {
-                state,
-                n_events,
-                n_pass,
-                latency_us,
-                cache_hits,
-                cache_misses,
-                baskets_pruned,
-                baskets_scanned,
-                scan_shared,
-                batch_id,
-                batch_members,
-                files_done,
-                files_total,
-                msg,
-                file_errors,
-            } => Ok(JobStatus {
-                id: job,
-                state: JobState::from_code(state)?,
-                n_events,
-                n_pass,
-                latency: latency_us as f64 / 1e6,
-                cache_hits,
-                cache_misses,
-                baskets_pruned,
-                baskets_scanned,
-                scan_shared,
-                batch_id,
-                batch_members,
-                error: if msg.is_empty() { None } else { Some(msg) },
-                files_total,
-                files_done,
-                file_errors,
-            }),
+            resp @ Response::JobState { .. } => parse_status(job, resp),
             Response::Error { msg } => Err(Error::protocol(msg)),
             other => Err(Error::protocol(format!("unexpected response {other:?}"))),
         }
@@ -228,8 +238,10 @@ impl SkimServiceClient {
         }
     }
 
-    /// Poll until `job` finishes, then return `(status, result bytes)`.
-    /// Errors if the job failed (carrying the service's message).
+    /// Poll until `job` reaches a terminal state, then return
+    /// `(status, result bytes)`. Errors if the job failed, was
+    /// cancelled or exceeded its deadline (carrying the service's
+    /// message and, for the lifecycle outcomes, the state name).
     pub fn wait_result(&self, job: JobId) -> Result<(JobStatus, Vec<u8>)> {
         loop {
             let status = self.status(job)?;
@@ -238,9 +250,10 @@ impl SkimServiceClient {
                     let bytes = self.fetch_result(job)?;
                     return Ok((status, bytes));
                 }
-                JobState::Failed => {
+                JobState::Failed | JobState::Cancelled | JobState::DeadlineExceeded => {
                     return Err(Error::Engine(format!(
-                        "job {job} failed: {}",
+                        "job {job} {}: {}",
+                        status.state.name(),
                         status.error.as_deref().unwrap_or("unknown error")
                     )))
                 }
@@ -250,12 +263,63 @@ impl SkimServiceClient {
     }
 }
 
+/// Decode a [`Response::JobState`] frame into a [`JobStatus`].
+fn parse_status(job: JobId, resp: Response) -> Result<JobStatus> {
+    let Response::JobState {
+        state,
+        n_events,
+        n_pass,
+        latency_us,
+        cache_hits,
+        cache_misses,
+        baskets_pruned,
+        baskets_scanned,
+        scan_shared,
+        batch_id,
+        batch_members,
+        files_done,
+        files_total,
+        retries,
+        faults_injected,
+        backoff_us,
+        cancelled,
+        deadline_exceeded,
+        msg,
+        file_errors,
+    } = resp
+    else {
+        return Err(Error::protocol("not a JobState frame"));
+    };
+    Ok(JobStatus {
+        id: job,
+        state: JobState::from_code(state)?,
+        n_events,
+        n_pass,
+        latency: latency_us as f64 / 1e6,
+        cache_hits,
+        cache_misses,
+        baskets_pruned,
+        baskets_scanned,
+        scan_shared,
+        batch_id,
+        batch_members,
+        retries,
+        faults_injected,
+        backoff_us,
+        cancelled,
+        deadline_exceeded,
+        error: if msg.is_empty() { None } else { Some(msg) },
+        files_total,
+        files_done,
+        file_errors,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compress::Codec;
     use crate::gen::{self, GenConfig};
-    use std::sync::atomic::Ordering;
 
     fn dataset(tag: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join(format!("serve_{}_{tag}", std::process::id()));
@@ -298,8 +362,7 @@ mod tests {
         let file = xrd.open("events.troot").unwrap();
         assert!(crate::troot::ReadAt::size(&file).unwrap() > 0);
 
-        stop.store(true, Ordering::Relaxed);
-        handle.join().unwrap();
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
         service.shutdown();
     }
 
@@ -340,8 +403,7 @@ mod tests {
         assert_eq!(report.timeline.counter("baskets_pruned"), 2);
         assert_eq!(bytes, std::fs::read(&report.result.output_path).unwrap());
 
-        stop.store(true, Ordering::Relaxed);
-        handle.join().unwrap();
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
         service.shutdown();
     }
 
@@ -396,8 +458,7 @@ mod tests {
             );
         }
 
-        stop.store(true, Ordering::Relaxed);
-        handle.join().unwrap();
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
         service.shutdown();
     }
 
@@ -446,6 +507,66 @@ mod tests {
     }
 
     #[test]
+    fn cancel_and_deadline_cross_the_tcp_wire() {
+        let root = dataset("tcplifecycle");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.deployment.disk = DiskModel::ideal();
+        // One worker + virtual-time stalls: a deadlined job expires
+        // deterministically, then the freed worker runs a clean job.
+        cfg.workers = 1;
+        cfg.deployment.fault.kind = crate::coordinator::FaultKind::StallRead;
+        cfg.deployment.fault.fail_prob = 1.0;
+        cfg.deployment.fault.stall_s = 60.0;
+        cfg.deployment.fault.seed = 11;
+        let service = SkimService::new(cfg).unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = service.serve_tcp(listener, stop.clone());
+        let client = SkimServiceClient::connect(&addr).unwrap();
+
+        let doomed = client
+            .submit_with_deadline(&gen::higgs_query("events.troot", "doom.troot"), 1_000)
+            .unwrap();
+        let err = client.wait_result(doomed).unwrap_err();
+        assert!(format!("{err}").contains("deadline-exceeded"), "{err}");
+        let status = client.status(doomed).unwrap();
+        assert_eq!(status.state, JobState::DeadlineExceeded);
+        assert_eq!(status.deadline_exceeded, 1, "counter must cross the wire");
+        assert!(status.faults_injected > 0, "stall faults must cross the wire");
+
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
+        service.shutdown();
+
+        // Cancellation over the wire, deterministically: a zero-worker
+        // service never picks jobs up, so the victim is still Queued
+        // when the CancelJob frame lands; a second cancel is an
+        // idempotent no-op.
+        let mut cfg = ServeConfig::new(&root);
+        cfg.deployment.disk = DiskModel::ideal();
+        cfg.workers = 0;
+        let service = SkimService::new(cfg).unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = service.serve_tcp(listener, stop.clone());
+        let client = SkimServiceClient::connect(&addr).unwrap();
+
+        let victim = client.submit(&gen::higgs_query("events.troot", "v.troot")).unwrap();
+        let status = client.cancel(victim).unwrap();
+        assert_eq!(status.state, JobState::Cancelled);
+        assert_eq!(status.cancelled, 1, "counter must cross the wire");
+        let again = client.cancel(victim).unwrap();
+        assert_eq!(again.state, JobState::Cancelled, "cancel must be idempotent");
+        let err = client.wait_result(victim).unwrap_err();
+        assert!(format!("{err}").contains("cancelled"), "{err}");
+        assert!(client.cancel(99_999).is_err(), "unknown job ids error");
+
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
+        service.shutdown();
+    }
+
+    #[test]
     fn dataset_job_over_tcp_with_listing() {
         let root = dataset("tcpds");
         // Two more files so a glob resolves to a 3-file dataset.
@@ -482,8 +603,7 @@ mod tests {
         assert!(status.file_errors.is_empty());
         assert!(bytes.len() > 100);
 
-        stop.store(true, Ordering::Relaxed);
-        handle.join().unwrap();
+        crate::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
         service.shutdown();
     }
 }

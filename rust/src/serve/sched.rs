@@ -48,10 +48,25 @@
 //! 6. **stream result** — the filtered file's bytes are held in the
 //!    job table until fetched ([`SkimScheduler::fetch_result`]) or
 //!    dropped ([`SkimScheduler::forget`]).
+//!
+//! **Lifecycle control** (see `ARCHITECTURE.md` § "Failure semantics &
+//! job lifecycle"): every job carries a [`JobCtl`] — a cancel token
+//! plus an optional virtual-time deadline set at submission
+//! ([`SkimScheduler::submit_with_deadline`]). [`SkimScheduler::cancel`]
+//! flips a queued job straight to [`JobState::Cancelled`] (pulling it
+//! out of any open batching window) and trips a running job's token,
+//! which the engines observe at the next basket-group boundary; both
+//! are idempotent on terminal jobs. Deadline overruns surface as
+//! [`JobState::DeadlineExceeded`]. Either way the worker slot is
+//! released immediately — a cancelled or expired job never wedges the
+//! pool. [`SkimScheduler::drain`] stops admission (submissions get a
+//! retriable error) and then finishes or cancels in-flight work by
+//! [`DrainPolicy`] before stopping the workers.
 
 use super::cache::BasketCache;
 use crate::coordinator::{Coordinator, Deployment};
 use crate::job::SkimJob;
+use crate::lifecycle::JobCtl;
 use crate::net::LinkModel;
 use crate::query::SkimQuery;
 use crate::{Error, Result};
@@ -160,6 +175,13 @@ pub enum JobState {
     Done,
     /// The job errored (status carries the message).
     Failed,
+    /// The client cancelled the job ([`SkimScheduler::cancel`]) before
+    /// it finished. Terminal like [`JobState::Failed`], but
+    /// distinguishable: the client asked for it.
+    Cancelled,
+    /// The job's virtual-time deadline passed before it finished.
+    /// Terminal; the status carries the overrun detail.
+    DeadlineExceeded,
 }
 
 impl JobState {
@@ -170,6 +192,8 @@ impl JobState {
             JobState::Running => 1,
             JobState::Done => 2,
             JobState::Failed => 3,
+            JobState::Cancelled => 4,
+            JobState::DeadlineExceeded => 5,
         }
     }
 
@@ -180,6 +204,8 @@ impl JobState {
             1 => JobState::Running,
             2 => JobState::Done,
             3 => JobState::Failed,
+            4 => JobState::Cancelled,
+            5 => JobState::DeadlineExceeded,
             other => return Err(Error::protocol(format!("bad job state code {other}"))),
         })
     }
@@ -191,7 +217,14 @@ impl JobState {
             JobState::Running => "running",
             JobState::Done => "done",
             JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+            JobState::DeadlineExceeded => "deadline-exceeded",
         }
+    }
+
+    /// Whether the state is final (the job will never change again).
+    pub fn is_terminal(self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
     }
 }
 
@@ -230,7 +263,21 @@ pub struct JobStatus {
     pub batch_id: u64,
     /// Member jobs the batch's one scan served (0 = solo).
     pub batch_members: u64,
-    /// Failure message when `state` is [`JobState::Failed`].
+    /// Resubmission attempts beyond the first, summed across the job's
+    /// retry loops (0 when every read succeeded first try).
+    pub retries: u64,
+    /// Faults the deployment's [`crate::lifecycle::FaultPlan`]
+    /// injected into this job's reads (0 outside chaos runs).
+    pub faults_injected: u64,
+    /// Retry backoff charged to the job's virtual time, microseconds.
+    pub backoff_us: u64,
+    /// 1 when the job ended [`JobState::Cancelled`].
+    pub cancelled: u64,
+    /// 1 when the job ended [`JobState::DeadlineExceeded`].
+    pub deadline_exceeded: u64,
+    /// Failure message when `state` is terminal-with-error
+    /// ([`JobState::Failed`], [`JobState::Cancelled`],
+    /// [`JobState::DeadlineExceeded`]).
     pub error: Option<String>,
     /// Files in the job's dataset (0 for single-file jobs, whose
     /// status shape is unchanged).
@@ -267,6 +314,9 @@ struct PendingBatch {
 struct JobEntry {
     query: SkimQuery,
     state: JobState,
+    /// Cancel token + deadline for this job; the token is shared with
+    /// every engine the job spins up.
+    ctl: JobCtl,
     output: Option<Vec<u8>>,
     n_events: u64,
     n_pass: u64,
@@ -278,6 +328,11 @@ struct JobEntry {
     scan_shared: u64,
     batch_id: u64,
     batch_members: u64,
+    retries: u64,
+    faults_injected: u64,
+    backoff_us: u64,
+    cancelled: u64,
+    deadline_exceeded: u64,
     error: Option<String>,
     /// Resolved dataset files (empty for single-file jobs).
     files: Vec<String>,
@@ -295,11 +350,12 @@ struct JobEntry {
 }
 
 impl JobEntry {
-    fn new(query: SkimQuery, files: Vec<String>) -> JobEntry {
+    fn new(query: SkimQuery, files: Vec<String>, ctl: JobCtl) -> JobEntry {
         let n = files.len();
         JobEntry {
             query,
             state: JobState::Queued,
+            ctl,
             output: None,
             n_events: 0,
             n_pass: 0,
@@ -311,12 +367,48 @@ impl JobEntry {
             scan_shared: 0,
             batch_id: 0,
             batch_members: 0,
+            retries: 0,
+            faults_injected: 0,
+            backoff_us: 0,
+            cancelled: 0,
+            deadline_exceeded: 0,
             error: None,
             files,
             parts: (0..n).map(|_| None).collect(),
             files_done: 0,
             file_errors: Vec::new(),
             merging: false,
+        }
+    }
+
+    /// Point-in-time status snapshot of this entry.
+    fn status(&self, id: JobId) -> JobStatus {
+        JobStatus {
+            id,
+            state: self.state,
+            n_events: self.n_events,
+            n_pass: self.n_pass,
+            latency: self.latency,
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+            baskets_pruned: self.baskets_pruned,
+            baskets_scanned: self.baskets_scanned,
+            scan_shared: self.scan_shared,
+            batch_id: self.batch_id,
+            batch_members: self.batch_members,
+            retries: self.retries,
+            faults_injected: self.faults_injected,
+            backoff_us: self.backoff_us,
+            cancelled: self.cancelled,
+            deadline_exceeded: self.deadline_exceeded,
+            error: self.error.clone(),
+            files_total: self.files.len() as u64,
+            files_done: self.files_done,
+            file_errors: self
+                .file_errors
+                .iter()
+                .map(|(i, msg)| format!("{}: {msg}", self.files[*i]))
+                .collect(),
         }
     }
 }
@@ -336,6 +428,13 @@ struct SchedInner {
     /// Batch ids start at 1: status surfaces use 0 for "not batched".
     next_batch: AtomicU64,
     stop: AtomicBool,
+    /// Admission closed ([`SkimScheduler::drain`]); workers keep
+    /// running until the drain completes.
+    draining: AtomicBool,
+    /// Signalled (with `jobs` held) on every transition into a
+    /// terminal state — [`SkimScheduler::wait`] and
+    /// [`SkimScheduler::drain`] block on this instead of sleep-polling.
+    done_cv: Condvar,
 }
 
 /// The bounded-worker-pool job scheduler (see the module docs).
@@ -357,6 +456,10 @@ impl SkimScheduler {
             }
         }
         std::fs::create_dir_all(&cfg.work_dir)?;
+        // Crash recovery: a previous process may have died between
+        // staging a materialized skim and committing its catalog
+        // record; sweep the orphaned temporaries before serving.
+        crate::catalog::clean_orphans(&cfg.storage_root);
         let cache = if cfg.cache_bytes > 0 {
             Some(Arc::new(BasketCache::new(cfg.cache_bytes)))
         } else {
@@ -373,6 +476,8 @@ impl SkimScheduler {
             next_id: AtomicU64::new(1),
             next_batch: AtomicU64::new(1),
             stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            done_cv: Condvar::new(),
         });
         let sched = Arc::new(SkimScheduler {
             inner: inner.clone(),
@@ -392,11 +497,13 @@ impl SkimScheduler {
         self.inner.cache.as_ref()
     }
 
-    /// False once [`SkimScheduler::shutdown`] has started: submissions
-    /// are rejected and clients should stop retrying (the HTTP layer
-    /// maps this to `503` rather than the admission-control `429`).
+    /// False once [`SkimScheduler::drain`] or
+    /// [`SkimScheduler::shutdown`] has started: submissions are
+    /// rejected with a retriable error (the HTTP layer maps this to
+    /// `503` + `Retry-After` rather than the admission-control `429`).
     pub fn is_accepting(&self) -> bool {
         !self.inner.stop.load(Ordering::Relaxed)
+            && !self.inner.draining.load(Ordering::Relaxed)
     }
 
     /// Aggregate shared-cache statistics (zeroed when disabled).
@@ -413,9 +520,22 @@ impl SkimScheduler {
     /// client should back off and resubmit). Dataset jobs decompose
     /// into one queued task per file.
     pub fn submit(&self, query: SkimQuery) -> Result<JobId> {
-        if self.inner.stop.load(Ordering::Relaxed) {
-            return Err(Error::Config("skim service is shutting down".into()));
+        self.submit_with_deadline(query, 0)
+    }
+
+    /// [`SkimScheduler::submit`] with a virtual-time deadline in
+    /// milliseconds (`0` = none): once the job's modeled latency
+    /// passes the deadline, it stops at the next basket-group boundary
+    /// and reports [`JobState::DeadlineExceeded`]. Every submitted job
+    /// also gets a cancel token, so [`SkimScheduler::cancel`] works
+    /// whether or not a deadline was set.
+    pub fn submit_with_deadline(&self, query: SkimQuery, deadline_ms: u64) -> Result<JobId> {
+        if !self.is_accepting() {
+            return Err(Error::Config(
+                "skim service is draining (not accepting jobs); retry later".into(),
+            ));
         }
+        let ctl = JobCtl::with_deadline_ms(deadline_ms);
         let files = crate::catalog::resolve(&query.input, &self.inner.cfg.storage_root)?;
         let is_dataset = !query.input.is_single();
         let mut queue = self.inner.queue.lock().unwrap();
@@ -431,7 +551,7 @@ impl SkimScheduler {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         if is_dataset {
             let n = files.len();
-            jobs.insert(id, JobEntry::new(query, files));
+            jobs.insert(id, JobEntry::new(query, files, ctl));
             for index in 0..n {
                 queue.push_back(Task::File { job: id, index });
             }
@@ -443,7 +563,7 @@ impl SkimScheduler {
         // control) instead of enqueuing straight away.
         let batchable = self.inner.cfg.batch_window_ms > 0 && files.len() == 1;
         let key = if batchable { Some(files.into_iter().next().unwrap()) } else { None };
-        jobs.insert(id, JobEntry::new(query, Vec::new()));
+        jobs.insert(id, JobEntry::new(query, Vec::new(), ctl));
         let Some(key) = key else {
             queue.push_back(Task::Whole(id));
             self.inner.queue_cv.notify_one();
@@ -481,28 +601,56 @@ impl SkimScheduler {
     /// Status of job `id`, or `None` for an unknown (or forgotten) id.
     pub fn status(&self, id: JobId) -> Option<JobStatus> {
         let jobs = self.inner.jobs.lock().unwrap();
-        jobs.get(&id).map(|e| JobStatus {
-            id,
-            state: e.state,
-            n_events: e.n_events,
-            n_pass: e.n_pass,
-            latency: e.latency,
-            cache_hits: e.cache_hits,
-            cache_misses: e.cache_misses,
-            baskets_pruned: e.baskets_pruned,
-            baskets_scanned: e.baskets_scanned,
-            scan_shared: e.scan_shared,
-            batch_id: e.batch_id,
-            batch_members: e.batch_members,
-            error: e.error.clone(),
-            files_total: e.files.len() as u64,
-            files_done: e.files_done,
-            file_errors: e
-                .file_errors
-                .iter()
-                .map(|(i, msg)| format!("{}: {msg}", e.files[*i]))
-                .collect(),
-        })
+        jobs.get(&id).map(|e| e.status(id))
+    }
+
+    /// Cancel job `id`. A queued job (including one parked in an open
+    /// batching window) flips straight to [`JobState::Cancelled`]; a
+    /// running job has its token tripped and stops at the next
+    /// basket-group boundary; a terminal job is left untouched
+    /// (cancellation is idempotent). Returns the post-cancel status.
+    /// Errors only for unknown (or forgotten) ids.
+    pub fn cancel(&self, id: JobId) -> Result<JobStatus> {
+        // Pull the job out of any open batching window first, so a
+        // window flushing concurrently does not re-enqueue it. Lock
+        // discipline: `pending` is never held together with `jobs`.
+        {
+            let mut pending = self.inner.pending.lock().unwrap();
+            for batch in pending.iter_mut() {
+                batch.jobs.retain(|&j| j != id);
+            }
+            pending.retain(|b| !b.jobs.is_empty());
+        }
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        let entry = jobs
+            .get_mut(&id)
+            .ok_or_else(|| Error::Config(format!("no such job {id}")))?;
+        match entry.state {
+            JobState::Queued => {
+                // Never ran: terminal immediately. Workers that later
+                // pop this job's queued tasks see the terminal state
+                // and skip them.
+                if let Some(token) = &entry.ctl.cancel {
+                    token.cancel();
+                }
+                entry.state = JobState::Cancelled;
+                entry.cancelled = 1;
+                entry.error = Some("cancelled before start".into());
+                self.inner.done_cv.notify_all();
+            }
+            JobState::Running => {
+                // Cooperative: the engines observe the token at the
+                // next basket-group boundary and unwind with
+                // `Error::Cancelled`; the worker maps that to the
+                // terminal state.
+                if let Some(token) = &entry.ctl.cancel {
+                    token.cancel();
+                }
+            }
+            // Terminal: idempotent no-op.
+            _ => {}
+        }
+        Ok(entry.status(id))
     }
 
     /// Filtered-file bytes of a [`JobState::Done`] job. The bytes are
@@ -521,10 +669,13 @@ impl SkimScheduler {
                 .output
                 .take()
                 .ok_or_else(|| Error::Config(format!("job {id} result already delivered"))),
-            JobState::Failed => Err(Error::Engine(format!(
-                "job {id} failed: {}",
-                entry.error.as_deref().unwrap_or("unknown error")
-            ))),
+            JobState::Failed | JobState::Cancelled | JobState::DeadlineExceeded => {
+                Err(Error::Engine(format!(
+                    "job {id} {}: {}",
+                    entry.state.name(),
+                    entry.error.as_deref().unwrap_or("unknown error")
+                )))
+            }
             state => Err(Error::Config(format!(
                 "job {id} not finished (state: {})",
                 state.name()
@@ -539,22 +690,76 @@ impl SkimScheduler {
         self.inner.jobs.lock().unwrap().remove(&id);
     }
 
-    /// Block until job `id` leaves the queue/running states, polling at
-    /// millisecond granularity. Returns the final status.
+    /// Block until job `id` reaches a terminal state (done, failed,
+    /// cancelled or deadline-exceeded). Returns the final status.
+    /// Sleeps on the scheduler's completion condvar — woken by the
+    /// finishing worker, not by polling (the timeout below only guards
+    /// against a lost wakeup).
     pub fn wait(&self, id: JobId) -> Result<JobStatus> {
+        let mut jobs = self.inner.jobs.lock().unwrap();
         loop {
-            let status = self
-                .status(id)
+            let entry = jobs
+                .get(&id)
                 .ok_or_else(|| Error::Config(format!("no such job {id}")))?;
-            match status.state {
-                JobState::Done | JobState::Failed => return Ok(status),
-                _ => std::thread::sleep(std::time::Duration::from_millis(1)),
+            if entry.state.is_terminal() {
+                return Ok(entry.status(id));
             }
+            let (guard, _timeout) = self
+                .inner
+                .done_cv
+                .wait_timeout(jobs, Duration::from_millis(100))
+                .unwrap();
+            jobs = guard;
         }
     }
 
+    /// Graceful drain: stop admission (submissions now fail with a
+    /// retriable error — the wire layers surface it as `503` +
+    /// `Retry-After`), flush every open batching window, then bring
+    /// in-flight work to rest by `policy` — [`DrainPolicy::Finish`]
+    /// lets queued and running jobs complete, [`DrainPolicy::Cancel`]
+    /// cancels everything not yet terminal. Blocks until every job in
+    /// the table is terminal, then stops and joins the workers.
+    /// (`Finish` with zero workers would wait forever on queued jobs —
+    /// drain cancels them instead in that configuration.)
+    pub fn drain(&self, policy: DrainPolicy) {
+        self.inner.draining.store(true, Ordering::Relaxed);
+        // Flush open windows now: parked jobs either run immediately
+        // or get cancelled below — nobody waits out a window during
+        // drain.
+        let windows: Vec<Vec<JobId>> = {
+            let mut pending = self.inner.pending.lock().unwrap();
+            pending.drain(..).map(|b| b.jobs).collect()
+        };
+        for jobs in windows {
+            enqueue_batch(&self.inner, jobs);
+        }
+        let cancel_queued =
+            policy == DrainPolicy::Cancel || self.inner.cfg.workers == 0;
+        if cancel_queued {
+            let ids: Vec<JobId> =
+                self.inner.jobs.lock().unwrap().keys().copied().collect();
+            for id in ids {
+                let _ = self.cancel(id);
+            }
+        }
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        while jobs.values().any(|e| !e.state.is_terminal()) {
+            let (guard, _timeout) = self
+                .inner
+                .done_cv
+                .wait_timeout(jobs, Duration::from_millis(100))
+                .unwrap();
+            jobs = guard;
+        }
+        drop(jobs);
+        self.shutdown();
+    }
+
     /// Stop the workers and join them. Queued jobs that never ran stay
-    /// [`JobState::Queued`] in the table. Idempotent.
+    /// [`JobState::Queued`] in the table. Idempotent. For an orderly
+    /// stop that settles in-flight work first, use
+    /// [`SkimScheduler::drain`].
     pub fn shutdown(&self) {
         self.inner.stop.store(true, Ordering::Relaxed);
         self.inner.queue_cv.notify_all();
@@ -563,6 +768,18 @@ impl SkimScheduler {
             let _ = handle.join();
         }
     }
+}
+
+/// What [`SkimScheduler::drain`] does with work that is queued or
+/// running when the drain starts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainPolicy {
+    /// Let queued and running jobs run to completion.
+    Finish,
+    /// Cancel everything not yet terminal (queued jobs flip to
+    /// [`JobState::Cancelled`] immediately; running jobs stop at the
+    /// next basket-group boundary).
+    Cancel,
 }
 
 impl Drop for SkimScheduler {
@@ -650,11 +867,13 @@ fn execute_query(
     inner: &SchedInner,
     query: SkimQuery,
     job_dir: &std::path::Path,
+    ctl: &JobCtl,
 ) -> Result<(crate::coordinator::JobReport, Vec<u8>)> {
     let mut job = SkimJob::new(query)
         .storage(&inner.cfg.storage_root)
         .client_dir(job_dir)
-        .deployment(inner.cfg.deployment.clone());
+        .deployment(inner.cfg.deployment.clone())
+        .ctl(ctl.clone());
     if let Some(cache) = &inner.cache {
         job = job.basket_cache(cache.clone());
     }
@@ -710,6 +929,9 @@ fn finish_entry(entry: &mut JobEntry, report: &crate::coordinator::JobReport, by
     entry.baskets_pruned = report.timeline.counter("baskets_pruned");
     entry.baskets_scanned = report.timeline.counter("baskets_scanned");
     entry.scan_shared = report.timeline.counter("scan_shared");
+    entry.retries = report.timeline.counter("retries");
+    entry.faults_injected = report.timeline.counter("faults_injected");
+    entry.backoff_us = report.timeline.counter("backoff_us");
     if let Some(batch) = report.batch {
         entry.batch_id = batch.id;
         entry.batch_members = u64::from(batch.members);
@@ -717,32 +939,56 @@ fn finish_entry(entry: &mut JobEntry, report: &crate::coordinator::JobReport, by
     entry.output = Some(bytes);
 }
 
+/// The terminal [`JobState`] an execution error maps to: cancellation
+/// and deadline overruns are first-class outcomes, everything else is
+/// an ordinary failure.
+fn terminal_state_of(e: &Error) -> JobState {
+    match e {
+        Error::Cancelled(_) => JobState::Cancelled,
+        Error::DeadlineExceeded(_) => JobState::DeadlineExceeded,
+        _ => JobState::Failed,
+    }
+}
+
+/// Record a job-fatal execution error into its table entry, bumping
+/// the matching lifecycle counter.
+fn fail_entry(entry: &mut JobEntry, e: &Error) {
+    entry.state = terminal_state_of(e);
+    match entry.state {
+        JobState::Cancelled => entry.cancelled = 1,
+        JobState::DeadlineExceeded => entry.deadline_exceeded = 1,
+        _ => {}
+    }
+    entry.error = Some(e.to_string());
+}
+
 /// Execute one admitted single-file job in one piece.
 fn run_whole(inner: &SchedInner, id: JobId) {
-    let query = {
+    let (query, ctl) = {
         let mut jobs = inner.jobs.lock().unwrap();
         match jobs.get_mut(&id) {
+            // Cancelled while queued: the entry is already terminal;
+            // the stale task is a no-op.
+            Some(entry) if entry.state.is_terminal() => return,
             Some(entry) => {
                 entry.state = JobState::Running;
-                entry.query.clone()
+                (entry.query.clone(), entry.ctl.clone())
             }
             // Forgotten while queued: nothing to do.
             None => return,
         }
     };
     let job_dir = inner.cfg.work_dir.join(format!("job{id}"));
-    let outcome = execute_query(inner, query, &job_dir);
+    let outcome = execute_query(inner, query, &job_dir, &ctl);
     let mut jobs = inner.jobs.lock().unwrap();
     let Some(entry) = jobs.get_mut(&id) else {
         return; // forgotten mid-run
     };
     match outcome {
         Ok((report, bytes)) => finish_entry(entry, &report, bytes),
-        Err(e) => {
-            entry.state = JobState::Failed;
-            entry.error = Some(e.to_string());
-        }
+        Err(e) => fail_entry(entry, &e),
     }
+    inner.done_cv.notify_all();
     enforce_retention(&mut jobs, inner.cfg.retained_jobs);
 }
 
@@ -755,16 +1001,17 @@ fn run_whole(inner: &SchedInner, id: JobId) {
 /// independent solo runs — batching must never change outcomes, only
 /// cost.
 fn run_batch(inner: &SchedInner, ids: Vec<JobId>) {
-    // Collect the surviving members (forgotten-while-queued ids drop
-    // out) and mark them Running under one lock.
-    let members: Vec<(JobId, SkimQuery)> = {
+    // Collect the surviving members (forgotten- or cancelled-while-
+    // queued ids drop out) and mark them Running under one lock.
+    let members: Vec<(JobId, SkimQuery, JobCtl)> = {
         let mut jobs = inner.jobs.lock().unwrap();
         ids.iter()
-            .filter_map(|&id| {
-                jobs.get_mut(&id).map(|entry| {
+            .filter_map(|&id| match jobs.get_mut(&id) {
+                Some(entry) if !entry.state.is_terminal() => {
                     entry.state = JobState::Running;
-                    (id, entry.query.clone())
-                })
+                    Some((id, entry.query.clone(), entry.ctl.clone()))
+                }
+                _ => None,
             })
             .collect()
     };
@@ -776,22 +1023,28 @@ fn run_batch(inner: &SchedInner, ids: Vec<JobId>) {
     }
     let batch_id = inner.next_batch.fetch_add(1, Ordering::Relaxed);
     let batch_dir = inner.cfg.work_dir.join(format!("batch{batch_id}"));
-    let queries: Vec<SkimQuery> = members.iter().map(|(_, q)| q.clone()).collect();
+    let queries: Vec<SkimQuery> = members.iter().map(|(_, q, _)| q.clone()).collect();
+    let ctls: Vec<JobCtl> = members.iter().map(|(_, _, c)| c.clone()).collect();
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         let mut coord = Coordinator::new(&inner.cfg.storage_root, &batch_dir, None);
         if let Some(cache) = &inner.cache {
             coord = coord.with_basket_cache(cache.clone());
         }
+        // Per-member outcomes: a member cancelled (or past deadline)
+        // mid-batch detaches with its own terminal error while the
+        // rest of the batch completes normally.
         coord
-            .run_shared(&queries, &inner.cfg.deployment, batch_id)
-            .and_then(|reports| {
-                reports
+            .run_shared_ctl(&queries, &inner.cfg.deployment, batch_id, &ctls)
+            .map(|results| {
+                results
                     .into_iter()
-                    .map(|report| {
-                        let bytes = std::fs::read(&report.result.output_path)?;
-                        Ok((report, bytes))
+                    .map(|result| {
+                        result.and_then(|report| {
+                            let bytes = std::fs::read(&report.result.output_path)?;
+                            Ok((report, bytes))
+                        })
                     })
-                    .collect::<Result<Vec<_>>>()
+                    .collect::<Vec<Result<_>>>()
             })
     }))
     .unwrap_or_else(|panic| {
@@ -803,11 +1056,15 @@ fn run_batch(inner: &SchedInner, ids: Vec<JobId>) {
     match outcome {
         Ok(results) => {
             let mut jobs = inner.jobs.lock().unwrap();
-            for ((id, _), (report, bytes)) in members.iter().zip(results) {
+            for ((id, _, _), result) in members.iter().zip(results) {
                 if let Some(entry) = jobs.get_mut(id) {
-                    finish_entry(entry, &report, bytes);
+                    match result {
+                        Ok((report, bytes)) => finish_entry(entry, &report, bytes),
+                        Err(e) => fail_entry(entry, &e),
+                    }
                 }
             }
+            inner.done_cv.notify_all();
             enforce_retention(&mut jobs, inner.cfg.retained_jobs);
         }
         // Fallback: the batch failed as a unit (one member's bad query
@@ -815,7 +1072,7 @@ fn run_batch(inner: &SchedInner, ids: Vec<JobId>) {
         // and run each solo — individually panic-guarded, individually
         // reported.
         Err(_) => {
-            for (id, _) in &members {
+            for (id, _, _) in &members {
                 run_whole(inner, *id);
             }
         }
@@ -825,15 +1082,22 @@ fn run_batch(inner: &SchedInner, ids: Vec<JobId>) {
 /// Execute one file task of a decomposed dataset job; the worker that
 /// completes the job's last file runs the deterministic merge.
 fn run_file(inner: &SchedInner, id: JobId, index: usize) {
-    let sub = {
+    let (sub, ctl) = {
         let mut jobs = inner.jobs.lock().unwrap();
         match jobs.get_mut(&id) {
+            // Cancelled (or expired) while other file tasks ran: the
+            // remaining queued tasks are no-ops.
+            Some(entry) if entry.state.is_terminal() => return,
             Some(entry) => {
                 if entry.state == JobState::Queued {
                     entry.state = JobState::Running;
                 }
                 let file = entry.files[index].clone();
-                entry.query.for_file(&file, format!("part{index:05}.troot"))
+                // The job's deadline covers the whole dataset: this
+                // file's view starts where the accumulated virtual
+                // latency of finished files left off.
+                let ctl = entry.ctl.at_offset(entry.latency);
+                (entry.query.for_file(&file, format!("part{index:05}.troot")), ctl)
             }
             // Forgotten while queued: nothing to do.
             None => return,
@@ -842,7 +1106,7 @@ fn run_file(inner: &SchedInner, id: JobId, index: usize) {
     let job_dir = inner.cfg.work_dir.join(format!("job{id}_part{index}"));
     // Stage the part on disk (outside the lock): the table holds only
     // its path until the merge.
-    let outcome = execute_query(inner, sub, &job_dir).and_then(|(report, bytes)| {
+    let outcome = execute_query(inner, sub, &job_dir, &ctl).and_then(|(report, bytes)| {
         let part_path = inner.cfg.work_dir.join(format!("job{id}_part{index}.part"));
         std::fs::write(&part_path, &bytes)?;
         Ok((report, part_path))
@@ -851,6 +1115,14 @@ fn run_file(inner: &SchedInner, id: JobId, index: usize) {
     let Some(entry) = jobs.get_mut(&id) else {
         return; // forgotten mid-run
     };
+    if entry.state.is_terminal() {
+        // Another file task already ended the job (cancel / deadline):
+        // drop this part's output and leave the terminal state alone.
+        if let Ok((_, part_path)) = outcome {
+            let _ = std::fs::remove_file(part_path);
+        }
+        return;
+    }
     match outcome {
         Ok((report, part_path)) => {
             entry.parts[index] = Some(part_path);
@@ -862,6 +1134,21 @@ fn run_file(inner: &SchedInner, id: JobId, index: usize) {
             entry.cache_misses += report.timeline.counter("basket_cache_misses");
             entry.baskets_pruned += report.timeline.counter("baskets_pruned");
             entry.baskets_scanned += report.timeline.counter("baskets_scanned");
+            entry.retries += report.timeline.counter("retries");
+            entry.faults_injected += report.timeline.counter("faults_injected");
+            entry.backoff_us += report.timeline.counter("backoff_us");
+        }
+        // Cancellation / deadline overrun is job-fatal, not a
+        // fault-isolated per-file failure: flip the job terminal now,
+        // drop the staged parts, and let the remaining queued file
+        // tasks no-op against the terminal state.
+        Err(e) if terminal_state_of(&e) != JobState::Failed => {
+            fail_entry(entry, &e);
+            for part in entry.parts.iter_mut().filter_map(|p| p.take()) {
+                let _ = std::fs::remove_file(part);
+            }
+            inner.done_cv.notify_all();
+            return;
         }
         Err(e) => entry.file_errors.push((index, e.to_string())),
     }
@@ -914,6 +1201,7 @@ fn run_file(inner: &SchedInner, id: JobId, index: usize) {
             entry.error = Some(e.to_string());
         }
     }
+    inner.done_cv.notify_all();
     enforce_retention(&mut jobs, inner.cfg.retained_jobs);
 }
 
@@ -1260,6 +1548,121 @@ mod tests {
             format!("{err}").contains("can host shared scans"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn cancel_while_queued_is_immediate_and_idempotent() {
+        let root = dataset("cancelq");
+        let mut cfg = ServeConfig::new(&root);
+        // No workers: the job deterministically stays Queued until the
+        // cancel lands.
+        cfg.workers = 0;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let id = sched.submit(gen::higgs_query("events.troot", "out.troot")).unwrap();
+        let status = sched.cancel(id).unwrap();
+        assert_eq!(status.state, JobState::Cancelled);
+        assert_eq!(status.cancelled, 1);
+        assert!(status.error.as_deref().unwrap().contains("cancelled"));
+        // Terminal: wait returns immediately, the result is an error,
+        // and cancelling again changes nothing.
+        assert_eq!(sched.wait(id).unwrap().state, JobState::Cancelled);
+        assert!(sched.fetch_result(id).is_err());
+        let again = sched.cancel(id).unwrap();
+        assert_eq!(again.state, JobState::Cancelled);
+        assert_eq!(again.cancelled, 1);
+        assert!(sched.cancel(9999).is_err(), "unknown ids still error");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn cancelled_window_member_is_dropped_from_its_batch() {
+        let root = dataset("cancelwin");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 2;
+        // Window far longer than the test: flushes only via
+        // MAX_BATCH_MEMBERS, so the sequencing is deterministic.
+        cfg.batch_window_ms = 60_000;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let victim = sched.submit(cut_job("MET_pt > 25", "v.troot")).unwrap();
+        let status = sched.cancel(victim).unwrap();
+        assert_eq!(status.state, JobState::Cancelled);
+        // Fill a fresh window to the brim; it flushes immediately as
+        // one batch that must not contain the cancelled member.
+        let ids: Vec<JobId> = (0..MAX_BATCH_MEMBERS)
+            .map(|i| sched.submit(cut_job("MET_pt > 25", &format!("w{i}.troot"))).unwrap())
+            .collect();
+        for &id in &ids {
+            let status = sched.wait(id).unwrap();
+            assert_eq!(status.state, JobState::Done, "{:?}", status.error);
+            assert_eq!(status.batch_members, MAX_BATCH_MEMBERS as u64);
+        }
+        let victim = sched.status(victim).unwrap();
+        assert_eq!(victim.state, JobState::Cancelled);
+        assert_eq!(victim.batch_id, 0, "cancelled member must not join the batch");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn deadline_exceeded_releases_the_worker_slot() {
+        let root = dataset("deadline");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 1;
+        // Every read stalls 60 virtual seconds; a 1-second deadline
+        // trips at the first basket-group boundary. The stall is
+        // virtual time, so the no-deadline job still finishes fast in
+        // real time — proving the one worker slot was released.
+        cfg.deployment.fault.kind = crate::coordinator::FaultKind::StallRead;
+        cfg.deployment.fault.fail_prob = 1.0;
+        cfg.deployment.fault.stall_s = 60.0;
+        cfg.deployment.fault.seed = 7;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let doomed = sched
+            .submit_with_deadline(gen::higgs_query("events.troot", "doomed.troot"), 1_000)
+            .unwrap();
+        let status = sched.wait(doomed).unwrap();
+        assert_eq!(status.state, JobState::DeadlineExceeded, "{:?}", status.error);
+        assert_eq!(status.deadline_exceeded, 1);
+        assert!(status.error.as_deref().unwrap().contains("deadline"), "{:?}", status.error);
+        assert!(sched.fetch_result(doomed).is_err());
+        let free = sched
+            .submit(gen::higgs_query("events.troot", "free.troot"))
+            .unwrap();
+        let status = sched.wait(free).unwrap();
+        assert_eq!(status.state, JobState::Done, "{:?}", status.error);
+        assert!(status.faults_injected > 0, "stalls were injected");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn drain_finish_completes_queued_work_then_rejects_submissions() {
+        let root = dataset("drainfin");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 1;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let ids: Vec<JobId> = (0..3)
+            .map(|i| sched.submit(gen::higgs_query("events.troot", &format!("d{i}.troot"))).unwrap())
+            .collect();
+        sched.drain(DrainPolicy::Finish);
+        for id in ids {
+            assert_eq!(sched.status(id).unwrap().state, JobState::Done);
+        }
+        let err = sched.submit(gen::higgs_query("events.troot", "late.troot")).unwrap_err();
+        assert!(format!("{err}").contains("retry later"), "{err}");
+        assert!(!sched.is_accepting());
+    }
+
+    #[test]
+    fn drain_cancel_terminates_queued_work_without_workers() {
+        let root = dataset("draincan");
+        let mut cfg = ServeConfig::new(&root);
+        cfg.workers = 0;
+        let sched = SkimScheduler::new(cfg).unwrap();
+        let a = sched.submit(gen::higgs_query("events.troot", "a.troot")).unwrap();
+        let b = sched.submit(gen::higgs_query("events.troot", "b.troot")).unwrap();
+        sched.drain(DrainPolicy::Cancel);
+        assert_eq!(sched.status(a).unwrap().state, JobState::Cancelled);
+        assert_eq!(sched.status(b).unwrap().state, JobState::Cancelled);
+        assert!(sched.submit(gen::higgs_query("events.troot", "c.troot")).is_err());
     }
 
     #[test]

@@ -285,8 +285,7 @@ mod tests {
         drop(file);
         drop(client);
 
-        stop.store(true, std::sync::atomic::Ordering::Relaxed);
-        handle.join().unwrap();
+        crate::xrootd::server::stop_serving(addr, &stop, handle);
     }
 
     #[test]

@@ -8,6 +8,14 @@ use crate::{Error, Result};
 /// Upper bound on one frame's payload (read and write side).
 pub const MAX_FRAME: usize = 512 * 1024 * 1024;
 
+/// Tighter bound servers apply to **inbound request** frames. Requests
+/// are small (paths, queries, job ids) — only responses legitimately
+/// carry file-sized payloads, plus `Put` uploads of filtered outputs.
+/// A remote peer claiming a larger request is malformed or malicious;
+/// the server drops that connection without reading (or allocating)
+/// the claimed length.
+pub const MAX_REQUEST_FRAME: usize = 64 * 1024 * 1024;
+
 /// Client → server request (see the module docs for the framing).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Request {
@@ -56,6 +64,10 @@ pub enum Request {
     SubmitQuery {
         /// The JSON query payload ([`crate::query::SkimQuery`]).
         query_json: String,
+        /// Virtual-time deadline in milliseconds (`0` = none): the job
+        /// ends [`crate::serve::JobState::DeadlineExceeded`] once its
+        /// modeled latency passes this.
+        deadline_ms: u64,
     },
     /// Poll a submitted job; answered by [`Response::JobState`].
     JobStatus {
@@ -75,6 +87,15 @@ pub enum Request {
     ListCatalog {
         /// Dataset-spec spelling ([`crate::query::DatasetSpec`]).
         spec: String,
+    },
+    /// Cancel a submitted job ([`crate::serve::SkimScheduler::cancel`]
+    /// semantics: queued jobs flip terminal immediately, running jobs
+    /// stop at the next basket-group boundary, terminal jobs are
+    /// untouched). Answered by [`Response::JobState`] with the
+    /// post-cancel status.
+    CancelJob {
+        /// Id from [`Response::JobAccepted`].
+        job: u64,
     },
 }
 
@@ -146,7 +167,18 @@ pub enum Response {
         files_done: u64,
         /// Files in the job's dataset (0 for single-file jobs).
         files_total: u64,
-        /// Failure message (empty unless the job failed).
+        /// Resubmission attempts beyond the first across the job's
+        /// retry loops.
+        retries: u64,
+        /// Faults injected into the job's reads (chaos runs only).
+        faults_injected: u64,
+        /// Retry backoff charged to virtual time, microseconds.
+        backoff_us: u64,
+        /// 1 when the job ended cancelled.
+        cancelled: u64,
+        /// 1 when the job ended deadline-exceeded.
+        deadline_exceeded: u64,
+        /// Failure message (empty unless the job ended with an error).
         msg: String,
         /// Per-file failure detail (`"<path>: <error>"`) for
         /// fault-isolated dataset file failures.
@@ -261,11 +293,12 @@ impl Request {
                 put_str(&mut out, path);
                 put_bytes(&mut out, data);
             }
-            Request::SubmitQuery { query_json } => {
+            Request::SubmitQuery { query_json, deadline_ms } => {
                 // u32-length bytes, not a u16 string: query payloads
                 // with large branch lists can exceed 64 KiB.
                 out.push(7);
                 put_bytes(&mut out, query_json.as_bytes());
+                out.extend_from_slice(&deadline_ms.to_le_bytes());
             }
             Request::JobStatus { job } => {
                 out.push(8);
@@ -278,6 +311,10 @@ impl Request {
             Request::ListCatalog { spec } => {
                 out.push(10);
                 put_str(&mut out, spec);
+            }
+            Request::CancelJob { job } => {
+                out.push(11);
+                out.extend_from_slice(&job.to_le_bytes());
             }
         }
         out
@@ -307,10 +344,12 @@ impl Request {
             7 => Request::SubmitQuery {
                 query_json: String::from_utf8(c.bytes()?)
                     .map_err(|_| Error::protocol("invalid utf-8 in query"))?,
+                deadline_ms: c.u64()?,
             },
             8 => Request::JobStatus { job: c.u64()? },
             9 => Request::FetchResult { job: c.u64()? },
             10 => Request::ListCatalog { spec: c.str()? },
+            11 => Request::CancelJob { job: c.u64()? },
             op => return Err(Error::protocol(format!("bad request opcode {op}"))),
         };
         if !c.finished() {
@@ -368,6 +407,11 @@ impl Response {
                 batch_members,
                 files_done,
                 files_total,
+                retries,
+                faults_injected,
+                backoff_us,
+                cancelled,
+                deadline_exceeded,
                 msg,
                 file_errors,
             } => {
@@ -385,6 +429,11 @@ impl Response {
                 out.extend_from_slice(&batch_members.to_le_bytes());
                 out.extend_from_slice(&files_done.to_le_bytes());
                 out.extend_from_slice(&files_total.to_le_bytes());
+                out.extend_from_slice(&retries.to_le_bytes());
+                out.extend_from_slice(&faults_injected.to_le_bytes());
+                out.extend_from_slice(&backoff_us.to_le_bytes());
+                out.extend_from_slice(&cancelled.to_le_bytes());
+                out.extend_from_slice(&deadline_exceeded.to_le_bytes());
                 put_str(&mut out, msg);
                 // u32 count: thousand-file catalogs can fail per file
                 // far beyond a u16's range.
@@ -439,6 +488,11 @@ impl Response {
                 let batch_members = c.u64()?;
                 let files_done = c.u64()?;
                 let files_total = c.u64()?;
+                let retries = c.u64()?;
+                let faults_injected = c.u64()?;
+                let backoff_us = c.u64()?;
+                let cancelled = c.u64()?;
+                let deadline_exceeded = c.u64()?;
                 let msg = c.str()?;
                 let n = c.u32()? as usize;
                 if n > 1_000_000 {
@@ -462,6 +516,11 @@ impl Response {
                     batch_members,
                     files_done,
                     files_total,
+                    retries,
+                    faults_injected,
+                    backoff_us,
+                    cancelled,
+                    deadline_exceeded,
                     msg,
                     file_errors,
                 }
@@ -501,11 +560,22 @@ pub fn write_frame(w: &mut impl std::io::Write, payload: &[u8]) -> Result<()> {
 
 /// Read one length-prefixed frame from a stream.
 pub fn read_frame(r: &mut impl std::io::Read) -> Result<Vec<u8>> {
+    read_frame_capped(r, MAX_FRAME)
+}
+
+/// [`read_frame`] with an explicit payload cap. Servers pass
+/// [`MAX_REQUEST_FRAME`] so a hostile header cannot make them allocate
+/// response-sized buffers; the claimed length is rejected **before**
+/// any allocation, and the caller drops the connection (the stream is
+/// unrecoverable mid-frame).
+pub fn read_frame_capped(r: &mut impl std::io::Read, cap: usize) -> Result<Vec<u8>> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
     let len = u32::from_le_bytes(len) as usize;
-    if len > MAX_FRAME {
-        return Err(Error::protocol("incoming frame too large"));
+    if len > cap {
+        return Err(Error::protocol(format!(
+            "incoming frame too large ({len} bytes, cap {cap})"
+        )));
     }
     let mut buf = vec![0u8; len];
     r.read_exact(&mut buf)?;
@@ -517,9 +587,11 @@ mod tests {
     use super::*;
     use crate::util::prop_check;
 
-    #[test]
-    fn request_roundtrip() {
-        let reqs = [
+    /// One of every request shape — shared by the roundtrip and the
+    /// truncation/garbage property tests so new opcodes are covered by
+    /// both automatically.
+    fn sample_requests() -> Vec<Request> {
+        vec![
             Request::Open { path: "data/file.troot".into() },
             Request::Stat { fd: 7 },
             Request::Read { fd: 7, offset: 1 << 40, len: 12345 },
@@ -527,21 +599,26 @@ mod tests {
             Request::ReadV { fd: 0, ranges: vec![] },
             Request::Close { fd: 7 },
             Request::Put { path: "out.troot".into(), data: vec![1, 2, 3] },
-            Request::SubmitQuery { query_json: "{\"input\": \"f\"}".into() },
-            Request::SubmitQuery { query_json: "x".repeat(100_000) },
+            Request::SubmitQuery { query_json: "{\"input\": \"f\"}".into(), deadline_ms: 0 },
+            Request::SubmitQuery { query_json: "x".repeat(100_000), deadline_ms: 30_000 },
             Request::JobStatus { job: u64::MAX },
             Request::FetchResult { job: 12 },
             Request::ListCatalog { spec: "store/*.troot".into() },
             Request::ListCatalog { spec: "catalog:run2018".into() },
-        ];
-        for r in reqs {
+            Request::CancelJob { job: 99 },
+        ]
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        for r in sample_requests() {
             assert_eq!(Request::decode(&r.encode()).unwrap(), r);
         }
     }
 
-    #[test]
-    fn response_roundtrip() {
-        let resps = [
+    /// One of every response shape (see [`sample_requests`]).
+    fn sample_responses() -> Vec<Response> {
+        vec![
             Response::Opened { fd: 1, size: 999 },
             Response::Stats { size: 0 },
             Response::Data { data: vec![0; 100] },
@@ -563,11 +640,16 @@ mod tests {
                 batch_members: 3,
                 files_done: 0,
                 files_total: 0,
+                retries: 2,
+                faults_injected: 4,
+                backoff_us: 750_000,
+                cancelled: 0,
+                deadline_exceeded: 0,
                 msg: String::new(),
                 file_errors: Vec::new(),
             },
             Response::JobState {
-                state: 1,
+                state: 5,
                 n_events: 600,
                 n_pass: 3,
                 latency_us: 1,
@@ -580,13 +662,22 @@ mod tests {
                 batch_members: 0,
                 files_done: 2,
                 files_total: 4,
-                msg: String::new(),
+                retries: 0,
+                faults_injected: 0,
+                backoff_us: 0,
+                cancelled: 0,
+                deadline_exceeded: 1,
+                msg: "deadline exceeded: 5.0s".into(),
                 file_errors: vec!["store/bad.troot: truncated".into()],
             },
             Response::Listing { files: vec!["a.troot".into(), "store/b.troot".into()] },
             Response::Listing { files: Vec::new() },
-        ];
-        for r in resps {
+        ]
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        for r in sample_responses() {
             assert_eq!(Response::decode(&r.encode()).unwrap(), r);
         }
     }
@@ -618,6 +709,71 @@ mod tests {
             enc[i] ^= 1 << rng.below(8);
             let _ = Response::decode(&enc);
         });
+    }
+
+    /// Every opcode, every truncation point, plus seeded byte garbage:
+    /// decode must return an error or a value — never panic, never
+    /// allocate absurdly. (Allocation bombs are separately bounded by
+    /// the count caps in decode and [`MAX_REQUEST_FRAME`] at the
+    /// framing layer.)
+    #[test]
+    fn prop_all_opcodes_survive_truncation_and_garbage() {
+        for r in sample_requests() {
+            let enc = r.encode();
+            for cut in 0..enc.len() {
+                let _ = Request::decode(&enc[..cut]);
+            }
+        }
+        for r in sample_responses() {
+            let enc = r.encode();
+            for cut in 0..enc.len() {
+                let _ = Response::decode(&enc[..cut]);
+            }
+        }
+        prop_check("proto-fuzz-all-ops", 200, |rng| {
+            // Mutate a randomly chosen sample of either direction.
+            let reqs = sample_requests();
+            let mut enc = reqs[rng.below(reqs.len() as u32) as usize].encode();
+            for _ in 0..=rng.below(4) {
+                let i = rng.below(enc.len() as u32) as usize;
+                enc[i] ^= 1 << rng.below(8);
+            }
+            let _ = Request::decode(&enc);
+            let resps = sample_responses();
+            let mut enc = resps[rng.below(resps.len() as u32) as usize].encode();
+            for _ in 0..=rng.below(4) {
+                let i = rng.below(enc.len() as u32) as usize;
+                enc[i] ^= 1 << rng.below(8);
+            }
+            let _ = Response::decode(&enc);
+            // Pure garbage of random length, random opcode byte first.
+            let n = rng.below(64) as usize;
+            let mut junk = Vec::with_capacity(n + 1);
+            junk.push(rng.below(32) as u8);
+            for _ in 0..n {
+                junk.push(rng.below(256) as u8);
+            }
+            let _ = Request::decode(&junk);
+            let _ = Response::decode(&junk);
+        });
+    }
+
+    #[test]
+    fn request_frame_cap_rejects_oversized_claims() {
+        // A header claiming more than MAX_REQUEST_FRAME is rejected by
+        // the capped reader servers use, while the general reader (for
+        // responses) still accepts it.
+        let claimed = (MAX_REQUEST_FRAME + 1) as u32;
+        let mut hdr = claimed.to_le_bytes().to_vec();
+        hdr.extend_from_slice(&[0; 16]);
+        let mut r = hdr.as_slice();
+        let err = read_frame_capped(&mut r, MAX_REQUEST_FRAME).unwrap_err();
+        assert!(format!("{err}").contains("frame too large"), "{err}");
+        // Small frames pass through the capped reader unchanged.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"ok").unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_frame_capped(&mut r, MAX_REQUEST_FRAME).unwrap(), b"ok");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! disk model is applied, which is exactly why `readv` from TTreeCache
 //! (or the DPU) beats per-basket random reads in Figure 5a.
 
-use super::proto::{read_frame, write_frame, Request, Response};
+use super::proto::{read_frame_capped, write_frame, Request, Response, MAX_REQUEST_FRAME};
 use crate::metrics::{Stage, Timeline};
 use crate::net::DiskModel;
 use crate::{Error, Result};
@@ -204,25 +204,31 @@ pub fn serve_requests_tcp<H>(
 where
     H: Fn(Request) -> Response + Send + Sync + Clone + 'static,
 {
-    listener.set_nonblocking(true).expect("set_nonblocking");
     std::thread::spawn(move || {
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-        while !stop.load(Ordering::Relaxed) {
+        // Blocking accept: the thread sleeps in the kernel until a
+        // client connects — no poll interval, no added accept latency.
+        // Stopping therefore needs a wakeup: use [`stop_serving`]
+        // (flag + self-connection) rather than flipping `stop` alone.
+        loop {
+            let accepted = listener.accept();
+            if stop.load(Ordering::SeqCst) {
+                break; // `accepted` may be the stop poke — drop it
+            }
             // Reap finished connections so a long-lived service does
             // not accumulate one dead JoinHandle per client.
             conns.retain(|c| !c.is_finished());
-            match listener.accept() {
+            match accepted {
                 Ok((stream, _)) => {
-                    stream.set_nonblocking(false).ok();
                     let handle = handle.clone();
                     let stop = stop.clone();
                     conns.push(std::thread::spawn(move || {
                         serve_connection(stream, stop, handle);
                     }));
                 }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(2));
-                }
+                // Transient per-connection failures (aborted handshake,
+                // fd pressure) must not kill the acceptor.
+                Err(e) if e.kind() == std::io::ErrorKind::ConnectionAborted => continue,
                 Err(_) => break,
             }
         }
@@ -230,6 +236,24 @@ where
             let _ = c.join();
         }
     })
+}
+
+/// Stop a [`serve_requests_tcp`] loop and join it: flip the stop flag,
+/// then poke the listener with throwaway connections until the accept
+/// thread (blocked in the kernel) wakes, observes the flag and exits.
+/// The retry loop makes the wakeup robust to a poke racing ahead of
+/// the flag store.
+pub fn stop_serving(
+    addr: impl std::net::ToSocketAddrs,
+    stop: &AtomicBool,
+    handle: std::thread::JoinHandle<()>,
+) {
+    stop.store(true, Ordering::SeqCst);
+    while !handle.is_finished() {
+        let _ = std::net::TcpStream::connect(&addr);
+        std::thread::park_timeout(std::time::Duration::from_millis(1));
+    }
+    let _ = handle.join();
 }
 
 fn serve_connection<H>(mut stream: std::net::TcpStream, stop: Arc<AtomicBool>, handle: H)
@@ -245,7 +269,7 @@ where
         if stop.load(Ordering::Relaxed) {
             return;
         }
-        let frame = match read_frame(&mut stream) {
+        let frame = match read_frame_capped(&mut stream, MAX_REQUEST_FRAME) {
             Ok(f) => f,
             Err(crate::Error::Io(e))
                 if matches!(
@@ -255,8 +279,18 @@ where
             {
                 continue; // idle: re-check stop
             }
+            // Oversized length claim: nothing was allocated, but the
+            // stream is desynchronized mid-frame — answer best-effort
+            // and drop only this connection; the server keeps serving
+            // every other client.
+            Err(crate::Error::Protocol(msg)) => {
+                let _ = write_frame(&mut stream, &Response::Error { msg }.encode());
+                return;
+            }
             Err(_) => return, // disconnect
         };
+        // A malformed payload inside an intact frame leaves the stream
+        // synchronized: reply with the decode error and keep serving.
         let resp = match Request::decode(&frame) {
             Ok(req) => handle(req),
             Err(e) => Response::Error { msg: e.to_string() },
@@ -275,6 +309,7 @@ pub fn catalog_has(root: &Path, rel: &str) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::xrootd::proto::read_frame;
 
     fn setup() -> (XrdServer, std::path::PathBuf) {
         let dir = std::env::temp_dir().join(format!("xrd_srv_{}", std::process::id()));
@@ -384,7 +419,45 @@ mod tests {
             other => panic!("{other:?}"),
         }
         drop(stream);
-        stop.store(true, Ordering::Relaxed);
-        handle.join().unwrap();
+        stop_serving(addr, &stop, handle);
+    }
+
+    #[test]
+    fn oversized_frame_drops_one_connection_not_the_server() {
+        let (srv, _dir) = setup();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = srv.serve_tcp(listener, stop.clone());
+
+        // A hostile header claiming a 4 GiB request: the server answers
+        // with a protocol error and hangs up without allocating.
+        use std::io::{Read, Write};
+        let mut bad = std::net::TcpStream::connect(addr).unwrap();
+        bad.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        bad.flush().unwrap();
+        let frame = read_frame(&mut bad).unwrap();
+        match Response::decode(&frame).unwrap() {
+            Response::Error { msg } => assert!(msg.contains("frame too large"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        let mut probe = [0u8; 1];
+        assert_eq!(bad.read(&mut probe).unwrap(), 0, "connection must be closed");
+
+        // A malformed payload in an intact frame keeps the connection.
+        let mut ok = std::net::TcpStream::connect(addr).unwrap();
+        write_frame(&mut ok, &[0xEE, 1, 2, 3]).unwrap();
+        match Response::decode(&read_frame(&mut ok).unwrap()).unwrap() {
+            Response::Error { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        write_frame(&mut ok, &Request::Open { path: "hello.bin".into() }.encode()).unwrap();
+        match Response::decode(&read_frame(&mut ok).unwrap()).unwrap() {
+            Response::Opened { size, .. } => assert_eq!(size, 16),
+            other => panic!("{other:?}"),
+        }
+
+        drop(ok);
+        stop_serving(addr, &stop, handle);
     }
 }

@@ -1,0 +1,403 @@
+//! Chaos matrix: every fault kind × engine placement × serving
+//! surface, with fixed seeds so each cell is deterministic.
+//!
+//! Cell contract:
+//! * **transient faults** (active on the first attempt only) must
+//!   recover through the retry policy and produce output bytes
+//!   identical to a fault-free run — the fault is invisible except in
+//!   the `retries`/`faults_injected` counters;
+//! * **stalled reads under a deadline** must end in the
+//!   `deadline-exceeded` terminal state, and the worker slot they held
+//!   must be released (a follow-up job on the same service completes);
+//! * **hopeless faults** (active on every attempt) must exhaust the
+//!   retry budget and surface a terminal failure with error detail;
+//! * nothing anywhere may panic — every cell ends in an asserted
+//!   terminal state.
+
+use skimroot::compress::Codec;
+use skimroot::coordinator::{Deployment, FaultKind, FaultPlan};
+use skimroot::dpu::http::{http_request, http_request_with_headers, DpuHttpServer};
+use skimroot::gen::{self, GenConfig};
+use skimroot::metrics::Timeline;
+use skimroot::net::{DiskModel, LinkModel};
+use skimroot::query::SkimQuery;
+use skimroot::serve::{ServeConfig, SkimScheduler, SkimService, SkimServiceClient};
+use skimroot::{Error, SkimJob};
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+/// The corruption-flavored kinds that abort an attempt. StallRead is
+/// exercised separately (it never errors — it charges virtual time and
+/// is only terminal through a deadline).
+const FAILING_KINDS: [FaultKind; 4] = [
+    FaultKind::ReadError,
+    FaultKind::CorruptFrame,
+    FaultKind::DecompressCorrupt,
+    FaultKind::FailAtRead,
+];
+
+const PLACEMENTS: [&str; 2] = ["client", "dpu"];
+
+fn workdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("chaos_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn dataset() -> PathBuf {
+    static PATH: std::sync::OnceLock<PathBuf> = std::sync::OnceLock::new();
+    PATH.get_or_init(|| {
+        let storage = workdir("storage");
+        let cfg = GenConfig {
+            n_events: 400,
+            target_branches: 60,
+            n_hlt: 10,
+            basket_events: 100,
+            codec: Codec::Lz4,
+            seed: 71,
+        };
+        gen::generate(&cfg, &storage.join("events.troot")).unwrap();
+        storage
+    })
+    .clone()
+}
+
+fn query(out: &str) -> SkimQuery {
+    SkimQuery::new("events.troot", out)
+        .keep(&["MET_pt", "nJet", "Jet_pt"])
+        .with_cut_str("MET_pt > 25 && nJet >= 1")
+        .unwrap()
+}
+
+/// Deployment for one matrix cell: the named placement with an ideal
+/// disk (all timing comes from the fault plan) and the given faults.
+fn deployment(placement: &str, fault: FaultPlan) -> Deployment {
+    let mut dep = match placement {
+        "client" => Deployment::client_opt(LinkModel::dedicated_100g()),
+        _ => Deployment::skim_root(LinkModel::local()),
+    };
+    dep.disk = DiskModel::ideal();
+    dep.fault = fault;
+    dep
+}
+
+/// Fault active on the first attempt only: the retry must recover.
+fn transient(kind: FaultKind, seed: u64) -> FaultPlan {
+    FaultPlan {
+        kind,
+        fail_prob: 1.0,
+        fail_at_read: 2,
+        fail_attempts: 1,
+        max_retries: 3,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Fault active on every attempt: the retry budget must exhaust.
+fn hopeless(kind: FaultKind, seed: u64) -> FaultPlan {
+    FaultPlan {
+        kind,
+        fail_prob: 1.0,
+        fail_at_read: 2,
+        max_retries: 2,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Every read stalls 120 virtual seconds — harmless without a
+/// deadline, deterministically fatal with one.
+fn stall(seed: u64) -> FaultPlan {
+    FaultPlan {
+        kind: FaultKind::StallRead,
+        fail_prob: 1.0,
+        stall_s: 120.0,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Uniform result of one matrix cell, whatever surface produced it.
+struct Outcome {
+    /// Terminal [`skimroot::serve::JobState`] name.
+    state: String,
+    /// Output bytes (`done` cells only).
+    bytes: Option<Vec<u8>>,
+    retries: u64,
+    faults: u64,
+    error: String,
+}
+
+// ---------------- surface drivers ------------------------------------
+
+/// Surface 1: the one-shot in-process `SkimJob` facade.
+fn run_facade(dep: Deployment, deadline_ms: u64, tag: &str) -> Outcome {
+    let mut job = SkimJob::new(query(&format!("{tag}.troot")))
+        .storage(dataset())
+        .client_dir(workdir(tag))
+        .deployment(dep);
+    if deadline_ms > 0 {
+        job = job.deadline_ms(deadline_ms);
+    }
+    match job.run() {
+        Ok(report) => Outcome {
+            state: "done".into(),
+            bytes: Some(std::fs::read(&report.result.output_path).unwrap()),
+            retries: report.timeline.counter("retries"),
+            faults: report.timeline.counter("faults_injected"),
+            error: String::new(),
+        },
+        Err(e) => Outcome {
+            state: match e {
+                Error::DeadlineExceeded(_) => "deadline-exceeded".into(),
+                Error::Cancelled(_) => "cancelled".into(),
+                _ => "failed".into(),
+            },
+            bytes: None,
+            retries: 0,
+            faults: 0,
+            error: e.to_string(),
+        },
+    }
+}
+
+/// Surface 2: the multi-tenant TCP service. Runs the cell job, then a
+/// follow-up job without a deadline to prove the single worker slot
+/// was released.
+fn run_tcp(dep: Deployment, deadline_ms: u64, tag: &str) -> (Outcome, Outcome) {
+    let mut cfg = ServeConfig::new(dataset());
+    cfg.work_dir = workdir(&format!("{tag}_work"));
+    cfg.workers = 1;
+    cfg.deployment = dep;
+    let service = SkimService::new(cfg).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = service.serve_tcp(listener, stop.clone());
+    let client = SkimServiceClient::connect(&addr).unwrap();
+
+    let run_one = |out: &str, deadline_ms: u64| -> Outcome {
+        let job = client
+            .submit_with_deadline(&query(out), deadline_ms)
+            .unwrap();
+        let wait = client.wait_result(job);
+        let status = client.status(job).unwrap();
+        Outcome {
+            state: status.state.name().into(),
+            bytes: wait.ok().map(|(_, bytes)| bytes),
+            retries: status.retries,
+            faults: status.faults_injected,
+            error: status.error.unwrap_or_default(),
+        }
+    };
+    let cell = run_one(&format!("{tag}.troot"), deadline_ms);
+    let followup = run_one(&format!("{tag}_free.troot"), 0);
+
+    skimroot::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
+    service.shutdown();
+    (cell, followup)
+}
+
+/// Pull the integer value of `key` out of a flat status JSON body.
+fn json_u64(text: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let start = text.find(&pat).unwrap_or_else(|| panic!("{key} missing in {text}"));
+    let rest = &text[start + pat.len()..];
+    let end = rest.find([',', '}']).unwrap();
+    rest[..end].trim().parse().unwrap()
+}
+
+/// Pull the string value of `key` out of a flat status JSON body.
+fn json_str(text: &str, key: &str) -> String {
+    let pat = format!("\"{key}\":\"");
+    let start = text.find(&pat).unwrap_or_else(|| panic!("{key} missing in {text}"));
+    let rest = &text[start + pat.len()..];
+    rest[..rest.find('"').unwrap()].to_string()
+}
+
+/// Surface 3: the DPU HTTP jobs API. Same shape as [`run_tcp`]:
+/// the cell job, then an undeadlined follow-up on the freed worker.
+fn run_http(dep: Deployment, deadline_ms: u64, tag: &str) -> (Outcome, Outcome) {
+    let mut cfg = ServeConfig::new(dataset());
+    cfg.work_dir = workdir(&format!("{tag}_work"));
+    cfg.workers = 1;
+    cfg.deployment = dep;
+    let sched = SkimScheduler::new(cfg).unwrap();
+    let server = DpuHttpServer::new(|_q: &SkimQuery, _tl: &Timeline| {
+        Err(skimroot::Error::Engine("sync path unused".into()))
+    })
+    .with_scheduler(sched.clone());
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = server.serve(listener, stop.clone());
+
+    let run_one = |out: &str, deadline_ms: u64| -> Outcome {
+        let payload = query(out).to_json().to_string();
+        let value = format!("{deadline_ms}");
+        let header = [("X-Skim-Deadline-Ms", value.as_str())];
+        let extra: &[(&str, &str)] = if deadline_ms > 0 { &header } else { &[] };
+        let (code, _, body) =
+            http_request_with_headers(&addr, "POST", "/jobs", extra, payload.as_bytes())
+                .unwrap();
+        assert_eq!(code, 202, "{}", String::from_utf8_lossy(&body));
+        let text = String::from_utf8(body).unwrap();
+        let id: u64 =
+            text.trim_start_matches("{\"job\":").trim_end_matches('}').parse().unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        let text = loop {
+            let (code, _, body) =
+                http_request(&addr, "GET", &format!("/jobs/{id}"), b"").unwrap();
+            assert_eq!(code, 200);
+            let text = String::from_utf8(body).unwrap();
+            let state = json_str(&text, "state");
+            if state != "queued" && state != "running" {
+                break text;
+            }
+            assert!(std::time::Instant::now() < deadline, "cell never terminal: {text}");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        let state = json_str(&text, "state");
+        let bytes = if state == "done" {
+            let (code, _, bytes) =
+                http_request(&addr, "GET", &format!("/jobs/{id}/result"), b"").unwrap();
+            assert_eq!(code, 200);
+            Some(bytes)
+        } else {
+            None
+        };
+        Outcome {
+            state,
+            bytes,
+            retries: json_u64(&text, "retries"),
+            faults: json_u64(&text, "faults_injected"),
+            error: if text.contains("\"error\":\"") {
+                json_str(&text, "error")
+            } else {
+                String::new()
+            },
+        }
+    };
+    let cell = run_one(&format!("{tag}.troot"), deadline_ms);
+    let followup = run_one(&format!("{tag}_free.troot"), 0);
+
+    skimroot::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
+    sched.shutdown();
+    (cell, followup)
+}
+
+// ---------------- the matrix -----------------------------------------
+
+/// Fault-free reference bytes per placement, via the facade.
+fn clean_reference(placement: &str) -> Vec<u8> {
+    let out = run_facade(
+        deployment(placement, FaultPlan::default()),
+        0,
+        &format!("clean_{placement}"),
+    );
+    assert_eq!(out.state, "done", "clean {placement} run failed: {}", out.error);
+    assert_eq!(out.faults, 0);
+    out.bytes.unwrap()
+}
+
+fn assert_recovered(cell: &Outcome, reference: &[u8], label: &str) {
+    assert_eq!(cell.state, "done", "{label}: {}", cell.error);
+    assert!(cell.retries >= 1, "{label}: fault did not cost a retry");
+    assert!(cell.faults >= 1, "{label}: no fault was injected");
+    assert_eq!(
+        cell.bytes.as_deref().unwrap(),
+        reference,
+        "{label}: recovered bytes diverged from the clean run"
+    );
+}
+
+fn assert_expired(cell: &Outcome, label: &str) {
+    assert_eq!(cell.state, "deadline-exceeded", "{label}: {}", cell.error);
+    assert!(
+        cell.error.contains("deadline"),
+        "{label}: error detail must name the deadline, got '{}'",
+        cell.error
+    );
+}
+
+fn assert_slot_released(followup: &Outcome, reference: &[u8], label: &str) {
+    assert_eq!(
+        followup.state, "done",
+        "{label}: follow-up job never ran — worker slot leaked ({})",
+        followup.error
+    );
+    assert_eq!(
+        followup.bytes.as_deref().unwrap(),
+        reference,
+        "{label}: follow-up bytes diverged"
+    );
+}
+
+#[test]
+fn transient_faults_recover_byte_identical_on_every_surface() {
+    for placement in PLACEMENTS {
+        let reference = clean_reference(placement);
+        for (i, kind) in FAILING_KINDS.into_iter().enumerate() {
+            let seed = 100 + i as u64;
+            let tag = format!("t_{placement}_{}", kind.name().replace('-', "_"));
+
+            let cell = run_facade(deployment(placement, transient(kind, seed)), 0, &tag);
+            assert_recovered(&cell, &reference, &format!("facade/{placement}/{kind:?}"));
+
+            let (cell, follow) =
+                run_tcp(deployment(placement, transient(kind, seed)), 0, &format!("{tag}_tcp"));
+            assert_recovered(&cell, &reference, &format!("tcp/{placement}/{kind:?}"));
+            assert_slot_released(&follow, &reference, &format!("tcp/{placement}/{kind:?}"));
+
+            let (cell, follow) =
+                run_http(deployment(placement, transient(kind, seed)), 0, &format!("{tag}_http"));
+            assert_recovered(&cell, &reference, &format!("http/{placement}/{kind:?}"));
+            assert_slot_released(&follow, &reference, &format!("http/{placement}/{kind:?}"));
+        }
+    }
+}
+
+#[test]
+fn stalled_reads_expire_deadlines_and_release_worker_slots() {
+    for placement in PLACEMENTS {
+        let tag = format!("s_{placement}");
+
+        // Facade: the deadline surfaces as Error::DeadlineExceeded.
+        let cell = run_facade(deployment(placement, stall(7)), 2_000, &tag);
+        assert_expired(&cell, &format!("facade/{placement}/stall"));
+
+        // Serve surfaces: terminal state + counters cross the wire,
+        // and the follow-up job (same stalling service, no deadline —
+        // stalls charge virtual time, they do not block real time)
+        // proves the worker slot came back.
+        let (cell, follow) =
+            run_tcp(deployment(placement, stall(7)), 2_000, &format!("{tag}_tcp"));
+        assert_expired(&cell, &format!("tcp/{placement}/stall"));
+        assert!(cell.faults >= 1, "tcp/{placement}/stall: no stall was injected");
+        assert_eq!(follow.state, "done", "tcp/{placement}/stall: slot leaked");
+
+        let (cell, follow) =
+            run_http(deployment(placement, stall(7)), 2_000, &format!("{tag}_http"));
+        assert_expired(&cell, &format!("http/{placement}/stall"));
+        assert!(cell.faults >= 1, "http/{placement}/stall: no stall was injected");
+        assert_eq!(follow.state, "done", "http/{placement}/stall: slot leaked");
+    }
+}
+
+#[test]
+fn hopeless_faults_exhaust_retries_with_error_detail() {
+    for placement in PLACEMENTS {
+        for (i, kind) in FAILING_KINDS.into_iter().enumerate() {
+            let seed = 300 + i as u64;
+            let tag = format!("h_{placement}_{}", kind.name().replace('-', "_"));
+            let cell = run_facade(deployment(placement, hopeless(kind, seed)), 0, &tag);
+            assert_eq!(cell.state, "failed", "facade/{placement}/{kind:?}");
+            assert!(
+                !cell.error.is_empty(),
+                "facade/{placement}/{kind:?}: terminal failure must carry error detail"
+            );
+        }
+    }
+}

@@ -13,7 +13,7 @@ use skimroot::net::LinkModel;
 use skimroot::query::DatasetSpec;
 use skimroot::serve::{ServeConfig, SkimScheduler, SkimServiceClient};
 use skimroot::{SkimJob, SkimQuery};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 const N_FILES: usize = 4;
@@ -221,8 +221,7 @@ fn dataset_over_tcp_service_matches_serial_concat() {
     assert!(status.file_errors.is_empty());
     assert_eq!(bytes, reference, "TCP service diverged from serial loop");
 
-    stop.store(true, Ordering::Relaxed);
-    handle.join().unwrap();
+    skimroot::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
     service.shutdown();
 }
 
@@ -274,8 +273,7 @@ fn dataset_over_http_jobs_api_matches_serial_concat() {
     assert_eq!(code, 200);
     assert_eq!(bytes, reference, "HTTP jobs API diverged from serial loop");
 
-    stop.store(true, Ordering::Relaxed);
-    handle.join().unwrap();
+    skimroot::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
     sched.shutdown();
 }
 
@@ -306,7 +304,6 @@ fn traversal_rejected_across_surfaces() {
         .submit(&SkimQuery::new("../secret.troot", "o.troot"))
         .unwrap_err();
     assert!(format!("{err}").contains("escapes the storage root"), "{err}");
-    stop.store(true, Ordering::Relaxed);
-    handle.join().unwrap();
+    skimroot::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
     service.shutdown();
 }

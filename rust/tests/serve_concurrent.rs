@@ -9,7 +9,7 @@ use skimroot::gen::{self, GenConfig};
 use skimroot::serve::{JobState, ServeConfig, SkimService, SkimServiceClient};
 use skimroot::{SkimJob, SkimQuery};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 fn workdir() -> PathBuf {
@@ -110,8 +110,7 @@ fn concurrent_clients_match_serial_and_share_baskets() {
     assert!(stats.misses > 0);
     assert!(stats.hits > 0, "overlapping branch sets must hit: {stats:?}");
 
-    stop.store(true, Ordering::Relaxed);
-    handle.join().unwrap();
+    skimroot::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
     service.shutdown();
 }
 
@@ -137,7 +136,6 @@ fn queue_depth_backpressure_over_tcp() {
     let err = client.submit(&query_for(3)).unwrap_err();
     assert!(format!("{err}").contains("queue full"), "{err}");
 
-    stop.store(true, Ordering::Relaxed);
-    handle.join().unwrap();
+    skimroot::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
     service.shutdown();
 }
