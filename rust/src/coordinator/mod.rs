@@ -179,6 +179,9 @@ pub struct Deployment {
     /// single-DPU testbed, `> 1` fans the job out across N DPU nodes
     /// sharing one storage server, split by event range.
     pub fan_out: usize,
+    /// Selectivity-adaptive interpreter execution (off by default;
+    /// client/server placements only — DPU nodes prefer the kernel).
+    pub adaptive: crate::engine::AdaptiveOpts,
 }
 
 impl Deployment {
@@ -259,6 +262,7 @@ pub struct DeploymentBuilder {
     two_phase: bool,
     use_pjrt: bool,
     fan_out: usize,
+    adaptive: crate::engine::AdaptiveOpts,
 }
 
 impl Default for DeploymentBuilder {
@@ -273,6 +277,7 @@ impl Default for DeploymentBuilder {
             two_phase: true,
             use_pjrt: true,
             fan_out: 1,
+            adaptive: crate::engine::AdaptiveOpts::default(),
         }
     }
 }
@@ -332,6 +337,12 @@ impl DeploymentBuilder {
         self
     }
 
+    /// Selectivity-adaptive interpreter execution.
+    pub fn adaptive(mut self, adaptive: crate::engine::AdaptiveOpts) -> Self {
+        self.adaptive = adaptive;
+        self
+    }
+
     /// Assemble and validate the deployment.
     pub fn build(self) -> Result<Deployment> {
         let name = self.name.unwrap_or_else(|| {
@@ -352,6 +363,7 @@ impl DeploymentBuilder {
             two_phase: self.two_phase,
             use_pjrt: self.use_pjrt,
             fan_out: self.fan_out,
+            adaptive: self.adaptive,
         };
         deployment.validate()?;
         Ok(deployment)
@@ -790,6 +802,7 @@ impl<'rt> Coordinator<'rt> {
             },
             basket_cache: self.basket_cache.clone(),
             zone_map: zone_map.clone(),
+            adaptive: deployment.adaptive.clone(),
             ..Default::default()
         };
         // Collision-free member output names: two members may request
@@ -1284,6 +1297,7 @@ impl<'rt> Coordinator<'rt> {
                     basket_cache: self.basket_cache.clone(),
                     zone_map: zone_map.clone(),
                     ctl: ctl.clone(),
+                    adaptive: deployment.adaptive.clone(),
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -1311,6 +1325,7 @@ impl<'rt> Coordinator<'rt> {
                     basket_cache: self.basket_cache.clone(),
                     zone_map: zone_map.clone(),
                     ctl: ctl.clone(),
+                    adaptive: deployment.adaptive.clone(),
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;

@@ -327,6 +327,28 @@ fn status_json(status: &crate::serve::JobStatus) -> String {
             );
         }
     }
+    if !status.profile.is_empty() {
+        // Adaptive-execution selectivity profile: one object per
+        // conjunct, in the status's (key-sorted) order.
+        obj.insert(
+            "profile".to_string(),
+            Json::Arr(
+                status
+                    .profile
+                    .iter()
+                    .map(|p| {
+                        let mut e = BTreeMap::new();
+                        e.insert("conjunct".to_string(), Json::Str(p.key.clone()));
+                        e.insert("stage".to_string(), Json::Num(p.stage as f64));
+                        e.insert("visited".to_string(), Json::Num(p.visited as f64));
+                        e.insert("passed".to_string(), Json::Num(p.passed as f64));
+                        e.insert("cost_us".to_string(), Json::Num(p.cost_us as f64));
+                        Json::Obj(e)
+                    })
+                    .collect(),
+            ),
+        );
+    }
     if let Some(e) = &status.error {
         obj.insert("error".to_string(), Json::Str(e.clone()));
     }

@@ -34,7 +34,9 @@
 
 use crate::query::expr::{AggOp, BinOp, UnaryOp};
 use crate::query::plan::{CExpr, CutProgram};
+use crate::query::stats::{Conjunct, ConjunctKind, ConjunctStats};
 use crate::runtime::{Batch, MaskResult};
+use std::collections::HashMap;
 
 #[inline]
 fn cmp(x: f32, op: u8, abs: bool, value: f32) -> bool {
@@ -168,6 +170,10 @@ pub fn eval_event_expr(e: &CExpr, batch: &Batch, ev: usize) -> f32 {
                 }
             }
         }
+        // The scalar oracle recomputes shared subtrees at every
+        // occurrence — same operations, bit-identical to the memoized
+        // batch path.
+        CExpr::Shared(x) => eval_event_expr(x, batch, ev),
     }
 }
 
@@ -191,6 +197,7 @@ fn eval_obj_expr(e: &CExpr, batch: &Batch, ev: usize, slot: usize) -> f32 {
         // event-shaped subtrees before the slot loop if this ever
         // shows up hot.
         CExpr::Agg { .. } => eval_event_expr(e, batch, ev),
+        CExpr::Shared(x) => eval_obj_expr(x, batch, ev, slot),
     }
 }
 
@@ -270,11 +277,30 @@ pub fn eval(program: &CutProgram, batch: &Batch) -> MaskResult {
 
 // ---------------- columnar (batch-vectorized) evaluator ---------------
 
+/// Per-batch scratch columns for CSE-shared subtrees, keyed by the
+/// shared node's address. Event-shape and object-shape results are
+/// memoized separately: the same subtree can evaluate at both shapes
+/// with different values (a jagged read is 0 at event shape). One
+/// scratch lives for exactly one batch evaluation — addresses are only
+/// stable, and values only valid, within it.
+#[derive(Default)]
+struct SharedScratch {
+    event: HashMap<usize, Vec<f32>>,
+    obj: HashMap<usize, Vec<f32>>,
+}
+
 /// Evaluate an event-shaped compiled expression for **all** events at
 /// once, returning one value per event. Per-event results are
 /// bit-identical to [`eval_event_expr`] (same operations in the same
-/// order per event; only the loop nesting differs).
-fn eval_event_expr_batch(e: &CExpr, batch: &Batch, n: usize) -> Vec<f32> {
+/// order per event; only the loop nesting differs). Shared subtrees
+/// compute once into `scratch` and replay from it at every other
+/// occurrence.
+fn eval_event_expr_batch(
+    e: &CExpr,
+    batch: &Batch,
+    n: usize,
+    scratch: &mut SharedScratch,
+) -> Vec<f32> {
     let b = batch.b;
     match e {
         CExpr::Num(v) => vec![*v; n],
@@ -283,24 +309,33 @@ fn eval_event_expr_batch(e: &CExpr, batch: &Batch, n: usize) -> Vec<f32> {
         // the scalar path.
         CExpr::Jagged(_) => vec![0.0; n],
         CExpr::Unary(op, x) => {
-            let mut v = eval_event_expr_batch(x, batch, n);
+            let mut v = eval_event_expr_batch(x, batch, n, scratch);
             for xv in &mut v {
                 *xv = eval_unary(*op, *xv);
             }
             v
         }
         CExpr::Binary(op, x, y) => {
-            let mut vx = eval_event_expr_batch(x, batch, n);
-            let vy = eval_event_expr_batch(y, batch, n);
+            let mut vx = eval_event_expr_batch(x, batch, n, scratch);
+            let vy = eval_event_expr_batch(y, batch, n, scratch);
             for (a, &bv) in vx.iter_mut().zip(&vy) {
                 *a = eval_binary(*op, *a, bv);
             }
             vx
         }
+        CExpr::Shared(x) => {
+            let key = std::sync::Arc::as_ptr(x) as usize;
+            if let Some(v) = scratch.event.get(&key) {
+                return v.clone();
+            }
+            let v = eval_event_expr_batch(x, batch, n, scratch);
+            scratch.event.insert(key, v.clone());
+            v
+        }
         CExpr::Agg { op, nobj, arg, pred } => {
             let m = batch.m;
-            let va = eval_obj_expr_batch(arg, batch, n);
-            let vp = pred.as_ref().map(|p| eval_obj_expr_batch(p, batch, n));
+            let va = eval_obj_expr_batch(arg, batch, n, scratch);
+            let vp = pred.as_ref().map(|p| eval_obj_expr_batch(p, batch, n, scratch));
             let mut out = vec![0.0f32; n];
             for (ev, o) in out.iter_mut().enumerate() {
                 let nv = (batch.nobj[nobj * b + ev] as usize).min(m);
@@ -365,7 +400,12 @@ fn eval_event_expr_batch(e: &CExpr, batch: &Batch, n: usize) -> Vec<f32> {
 /// returning an event-major `[n × M]` matrix. Event-shaped parts
 /// (scalars, literals, nested aggregations) broadcast over slots,
 /// matching [`eval_obj_expr`] per element.
-fn eval_obj_expr_batch(e: &CExpr, batch: &Batch, n: usize) -> Vec<f32> {
+fn eval_obj_expr_batch(
+    e: &CExpr,
+    batch: &Batch,
+    n: usize,
+    scratch: &mut SharedScratch,
+) -> Vec<f32> {
     let (b, m) = (batch.b, batch.m);
     match e {
         CExpr::Num(v) => vec![*v; n * m],
@@ -385,25 +425,34 @@ fn eval_obj_expr_batch(e: &CExpr, batch: &Batch, n: usize) -> Vec<f32> {
             out
         }
         CExpr::Unary(op, x) => {
-            let mut v = eval_obj_expr_batch(x, batch, n);
+            let mut v = eval_obj_expr_batch(x, batch, n, scratch);
             for xv in &mut v {
                 *xv = eval_unary(*op, *xv);
             }
             v
         }
         CExpr::Binary(op, x, y) => {
-            let mut vx = eval_obj_expr_batch(x, batch, n);
-            let vy = eval_obj_expr_batch(y, batch, n);
+            let mut vx = eval_obj_expr_batch(x, batch, n, scratch);
+            let vy = eval_obj_expr_batch(y, batch, n, scratch);
             for (a, &bv) in vx.iter_mut().zip(&vy) {
                 *a = eval_binary(*op, *a, bv);
             }
             vx
         }
+        CExpr::Shared(x) => {
+            let key = std::sync::Arc::as_ptr(x) as usize;
+            if let Some(v) = scratch.obj.get(&key) {
+                return v.clone();
+            }
+            let v = eval_obj_expr_batch(x, batch, n, scratch);
+            scratch.obj.insert(key, v.clone());
+            v
+        }
         // A nested aggregation is event-shaped: evaluate once per
         // event, broadcast across slots (the scalar path re-reduces it
         // per slot to the same value).
         CExpr::Agg { .. } => {
-            let per_event = eval_event_expr_batch(e, batch, n);
+            let per_event = eval_event_expr_batch(e, batch, n, scratch);
             let mut out = vec![0.0f32; n * m];
             for (ev, &v) in per_event.iter().enumerate() {
                 out[ev * m..(ev + 1) * m].fill(v);
@@ -536,9 +585,13 @@ pub fn eval_columnar(program: &CutProgram, batch: &Batch) -> MaskResult {
         // exits above have already returned.
         let mut residual_ok: Option<Vec<bool>> = None;
         if !program.exprs.is_empty() {
+            // One scratch across all residual conjuncts: CSE-shared
+            // subtrees evaluate once per batch even when the repeats
+            // span expressions.
+            let mut scratch = SharedScratch::default();
             let mut ok = vec![true; n];
             for e in &program.exprs {
-                let v = eval_event_expr_batch(e, batch, n);
+                let v = eval_event_expr_batch(e, batch, n, &mut scratch);
                 for (o, &x) in ok.iter_mut().zip(&v) {
                     *o = *o && truthy(x);
                 }
@@ -593,6 +646,160 @@ pub fn eval_columnar(program: &CutProgram, batch: &Batch) -> MaskResult {
         }
     }
 
+    MaskResult { mask, stages }
+}
+
+// ---------------- adaptive (reorderable) evaluator ---------------------
+
+/// Evaluate `program` conjunct-by-conjunct in the caller-chosen
+/// `order` (a permutation of `0..conjuncts.len()`, from
+/// [`crate::query::stats::rank_order`]), visiting only events still
+/// alive and stopping outright once every event is dead. Per-conjunct
+/// tallies (events visited/passed, wall-clock cost) accumulate into
+/// `stats`, parallel to `conjuncts`.
+///
+/// **Mask invariant**: ANDed conjuncts commute, so the final mask is
+/// bit-identical to [`eval`] / [`eval_columnar`] under *any* order —
+/// each conjunct's per-event verdict is order-independent (comparisons
+/// and aggregations over the same batch values). Per-stage vectors
+/// start at `1.0` and a killing conjunct zeroes its own funnel stage,
+/// so the *cumulative* funnel product still equals the mask and the
+/// final survivor count matches the oracle exactly; raw per-stage
+/// counts may drift from the fixed order (a stage-2 conjunct may kill
+/// an event the fixed order would have killed at stage 0) — the
+/// documented, allowed divergence.
+pub fn eval_adaptive(
+    program: &CutProgram,
+    batch: &Batch,
+    conjuncts: &[Conjunct],
+    order: &[usize],
+    stats: &mut [ConjunctStats],
+) -> MaskResult {
+    debug_assert_eq!(conjuncts.len(), stats.len());
+    debug_assert_eq!(conjuncts.len(), order.len());
+    let (b, m, n) = (batch.b, batch.m, batch.n_valid);
+    let mut stages = vec![vec![1.0f32; n]; 4];
+    let mut alive = vec![true; n];
+    let mut n_alive = n;
+
+    for &ci in order {
+        if n_alive == 0 {
+            break;
+        }
+        let conj = &conjuncts[ci];
+        let started = std::time::Instant::now();
+        let visited = n_alive as u64;
+        let stage = &mut stages[conj.stage as usize];
+        match conj.kind {
+            ConjunctKind::Scalar(i) => {
+                let cut = &program.scalar_cuts[i];
+                for ev in 0..n {
+                    if !alive[ev] {
+                        continue;
+                    }
+                    let x = batch.scalars[cut.col * b + ev];
+                    if !cmp(x, cut.op, cut.abs, cut.value) {
+                        stage[ev] = 0.0;
+                        alive[ev] = false;
+                        n_alive -= 1;
+                    }
+                }
+            }
+            ConjunctKind::Group(i) => {
+                let group = &program.groups[i];
+                let cuts = &program.obj_cuts[group.cut_range.clone()];
+                for ev in 0..n {
+                    if !alive[ev] {
+                        continue;
+                    }
+                    let mut bound = if cuts.is_empty() { 0 } else { m };
+                    for cut in cuts {
+                        bound = bound.min(valid_slots(batch.nobj[cut.col * b + ev], m));
+                    }
+                    let mut count = 0u32;
+                    for slot in 0..bound {
+                        let pass = cuts.iter().all(|cut| {
+                            let x = batch.cols[(cut.col * b + ev) * m + slot];
+                            cmp(x, cut.op, cut.abs, cut.value)
+                        });
+                        if pass {
+                            count += 1;
+                            if count >= group.min_count {
+                                break;
+                            }
+                        }
+                    }
+                    if count < group.min_count {
+                        stage[ev] = 0.0;
+                        alive[ev] = false;
+                        n_alive -= 1;
+                    }
+                }
+            }
+            ConjunctKind::Ht => {
+                let ht = program.ht.as_ref().expect("HT conjunct without an HT unit");
+                for ev in 0..n {
+                    if !alive[ev] {
+                        continue;
+                    }
+                    let nv = (batch.nobj[ht.col * b + ev] as usize).min(m);
+                    let mut total = 0.0f32;
+                    for slot in 0..nv {
+                        let x = batch.cols[(ht.col * b + ev) * m + slot];
+                        if x > ht.object_pt_min {
+                            total += x;
+                        }
+                    }
+                    if total < ht.min_ht {
+                        stage[ev] = 0.0;
+                        alive[ev] = false;
+                        n_alive -= 1;
+                    }
+                }
+            }
+            ConjunctKind::Residual(i) => {
+                // Per-event scalar walk over survivors only (the batch
+                // sweep covers all events — wasted exactly when this
+                // conjunct was reordered late because little survives).
+                let e = &program.exprs[i];
+                for ev in 0..n {
+                    if !alive[ev] {
+                        continue;
+                    }
+                    if !truthy(eval_event_expr(e, batch, ev)) {
+                        stage[ev] = 0.0;
+                        alive[ev] = false;
+                        n_alive -= 1;
+                    }
+                }
+            }
+            ConjunctKind::Trigger => {
+                for ev in 0..n {
+                    if !alive[ev] {
+                        continue;
+                    }
+                    let ok =
+                        program.triggers.iter().any(|&s| batch.scalars[s * b + ev] > 0.5);
+                    if !ok {
+                        stage[ev] = 0.0;
+                        alive[ev] = false;
+                        n_alive -= 1;
+                    }
+                }
+            }
+        }
+        let st = &mut stats[ci];
+        st.visited += visited;
+        st.passed += n_alive as u64;
+        st.cost_us += started.elapsed().as_micros() as u64;
+    }
+
+    let mut mask = vec![0.0f32; n];
+    for ev in 0..n {
+        if alive[ev] {
+            mask[ev] = 1.0;
+        }
+    }
     MaskResult { mask, stages }
 }
 
@@ -1135,6 +1342,229 @@ mod tests {
             let program = gen_program(rng, n_obj, n_sc);
             let batch = gen_batch(rng, n_obj, n_sc);
             assert_equivalent(&program, &batch);
+        });
+    }
+
+    // ---------------- CSE shared subtrees ------------------------------
+
+    #[test]
+    fn shared_subtrees_evaluate_once_and_identically() {
+        use std::sync::Arc;
+        // shared = scalar0 * 2; expr = (shared > 100) || (shared < 20)
+        let shared = Arc::new(CExpr::Binary(
+            BinOp::Mul,
+            Box::new(CExpr::Scalar(0)),
+            Box::new(CExpr::Num(2.0)),
+        ));
+        let with_cse = CExpr::Binary(
+            BinOp::Or,
+            Box::new(CExpr::Binary(
+                BinOp::Gt,
+                Box::new(CExpr::Shared(shared.clone())),
+                Box::new(CExpr::Num(100.0)),
+            )),
+            Box::new(CExpr::Binary(
+                BinOp::Lt,
+                Box::new(CExpr::Shared(shared)),
+                Box::new(CExpr::Num(20.0)),
+            )),
+        );
+        let plain = CExpr::Binary(
+            BinOp::Or,
+            Box::new(CExpr::Binary(
+                BinOp::Gt,
+                Box::new(CExpr::Binary(
+                    BinOp::Mul,
+                    Box::new(CExpr::Scalar(0)),
+                    Box::new(CExpr::Num(2.0)),
+                )),
+                Box::new(CExpr::Num(100.0)),
+            )),
+            Box::new(CExpr::Binary(
+                BinOp::Lt,
+                Box::new(CExpr::Binary(
+                    BinOp::Mul,
+                    Box::new(CExpr::Scalar(0)),
+                    Box::new(CExpr::Num(2.0)),
+                )),
+                Box::new(CExpr::Num(20.0)),
+            )),
+        );
+        let batch = ir_batch();
+        let mut scratch = SharedScratch::default();
+        let v_cse = eval_event_expr_batch(&with_cse, &batch, 3, &mut scratch);
+        let v_plain =
+            eval_event_expr_batch(&plain, &batch, 3, &mut SharedScratch::default());
+        assert_eq!(v_cse, v_plain);
+        // The shared node landed in the scratch exactly once.
+        assert_eq!(scratch.event.len(), 1);
+        // Scalar path recurses transparently.
+        for ev in 0..3 {
+            assert_eq!(
+                eval_event_expr(&with_cse, &batch, ev),
+                eval_event_expr(&plain, &batch, ev)
+            );
+        }
+
+        // Whole programs agree through both evaluators.
+        let mut p_cse = CutProgram::default();
+        p_cse.scalar_columns.push("MET_pt".into());
+        p_cse.exprs.push(with_cse);
+        let mut p_plain = CutProgram::default();
+        p_plain.scalar_columns.push("MET_pt".into());
+        p_plain.exprs.push(plain);
+        let batch = ir_batch();
+        assert_eq!(eval(&p_cse, &batch).mask, eval(&p_plain, &batch).mask);
+        assert_eq!(
+            eval_columnar(&p_cse, &batch).mask,
+            eval_columnar(&p_plain, &batch).mask
+        );
+        assert_equivalent(&p_cse, &batch);
+    }
+
+    #[test]
+    fn shared_subtree_memo_is_shape_keyed() {
+        use std::sync::Arc;
+        // A jagged read is 0.0 at event shape but real values at object
+        // shape: one shared node used at both shapes must not leak one
+        // shape's scratch column into the other.
+        let shared = Arc::new(CExpr::Jagged(0));
+        let e = CExpr::Binary(
+            BinOp::Add,
+            // Event shape: stray jagged → 0.
+            Box::new(CExpr::Shared(shared.clone())),
+            // Object shape via aggregation: max over real values.
+            Box::new(CExpr::Agg {
+                op: AggOp::Max,
+                nobj: 0,
+                arg: Box::new(CExpr::Shared(shared)),
+                pred: None,
+            }),
+        );
+        let batch = ir_batch();
+        let mut scratch = SharedScratch::default();
+        let v = eval_event_expr_batch(&e, &batch, 3, &mut scratch);
+        assert_eq!(v[0], 40.0); // 0 + max([40, 10])
+        assert_eq!(v[1], 5.0);
+        assert_eq!(scratch.event.len(), 1);
+        assert_eq!(scratch.obj.len(), 1);
+        for ev in 0..3 {
+            assert_eq!(eval_event_expr(&e, &batch, ev), v[ev]);
+        }
+    }
+
+    // ---------------- adaptive evaluator -------------------------------
+
+    use crate::query::stats::{conjuncts_of, rank_order};
+
+    /// Run `eval_adaptive` under `order` and assert the adaptive
+    /// contract against the oracle: identical mask, identical final
+    /// survivor count through the cumulative funnel.
+    fn assert_adaptive_matches(
+        program: &CutProgram,
+        batch: &Batch,
+        order: &[usize],
+        stats: &mut [ConjunctStats],
+    ) {
+        let conjuncts = conjuncts_of(program);
+        let oracle = eval(program, batch);
+        let adaptive = eval_adaptive(program, batch, &conjuncts, order, stats);
+        assert_eq!(oracle.mask, adaptive.mask, "masks diverge under order {order:?}");
+        let n_pass = oracle.mask.iter().filter(|&&x| x > 0.0).count() as u64;
+        assert_eq!(
+            funnel_of(&adaptive)[3],
+            n_pass,
+            "cumulative funnel tail diverges under order {order:?}"
+        );
+    }
+
+    #[test]
+    fn adaptive_matches_oracle_on_unit_cases_under_reversed_order() {
+        let mut program = CutProgram::default();
+        program.scalar_columns = vec!["nE".into(), "HLT_X".into()];
+        program.scalar_cuts.push(ScalarCutParam { col: 0, op: 1, abs: false, value: 1.0 });
+        program.obj_columns.push("Jet_pt".into());
+        program.ht = Some(HtParam { col: 0, object_pt_min: 30.0, min_ht: 100.0 });
+        program.triggers.push(1);
+        let (b, m) = (2, 4);
+        let mut batch = Batch::zeroed(&caps(), b, m);
+        batch.n_valid = 2;
+        batch.scalars[0] = 1.0;
+        batch.scalars[b] = 1.0;
+        batch.cols[0..2].copy_from_slice(&[60.0, 50.0]);
+        batch.nobj[0] = 2.0;
+        batch.scalars[1] = 1.0;
+        batch.scalars[b + 1] = 0.0;
+        batch.cols[m..m + 2].copy_from_slice(&[60.0, 20.0]);
+        batch.nobj[1] = 2.0;
+
+        let conjuncts = conjuncts_of(&program);
+        assert_eq!(conjuncts.len(), 3);
+        let mut stats = vec![ConjunctStats::default(); conjuncts.len()];
+        // Reversed order: trigger first, preselection last.
+        assert_adaptive_matches(&program, &batch, &[2, 1, 0], &mut stats);
+        // The trigger visited both events and killed one; the HT unit
+        // only saw the survivor.
+        assert_eq!(stats[2].visited, 2);
+        assert_eq!(stats[2].passed, 1);
+        assert_eq!(stats[1].visited, 1);
+        // Trivial program: no conjuncts, everything passes.
+        let trivial = CutProgram::default();
+        let out = eval_adaptive(&trivial, &batch, &[], &[], &mut []);
+        assert_eq!(out.mask, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn adaptive_stats_drive_rank_toward_selective_first() {
+        // Scalar cut passes everything; trigger kills half. After one
+        // measured batch the ranking must move the trigger ahead of
+        // the (now provably useless) scalar cut.
+        let mut program = CutProgram::default();
+        program.scalar_columns = vec!["x".into(), "flag".into()];
+        program.scalar_cuts.push(ScalarCutParam { col: 0, op: 0, abs: false, value: -1e9 });
+        program.triggers.push(1);
+        let mut batch = Batch::zeroed(&caps(), 8, 2);
+        batch.n_valid = 8;
+        for ev in 0..8 {
+            batch.scalars[ev] = ev as f32;
+            batch.scalars[8 + ev] = (ev % 2) as f32;
+        }
+        let conjuncts = conjuncts_of(&program);
+        let mut stats = vec![ConjunctStats::default(); conjuncts.len()];
+        let identity: Vec<usize> = (0..conjuncts.len()).collect();
+        assert_adaptive_matches(&program, &batch, &identity, &mut stats);
+        assert_eq!(stats[0].visited, 8);
+        assert_eq!(stats[0].passed, 8);
+        assert_eq!(stats[1].visited, 8);
+        assert_eq!(stats[1].passed, 4);
+        let ranked = rank_order(&conjuncts, &stats);
+        assert_eq!(ranked, vec![1, 0], "selective trigger must rank first");
+        // And the re-ranked order still matches the oracle.
+        assert_adaptive_matches(&program, &batch, &ranked, &mut stats);
+    }
+
+    #[test]
+    fn prop_adaptive_matches_scalar_evaluator_under_any_order() {
+        prop_check("adaptive ≡ scalar interpreter", 200, |rng| {
+            let n_obj = 1 + rng.below(3) as usize;
+            let n_sc = 1 + rng.below(4) as usize;
+            let program = gen_program(rng, n_obj, n_sc);
+            let batch = gen_batch(rng, n_obj, n_sc);
+            let conjuncts = conjuncts_of(&program);
+            let mut stats = vec![ConjunctStats::default(); conjuncts.len()];
+            // Identity order.
+            let mut order: Vec<usize> = (0..conjuncts.len()).collect();
+            assert_adaptive_matches(&program, &batch, &order, &mut stats);
+            // Random shuffle (Fisher–Yates off the case's rng).
+            for i in (1..order.len()).rev() {
+                let j = rng.below(i as u32 + 1) as usize;
+                order.swap(i, j);
+            }
+            assert_adaptive_matches(&program, &batch, &order, &mut stats);
+            // The measured, ranked order — what the engine actually
+            // runs after warm-up.
+            let ranked = rank_order(&conjuncts, &stats);
+            assert_adaptive_matches(&program, &batch, &ranked, &mut stats);
         });
     }
 }

@@ -139,6 +139,42 @@ pub struct EngineOpts {
     /// expired deadline surfaces within one group of work. The default
     /// (inactive) adds no checks and preserves the legacy contract.
     pub ctl: crate::lifecycle::JobCtl,
+    /// Selectivity-adaptive execution ([`AdaptiveOpts`]). Off by
+    /// default: the interpreter evaluates conjuncts in fixed stage
+    /// order and per-stage funnels are reproducible across
+    /// configurations. When enabled (interpreter path only — the AOT
+    /// kernel's stage order is fixed in silicon), the engine measures
+    /// per-conjunct selectivity during a warm-up window, then reorders
+    /// the funnel cheapest-most-selective-first and re-plans
+    /// periodically. Final masks and output bytes are bit-identical
+    /// either way; only per-stage funnel tallies may differ.
+    pub adaptive: AdaptiveOpts,
+}
+
+/// Configuration of selectivity-adaptive execution (see
+/// [`crate::query::stats`] and `engine/interp.rs`'s `eval_adaptive`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveOpts {
+    /// Master switch; `false` (default) keeps the fixed-order
+    /// evaluators and collects no per-conjunct statistics.
+    pub enabled: bool,
+    /// Basket groups evaluated in fixed order (while measuring) before
+    /// the first reorder.
+    pub warmup_groups: u64,
+    /// Re-rank cadence after warm-up: every N groups the accumulated
+    /// statistics are re-ranked (N ≥ 1).
+    pub replan_every: u64,
+    /// Warm-start profile (e.g. loaded from a materialized skim's
+    /// `.prof` sidecar): conjuncts found in it by canonical key start
+    /// with measured tallies, so the first reorder happens at group 0
+    /// instead of after warm-up.
+    pub seed: Option<crate::query::SelectivityProfile>,
+}
+
+impl Default for AdaptiveOpts {
+    fn default() -> Self {
+        AdaptiveOpts { enabled: false, warmup_groups: 4, replan_every: 8, seed: None }
+    }
 }
 
 impl EngineOpts {
@@ -172,6 +208,7 @@ impl Default for EngineOpts {
             basket_cache: None,
             zone_map: None,
             ctl: crate::lifecycle::JobCtl::none(),
+            adaptive: AdaptiveOpts::default(),
         }
     }
 }

@@ -65,6 +65,7 @@ use crate::metrics::{Node, Stage, Timeline};
 use crate::query::plan::{
     SkimPlan, KERNEL_MAX_GROUPS, KERNEL_MAX_OBJ_CUTS, KERNEL_MAX_SCALAR_CUTS,
 };
+use crate::query::stats::{conjuncts_of, rank_order, Conjunct, ConjunctStats};
 use crate::query::SkimQuery;
 use crate::runtime::{Batch, Capacities, CutParams, MaskResult, SkimRuntime, Variant};
 use crate::serve::cache::{BasketCache, BasketKey};
@@ -447,6 +448,27 @@ fn fetch_decompress_into(
     Ok(info)
 }
 
+/// Mutable state of the selectivity-adaptive interpreter path
+/// ([`crate::engine::AdaptiveOpts`]): the program's conjunct
+/// inventory, running per-conjunct tallies, and the current evaluation
+/// order. The order is re-ranked only on group boundaries (after the
+/// warm-up window, then every `replan_every` groups), so every batch
+/// inside a flush window sees one fixed order — and because
+/// [`rank_order`] ranks on structural cost (never wall-clock), the
+/// chosen order is a deterministic function of the data alone.
+struct AdaptiveState {
+    /// The ANDed conjuncts of the compiled program, in fixed order.
+    conjuncts: Vec<Conjunct>,
+    /// Running tallies, indexed like `conjuncts`.
+    stats: Vec<ConjunctStats>,
+    /// Current evaluation order (indices into `conjuncts`).
+    order: Vec<usize>,
+    /// Cluster groups evaluated so far (the re-plan cadence clock).
+    groups_done: u64,
+    /// Re-plans that actually changed the order.
+    replans: u64,
+}
+
 /// The in-flight state of one skim job, visible to every stage.
 ///
 /// Immutable job context (`plan`, `opts`, `timeline`, `meta`) is
@@ -523,6 +545,12 @@ pub struct StageCtx<'a> {
     cache_file_key: Arc<str>,
     cache_branch_keys: Vec<Arc<str>>,
     cache_output_keys: Vec<Arc<str>>,
+    /// Selectivity-adaptive interpreter state: `Some` only when
+    /// [`crate::engine::AdaptiveOpts::enabled`] and this job evaluates
+    /// on the interpreter with a non-trivial program. `None` leaves
+    /// the fixed-order [`super::interp::eval_columnar`] path (and its
+    /// per-stage funnel counts) untouched.
+    adaptive: Option<AdaptiveState>,
 }
 
 impl<'a> StageCtx<'a> {
@@ -600,6 +628,39 @@ impl<'a> StageCtx<'a> {
         };
         let params = if vectorized {
             Some(CutParams::pack(&plan.program, &caps)?)
+        } else {
+            None
+        };
+
+        // --- selectivity-adaptive interpreter state ------------------
+        // Strictly opt-in, interpreter-only: the vectorized kernel's
+        // stage order is baked into its AOT program, and a trivial
+        // program has nothing to reorder. A seed profile (warm start
+        // from a prior run of the same query) ranks the order
+        // immediately; otherwise the warm-up window runs in fixed
+        // stage order while tallies accumulate.
+        let adaptive = if opts.adaptive.enabled && !vectorized && !plan.program.is_trivial()
+        {
+            let conjuncts = conjuncts_of(&plan.program);
+            let mut stats = vec![ConjunctStats::default(); conjuncts.len()];
+            let mut seeded = false;
+            if let Some(seed) = &opts.adaptive.seed {
+                for (c, st) in conjuncts.iter().zip(stats.iter_mut()) {
+                    if let Some(prev) = seed.get(&c.key) {
+                        *st = *prev;
+                        seeded = true;
+                    }
+                }
+            }
+            let order = if seeded {
+                rank_order(&conjuncts, &stats)
+            } else {
+                (0..conjuncts.len()).collect()
+            };
+            // Seeded tallies informed the starting order; the profile
+            // this job reports should count only its own events.
+            stats.fill(ConjunctStats::default());
+            Some(AdaptiveState { conjuncts, stats, order, groups_done: 0, replans: 0 })
         } else {
             None
         };
@@ -759,6 +820,7 @@ impl<'a> StageCtx<'a> {
             cache_file_key,
             cache_branch_keys,
             cache_output_keys,
+            adaptive,
         })
     }
 
@@ -1330,6 +1392,25 @@ impl<'a> StageCtx<'a> {
         }
         self.flush_window(&mut batch, &mut window, group)?;
         self.scratch_batch = Some(batch);
+
+        // Group boundary: tick the adaptive cadence and re-rank the
+        // order once the warm-up window has elapsed, then every
+        // `replan_every` groups. Never inside a window — every batch
+        // of a group is evaluated under one fixed order.
+        if let Some(st) = self.adaptive.as_mut() {
+            st.groups_done += 1;
+            let a = &self.opts.adaptive;
+            let warmed = st.groups_done >= a.warmup_groups.max(1);
+            let since = st.groups_done - a.warmup_groups.max(1);
+            if warmed && (since == 0 || (a.replan_every > 0 && since % a.replan_every == 0))
+            {
+                let next = rank_order(&st.conjuncts, &st.stats);
+                if next != st.order {
+                    st.replans += 1;
+                }
+                st.order = next;
+            }
+        }
         Ok(())
     }
 
@@ -1360,7 +1441,7 @@ impl<'a> StageCtx<'a> {
         Ok(())
     }
 
-    fn eval_batch(&self, batch: &Batch) -> Result<MaskResult> {
+    fn eval_batch(&mut self, batch: &Batch) -> Result<MaskResult> {
         if self.vectorized {
             let rt = self.runtime.expect("vectorized implies runtime");
             let v = self.variant.expect("vectorized implies variant");
@@ -1371,8 +1452,24 @@ impl<'a> StageCtx<'a> {
             });
         }
         let timeline = self.timeline;
-        Ok(timeline.stage(Stage::Filter, self.opts.compute_node, || {
-            super::interp::eval_columnar(&self.plan.program, batch)
+        let node = self.opts.compute_node;
+        let program = &self.plan.program;
+        if let Some(st) = self.adaptive.as_mut() {
+            // Adaptive order with per-conjunct tallies. The final mask
+            // is bit-identical to the fixed-order oracle; only
+            // per-stage funnel counts may shift with the order.
+            return Ok(timeline.stage(Stage::Filter, node, || {
+                super::interp::eval_adaptive(
+                    program,
+                    batch,
+                    &st.conjuncts,
+                    &st.order,
+                    &mut st.stats,
+                )
+            }));
+        }
+        Ok(timeline.stage(Stage::Filter, node, || {
+            super::interp::eval_columnar(program, batch)
         }))
     }
 
@@ -1490,6 +1587,16 @@ impl<'a> StageCtx<'a> {
                     .into(),
             )
         })?;
+        // Dump the adaptive tallies onto the timeline so they ride
+        // `JobReport → JobStatus → wire → HTTP JSON` unchanged.
+        if let Some(st) = &self.adaptive {
+            for (c, s) in st.conjuncts.iter().zip(&st.stats) {
+                self.timeline.record_profile(&c.key, c.stage, s.visited, s.passed, s.cost_us);
+            }
+            if st.replans > 0 {
+                self.timeline.count("adaptive_replans", st.replans);
+            }
+        }
         Ok(SkimResult {
             n_events: self.range_events,
             n_pass: self.pass_total,
@@ -1978,6 +2085,64 @@ mod tests {
             let b = std::fs::read(dir.join(&zm_name)).unwrap();
             assert_eq!(a, b, "cut {cut} diverges under pruning");
         }
+    }
+
+    // ---------------- selectivity-adaptive execution ------------------
+
+    #[test]
+    fn adaptive_execution_is_byte_identical_and_profiles_conjuncts() {
+        let cut = "MET_pt > 25 && nJet >= 1 && HLT_IsoMu24 > 0.5";
+        let (base, base_tl) = run_cut("pipe_ad_base.troot", cut, &interp_opts());
+        assert!(base_tl.profile().is_empty(), "fixed path must not profile");
+
+        let mut opts = interp_opts();
+        opts.adaptive.enabled = true;
+        opts.adaptive.warmup_groups = 1;
+        opts.adaptive.replan_every = 1;
+        let (ad, tl) = run_cut("pipe_ad_on.troot", cut, &opts);
+        assert_eq!(ad.n_pass, base.n_pass);
+        assert_eq!(ad.n_events, base.n_events);
+        // The last funnel stage is the final survivor count — invariant
+        // under reordering (earlier stages may legitimately shift).
+        assert_eq!(ad.stage_funnel[3], base.stage_funnel[3]);
+        let dir = dataset().parent().unwrap().to_path_buf();
+        let a = std::fs::read(dir.join("pipe_ad_base.troot")).unwrap();
+        let b = std::fs::read(dir.join("pipe_ad_on.troot")).unwrap();
+        assert_eq!(a, b, "adaptive order must not change the output bytes");
+
+        let prof = tl.profile();
+        assert!(!prof.is_empty(), "adaptive run must report a profile");
+        assert!(prof.iter().any(|p| p.key == "MET_pt > 25"), "{prof:?}");
+        assert!(prof.iter().all(|p| p.passed <= p.visited));
+        // Every event is visited by whichever conjunct ran first in its
+        // group, so the tallies cover the file at least once.
+        let visited: u64 = prof.iter().map(|p| p.visited).sum();
+        assert!(visited >= ad.n_events, "{visited} < {}", ad.n_events);
+    }
+
+    #[test]
+    fn adaptive_seed_profile_ranks_the_order_from_group_one() {
+        // A seed claiming MET_pt is all-pass and the trigger maximally
+        // selective must flip the starting order — and still produce
+        // byte-identical output.
+        let cut = "MET_pt > 25 && HLT_IsoMu24 > 0.5";
+        let (base, _) = run_cut("pipe_ad_seed_base.troot", cut, &interp_opts());
+        let mut seed = crate::query::SelectivityProfile::default();
+        seed.record("MET_pt > 25", 1000, 1000, 10);
+        let mut opts = interp_opts();
+        opts.adaptive.enabled = true;
+        opts.adaptive.seed = Some(seed);
+        let (ad, tl) = run_cut("pipe_ad_seed.troot", cut, &opts);
+        assert_eq!(ad.n_pass, base.n_pass);
+        let dir = dataset().parent().unwrap().to_path_buf();
+        let a = std::fs::read(dir.join("pipe_ad_seed_base.troot")).unwrap();
+        let b = std::fs::read(dir.join("pipe_ad_seed.troot")).unwrap();
+        assert_eq!(a, b, "seeded order must not change the output bytes");
+        // The reported profile counts only this job's events, not the
+        // seed's.
+        let prof = tl.profile();
+        let met = prof.iter().find(|p| p.key == "MET_pt > 25").unwrap();
+        assert!(met.visited <= ad.n_events, "{met:?}");
     }
 
     #[test]

@@ -186,9 +186,88 @@ impl<'rt> SkimJob<'rt> {
         Ok(out)
     }
 
+    /// Render the **adaptive conjunct inventory** for this query (CLI
+    /// `skim --explain --stats`): one line per funnel conjunct with its
+    /// fixed stage, structural cost estimate and canonical key. When
+    /// the input is a `catalog:NAME` materialized skim with a
+    /// persisted `skims/NAME.prof` selectivity sidecar, the measured
+    /// visited/passed tallies and pass rates from that profile are
+    /// printed alongside — exactly the numbers an adaptive run would
+    /// warm-start from.
+    pub fn explain_stats(&self) -> Result<String> {
+        use std::fmt::Write as _;
+        let files = crate::catalog::resolve(&self.query.input, &self.storage_root)?;
+        let store = crate::troot::LocalFile::open(self.storage_root.join(&files[0]))?;
+        let reader = crate::troot::TRootReader::open(store)?;
+        let plan = crate::query::plan::SkimPlan::build(&self.query, reader.meta())?;
+        let conjuncts = crate::query::stats::conjuncts_of(&plan.program);
+        let mut out = String::new();
+        if conjuncts.is_empty() {
+            out.push_str("conjunct inventory: (no cut — every event passes)\n");
+            return Ok(out);
+        }
+        let profile = match &self.query.input {
+            crate::query::DatasetSpec::Catalog(name) => {
+                let path = self.storage_root.join("skims").join(format!("{name}.prof"));
+                std::fs::read_to_string(&path)
+                    .ok()
+                    .map(|t| crate::query::SelectivityProfile::from_text(&t))
+                    .filter(|p| !p.is_empty())
+            }
+            _ => None,
+        };
+        let _ = writeln!(out, "conjunct inventory ({} conjuncts):", conjuncts.len());
+        let _ = writeln!(
+            out,
+            "  {:>5} {:>8} {:>10} {:>10} {:>7}  conjunct",
+            "stage", "cost", "visited", "passed", "pass%"
+        );
+        for c in &conjuncts {
+            match profile.as_ref().and_then(|p| p.get(&c.key)) {
+                Some(s) => {
+                    let _ = writeln!(
+                        out,
+                        "  {:>5} {:>8.1} {:>10} {:>10} {:>6.1}%  {}",
+                        c.stage,
+                        c.cost,
+                        s.visited,
+                        s.passed,
+                        100.0 * s.pass_rate(),
+                        c.key
+                    );
+                }
+                None => {
+                    let _ = writeln!(
+                        out,
+                        "  {:>5} {:>8.1} {:>10} {:>10} {:>7}  {}",
+                        c.stage, c.cost, "-", "-", "-", c.key
+                    );
+                }
+            }
+        }
+        match profile {
+            Some(_) => out.push_str(
+                "  (measured tallies from the persisted selectivity profile; an\n   \
+                 adaptive run over this skim warm-starts from them)\n",
+            ),
+            None => out.push_str(
+                "  (no persisted profile — an adaptive run starts with a warm-up\n   \
+                 window in the fixed stage order above)\n",
+            ),
+        }
+        Ok(out)
+    }
+
     /// Execute the job (with the deployment's WLCG-style retries),
     /// then register the output as a materialized skim if
     /// [`SkimJob::materialize`] was requested.
+    ///
+    /// Adaptive warm start: when [`Deployment::adaptive`] is enabled,
+    /// the input is a `catalog:NAME` materialized skim, and no seed
+    /// profile was supplied, the `skims/NAME.prof` sidecar (persisted
+    /// by a previous materializing run) seeds the conjunct order from
+    /// the first group. A materializing adaptive run writes that
+    /// sidecar next to the skim.
     pub fn run(&self) -> Result<JobReport> {
         let mut coord = Coordinator::new(&self.storage_root, &self.client_dir, self.runtime);
         if let Some(cache) = &self.basket_cache {
@@ -197,7 +276,19 @@ impl<'rt> SkimJob<'rt> {
         if self.ctl.is_active() {
             coord = coord.with_ctl(self.ctl.clone());
         }
-        let report = coord.run_job_with(&self.query, &self.deployment, &self.stages)?;
+        let mut deployment = self.deployment.clone();
+        if deployment.adaptive.enabled && deployment.adaptive.seed.is_none() {
+            if let crate::query::DatasetSpec::Catalog(name) = &self.query.input {
+                let path = self.storage_root.join("skims").join(format!("{name}.prof"));
+                if let Ok(text) = std::fs::read_to_string(&path) {
+                    let seed = crate::query::SelectivityProfile::from_text(&text);
+                    if !seed.is_empty() {
+                        deployment.adaptive.seed = Some(seed);
+                    }
+                }
+            }
+        }
+        let report = coord.run_job_with(&self.query, &deployment, &self.stages)?;
         if let Some(name) = &self.materialize_as {
             crate::catalog::register_materialized(
                 &self.storage_root,
@@ -206,6 +297,17 @@ impl<'rt> SkimJob<'rt> {
                 &self.query.input,
                 self.query.combined_cut().as_ref(),
             )?;
+            // Persist the selectivity profile beside the skim so a
+            // later `catalog:{name}` query starts warm.
+            let prof = report.timeline.profile();
+            if !prof.is_empty() {
+                let mut sp = crate::query::SelectivityProfile::default();
+                for p in &prof {
+                    sp.record(&p.key, p.visited, p.passed, p.cost_us);
+                }
+                let path = self.storage_root.join("skims").join(format!("{name}.prof"));
+                std::fs::write(&path, sp.to_text()).map_err(crate::Error::Io)?;
+            }
         }
         Ok(report)
     }
@@ -343,6 +445,84 @@ mod tests {
         assert_eq!(second.result.n_events, first.result.n_pass);
         assert!(second.result.n_pass < second.result.n_events);
         assert!(client.join("met_tight.troot").exists());
+    }
+
+    #[test]
+    fn adaptive_profile_persists_and_warm_starts_catalog_queries() {
+        let (storage, client) = setup("adprof");
+        let adaptive = crate::engine::AdaptiveOpts {
+            enabled: true,
+            warmup_groups: 1,
+            replan_every: 1,
+            seed: None,
+        };
+        let dep = Deployment::builder()
+            .placement(Placement::Client)
+            .use_pjrt(false)
+            .adaptive(adaptive)
+            .build()
+            .unwrap();
+        let first = SkimJob::new(
+            SkimQuery::new("events.troot", "ad_pass.troot")
+                .keep(&["MET_pt", "nJet", "Jet_pt", "event"])
+                .with_cut_str("MET_pt > 30 && nJet >= 1")
+                .unwrap(),
+        )
+        .storage(&storage)
+        .client_dir(&client)
+        .deployment(dep.clone())
+        .materialize("ad_skim")
+        .run()
+        .unwrap();
+        assert!(first.result.n_pass > 0);
+        let prof_path = storage.join("skims/ad_skim.prof");
+        assert!(prof_path.is_file(), "materializing adaptive run writes the sidecar");
+        let seed = crate::query::SelectivityProfile::from_text(
+            &std::fs::read_to_string(&prof_path).unwrap(),
+        );
+        assert!(seed.get("MET_pt > 30").is_some(), "{seed:?}");
+
+        // Re-skim via the catalog name: the warm-started order must not
+        // change results vs a cold adaptive run of the same query.
+        let requery = |out: &str, dep: Deployment| {
+            SkimJob::new(
+                SkimQuery::new("catalog:ad_skim", out)
+                    .keep(&["MET_pt", "nJet"])
+                    .with_cut_str("MET_pt > 60")
+                    .unwrap(),
+            )
+            .storage(&storage)
+            .client_dir(&client)
+            .deployment(dep)
+            .run()
+            .unwrap()
+        };
+        let warm = requery("ad_warm.troot", dep);
+        let cold_dep = Deployment::builder()
+            .placement(Placement::Client)
+            .use_pjrt(false)
+            .build()
+            .unwrap();
+        let cold = requery("ad_cold.troot", cold_dep);
+        assert_eq!(warm.result.n_pass, cold.result.n_pass);
+        let a = std::fs::read(client.join("ad_warm.troot")).unwrap();
+        let b = std::fs::read(client.join("ad_cold.troot")).unwrap();
+        assert_eq!(a, b, "warm start must not change the output bytes");
+
+        // `--explain --stats` over the materialized skim renders the
+        // conjunct inventory with the persisted measured tallies.
+        let stats = SkimJob::new(
+            SkimQuery::new("catalog:ad_skim", "unused.troot")
+                .keep(&["MET_pt"])
+                .with_cut_str("MET_pt > 30 && nJet >= 1")
+                .unwrap(),
+        )
+        .storage(&storage)
+        .explain_stats()
+        .unwrap();
+        assert!(stats.contains("conjunct inventory"), "{stats}");
+        assert!(stats.contains("MET_pt > 30"), "{stats}");
+        assert!(stats.contains("persisted selectivity profile"), "{stats}");
     }
 
     #[test]

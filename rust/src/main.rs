@@ -76,6 +76,7 @@ COMMANDS:
           dataset partNNN.troot plus a NAME.catalog listing)
   skim   --storage DIR (--query FILE | --higgs --input SPEC |
          --input SPEC [--branches A,B,*]) [--cut 'EXPR'] [--explain]
+         [--stats] [--adaptive [--warmup-groups N] [--replan-every N]]
          [--mode client-legacy|client-opt|server-side|skimroot]
          [--link 1g|10g|100g] [--fan-out N] [--artifacts DIR]
          [--client-dir DIR] [--deadline-ms N] [--materialize NAME]
@@ -89,6 +90,10 @@ COMMANDS:
           --cut takes a TCut-style string, e.g.
           'nMuon >= 2 && (HLT_Mu50 || max(Muon_pt) > 100)';
           --explain prints the compiled plan without running;
+          --explain --stats also prints the conjunct inventory with
+          persisted selectivity tallies; --adaptive reorders the cut
+          funnel by measured selectivity after a warm-up window — the
+          run report then includes the per-conjunct profile;
           --materialize registers the output in the storage catalog
           as catalog:NAME with lineage, re-skimmable by name)
   index  [--force] FILE...
@@ -219,7 +224,7 @@ fn cmd_index(raw: Vec<String>) -> Result<()> {
 }
 
 fn cmd_skim(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw, &["higgs", "no-runtime", "explain"])?;
+    let args = Args::parse(raw, &["higgs", "no-runtime", "explain", "adaptive", "stats"])?;
     let storage = args.require("storage")?;
     let mut query = if args.switch("higgs") {
         let input = args.require("input")?;
@@ -247,9 +252,15 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
 
     if args.switch("explain") {
         // Compile and print the plan (expression tree, phase-1/2 fetch
-        // sets, kernel-fit decision) without executing the job.
+        // sets, kernel-fit decision) without executing the job. With
+        // --stats, also print the adaptive conjunct inventory — and,
+        // for a catalog:NAME input with a persisted selectivity
+        // sidecar, the measured pass rates a warm start would use.
         let job = SkimJob::new(query).storage(storage);
         println!("{}", job.explain()?);
+        if args.switch("stats") {
+            println!("{}", job.explain_stats()?);
+        }
         return Ok(());
     }
 
@@ -270,6 +281,11 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
         seed: args.parse_num("fault-seed", 0u64)?,
     };
     deployment.fan_out = args.parse_num("fan-out", 1usize)?;
+    // Selectivity-adaptive funnel ordering (interpreter path only;
+    // strictly opt-in — the fixed stage order stays the default).
+    deployment.adaptive.enabled = args.switch("adaptive");
+    deployment.adaptive.warmup_groups = args.parse_num("warmup-groups", 4u64)?;
+    deployment.adaptive.replan_every = args.parse_num("replan-every", 8u64)?;
 
     let mut job = SkimJob::new(query)
         .storage(storage)

@@ -111,6 +111,27 @@ struct Tables {
     /// bytes moved per stage (for tables and sanity checks).
     bytes: BTreeMap<Stage, u64>,
     counters: BTreeMap<&'static str, u64>,
+    /// Per-conjunct selectivity tallies keyed by canonical display
+    /// string: `(funnel stage, visited, passed, cost_us)`. Recorded
+    /// only by the adaptive evaluator; empty otherwise.
+    profile: BTreeMap<String, (u8, u64, u64, u64)>,
+}
+
+/// One conjunct's selectivity tallies, as reported through
+/// `JobReport → JobStatus → wire → HTTP JSON` (see
+/// [`Timeline::record_profile`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConjunctProfile {
+    /// Canonical conjunct display string (the profile key).
+    pub key: String,
+    /// Funnel stage the conjunct reports under (0-3).
+    pub stage: u8,
+    /// Events alive when the conjunct ran.
+    pub visited: u64,
+    /// Events still alive after it.
+    pub passed: u64,
+    /// Wall-clock microseconds spent evaluating it.
+    pub cost_us: u64,
 }
 
 /// Shared, thread-safe stage/latency accounting for one job run.
@@ -174,6 +195,34 @@ impl Timeline {
         *tab.counters.entry(name).or_insert(0) += n;
     }
 
+    /// Accumulate one conjunct's selectivity tallies under its
+    /// canonical display `key` (runtime-owned strings, unlike the
+    /// static counter names). The stage of an existing entry is kept —
+    /// a conjunct's funnel stage never changes between merges.
+    pub fn record_profile(&self, key: &str, stage: u8, visited: u64, passed: u64, cost_us: u64) {
+        let mut tab = self.inner.lock().unwrap();
+        let e = tab.profile.entry(key.to_string()).or_insert((stage, 0, 0, 0));
+        e.1 += visited;
+        e.2 += passed;
+        e.3 += cost_us;
+    }
+
+    /// Snapshot of the per-conjunct selectivity profile, sorted by key
+    /// (empty unless the adaptive evaluator ran).
+    pub fn profile(&self) -> Vec<ConjunctProfile> {
+        let tab = self.inner.lock().unwrap();
+        tab.profile
+            .iter()
+            .map(|(k, &(stage, visited, passed, cost_us))| ConjunctProfile {
+                key: k.clone(),
+                stage,
+                visited,
+                passed,
+                cost_us,
+            })
+            .collect()
+    }
+
     /// Fold another timeline's accounting into this one: real compute,
     /// virtual transport, bytes and counters are all added. Used to
     /// fold a parallel branch into the job timeline — e.g. a DPU
@@ -184,13 +233,14 @@ impl Timeline {
         if Arc::ptr_eq(&self.inner, &other.inner) {
             return;
         }
-        let (real, virt, bytes, counters) = {
+        let (real, virt, bytes, counters, profile) = {
             let tab = other.inner.lock().unwrap();
             (
                 tab.real.clone(),
                 tab.virt.clone(),
                 tab.bytes.clone(),
                 tab.counters.clone(),
+                tab.profile.clone(),
             )
         };
         let mut tab = self.inner.lock().unwrap();
@@ -206,24 +256,40 @@ impl Timeline {
         for (k, c) in counters {
             *tab.counters.entry(k).or_insert(0) += c;
         }
+        for (k, (stage, v, p, c)) in profile {
+            let e = tab.profile.entry(k).or_insert((stage, 0, 0, 0));
+            e.1 += v;
+            e.2 += p;
+            e.3 += c;
+        }
         self.virt_ns
             .fetch_add(other.virt_ns.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
-    /// Fold only another timeline's **counters** into this one.
-    /// Counters are real work totals (attempts, cache hits, served
-    /// bytes) that must be summed across *all* parallel branches, even
-    /// when only the critical branch's modeled time is folded via
-    /// [`Timeline::merge_from`] — the dataset layer uses this for its
-    /// non-critical lanes.
+    /// Fold only another timeline's **counters** (and selectivity
+    /// profile) into this one. Counters are real work totals
+    /// (attempts, cache hits, served bytes) that must be summed across
+    /// *all* parallel branches, even when only the critical branch's
+    /// modeled time is folded via [`Timeline::merge_from`] — the
+    /// dataset layer uses this for its non-critical lanes. Per-conjunct
+    /// tallies are the same kind of total, so they ride along.
     pub fn merge_counters_from(&self, other: &Timeline) {
         if Arc::ptr_eq(&self.inner, &other.inner) {
             return;
         }
-        let counters = other.inner.lock().unwrap().counters.clone();
+        let (counters, profile) = {
+            let tab = other.inner.lock().unwrap();
+            (tab.counters.clone(), tab.profile.clone())
+        };
         let mut tab = self.inner.lock().unwrap();
         for (k, c) in counters {
             *tab.counters.entry(k).or_insert(0) += c;
+        }
+        for (k, (stage, v, p, c)) in profile {
+            let e = tab.profile.entry(k).or_insert((stage, 0, 0, 0));
+            e.1 += v;
+            e.2 += p;
+            e.3 += c;
         }
     }
 
@@ -293,7 +359,12 @@ impl Timeline {
                 rows.push((stage, total, self.bytes(stage)));
             }
         }
-        StageReport { rows, elapsed: self.elapsed(), counters: self.counters() }
+        StageReport {
+            rows,
+            elapsed: self.elapsed(),
+            counters: self.counters(),
+            profile: self.profile(),
+        }
     }
 }
 
@@ -306,6 +377,9 @@ pub struct StageReport {
     pub elapsed: f64,
     /// Named counters, sorted by name (empty entries omitted).
     pub counters: Vec<(String, u64)>,
+    /// Per-conjunct selectivity tallies (empty unless the adaptive
+    /// evaluator ran).
+    pub profile: Vec<ConjunctProfile>,
 }
 
 impl std::fmt::Display for StageReport {
@@ -325,6 +399,26 @@ impl std::fmt::Display for StageReport {
             write!(f, "\n\ncounters:")?;
             for (name, value) in &self.counters {
                 write!(f, "\n  {name:<24} {value}")?;
+            }
+        }
+        if !self.profile.is_empty() {
+            write!(f, "\n\nselectivity profile:")?;
+            write!(
+                f,
+                "\n  {:<5} {:>10} {:>10} {:>8}  {}",
+                "stage", "visited", "passed", "pass%", "conjunct"
+            )?;
+            for p in &self.profile {
+                let rate = if p.visited > 0 {
+                    format!("{:.1}", 100.0 * p.passed as f64 / p.visited as f64)
+                } else {
+                    "-".into()
+                };
+                write!(
+                    f,
+                    "\n  {:<5} {:>10} {:>10} {:>8}  {}",
+                    p.stage, p.visited, p.passed, rate, p.key
+                )?;
             }
         }
         Ok(())
@@ -393,6 +487,35 @@ mod tests {
         assert!(s.contains("counters"));
         assert!(s.contains("basket_cache_hits"));
         assert!(s.contains("12"));
+    }
+
+    #[test]
+    fn profile_records_merges_and_renders() {
+        let tl = Timeline::new();
+        assert!(tl.profile().is_empty());
+        tl.record_profile("MET_pt > 25", 0, 100, 40, 7);
+        tl.record_profile("MET_pt > 25", 0, 50, 10, 3);
+        // merge_from folds tallies key-wise, like counters.
+        let shard = Timeline::new();
+        shard.record_profile("MET_pt > 25", 0, 10, 5, 1);
+        shard.record_profile("trigger(HLT_IsoMu24)", 3, 55, 54, 2);
+        tl.merge_from(&shard);
+        // merge_counters_from carries the profile too (non-critical
+        // lanes still did real per-conjunct work).
+        let lane = Timeline::new();
+        lane.record_profile("trigger(HLT_IsoMu24)", 3, 5, 1, 1);
+        tl.merge_counters_from(&lane);
+        let prof = tl.profile();
+        assert_eq!(prof.len(), 2);
+        assert_eq!(
+            (prof[0].key.as_str(), prof[0].stage, prof[0].visited, prof[0].passed, prof[0].cost_us),
+            ("MET_pt > 25", 0, 160, 55, 11)
+        );
+        assert_eq!((prof[1].visited, prof[1].passed), (60, 55));
+        let s = tl.report().to_string();
+        assert!(s.contains("selectivity profile"));
+        assert!(s.contains("MET_pt > 25"));
+        assert!(s.contains("trigger(HLT_IsoMu24)"));
     }
 
     #[test]

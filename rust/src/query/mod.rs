@@ -23,7 +23,10 @@
 //!   interpreter and the AOT-compiled vectorized kernel. IR conjuncts
 //!   that match the kernel's fixed-function stages are classified onto
 //!   them; the rest compile to residual [`plan::CExpr`]s that keep
-//!   [`plan::CutProgram::fits_kernel`] honest.
+//!   [`plan::CutProgram::fits_kernel`] honest;
+//! * [`stats`] — per-conjunct selectivity statistics and the
+//!   cost-over-kill-rate ranking behind selectivity-adaptive
+//!   execution, plus the persistent [`stats::SelectivityProfile`].
 
 pub mod ast;
 pub mod dataset;
@@ -31,6 +34,7 @@ pub mod expr;
 pub mod json;
 pub mod parse;
 pub mod plan;
+pub mod stats;
 pub mod wildcard;
 
 pub use ast::{CmpOp, EventSelection, ObjectCut, ObjectSelection, ScalarCut, Selection, SkimQuery};
@@ -39,3 +43,4 @@ pub use expr::{AggOp, BinOp, Expr, UnaryOp};
 pub use json::Json;
 pub use parse::parse_cut;
 pub use plan::{CutProgram, SkimPlan, ZoneCmp, ZonePredicate};
+pub use stats::{Conjunct, ConjunctKind, ConjunctStats, SelectivityProfile};

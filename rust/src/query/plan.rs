@@ -29,6 +29,7 @@ use super::expr::{AggOp, BinOp, Expr, UnaryOp};
 use super::wildcard;
 use crate::troot::{BranchKind, DType, FileMeta};
 use crate::{Error, Result};
+use std::sync::Arc;
 
 /// A dense, plan-time branch index: position of the branch in
 /// [`SkimPlan::criteria_branches`] (and therefore in the engine's
@@ -197,6 +198,15 @@ pub enum CExpr {
         /// Optional object-selection predicate.
         pred: Option<Box<CExpr>>,
     },
+    /// A common subexpression hoisted by the CSE pass: every
+    /// occurrence of a structurally-equal subtree points at one shared
+    /// node, so batch evaluators compute it once per batch (a scratch
+    /// column keyed by the node's address) and reuse the values at
+    /// every other occurrence. Value semantics are transparent — the
+    /// scalar oracle simply recurses through it — so masks are
+    /// bit-identical with and without the pass. (Derived `PartialEq`
+    /// compares pointees, keeping program equality structural.)
+    Shared(Arc<CExpr>),
 }
 
 /// The numeric, engine-agnostic form of a selection.
@@ -410,6 +420,13 @@ impl SkimPlan {
         if let Some(cut) = &query.cut {
             compile_cut(&mut program, cut, meta)?;
         }
+
+        // --- common-subexpression elimination over residual IR ---------
+        // Hoist structurally-equal subtrees (within and across residual
+        // conjuncts) into shared evaluate-once nodes. Purely an
+        // evaluation-cost rewrite: expression count, conjunct identity
+        // and values are unchanged.
+        cse_exprs(&mut program);
 
         // --- two-phase branch split ------------------------------------
         let criteria = query.referenced_branches();
@@ -933,7 +950,103 @@ fn first_jagged(e: &CExpr) -> Option<usize> {
         CExpr::Num(_) | CExpr::Scalar(_) | CExpr::Agg { .. } => None,
         CExpr::Unary(_, x) => first_jagged(x),
         CExpr::Binary(_, a, b) => first_jagged(a).or_else(|| first_jagged(b)),
+        CExpr::Shared(x) => first_jagged(x),
     }
+}
+
+// ---- common-subexpression elimination --------------------------------
+
+/// Is `e` a leaf (literal or bare column read)? Leaves are never worth
+/// sharing — the "scratch column" would just copy the input column.
+fn cse_leaf(e: &CExpr) -> bool {
+    matches!(e, CExpr::Num(_) | CExpr::Scalar(_) | CExpr::Jagged(_))
+}
+
+fn cse_count(e: &CExpr, counts: &mut std::collections::BTreeMap<String, u32>) {
+    if !cse_leaf(e) {
+        *counts.entry(format!("{e:?}")).or_insert(0) += 1;
+    }
+    match e {
+        CExpr::Num(_) | CExpr::Scalar(_) | CExpr::Jagged(_) => {}
+        CExpr::Unary(_, x) => cse_count(x, counts),
+        CExpr::Binary(_, a, b) => {
+            cse_count(a, counts);
+            cse_count(b, counts);
+        }
+        CExpr::Agg { arg, pred, .. } => {
+            cse_count(arg, counts);
+            if let Some(p) = pred {
+                cse_count(p, counts);
+            }
+        }
+        CExpr::Shared(x) => cse_count(x, counts),
+    }
+}
+
+fn cse_rewrite_children(
+    e: CExpr,
+    counts: &std::collections::BTreeMap<String, u32>,
+    cache: &mut std::collections::BTreeMap<String, Arc<CExpr>>,
+) -> CExpr {
+    match e {
+        CExpr::Unary(op, x) => CExpr::Unary(op, Box::new(cse_rewrite(*x, counts, cache))),
+        CExpr::Binary(op, a, b) => CExpr::Binary(
+            op,
+            Box::new(cse_rewrite(*a, counts, cache)),
+            Box::new(cse_rewrite(*b, counts, cache)),
+        ),
+        CExpr::Agg { op, nobj, arg, pred } => CExpr::Agg {
+            op,
+            nobj,
+            arg: Box::new(cse_rewrite(*arg, counts, cache)),
+            pred: pred.map(|p| Box::new(cse_rewrite(*p, counts, cache))),
+        },
+        other => other,
+    }
+}
+
+/// Top-down rewrite: the first occurrence of a repeated subtree
+/// becomes the canonical shared node (with its own children
+/// recursively rewritten, so nested repeats share too); every later
+/// structurally-equal occurrence points at the same [`Arc`].
+fn cse_rewrite(
+    e: CExpr,
+    counts: &std::collections::BTreeMap<String, u32>,
+    cache: &mut std::collections::BTreeMap<String, Arc<CExpr>>,
+) -> CExpr {
+    if !cse_leaf(&e) {
+        let key = format!("{e:?}");
+        if counts.get(&key).copied().unwrap_or(0) >= 2 {
+            if let Some(arc) = cache.get(&key) {
+                return CExpr::Shared(arc.clone());
+            }
+            let arc = Arc::new(cse_rewrite_children(e, counts, cache));
+            cache.insert(key, arc.clone());
+            return CExpr::Shared(arc);
+        }
+    }
+    cse_rewrite_children(e, counts, cache)
+}
+
+/// The CSE pass over a program's residual expressions. Keys are the
+/// (deterministic) `Debug` rendering of a subtree, so "common" means
+/// structurally equal over resolved column indices. Conjunct count and
+/// order are preserved — only the interior wiring changes.
+fn cse_exprs(program: &mut CutProgram) {
+    if program.exprs.is_empty() {
+        return;
+    }
+    let mut counts = std::collections::BTreeMap::new();
+    for e in &program.exprs {
+        cse_count(e, &mut counts);
+    }
+    if !counts.values().any(|&c| c >= 2) {
+        return;
+    }
+    let mut cache = std::collections::BTreeMap::new();
+    let exprs = std::mem::take(&mut program.exprs);
+    program.exprs =
+        exprs.into_iter().map(|e| cse_rewrite(e, &counts, &mut cache)).collect();
 }
 
 #[cfg(test)]
@@ -1440,5 +1553,84 @@ mod tests {
         let fit = SkimPlan::build(&query(Q), &meta()).unwrap();
         let text = fit.explain(&query(Q));
         assert!(text.contains("vectorized AOT kernel"));
+    }
+
+    /// Collect the addresses of every [`CExpr::Shared`] node in `e`.
+    fn shared_ptrs(e: &CExpr, out: &mut Vec<usize>) {
+        match e {
+            CExpr::Num(_) | CExpr::Scalar(_) | CExpr::Jagged(_) => {}
+            CExpr::Unary(_, x) => shared_ptrs(x, out),
+            CExpr::Binary(_, a, b) => {
+                shared_ptrs(a, out);
+                shared_ptrs(b, out);
+            }
+            CExpr::Agg { arg, pred, .. } => {
+                shared_ptrs(arg, out);
+                if let Some(p) = pred {
+                    shared_ptrs(p, out);
+                }
+            }
+            CExpr::Shared(x) => {
+                out.push(std::sync::Arc::as_ptr(x) as usize);
+                shared_ptrs(x, out);
+            }
+        }
+    }
+
+    #[test]
+    fn cse_hoists_repeats_within_one_conjunct() {
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "cut": "MET_pt + nElectron > 3 || MET_pt + nElectron < 1"}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        assert_eq!(plan.program.exprs.len(), 1);
+        let mut ptrs = Vec::new();
+        shared_ptrs(&plan.program.exprs[0], &mut ptrs);
+        // The repeated `MET_pt + nElectron` is one shared node with two
+        // occurrences.
+        assert_eq!(ptrs.len(), 2, "{:?}", plan.program.exprs[0]);
+        assert_eq!(ptrs[0], ptrs[1]);
+    }
+
+    #[test]
+    fn cse_shares_across_conjuncts_and_skips_unique_trees() {
+        // `max(Jet_pt)` appears in both residual conjuncts: one Arc,
+        // two occurrences, conjunct count unchanged.
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "cut": "max(Jet_pt) > 60 && max(Jet_pt) + MET_pt > 100"}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        assert_eq!(plan.program.exprs.len(), 2);
+        let mut ptrs = Vec::new();
+        for e in &plan.program.exprs {
+            shared_ptrs(e, &mut ptrs);
+        }
+        assert_eq!(ptrs.len(), 2, "{:?}", plan.program.exprs);
+        assert_eq!(ptrs[0], ptrs[1]);
+
+        // No repeats → the pass is a no-op (no Shared nodes at all).
+        let q = query(
+            r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+                "cut": "MET_pt + nElectron > 3"}"#,
+        );
+        let plan = SkimPlan::build(&q, &meta()).unwrap();
+        let mut ptrs = Vec::new();
+        for e in &plan.program.exprs {
+            shared_ptrs(e, &mut ptrs);
+        }
+        assert!(ptrs.is_empty(), "{:?}", plan.program.exprs);
+    }
+
+    #[test]
+    fn cse_preserves_structural_program_equality() {
+        // Two builds of the same query produce equal programs (derived
+        // PartialEq compares Shared pointees structurally).
+        let text = r#"{"input": "f", "output": "o", "branches": ["MET_pt"],
+            "cut": "MET_pt + nElectron > 3 || MET_pt + nElectron < 1"}"#;
+        let a = SkimPlan::build(&query(text), &meta()).unwrap();
+        let b = SkimPlan::build(&query(text), &meta()).unwrap();
+        assert_eq!(a.program, b.program);
     }
 }

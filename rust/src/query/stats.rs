@@ -1,0 +1,435 @@
+//! Per-conjunct selectivity statistics — the measurement half of
+//! selectivity-adaptive execution (ROADMAP item 3).
+//!
+//! The compiled [`CutProgram`] is a bag of ANDed **conjuncts** spread
+//! over the kernel's fixed-function stages (scalar preselection cuts,
+//! object groups, the HT unit, residual IR expressions, the trigger
+//! OR). The fixed evaluators run them in stage order; the adaptive
+//! evaluator ([`crate::engine::interp::eval_adaptive`]) runs them in
+//! any order and records, per conjunct: events **visited** (alive when
+//! the conjunct ran), events **passed**, and wall-clock **cost**.
+//!
+//! From those counts [`rank_order`] derives the classic
+//! cost-over-kill-rate ordering: evaluate the conjunct with the
+//! smallest `estimated_cost / (1 - pass_rate)` first, so cheap,
+//! selective cuts kill events before expensive, permissive ones run.
+//! The rank uses the *structural* cost estimate ([`Conjunct::cost`]),
+//! not measured wall-clock, so the chosen order — and therefore every
+//! funnel count — is a deterministic function of the data alone;
+//! measured `cost_us` is carried for reporting only.
+//!
+//! Profiles are keyed by the conjunct's **canonical display string**
+//! (stable across runs and processes), which lets a
+//! [`SelectivityProfile`] ride the wire, persist next to a
+//! materialized skim, and warm-start a repeat query.
+
+use crate::query::expr::{AggOp, BinOp, UnaryOp};
+use crate::query::plan::{CExpr, CutProgram};
+use std::collections::BTreeMap;
+
+/// Which compiled conjunct a [`Conjunct`] refers to (indices into the
+/// owning [`CutProgram`]'s banks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConjunctKind {
+    /// `scalar_cuts[i]` — one preselection comparison.
+    Scalar(usize),
+    /// `groups[i]` — one object-group requirement.
+    Group(usize),
+    /// The HT unit.
+    Ht,
+    /// `exprs[i]` — one residual IR expression.
+    Residual(usize),
+    /// The trigger OR bank (one conjunct for the whole bank).
+    Trigger,
+}
+
+/// One ANDed term of a compiled program, with its funnel stage, its
+/// canonical display key and a deterministic structural cost estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Conjunct {
+    /// Which program bank entry this is.
+    pub kind: ConjunctKind,
+    /// Funnel stage the conjunct's verdict is recorded under
+    /// (0 preselection, 1 objects, 2 event-level, 3 trigger).
+    pub stage: u8,
+    /// Canonical display string — the profile key.
+    pub key: String,
+    /// Structural per-event cost estimate (arbitrary units, > 0).
+    pub cost: f64,
+}
+
+/// Runtime tallies for one conjunct.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ConjunctStats {
+    /// Events alive when the conjunct ran.
+    pub visited: u64,
+    /// Events still alive after it.
+    pub passed: u64,
+    /// Wall-clock microseconds spent evaluating it (reporting only —
+    /// never an input to the ordering).
+    pub cost_us: u64,
+}
+
+impl ConjunctStats {
+    /// Measured pass rate, defaulting to 0.5 before any event was seen
+    /// (an uninformative prior that keeps unvisited conjuncts ranked
+    /// by cost alone).
+    pub fn pass_rate(&self) -> f64 {
+        if self.visited == 0 {
+            0.5
+        } else {
+            self.passed as f64 / self.visited as f64
+        }
+    }
+
+    /// Fold another tally into this one.
+    pub fn merge(&mut self, other: &ConjunctStats) {
+        self.visited += other.visited;
+        self.passed += other.passed;
+        self.cost_us += other.cost_us;
+    }
+}
+
+/// A persistent, mergeable map of conjunct key → tallies: the unit
+/// that rides `Timeline → JobReport → JobStatus → wire → HTTP JSON`
+/// and persists next to a materialized skim for warm starts.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SelectivityProfile {
+    /// Tallies keyed by canonical conjunct display string.
+    pub entries: BTreeMap<String, ConjunctStats>,
+}
+
+impl SelectivityProfile {
+    /// Add tallies for `key` (creating the entry if new).
+    pub fn record(&mut self, key: &str, visited: u64, passed: u64, cost_us: u64) {
+        let e = self.entries.entry(key.to_string()).or_default();
+        e.visited += visited;
+        e.passed += passed;
+        e.cost_us += cost_us;
+    }
+
+    /// Fold `other` into this profile, key by key.
+    pub fn merge(&mut self, other: &SelectivityProfile) {
+        for (k, s) in &other.entries {
+            self.entries.entry(k.clone()).or_default().merge(s);
+        }
+    }
+
+    /// Tallies for `key`, if any were recorded.
+    pub fn get(&self, key: &str) -> Option<&ConjunctStats> {
+        self.entries.get(key)
+    }
+
+    /// Serialize as one tab-separated line per conjunct
+    /// (`visited\tpassed\tcost_us\tkey` — keys never contain tabs).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (k, s) in &self.entries {
+            out.push_str(&format!("{}\t{}\t{}\t{}\n", s.visited, s.passed, s.cost_us, k));
+        }
+        out
+    }
+
+    /// Parse the [`SelectivityProfile::to_text`] format, skipping
+    /// malformed lines (a corrupt sidecar degrades to a cold start,
+    /// never an error).
+    pub fn from_text(text: &str) -> SelectivityProfile {
+        let mut p = SelectivityProfile::default();
+        for line in text.lines() {
+            let mut it = line.splitn(4, '\t');
+            let (Some(v), Some(pa), Some(c), Some(key)) =
+                (it.next(), it.next(), it.next(), it.next())
+            else {
+                continue;
+            };
+            let (Ok(v), Ok(pa), Ok(c)) = (v.parse(), pa.parse(), c.parse()) else {
+                continue;
+            };
+            if key.is_empty() {
+                continue;
+            }
+            p.record(key, v, pa, c);
+        }
+        p
+    }
+
+    /// Is there nothing recorded?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn op_token(op: u8) -> &'static str {
+    match op {
+        0 => ">",
+        1 => ">=",
+        2 => "<",
+        3 => "<=",
+        4 => "==",
+        _ => "!=",
+    }
+}
+
+fn cmp_key(name: &str, op: u8, abs: bool, value: f32) -> String {
+    if abs {
+        format!("abs({name}) {} {value}", op_token(op))
+    } else {
+        format!("{name} {} {value}", op_token(op))
+    }
+}
+
+fn bin_token(op: BinOp) -> &'static str {
+    match op {
+        BinOp::Add => "+",
+        BinOp::Sub => "-",
+        BinOp::Mul => "*",
+        BinOp::Div => "/",
+        BinOp::Lt => "<",
+        BinOp::Le => "<=",
+        BinOp::Gt => ">",
+        BinOp::Ge => ">=",
+        BinOp::Eq => "==",
+        BinOp::Ne => "!=",
+        BinOp::And => "&&",
+        BinOp::Or => "||",
+        BinOp::Min => "min",
+        BinOp::Max => "max",
+    }
+}
+
+/// Render a compiled residual expression back to a canonical cut-like
+/// string with column names resolved (the display key of a
+/// [`ConjunctKind::Residual`] conjunct).
+fn render_cexpr(e: &CExpr, p: &CutProgram) -> String {
+    match e {
+        CExpr::Num(v) => format!("{v}"),
+        CExpr::Scalar(s) => p.scalar_columns[*s].clone(),
+        CExpr::Jagged(c) => p.obj_columns[*c].clone(),
+        CExpr::Unary(op, x) => {
+            let inner = render_cexpr(x, p);
+            match op {
+                UnaryOp::Neg => format!("-({inner})"),
+                UnaryOp::Not => format!("!({inner})"),
+                UnaryOp::Abs => format!("abs({inner})"),
+            }
+        }
+        CExpr::Binary(op, a, b) => {
+            let (ra, rb) = (render_cexpr(a, p), render_cexpr(b, p));
+            match op {
+                BinOp::Min | BinOp::Max => format!("{}({ra}, {rb})", bin_token(*op)),
+                _ => format!("({ra} {} {rb})", bin_token(*op)),
+            }
+        }
+        CExpr::Agg { op, arg, pred, .. } => {
+            let name = match op {
+                AggOp::Count => "count",
+                AggOp::Any => "any",
+                AggOp::All => "all",
+                AggOp::Sum => "sum",
+                AggOp::Max => "max",
+                AggOp::Min => "min",
+            };
+            match pred {
+                Some(pr) => {
+                    format!("{name}({}[{}])", render_cexpr(arg, p), render_cexpr(pr, p))
+                }
+                None => format!("{name}({})", render_cexpr(arg, p)),
+            }
+        }
+        CExpr::Shared(x) => render_cexpr(x, p),
+    }
+}
+
+/// Structural per-evaluation cost of a residual expression: node count
+/// with object-shaped work (aggregation slot loops) weighted ×4, and
+/// shared subtrees counted as a cached read.
+fn cexpr_cost(e: &CExpr) -> f64 {
+    match e {
+        CExpr::Num(_) | CExpr::Scalar(_) | CExpr::Jagged(_) => 1.0,
+        CExpr::Unary(_, x) => 1.0 + cexpr_cost(x),
+        CExpr::Binary(_, a, b) => 1.0 + cexpr_cost(a) + cexpr_cost(b),
+        CExpr::Agg { arg, pred, .. } => {
+            let inner = cexpr_cost(arg) + pred.as_ref().map_or(0.0, |p| cexpr_cost(p));
+            2.0 + 4.0 * inner
+        }
+        // Evaluated once, then read from the scratch column.
+        CExpr::Shared(_) => 1.0,
+    }
+}
+
+/// Enumerate the ANDed conjuncts of a compiled program in its fixed
+/// (stage) evaluation order, with canonical keys and structural cost
+/// estimates. This is the identity the adaptive evaluator permutes and
+/// the profile is keyed by.
+pub fn conjuncts_of(program: &CutProgram) -> Vec<Conjunct> {
+    let mut out = Vec::new();
+    for (i, c) in program.scalar_cuts.iter().enumerate() {
+        out.push(Conjunct {
+            kind: ConjunctKind::Scalar(i),
+            stage: 0,
+            key: cmp_key(&program.scalar_columns[c.col], c.op, c.abs, c.value),
+            cost: 1.0,
+        });
+    }
+    for (i, g) in program.groups.iter().enumerate() {
+        let cuts: Vec<String> = program.obj_cuts[g.cut_range.clone()]
+            .iter()
+            .map(|c| cmp_key(&program.obj_columns[c.col], c.op, c.abs, c.value))
+            .collect();
+        out.push(Conjunct {
+            kind: ConjunctKind::Group(i),
+            stage: 1,
+            key: format!("count({}) >= {}", cuts.join(" && "), g.min_count),
+            cost: 2.0 + 4.0 * g.cut_range.len() as f64,
+        });
+    }
+    if let Some(ht) = &program.ht {
+        let col = &program.obj_columns[ht.col];
+        out.push(Conjunct {
+            kind: ConjunctKind::Ht,
+            stage: 2,
+            key: format!("sum({col}[{col} > {}]) >= {}", ht.object_pt_min, ht.min_ht),
+            cost: 6.0,
+        });
+    }
+    for (i, e) in program.exprs.iter().enumerate() {
+        out.push(Conjunct {
+            kind: ConjunctKind::Residual(i),
+            stage: 2,
+            key: render_cexpr(e, program),
+            cost: cexpr_cost(e),
+        });
+    }
+    if !program.triggers.is_empty() {
+        let flags: Vec<&str> =
+            program.triggers.iter().map(|&s| program.scalar_columns[s].as_str()).collect();
+        out.push(Conjunct {
+            kind: ConjunctKind::Trigger,
+            stage: 3,
+            key: format!("trigger({})", flags.join(" | ")),
+            cost: program.triggers.len() as f64,
+        });
+    }
+    out
+}
+
+/// The adaptive ordering: indices into `conjuncts` sorted by
+/// `cost / (1 - pass_rate)` ascending — cheapest, most selective
+/// first. A conjunct that has never killed an event (pass rate ≥ 1)
+/// ranks infinite and runs last; ties (including all-infinite, the
+/// pathological all-pass case) break on the original index, so the
+/// fixed stage order is the deterministic fallback.
+pub fn rank_order(conjuncts: &[Conjunct], stats: &[ConjunctStats]) -> Vec<usize> {
+    debug_assert_eq!(conjuncts.len(), stats.len());
+    let rank = |i: usize| -> f64 {
+        let kill = 1.0 - stats[i].pass_rate();
+        if kill <= 0.0 {
+            f64::INFINITY
+        } else {
+            conjuncts[i].cost / kill
+        }
+    };
+    let mut idx: Vec<usize> = (0..conjuncts.len()).collect();
+    idx.sort_by(|&a, &b| rank(a).partial_cmp(&rank(b)).unwrap().then(a.cmp(&b)));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::plan::{HtParam, ObjCutParam, ObjGroup, ScalarCutParam};
+
+    fn program() -> CutProgram {
+        let mut p = CutProgram::default();
+        p.scalar_columns = vec!["MET_pt".into(), "HLT_IsoMu24".into()];
+        p.obj_columns = vec!["Electron_pt".into(), "Jet_pt".into()];
+        p.scalar_cuts.push(ScalarCutParam { col: 0, op: 0, abs: false, value: 25.0 });
+        p.obj_cuts.push(ObjCutParam { col: 0, op: 0, abs: false, value: 25.0 });
+        p.groups.push(ObjGroup { collection: "Electron".into(), cut_range: 0..1, min_count: 1 });
+        p.ht = Some(HtParam { col: 1, object_pt_min: 30.0, min_ht: 200.0 });
+        p.triggers.push(1);
+        p.exprs.push(CExpr::Binary(
+            BinOp::Gt,
+            Box::new(CExpr::Scalar(0)),
+            Box::new(CExpr::Num(100.0)),
+        ));
+        p
+    }
+
+    #[test]
+    fn conjunct_keys_are_canonical_displays() {
+        let cs = conjuncts_of(&program());
+        let keys: Vec<&str> = cs.iter().map(|c| c.key.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "MET_pt > 25",
+                "count(Electron_pt > 25) >= 1",
+                "sum(Jet_pt[Jet_pt > 30]) >= 200",
+                "(MET_pt > 100)",
+                "trigger(HLT_IsoMu24)",
+            ]
+        );
+        assert_eq!(cs.iter().map(|c| c.stage).collect::<Vec<_>>(), vec![0, 1, 2, 2, 3]);
+        assert!(cs.iter().all(|c| c.cost > 0.0));
+    }
+
+    #[test]
+    fn rank_prefers_cheap_selective_conjuncts() {
+        let cs = conjuncts_of(&program());
+        let mut stats = vec![ConjunctStats::default(); cs.len()];
+        // Unvisited: rank = cost / 0.5 — pure cost order (scalar cut
+        // and trigger tie at cost 1, index breaks the tie).
+        assert_eq!(rank_order(&cs, &stats), vec![0, 4, 1, 3, 2]);
+
+        // The HT unit measured maximally selective: it jumps first
+        // despite its cost; the all-pass scalar cut drops last.
+        stats[2] = ConjunctStats { visited: 1000, passed: 10, cost_us: 5 };
+        stats[0] = ConjunctStats { visited: 1000, passed: 1000, cost_us: 1 };
+        let order = rank_order(&cs, &stats);
+        assert_eq!(order[0], 2);
+        assert_eq!(*order.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn all_pass_stats_fall_back_to_fixed_order() {
+        let cs = conjuncts_of(&program());
+        let stats: Vec<ConjunctStats> = cs
+            .iter()
+            .map(|_| ConjunctStats { visited: 500, passed: 500, cost_us: 1 })
+            .collect();
+        // Every rank is infinite — the tie-break keeps stage order.
+        assert_eq!(rank_order(&cs, &stats), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn profile_round_trips_through_text() {
+        let mut p = SelectivityProfile::default();
+        p.record("MET_pt > 25", 1000, 400, 37);
+        p.record("trigger(HLT_IsoMu24 | HLT_Ele32_WPTight)", 400, 390, 12);
+        let text = p.to_text();
+        assert_eq!(SelectivityProfile::from_text(&text), p);
+        // Malformed lines are skipped, not fatal.
+        let dirty = format!("garbage\n{text}also\tbad\n");
+        assert_eq!(SelectivityProfile::from_text(&dirty), p);
+        // Merge accumulates key-wise.
+        let mut q = p.clone();
+        q.merge(&p);
+        assert_eq!(q.get("MET_pt > 25").unwrap().visited, 2000);
+        assert_eq!(q.get("MET_pt > 25").unwrap().passed, 800);
+    }
+
+    #[test]
+    fn shared_subtrees_render_transparently_and_cost_as_reads() {
+        let inner = CExpr::Binary(
+            BinOp::Mul,
+            Box::new(CExpr::Scalar(0)),
+            Box::new(CExpr::Num(2.0)),
+        );
+        let shared = CExpr::Shared(std::sync::Arc::new(inner.clone()));
+        let mut p = CutProgram::default();
+        p.scalar_columns.push("MET_pt".into());
+        assert_eq!(render_cexpr(&shared, &p), render_cexpr(&inner, &p));
+        assert!(cexpr_cost(&shared) < cexpr_cost(&inner));
+    }
+}

@@ -151,6 +151,11 @@ fn status_frame(status: &JobStatus) -> Response {
         deadline_exceeded: status.deadline_exceeded,
         msg: status.error.clone().unwrap_or_default(),
         file_errors: status.file_errors.clone(),
+        profile: status
+            .profile
+            .iter()
+            .map(|p| (p.key.clone(), p.stage, p.visited, p.passed, p.cost_us))
+            .collect(),
     }
 }
 
@@ -286,6 +291,7 @@ fn parse_status(job: JobId, resp: Response) -> Result<JobStatus> {
         deadline_exceeded,
         msg,
         file_errors,
+        profile,
     } = resp
     else {
         return Err(Error::protocol("not a JobState frame"));
@@ -312,6 +318,16 @@ fn parse_status(job: JobId, resp: Response) -> Result<JobStatus> {
         files_total,
         files_done,
         file_errors,
+        profile: profile
+            .into_iter()
+            .map(|(key, stage, visited, passed, cost_us)| crate::metrics::ConjunctProfile {
+                key,
+                stage,
+                visited,
+                passed,
+                cost_us,
+            })
+            .collect(),
     })
 }
 

@@ -287,6 +287,10 @@ pub struct JobStatus {
     /// Per-file failure detail, formatted `"<path>: <error>"` —
     /// fault-isolated failures that did *not* fail the whole job.
     pub file_errors: Vec<String>,
+    /// Per-conjunct selectivity tallies (empty unless the deployment
+    /// ran the adaptive evaluator; accumulates key-wise per finished
+    /// file for dataset jobs).
+    pub profile: Vec<crate::metrics::ConjunctProfile>,
 }
 
 /// One unit of queued work: a whole single-file job, one file of a
@@ -347,6 +351,8 @@ struct JobEntry {
     file_errors: Vec<(usize, String)>,
     /// Guard so exactly one worker runs the final merge.
     merging: bool,
+    /// Per-conjunct selectivity tallies from the adaptive evaluator.
+    profile: Vec<crate::metrics::ConjunctProfile>,
 }
 
 impl JobEntry {
@@ -378,6 +384,22 @@ impl JobEntry {
             files_done: 0,
             file_errors: Vec::new(),
             merging: false,
+            profile: Vec::new(),
+        }
+    }
+
+    /// Fold a finished run's selectivity profile into this entry,
+    /// key-wise (dataset jobs accumulate one run per file).
+    fn merge_profile(&mut self, prof: &[crate::metrics::ConjunctProfile]) {
+        for p in prof {
+            match self.profile.iter_mut().find(|e| e.key == p.key) {
+                Some(e) => {
+                    e.visited += p.visited;
+                    e.passed += p.passed;
+                    e.cost_us += p.cost_us;
+                }
+                None => self.profile.push(p.clone()),
+            }
         }
     }
 
@@ -409,6 +431,7 @@ impl JobEntry {
                 .iter()
                 .map(|(i, msg)| format!("{}: {msg}", self.files[*i]))
                 .collect(),
+            profile: self.profile.clone(),
         }
     }
 }
@@ -936,6 +959,7 @@ fn finish_entry(entry: &mut JobEntry, report: &crate::coordinator::JobReport, by
         entry.batch_id = batch.id;
         entry.batch_members = u64::from(batch.members);
     }
+    entry.merge_profile(&report.timeline.profile());
     entry.output = Some(bytes);
 }
 
@@ -1137,6 +1161,7 @@ fn run_file(inner: &SchedInner, id: JobId, index: usize) {
             entry.retries += report.timeline.counter("retries");
             entry.faults_injected += report.timeline.counter("faults_injected");
             entry.backoff_us += report.timeline.counter("backoff_us");
+            entry.merge_profile(&report.timeline.profile());
         }
         // Cancellation / deadline overrun is job-fatal, not a
         // fault-isolated per-file failure: flip the job terminal now,

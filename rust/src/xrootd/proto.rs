@@ -183,6 +183,10 @@ pub enum Response {
         /// Per-file failure detail (`"<path>: <error>"`) for
         /// fault-isolated dataset file failures.
         file_errors: Vec<String>,
+        /// Per-conjunct selectivity tallies from the adaptive
+        /// evaluator, `(key, stage, visited, passed, cost_us)` —
+        /// empty unless the deployment ran adaptive execution.
+        profile: Vec<(String, u8, u64, u64, u64)>,
     },
     /// Answer to [`Request::ListCatalog`]: the resolved file list, in
     /// dataset order.
@@ -414,6 +418,7 @@ impl Response {
                 deadline_exceeded,
                 msg,
                 file_errors,
+                profile,
             } => {
                 out.push(8);
                 out.push(*state);
@@ -440,6 +445,14 @@ impl Response {
                 out.extend_from_slice(&(file_errors.len() as u32).to_le_bytes());
                 for e in file_errors {
                     put_str(&mut out, e);
+                }
+                out.extend_from_slice(&(profile.len() as u32).to_le_bytes());
+                for (key, stage, visited, passed, cost_us) in profile {
+                    put_str(&mut out, key);
+                    out.push(*stage);
+                    out.extend_from_slice(&visited.to_le_bytes());
+                    out.extend_from_slice(&passed.to_le_bytes());
+                    out.extend_from_slice(&cost_us.to_le_bytes());
                 }
             }
             Response::Listing { files } => {
@@ -502,6 +515,19 @@ impl Response {
                 for _ in 0..n {
                     file_errors.push(c.str()?);
                 }
+                let n = c.u32()? as usize;
+                if n > 100_000 {
+                    return Err(Error::protocol("too many profile entries"));
+                }
+                let mut profile = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let key = c.str()?;
+                    let stage = c.u8()?;
+                    let visited = c.u64()?;
+                    let passed = c.u64()?;
+                    let cost_us = c.u64()?;
+                    profile.push((key, stage, visited, passed, cost_us));
+                }
                 Response::JobState {
                     state,
                     n_events,
@@ -523,6 +549,7 @@ impl Response {
                     deadline_exceeded,
                     msg,
                     file_errors,
+                    profile,
                 }
             }
             9 => {
@@ -647,6 +674,10 @@ mod tests {
                 deadline_exceeded: 0,
                 msg: String::new(),
                 file_errors: Vec::new(),
+                profile: vec![
+                    ("MET_pt > 25".into(), 0, 1_000_000, 400_000, 1234),
+                    ("trigger(HLT_IsoMu24 | HLT_Mu50)".into(), 3, 400_000, 777, 99),
+                ],
             },
             Response::JobState {
                 state: 5,
@@ -669,6 +700,7 @@ mod tests {
                 deadline_exceeded: 1,
                 msg: "deadline exceeded: 5.0s".into(),
                 file_errors: vec!["store/bad.troot: truncated".into()],
+                profile: Vec::new(),
             },
             Response::Listing { files: vec!["a.troot".into(), "store/b.troot".into()] },
             Response::Listing { files: Vec::new() },

@@ -1,0 +1,494 @@
+//! Differential-oracle harness for selectivity-adaptive execution.
+//!
+//! Two layers keep the adaptive evaluator honest:
+//!
+//! 1. **Evaluator-level fuzzing** — hundreds of randomized
+//!    `CutProgram`s × randomized batches × randomized conjunct orders,
+//!    every one compared bit-for-bit against the fixed-order scalar
+//!    oracle (`interp::eval`). Any failing case prints a
+//!    `SKIM_TEST_SEED=<n>` line; exporting that variable replays
+//!    exactly that case.
+//!
+//! 2. **End-to-end engine matrix** — a generated dataset skimmed under
+//!    every combination of parallelism {1, 2, 4} × adaptive {off, on}
+//!    × zone-map {off, on}, asserting `n_pass`, `n_events` and the
+//!    output **bytes** match the fixed-order reference run.
+//!
+//! The invariant under test (see `eval_adaptive`): conjunct reordering
+//! and common-subexpression sharing may change *per-stage* funnel
+//! tallies, but the final event mask, kept columns and output bytes
+//! must be identical to the fixed order.
+
+use skimroot::compress::Codec;
+use skimroot::engine::interp::{eval, eval_adaptive};
+use skimroot::engine::{AdaptiveOpts, EngineOpts, SkimEngine};
+use skimroot::gen::{self, GenConfig};
+use skimroot::index::FileIndex;
+use skimroot::metrics::Timeline;
+use skimroot::query::plan::{CExpr, CutProgram, HtParam, ObjCutParam, ObjGroup, ScalarCutParam};
+use skimroot::query::stats::{conjuncts_of, rank_order, ConjunctStats};
+use skimroot::query::{AggOp, BinOp, SkimQuery, UnaryOp};
+use skimroot::runtime::{Batch, Capacities, MaskResult};
+use skimroot::troot::{LocalFile, ReadAt};
+use skimroot::util::Pcg32;
+use std::sync::{Arc, OnceLock};
+
+// =====================================================================
+// Layer 1: randomized program/batch/order fuzzing vs the scalar oracle
+// =====================================================================
+
+/// Randomized cases in the sweep (each tries several conjunct orders).
+const EVAL_CASES: u64 = 520;
+/// Seed base: case `i` runs with `Pcg32::new(SEED_BASE + i)`, so a
+/// failing case number doubles as its replay seed.
+const SEED_BASE: u64 = 0xada9_7100;
+
+fn gen_value(rng: &mut Pcg32) -> f32 {
+    // Quarter-step grid: exact floats so `==`/`!=` cuts have real hit
+    // probability (mirrors the in-crate interpreter prop tests).
+    (rng.below(200) as f32 - 100.0) / 4.0
+}
+
+fn gen_obj_expr(rng: &mut Pcg32, depth: usize, n_obj: usize, n_sc: usize) -> CExpr {
+    if depth == 0 {
+        return CExpr::Jagged(rng.below(n_obj as u32) as usize);
+    }
+    match rng.below(6) {
+        0 => CExpr::Jagged(rng.below(n_obj as u32) as usize),
+        1 => CExpr::Num(gen_value(rng)),
+        2 => CExpr::Scalar(rng.below(n_sc as u32) as usize),
+        3 => CExpr::Unary(
+            [UnaryOp::Neg, UnaryOp::Not, UnaryOp::Abs][rng.below(3) as usize],
+            Box::new(gen_obj_expr(rng, depth - 1, n_obj, n_sc)),
+        ),
+        _ => {
+            let ops = [
+                BinOp::Add,
+                BinOp::Sub,
+                BinOp::Mul,
+                BinOp::Div,
+                BinOp::Lt,
+                BinOp::Le,
+                BinOp::Gt,
+                BinOp::Ge,
+                BinOp::Eq,
+                BinOp::Ne,
+                BinOp::And,
+                BinOp::Or,
+                BinOp::Min,
+                BinOp::Max,
+            ];
+            CExpr::Binary(
+                ops[rng.below(ops.len() as u32) as usize],
+                Box::new(gen_obj_expr(rng, depth - 1, n_obj, n_sc)),
+                Box::new(gen_obj_expr(rng, depth - 1, n_obj, n_sc)),
+            )
+        }
+    }
+}
+
+fn gen_event_expr(rng: &mut Pcg32, depth: usize, n_obj: usize, n_sc: usize) -> CExpr {
+    let aggs = [AggOp::Count, AggOp::Any, AggOp::All, AggOp::Sum, AggOp::Max, AggOp::Min];
+    if depth == 0 || rng.chance(0.3) {
+        return CExpr::Agg {
+            op: aggs[rng.below(aggs.len() as u32) as usize],
+            nobj: rng.below(n_obj as u32) as usize,
+            arg: Box::new(gen_obj_expr(rng, depth.min(2), n_obj, n_sc)),
+            pred: if rng.chance(0.4) {
+                Some(Box::new(gen_obj_expr(rng, 1, n_obj, n_sc)))
+            } else {
+                None
+            },
+        };
+    }
+    match rng.below(5) {
+        0 => CExpr::Num(gen_value(rng)),
+        1 => CExpr::Scalar(rng.below(n_sc as u32) as usize),
+        2 => CExpr::Unary(
+            [UnaryOp::Neg, UnaryOp::Not, UnaryOp::Abs][rng.below(3) as usize],
+            Box::new(gen_event_expr(rng, depth - 1, n_obj, n_sc)),
+        ),
+        _ => {
+            let ops = [
+                BinOp::Add,
+                BinOp::Mul,
+                BinOp::Gt,
+                BinOp::Ge,
+                BinOp::Lt,
+                BinOp::And,
+                BinOp::Or,
+                BinOp::Min,
+                BinOp::Max,
+            ];
+            CExpr::Binary(
+                ops[rng.below(ops.len() as u32) as usize],
+                Box::new(gen_event_expr(rng, depth - 1, n_obj, n_sc)),
+                Box::new(gen_event_expr(rng, depth - 1, n_obj, n_sc)),
+            )
+        }
+    }
+}
+
+fn gen_program(rng: &mut Pcg32, n_obj: usize, n_sc: usize) -> CutProgram {
+    let mut p = CutProgram::default();
+    for c in 0..n_obj {
+        p.obj_columns.push(format!("o{c}"));
+    }
+    for s in 0..n_sc {
+        p.scalar_columns.push(format!("s{s}"));
+    }
+    for _ in 0..rng.below(3) {
+        p.scalar_cuts.push(ScalarCutParam {
+            col: rng.below(n_sc as u32) as usize,
+            op: rng.below(6) as u8,
+            abs: rng.chance(0.3),
+            value: gen_value(rng),
+        });
+    }
+    for g in 0..rng.below(3) {
+        let start = p.obj_cuts.len();
+        for _ in 0..1 + rng.below(2) {
+            p.obj_cuts.push(ObjCutParam {
+                col: rng.below(n_obj as u32) as usize,
+                op: rng.below(6) as u8,
+                abs: rng.chance(0.3),
+                value: gen_value(rng),
+            });
+        }
+        p.groups.push(ObjGroup {
+            collection: format!("G{g}"),
+            cut_range: start..p.obj_cuts.len(),
+            min_count: rng.below(3),
+        });
+    }
+    if rng.chance(0.5) {
+        p.ht = Some(HtParam {
+            col: rng.below(n_obj as u32) as usize,
+            object_pt_min: gen_value(rng),
+            min_ht: gen_value(rng),
+        });
+    }
+    if rng.chance(0.5) {
+        for s in 0..n_sc {
+            if rng.chance(0.5) {
+                p.triggers.push(s);
+            }
+        }
+    }
+    for _ in 0..rng.below(3) {
+        p.exprs.push(gen_event_expr(rng, 1 + rng.below(3) as usize, n_obj, n_sc));
+    }
+    p
+}
+
+fn gen_batch(rng: &mut Pcg32, n_obj: usize, n_sc: usize) -> Batch {
+    let m = 1 + rng.below(6) as usize;
+    let n = 1 + rng.below(48) as usize;
+    let b = n + rng.below(8) as usize;
+    let caps = Capacities { c: n_obj, s: n_sc, k_obj: 12, k_sc: 6, g: 4, n_stages: 4 };
+    let mut batch = Batch::zeroed(&caps, b, m);
+    batch.n_valid = n;
+    for c in 0..n_obj {
+        for ev in 0..n {
+            let mut nobj = rng.below(m as u32 + 3) as f32;
+            if rng.chance(0.1) {
+                nobj += 0.5;
+            }
+            batch.nobj[c * b + ev] = nobj;
+            for slot in 0..m {
+                batch.cols[(c * b + ev) * m + slot] = gen_value(rng);
+            }
+        }
+    }
+    for s in 0..n_sc {
+        for ev in 0..n {
+            batch.scalars[s * b + ev] =
+                if rng.chance(0.5) { rng.below(2) as f32 } else { gen_value(rng) };
+        }
+    }
+    batch
+}
+
+/// Cumulative-funnel counts: `stages` is multiplicative per event, so
+/// the product across stages must reconstruct the final mask exactly.
+fn funnel_of(r: &MaskResult) -> [u64; 4] {
+    let n = r.mask.len();
+    let mut f = [0u64; 4];
+    for ev in 0..n {
+        let mut cum = 1.0f32;
+        for (s, fs) in f.iter_mut().enumerate() {
+            cum *= r.stages[s][ev];
+            *fs += cum as u64;
+        }
+    }
+    f
+}
+
+fn check_against_oracle(
+    program: &CutProgram,
+    batch: &Batch,
+    order: &[usize],
+    oracle: &MaskResult,
+    stats: &mut [ConjunctStats],
+    what: &str,
+) -> MaskResult {
+    let conjuncts = conjuncts_of(program);
+    let out = eval_adaptive(program, batch, &conjuncts, order, stats);
+    assert_eq!(out.mask, oracle.mask, "{what}: mask diverges under order {order:?}");
+    // Cumulative funnel must reconstruct the mask (the per-stage
+    // tallies themselves may legitimately differ from the fixed order).
+    let f = funnel_of(&out);
+    let n_pass = oracle.mask.iter().filter(|&&x| x > 0.5).count() as u64;
+    assert_eq!(f[3], n_pass, "{what}: cumulative funnel does not reconstruct the mask");
+    for w in f.windows(2) {
+        assert!(w[1] <= w[0], "{what}: funnel is not monotone: {f:?}");
+    }
+    for (i, s) in stats.iter().enumerate() {
+        assert!(
+            s.passed <= s.visited,
+            "{what}: conjunct {i} passed {} of only {} visited",
+            s.passed,
+            s.visited
+        );
+    }
+    out
+}
+
+/// One randomized differential case: a program and a batch, evaluated
+/// under the identity, reversed, randomly-shuffled and selectivity-
+/// ranked orders, each compared bit-for-bit against the scalar oracle.
+fn run_eval_case(seed: u64) {
+    let mut rng = Pcg32::new(SEED_BASE + seed);
+    let n_obj = 1 + rng.below(3) as usize;
+    let n_sc = 1 + rng.below(4) as usize;
+    let program = gen_program(&mut rng, n_obj, n_sc);
+    let batch = gen_batch(&mut rng, n_obj, n_sc);
+    let oracle = eval(&program, &batch);
+    let conjuncts = conjuncts_of(&program);
+    let k = conjuncts.len();
+    let mut stats = vec![ConjunctStats::default(); k];
+
+    // Identity order (the warm-up configuration) fills `stats`.
+    let identity: Vec<usize> = (0..k).collect();
+    check_against_oracle(&program, &batch, &identity, &oracle, &mut stats, "identity");
+
+    // Selectivity-ranked order from the measured stats — exactly what
+    // a post-warm-up re-plan would choose.
+    let ranked = rank_order(&conjuncts, &stats);
+    let mut ranked_stats = vec![ConjunctStats::default(); k];
+    check_against_oracle(&program, &batch, &ranked, &oracle, &mut ranked_stats, "ranked");
+
+    // Reversed and randomly-shuffled orders: ANDed conjuncts commute,
+    // so *any* permutation must reproduce the oracle mask.
+    let reversed: Vec<usize> = (0..k).rev().collect();
+    let mut rev_stats = vec![ConjunctStats::default(); k];
+    check_against_oracle(&program, &batch, &reversed, &oracle, &mut rev_stats, "reversed");
+
+    let mut shuffled = identity.clone();
+    for i in (1..k).rev() {
+        shuffled.swap(i, rng.below(i as u32 + 1) as usize);
+    }
+    let mut shuf_stats = vec![ConjunctStats::default(); k];
+    check_against_oracle(&program, &batch, &shuffled, &oracle, &mut shuf_stats, "shuffled");
+}
+
+#[test]
+fn prop_adaptive_orders_match_the_scalar_oracle() {
+    // Replay mode: SKIM_TEST_SEED=<n> runs exactly one failing case.
+    if let Ok(s) = std::env::var("SKIM_TEST_SEED") {
+        let seed: u64 = s
+            .trim()
+            .parse()
+            .expect("SKIM_TEST_SEED must be the integer printed by a failing run");
+        eprintln!("replaying adaptive oracle case {seed}");
+        run_eval_case(seed);
+        return;
+    }
+    for seed in 0..EVAL_CASES {
+        if let Err(payload) = std::panic::catch_unwind(|| run_eval_case(seed)) {
+            eprintln!(
+                "adaptive oracle case {seed} failed — replay with:\n  \
+                 SKIM_TEST_SEED={seed} cargo test --test adaptive_oracle \
+                 prop_adaptive_orders_match_the_scalar_oracle -- --nocapture"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[test]
+fn adaptive_stats_account_for_every_visited_event() {
+    // Focused property: under the identity order the first conjunct
+    // sees every valid event, and each later conjunct sees exactly the
+    // survivors of the previous one (early-exit on a dead funnel is
+    // the one allowed shortfall).
+    for seed in 0..40 {
+        let mut rng = Pcg32::new(SEED_BASE + 10_000 + seed);
+        let n_obj = 1 + rng.below(3) as usize;
+        let n_sc = 1 + rng.below(4) as usize;
+        let program = gen_program(&mut rng, n_obj, n_sc);
+        let batch = gen_batch(&mut rng, n_obj, n_sc);
+        let conjuncts = conjuncts_of(&program);
+        let k = conjuncts.len();
+        let mut stats = vec![ConjunctStats::default(); k];
+        let order: Vec<usize> = (0..k).collect();
+        eval_adaptive(&program, &batch, &conjuncts, &order, &mut stats);
+        let mut expect = batch.n_valid as u64;
+        for (i, s) in stats.iter().enumerate() {
+            if s.visited == 0 {
+                // Funnel died before this conjunct ran.
+                assert_eq!(expect, 0, "conjunct {i} skipped with {expect} events alive");
+                continue;
+            }
+            assert_eq!(s.visited, expect, "conjunct {i} visited wrong event count");
+            expect = s.passed;
+        }
+    }
+}
+
+// =====================================================================
+// Layer 2: end-to-end engine matrix — parallelism × adaptive × zone map
+// =====================================================================
+
+fn workdir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("adaptive_oracle_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Shared dataset: enough basket groups (256-event clusters) that the
+/// adaptive path warms up *and* re-plans mid-job.
+fn dataset() -> std::path::PathBuf {
+    static PATH: OnceLock<std::path::PathBuf> = OnceLock::new();
+    PATH.get_or_init(|| {
+        let path = workdir().join("events.troot");
+        let cfg = GenConfig {
+            n_events: 1500,
+            target_branches: 200,
+            n_hlt: 40,
+            basket_events: 256,
+            codec: Codec::Lz4,
+            seed: 77,
+        };
+        gen::generate(&cfg, &path).unwrap();
+        path
+    })
+    .clone()
+}
+
+fn zone_index() -> Arc<FileIndex> {
+    static IDX: OnceLock<Arc<FileIndex>> = OnceLock::new();
+    IDX.get_or_init(|| Arc::new(FileIndex::build_from_file(dataset()).unwrap())).clone()
+}
+
+fn local_store() -> Arc<dyn ReadAt> {
+    Arc::new(LocalFile::open(dataset()).unwrap())
+}
+
+/// The cut inventory: scalar-only, scalar+group+trigger, OR-of-trigger,
+/// residual-IR, zone-prunable counter, group-first, and a pathological
+/// all-pass cut (adaptive must not perturb it).
+const CUTS: [&str; 7] = [
+    "MET_pt > 25",
+    "MET_pt > 25 && nJet >= 1 && HLT_IsoMu24 > 0.5",
+    "nMuon >= 2 && (HLT_Mu50 || max(Muon_pt) > 100)",
+    "MET_pt > 100 || sum(Jet_pt[Jet_pt > 30]) > 250",
+    "event >= 1000750 && MET_pt > 20",
+    "count(Electron_pt > 25) >= 1 && MET_pt > 25",
+    "MET_pt > -1",
+];
+
+fn query_for(cut: &str, outname: &str) -> SkimQuery {
+    SkimQuery::new("events.troot", outname)
+        .keep(&["MET_pt", "nJet", "Jet_pt", "Muon_pt", "nMuon", "event"])
+        .with_cut_str(cut)
+        .unwrap()
+}
+
+fn matrix_opts(par: f64, adaptive: bool, zone: bool) -> EngineOpts {
+    EngineOpts {
+        use_pjrt: false,
+        parallelism: par,
+        zone_map: if zone { Some(zone_index()) } else { None },
+        adaptive: AdaptiveOpts {
+            enabled: adaptive,
+            // Aggressive cadence so a ~6-group job re-plans mid-run.
+            warmup_groups: 1,
+            replan_every: 1,
+            seed: None,
+        },
+        ..Default::default()
+    }
+}
+
+fn run_matrix_cell(
+    cut: &str,
+    outname: &str,
+    opts: &EngineOpts,
+) -> (skimroot::engine::SkimResult, Timeline, Vec<u8>) {
+    let tl = Timeline::new();
+    let engine = SkimEngine::new(None);
+    let out = workdir().join(outname);
+    let res = engine.run(local_store(), &query_for(cut, outname), &tl, opts, &out).unwrap();
+    let bytes = std::fs::read(&out).unwrap();
+    (res, tl, bytes)
+}
+
+#[test]
+fn engine_matrix_adaptive_zone_parallelism_is_byte_identical() {
+    for (ci, cut) in CUTS.iter().enumerate() {
+        // Fixed-order scalar reference: parallelism 1, no zone map.
+        let (ref_res, _, ref_bytes) =
+            run_matrix_cell(cut, &format!("m{ci}_ref.troot"), &matrix_opts(1.0, false, false));
+        for par in [1.0f64, 2.0, 4.0] {
+            for adaptive in [false, true] {
+                for zone in [false, true] {
+                    let name = format!(
+                        "m{ci}_p{}_a{}_z{}.troot",
+                        par as u32, adaptive as u8, zone as u8
+                    );
+                    let opts = matrix_opts(par, adaptive, zone);
+                    let (res, tl, bytes) = run_matrix_cell(cut, &name, &opts);
+                    let what = format!("cut '{cut}' par={par} adaptive={adaptive} zone={zone}");
+                    assert_eq!(res.n_events, ref_res.n_events, "{what}: n_events");
+                    assert_eq!(res.n_pass, ref_res.n_pass, "{what}: n_pass");
+                    assert_eq!(bytes, ref_bytes, "{what}: output bytes diverge");
+                    // The adaptive run must actually have profiled the
+                    // funnel; a fixed-order run must not.
+                    assert_eq!(
+                        !tl.profile().is_empty(),
+                        adaptive,
+                        "{what}: unexpected profile presence"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_seed_profile_never_changes_engine_output() {
+    // Warm-started adaptive runs (seed profile claims the *first*
+    // conjunct passes everything, inverting the natural order) still
+    // produce the reference bytes.
+    let cut = "MET_pt > 25 && nJet >= 1 && HLT_IsoMu24 > 0.5";
+    let (_, _, ref_bytes) =
+        run_matrix_cell(cut, "seed_ref.troot", &matrix_opts(1.0, false, false));
+    let mut seed = skimroot::query::SelectivityProfile::default();
+    seed.record("MET_pt > 25", 100_000, 100_000, 5);
+    seed.record("nJet >= 1", 100_000, 50, 5);
+    let mut opts = matrix_opts(1.0, true, false);
+    opts.adaptive.seed = Some(seed);
+    let (res, tl, bytes) = run_matrix_cell(cut, "seed_warm.troot", &opts);
+    assert!(res.n_pass > 0);
+    assert_eq!(bytes, ref_bytes, "seeded adaptive run diverged from the reference");
+    // The reported profile counts only this job's events, not the seed.
+    for p in tl.profile() {
+        assert!(
+            p.visited <= res.n_events,
+            "profile entry '{}' double-counts the seed: visited {}",
+            p.key,
+            p.visited
+        );
+    }
+}

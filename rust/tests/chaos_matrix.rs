@@ -22,7 +22,7 @@ use skimroot::metrics::Timeline;
 use skimroot::net::{DiskModel, LinkModel};
 use skimroot::query::SkimQuery;
 use skimroot::serve::{ServeConfig, SkimScheduler, SkimService, SkimServiceClient};
-use skimroot::{Error, SkimJob};
+use skimroot::{CancelToken, Error, JobCtl, SkimJob};
 use std::path::PathBuf;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -384,6 +384,169 @@ fn stalled_reads_expire_deadlines_and_release_worker_slots() {
         assert!(cell.faults >= 1, "http/{placement}/stall: no stall was injected");
         assert_eq!(follow.state, "done", "http/{placement}/stall: slot leaked");
     }
+}
+
+// ---------------- adaptive execution cells ---------------------------
+
+/// Adaptive execution riding a chaos cell: warm up after one group,
+/// re-plan every group. The 400-event / 100-per-basket dataset gives
+/// four basket groups, so re-plans happen mid-job — racing the retry,
+/// cancel and deadline machinery.
+fn adaptive(mut dep: Deployment) -> Deployment {
+    dep.adaptive = skimroot::engine::AdaptiveOpts {
+        enabled: true,
+        warmup_groups: 1,
+        replan_every: 1,
+        seed: None,
+    };
+    dep
+}
+
+/// A fault-free fixed-order client run with a caller-chosen tag (the
+/// shared [`clean_reference`] uses one fixed tag; these tests run in
+/// parallel threads and need their own output paths).
+fn clean_reference_tagged(tag: &str) -> Vec<u8> {
+    let out = run_facade(deployment("client", FaultPlan::default()), 0, tag);
+    assert_eq!(out.state, "done", "clean run '{tag}' failed: {}", out.error);
+    out.bytes.unwrap()
+}
+
+/// Files with the given suffix left in a service work dir.
+fn leftovers(dir: &std::path::Path, suffix: &str) -> Vec<String> {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|n| n.ends_with(suffix))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[test]
+fn adaptive_transient_faults_recover_byte_identical() {
+    // Client placement: the one that threads AdaptiveOpts into the
+    // engine (the DPU placement prefers its fixed-order kernel).
+    let reference = clean_reference_tagged("a_ref_transient");
+
+    // Fault-free adaptive run first: reordering must be invisible in
+    // the output bytes before any fault is layered on top.
+    let clean =
+        run_facade(adaptive(deployment("client", FaultPlan::default())), 0, "a_clean");
+    assert_eq!(clean.state, "done", "adaptive clean run failed: {}", clean.error);
+    assert_eq!(
+        clean.bytes.as_deref().unwrap(),
+        &reference[..],
+        "adaptive clean run diverged from the fixed-order reference"
+    );
+
+    for (i, kind) in FAILING_KINDS.into_iter().enumerate() {
+        let seed = 500 + i as u64;
+        let tag = format!("a_t_{}", kind.name().replace('-', "_"));
+
+        let cell =
+            run_facade(adaptive(deployment("client", transient(kind, seed))), 0, &tag);
+        assert_recovered(&cell, &reference, &format!("adaptive facade/{kind:?}"));
+
+        let (cell, follow) = run_tcp(
+            adaptive(deployment("client", transient(kind, seed))),
+            0,
+            &format!("{tag}_tcp"),
+        );
+        assert_recovered(&cell, &reference, &format!("adaptive tcp/{kind:?}"));
+        assert_slot_released(&follow, &reference, &format!("adaptive tcp/{kind:?}"));
+    }
+}
+
+#[test]
+fn adaptive_replans_race_cancel_and_deadline_to_clean_terminal_states() {
+    let reference = clean_reference_tagged("a_ref_race");
+
+    // Deadline mid-job: every read stalls 120 virtual seconds, so the
+    // 2-second deadline expires during the first groups — while the
+    // adaptive state is mid-warm-up / mid-re-plan.
+    let tag = "a_stall";
+    let cell = run_facade(adaptive(deployment("client", stall(7))), 2_000, tag);
+    assert_expired(&cell, "adaptive facade/stall");
+    assert!(
+        !workdir(tag).join(format!("{tag}.troot")).exists(),
+        "deadline-exceeded adaptive job left a partial output"
+    );
+
+    let (cell, follow) =
+        run_tcp(adaptive(deployment("client", stall(7))), 2_000, "a_stall_tcp");
+    assert_expired(&cell, "adaptive tcp/stall");
+    assert_eq!(follow.state, "done", "adaptive tcp/stall: slot leaked");
+    let parts = leftovers(&workdir("a_stall_tcp_work"), ".part");
+    assert!(parts.is_empty(), "staged partial outputs not deleted: {parts:?}");
+
+    // Pre-cancelled token: the adaptive job dies at its first group
+    // boundary — the cancel is observed between warm-up bookkeeping
+    // steps — always in the `cancelled` terminal state, never with an
+    // output file on disk.
+    let token = CancelToken::new();
+    token.cancel();
+    let out = SkimJob::new(query("a_cancel.troot"))
+        .storage(dataset())
+        .client_dir(workdir("a_cancel"))
+        .deployment(adaptive(deployment("client", FaultPlan::default())))
+        .ctl(JobCtl { cancel: Some(token), deadline_s: None })
+        .run();
+    match out {
+        Err(Error::Cancelled(_)) => {}
+        Err(e) => panic!("pre-cancelled adaptive job must end Cancelled, got: {e}"),
+        Ok(_) => panic!("pre-cancelled adaptive job must not complete"),
+    }
+    assert!(
+        !workdir("a_cancel").join("a_cancel.troot").exists(),
+        "cancelled adaptive job left a partial output"
+    );
+
+    // Cancel racing a live adaptive job over TCP: whichever side wins,
+    // the terminal state is clean, the worker slot comes back, and no
+    // staged partial output survives.
+    let mut cfg = ServeConfig::new(dataset());
+    cfg.work_dir = workdir("a_cancel_tcp_work");
+    cfg.workers = 1;
+    cfg.deployment = adaptive(deployment("client", stall(11)));
+    let service = SkimService::new(cfg).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = service.serve_tcp(listener, stop.clone());
+    let client = SkimServiceClient::connect(&addr).unwrap();
+    let job = client
+        .submit_with_deadline(&query("a_cancel_tcp.troot"), 0)
+        .unwrap();
+    let _ = client.cancel(job);
+    let status = loop {
+        let s = client.status(job).unwrap();
+        let name = s.state.name();
+        if name != "queued" && name != "running" {
+            break s;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    };
+    let name = status.state.name();
+    assert!(
+        name == "cancelled" || name == "done",
+        "cancel race must end in a clean terminal state, got {name} ({:?})",
+        status.error
+    );
+    if name == "done" {
+        let (_, bytes) = client.wait_result(job).unwrap();
+        assert_eq!(bytes, reference, "cancel-survivor bytes diverged");
+    }
+    // The slot is free either way.
+    let follow = client
+        .submit_with_deadline(&query("a_cancel_free.troot"), 0)
+        .unwrap();
+    let (_, bytes) = client.wait_result(follow).unwrap();
+    assert_eq!(bytes, reference, "follow-up after a cancel race diverged");
+    skimroot::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
+    service.shutdown();
+    let parts = leftovers(&workdir("a_cancel_tcp_work"), ".part");
+    assert!(parts.is_empty(), "cancel race left staged partial outputs: {parts:?}");
 }
 
 #[test]

@@ -115,6 +115,103 @@ fn concurrent_clients_match_serial_and_share_baskets() {
 }
 
 #[test]
+fn batched_adaptive_jobs_match_solo_and_reconcile_profiles() {
+    // Shared-scan batching × adaptive execution: N same-file jobs
+    // merged into one scan, each member reordering its own funnel
+    // independently, must still produce outputs byte-identical to
+    // solo adaptive runs — and every member's selectivity profile and
+    // scan_shared counter must cross the wire and reconcile.
+    let storage = dataset();
+    let mut cfg = ServeConfig::new(&storage);
+    cfg.workers = 4;
+    cfg.batch_window_ms = 300;
+    cfg.work_dir = workdir().join("serve_adaptive");
+    cfg.deployment.adaptive = skimroot::engine::AdaptiveOpts {
+        enabled: true,
+        warmup_groups: 1,
+        replan_every: 1,
+        seed: None,
+    };
+    let deployment = cfg.deployment.clone();
+    let service = SkimService::new(cfg).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = service.serve_tcp(listener, stop.clone());
+
+    let query_adaptive = |i: usize| {
+        SkimQuery::new("events.troot", format!("adco{i}.troot"))
+            .keep(&["MET_pt", "nJet", "Jet_pt", "Muon_pt", "nMuon"])
+            .with_cut_str(CUTS[i % CUTS.len()])
+            .unwrap()
+    };
+
+    let n = CUTS.len();
+    let served: Vec<(skimroot::serve::JobStatus, Vec<u8>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let addr = addr.clone();
+                let query = query_adaptive(i);
+                scope.spawn(move || {
+                    let client = SkimServiceClient::connect(&addr).unwrap();
+                    let job = client.submit(&query).unwrap();
+                    let (status, bytes) = client.wait_result(job).unwrap();
+                    assert_eq!(status.state, JobState::Done);
+                    (status, bytes)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    assert!(
+        served.iter().any(|(s, _)| s.batch_members >= 2),
+        "no job was batched — the window never formed a shared scan"
+    );
+    for (i, (status, bytes)) in served.iter().enumerate() {
+        // Solo adaptive run of the same query (no batching window).
+        let solo = SkimJob::new(query_adaptive(i))
+            .storage(&storage)
+            .client_dir(workdir().join(format!("adsolo{i}")))
+            .deployment(deployment.clone())
+            .run()
+            .unwrap();
+        assert_eq!(solo.result.n_pass, status.n_pass, "cut {i}: selection diverged");
+        let solo_bytes = std::fs::read(&solo.result.output_path).unwrap();
+        assert_eq!(&solo_bytes, bytes, "cut {i}: batched bytes diverge from solo");
+
+        // The per-conjunct profile crossed the scheduler and the wire.
+        assert!(!status.profile.is_empty(), "cut {i}: profile missing from status");
+        for p in &status.profile {
+            assert!(
+                p.passed <= p.visited,
+                "cut {i}: profile entry '{}' passed {} of {} visited",
+                p.key,
+                p.passed,
+                p.visited
+            );
+            assert!(
+                p.visited <= status.n_events,
+                "cut {i}: profile entry '{}' visited {} of {} events",
+                p.key,
+                p.visited,
+                status.n_events
+            );
+        }
+        // Batched members were served by the shared union scan.
+        if status.batch_members >= 2 {
+            assert!(
+                status.scan_shared > 0,
+                "cut {i}: batched member fetched every basket itself"
+            );
+        }
+    }
+
+    skimroot::xrootd::server::stop_serving(addr.as_str(), &stop, handle);
+    service.shutdown();
+}
+
+#[test]
 fn queue_depth_backpressure_over_tcp() {
     let storage = dataset();
     let mut cfg = ServeConfig::new(&storage);
