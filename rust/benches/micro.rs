@@ -35,7 +35,9 @@ use std::sync::Arc;
 fn main() {
     codec_benches();
     filter_benches();
+    fused_eval_benches();
     decode_benches();
+    zero_copy_decode_benches();
     thread_scaling_benches();
     engine_parallelism_benches();
     dataset_benches();
@@ -172,6 +174,72 @@ fn filter_benches() {
     });
 }
 
+/// Fused cut kernels vs the per-conjunct adaptive interpreter on the
+/// same batch and evaluation order. Wall-clock is measured for both;
+/// the **modeled** funnel costs are recorded via `record_model` for
+/// the CI gate: each conjunct costs events-visited × structural cost,
+/// divided by the 8-wide lane factor when the planner fused it. The
+/// gate (`fused <= 0.75x interpreted`) therefore fails exactly when
+/// the planner stops fusing the hot early conjuncts — a planning
+/// regression — independent of machine jitter.
+fn fused_eval_benches() {
+    use skimroot::engine::fused::eval_fused;
+    use skimroot::query::fuse::fuse_plan;
+
+    println!("\n== fused cut kernels (2048-event batch, scalar chain + group) ==");
+    let query = skimroot::query::SkimQuery::new("micro.troot", "o.troot")
+        .keep(&["MET_pt"])
+        .with_cut_str("MET_pt > 25 && MET_sumEt > 60 && nJet >= 2")
+        .unwrap();
+    let (plan, batch) = assemble_batch(&query);
+    let conjuncts = conjuncts_of(&plan.program);
+    let identity: Vec<usize> = (0..conjuncts.len()).collect();
+    // The plan a fuse-only run compiles on its first group: identity
+    // order, unmeasured (0.5-prior) profile.
+    let zeros = vec![ConjunctStats::default(); conjuncts.len()];
+    let fplan = fuse_plan(&plan.program, &conjuncts, &identity, &zeros);
+    assert!(fplan.fused_count() > 0, "bench cut must fuse at least one conjunct");
+
+    harness::bench("cut eval interpreted (2048 events)", 2, 10, || {
+        let mut s = vec![ConjunctStats::default(); conjuncts.len()];
+        interp::eval_adaptive(&plan.program, &batch, &conjuncts, &identity, &mut s)
+    });
+    harness::bench("cut eval fused (2048 events)", 2, 10, || {
+        let mut s = vec![ConjunctStats::default(); conjuncts.len()];
+        eval_fused(&plan.program, &batch, &conjuncts, &fplan, &mut s)
+    });
+
+    // Deterministic virtual-cost records for the CI gate, driven by
+    // the fused run's actual tallies and the plan's actual decisions.
+    let mut stats = vec![ConjunctStats::default(); conjuncts.len()];
+    let fused_mask = eval_fused(&plan.program, &batch, &conjuncts, &fplan, &mut stats);
+    let interp_mask = interp::eval(&plan.program, &batch);
+    assert_eq!(fused_mask.mask, interp_mask.mask, "fused bench diverged from the oracle");
+    const LANE_FACTOR: f64 = 8.0; // fused sweeps evaluate 8 lanes per step
+    let cost = |fused: bool| -> f64 {
+        stats
+            .iter()
+            .zip(&conjuncts)
+            .enumerate()
+            .map(|(i, (s, c))| {
+                let lanes =
+                    if fused && fplan.decisions[i].fused.is_some() { LANE_FACTOR } else { 1.0 };
+                s.visited as f64 * c.cost / lanes
+            })
+            .sum::<f64>()
+            * 1e-6
+    };
+    let (interp_cost, fused_cost) = (cost(false), cost(true));
+    println!(
+        "fused/interpreted modeled ratio {:.3} ({} of {} conjuncts fused)",
+        fused_cost / interp_cost,
+        fplan.fused_count(),
+        conjuncts.len()
+    );
+    harness::record_model("cut eval interpreted (virtual)", interp_cost);
+    harness::record_model("cut eval fused (virtual)", fused_cost);
+}
+
 fn decode_benches() {
     println!("\n== basket decode (deserialization substrate) ==");
     let per_event: Vec<Vec<f32>> = {
@@ -184,7 +252,7 @@ fn decode_benches() {
     let desc = BranchDesc::jagged("Jet_pt", DType::F32, "Jet");
     let raw = basket::encode(&col, 0, per_event.len());
     harness::bench_throughput("jagged decode (10k events)", raw.len(), 2, 10, || {
-        basket::decode(&desc, &raw, 0, per_event.len()).unwrap()
+        basket::decode(&desc, &raw, 0, per_event.len(), 0).unwrap()
     });
     harness::bench("selective decode (100 of 10k events)", 2, 10, || {
         let mut offsets = vec![0u32];
@@ -195,6 +263,51 @@ fn decode_benches() {
         }
         values
     });
+}
+
+/// The decode-only quartet behind the zero-copy tentpole: the copying
+/// scalar decoder vs the borrowing `decode_shared` view path, on a
+/// narrow (512-event, 2 KiB) and a wide (64k-event, 256 KiB) flat f32
+/// basket. Wall-clock is measured for all four; the **modeled** costs
+/// recorded via `record_model` charge each decode a fixed validation
+/// overhead plus 1 ns per value byte actually *moved* — zero when the
+/// decode really returned a borrowed view. The CI gate
+/// (`zerocopy <= 0.9x copy`) therefore fails exactly when the
+/// zero-copy path silently degrades to copying.
+fn zero_copy_decode_benches() {
+    println!("\n== zero-copy basket decode (flat f32 baskets) ==");
+    let mut model_copy = 0.0f64;
+    let mut model_view = 0.0f64;
+    for (label, n_events) in
+        [("narrow 512-event basket", 512usize), ("wide 64k-event basket", 65_536)]
+    {
+        let mut rng = Pcg32::new(n_events as u64);
+        let desc = BranchDesc::scalar("MET_pt", DType::F32);
+        let col = ColumnData::scalar_f32((0..n_events).map(|_| rng.exp(35.0) as f32).collect());
+        let raw = basket::encode(&col, 0, n_events);
+        let shared: skimroot::troot::SharedBytes = Arc::new(raw.clone());
+        harness::bench_throughput(&format!("scalar copy decode ({label})"), raw.len(), 2, 10, || {
+            basket::decode(&desc, &raw, 0, n_events, 0).unwrap()
+        });
+        harness::bench_throughput(&format!("zero-copy decode ({label})"), raw.len(), 2, 10, || {
+            basket::decode_shared(&desc, &shared, 0, 0, n_events, 0).unwrap()
+        });
+
+        // Deterministic model records: bytes moved come from the actual
+        // decode results, so an alignment regression shows up here.
+        const PER_BYTE: f64 = 1e-9; // 1 GB/s virtual memcpy
+        const PER_BASKET: f64 = 2e-6; // header validation overhead
+        let moved = |dec: &skimroot::troot::DecodedBasket| {
+            if dec.values.is_borrowed() { 0 } else { raw.len() }
+        };
+        let owned = basket::decode(&desc, &raw, 0, n_events, 0).unwrap();
+        let viewed = basket::decode_shared(&desc, &shared, 0, 0, n_events, 0).unwrap();
+        assert_eq!(owned.values.as_f32(), viewed.values.as_f32(), "view decode diverged");
+        model_copy += PER_BASKET + moved(&owned) as f64 * PER_BYTE;
+        model_view += PER_BASKET + moved(&viewed) as f64 * PER_BYTE;
+    }
+    harness::record_model("decode copy (virtual)", model_copy);
+    harness::record_model("decode zerocopy (virtual)", model_view);
 }
 
 /// The fan-out primitive in isolation: decompress + deserialize a set
@@ -237,7 +350,7 @@ fn thread_scaling_benches() {
                                 for frame in shard {
                                     let raw = compress::decompress(frame).unwrap();
                                     let dec =
-                                        basket::decode(&desc, &raw, 0, n_events).unwrap();
+                                        basket::decode(&desc, &raw, 0, n_events, 0).unwrap();
                                     decoded += dec.values.len();
                                 }
                                 decoded

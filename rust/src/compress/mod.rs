@@ -154,7 +154,7 @@ pub fn decompress_into(frame: &[u8], out: &mut Vec<u8>) -> Result<()> {
     match codec {
         Codec::None => out.extend_from_slice(payload),
         Codec::Lz4 => lz4::decompress_into(payload, raw_len, out)?,
-        Codec::Zlib => zlib_decompress_into(payload, out)?,
+        Codec::Zlib => zlib_decompress_into(payload, raw_len, out)?,
         Codec::XzLike => xz_like::decompress_into(payload, raw_len, out)?,
     }
     if out.len() != raw_len {
@@ -173,7 +173,13 @@ fn zlib_compress(data: &[u8]) -> Vec<u8> {
     enc.finish().expect("in-memory zlib finish cannot fail")
 }
 
-fn zlib_decompress_into(payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
+fn zlib_decompress_into(payload: &[u8], raw_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    // `read_to_end` probes for EOF by reading into *spare* capacity:
+    // with an exactly-sized buffer the probe finds none and triggers a
+    // geometric doubling realloc right at the end of every basket.
+    // Reserving a small slack beyond the frame header's raw_len keeps
+    // the whole decode within the original allocation.
+    out.reserve(raw_len.saturating_add(64));
     let mut dec = flate2::read::ZlibDecoder::new(payload);
     dec.read_to_end(out)
         .map_err(|e| Error::Compress(format!("zlib: {e}")))?;

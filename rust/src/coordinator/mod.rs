@@ -182,6 +182,10 @@ pub struct Deployment {
     /// Selectivity-adaptive interpreter execution (off by default;
     /// client/server placements only — DPU nodes prefer the kernel).
     pub adaptive: crate::engine::AdaptiveOpts,
+    /// Profile-guided fused cut kernels ([`crate::engine::EngineOpts::fuse`];
+    /// off by default, interpreter placements only — same scope as
+    /// `adaptive`, with which it composes).
+    pub fuse: bool,
 }
 
 impl Deployment {
@@ -263,6 +267,7 @@ pub struct DeploymentBuilder {
     use_pjrt: bool,
     fan_out: usize,
     adaptive: crate::engine::AdaptiveOpts,
+    fuse: bool,
 }
 
 impl Default for DeploymentBuilder {
@@ -278,6 +283,7 @@ impl Default for DeploymentBuilder {
             use_pjrt: true,
             fan_out: 1,
             adaptive: crate::engine::AdaptiveOpts::default(),
+            fuse: false,
         }
     }
 }
@@ -343,6 +349,12 @@ impl DeploymentBuilder {
         self
     }
 
+    /// Profile-guided fused cut kernels (interpreter placements only).
+    pub fn fuse(mut self, fuse: bool) -> Self {
+        self.fuse = fuse;
+        self
+    }
+
     /// Assemble and validate the deployment.
     pub fn build(self) -> Result<Deployment> {
         let name = self.name.unwrap_or_else(|| {
@@ -364,6 +376,7 @@ impl DeploymentBuilder {
             use_pjrt: self.use_pjrt,
             fan_out: self.fan_out,
             adaptive: self.adaptive,
+            fuse: self.fuse,
         };
         deployment.validate()?;
         Ok(deployment)
@@ -803,6 +816,7 @@ impl<'rt> Coordinator<'rt> {
             basket_cache: self.basket_cache.clone(),
             zone_map: zone_map.clone(),
             adaptive: deployment.adaptive.clone(),
+            fuse: deployment.fuse,
             ..Default::default()
         };
         // Collision-free member output names: two members may request
@@ -1298,6 +1312,7 @@ impl<'rt> Coordinator<'rt> {
                     zone_map: zone_map.clone(),
                     ctl: ctl.clone(),
                     adaptive: deployment.adaptive.clone(),
+                    fuse: deployment.fuse,
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;
@@ -1326,6 +1341,7 @@ impl<'rt> Coordinator<'rt> {
                     zone_map: zone_map.clone(),
                     ctl: ctl.clone(),
                     adaptive: deployment.adaptive.clone(),
+                    fuse: deployment.fuse,
                     ..Default::default()
                 };
                 let engine = SkimEngine::with_stages(self.runtime, stages)?;

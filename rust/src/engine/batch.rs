@@ -50,30 +50,34 @@ impl ColumnTask<'_> {
             }
             ColumnTask::Scalar { vals, basket } => {
                 let base = (lo - basket.first_event) as usize;
-                // One dtype dispatch per column, not per event.
-                match &basket.values {
-                    ColumnValues::F32(v) => {
-                        vals[dst..dst + n].copy_from_slice(&v[base..base + n]);
+                // One dtype dispatch per column, not per event. The
+                // f32/i32 accessors are variant-transparent, so
+                // zero-copy view baskets take the same fast paths as
+                // owned ones.
+                if let Some(v) = basket.values.as_f32() {
+                    vals[dst..dst + n].copy_from_slice(&v[base..base + n]);
+                } else if let Some(v) = basket.values.as_i32() {
+                    for ev in 0..n {
+                        vals[dst + ev] = v[base + ev] as f32;
                     }
-                    ColumnValues::F64(v) => {
-                        for ev in 0..n {
-                            vals[dst + ev] = v[base + ev] as f32;
+                } else {
+                    match &basket.values {
+                        ColumnValues::F64(v) => {
+                            for ev in 0..n {
+                                vals[dst + ev] = v[base + ev] as f32;
+                            }
                         }
-                    }
-                    ColumnValues::I32(v) => {
-                        for ev in 0..n {
-                            vals[dst + ev] = v[base + ev] as f32;
+                        ColumnValues::I64(v) => {
+                            for ev in 0..n {
+                                vals[dst + ev] = v[base + ev] as f32;
+                            }
                         }
-                    }
-                    ColumnValues::I64(v) => {
-                        for ev in 0..n {
-                            vals[dst + ev] = v[base + ev] as f32;
+                        ColumnValues::U8(v) => {
+                            for ev in 0..n {
+                                vals[dst + ev] = v[base + ev] as f32;
+                            }
                         }
-                    }
-                    ColumnValues::U8(v) => {
-                        for ev in 0..n {
-                            vals[dst + ev] = v[base + ev] as f32;
-                        }
+                        _ => unreachable!("f32/i32 handled by the accessor fast paths"),
                     }
                 }
             }
@@ -249,6 +253,7 @@ mod tests {
             &raw,
             first_event,
             per_event.len(),
+            0,
         )
         .unwrap()
     }
@@ -256,7 +261,7 @@ mod tests {
     fn decode_scalar_u8(values: &[u8], first_event: u64) -> DecodedBasket {
         let col = ColumnData::Scalar(ColumnValues::U8(values.to_vec()));
         let raw = basket::encode(&col, 0, values.len());
-        basket::decode(&BranchDesc::scalar("s", DType::U8), &raw, first_event, values.len())
+        basket::decode(&BranchDesc::scalar("s", DType::U8), &raw, first_event, values.len(), 0)
             .unwrap()
     }
 
@@ -322,6 +327,25 @@ mod tests {
     fn chunk_larger_than_batch_rejected() {
         let program = CutProgram::default();
         assert!(assemble(&program, &caps(), &[], &[], &[], 0, 10, 4, 2).is_err());
+    }
+
+    #[test]
+    fn view_backed_baskets_assemble_identically() {
+        // A zero-copy decoded basket must fill the batch exactly like
+        // its owned twin (same bytes, same fast path).
+        let mut program = CutProgram::default();
+        program.scalar_columns.push("met".into());
+        let col = ColumnData::scalar_f32(vec![5.0, 6.5, 7.0]);
+        let desc = BranchDesc::scalar("met", DType::F32);
+        let raw = basket::encode(&col, 0, 3);
+        let owned = basket::decode(&desc, &raw, 0, 3, 0).unwrap();
+        let shared: crate::troot::SharedBytes = std::sync::Arc::new(raw);
+        let viewed = basket::decode_shared(&desc, &shared, 0, 0, 3, 0).unwrap();
+        let a =
+            assemble(&program, &caps(), &[owned], &[], &[BranchId(0)], 0, 3, 4, 2).unwrap();
+        let b =
+            assemble(&program, &caps(), &[viewed], &[], &[BranchId(0)], 0, 3, 4, 2).unwrap();
+        assert_eq!(a.scalars, b.scalars);
     }
 
     #[test]

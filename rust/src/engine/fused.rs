@@ -1,0 +1,481 @@
+//! Fused cut kernels: the execution half of profile-guided fusion
+//! (planning lives in [`crate::query::fuse`]).
+//!
+//! [`eval_fused`] walks a [`FusePlan`]'s straight-line steps over a
+//! word-packed alive set. Fused scalar chains evaluate 2–3 compares
+//! per 64-event word in one pass — fully-dead words are skipped by a
+//! single `u64` test, fully-alive words take a branch-free
+//! `LANES`-wide passmask path, and ragged words fall back to
+//! per-set-bit evaluation. Count and sum kernels run branchless over
+//! the valid slot prefix. Conjuncts the planner left unfused run
+//! through the interpreter's own `eval_conjunct` sweep.
+//!
+//! # Bit-identity contract
+//!
+//! The fused evaluator is a drop-in for
+//! [`eval_adaptive`](crate::engine::interp::eval_adaptive) under the
+//! same conjunct order:
+//!
+//! * **Masks and funnels**: stage rows start at `1.0` and a killing
+//!   conjunct zeroes its own row — the cumulative funnel product and
+//!   the final mask are bit-identical to the adaptive evaluator (and
+//!   therefore to the scalar oracle) for every order.
+//! * **Tallies**: per-conjunct `visited`/`passed` match
+//!   `eval_adaptive` exactly. Inside a chain, link *k*'s visited count
+//!   is the number of events that survived links *1..k-1* — summed
+//!   over words this equals the adaptive evaluator's whole-batch
+//!   sweep, including its `n_alive == 0` early break (a starved link
+//!   tallies `+0/+0`, indistinguishable from being skipped). Only
+//!   `cost_us` may differ (a chain's wall-clock is split evenly across
+//!   its links); it is reporting-only and never asserted.
+//! * **Verdicts**: the branchless count kernel counts the full valid
+//!   prefix where the interpreter early-exits at `min_count` — the
+//!   `count >= min_count` verdict is unchanged. The sum kernel adds
+//!   `0.0` for excluded slots instead of branching; starting from
+//!   `0.0` the running total is never `-0.0`, so every intermediate
+//!   sum is bit-identical.
+
+use crate::query::fuse::{ChainLink, FusePlan, FuseStep, FusedKernel, MAX_CHAIN};
+use crate::query::plan::CutProgram;
+use crate::query::stats::{Conjunct, ConjunctStats};
+use crate::runtime::{Batch, MaskResult};
+
+use super::interp::{cmp, eval_conjunct, valid_slots, LANES};
+
+/// The alive set in two synchronized representations: per-event bools
+/// (what the interpreter fallback mutates) and 64-event words (what
+/// the fused sweeps test and update). Bits past `n` are permanently
+/// zero.
+struct AliveSet {
+    bools: Vec<bool>,
+    words: Vec<u64>,
+    n_alive: usize,
+}
+
+impl AliveSet {
+    fn new(n: usize) -> AliveSet {
+        let nw = n.div_ceil(64);
+        let mut words = vec![!0u64; nw];
+        if n % 64 != 0 {
+            words[nw - 1] = (1u64 << (n % 64)) - 1;
+        }
+        AliveSet { bools: vec![true; n], words, n_alive: n }
+    }
+
+    /// Rebuild the word mirror after the bools were mutated behind our
+    /// back (by an interpreter-fallback conjunct).
+    fn resync(&mut self) {
+        let mut n_alive = 0usize;
+        for (w, word) in self.words.iter_mut().enumerate() {
+            let mut bits = 0u64;
+            let base = w * 64;
+            let lim = (self.bools.len() - base).min(64);
+            for i in 0..lim {
+                bits |= (self.bools[base + i] as u64) << i;
+            }
+            *word = bits;
+            n_alive += bits.count_ones() as usize;
+        }
+        self.n_alive = n_alive;
+    }
+}
+
+/// Branch-free passmask of one compare over exactly 64 column values:
+/// bit *i* set iff `cmp(col[i], ..)`. The opcode dispatch is hoisted
+/// out of the sweep and the body runs in [`LANES`]-wide chunks, like
+/// [`sweep_cmp_into`](crate::engine::interp::sweep_cmp_into).
+#[inline(always)]
+fn passmask64(col: &[f32], op: u8, abs: bool, value: f32) -> u64 {
+    #[inline(always)]
+    fn mask(col: &[f32], pred: impl Fn(f32) -> bool) -> u64 {
+        debug_assert_eq!(col.len(), 64);
+        let mut pm = 0u64;
+        for (c, chunk) in col.chunks_exact(LANES).enumerate() {
+            let mut bits = 0u64;
+            for i in 0..LANES {
+                bits |= (pred(chunk[i]) as u64) << i;
+            }
+            pm |= bits << (c * LANES);
+        }
+        pm
+    }
+    match (op, abs) {
+        (0, false) => mask(col, |x| x > value),
+        (1, false) => mask(col, |x| x >= value),
+        (2, false) => mask(col, |x| x < value),
+        (3, false) => mask(col, |x| x <= value),
+        (4, false) => mask(col, |x| x == value),
+        (5, false) => mask(col, |x| x != value),
+        _ => mask(col, |x| cmp(x, op, abs, value)),
+    }
+}
+
+/// Run one fused scalar chain (1–[`MAX_CHAIN`] compares) over the
+/// alive set in a single word-wise pass.
+fn run_chain(
+    program: &CutProgram,
+    batch: &Batch,
+    links: &[ChainLink],
+    conjuncts: &[Conjunct],
+    stages: &mut [Vec<f32>],
+    alive: &mut AliveSet,
+    stats: &mut [ConjunctStats],
+) {
+    debug_assert!(!links.is_empty() && links.len() <= MAX_CHAIN);
+    let started = std::time::Instant::now();
+    let (b, n) = (batch.b, batch.n_valid);
+    let mut visited = [0u64; MAX_CHAIN];
+    let mut passed = [0u64; MAX_CHAIN];
+
+    for w in 0..alive.words.len() {
+        let word = alive.words[w];
+        if word == 0 {
+            continue;
+        }
+        let base = w * 64;
+        if word == !0u64 && base + 64 <= n {
+            // Fully-alive word: branch-free passmask per link, kills
+            // applied wholesale from the surviving-bit delta.
+            let mut sv = word;
+            for (li, link) in links.iter().enumerate() {
+                if sv == 0 {
+                    break;
+                }
+                let cut = &program.scalar_cuts[link.cut];
+                let start = cut.col * b + base;
+                let pm =
+                    passmask64(&batch.scalars[start..start + 64], cut.op, cut.abs, cut.value);
+                visited[li] += sv.count_ones() as u64;
+                let killed = sv & !pm;
+                sv &= pm;
+                passed[li] += sv.count_ones() as u64;
+                if killed != 0 {
+                    let stage = &mut stages[conjuncts[link.ci].stage as usize];
+                    let mut bits = killed;
+                    while bits != 0 {
+                        let i = bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        stage[base + i] = 0.0;
+                        alive.bools[base + i] = false;
+                    }
+                    alive.n_alive -= killed.count_ones() as usize;
+                }
+            }
+            alive.words[w] = sv;
+        } else {
+            // Ragged word (holes or the tail past n): per-set-bit.
+            let mut bits = word;
+            let mut new_word = word;
+            while bits != 0 {
+                let i = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let ev = base + i;
+                for (li, link) in links.iter().enumerate() {
+                    visited[li] += 1;
+                    let cut = &program.scalar_cuts[link.cut];
+                    let x = batch.scalars[cut.col * b + ev];
+                    if cmp(x, cut.op, cut.abs, cut.value) {
+                        passed[li] += 1;
+                    } else {
+                        stages[conjuncts[link.ci].stage as usize][ev] = 0.0;
+                        alive.bools[ev] = false;
+                        new_word &= !(1u64 << i);
+                        alive.n_alive -= 1;
+                        break;
+                    }
+                }
+            }
+            alive.words[w] = new_word;
+        }
+    }
+
+    // One sweep's wall-clock, split evenly across the fused links
+    // (cost_us is reporting-only; visited/passed carry the semantics).
+    let per_link = started.elapsed().as_micros() as u64 / links.len() as u64;
+    for (li, link) in links.iter().enumerate() {
+        let st = &mut stats[link.ci];
+        st.visited += visited[li];
+        st.passed += passed[li];
+        st.cost_us += per_link;
+    }
+}
+
+/// Run a single-conjunct kernel (`count` or `sum`) over the alive set:
+/// the per-event verdict closure returns `true` to keep the event.
+fn run_event_kernel(
+    ci: usize,
+    conjuncts: &[Conjunct],
+    stages: &mut [Vec<f32>],
+    alive: &mut AliveSet,
+    stats: &mut [ConjunctStats],
+    verdict: impl Fn(usize) -> bool,
+) {
+    let started = std::time::Instant::now();
+    let visited = alive.n_alive as u64;
+    let stage = &mut stages[conjuncts[ci].stage as usize];
+    for w in 0..alive.words.len() {
+        let word = alive.words[w];
+        if word == 0 {
+            continue;
+        }
+        let base = w * 64;
+        let mut bits = word;
+        let mut new_word = word;
+        while bits != 0 {
+            let i = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let ev = base + i;
+            if !verdict(ev) {
+                stage[ev] = 0.0;
+                alive.bools[ev] = false;
+                new_word &= !(1u64 << i);
+                alive.n_alive -= 1;
+            }
+        }
+        alive.words[w] = new_word;
+    }
+    let st = &mut stats[ci];
+    st.visited += visited;
+    st.passed += alive.n_alive as u64;
+    st.cost_us += started.elapsed().as_micros() as u64;
+}
+
+/// Evaluate `program` through `plan`'s fused steps, a drop-in for
+/// [`eval_adaptive`](crate::engine::interp::eval_adaptive) under the
+/// same order (see the module docs for the bit-identity contract).
+/// Tallies accumulate into `stats`, parallel to `conjuncts`.
+pub fn eval_fused(
+    program: &CutProgram,
+    batch: &Batch,
+    conjuncts: &[Conjunct],
+    plan: &FusePlan,
+    stats: &mut [ConjunctStats],
+) -> MaskResult {
+    debug_assert_eq!(conjuncts.len(), stats.len());
+    let (b, m, n) = (batch.b, batch.m, batch.n_valid);
+    let mut stages = vec![vec![1.0f32; n]; 4];
+    let mut alive = AliveSet::new(n);
+
+    for step in &plan.steps {
+        if alive.n_alive == 0 {
+            break;
+        }
+        match step {
+            FuseStep::Interp(ci) => {
+                let conj = &conjuncts[*ci];
+                let started = std::time::Instant::now();
+                let visited = alive.n_alive as u64;
+                let mut n_alive = alive.n_alive;
+                eval_conjunct(
+                    program,
+                    batch,
+                    conj,
+                    &mut stages[conj.stage as usize],
+                    &mut alive.bools,
+                    &mut n_alive,
+                );
+                alive.resync();
+                debug_assert_eq!(alive.n_alive, n_alive);
+                let st = &mut stats[*ci];
+                st.visited += visited;
+                st.passed += n_alive as u64;
+                st.cost_us += started.elapsed().as_micros() as u64;
+            }
+            FuseStep::Kernel(FusedKernel::Chain(links)) => {
+                run_chain(program, batch, links, conjuncts, &mut stages, &mut alive, stats);
+            }
+            FuseStep::Kernel(FusedKernel::CountGe { ci, group }) => {
+                let g = &program.groups[*group];
+                let cut = &program.obj_cuts[g.cut_range.start];
+                let min_count = g.min_count;
+                run_event_kernel(*ci, conjuncts, &mut stages, &mut alive, stats, |ev| {
+                    let bound = valid_slots(batch.nobj[cut.col * b + ev], m);
+                    let at = (cut.col * b + ev) * m;
+                    let row = &batch.cols[at..at + bound];
+                    // Branchless count over the valid prefix in
+                    // LANES-wide chunks — no early exit; the
+                    // `>= min_count` verdict is unchanged.
+                    let mut count = 0u32;
+                    let main = bound - bound % LANES;
+                    for chunk in row[..main].chunks_exact(LANES) {
+                        let mut c = 0u32;
+                        for i in 0..LANES {
+                            c += cmp(chunk[i], cut.op, cut.abs, cut.value) as u32;
+                        }
+                        count += c;
+                    }
+                    for &x in &row[main..] {
+                        count += cmp(x, cut.op, cut.abs, cut.value) as u32;
+                    }
+                    count >= min_count
+                });
+            }
+            FuseStep::Kernel(FusedKernel::SumGe { ci }) => {
+                let ht = program.ht.as_ref().expect("sum kernel without an HT unit");
+                run_event_kernel(*ci, conjuncts, &mut stages, &mut alive, stats, |ev| {
+                    let nv = (batch.nobj[ht.col * b + ev] as usize).min(m);
+                    let at = (ht.col * b + ev) * m;
+                    let row = &batch.cols[at..at + nv];
+                    // Branchless select-accumulate: excluded slots add
+                    // 0.0, which preserves every intermediate total
+                    // bit-for-bit (the total starts at 0.0 and can
+                    // never be -0.0).
+                    let mut total = 0.0f32;
+                    for &x in row {
+                        total += if x > ht.object_pt_min { x } else { 0.0 };
+                    }
+                    total >= ht.min_ht
+                });
+            }
+        }
+    }
+
+    let mut mask = vec![0.0f32; n];
+    for ev in 0..n {
+        if alive.bools[ev] {
+            mask[ev] = 1.0;
+        }
+    }
+    MaskResult { mask, stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::fuse::fuse_plan;
+    use crate::query::plan::{HtParam, ObjCutParam, ObjGroup, ScalarCutParam};
+    use crate::query::stats::conjuncts_of;
+    use crate::runtime::Capacities;
+
+    fn caps() -> Capacities {
+        Capacities { c: 12, s: 16, k_obj: 12, k_sc: 6, g: 4, n_stages: 4 }
+    }
+
+    /// 3 scalar cuts + single-cut group + HT over a 200-event batch
+    /// with pseudo-random values: every kernel shape engages.
+    fn fixture() -> (CutProgram, Batch) {
+        let mut p = CutProgram::default();
+        p.scalar_columns = vec!["met".into(), "eta".into()];
+        p.obj_columns = vec!["el_pt".into(), "jet_pt".into()];
+        p.scalar_cuts.push(ScalarCutParam { col: 0, op: 0, abs: false, value: 20.0 });
+        p.scalar_cuts.push(ScalarCutParam { col: 1, op: 1, abs: false, value: -1.0 });
+        p.scalar_cuts.push(ScalarCutParam { col: 1, op: 2, abs: false, value: 1.5 });
+        p.obj_cuts.push(ObjCutParam { col: 0, op: 0, abs: false, value: 15.0 });
+        p.groups.push(ObjGroup {
+            collection: "Electron".into(),
+            cut_range: 0..1,
+            min_count: 1,
+        });
+        p.ht = Some(HtParam { col: 1, object_pt_min: 10.0, min_ht: 60.0 });
+
+        let n = 200usize;
+        let mut batch = Batch::zeroed(&caps(), n, 4);
+        batch.n_valid = n;
+        let b = batch.b;
+        let m = batch.m;
+        let mut state = 0x1234_5678u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32) / (u32::MAX >> 1) as f32
+        };
+        for ev in 0..n {
+            batch.scalars[ev] = next() * 80.0;
+            batch.scalars[b + ev] = next() * 4.0 - 2.0;
+            for col in 0..2 {
+                let nv = (next() * 4.9) as usize;
+                batch.nobj[col * b + ev] = nv as f32;
+                for slot in 0..nv.min(m) {
+                    batch.cols[(col * b + ev) * m + slot] = next() * 50.0;
+                }
+            }
+        }
+        (p, batch)
+    }
+
+    #[test]
+    fn fused_matches_adaptive_bit_for_bit() {
+        let (p, batch) = fixture();
+        let cs = conjuncts_of(&p);
+        let order: Vec<usize> = (0..cs.len()).collect();
+        let prior = vec![ConjunctStats::default(); cs.len()];
+        let plan = fuse_plan(&p, &cs, &order, &prior);
+        assert!(plan.any_fused(), "fixture must exercise fused kernels");
+
+        let mut stats_a = vec![ConjunctStats::default(); cs.len()];
+        let adaptive =
+            super::super::interp::eval_adaptive(&p, &batch, &cs, &order, &mut stats_a);
+        let mut stats_f = vec![ConjunctStats::default(); cs.len()];
+        let fused = eval_fused(&p, &batch, &cs, &plan, &mut stats_f);
+
+        assert_eq!(fused.mask, adaptive.mask);
+        assert_eq!(fused.stages, adaptive.stages);
+        for (ci, (a, f)) in stats_a.iter().zip(&stats_f).enumerate() {
+            assert_eq!(a.visited, f.visited, "conjunct {ci} visited");
+            assert_eq!(a.passed, f.passed, "conjunct {ci} passed");
+        }
+    }
+
+    #[test]
+    fn fused_matches_adaptive_under_permuted_orders() {
+        let (p, batch) = fixture();
+        let cs = conjuncts_of(&p);
+        let prior = vec![ConjunctStats::default(); cs.len()];
+        // The HT-first order exercises an event kernel ahead of the
+        // scalar chain; the reversed order exercises ragged words.
+        for order in [
+            vec![4, 0, 1, 2, 3],
+            vec![3, 0, 1, 2, 4],
+            vec![4, 3, 2, 1, 0],
+            vec![1, 2, 0, 3, 4],
+        ] {
+            let plan = fuse_plan(&p, &cs, &order, &prior);
+            let mut stats_a = vec![ConjunctStats::default(); cs.len()];
+            let adaptive =
+                super::super::interp::eval_adaptive(&p, &batch, &cs, &order, &mut stats_a);
+            let mut stats_f = vec![ConjunctStats::default(); cs.len()];
+            let fused = eval_fused(&p, &batch, &cs, &plan, &mut stats_f);
+            assert_eq!(fused.mask, adaptive.mask, "order {order:?}");
+            assert_eq!(fused.stages, adaptive.stages, "order {order:?}");
+            for (ci, (a, f)) in stats_a.iter().zip(&stats_f).enumerate() {
+                assert_eq!(a.visited, f.visited, "order {order:?} conjunct {ci}");
+                assert_eq!(a.passed, f.passed, "order {order:?} conjunct {ci}");
+            }
+        }
+    }
+
+    #[test]
+    fn alive_set_words_mirror_bools() {
+        let mut a = AliveSet::new(70);
+        assert_eq!(a.words.len(), 2);
+        assert_eq!(a.words[1], (1u64 << 6) - 1);
+        a.bools[0] = false;
+        a.bools[65] = false;
+        a.resync();
+        assert_eq!(a.n_alive, 68);
+        assert_eq!(a.words[0], !1u64);
+        assert_eq!(a.words[1], ((1u64 << 6) - 1) & !(1 << 1));
+
+        // Empty batch: no words, nothing alive.
+        let e = AliveSet::new(0);
+        assert_eq!(e.words.len(), 0);
+        assert_eq!(e.n_alive, 0);
+    }
+
+    #[test]
+    fn passmask_matches_scalar_cmp_for_all_ops() {
+        let col: Vec<f32> =
+            (0..64).map(|i| (i as f32) - 31.5 + if i % 7 == 0 { 0.5 } else { 0.0 }).collect();
+        for op in 0u8..6 {
+            for abs in [false, true] {
+                let pm = passmask64(&col, op, abs, 3.0);
+                for (i, &x) in col.iter().enumerate() {
+                    assert_eq!(
+                        pm >> i & 1 == 1,
+                        cmp(x, op, abs, 3.0),
+                        "op={op} abs={abs} i={i}"
+                    );
+                }
+            }
+        }
+    }
+}

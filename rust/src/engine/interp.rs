@@ -38,8 +38,14 @@ use crate::query::stats::{Conjunct, ConjunctKind, ConjunctStats};
 use crate::runtime::{Batch, MaskResult};
 use std::collections::HashMap;
 
+/// Fixed lane width of the explicit-chunk sweeps here and in
+/// [`crate::engine::fused`]: wide enough to fill a 256-bit vector of
+/// `f32`, portable (no nightly SIMD types — the chunking alone lets
+/// the autovectorizer emit packed compares).
+pub(crate) const LANES: usize = 8;
+
 #[inline]
-fn cmp(x: f32, op: u8, abs: bool, value: f32) -> bool {
+pub(crate) fn cmp(x: f32, op: u8, abs: bool, value: f32) -> bool {
     let x = if abs { x.abs() } else { x };
     match op {
         0 => x > value,
@@ -468,7 +474,7 @@ fn eval_obj_expr_batch(
 /// `nobj`; non-finite/negative values saturate to 0, matching the
 /// per-slot float comparison.)
 #[inline]
-fn valid_slots(nobj: f32, m: usize) -> usize {
+pub(crate) fn valid_slots(nobj: f32, m: usize) -> usize {
     if nobj.is_nan() || nobj <= 0.0 {
         return 0;
     }
@@ -476,6 +482,41 @@ fn valid_slots(nobj: f32, m: usize) -> usize {
         return m;
     }
     nobj.ceil() as usize
+}
+
+/// One preselection comparison swept over a whole column into the
+/// running conjunction `ok`. Restructured for autovectorization: the
+/// opcode dispatch is hoisted out of the loop (one monomorphized sweep
+/// per comparison kind) and the body runs in fixed [`LANES`]-wide
+/// chunks combined with non-short-circuiting `&`, so each chunk is a
+/// branch-free elementwise kernel the compiler can emit as packed
+/// compares. Semantics are exactly `ok[i] &= cmp(col[i], ..)`.
+pub(crate) fn sweep_cmp_into(ok: &mut [bool], col: &[f32], op: u8, abs: bool, value: f32) {
+    #[inline(always)]
+    fn sweep(ok: &mut [bool], col: &[f32], pred: impl Fn(f32) -> bool) {
+        let n = ok.len().min(col.len());
+        let main = n - n % LANES;
+        for base in (0..main).step_by(LANES) {
+            let os = &mut ok[base..base + LANES];
+            let xs = &col[base..base + LANES];
+            for i in 0..LANES {
+                os[i] &= pred(xs[i]);
+            }
+        }
+        for i in main..n {
+            ok[i] &= pred(col[i]);
+        }
+    }
+    debug_assert_eq!(ok.len(), col.len());
+    match (op, abs) {
+        (0, false) => sweep(ok, col, |x| x > value),
+        (1, false) => sweep(ok, col, |x| x >= value),
+        (2, false) => sweep(ok, col, |x| x < value),
+        (3, false) => sweep(ok, col, |x| x <= value),
+        (4, false) => sweep(ok, col, |x| x == value),
+        (5, false) => sweep(ok, col, |x| x != value),
+        _ => sweep(ok, col, |x| cmp(x, op, abs, value)),
+    }
 }
 
 /// Evaluate `program` over the batch column-by-column: stages run in
@@ -500,9 +541,7 @@ pub fn eval_columnar(program: &CutProgram, batch: &Batch) -> MaskResult {
             let mut ok = vec![true; n];
             for cut in &program.scalar_cuts {
                 let col = &batch.scalars[cut.col * b..cut.col * b + n];
-                for (o, &x) in ok.iter_mut().zip(col) {
-                    *o = *o && cmp(x, cut.op, cut.abs, cut.value);
-                }
+                sweep_cmp_into(&mut ok, col, cut.op, cut.abs, cut.value);
             }
             for ev in 0..n {
                 if ok[ev] {
@@ -651,6 +690,121 @@ pub fn eval_columnar(program: &CutProgram, batch: &Batch) -> MaskResult {
 
 // ---------------- adaptive (reorderable) evaluator ---------------------
 
+/// Evaluate one conjunct over the surviving events of `batch`: an
+/// event that fails gets its entry in the conjunct's own funnel
+/// `stage` row zeroed, its `alive` flag cleared and `n_alive`
+/// decremented. This is the shared per-conjunct sweep of
+/// [`eval_adaptive`] and the unfused-fallback path of
+/// [`crate::engine::fused::eval_fused`] — the two agree per event by
+/// construction.
+pub(crate) fn eval_conjunct(
+    program: &CutProgram,
+    batch: &Batch,
+    conj: &Conjunct,
+    stage: &mut [f32],
+    alive: &mut [bool],
+    n_alive: &mut usize,
+) {
+    let (b, m, n) = (batch.b, batch.m, batch.n_valid);
+    match conj.kind {
+        ConjunctKind::Scalar(i) => {
+            let cut = &program.scalar_cuts[i];
+            for ev in 0..n {
+                if !alive[ev] {
+                    continue;
+                }
+                let x = batch.scalars[cut.col * b + ev];
+                if !cmp(x, cut.op, cut.abs, cut.value) {
+                    stage[ev] = 0.0;
+                    alive[ev] = false;
+                    *n_alive -= 1;
+                }
+            }
+        }
+        ConjunctKind::Group(i) => {
+            let group = &program.groups[i];
+            let cuts = &program.obj_cuts[group.cut_range.clone()];
+            for ev in 0..n {
+                if !alive[ev] {
+                    continue;
+                }
+                let mut bound = if cuts.is_empty() { 0 } else { m };
+                for cut in cuts {
+                    bound = bound.min(valid_slots(batch.nobj[cut.col * b + ev], m));
+                }
+                let mut count = 0u32;
+                for slot in 0..bound {
+                    let pass = cuts.iter().all(|cut| {
+                        let x = batch.cols[(cut.col * b + ev) * m + slot];
+                        cmp(x, cut.op, cut.abs, cut.value)
+                    });
+                    if pass {
+                        count += 1;
+                        if count >= group.min_count {
+                            break;
+                        }
+                    }
+                }
+                if count < group.min_count {
+                    stage[ev] = 0.0;
+                    alive[ev] = false;
+                    *n_alive -= 1;
+                }
+            }
+        }
+        ConjunctKind::Ht => {
+            let ht = program.ht.as_ref().expect("HT conjunct without an HT unit");
+            for ev in 0..n {
+                if !alive[ev] {
+                    continue;
+                }
+                let nv = (batch.nobj[ht.col * b + ev] as usize).min(m);
+                let mut total = 0.0f32;
+                for slot in 0..nv {
+                    let x = batch.cols[(ht.col * b + ev) * m + slot];
+                    if x > ht.object_pt_min {
+                        total += x;
+                    }
+                }
+                if total < ht.min_ht {
+                    stage[ev] = 0.0;
+                    alive[ev] = false;
+                    *n_alive -= 1;
+                }
+            }
+        }
+        ConjunctKind::Residual(i) => {
+            // Per-event scalar walk over survivors only (the batch
+            // sweep covers all events — wasted exactly when this
+            // conjunct was reordered late because little survives).
+            let e = &program.exprs[i];
+            for ev in 0..n {
+                if !alive[ev] {
+                    continue;
+                }
+                if !truthy(eval_event_expr(e, batch, ev)) {
+                    stage[ev] = 0.0;
+                    alive[ev] = false;
+                    *n_alive -= 1;
+                }
+            }
+        }
+        ConjunctKind::Trigger => {
+            for ev in 0..n {
+                if !alive[ev] {
+                    continue;
+                }
+                let ok = program.triggers.iter().any(|&s| batch.scalars[s * b + ev] > 0.5);
+                if !ok {
+                    stage[ev] = 0.0;
+                    alive[ev] = false;
+                    *n_alive -= 1;
+                }
+            }
+        }
+    }
+}
+
 /// Evaluate `program` conjunct-by-conjunct in the caller-chosen
 /// `order` (a permutation of `0..conjuncts.len()`, from
 /// [`crate::query::stats::rank_order`]), visiting only events still
@@ -677,7 +831,7 @@ pub fn eval_adaptive(
 ) -> MaskResult {
     debug_assert_eq!(conjuncts.len(), stats.len());
     debug_assert_eq!(conjuncts.len(), order.len());
-    let (b, m, n) = (batch.b, batch.m, batch.n_valid);
+    let n = batch.n_valid;
     let mut stages = vec![vec![1.0f32; n]; 4];
     let mut alive = vec![true; n];
     let mut n_alive = n;
@@ -689,105 +843,14 @@ pub fn eval_adaptive(
         let conj = &conjuncts[ci];
         let started = std::time::Instant::now();
         let visited = n_alive as u64;
-        let stage = &mut stages[conj.stage as usize];
-        match conj.kind {
-            ConjunctKind::Scalar(i) => {
-                let cut = &program.scalar_cuts[i];
-                for ev in 0..n {
-                    if !alive[ev] {
-                        continue;
-                    }
-                    let x = batch.scalars[cut.col * b + ev];
-                    if !cmp(x, cut.op, cut.abs, cut.value) {
-                        stage[ev] = 0.0;
-                        alive[ev] = false;
-                        n_alive -= 1;
-                    }
-                }
-            }
-            ConjunctKind::Group(i) => {
-                let group = &program.groups[i];
-                let cuts = &program.obj_cuts[group.cut_range.clone()];
-                for ev in 0..n {
-                    if !alive[ev] {
-                        continue;
-                    }
-                    let mut bound = if cuts.is_empty() { 0 } else { m };
-                    for cut in cuts {
-                        bound = bound.min(valid_slots(batch.nobj[cut.col * b + ev], m));
-                    }
-                    let mut count = 0u32;
-                    for slot in 0..bound {
-                        let pass = cuts.iter().all(|cut| {
-                            let x = batch.cols[(cut.col * b + ev) * m + slot];
-                            cmp(x, cut.op, cut.abs, cut.value)
-                        });
-                        if pass {
-                            count += 1;
-                            if count >= group.min_count {
-                                break;
-                            }
-                        }
-                    }
-                    if count < group.min_count {
-                        stage[ev] = 0.0;
-                        alive[ev] = false;
-                        n_alive -= 1;
-                    }
-                }
-            }
-            ConjunctKind::Ht => {
-                let ht = program.ht.as_ref().expect("HT conjunct without an HT unit");
-                for ev in 0..n {
-                    if !alive[ev] {
-                        continue;
-                    }
-                    let nv = (batch.nobj[ht.col * b + ev] as usize).min(m);
-                    let mut total = 0.0f32;
-                    for slot in 0..nv {
-                        let x = batch.cols[(ht.col * b + ev) * m + slot];
-                        if x > ht.object_pt_min {
-                            total += x;
-                        }
-                    }
-                    if total < ht.min_ht {
-                        stage[ev] = 0.0;
-                        alive[ev] = false;
-                        n_alive -= 1;
-                    }
-                }
-            }
-            ConjunctKind::Residual(i) => {
-                // Per-event scalar walk over survivors only (the batch
-                // sweep covers all events — wasted exactly when this
-                // conjunct was reordered late because little survives).
-                let e = &program.exprs[i];
-                for ev in 0..n {
-                    if !alive[ev] {
-                        continue;
-                    }
-                    if !truthy(eval_event_expr(e, batch, ev)) {
-                        stage[ev] = 0.0;
-                        alive[ev] = false;
-                        n_alive -= 1;
-                    }
-                }
-            }
-            ConjunctKind::Trigger => {
-                for ev in 0..n {
-                    if !alive[ev] {
-                        continue;
-                    }
-                    let ok =
-                        program.triggers.iter().any(|&s| batch.scalars[s * b + ev] > 0.5);
-                    if !ok {
-                        stage[ev] = 0.0;
-                        alive[ev] = false;
-                        n_alive -= 1;
-                    }
-                }
-            }
-        }
+        eval_conjunct(
+            program,
+            batch,
+            conj,
+            &mut stages[conj.stage as usize],
+            &mut alive,
+            &mut n_alive,
+        );
         let st = &mut stats[ci];
         st.visited += visited;
         st.passed += n_alive as u64;

@@ -39,6 +39,7 @@
 //! output as measured compute on the configured [`Node`]).
 
 pub mod batch;
+pub mod fused;
 pub mod interp;
 pub mod pipeline;
 mod shared;
@@ -149,6 +150,18 @@ pub struct EngineOpts {
     /// periodically. Final masks and output bytes are bit-identical
     /// either way; only per-stage funnel tallies may differ.
     pub adaptive: AdaptiveOpts,
+    /// Profile-guided fused cut kernels ([`crate::query::fuse`] plans,
+    /// [`fused`] executes). Off by default: the interpreter sweeps one
+    /// conjunct at a time. When enabled (interpreter path only, like
+    /// `adaptive`), conjuncts whose shape matches a fused kernel —
+    /// scalar compares, ranges, 2–3-cut AND-chains, single-cut object
+    /// counts, the HT sum — evaluate in word-packed fused sweeps;
+    /// everything else falls back to the per-conjunct interpreter
+    /// sweep untouched. Masks, funnels and output bytes are
+    /// bit-identical with or without fusion; composes with `adaptive`
+    /// (the plan is rebuilt at every replan checkpoint) and works
+    /// standalone in fixed conjunct order.
+    pub fuse: bool,
 }
 
 /// Configuration of selectivity-adaptive execution (see
@@ -209,6 +222,7 @@ impl Default for EngineOpts {
             zone_map: None,
             ctl: crate::lifecycle::JobCtl::none(),
             adaptive: AdaptiveOpts::default(),
+            fuse: false,
         }
     }
 }

@@ -62,6 +62,7 @@
 
 use super::{DecompMode, EngineOpts, SkimResult};
 use crate::metrics::{Node, Stage, Timeline};
+use crate::query::fuse::{fuse_plan, FusePlan};
 use crate::query::plan::{
     SkimPlan, KERNEL_MAX_GROUPS, KERNEL_MAX_OBJ_CUTS, KERNEL_MAX_SCALAR_CUTS,
 };
@@ -71,7 +72,7 @@ use crate::runtime::{Batch, Capacities, CutParams, MaskResult, SkimRuntime, Vari
 use crate::serve::cache::{BasketCache, BasketKey};
 use crate::troot::{
     basket as basket_codec, BasketInfo, BranchKind, BranchMeta, ColumnData, ColumnValues,
-    DecodedBasket, FileMeta, ReadAt, TRootReader,
+    DecodedBasket, FileMeta, ReadAt, SharedBytes, TRootReader,
 };
 use crate::xrootd::TTreeCache;
 use crate::{Error, Result};
@@ -291,8 +292,11 @@ pub struct GroupState {
     /// Per cluster: phase-1 slot → raw decompressed bytes (after
     /// `decompress`). Retained until the group commits so custom
     /// stages can audit them — the memory cost of the observability
-    /// API (≈ one group's decompressed working set).
-    pub raw: Vec<Vec<(Vec<u8>, BasketInfo)>>,
+    /// API (≈ one group's decompressed working set). The buffers are
+    /// [`SharedBytes`]: `deserialize` hands zero-copy f32/i32 views
+    /// into them to the decoded baskets, and cache hits share the
+    /// cache's buffer outright instead of copying it.
+    pub raw: Vec<Vec<(SharedBytes, BasketInfo)>>,
     /// Per cluster: phase-1 slot → typed decoded basket (after
     /// `deserialize`).
     pub decoded: Vec<Vec<DecodedBasket>>,
@@ -467,6 +471,12 @@ struct AdaptiveState {
     groups_done: u64,
     /// Re-plans that actually changed the order.
     replans: u64,
+    /// Fusion plan over the current order ([`EngineOpts::fuse`]):
+    /// `Some` routes evaluation through
+    /// [`super::fused::eval_fused`], rebuilt at every replan
+    /// checkpoint so fused kernels track the adaptive order. `None`
+    /// keeps the per-conjunct [`super::interp::eval_adaptive`] sweep.
+    fuse: Option<FusePlan>,
 }
 
 /// The in-flight state of one skim job, visible to every stage.
@@ -632,35 +642,50 @@ impl<'a> StageCtx<'a> {
             None
         };
 
-        // --- selectivity-adaptive interpreter state ------------------
+        // --- selectivity-adaptive / fused interpreter state ----------
         // Strictly opt-in, interpreter-only: the vectorized kernel's
         // stage order is baked into its AOT program, and a trivial
-        // program has nothing to reorder. A seed profile (warm start
-        // from a prior run of the same query) ranks the order
-        // immediately; otherwise the warm-up window runs in fixed
-        // stage order while tallies accumulate.
-        let adaptive = if opts.adaptive.enabled && !vectorized && !plan.program.is_trivial()
+        // program has nothing to reorder or fuse. The conjunct-level
+        // state is shared by both features: `--adaptive` reorders it,
+        // `--fuse` compiles fused kernels over it (under the identity
+        // order when adaptive is off). A seed profile (warm start from
+        // a prior run of the same query) ranks the order immediately —
+        // and informs the initial fusion plan — but seeding, ranking
+        // and the replan cadence stay gated on `adaptive.enabled`, so
+        // fuse-only runs keep the fixed conjunct order and report no
+        // profile.
+        let adaptive = if (opts.adaptive.enabled || opts.fuse)
+            && !vectorized
+            && !plan.program.is_trivial()
         {
             let conjuncts = conjuncts_of(&plan.program);
             let mut stats = vec![ConjunctStats::default(); conjuncts.len()];
             let mut seeded = false;
-            if let Some(seed) = &opts.adaptive.seed {
-                for (c, st) in conjuncts.iter().zip(stats.iter_mut()) {
-                    if let Some(prev) = seed.get(&c.key) {
-                        *st = *prev;
-                        seeded = true;
+            if opts.adaptive.enabled {
+                if let Some(seed) = &opts.adaptive.seed {
+                    for (c, st) in conjuncts.iter().zip(stats.iter_mut()) {
+                        if let Some(prev) = seed.get(&c.key) {
+                            *st = *prev;
+                            seeded = true;
+                        }
                     }
                 }
             }
-            let order = if seeded {
+            let order: Vec<usize> = if seeded {
                 rank_order(&conjuncts, &stats)
             } else {
                 (0..conjuncts.len()).collect()
             };
-            // Seeded tallies informed the starting order; the profile
-            // this job reports should count only its own events.
+            let fuse = if opts.fuse {
+                Some(fuse_plan(&plan.program, &conjuncts, &order, &stats))
+            } else {
+                None
+            };
+            // Seeded tallies informed the starting order and fusion
+            // plan; the profile this job reports should count only its
+            // own events.
             stats.fill(ConjunctStats::default());
-            Some(AdaptiveState { conjuncts, stats, order, groups_done: 0, replans: 0 })
+            Some(AdaptiveState { conjuncts, stats, order, groups_done: 0, replans: 0, fuse })
         } else {
             None
         };
@@ -1082,10 +1107,11 @@ impl<'a> StageCtx<'a> {
                 if !hit {
                     group.fetched_bytes += info.comp_len as u64;
                 }
-                // The cache hands out shared `Arc`ed bytes; the
-                // per-group stores own their buffers, so a hit costs
-                // one memcpy instead of a fetch + decompress.
-                row.push(((*raw).clone(), info));
+                // The cache hands out shared `Arc`ed bytes and the
+                // per-group stores are `SharedBytes` too, so a hit is
+                // a refcount bump — no memcpy, no fetch, no
+                // decompress.
+                row.push((raw, info));
             }
             group.raw.push(row);
         }
@@ -1111,7 +1137,7 @@ impl<'a> StageCtx<'a> {
                 let mut row = Vec::with_capacity(cluster.len());
                 for (frame, info) in cluster {
                     let raw = decompress_attributed(self.timeline, self.opts, &frame)?;
-                    row.push((raw, info));
+                    row.push((Arc::new(raw), info));
                 }
                 group.raw.push(row);
             }
@@ -1159,7 +1185,7 @@ impl<'a> StageCtx<'a> {
                 .collect()
         });
 
-        let mut rows: Vec<Vec<Option<(Vec<u8>, BasketInfo)>>> =
+        let mut rows: Vec<Vec<Option<(SharedBytes, BasketInfo)>>> =
             shape.iter().map(|&len| vec![None; len]).collect();
         let mut worker_tls = Vec::with_capacity(workers);
         let mut total_bytes = 0u64;
@@ -1168,7 +1194,7 @@ impl<'a> StageCtx<'a> {
             worker_tls.push(tl);
             total_bytes += bytes;
             for (ci, slot, raw, info) in items {
-                rows[ci][slot] = Some((raw, info));
+                rows[ci][slot] = Some((Arc::new(raw), info));
             }
         }
         fold_worker_timelines(
@@ -1211,11 +1237,18 @@ impl<'a> StageCtx<'a> {
                 let mut decs = Vec::with_capacity(row.len());
                 for (bm, (raw, info)) in self.phase1.iter().zip(row) {
                     let t0 = Instant::now();
-                    let dec = basket_codec::decode(
+                    // Zero-copy decode: f32/i32 values are views into
+                    // the shared raw buffer when aligned; the basket
+                    // index (recovered by binary search) gives decode
+                    // errors a locus.
+                    let bidx = bm.basket_for_event(info.first_event).unwrap_or(0);
+                    let dec = basket_codec::decode_shared(
                         &bm.desc,
                         raw,
+                        0,
                         info.first_event,
                         info.n_events as usize,
+                        bidx,
                     )?;
                     timeline.add_real(Stage::Deserialize, node, t0.elapsed().as_secs_f64());
                     // Modeled ROOT streamer cost: every event of this
@@ -1270,11 +1303,16 @@ impl<'a> StageCtx<'a> {
                         for (ci, slot) in shard {
                             let (raw, info) = &raw_rows[ci][slot];
                             let t0 = Instant::now();
-                            let dec = basket_codec::decode(
+                            let bidx = phase1[slot]
+                                .basket_for_event(info.first_event)
+                                .unwrap_or(0);
+                            let dec = basket_codec::decode_shared(
                                 &phase1[slot].desc,
                                 raw,
+                                0,
                                 info.first_event,
                                 info.n_events as usize,
+                                bidx,
                             )?;
                             tl.add_real(Stage::Deserialize, node, t0.elapsed().as_secs_f64());
                             if let Some(model) = model {
@@ -1396,19 +1434,36 @@ impl<'a> StageCtx<'a> {
         // Group boundary: tick the adaptive cadence and re-rank the
         // order once the warm-up window has elapsed, then every
         // `replan_every` groups. Never inside a window — every batch
-        // of a group is evaluated under one fixed order.
+        // of a group is evaluated under one fixed order. Fuse-only
+        // runs (adaptive off) never replan: the identity order and its
+        // fusion plan hold for the whole job.
         if let Some(st) = self.adaptive.as_mut() {
-            st.groups_done += 1;
-            let a = &self.opts.adaptive;
-            let warmed = st.groups_done >= a.warmup_groups.max(1);
-            let since = st.groups_done - a.warmup_groups.max(1);
-            if warmed && (since == 0 || (a.replan_every > 0 && since % a.replan_every == 0))
-            {
-                let next = rank_order(&st.conjuncts, &st.stats);
-                if next != st.order {
-                    st.replans += 1;
+            if self.opts.adaptive.enabled {
+                st.groups_done += 1;
+                let a = &self.opts.adaptive;
+                let warmed = st.groups_done >= a.warmup_groups.max(1);
+                let since = st.groups_done.saturating_sub(a.warmup_groups.max(1));
+                if warmed
+                    && (since == 0 || (a.replan_every > 0 && since % a.replan_every == 0))
+                {
+                    let next = rank_order(&st.conjuncts, &st.stats);
+                    if next != st.order {
+                        st.replans += 1;
+                    }
+                    st.order = next;
+                    // The fusion plan is a function of the order (and
+                    // the now-measured tallies): rebuild it at every
+                    // replan checkpoint so fused kernels keep tracking
+                    // the leading, selective conjuncts.
+                    if st.fuse.is_some() {
+                        st.fuse = Some(fuse_plan(
+                            &self.plan.program,
+                            &st.conjuncts,
+                            &st.order,
+                            &st.stats,
+                        ));
+                    }
                 }
-                st.order = next;
             }
         }
         Ok(())
@@ -1455,17 +1510,20 @@ impl<'a> StageCtx<'a> {
         let node = self.opts.compute_node;
         let program = &self.plan.program;
         if let Some(st) = self.adaptive.as_mut() {
-            // Adaptive order with per-conjunct tallies. The final mask
-            // is bit-identical to the fixed-order oracle; only
-            // per-stage funnel counts may shift with the order.
+            // Adaptive order with per-conjunct tallies, optionally
+            // through the fused kernels. The final mask is
+            // bit-identical to the fixed-order oracle; only per-stage
+            // funnel counts may shift with the order. (Destructure the
+            // state so the closure borrows the plan and the tallies
+            // disjointly.)
+            let AdaptiveState { conjuncts, stats, order, fuse, .. } = st;
+            if let Some(plan) = fuse {
+                return Ok(timeline.stage(Stage::Filter, node, || {
+                    super::fused::eval_fused(program, batch, conjuncts, plan, stats)
+                }));
+            }
             return Ok(timeline.stage(Stage::Filter, node, || {
-                super::interp::eval_adaptive(
-                    program,
-                    batch,
-                    &st.conjuncts,
-                    &st.order,
-                    &mut st.stats,
-                )
+                super::interp::eval_adaptive(program, batch, conjuncts, order, stats)
             }));
         }
         Ok(timeline.stage(Stage::Filter, node, || {
@@ -1497,7 +1555,16 @@ impl<'a> StageCtx<'a> {
         let cache_opt = self.opts.basket_cache.clone();
         let mut hits = 0u64;
         let mut misses = 0u64;
-        let mut scratch = Vec::new();
+        // Pre-size the reusable scratch to the largest output-only
+        // basket (the frame headers record raw_len), so the selective
+        // pass never grows the buffer geometrically on first touch.
+        let max_raw = self
+            .output_only
+            .iter()
+            .flat_map(|b| b.baskets.iter().map(|k| k.raw_len as usize))
+            .max()
+            .unwrap_or(0);
+        let mut scratch = Vec::with_capacity(max_raw);
         for cluster in 0..self.cluster_pass.len() {
             if self.cluster_pass[cluster].is_empty() {
                 continue;
@@ -1588,13 +1655,19 @@ impl<'a> StageCtx<'a> {
             )
         })?;
         // Dump the adaptive tallies onto the timeline so they ride
-        // `JobReport → JobStatus → wire → HTTP JSON` unchanged.
-        if let Some(st) = &self.adaptive {
-            for (c, s) in st.conjuncts.iter().zip(&st.stats) {
-                self.timeline.record_profile(&c.key, c.stage, s.visited, s.passed, s.cost_us);
-            }
-            if st.replans > 0 {
-                self.timeline.count("adaptive_replans", st.replans);
+        // `JobReport → JobStatus → wire → HTTP JSON` unchanged. Gated
+        // on `adaptive.enabled`, not on the state existing: fuse-only
+        // runs share the conjunct state but report no profile —
+        // `--fuse` alone must not change any reporting surface.
+        if self.opts.adaptive.enabled {
+            if let Some(st) = &self.adaptive {
+                for (c, s) in st.conjuncts.iter().zip(&st.stats) {
+                    self.timeline
+                        .record_profile(&c.key, c.stage, s.visited, s.passed, s.cost_us);
+                }
+                if st.replans > 0 {
+                    self.timeline.count("adaptive_replans", st.replans);
+                }
             }
         }
         Ok(SkimResult {

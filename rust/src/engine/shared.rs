@@ -255,7 +255,11 @@ pub fn run_shared(
                     ))
                 })?;
                 let info = bm.baskets[idx];
-                let raw: Vec<u8> = match &cache {
+                // Keep the decompressed bytes behind their Arc so the
+                // zero-copy decode path can borrow them: a cache hit
+                // shares the cached allocation outright instead of
+                // cloning the Vec out of it.
+                let raw: crate::troot::SharedBytes = match &cache {
                     Some(cache) => {
                         let key = BasketKey {
                             file: scan_file_key.clone(),
@@ -271,19 +275,21 @@ pub fn run_shared(
                         } else {
                             misses += 1;
                         }
-                        (*data).clone()
+                        data
                     }
                     None => {
                         let frame = scan_reader.fetch_basket(bm, idx)?;
-                        decompress_attributed(batch_timeline, opts, &frame)?
+                        Arc::new(decompress_attributed(batch_timeline, opts, &frame)?)
                     }
                 };
                 let t0 = Instant::now();
-                let dec = basket_codec::decode(
+                let dec = basket_codec::decode_shared(
                     &bm.desc,
                     &raw,
+                    0,
                     info.first_event,
                     info.n_events as usize,
+                    idx,
                 )?;
                 batch_timeline.add_real(
                     Stage::Deserialize,
@@ -490,6 +496,28 @@ mod tests {
             assert_eq!(res.stage_funnel, sres.stage_funnel, "member {i} funnel diverged");
             assert_eq!(res.n_events, sres.n_events);
             assert_eq!(bytes, &sbytes, "member {i} output bytes diverged");
+        }
+    }
+
+    #[test]
+    fn fused_shared_scan_matches_unfused_solo() {
+        // The shared-scan × --fuse cell: every member funnels through
+        // its own StageCtx, so fused kernels engage per member exactly
+        // as in a solo run — masks, funnels and output bytes must
+        // match the *unfused* solo references bit-for-bit.
+        let cuts = [
+            "MET_pt > 25 && nJet >= 1",
+            "count(Electron_pt > 25) >= 1 && MET_pt > 20",
+            "MET_pt > 60",
+        ];
+        let fused_opts = EngineOpts { use_pjrt: false, fuse: true, ..Default::default() };
+        let (members, _tls, _batch) = shared(&cuts, "fuse3", &fused_opts);
+        for (i, cut) in cuts.iter().enumerate() {
+            let (sres, _stl, sbytes) = solo(cut, &format!("fuse3_solo{i}.troot"), &interp_opts());
+            let (res, bytes) = &members[i];
+            assert_eq!(res.n_pass, sres.n_pass, "member {i} mask diverged under fusion");
+            assert_eq!(res.stage_funnel, sres.stage_funnel, "member {i} funnel diverged");
+            assert_eq!(bytes, &sbytes, "member {i} output bytes diverged under fusion");
         }
     }
 

@@ -258,6 +258,51 @@ impl<'rt> SkimJob<'rt> {
         Ok(out)
     }
 
+    /// Render the **kernel fusion plan** for this query (CLI
+    /// `skim --explain --fuse`): one line per funnel conjunct, in
+    /// evaluation order, saying which fused kernel it compiled into
+    /// (`cmp` / `range` / `and-chain` / `count` / `sum`) — or why it
+    /// stays on the interpreter. The plan is built exactly like a
+    /// fuse-only run's: identity conjunct order and, when the input is
+    /// a `catalog:NAME` materialized skim with a persisted
+    /// `skims/NAME.prof` sidecar, the measured tallies gating all-pass
+    /// conjuncts out of fusion. Nothing is executed.
+    pub fn explain_fuse(&self) -> Result<String> {
+        let files = crate::catalog::resolve(&self.query.input, &self.storage_root)?;
+        let store = crate::troot::LocalFile::open(self.storage_root.join(&files[0]))?;
+        let reader = crate::troot::TRootReader::open(store)?;
+        let plan = crate::query::plan::SkimPlan::build(&self.query, reader.meta())?;
+        let conjuncts = crate::query::stats::conjuncts_of(&plan.program);
+        if conjuncts.is_empty() {
+            return Ok("fusion plan: (no cut — nothing to fuse)\n".to_string());
+        }
+        let mut stats = vec![crate::query::ConjunctStats::default(); conjuncts.len()];
+        let mut seeded = false;
+        if let crate::query::DatasetSpec::Catalog(name) = &self.query.input {
+            let path = self.storage_root.join("skims").join(format!("{name}.prof"));
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                let profile = crate::query::SelectivityProfile::from_text(&text);
+                for (c, st) in conjuncts.iter().zip(stats.iter_mut()) {
+                    if let Some(prev) = profile.get(&c.key) {
+                        *st = *prev;
+                        seeded = true;
+                    }
+                }
+            }
+        }
+        let order: Vec<usize> = (0..conjuncts.len()).collect();
+        let fuse = crate::query::fuse::fuse_plan(&plan.program, &conjuncts, &order, &stats);
+        let mut out = fuse.describe();
+        out.push_str(if seeded {
+            "  (all-pass gating uses the persisted selectivity profile; under\n   \
+             --adaptive the plan is rebuilt as the order re-ranks)\n"
+        } else {
+            "  (no persisted profile — unmeasured conjuncts fuse on the 0.5\n   \
+             prior; under --adaptive the plan is rebuilt as the order re-ranks)\n"
+        });
+        Ok(out)
+    }
+
     /// Execute the job (with the deployment's WLCG-style retries),
     /// then register the output as a materialized skim if
     /// [`SkimJob::materialize`] was requested.

@@ -77,6 +77,7 @@ COMMANDS:
   skim   --storage DIR (--query FILE | --higgs --input SPEC |
          --input SPEC [--branches A,B,*]) [--cut 'EXPR'] [--explain]
          [--stats] [--adaptive [--warmup-groups N] [--replan-every N]]
+         [--fuse]
          [--mode client-legacy|client-opt|server-side|skimroot]
          [--link 1g|10g|100g] [--fan-out N] [--artifacts DIR]
          [--client-dir DIR] [--deadline-ms N] [--materialize NAME]
@@ -94,6 +95,11 @@ COMMANDS:
           persisted selectivity tallies; --adaptive reorders the cut
           funnel by measured selectivity after a warm-up window — the
           run report then includes the per-conjunct profile;
+          --fuse evaluates matching conjuncts through fused cut
+          kernels (interpreter path only, composes with --adaptive;
+          masks and outputs are bit-identical either way) —
+          --explain --fuse prints the fusion plan with per-conjunct
+          reasons without running;
           --materialize registers the output in the storage catalog
           as catalog:NAME with lineage, re-skimmable by name)
   index  [--force] FILE...
@@ -224,7 +230,8 @@ fn cmd_index(raw: Vec<String>) -> Result<()> {
 }
 
 fn cmd_skim(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw, &["higgs", "no-runtime", "explain", "adaptive", "stats"])?;
+    let args =
+        Args::parse(raw, &["higgs", "no-runtime", "explain", "adaptive", "stats", "fuse"])?;
     let storage = args.require("storage")?;
     let mut query = if args.switch("higgs") {
         let input = args.require("input")?;
@@ -261,6 +268,9 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
         if args.switch("stats") {
             println!("{}", job.explain_stats()?);
         }
+        if args.switch("fuse") {
+            println!("{}", job.explain_fuse()?);
+        }
         return Ok(());
     }
 
@@ -286,6 +296,9 @@ fn cmd_skim(raw: Vec<String>) -> Result<()> {
     deployment.adaptive.enabled = args.switch("adaptive");
     deployment.adaptive.warmup_groups = args.parse_num("warmup-groups", 4u64)?;
     deployment.adaptive.replan_every = args.parse_num("replan-every", 8u64)?;
+    // Profile-guided fused cut kernels (interpreter path only; opt-in
+    // exactly like --adaptive, with which it composes).
+    deployment.fuse = args.switch("fuse");
 
     let mut job = SkimJob::new(query)
         .storage(storage)

@@ -1,0 +1,449 @@
+//! Profile-guided kernel fusion planning (ROADMAP "engine
+//! micro-optimizations").
+//!
+//! The adaptive evaluator ([`crate::engine::interp::eval_adaptive`])
+//! runs one sweep over the alive set **per conjunct** — each sweep
+//! re-walks the alive bookkeeping and re-touches the batch. For the
+//! shapes that dominate real skims (scalar compares, single-cut object
+//! counts, the HT sum) that per-conjunct overhead is most of the work.
+//! This module plans which conjuncts to **fuse** into the specialized
+//! kernels of [`crate::engine::fused`]:
+//!
+//! * `cmp` — one scalar compare, swept branch-free over 64-event words;
+//! * `range` — two compares on the same column forming `lo ≤ x < hi`;
+//! * `and-chain` — 2–3 scalar compares evaluated together per word, one
+//!   alive-set pass for the whole run;
+//! * `count` — a single-cut object group, `count(pred) ≥ k`, counted
+//!   branchless over the valid slot prefix;
+//! * `sum` — the HT unit, `sum(x[x > pt_min]) ≥ t`, accumulated
+//!   branchless.
+//!
+//! Planning is **profile-guided**: the same [`ConjunctStats`] that
+//! drive [`rank_order`](crate::query::stats::rank_order) decide what is
+//! worth fusing. A conjunct fuses only when its shape matches a kernel,
+//! it is ranked in the **leading half** of the evaluation order (late
+//! conjuncts see few survivors — the interpreter's per-event walk is
+//! already cheap there), and its measured pass rate is below ~1 (an
+//! all-pass conjunct kills nothing; fusing it buys nothing). Everything
+//! else falls back to the interpreter's per-conjunct `eval_conjunct`
+//! sweep, unfused and untouched.
+//!
+//! The plan is a straight-line program over the evaluation order
+//! ([`FuseStep`]s), rebuilt whenever the adaptive executor replans, and
+//! every decision carries a human-readable reason — surfaced verbatim
+//! by `skimroot skim --explain --fuse`.
+
+use crate::query::plan::CutProgram;
+use crate::query::stats::{Conjunct, ConjunctKind, ConjunctStats};
+
+/// Longest scalar-compare run a single [`FusedKernel::Chain`] covers.
+/// Beyond three predicates the per-word passmasks stop fitting in
+/// registers and the fused sweep loses to two shorter chains.
+pub const MAX_CHAIN: usize = 3;
+
+/// Pass rate at or above which a conjunct is treated as all-pass and
+/// left to the interpreter (it kills nothing, so a fused sweep saves
+/// nothing; the rank already pushes it last).
+pub const ALL_PASS_RATE: f64 = 0.999;
+
+/// One scalar compare folded into a [`FusedKernel::Chain`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChainLink {
+    /// Conjunct index (into the planner's conjunct list) this link
+    /// settles — tallies and funnel-stage rows are attributed here.
+    pub ci: usize,
+    /// Index into [`CutProgram::scalar_cuts`].
+    pub cut: usize,
+}
+
+/// One fused kernel: a shape the engine evaluates in a single pass
+/// over the alive set instead of one interpreter sweep per conjunct.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FusedKernel {
+    /// 1–[`MAX_CHAIN`] scalar compares evaluated together per 64-event
+    /// word (covers the `cmp`, `range` and `and-chain` labels).
+    Chain(Vec<ChainLink>),
+    /// Single-cut object group: `count(pred over slots) >= min_count`.
+    CountGe {
+        /// Conjunct index the verdict is attributed to.
+        ci: usize,
+        /// Index into [`CutProgram::groups`].
+        group: usize,
+    },
+    /// The HT unit: `sum(x[x > pt_min]) >= min_ht`.
+    SumGe {
+        /// Conjunct index the verdict is attributed to.
+        ci: usize,
+    },
+}
+
+impl FusedKernel {
+    /// How many consecutive evaluation-order positions the kernel
+    /// consumes.
+    pub fn span(&self) -> usize {
+        match self {
+            FusedKernel::Chain(links) => links.len(),
+            _ => 1,
+        }
+    }
+}
+
+/// One step of the fused evaluation program, in evaluation order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FuseStep {
+    /// Run a fused kernel (consumes [`FusedKernel::span`] conjuncts).
+    Kernel(FusedKernel),
+    /// Evaluate conjunct `ci` with the interpreter's per-conjunct
+    /// sweep — the untouched fallback.
+    Interp(usize),
+}
+
+/// Why one conjunct did or did not fuse — the `--explain --fuse` row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FuseDecision {
+    /// Canonical conjunct key ([`Conjunct::key`]).
+    pub key: String,
+    /// Kernel label (`"cmp"`, `"range"`, `"and-chain"`, `"count"`,
+    /// `"sum"`) when fused; `None` when left to the interpreter.
+    pub fused: Option<&'static str>,
+    /// Human-readable rationale for the decision.
+    pub reason: String,
+}
+
+/// A complete fusion plan over one compiled program: the straight-line
+/// [`FuseStep`] program the fused evaluator walks, plus one
+/// [`FuseDecision`] per conjunct (indexed like the conjunct list) and
+/// the evaluation order it was planned for.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FusePlan {
+    /// Steps in evaluation order; every conjunct appears exactly once
+    /// (inside a kernel or as an `Interp` fallback).
+    pub steps: Vec<FuseStep>,
+    /// Per-conjunct decisions, indexed by conjunct index.
+    pub decisions: Vec<FuseDecision>,
+    /// The evaluation order the plan was built against.
+    pub order: Vec<usize>,
+}
+
+impl FusePlan {
+    /// Number of conjuncts that fused into a kernel.
+    pub fn fused_count(&self) -> usize {
+        self.decisions.iter().filter(|d| d.fused.is_some()).count()
+    }
+
+    /// Did anything fuse at all? (If not, the engine skips the fused
+    /// evaluator entirely.)
+    pub fn any_fused(&self) -> bool {
+        self.decisions.iter().any(|d| d.fused.is_some())
+    }
+
+    /// Render the plan as the `--explain --fuse` table: one row per
+    /// conjunct in evaluation order, kernel label or `interp`, and the
+    /// reason.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fusion plan: {} of {} conjuncts fused\n",
+            self.fused_count(),
+            self.decisions.len()
+        ));
+        for &ci in &self.order {
+            let d = &self.decisions[ci];
+            let label = d.fused.unwrap_or("interp");
+            out.push_str(&format!("  [{label:9}] {}  — {}\n", d.key, d.reason));
+        }
+        out
+    }
+}
+
+/// Shape eligibility of one conjunct, before position/profile checks.
+enum Shape {
+    ScalarCmp(usize),
+    CountGe(usize),
+    SumGe,
+}
+
+fn shape_of(program: &CutProgram, kind: ConjunctKind) -> Result<Shape, &'static str> {
+    match kind {
+        ConjunctKind::Scalar(i) => Ok(Shape::ScalarCmp(i)),
+        ConjunctKind::Group(i) if program.groups[i].cut_range.len() == 1 => {
+            Ok(Shape::CountGe(i))
+        }
+        ConjunctKind::Group(_) => Err("multi-cut object group: interpreter only"),
+        ConjunctKind::Ht => Ok(Shape::SumGe),
+        ConjunctKind::Residual(_) => Err("residual expression: interpreter only"),
+        ConjunctKind::Trigger => Err("trigger OR: interpreter only"),
+    }
+}
+
+/// Do two scalar cuts form a `lo ≤ x < hi` band on one column? (Same
+/// column, neither under `abs`, one lower bound `>`/`>=` and one upper
+/// bound `<`/`<=` — in either order.)
+fn is_range_pair(program: &CutProgram, a: usize, b: usize) -> bool {
+    let (ca, cb) = (&program.scalar_cuts[a], &program.scalar_cuts[b]);
+    let lower = |op: u8| op == 0 || op == 1;
+    let upper = |op: u8| op == 2 || op == 3;
+    ca.col == cb.col
+        && !ca.abs
+        && !cb.abs
+        && ((lower(ca.op) && upper(cb.op)) || (upper(ca.op) && lower(cb.op)))
+}
+
+/// Plan kernel fusion for `program` under the given evaluation `order`
+/// and the profile in `stats` (parallel to `conjuncts`). Deterministic
+/// in its inputs: the same program + order + tallies always produce the
+/// same plan, so fused runs stay reproducible.
+pub fn fuse_plan(
+    program: &CutProgram,
+    conjuncts: &[Conjunct],
+    order: &[usize],
+    stats: &[ConjunctStats],
+) -> FusePlan {
+    debug_assert_eq!(conjuncts.len(), stats.len());
+    debug_assert_eq!(conjuncts.len(), order.len());
+    let n = conjuncts.len();
+
+    // Pass 1: per-conjunct eligibility (shape, rank position, profile),
+    // recorded by evaluation-order position.
+    let mut eligible: Vec<Option<Shape>> = Vec::with_capacity(n);
+    let mut decisions: Vec<FuseDecision> = conjuncts
+        .iter()
+        .map(|c| FuseDecision { key: c.key.clone(), fused: None, reason: String::new() })
+        .collect();
+    for (pos, &ci) in order.iter().enumerate() {
+        let verdict = match shape_of(program, conjuncts[ci].kind) {
+            Err(msg) => Err(msg.to_string()),
+            Ok(_) if n > 2 && pos * 2 >= n => {
+                Err(format!("ranked late (position {} of {n}): survivors are few", pos + 1))
+            }
+            Ok(_) if stats[ci].visited > 0 && stats[ci].pass_rate() >= ALL_PASS_RATE => {
+                Err("profile shows all-pass: fusing saves nothing".to_string())
+            }
+            Ok(shape) => Ok(shape),
+        };
+        match verdict {
+            Ok(shape) => eligible.push(Some(shape)),
+            Err(reason) => {
+                decisions[ci].reason = reason;
+                eligible.push(None);
+            }
+        }
+    }
+
+    // Pass 2: walk the order, folding maximal runs of eligible scalar
+    // compares into chains and wrapping eligible count/sum conjuncts
+    // as single-step kernels.
+    let mut steps = Vec::new();
+    let mut pos = 0usize;
+    while pos < n {
+        let ci = order[pos];
+        match &eligible[pos] {
+            Some(Shape::ScalarCmp(_)) => {
+                // Collect the maximal consecutive run of eligible
+                // scalar compares starting here.
+                let mut run: Vec<ChainLink> = Vec::new();
+                while pos < n {
+                    match eligible[pos] {
+                        Some(Shape::ScalarCmp(cut)) => {
+                            run.push(ChainLink { ci: order[pos], cut });
+                            pos += 1;
+                        }
+                        _ => break,
+                    }
+                }
+                for chunk in run.chunks(MAX_CHAIN) {
+                    let label = match chunk {
+                        [_] => "cmp",
+                        [a, b] if is_range_pair(program, a.cut, b.cut) => "range",
+                        _ => "and-chain",
+                    };
+                    for link in chunk {
+                        decisions[link.ci].fused = Some(label);
+                        decisions[link.ci].reason = match chunk.len() {
+                            1 => "hot scalar compare".to_string(),
+                            _ => format!(
+                                "hot scalar compare, fused with {} neighbor(s)",
+                                chunk.len() - 1
+                            ),
+                        };
+                    }
+                    steps.push(FuseStep::Kernel(FusedKernel::Chain(chunk.to_vec())));
+                }
+            }
+            Some(Shape::CountGe(group)) => {
+                decisions[ci].fused = Some("count");
+                decisions[ci].reason = "single-cut object group: branchless count".to_string();
+                steps.push(FuseStep::Kernel(FusedKernel::CountGe { ci, group: *group }));
+                pos += 1;
+            }
+            Some(Shape::SumGe) => {
+                decisions[ci].fused = Some("sum");
+                decisions[ci].reason = "HT sum: branchless accumulate".to_string();
+                steps.push(FuseStep::Kernel(FusedKernel::SumGe { ci }));
+                pos += 1;
+            }
+            None => {
+                steps.push(FuseStep::Interp(ci));
+                pos += 1;
+            }
+        }
+    }
+
+    FusePlan { steps, decisions, order: order.to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::plan::{HtParam, ObjCutParam, ObjGroup, ScalarCutParam};
+    use crate::query::stats::conjuncts_of;
+
+    fn cut(col: usize, op: u8, value: f32) -> ScalarCutParam {
+        ScalarCutParam { col, op, abs: false, value }
+    }
+
+    /// MET_pt > 25 && 20 <= Eta < 40 && count(Electron_pt > 25) >= 1
+    /// && HT && residual && trigger — a bit of every shape.
+    fn program() -> CutProgram {
+        let mut p = CutProgram::default();
+        p.scalar_columns =
+            vec!["MET_pt".into(), "Eta".into(), "HLT_IsoMu24".into()];
+        p.obj_columns = vec!["Electron_pt".into(), "Jet_pt".into()];
+        p.scalar_cuts.push(cut(0, 0, 25.0));
+        p.scalar_cuts.push(cut(1, 1, 20.0));
+        p.scalar_cuts.push(cut(1, 2, 40.0));
+        p.obj_cuts.push(ObjCutParam { col: 0, op: 0, abs: false, value: 25.0 });
+        p.groups.push(ObjGroup {
+            collection: "Electron".into(),
+            cut_range: 0..1,
+            min_count: 1,
+        });
+        p.ht = Some(HtParam { col: 1, object_pt_min: 30.0, min_ht: 200.0 });
+        p.triggers.push(2);
+        p
+    }
+
+    fn identity_plan(p: &CutProgram) -> FusePlan {
+        let cs = conjuncts_of(p);
+        let order: Vec<usize> = (0..cs.len()).collect();
+        let stats = vec![ConjunctStats::default(); cs.len()];
+        fuse_plan(p, &cs, &order, &stats)
+    }
+
+    #[test]
+    fn chains_count_and_sum_fuse_trigger_stays_interpreted() {
+        let p = program();
+        let plan = identity_plan(&p);
+        // Conjuncts: 3 scalars, 1 group, 1 ht, trigger = 6; leading
+        // half = positions 0..2, so the scalar run (positions 0-2)
+        // fuses but only the first three positions pass the rank gate.
+        assert_eq!(plan.decisions.len(), 6);
+        assert_eq!(plan.decisions[0].fused, Some("and-chain"));
+        assert_eq!(plan.decisions[1].fused, Some("and-chain"));
+        assert_eq!(plan.decisions[2].fused, Some("and-chain"));
+        assert_eq!(plan.decisions[3].fused, None, "group ranked late");
+        assert!(plan.decisions[3].reason.contains("ranked late"));
+        assert_eq!(plan.decisions[5].fused, None);
+        assert!(plan.decisions[5].reason.contains("trigger OR"));
+        // Steps cover every conjunct exactly once.
+        let covered: usize = plan
+            .steps
+            .iter()
+            .map(|s| match s {
+                FuseStep::Kernel(k) => k.span(),
+                FuseStep::Interp(_) => 1,
+            })
+            .sum();
+        assert_eq!(covered, 6);
+        assert!(plan.any_fused());
+    }
+
+    #[test]
+    fn range_pair_is_detected_and_single_cut_is_cmp() {
+        // Only the band on Eta, reordered so the pair is adjacent and
+        // leading: [eta >= 20, eta < 40, met > 25] — the pair fuses as
+        // a range, the met cut (position 3 of 3 is past the leading
+        // half) stays interpreted.
+        let p = program();
+        let cs: Vec<Conjunct> =
+            conjuncts_of(&p).into_iter().take(3).collect();
+        let order = vec![1, 2, 0];
+        let stats = vec![ConjunctStats::default(); 3];
+        let plan = fuse_plan(&p, &cs, &order, &stats);
+        assert_eq!(plan.decisions[1].fused, Some("range"));
+        assert_eq!(plan.decisions[2].fused, Some("range"));
+        assert_eq!(plan.decisions[0].fused, None);
+
+        // A lone leading compare is a plain cmp kernel.
+        let mut solo = p.clone();
+        solo.scalar_cuts.truncate(1);
+        let solo_cs = conjuncts_of(&solo);
+        let solo_order: Vec<usize> = (0..solo_cs.len()).collect();
+        let solo_stats = vec![ConjunctStats::default(); solo_cs.len()];
+        let plan = fuse_plan(&solo, &solo_cs, &solo_order, &solo_stats);
+        assert_eq!(plan.decisions[0].fused, Some("cmp"));
+    }
+
+    #[test]
+    fn all_pass_profile_blocks_fusion() {
+        let p = program();
+        let cs = conjuncts_of(&p);
+        let order: Vec<usize> = (0..cs.len()).collect();
+        let mut stats = vec![ConjunctStats::default(); cs.len()];
+        stats[0] = ConjunctStats { visited: 1000, passed: 1000, cost_us: 3 };
+        let plan = fuse_plan(&p, &cs, &order, &stats);
+        assert_eq!(plan.decisions[0].fused, None);
+        assert!(plan.decisions[0].reason.contains("all-pass"));
+        // The neighbors still chain without it.
+        assert_eq!(plan.decisions[1].fused, Some("range"));
+        assert_eq!(plan.decisions[2].fused, Some("range"));
+    }
+
+    #[test]
+    fn tiny_programs_skip_the_rank_gate() {
+        // n <= 2: everything eligible fuses regardless of position.
+        let mut p = CutProgram::default();
+        p.scalar_columns = vec!["a".into(), "b".into()];
+        p.scalar_cuts.push(cut(0, 0, 1.0));
+        p.scalar_cuts.push(cut(1, 2, 5.0));
+        let plan = identity_plan(&p);
+        assert_eq!(plan.fused_count(), 2);
+    }
+
+    #[test]
+    fn long_runs_chunk_at_max_chain() {
+        let mut p = CutProgram::default();
+        p.scalar_columns = (0..8).map(|i| format!("c{i}")).collect();
+        for i in 0..8 {
+            p.scalar_cuts.push(cut(i, 0, i as f32));
+        }
+        let plan = identity_plan(&p);
+        // Leading half of 8 = positions 0..3, wait: pos*2 < 8 →
+        // positions 0..=3 fuse; run of 4 chunks as 3 + 1.
+        let kernels: Vec<usize> = plan
+            .steps
+            .iter()
+            .filter_map(|s| match s {
+                FuseStep::Kernel(k) => Some(k.span()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(kernels, vec![3, 1]);
+        assert_eq!(plan.fused_count(), 4);
+        assert_eq!(plan.decisions[3].fused, Some("cmp"));
+        assert!(plan.decisions[4].reason.contains("ranked late"));
+    }
+
+    #[test]
+    fn describe_lists_every_conjunct_with_reasons() {
+        let p = program();
+        let plan = identity_plan(&p);
+        let text = plan.describe();
+        assert!(text.contains("fusion plan: 3 of 6 conjuncts fused"), "{text}");
+        for d in &plan.decisions {
+            assert!(text.contains(&d.key), "missing {} in {text}", d.key);
+        }
+        assert!(text.contains("[interp"));
+        assert!(text.contains("[and-chain]"));
+    }
+}

@@ -26,11 +26,15 @@
 //!   [`plan::CutProgram::fits_kernel`] honest;
 //! * [`stats`] — per-conjunct selectivity statistics and the
 //!   cost-over-kill-rate ranking behind selectivity-adaptive
-//!   execution, plus the persistent [`stats::SelectivityProfile`].
+//!   execution, plus the persistent [`stats::SelectivityProfile`];
+//! * [`fuse`] — profile-guided kernel-fusion planning: which conjuncts
+//!   collapse into the fused sweeps of [`crate::engine::fused`], and
+//!   why the rest stay on the interpreter.
 
 pub mod ast;
 pub mod dataset;
 pub mod expr;
+pub mod fuse;
 pub mod json;
 pub mod parse;
 pub mod plan;
@@ -40,6 +44,7 @@ pub mod wildcard;
 pub use ast::{CmpOp, EventSelection, ObjectCut, ObjectSelection, ScalarCut, Selection, SkimQuery};
 pub use dataset::DatasetSpec;
 pub use expr::{AggOp, BinOp, Expr, UnaryOp};
+pub use fuse::{FuseDecision, FusePlan};
 pub use json::Json;
 pub use parse::parse_cut;
 pub use plan::{CutProgram, SkimPlan, ZoneCmp, ZonePredicate};

@@ -9,7 +9,7 @@
 //!   followed by `values[offsets[n_events]]` — the "event offset array"
 //!   of §2.1 that lets ROOT address one event's slice directly.
 
-use super::{BranchDesc, BranchKind, ColumnValues, DType};
+use super::{BranchDesc, BranchKind, ColumnValues, DType, SharedBytes, ValueView};
 use crate::{Error, Result};
 
 /// Encode a slice of a column (events `[lo, hi)` of `col`) into the raw
@@ -62,6 +62,14 @@ fn encode_values_range(values: &ColumnValues, lo: usize, hi: usize, out: &mut Ve
             fill_le_bytes(&mut out[base..], &v[lo..hi], |x| x.to_le_bytes());
         }
         ColumnValues::U8(v) => out.extend_from_slice(&v[lo..hi]),
+        ColumnValues::F32View(v) => {
+            out.resize(base + n * 4, 0);
+            fill_le_bytes(&mut out[base..], &v.as_slice()[lo..hi], |x| x.to_le_bytes());
+        }
+        ColumnValues::I32View(v) => {
+            out.resize(base + n * 4, 0);
+            fill_le_bytes(&mut out[base..], &v.as_slice()[lo..hi], |x| x.to_le_bytes());
+        }
     }
 }
 
@@ -113,27 +121,70 @@ impl DecodedBasket {
     /// f32 view of the values (panics if the branch is not F32 — the
     /// vectorized engine only batches F32 columns).
     pub fn values_f32(&self) -> &[f32] {
-        match &self.values {
-            ColumnValues::F32(v) => v,
-            other => panic!("values_f32 on {:?} branch", other.dtype()),
+        match self.values.as_f32() {
+            Some(v) => v,
+            None => panic!("values_f32 on {:?} branch", self.values.dtype()),
         }
     }
 }
 
 /// Decode a raw basket payload (`n_events` events starting at
-/// `first_event`) according to `desc`.
+/// `first_event`) according to `desc`, copying the values into owned
+/// columns. `basket` is the basket's index within the branch, used
+/// only to give decode errors a locus.
 pub fn decode(
     desc: &BranchDesc,
     raw: &[u8],
     first_event: u64,
     n_events: usize,
+    basket: usize,
+) -> Result<DecodedBasket> {
+    decode_impl(desc, raw, None, first_event, n_events, basket)
+}
+
+/// Decode a basket payload held in a shared decompressed buffer,
+/// borrowing f32/i32 values in place (zero-copy) when the cast is
+/// sound; the copying path of [`decode`] is the fallback for
+/// misaligned payloads, exotic dtypes, and big-endian targets.
+///
+/// The payload is `buf[start..]`; jagged offset arrays are always
+/// copied (they are validated and rebased), only the value bytes are
+/// borrowed.
+pub fn decode_shared(
+    desc: &BranchDesc,
+    buf: &SharedBytes,
+    start: usize,
+    first_event: u64,
+    n_events: usize,
+    basket: usize,
+) -> Result<DecodedBasket> {
+    if start > buf.len() {
+        return Err(Error::format(format!(
+            "branch {} basket {basket}: payload start {start} beyond buffer {}",
+            desc.name,
+            buf.len()
+        )));
+    }
+    // Split the borrow: `raw` for validation, `(buf, start)` so the
+    // value decoder can construct views into the shared buffer.
+    let raw = &buf[start..];
+    decode_impl(desc, raw, Some((buf, start)), first_event, n_events, basket)
+}
+
+fn decode_impl(
+    desc: &BranchDesc,
+    raw: &[u8],
+    view: Option<(&SharedBytes, usize)>,
+    first_event: u64,
+    n_events: usize,
+    basket: usize,
 ) -> Result<DecodedBasket> {
     match desc.kind {
         BranchKind::Scalar => {
             let expect = n_events * desc.dtype.size();
             if raw.len() != expect {
                 return Err(Error::format(format!(
-                    "branch {}: scalar basket payload {} != expected {expect}",
+                    "branch {} basket {basket}: scalar basket payload {} != expected {expect}",
                     desc.name,
                     raw.len()
                 )));
@@ -143,14 +194,14 @@ pub fn decode(
                 n_events,
                 kind: BranchKind::Scalar,
                 offsets: Vec::new(),
-                values: decode_values(desc.dtype, raw)?,
+                values: decode_values(desc.dtype, raw, view)?,
             })
         }
         BranchKind::Jagged => {
             let head = 4 * (n_events + 1);
             if raw.len() < head {
                 return Err(Error::format(format!(
-                    "branch {}: jagged basket too short for offset array",
+                    "branch {} basket {basket}: jagged basket too short for offset array",
                     desc.name
                 )));
             }
@@ -158,17 +209,27 @@ pub fn decode(
             for i in 0..=n_events {
                 offsets.push(u32::from_le_bytes(raw[4 * i..4 * i + 4].try_into().unwrap()));
             }
-            if offsets[0] != 0 || offsets.windows(2).any(|w| w[0] > w[1]) {
+            if offsets[0] != 0 {
                 return Err(Error::format(format!(
-                    "branch {}: non-monotonic event offset array",
-                    desc.name
+                    "branch {} basket {basket}: event offset array starts at {} (expected 0)",
+                    desc.name, offsets[0]
+                )));
+            }
+            if let Some(i) = offsets.windows(2).position(|w| w[0] > w[1]) {
+                return Err(Error::format(format!(
+                    "branch {} basket {basket}: non-monotonic event offset array \
+                     (offsets[{i}]={} > offsets[{}]={})",
+                    desc.name,
+                    offsets[i],
+                    i + 1,
+                    offsets[i + 1]
                 )));
             }
             let n_values = *offsets.last().unwrap() as usize;
             let expect = head + n_values * desc.dtype.size();
             if raw.len() != expect {
                 return Err(Error::format(format!(
-                    "branch {}: jagged basket payload {} != expected {expect}",
+                    "branch {} basket {basket}: jagged basket payload {} != expected {expect}",
                     desc.name,
                     raw.len()
                 )));
@@ -178,7 +239,11 @@ pub fn decode(
                 n_events,
                 kind: BranchKind::Jagged,
                 offsets,
-                values: decode_values(desc.dtype, &raw[head..])?,
+                values: decode_values(
+                    desc.dtype,
+                    &raw[head..],
+                    view.map(|(buf, start)| (buf, start + head)),
+                )?,
             })
         }
     }
@@ -259,10 +324,35 @@ fn push_value(dtype: DType, bytes: &[u8], out: &mut ColumnValues) {
     }
 }
 
-fn decode_values(dtype: DType, raw: &[u8]) -> Result<ColumnValues> {
+/// Decode the value bytes of a basket. When `view` names the shared
+/// buffer the bytes live in (and the byte offset of `raw` within it),
+/// f32/i32 columns are returned as zero-copy [`ValueView`]s if the
+/// buffer region is aligned for the element type on a little-endian
+/// target; every other case copies, exactly as before.
+fn decode_values(
+    dtype: DType,
+    raw: &[u8],
+    view: Option<(&SharedBytes, usize)>,
+) -> Result<ColumnValues> {
     let sz = dtype.size();
     if raw.len() % sz != 0 {
         return Err(Error::format("value bytes not a multiple of dtype size"));
+    }
+    if let Some((buf, start)) = view {
+        debug_assert_eq!(&buf[start..start + raw.len()], raw);
+        match dtype {
+            DType::F32 => {
+                if let Some(v) = ValueView::<f32>::new(buf.clone(), start, raw.len() / 4) {
+                    return Ok(ColumnValues::F32View(v));
+                }
+            }
+            DType::I32 => {
+                if let Some(v) = ValueView::<i32>::new(buf.clone(), start, raw.len() / 4) {
+                    return Ok(ColumnValues::I32View(v));
+                }
+            }
+            _ => {}
+        }
     }
     Ok(match dtype {
         DType::F32 => ColumnValues::F32(
@@ -291,7 +381,7 @@ mod tests {
         let col = ColumnData::scalar_f32(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
         let desc = BranchDesc::scalar("x", DType::F32);
         let raw = encode(&col, 1, 4);
-        let dec = decode(&desc, &raw, 1, 3).unwrap();
+        let dec = decode(&desc, &raw, 1, 3, 0).unwrap();
         assert_eq!(dec.scalar_f64(1), 2.0);
         assert_eq!(dec.scalar_f64(3), 4.0);
         assert_eq!(dec.values_f32(), &[2.0, 3.0, 4.0]);
@@ -308,7 +398,7 @@ mod tests {
         let desc = BranchDesc::jagged("Electron_pt", DType::F32, "Electron");
         // Slice events [1, 4): multiplicities 0, 3, 1.
         let raw = encode(&col, 1, 4);
-        let dec = decode(&desc, &raw, 10, 3).unwrap();
+        let dec = decode(&desc, &raw, 10, 3, 0).unwrap();
         assert_eq!(dec.multiplicity(10), 0);
         assert_eq!(dec.multiplicity(11), 3);
         assert_eq!(dec.multiplicity(12), 1);
@@ -327,7 +417,7 @@ mod tests {
             let col = ColumnData::Scalar(values.clone());
             let desc = BranchDesc::scalar("b", dtype);
             let raw = encode(&col, 0, 2);
-            let dec = decode(&desc, &raw, 0, 2).unwrap();
+            let dec = decode(&desc, &raw, 0, 2, 0).unwrap();
             assert_eq!(dec.values, values);
         }
     }
@@ -349,7 +439,7 @@ mod tests {
             for (lo, hi) in [(0usize, 5usize), (1, 4), (2, 2), (0, 1)] {
                 let raw = encode(&col, lo, hi);
                 assert_eq!(raw.len(), (hi - lo) * dtype.size());
-                let dec = decode(&desc, &raw, lo as u64, hi - lo).unwrap();
+                let dec = decode(&desc, &raw, lo as u64, hi - lo, 0).unwrap();
                 let mut expect = ColumnValues::empty(dtype);
                 expect.extend_from_range(&values, lo..hi);
                 assert_eq!(dec.values, expect, "{dtype:?} [{lo},{hi})");
@@ -365,7 +455,7 @@ mod tests {
         ]);
         let desc = BranchDesc::jagged("j", DType::F32, "J");
         let raw = encode(&col, 1, 4);
-        let dec = decode(&desc, &raw, 7, 3).unwrap();
+        let dec = decode(&desc, &raw, 7, 3, 0).unwrap();
         assert_eq!(dec.offsets, vec![0, 3, 3, 5]);
         assert_eq!(dec.values_f32(), &[2.0, 3.0, 4.0, 5.0, 6.0]);
     }
@@ -373,9 +463,9 @@ mod tests {
     #[test]
     fn decode_rejects_bad_sizes() {
         let desc = BranchDesc::scalar("x", DType::F32);
-        assert!(decode(&desc, &[0u8; 7], 0, 2).is_err()); // 2 events need 8B
+        assert!(decode(&desc, &[0u8; 7], 0, 2, 0).is_err()); // 2 events need 8B
         let jd = BranchDesc::jagged("j", DType::F32, "J");
-        assert!(decode(&jd, &[0u8; 3], 0, 1).is_err()); // too short for offsets
+        assert!(decode(&jd, &[0u8; 3], 0, 1, 0).is_err()); // too short for offsets
     }
 
     #[test]
@@ -387,7 +477,7 @@ mod tests {
             raw.extend_from_slice(&o.to_le_bytes());
         }
         raw.extend_from_slice(&[0u8; 4]); // one f32
-        assert!(decode(&jd, &raw, 0, 2).is_err());
+        assert!(decode(&jd, &raw, 0, 2, 0).is_err());
     }
 
     #[test]
@@ -428,7 +518,137 @@ mod tests {
         let col = ColumnData::scalar_f32(vec![]);
         let desc = BranchDesc::scalar("x", DType::F32);
         let raw = encode(&col, 0, 0);
-        let dec = decode(&desc, &raw, 0, 0).unwrap();
+        let dec = decode(&desc, &raw, 0, 0, 0).unwrap();
         assert_eq!(dec.values.len(), 0);
+    }
+
+    #[test]
+    fn decode_errors_carry_basket_and_branch_locus() {
+        let jd = BranchDesc::jagged("Jet_pt", DType::F32, "Jet");
+        // offsets [0, 2, 1] — decreasing.
+        let mut raw = Vec::new();
+        for o in [0u32, 2, 1] {
+            raw.extend_from_slice(&o.to_le_bytes());
+        }
+        raw.extend_from_slice(&[0u8; 4]);
+        let err = decode(&jd, &raw, 0, 2, 17).unwrap_err().to_string();
+        assert!(err.contains("Jet_pt"), "missing branch name: {err}");
+        assert!(err.contains("basket 17"), "missing basket index: {err}");
+        assert!(err.contains("offsets[1]=2"), "missing offending offsets: {err}");
+
+        let sd = BranchDesc::scalar("nMuon", DType::I32);
+        let err = decode(&sd, &[0u8; 7], 0, 2, 3).unwrap_err().to_string();
+        assert!(err.contains("nMuon") && err.contains("basket 3"), "{err}");
+    }
+
+    // ------------------------------------------------------------------
+    // Zero-copy decode (`decode_shared`): the unsafe reinterpret cast
+    // lives behind `ValueView`; these tests (run under Miri in CI) pin
+    // its soundness and the copy fallback.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn decode_shared_borrows_aligned_f32_scalars() {
+        let col = ColumnData::scalar_f32(vec![1.0, -2.5, 3.25, 0.0]);
+        let desc = BranchDesc::scalar("x", DType::F32);
+        let buf: SharedBytes = std::sync::Arc::new(encode(&col, 0, 4));
+        let dec = decode_shared(&desc, &buf, 0, 0, 4, 0).unwrap();
+        if cfg!(target_endian = "little") {
+            assert!(dec.values.is_borrowed(), "aligned LE f32 payload should be viewed");
+        }
+        assert_eq!(dec.values_f32(), &[1.0, -2.5, 3.25, 0.0]);
+        // The view and the owned decode agree exactly (logical eq).
+        let owned = decode(&desc, &buf, 0, 4, 0).unwrap();
+        assert!(!owned.values.is_borrowed());
+        assert_eq!(dec.values, owned.values);
+        // The view stays valid after the local Arc handle drops.
+        drop(buf);
+        assert_eq!(dec.values_f32()[1], -2.5);
+    }
+
+    #[test]
+    fn decode_shared_borrows_i32_and_jagged_values() {
+        let ints = ColumnData::Scalar(ColumnValues::I32(vec![-7, 42, 1 << 20]));
+        let desc = BranchDesc::scalar("nJet", DType::I32);
+        let buf: SharedBytes = std::sync::Arc::new(encode(&ints, 0, 3));
+        let dec = decode_shared(&desc, &buf, 0, 0, 3, 0).unwrap();
+        assert_eq!(dec.values.as_i32().unwrap(), &[-7, 42, 1 << 20]);
+        if cfg!(target_endian = "little") {
+            assert!(dec.values.is_borrowed());
+        }
+
+        // Jagged: the offset head is 4-byte, so the value region of an
+        // f32 jagged basket is aligned whenever the buffer is.
+        let col = ColumnData::jagged_f32(&[vec![1.0, 2.0], vec![], vec![3.0]]);
+        let jd = BranchDesc::jagged("Electron_pt", DType::F32, "Electron");
+        let jbuf: SharedBytes = std::sync::Arc::new(encode(&col, 0, 3));
+        let jdec = decode_shared(&jd, &jbuf, 0, 0, 3, 0).unwrap();
+        assert_eq!(jdec.offsets, vec![0, 2, 2, 3]);
+        assert_eq!(jdec.values_f32(), &[1.0, 2.0, 3.0]);
+        let r = jdec.jagged_range(2);
+        assert_eq!(&jdec.values_f32()[r], &[3.0]);
+    }
+
+    #[test]
+    fn decode_shared_falls_back_to_copy_on_odd_offset() {
+        // Pad the payload by one byte so the value region is misaligned
+        // for f32: the zero-copy gate must refuse the cast and the
+        // copying path must produce identical values.
+        let col = ColumnData::scalar_f32(vec![4.0, 5.5]);
+        let payload = encode(&col, 0, 2);
+        let mut padded = vec![0xAAu8];
+        padded.extend_from_slice(&payload);
+        let buf: SharedBytes = std::sync::Arc::new(padded);
+        let desc = BranchDesc::scalar("x", DType::F32);
+        let dec = decode_shared(&desc, &buf, 1, 0, 2, 0).unwrap();
+        // One of the two start addresses (0 or 1 bytes into the heap
+        // buffer) is necessarily misaligned for a 4-byte element; this
+        // one may or may not be, depending on the allocator. Force the
+        // question: whichever alignment the buffer got, values match.
+        assert_eq!(dec.values_f32(), &[4.0, 5.5]);
+        let aligned_start = (buf.as_ptr() as usize + 1) % std::mem::align_of::<f32>() == 0;
+        assert_eq!(dec.values.is_borrowed(), aligned_start && cfg!(target_endian = "little"));
+
+        // Deterministic misalignment: Vec<u8> allocations are at least
+        // element-aligned, so among starts {0,1,2,3} exactly those with
+        // (base + start) % 4 != 0 must copy. Check all four.
+        let mut wide = Vec::new();
+        for pad in 0..4usize {
+            wide.clear();
+            wide.extend(std::iter::repeat(0u8).take(pad));
+            wide.extend_from_slice(&payload);
+            let b: SharedBytes = std::sync::Arc::new(wide.clone());
+            let d = decode_shared(&desc, &b, pad, 0, 2, 0).unwrap();
+            assert_eq!(d.values_f32(), &[4.0, 5.5], "pad {pad}");
+            let aligned = (b.as_ptr() as usize + pad) % 4 == 0;
+            assert_eq!(
+                d.values.is_borrowed(),
+                aligned && cfg!(target_endian = "little"),
+                "pad {pad}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_shared_rejects_out_of_bounds_start() {
+        let desc = BranchDesc::scalar("x", DType::F32);
+        let buf: SharedBytes = std::sync::Arc::new(vec![0u8; 4]);
+        assert!(decode_shared(&desc, &buf, 5, 0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn value_view_refuses_unsound_casts() {
+        let buf: SharedBytes = std::sync::Arc::new(vec![0u8; 16]);
+        // Out of bounds: 5 f32s need 20 bytes.
+        assert!(ValueView::<f32>::new(buf.clone(), 0, 5).is_none());
+        // Length overflow.
+        assert!(ValueView::<f32>::new(buf.clone(), 0, usize::MAX).is_none());
+        // In-bounds aligned view works (LE targets).
+        if cfg!(target_endian = "little") {
+            let v = ValueView::<f32>::new(buf, 0, 4).unwrap();
+            assert_eq!(v.as_slice(), &[0.0; 4]);
+            assert_eq!(v.len(), 4);
+            assert!(!v.is_empty());
+        }
     }
 }

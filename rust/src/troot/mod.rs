@@ -37,6 +37,95 @@ pub use reader::{coalesce_ranges, CoalescedSpan, LocalFile, ReadAt, TRootReader}
 pub use writer::TRootWriter;
 
 use crate::{Error, Result};
+use std::sync::Arc;
+
+/// A shared, immutable decompressed-basket buffer.
+///
+/// The `Arc` keeps the heap allocation alive (and at a stable address)
+/// for as long as any [`ValueView`] borrows from it, which is what
+/// makes the zero-copy decode path sound: views reinterpret the bytes
+/// in place instead of copying them element-wise.
+pub type SharedBytes = Arc<Vec<u8>>;
+
+/// A typed, zero-copy view over a sub-range of a [`SharedBytes`]
+/// buffer.
+///
+/// Construction ([`ValueView::new`]) only succeeds when every
+/// precondition of the reinterpret cast holds — little-endian target,
+/// in-bounds range, and a start address aligned for `T` — so
+/// [`ValueView::as_slice`] is safe to call. Callers that cannot meet
+/// the preconditions fall back to the owned (copying) decode path.
+pub struct ValueView<T> {
+    buf: SharedBytes,
+    /// Byte offset of the first element within `buf`.
+    start: usize,
+    /// Number of `T` elements viewed.
+    len: usize,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Copy> ValueView<T> {
+    /// Build a view of `len` elements starting `start` bytes into
+    /// `buf`, or `None` when the cast would be unsound (big-endian
+    /// target, out-of-bounds range, or misaligned start address).
+    ///
+    /// Only plain-old-data element types for which every bit pattern
+    /// is a valid value (`f32`, `i32`) are instantiated in this crate.
+    pub fn new(buf: SharedBytes, start: usize, len: usize) -> Option<Self> {
+        if !cfg!(target_endian = "little") {
+            return None;
+        }
+        let bytes = len.checked_mul(std::mem::size_of::<T>())?;
+        let end = start.checked_add(bytes)?;
+        if end > buf.len() {
+            return None;
+        }
+        if (buf.as_ptr() as usize + start) % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        Some(ValueView { buf, start, len, _marker: std::marker::PhantomData })
+    }
+
+    /// The viewed elements.
+    pub fn as_slice(&self) -> &[T] {
+        // SAFETY: `new` checked that the range is in bounds of `buf`,
+        // that the start address is aligned for `T`, and that the
+        // target is little-endian (so the raw LE bytes *are* the
+        // in-memory representation). The `Arc` field keeps the heap
+        // buffer alive and pinned for `self`'s lifetime, and the
+        // buffer behind an `Arc<Vec<u8>>` is never mutated.
+        unsafe {
+            std::slice::from_raw_parts(self.buf.as_ptr().add(self.start) as *const T, self.len)
+        }
+    }
+
+    /// Number of viewed elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the view covers no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl<T> Clone for ValueView<T> {
+    fn clone(&self) -> Self {
+        ValueView {
+            buf: Arc::clone(&self.buf),
+            start: self.start,
+            len: self.len,
+            _marker: std::marker::PhantomData,
+        }
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for ValueView<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice().iter()).finish()
+    }
+}
 
 /// File magic, leading the file and closing the trailer.
 pub const MAGIC: &[u8; 8] = b"TROOTv1\0";
@@ -251,7 +340,14 @@ impl FileMeta {
 }
 
 /// In-memory column values (input to the writer, output of the reader).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// The `F32View`/`I32View` variants are zero-copy: they borrow the
+/// decompressed basket buffer in place (see [`ValueView`]) instead of
+/// materializing an element-wise copy. Equality is *logical* — an
+/// owned column and a view over the same values compare equal — and
+/// all accessors are variant-transparent, so downstream code treats
+/// owned and borrowed columns identically.
+#[derive(Debug, Clone)]
 pub enum ColumnValues {
     /// 32-bit floats.
     F32(Vec<f32>),
@@ -263,6 +359,32 @@ pub enum ColumnValues {
     I64(Vec<i64>),
     /// Bytes (flags/booleans).
     U8(Vec<u8>),
+    /// Zero-copy view of 32-bit floats over a shared basket buffer.
+    F32View(ValueView<f32>),
+    /// Zero-copy view of 32-bit integers over a shared basket buffer.
+    I32View(ValueView<i32>),
+}
+
+impl PartialEq for ColumnValues {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (ColumnValues::F64(a), ColumnValues::F64(b)) => a == b,
+            (ColumnValues::I64(a), ColumnValues::I64(b)) => a == b,
+            (ColumnValues::U8(a), ColumnValues::U8(b)) => a == b,
+            _ => {
+                // F32/I32 compare logically across owned and view
+                // variants (same float semantics as the old derived
+                // impl: NaN != NaN).
+                if let (Some(a), Some(b)) = (self.as_f32(), other.as_f32()) {
+                    return a == b;
+                }
+                if let (Some(a), Some(b)) = (self.as_i32(), other.as_i32()) {
+                    return a == b;
+                }
+                false
+            }
+        }
+    }
 }
 
 impl ColumnValues {
@@ -274,6 +396,8 @@ impl ColumnValues {
             ColumnValues::I32(v) => v.len(),
             ColumnValues::I64(v) => v.len(),
             ColumnValues::U8(v) => v.len(),
+            ColumnValues::F32View(v) => v.len(),
+            ColumnValues::I32View(v) => v.len(),
         }
     }
 
@@ -285,9 +409,9 @@ impl ColumnValues {
     /// The element type of this column.
     pub fn dtype(&self) -> DType {
         match self {
-            ColumnValues::F32(_) => DType::F32,
+            ColumnValues::F32(_) | ColumnValues::F32View(_) => DType::F32,
             ColumnValues::F64(_) => DType::F64,
-            ColumnValues::I32(_) => DType::I32,
+            ColumnValues::I32(_) | ColumnValues::I32View(_) => DType::I32,
             ColumnValues::I64(_) => DType::I64,
             ColumnValues::U8(_) => DType::U8,
         }
@@ -304,6 +428,32 @@ impl ColumnValues {
         }
     }
 
+    /// The values as `&[f32]`, when this is an f32 column (owned or
+    /// view).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            ColumnValues::F32(v) => Some(v),
+            ColumnValues::F32View(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// The values as `&[i32]`, when this is an i32 column (owned or
+    /// view).
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            ColumnValues::I32(v) => Some(v),
+            ColumnValues::I32View(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// True when this column borrows a shared basket buffer instead of
+    /// owning its values (zero-copy decode succeeded).
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, ColumnValues::F32View(_) | ColumnValues::I32View(_))
+    }
+
     /// Value at `i` converted to f64 (uniform access for the scalar
     /// interpreter; typed access is via the enum arms).
     pub fn get_as_f64(&self, i: usize) -> f64 {
@@ -313,30 +463,60 @@ impl ColumnValues {
             ColumnValues::I32(v) => v[i] as f64,
             ColumnValues::I64(v) => v[i] as f64,
             ColumnValues::U8(v) => v[i] as f64,
+            ColumnValues::F32View(v) => v.as_slice()[i] as f64,
+            ColumnValues::I32View(v) => v.as_slice()[i] as f64,
         }
     }
 
-    /// Append element `i` of `src` (same variant) to `self`.
+    /// Append element `i` of `src` (same dtype) to `self`.
+    ///
+    /// `self` must be an owned variant — accumulators never borrow.
     pub fn push_from(&mut self, src: &ColumnValues, i: usize) {
-        match (self, src) {
-            (ColumnValues::F32(d), ColumnValues::F32(s)) => d.push(s[i]),
-            (ColumnValues::F64(d), ColumnValues::F64(s)) => d.push(s[i]),
-            (ColumnValues::I32(d), ColumnValues::I32(s)) => d.push(s[i]),
-            (ColumnValues::I64(d), ColumnValues::I64(s)) => d.push(s[i]),
-            (ColumnValues::U8(d), ColumnValues::U8(s)) => d.push(s[i]),
-            _ => panic!("push_from: dtype mismatch"),
+        match self {
+            ColumnValues::F32(d) => d.push(src.as_f32().expect("push_from: dtype mismatch")[i]),
+            ColumnValues::I32(d) => d.push(src.as_i32().expect("push_from: dtype mismatch")[i]),
+            ColumnValues::F64(d) => match src {
+                ColumnValues::F64(s) => d.push(s[i]),
+                _ => panic!("push_from: dtype mismatch"),
+            },
+            ColumnValues::I64(d) => match src {
+                ColumnValues::I64(s) => d.push(s[i]),
+                _ => panic!("push_from: dtype mismatch"),
+            },
+            ColumnValues::U8(d) => match src {
+                ColumnValues::U8(s) => d.push(s[i]),
+                _ => panic!("push_from: dtype mismatch"),
+            },
+            _ => panic!("push_from: destination must be owned"),
         }
     }
 
-    /// Append a sub-range of `src` (same variant) to `self`.
+    /// Append a sub-range of `src` (same dtype) to `self`.
+    ///
+    /// `self` must be an owned variant — accumulators never borrow.
     pub fn extend_from_range(&mut self, src: &ColumnValues, range: std::ops::Range<usize>) {
-        match (self, src) {
-            (ColumnValues::F32(d), ColumnValues::F32(s)) => d.extend_from_slice(&s[range]),
-            (ColumnValues::F64(d), ColumnValues::F64(s)) => d.extend_from_slice(&s[range]),
-            (ColumnValues::I32(d), ColumnValues::I32(s)) => d.extend_from_slice(&s[range]),
-            (ColumnValues::I64(d), ColumnValues::I64(s)) => d.extend_from_slice(&s[range]),
-            (ColumnValues::U8(d), ColumnValues::U8(s)) => d.extend_from_slice(&s[range]),
-            _ => panic!("extend_from_range: dtype mismatch"),
+        match self {
+            ColumnValues::F32(d) => {
+                let s = src.as_f32().expect("extend_from_range: dtype mismatch");
+                d.extend_from_slice(&s[range]);
+            }
+            ColumnValues::I32(d) => {
+                let s = src.as_i32().expect("extend_from_range: dtype mismatch");
+                d.extend_from_slice(&s[range]);
+            }
+            ColumnValues::F64(d) => match src {
+                ColumnValues::F64(s) => d.extend_from_slice(&s[range]),
+                _ => panic!("extend_from_range: dtype mismatch"),
+            },
+            ColumnValues::I64(d) => match src {
+                ColumnValues::I64(s) => d.extend_from_slice(&s[range]),
+                _ => panic!("extend_from_range: dtype mismatch"),
+            },
+            ColumnValues::U8(d) => match src {
+                ColumnValues::U8(s) => d.extend_from_slice(&s[range]),
+                _ => panic!("extend_from_range: dtype mismatch"),
+            },
+            _ => panic!("extend_from_range: destination must be owned"),
         }
     }
 }

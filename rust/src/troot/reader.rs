@@ -193,6 +193,10 @@ impl<R: ReadAt> TRootReader<R> {
     }
 
     /// Decompress + deserialize a fetched frame into typed columns.
+    ///
+    /// The decompressed buffer is shared with the decoded basket:
+    /// f32/i32 values are zero-copy views into it when aligned (the
+    /// decoder falls back to copying otherwise).
     pub fn decode_basket(
         &self,
         branch: &BranchMeta,
@@ -200,8 +204,15 @@ impl<R: ReadAt> TRootReader<R> {
         frame: &[u8],
     ) -> Result<DecodedBasket> {
         let info = &branch.baskets[idx];
-        let raw = compress::decompress(frame)?;
-        basket::decode(&branch.desc, &raw, info.first_event, info.n_events as usize)
+        let raw: super::SharedBytes = std::sync::Arc::new(compress::decompress(frame)?);
+        basket::decode_shared(
+            &branch.desc,
+            &raw,
+            0,
+            info.first_event,
+            info.n_events as usize,
+            idx,
+        )
     }
 
     /// Convenience: fetch + decompress + deserialize one basket.

@@ -1,30 +1,37 @@
-//! Differential-oracle harness for selectivity-adaptive execution.
+//! Differential-oracle harness for selectivity-adaptive **and fused**
+//! execution.
 //!
-//! Two layers keep the adaptive evaluator honest:
+//! Two layers keep the adaptive and fused evaluators honest:
 //!
 //! 1. **Evaluator-level fuzzing** — hundreds of randomized
 //!    `CutProgram`s × randomized batches × randomized conjunct orders,
 //!    every one compared bit-for-bit against the fixed-order scalar
-//!    oracle (`interp::eval`). Any failing case prints a
-//!    `SKIM_TEST_SEED=<n>` line; exporting that variable replays
-//!    exactly that case.
+//!    oracle (`interp::eval`). The fused arm additionally compiles a
+//!    `FusePlan` for each order and demands `eval_fused` reproduce
+//!    `eval_adaptive` exactly — mask, stage rows and visited/passed
+//!    tallies. Any failing case prints a `SKIM_TEST_SEED=<n>` line;
+//!    exporting that variable replays exactly that case.
 //!
 //! 2. **End-to-end engine matrix** — a generated dataset skimmed under
 //!    every combination of parallelism {1, 2, 4} × adaptive {off, on}
 //!    × zone-map {off, on}, asserting `n_pass`, `n_events` and the
-//!    output **bytes** match the fixed-order reference run.
+//!    output **bytes** match the fixed-order reference run; plus a
+//!    fused sweep covering `--fuse` × {solo, fan-out-merge,
+//!    zone-map-pruned, adaptive} cells against the same references.
 //!
-//! The invariant under test (see `eval_adaptive`): conjunct reordering
-//! and common-subexpression sharing may change *per-stage* funnel
-//! tallies, but the final event mask, kept columns and output bytes
-//! must be identical to the fixed order.
+//! The invariant under test (see `eval_adaptive` / `eval_fused`):
+//! conjunct reordering, kernel fusion and common-subexpression sharing
+//! may change *per-stage* funnel tallies, but the final event mask,
+//! kept columns and output bytes must be identical to the fixed order.
 
 use skimroot::compress::Codec;
+use skimroot::engine::fused::eval_fused;
 use skimroot::engine::interp::{eval, eval_adaptive};
 use skimroot::engine::{AdaptiveOpts, EngineOpts, SkimEngine};
 use skimroot::gen::{self, GenConfig};
 use skimroot::index::FileIndex;
 use skimroot::metrics::Timeline;
+use skimroot::query::fuse::fuse_plan;
 use skimroot::query::plan::{CExpr, CutProgram, HtParam, ObjCutParam, ObjGroup, ScalarCutParam};
 use skimroot::query::stats::{conjuncts_of, rank_order, ConjunctStats};
 use skimroot::query::{AggOp, BinOp, SkimQuery, UnaryOp};
@@ -316,6 +323,109 @@ fn prop_adaptive_orders_match_the_scalar_oracle() {
     }
 }
 
+/// One randomized fused differential case: the same program/batch
+/// generator as the adaptive arm, but every order is compiled into a
+/// [`fuse_plan`] and run through `eval_fused`, which must be
+/// **bit-identical** to `eval_adaptive` under the same order — mask,
+/// every stage row, and per-conjunct visited/passed tallies — and
+/// therefore to the scalar oracle's mask.
+fn run_fused_case(seed: u64) {
+    let mut rng = Pcg32::new(SEED_BASE + 20_000 + seed);
+    let n_obj = 1 + rng.below(3) as usize;
+    let n_sc = 1 + rng.below(4) as usize;
+    let program = gen_program(&mut rng, n_obj, n_sc);
+    let batch = gen_batch(&mut rng, n_obj, n_sc);
+    let oracle = eval(&program, &batch);
+    let conjuncts = conjuncts_of(&program);
+    let k = conjuncts.len();
+
+    // Identity order with default stats — exactly what a fuse-only
+    // (no --adaptive) run compiles on its first group.
+    let identity: Vec<usize> = (0..k).collect();
+    let zeros = vec![ConjunctStats::default(); k];
+    let warm = compare_fused_to_adaptive(&program, &batch, &identity, &oracle, &zeros, "identity");
+
+    // Ranked order, plan rebuilt against the measured tallies — what a
+    // replan checkpoint compiles (this is where the all-pass gate can
+    // pull a conjunct back to the interpreter) — plus reversed and a
+    // random shuffle (fused kernels must commute like conjuncts do).
+    let ranked = rank_order(&conjuncts, &warm);
+    compare_fused_to_adaptive(&program, &batch, &ranked, &oracle, &warm, "ranked");
+
+    let reversed: Vec<usize> = (0..k).rev().collect();
+    compare_fused_to_adaptive(&program, &batch, &reversed, &oracle, &zeros, "reversed");
+
+    let mut shuffled = identity;
+    for i in (1..k).rev() {
+        shuffled.swap(i, rng.below(i as u32 + 1) as usize);
+    }
+    compare_fused_to_adaptive(&program, &batch, &shuffled, &oracle, &zeros, "shuffled");
+}
+
+/// Compile a plan against `profile`, run the order through both
+/// evaluators and demand bit-identity; returns the adaptive run's
+/// measured tallies so the caller can rank-and-replan from them.
+fn compare_fused_to_adaptive(
+    program: &CutProgram,
+    batch: &Batch,
+    order: &[usize],
+    oracle: &MaskResult,
+    profile: &[ConjunctStats],
+    what: &str,
+) -> Vec<ConjunctStats> {
+    let conjuncts = conjuncts_of(program);
+    let plan = fuse_plan(program, &conjuncts, order, profile);
+    let mut fused_stats = vec![ConjunctStats::default(); conjuncts.len()];
+    let fused = eval_fused(program, batch, &conjuncts, &plan, &mut fused_stats);
+    let mut adaptive_stats = vec![ConjunctStats::default(); conjuncts.len()];
+    let adaptive = eval_adaptive(program, batch, &conjuncts, order, &mut adaptive_stats);
+
+    assert_eq!(fused.mask, oracle.mask, "{what}: fused mask diverges under order {order:?}");
+    assert_eq!(
+        fused.stages, adaptive.stages,
+        "{what}: fused stage rows diverge under order {order:?}"
+    );
+    for (i, (f, a)) in fused_stats.iter().zip(adaptive_stats.iter()).enumerate() {
+        assert_eq!(
+            (f.visited, f.passed),
+            (a.visited, a.passed),
+            "{what}: conjunct {i} tallies diverge under order {order:?}"
+        );
+    }
+    // Cumulative funnel still reconstructs the mask and stays monotone.
+    let f = funnel_of(&fused);
+    let n_pass = oracle.mask.iter().filter(|&&x| x > 0.5).count() as u64;
+    assert_eq!(f[3], n_pass, "{what}: fused funnel does not reconstruct the mask");
+    for w in f.windows(2) {
+        assert!(w[1] <= w[0], "{what}: fused funnel is not monotone: {f:?}");
+    }
+    adaptive_stats
+}
+
+#[test]
+fn prop_fused_kernels_match_the_scalar_oracle() {
+    // Replay mode: SKIM_TEST_SEED=<n> runs exactly one failing case.
+    if let Ok(s) = std::env::var("SKIM_TEST_SEED") {
+        let seed: u64 = s
+            .trim()
+            .parse()
+            .expect("SKIM_TEST_SEED must be the integer printed by a failing run");
+        eprintln!("replaying fused oracle case {seed}");
+        run_fused_case(seed);
+        return;
+    }
+    for seed in 0..EVAL_CASES {
+        if let Err(payload) = std::panic::catch_unwind(|| run_fused_case(seed)) {
+            eprintln!(
+                "fused oracle case {seed} failed — replay with:\n  \
+                 SKIM_TEST_SEED={seed} cargo test --test adaptive_oracle \
+                 prop_fused_kernels_match_the_scalar_oracle -- --nocapture"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
 #[test]
 fn adaptive_stats_account_for_every_visited_event() {
     // Focused property: under the identity order the first conjunct
@@ -462,6 +572,39 @@ fn engine_matrix_adaptive_zone_parallelism_is_byte_identical() {
                     );
                 }
             }
+        }
+    }
+}
+
+#[test]
+fn fused_execution_is_byte_identical_across_engine_paths() {
+    // `--fuse` × {solo, fan-out-merge, zone-map-pruned, adaptive}:
+    // every cell must reproduce the unfused fixed-order reference
+    // bytes exactly, for every cut shape in the inventory (the
+    // shared-scan × fuse cell lives with the shared-scan executor's
+    // own tests). Fuse-only runs must not grow a selectivity profile.
+    for (ci, cut) in CUTS.iter().enumerate() {
+        let (ref_res, _, ref_bytes) =
+            run_matrix_cell(cut, &format!("f{ci}_ref.troot"), &matrix_opts(1.0, false, false));
+        let cells: [(f64, bool, bool); 4] =
+            [(1.0, false, false), (4.0, false, false), (1.0, false, true), (4.0, true, true)];
+        for (par, adaptive, zone) in cells {
+            let mut opts = matrix_opts(par, adaptive, zone);
+            opts.fuse = true;
+            let name =
+                format!("f{ci}_p{}_a{}_z{}.troot", par as u32, adaptive as u8, zone as u8);
+            let (res, tl, bytes) = run_matrix_cell(cut, &name, &opts);
+            let what = format!("cut '{cut}' fuse par={par} adaptive={adaptive} zone={zone}");
+            assert_eq!(res.n_events, ref_res.n_events, "{what}: n_events");
+            assert_eq!(res.n_pass, ref_res.n_pass, "{what}: n_pass");
+            assert_eq!(bytes, ref_bytes, "{what}: output bytes diverge");
+            // Fusion alone must not change the reporting surfaces:
+            // only --adaptive dumps a profile.
+            assert_eq!(
+                !tl.profile().is_empty(),
+                adaptive,
+                "{what}: unexpected profile presence"
+            );
         }
     }
 }
